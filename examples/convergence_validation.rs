@@ -1,0 +1,13 @@
+//! Theorem 1 / Corollary 1 numeric validation as a standalone example.
+//!
+//! ```bash
+//! cargo run --release --offline --example convergence_validation
+//! ```
+
+use tempo::experiments::{theorem1, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions { smoke: false, out_dir: "results".into(), seed: 0 };
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    theorem1::run(&opts)
+}

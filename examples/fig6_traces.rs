@@ -1,0 +1,15 @@
+//! The paper's §IV-B illustrative synthetic experiment (Fig. 6) as a
+//! standalone example: single-component traces of v, u, ũ, r̂ under Top-K
+//! with and without the Est-K predictor.
+//!
+//! ```bash
+//! cargo run --release --offline --example fig6_traces
+//! ```
+
+use tempo::experiments::{fig6_synthetic, ExpOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExpOptions { smoke: false, out_dir: "results".into(), seed: 0 };
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    fig6_synthetic::run(&opts)
+}

@@ -1,0 +1,44 @@
+//! Quickstart: distributed momentum-SGD with Est-K compressed updates in
+//! ~30 lines of public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use tempo::config::{ExperimentConfig, SchemeSpec};
+use tempo::coordinator::run_training;
+
+fn main() -> anyhow::Result<()> {
+    // 1. pick a model from the artifact manifest and a compression scheme
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into(); // d = 98,666 parameters
+    cfg.workers = 2;
+    cfg.steps = 100;
+    cfg.eval_every = 25;
+    cfg.train_len = 2048;
+    cfg.noise = 6.0;
+    cfg.scheme = SchemeSpec {
+        quantizer: "topk".into(), // Top-K sparsification ...
+        predictor: "estk".into(), // ... + the paper's Est-K predictor
+        ef: true,                 // ... with error-feedback
+        beta: 0.99,               // momentum = temporal correlation source
+        k_frac: Some(2.0e-3),     // K = 0.002 d
+        ..Default::default()
+    };
+
+    // 2. run master + workers (PJRT model execution, entropy-coded wire)
+    let report = run_training(&cfg)?;
+
+    // 3. read the results
+    for p in &report.points {
+        println!(
+            "step {:>4}  train_loss {:.4}  test_acc {:.3}  bits/component {:.4}",
+            p.step, p.train_loss, p.test_acc, p.bits_per_component
+        );
+    }
+    println!(
+        "\ncompressed to {:.4} bits/component = {:.0}x smaller than fp32, final acc {:.3}",
+        report.bits_per_component, report.compression_ratio, report.final_test_acc
+    );
+    Ok(())
+}

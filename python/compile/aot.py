@@ -1,0 +1,204 @@
+"""AOT lowering: every L2 graph -> artifacts/*.hlo.txt + manifest.json.
+
+This is the ONLY Python entry point on the build path (`make artifacts`).
+After it runs, the Rust binary is self-contained: rust/src/runtime/ reads
+manifest.json, loads the HLO text with HloModuleProto::from_text_file,
+compiles on the PJRT CPU client and executes.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import compress_graph, model
+from .compress_graph import Scheme
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> int:
+    # keep_unused=True: the uniform compress-step signature passes state
+    # vectors some schemes ignore (e.g. `aux` outside Rand-K); the Rust
+    # runtime always supplies all 9 buffers, so the HLO signature must too.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ---------------------------------------------------------------------------
+# Artifact inventory
+# ---------------------------------------------------------------------------
+
+# Models lowered by default. lm_small is the e2e example model (~0.9M params)
+# and is skipped by --quick because its bwd graph takes the longest to lower.
+DEFAULT_MODELS = ["mlp_tiny", "mlp_s", "cnn_s", "lm_tiny", "lm_small"]
+QUICK_MODELS = ["mlp_tiny", "cnn_s", "lm_tiny"]
+
+INIT_SEED = 20210814  # the paper's ISTC presentation date — any constant works
+
+# Small-d compress artifacts used by Rust integration tests (HLO path vs the
+# pure-Rust pipeline, bit-for-bit).
+TEST_D = 1024
+TEST_K = 32
+TEST_SCHEMES = [
+    Scheme("none", "zero", False, 0.9),
+    Scheme("sign", "zero", False, 0.9),
+    Scheme("sign", "plin", False, 0.9),
+    Scheme("topk", "zero", False, 0.9, k=TEST_K),
+    Scheme("topk", "plin", False, 0.9, k=TEST_K),
+    Scheme("topkq", "zero", False, 0.9, k=TEST_K),
+    Scheme("topkq", "plin", False, 0.9, k=TEST_K),
+    Scheme("topk", "zero", True, 0.9, k=TEST_K),
+    Scheme("topk", "estk", True, 0.9, k=TEST_K),
+    Scheme("topkq", "plin", True, 0.9, k=TEST_K),  # the Fig. 5 divergence case
+    Scheme("randk", "zero", False, 0.9, randk_prob=TEST_K / TEST_D),
+]
+
+
+def model_schemes(d: int) -> list:
+    """Blessed model-scale schemes (beta = 0.99 as in the paper's Table I)."""
+    k_ef = max(1, int(round(2e-3 * d)))
+    k_noef = max(1, int(round(1.5e-2 * d)))
+    return [
+        Scheme("none", "zero", False, 0.99),
+        Scheme("sign", "plin", False, 0.99),
+        Scheme("topk", "plin", False, 0.99, k=k_noef),
+        Scheme("topk", "zero", True, 0.99, k=k_ef),
+        Scheme("topk", "estk", True, 0.99, k=k_ef),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def lower_model(cfg, out_dir: str, manifest: dict) -> None:
+    spec = cfg.spec()
+    d = spec.dim
+    x, y = cfg.example_inputs()
+    w = jnp.zeros((d,), jnp.float32)
+
+    fwdbwd_file = f"model_{cfg.name}_fwdbwd.hlo.txt"
+    eval_file = f"model_{cfg.name}_eval.hlo.txt"
+    init_file = f"init_{cfg.name}.bin"
+
+    t0 = time.time()
+    n1 = lower_to_file(model.fwdbwd_fn(cfg), (w, x, y), os.path.join(out_dir, fwdbwd_file))
+    n2 = lower_to_file(model.eval_fn(cfg), (w, x, y), os.path.join(out_dir, eval_file))
+    init = spec.init_flat(INIT_SEED)
+    assert init.shape == (d,)
+    init.tofile(os.path.join(out_dir, init_file))
+    print(f"  model {cfg.name}: d={d} fwdbwd={n1}B eval={n2}B ({time.time()-t0:.1f}s)")
+
+    entry = {
+        "name": cfg.name,
+        "d": d,
+        "batch": cfg.batch,
+        "fwdbwd": fwdbwd_file,
+        "eval": eval_file,
+        "init": init_file,
+        "kind": "lm" if isinstance(cfg, model.LmConfig) else "classifier",
+    }
+    if isinstance(cfg, model.LmConfig):
+        entry.update(vocab=cfg.vocab, seq=cfg.seq)
+    else:
+        entry.update(in_dim=cfg.in_dim if hasattr(cfg, "in_dim") else cfg.hw * cfg.hw * cfg.in_ch,
+                     classes=cfg.classes)
+    manifest["models"].append(entry)
+
+
+def lower_compress(scheme: Scheme, d: int, out_dir: str, manifest: dict) -> None:
+    step = compress_graph.build_step(scheme)
+    vec = jnp.zeros((d,), jnp.float32)
+    one = jnp.zeros((1,), jnp.float32)
+    args = (vec,) * 7 + (one, one)
+    name = f"compress_d{d}_{scheme.tag}"
+    file = f"{name}.hlo.txt"
+    t0 = time.time()
+    n = lower_to_file(step, args, os.path.join(out_dir, file))
+    print(f"  compress {name}: {n}B ({time.time()-t0:.1f}s)")
+    manifest["compress"].append({
+        "name": name,
+        "file": file,
+        "d": d,
+        "quantizer": scheme.quantizer,
+        "predictor": scheme.predictor,
+        "ef": scheme.ef,
+        "beta": scheme.beta,
+        "k": scheme.k,
+        "randk_prob": scheme.randk_prob,
+    })
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the larger models (CI / smoke builds)")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="explicit model list (overrides --quick)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": [], "compress": []}
+
+    names = args.models if args.models is not None else (
+        QUICK_MODELS if args.quick else DEFAULT_MODELS)
+
+    print(f"[aot] lowering models: {names}")
+    for name in names:
+        lower_model(model.MODELS[name], args.out_dir, manifest)
+
+    print(f"[aot] lowering test-size compress steps (d={TEST_D})")
+    for scheme in TEST_SCHEMES:
+        lower_compress(scheme, TEST_D, args.out_dir, manifest)
+
+    print("[aot] lowering model-scale compress steps")
+    done = set()
+    for name in names:
+        d = model.MODELS[name].spec().dim
+        if d in done:
+            continue
+        done.add(d)
+        for scheme in model_schemes(d):
+            lower_compress(scheme, d, args.out_dir, manifest)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {path}: {len(manifest['models'])} models, "
+          f"{len(manifest['compress'])} compress artifacts")
+
+
+if __name__ == "__main__":
+    main()

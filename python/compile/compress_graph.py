@@ -1,0 +1,108 @@
+"""L2 worker compression-step graphs (the whole Fig. 2 worker box).
+
+Composes the L1 Pallas kernels (fused momentum/EF/prediction front, quantizer
+kernels, Est-K state update) into one jit-able function per compression
+scheme. Each (scheme, d) pair is lowered by aot.py into a standalone HLO
+artifact with the uniform signature
+
+    step(g, v, e, rhat, p, s, tau, lr_ratio, aux)
+      -> (utilde, v', e', rhat', p', s', tau')
+
+where every vector is f32[d], `lr_ratio` and `aux` are f32[1] scalars
+(`aux` is the Rand-K round seed; other quantizers ignore it). Unused state
+vectors pass through unchanged, so the Rust side can treat every scheme
+identically. This must match kernels.ref.worker_step bit-for-bit — enforced
+by python/tests/test_compress_graph.py and, across the language boundary,
+by rust integration tests against the pure-Rust pipeline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels import compress_step, estk, quantizers
+
+QUANTIZERS = ("none", "sign", "topk", "topkq", "randk")
+PREDICTORS = ("zero", "plin", "estk")
+
+
+@dataclass(frozen=True)
+class Scheme:
+    """A point in the paper's design space: quantizer x predictor x EF."""
+
+    quantizer: str
+    predictor: str
+    ef: bool
+    beta: float
+    k: int = 0  # Top-K / Top-K-Q budget (absolute count, not fraction)
+    randk_prob: float = 0.0
+
+    def __post_init__(self):
+        if self.quantizer not in QUANTIZERS:
+            raise ValueError(f"unknown quantizer {self.quantizer!r}")
+        if self.predictor not in PREDICTORS:
+            raise ValueError(f"unknown predictor {self.predictor!r}")
+        if self.quantizer in ("topk", "topkq") and self.k <= 0:
+            raise ValueError(f"{self.quantizer} needs k > 0")
+        if self.predictor == "estk" and self.quantizer != "topk":
+            # Paper §IV-C: Est-K is designed for (and only defined with) Top-K.
+            raise ValueError("estk predictor requires the topk quantizer")
+        if not 0.0 <= self.beta < 1.0:
+            raise ValueError("beta must be in [0, 1)")
+
+    @property
+    def tag(self) -> str:
+        parts = [self.quantizer]
+        if self.quantizer in ("topk", "topkq"):
+            parts.append(f"k{self.k}")
+        if self.quantizer == "randk":
+            parts.append(f"p{self.randk_prob:g}".replace(".", "_"))
+        parts.append(self.predictor)
+        parts.append("ef" if self.ef else "noef")
+        parts.append(f"b{self.beta:g}".replace(".", "_"))
+        return "_".join(parts)
+
+
+def build_step(scheme: Scheme):
+    """Return the jit-able step(g, v, e, rhat, p, s, tau, lr_ratio, aux) fn."""
+
+    def step(g, v_prev, e_prev, rhat, p, s, tau, lr_ratio, aux):
+        lr = jnp.reshape(lr_ratio, ())
+        v, u = compress_step.fused_front(
+            g, v_prev, e_prev, rhat, lr, beta=scheme.beta, ef=scheme.ef)
+
+        if scheme.quantizer == "none":
+            utilde = u
+        elif scheme.quantizer == "sign":
+            utilde = quantizers.scaled_sign(u)
+        elif scheme.quantizer == "topk":
+            utilde = quantizers.topk_dense(u, scheme.k)
+        elif scheme.quantizer == "topkq":
+            utilde = quantizers.topkq(u, k=scheme.k)
+        else:  # randk
+            seed = jnp.reshape(aux, ()).astype(jnp.uint32)
+            utilde = quantizers.randk(u, seed, prob=scheme.randk_prob)
+
+        e, rtilde = compress_step.fused_finish(u, utilde, rhat)
+
+        if scheme.predictor == "zero":
+            rhat_next = jnp.zeros_like(rtilde)
+            p_next, s_next, tau_next = p, s, tau
+        elif scheme.predictor == "plin":
+            rhat_next = scheme.beta * rtilde
+            p_next, s_next, tau_next = p, s, tau
+        else:  # estk
+            rhat_next, p_next, s_next, tau_next = estk.estk_update(
+                utilde, rhat, p, s, tau, beta=scheme.beta)
+
+        return utilde, v, e, rhat_next, p_next, s_next, tau_next
+
+    return step
+
+
+def zero_state(d: int):
+    """Initial (v, e, rhat, p, s, tau) — all zeros, matching paper Eq. (1) init."""
+    z = jnp.zeros((d,), jnp.float32)
+    return z, z, z, z, z, z

@@ -1,0 +1,55 @@
+"""Block/tiling helpers shared by the Pallas kernels.
+
+All compression kernels operate on flat f32 vectors of dimension d. We tile
+d into 1-D blocks of `LANE_BLOCK` components; the L2 wrappers zero-pad the
+inputs up to a block multiple and slice the outputs back. Zero padding is
+algebraically safe for every kernel here (all state is zero at the padded
+positions, all ops map 0 -> 0, and reductions are sums of |.|).
+
+On a real TPU each block is one HBM->VMEM DMA tile; 4096 f32 lanes = 16 KiB
+per operand, far below VMEM, leaving room for the ~9 operands the fused
+step streams plus double buffering (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 4096 f32 = 16 KiB per operand per block.
+LANE_BLOCK = 4096
+
+# Pallas on CPU must run in interpret mode: real-TPU lowering emits a Mosaic
+# custom-call the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+def padded_len(d: int, block: int = LANE_BLOCK) -> int:
+    """Smallest multiple of `block` that is >= d."""
+    return ((d + block - 1) // block) * block
+
+
+def pad_to_block(x: jnp.ndarray, block: int = LANE_BLOCK) -> jnp.ndarray:
+    """Zero-pad a flat vector up to a block multiple."""
+    d = x.shape[0]
+    pad = padded_len(d, block) - d
+    if pad == 0:
+        return x
+    return jnp.pad(x, (0, pad))
+
+
+def vec_spec(block: int = LANE_BLOCK) -> pl.BlockSpec:
+    """BlockSpec for a flat vector tiled into 1-D blocks."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def scalar_spec() -> pl.BlockSpec:
+    """BlockSpec for a (1,)-shaped scalar broadcast to every block."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+@functools.lru_cache(maxsize=None)
+def grid_for(d: int, block: int = LANE_BLOCK) -> tuple:
+    return (padded_len(d, block) // block,)

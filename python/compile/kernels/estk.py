@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: Est-K predictor state update (paper Alg. 1).
+
+Fully elementwise over the d components, so it fuses into a single pass:
+per component, on a received non-zero utilde the momentum estimate p is
+refreshed to the time-average (s + utilde)/(tau+1) and the prediction chain
+restarts at beta*p; otherwise the chain decays geometrically and the issued
+prediction accumulates into s. See DESIGN.md §2 and ref.estk_update for the
+state-machine derivation from paper Table III.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocks
+
+
+def _estk_kernel(ut_ref, rhat_ref, p_ref, s_ref, tau_ref,
+                 rhat_out, p_out, s_out, tau_out, *, beta):
+    ut = ut_ref[...]
+    rhat = rhat_ref[...]
+    p = p_ref[...]
+    s = s_ref[...]
+    tau = tau_ref[...]
+
+    hit = ut != 0.0
+    p_new = (s + ut) / (tau + 1.0)
+    rhat_hit = beta * p_new
+    rhat_miss = beta * rhat
+
+    rhat_out[...] = jnp.where(hit, rhat_hit, rhat_miss)
+    p_out[...] = jnp.where(hit, p_new, p)
+    s_out[...] = jnp.where(hit, rhat_hit, s + rhat_miss)
+    tau_out[...] = jnp.where(hit, 0.0, tau + 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block"))
+def estk_update(utilde, rhat, p, s, tau, *, beta: float,
+                block: int = blocks.LANE_BLOCK):
+    """One Est-K state transition. Returns (rhat_next, p_next, s_next, tau_next).
+
+    Matches ref.estk_update exactly. Note: padded lanes follow the miss
+    branch with all-zero state, so they stay zero except tau, which counts
+    up and is sliced away.
+    """
+    d = utilde.shape[0]
+    args = [blocks.pad_to_block(x, block) for x in (utilde, rhat, p, s, tau)]
+    grid = blocks.grid_for(d, block)
+    shape = jax.ShapeDtypeStruct(args[0].shape, jnp.float32)
+    kernel = functools.partial(_estk_kernel, beta=beta)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blocks.vec_spec(block)] * 5,
+        out_specs=[blocks.vec_spec(block)] * 4,
+        out_shape=[shape] * 4,
+        interpret=blocks.INTERPRET,
+    )(*args)
+    return tuple(o[:d] for o in outs)

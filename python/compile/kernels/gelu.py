@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused bias + GELU (tanh approx) with a custom VJP.
+
+This is the model-side hot-spot kernel: every MLP/FFN block in the L2 models
+calls `bias_gelu(x, b)` so that both the forward and the backward pass run
+as fused single-pass Pallas kernels instead of the ~8-op unfused chain XLA
+would otherwise stream through HBM. The custom VJP is required because
+interpret-mode `pallas_call` is not differentiable by itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocks
+from .ref import GELU_A, GELU_C
+
+ROW_BLOCK = 8
+
+
+def _fwd_kernel(x_ref, b_ref, y_ref):
+    z = x_ref[...] + b_ref[...]
+    inner = GELU_C * (z + GELU_A * z * z * z)
+    y_ref[...] = 0.5 * z * (1.0 + jnp.tanh(inner))
+
+
+def _bwd_kernel(x_ref, b_ref, dy_ref, dz_ref):
+    z = x_ref[...] + b_ref[...]
+    inner = GELU_C * (z + GELU_A * z * z * z)
+    t = jnp.tanh(inner)
+    sech2 = 1.0 - t * t
+    dinner = GELU_C * (1.0 + 3.0 * GELU_A * z * z)
+    dgelu = 0.5 * (1.0 + t) + 0.5 * z * sech2 * dinner
+    dz_ref[...] = dy_ref[...] * dgelu
+
+
+def _row_grid(n_rows: int) -> tuple:
+    return ((n_rows + ROW_BLOCK - 1) // ROW_BLOCK,)
+
+
+def _pad_rows(x: jnp.ndarray) -> jnp.ndarray:
+    pad = (-x.shape[0]) % ROW_BLOCK
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+def _mat_spec(f: int) -> pl.BlockSpec:
+    return pl.BlockSpec((ROW_BLOCK, f), lambda i: (i, 0))
+
+
+def _bias_spec(f: int) -> pl.BlockSpec:
+    return pl.BlockSpec((f,), lambda i: (0,))
+
+
+@jax.custom_vjp
+def bias_gelu(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """y = gelu(x + b) for x: (B, F), b: (F,). Fused Pallas fwd and bwd."""
+    return _bias_gelu_fwd_impl(x, b)
+
+
+@functools.partial(jax.jit)
+def _bias_gelu_fwd_impl(x, b):
+    n, f = x.shape
+    xp = _pad_rows(x)
+    y = pl.pallas_call(
+        _fwd_kernel,
+        grid=_row_grid(n),
+        in_specs=[_mat_spec(f), _bias_spec(f)],
+        out_specs=_mat_spec(f),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=blocks.INTERPRET,
+    )(xp, b)
+    return y[:n]
+
+
+@functools.partial(jax.jit)
+def _bias_gelu_bwd_impl(x, b, dy):
+    n, f = x.shape
+    xp = _pad_rows(x)
+    dyp = _pad_rows(dy)
+    dz = pl.pallas_call(
+        _bwd_kernel,
+        grid=_row_grid(n),
+        in_specs=[_mat_spec(f), _bias_spec(f), _mat_spec(f)],
+        out_specs=_mat_spec(f),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=blocks.INTERPRET,
+    )(xp, b, dyp)
+    return dz[:n]
+
+
+def _vjp_fwd(x, b):
+    return _bias_gelu_fwd_impl(x, b), (x, b)
+
+
+def _vjp_bwd(res, dy):
+    x, b = res
+    dz = _bias_gelu_bwd_impl(x, b, dy)
+    return dz, jnp.sum(dz, axis=0)
+
+
+bias_gelu.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,202 @@
+"""L1 Pallas kernels for the quantizers Q (paper Eq. (1d)).
+
+Scaled-sign needs a global reduction (mean |u|); it is implemented as the
+classic two-phase pattern: phase 1 computes one partial |.|-sum per block,
+phase 2 applies utilde = a * sign(u) with the combined scalar. The tiny
+combine between phases is plain jnp (it touches `nblocks` floats, not d).
+
+Top-K *selection* is not elementwise and stays at L2 (`jax.lax.top_k`), but
+the mask application / Top-K-Q two-point reconstruction / Rand-K hash are
+elementwise Pallas kernels here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import blocks
+from .ref import randk_hash
+
+
+# ---------------------------------------------------------------------------
+# Scaled-sign
+# ---------------------------------------------------------------------------
+
+
+def _absum_kernel(u_ref, out_ref):
+    out_ref[0] = jnp.sum(jnp.abs(u_ref[...]))
+
+
+def _sign_apply_kernel(a_ref, u_ref, out_ref):
+    u = u_ref[...]
+    out_ref[...] = a_ref[0] * jnp.sign(u)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scaled_sign(u, *, block: int = blocks.LANE_BLOCK):
+    """utilde = mean(|u|) * sign(u). Matches ref.q_scaled_sign."""
+    d = u.shape[0]
+    up = blocks.pad_to_block(u, block)
+    grid = blocks.grid_for(d, block)
+    partials = pl.pallas_call(
+        _absum_kernel,
+        grid=grid,
+        in_specs=[blocks.vec_spec(block)],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(up)
+    # Match the reference jnp.mean(|u|) exactly: sum over the true d lanes
+    # (padding contributes zero), divide once.
+    a = jnp.reshape(jnp.sum(partials) / jnp.float32(d), (1,))
+    out = pl.pallas_call(
+        _sign_apply_kernel,
+        grid=grid,
+        in_specs=[blocks.scalar_spec(), blocks.vec_spec(block)],
+        out_specs=blocks.vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct(up.shape, jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(a, up)
+    return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# Top-K family: selection at L2, masking / reconstruction in Pallas
+# ---------------------------------------------------------------------------
+
+
+def _threshold_mask_kernel(thr_ref, u_ref, out_ref):
+    u = u_ref[...]
+    out_ref[...] = jnp.where(jnp.abs(u) >= thr_ref[0], u, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def threshold_sparsify(u, thr, *, block: int = blocks.LANE_BLOCK):
+    """Keep components with |u| >= thr (approximate Top-K given a threshold).
+
+    Used by the `topk-approx` ablation: the threshold from iteration t-1 is
+    reused at t, trading exact K for a selection pass that is fully fused.
+    """
+    d = u.shape[0]
+    up = blocks.pad_to_block(u, block)
+    t = jnp.reshape(jnp.asarray(thr, jnp.float32), (1,))
+    grid = blocks.grid_for(d, block)
+    out = pl.pallas_call(
+        _threshold_mask_kernel,
+        grid=grid,
+        in_specs=[blocks.scalar_spec(), blocks.vec_spec(block)],
+        out_specs=blocks.vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct(up.shape, jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(t, up)
+    return out[:d]
+
+
+def topk_dense(u, k: int):
+    """Exact Top-K (dense output) — selection via a lexicographic sort.
+
+    NOT `lax.top_k`: jax ≥ 0.7 lowers that to the `topk(..., largest=true)`
+    HLO op, which the xla_extension 0.5.1 text parser rejects. A two-key
+    `lax.sort` over (−|u|, index) lowers to a plain HLO `sort` and encodes
+    the same tie-break (lower index wins, matching rust compress::topk):
+    keep component i iff (−|u_i|, i) ≤ (−|u|, idx) of the K-th sorted entry.
+    """
+    d = u.shape[0]
+    k = min(k, d)
+    neg_mag = -jnp.abs(u)
+    idx = jax.lax.iota(jnp.int32, d)
+    sorted_mag, sorted_idx = jax.lax.sort((neg_mag, idx), num_keys=2)
+    thr_mag = sorted_mag[k - 1]
+    thr_idx = sorted_idx[k - 1]
+    keep = (neg_mag < thr_mag) | ((neg_mag == thr_mag) & (idx <= thr_idx))
+    return jnp.where(keep, u, 0.0)
+
+
+def _two_point_kernel(apos_ref, aneg_ref, kept_ref, out_ref):
+    kept = kept_ref[...]
+    pos = kept > 0.0
+    neg = kept < 0.0
+    out_ref[...] = jnp.where(pos, apos_ref[0], 0.0) - jnp.where(neg, aneg_ref[0], 0.0)
+
+
+def _pos_neg_sums_kernel(kept_ref, out_ref):
+    kept = kept_ref[...]
+    pos = kept > 0.0
+    neg = kept < 0.0
+    out_ref[0] = jnp.sum(jnp.where(pos, kept, 0.0))
+    out_ref[1] = jnp.sum(jnp.where(pos, 1.0, 0.0))
+    out_ref[2] = jnp.sum(jnp.where(neg, -kept, 0.0))
+    out_ref[3] = jnp.sum(jnp.where(neg, 1.0, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def topkq(u, *, k: int, block: int = blocks.LANE_BLOCK):
+    """Top-K-Q: Top-K then two-point (a+, -a-) reconstruction.
+
+    Matches ref.q_topkq. Phase 1 (Pallas): per-block pos/neg sums+counts over
+    the kept vector; combine; phase 2 (Pallas): write the two-point values.
+    """
+    d = u.shape[0]
+    kept = topk_dense(u, k)
+    kp = blocks.pad_to_block(kept, block)
+    grid = blocks.grid_for(d, block)
+    partials = pl.pallas_call(
+        _pos_neg_sums_kernel,
+        grid=grid,
+        in_specs=[blocks.vec_spec(block)],
+        out_specs=pl.BlockSpec((4,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((4 * grid[0],), jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(kp)
+    part = jnp.reshape(partials, (grid[0], 4))
+    pos_sum, npos, neg_sum, nneg = (part[:, 0].sum(), part[:, 1].sum(),
+                                    part[:, 2].sum(), part[:, 3].sum())
+    a_pos = jnp.where(npos > 0, pos_sum / jnp.maximum(npos, 1.0), 0.0)
+    a_neg = jnp.where(nneg > 0, neg_sum / jnp.maximum(nneg, 1.0), 0.0)
+    out = pl.pallas_call(
+        _two_point_kernel,
+        grid=grid,
+        in_specs=[blocks.scalar_spec(), blocks.scalar_spec(), blocks.vec_spec(block)],
+        out_specs=blocks.vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct(kp.shape, jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(jnp.reshape(a_pos, (1,)), jnp.reshape(a_neg, (1,)), kp)
+    return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# Rand-K (Bernoulli, shared-seed LCG hash)
+# ---------------------------------------------------------------------------
+
+
+def _randk_kernel(seed_ref, u_ref, out_ref, *, thresh, block):
+    i = pl.program_id(0)
+    base = jnp.asarray(i * block, jnp.uint32)
+    j = jax.lax.iota(jnp.uint32, block) + base
+    key = randk_hash(j, seed_ref[0])
+    keep = key < jnp.uint32(thresh)
+    out_ref[...] = jnp.where(keep, u_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("prob", "block"))
+def randk(u, seed, *, prob: float, block: int = blocks.LANE_BLOCK):
+    """Bernoulli Rand-K with the shared-seed LCG hash (matches ref.q_randk)."""
+    d = u.shape[0]
+    up = blocks.pad_to_block(u, block)
+    grid = blocks.grid_for(d, block)
+    thresh = min(int(prob * 4294967296.0), 4294967295)
+    kernel = functools.partial(_randk_kernel, thresh=thresh, block=block)
+    seed_arr = jnp.reshape(jnp.asarray(seed, jnp.uint32), (1,))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blocks.scalar_spec(), blocks.vec_spec(block)],
+        out_specs=blocks.vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct(up.shape, jnp.float32),
+        interpret=blocks.INTERPRET,
+    )(seed_arr, up)
+    return out[:d]

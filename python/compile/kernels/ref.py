@@ -1,0 +1,283 @@
+"""Pure-jnp reference oracle for every L1 kernel and L2 compression graph.
+
+This module is the single source of truth for the paper's algorithms
+(Adikari & Draper, "Compressing gradients by exploiting temporal correlation
+in momentum-SGD", JSAIT 2021). Everything here is written with plain
+`jax.numpy` ops only — no Pallas — so it can be diffed against the Pallas
+kernels (python/tests/) and against the pure-Rust pipeline
+(rust/src/compress/, via the HLO cross-check integration tests).
+
+Conventions
+-----------
+* All per-component state vectors are flat f32 of dimension d.
+* `tau` (iterations since the master last received a non-zero update for a
+  component, paper Alg. 1 / Table III) is carried as f32 for HLO uniformity.
+* Quantizers return a *dense* d-vector `utilde`; sparsity is an encoding
+  concern handled by the Rust coding layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Eq. (1a)-(1c): momentum + error-feedback + prediction error
+# ---------------------------------------------------------------------------
+
+
+def momentum_step(v_prev: jnp.ndarray, g: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Heavy-ball EMA momentum, paper Eq. (1a): v_t = beta v_{t-1} + (1-beta) g_t."""
+    return beta * v_prev + (1.0 - beta) * g
+
+
+def ef_inject(v: jnp.ndarray, e_prev: jnp.ndarray, lr_ratio, ef: bool) -> jnp.ndarray:
+    """Paper Eq. (1b): r_t = v_t + (eta_{t-1}/eta_t) e_{t-1} when the EF switch
+    is closed, r_t = v_t otherwise. `lr_ratio` is eta_{t-1}/eta_t."""
+    if not ef:
+        return v
+    return v + lr_ratio * e_prev
+
+
+def prediction_error(r: jnp.ndarray, rhat: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. (1c): u_t = r_t - rhat_t."""
+    return r - rhat
+
+
+def compress_front(g, v_prev, e_prev, rhat, lr_ratio, *, beta: float, ef: bool):
+    """The fused front half of the worker step (Eqs. (1a)-(1c)).
+
+    Returns (v, u). This is exactly what the fused Pallas kernel
+    `compress_step.fused_front` computes in one pass.
+    """
+    v = momentum_step(v_prev, g, beta)
+    r = ef_inject(v, e_prev, lr_ratio, ef)
+    u = prediction_error(r, rhat)
+    return v, u
+
+
+# ---------------------------------------------------------------------------
+# Quantizers Q (Eq. (1d))
+# ---------------------------------------------------------------------------
+
+
+def q_none(u: jnp.ndarray) -> jnp.ndarray:
+    """Identity quantizer — the uncompressed 32-bit baseline."""
+    return u
+
+
+def q_scaled_sign(u: jnp.ndarray) -> jnp.ndarray:
+    """Scaled-sign [Bernstein et al. 2018]: utilde = mean(|u|) * sign(u)."""
+    a = jnp.mean(jnp.abs(u))
+    return a * jnp.sign(u)
+
+
+def q_topk(u: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-K sparsification: keep exactly the K components largest in |.|.
+
+    Tie-break matches `jax.lax.top_k` (stable: lower index wins), which the
+    Rust implementation mirrors (sort by (|v| desc, idx asc)).
+    """
+    _, idx = jax.lax.top_k(jnp.abs(u), k)
+    return jnp.zeros_like(u).at[idx].set(u[idx])
+
+
+def q_topkq(u: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-K-Q [Dryden et al. 2016]: Top-K, then the surviving positives are
+    reconstructed to a single point a+ (mean of surviving positives) and the
+    negatives to -a- (mean magnitude of surviving negatives)."""
+    kept = q_topk(u, k)
+    pos = kept > 0.0
+    neg = kept < 0.0
+    npos = jnp.sum(pos)
+    nneg = jnp.sum(neg)
+    a_pos = jnp.where(npos > 0, jnp.sum(jnp.where(pos, kept, 0.0)) / jnp.maximum(npos, 1), 0.0)
+    a_neg = jnp.where(nneg > 0, -jnp.sum(jnp.where(neg, kept, 0.0)) / jnp.maximum(nneg, 1), 0.0)
+    return jnp.where(pos, a_pos, 0.0) - jnp.where(neg, a_neg, 0.0)
+
+
+RANDK_H1 = 0x9E3779B1  # golden-ratio odd constant
+RANDK_H2 = 0x85EBCA6B
+RANDK_M1 = 0x7FEB352D  # triple32 finalizer constants
+RANDK_M2 = 0x846CA68B
+
+
+def randk_hash(j: jnp.ndarray, seed) -> jnp.ndarray:
+    """32-bit mix of (component index, round seed) — triple32-style finalizer.
+
+    Must stay identical to rust `compress::randk::hash32` so master and
+    workers derive the same selection mask without sending indices.
+    """
+    seed_u = jnp.asarray(seed, jnp.uint32)
+    key = (j + jnp.uint32(1)) * jnp.uint32(RANDK_H1) + seed_u * jnp.uint32(RANDK_H2)
+    key = key ^ (key >> 16)
+    key = key * jnp.uint32(RANDK_M1)
+    key = key ^ (key >> 15)
+    key = key * jnp.uint32(RANDK_M2)
+    key = key ^ (key >> 16)
+    return key
+
+
+def randk_keep_mask(d: int, seed, prob: float) -> jnp.ndarray:
+    """Bernoulli Rand-K selection mask, identical to rust compress::randk.
+
+    keep iff hash32(j, seed) < prob * 2^32. Shared-seed selection means the
+    indices never travel on the wire.
+    """
+    j = jax.lax.iota(jnp.uint32, d)
+    key = randk_hash(j, seed)
+    thresh = jnp.uint32(min(int(prob * 4294967296.0), 4294967295))
+    return key < thresh
+
+
+def q_randk(u: jnp.ndarray, seed, prob: float) -> jnp.ndarray:
+    """Rand-K (Bernoulli variant): keep each component w.p. prob = K/d."""
+    return jnp.where(randk_keep_mask(u.shape[0], seed, prob), u, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Predictors P (Eq. (1g))
+# ---------------------------------------------------------------------------
+
+
+def p_zero(rtilde: jnp.ndarray) -> jnp.ndarray:
+    """No prediction: rhat_{t+1} = 0 (removes the blue blocks in Fig. 2)."""
+    return jnp.zeros_like(rtilde)
+
+
+def p_lin(rtilde: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """P_Lin, paper Eq. (4): rhat_{t+1} = beta * rtilde_t (DPCM first-order)."""
+    return beta * rtilde
+
+
+def estk_update(utilde, rhat, p, s, tau, *, beta: float):
+    """Est-K predictor state update, paper Alg. 1 (reconstructed from Table III).
+
+    Per-component state:
+      p   — last estimate of the momentum (time-average between peaks)
+      s   — sum of predictions issued since the last received update
+      tau — iterations since the last received update
+    On receiving a non-zero utilde[k] (k in the Top-K set J_t):
+      p'    = (s + utilde[k]) / (tau + 1)
+      tau'  = 0
+      rhat' = beta * p'
+      s'    = rhat'
+    Otherwise:
+      tau'  = tau + 1
+      rhat' = beta * rhat
+      s'    = s + rhat'
+
+    Returns (rhat_next, p_next, s_next, tau_next).
+    """
+    hit = utilde != 0.0
+    p_new = (s + utilde) / (tau + 1.0)
+    rhat_hit = beta * p_new
+    rhat_miss = beta * rhat
+    rhat_next = jnp.where(hit, rhat_hit, rhat_miss)
+    p_next = jnp.where(hit, p_new, p)
+    s_next = jnp.where(hit, rhat_hit, s + rhat_miss)
+    tau_next = jnp.where(hit, 0.0, tau + 1.0)
+    return rhat_next, p_next, s_next, tau_next
+
+
+# ---------------------------------------------------------------------------
+# Full worker step (the whole Fig. 2 worker box)
+# ---------------------------------------------------------------------------
+
+
+def worker_step(
+    g,
+    v_prev,
+    e_prev,
+    rhat,
+    p,
+    s,
+    tau,
+    lr_ratio,
+    *,
+    beta: float,
+    ef: bool,
+    quantizer: str,
+    predictor: str,
+    k: int = 0,
+    randk_prob: float = 0.0,
+    randk_seed=0,
+):
+    """One full worker iteration of paper Eq. (1), any (Q, P, EF) combination.
+
+    Returns (utilde, v, e, rhat_next, p_next, s_next, tau_next).
+    `utilde` is the dense quantizer output the encoder serializes; `rtilde`
+    (what the master reconstructs) is `utilde + rhat`.
+    """
+    v, u = compress_front(g, v_prev, e_prev, rhat, lr_ratio, beta=beta, ef=ef)
+
+    if quantizer == "none":
+        utilde = q_none(u)
+    elif quantizer == "sign":
+        utilde = q_scaled_sign(u)
+    elif quantizer == "topk":
+        utilde = q_topk(u, k)
+    elif quantizer == "topkq":
+        utilde = q_topkq(u, k)
+    elif quantizer == "randk":
+        utilde = q_randk(u, randk_seed, randk_prob)
+    else:  # pragma: no cover - guarded by aot config validation
+        raise ValueError(f"unknown quantizer {quantizer!r}")
+
+    e = u - utilde  # Eq. (1e)
+    rtilde = utilde + rhat  # Eq. (1f)
+
+    if predictor == "zero":
+        rhat_next = p_zero(rtilde)
+        p_next, s_next, tau_next = p, s, tau
+    elif predictor == "plin":
+        rhat_next = p_lin(rtilde, beta)
+        p_next, s_next, tau_next = p, s, tau
+    elif predictor == "estk":
+        rhat_next, p_next, s_next, tau_next = estk_update(
+            utilde, rhat, p, s, tau, beta=beta
+        )
+    else:  # pragma: no cover
+        raise ValueError(f"unknown predictor {predictor!r}")
+
+    return utilde, v, e, rhat_next, p_next, s_next, tau_next
+
+
+def master_reconstruct(utilde, rhat, *, beta: float, predictor: str, p=None, s=None, tau=None):
+    """Master-side decode chain for one worker: rtilde = utilde + rhat, then
+    the same predictor update as the worker (keeps the two in bit-exact sync)."""
+    rtilde = utilde + rhat
+    if predictor == "zero":
+        return rtilde, p_zero(rtilde), p, s, tau
+    if predictor == "plin":
+        return rtilde, p_lin(rtilde, beta), p, s, tau
+    if predictor == "estk":
+        rhat_next, p_next, s_next, tau_next = estk_update(utilde, rhat, p, s, tau, beta=beta)
+        return rtilde, rhat_next, p_next, s_next, tau_next
+    raise ValueError(f"unknown predictor {predictor!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model-side kernel reference: fused bias + GELU (tanh approximation)
+# ---------------------------------------------------------------------------
+
+GELU_C = 0.7978845608028654  # sqrt(2/pi)
+GELU_A = 0.044715
+
+
+def gelu_ref(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """y = gelu(x + b), tanh approximation (matches jax.nn.gelu approximate=True)."""
+    z = x + b
+    inner = GELU_C * (z + GELU_A * z * z * z)
+    return 0.5 * z * (1.0 + jnp.tanh(inner))
+
+
+def gelu_grad_ref(x: jnp.ndarray, b: jnp.ndarray, dy: jnp.ndarray) -> jnp.ndarray:
+    """dz for y = gelu(z), z = x + b. db is dz summed over batch by the caller."""
+    z = x + b
+    inner = GELU_C * (z + GELU_A * z * z * z)
+    t = jnp.tanh(inner)
+    sech2 = 1.0 - t * t
+    dinner = GELU_C * (1.0 + 3.0 * GELU_A * z * z)
+    dgelu = 0.5 * (1.0 + t) + 0.5 * z * sech2 * dinner
+    return dy * dgelu

@@ -1,0 +1,329 @@
+"""L2 models: flat-parameter fwd/bwd graphs the Rust coordinator executes.
+
+Every model exposes the same artifact-level contract:
+
+    fwdbwd(w: f32[d], x, y)  -> (loss: f32[], grad: f32[d])
+    evaluate(w: f32[d], x, y) -> (loss: f32[], n_correct: f32[])
+
+Parameters travel as a single flat f32 vector `w` so that the Rust side
+(model/, coordinator/) never needs per-leaf plumbing: the gradient it feeds
+into the compression pipeline is one contiguous d-vector — exactly the
+object the paper compresses. Packing/unpacking happens inside the graph.
+
+Model zoo (paper substitution, see DESIGN.md §4):
+  * mlp_tiny / mlp_s — MLP classifiers over 32x32x3 synthetic images.
+  * cnn_s            — small conv net (the WRN-28-2 stand-in, conv+pool).
+  * lm_tiny/lm_small — decoder-only transformer LM over the Markov corpus;
+                       lm_small (~0.9M params) is the e2e example model.
+
+The MLP/FFN nonlinearity is the fused Pallas bias+GELU kernel (kernels/gelu.py),
+so the L1 kernel lowers into the same HLO artifact as the rest of the model.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.gelu import bias_gelu
+
+# ---------------------------------------------------------------------------
+# Flat-parameter packing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    """Ordered list of named tensors packed into one flat vector."""
+
+    entries: List[Tuple[str, Tuple[int, ...]]] = field(default_factory=list)
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        self.entries.append((name, tuple(shape)))
+
+    @property
+    def dim(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.entries)
+
+    def unpack(self, w: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out: Dict[str, jnp.ndarray] = {}
+        off = 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            out[name] = jnp.reshape(w[off:off + n], shape)
+            off += n
+        return out
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """He/Glorot-style init, packed. Deterministic in `seed`; the result
+        is written to artifacts/init_<model>.bin for the Rust launcher."""
+        rng = np.random.default_rng(seed)
+        parts: List[np.ndarray] = []
+        for name, shape in self.entries:
+            if len(shape) == 1:  # biases, layernorm offsets
+                if name.endswith("ln_g") or name.endswith(".g"):
+                    parts.append(np.ones(shape, np.float32))
+                else:
+                    parts.append(np.zeros(shape, np.float32))
+            else:
+                fan_in = int(np.prod(shape[:-1]))
+                std = math.sqrt(2.0 / max(fan_in, 1))
+                if name.startswith("emb") or name.startswith("pos"):
+                    std = 0.02
+                parts.append(rng.normal(0.0, std, size=shape).astype(np.float32))
+        return np.concatenate([p.ravel() for p in parts])
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; logits (N, C), y int32 (N,)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def n_correct(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MlpConfig:
+    name: str
+    in_dim: int
+    hidden: Tuple[int, ...]
+    classes: int
+    batch: int
+    l2: float = 1e-4
+
+    def spec(self) -> ParamSpec:
+        s = ParamSpec()
+        prev = self.in_dim
+        for li, h in enumerate(self.hidden):
+            s.add(f"w{li}", (prev, h))
+            s.add(f"b{li}", (h,))
+            prev = h
+        s.add("w_out", (prev, self.classes))
+        s.add("b_out", (self.classes,))
+        return s
+
+    def logits(self, params: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+        h = jnp.reshape(x, (x.shape[0], self.in_dim))
+        for li in range(len(self.hidden)):
+            h = bias_gelu(h @ params[f"w{li}"], params[f"b{li}"])
+        return h @ params["w_out"] + params["b_out"]
+
+    def loss(self, w: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        params = self.spec().unpack(w)
+        reg = 0.5 * self.l2 * jnp.sum(jnp.square(w))
+        return softmax_xent(self.logits(params, x), y) + reg
+
+    def metrics(self, w, x, y):
+        params = self.spec().unpack(w)
+        logits = self.logits(params, x)
+        return softmax_xent(logits, y), n_correct(logits, y)
+
+    def example_inputs(self):
+        return (jnp.zeros((self.batch, self.in_dim), jnp.float32),
+                jnp.zeros((self.batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Small conv net (WRN stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CnnConfig:
+    name: str
+    hw: int
+    in_ch: int
+    ch: Tuple[int, ...]
+    classes: int
+    batch: int
+    l2: float = 1e-4
+
+    def spec(self) -> ParamSpec:
+        s = ParamSpec()
+        prev = self.in_ch
+        for li, c in enumerate(self.ch):
+            s.add(f"k{li}", (3, 3, prev, c))
+            s.add(f"cb{li}", (c,))
+            prev = c
+        final_hw = self.hw // (2 ** len(self.ch))
+        s.add("w_out", (final_hw * final_hw * prev, self.classes))
+        s.add("b_out", (self.classes,))
+        return s
+
+    def logits(self, params, x):
+        b = x.shape[0]
+        h = jnp.reshape(x, (b, self.hw, self.hw, self.in_ch))
+        for li in range(len(self.ch)):
+            h = jax.lax.conv_general_dilated(
+                h, params[f"k{li}"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            c = h.shape[-1]
+            flat = jnp.reshape(h, (-1, c))
+            flat = bias_gelu(flat, params[f"cb{li}"])
+            h = jnp.reshape(flat, h.shape)
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") * 0.25
+        h = jnp.reshape(h, (b, -1))
+        return h @ params["w_out"] + params["b_out"]
+
+    def loss(self, w, x, y):
+        params = self.spec().unpack(w)
+        reg = 0.5 * self.l2 * jnp.sum(jnp.square(w))
+        return softmax_xent(self.logits(params, x), y) + reg
+
+    def metrics(self, w, x, y):
+        params = self.spec().unpack(w)
+        logits = self.logits(params, x)
+        return softmax_xent(logits, y), n_correct(logits, y)
+
+    def example_inputs(self):
+        return (jnp.zeros((self.batch, self.hw * self.hw * self.in_ch), jnp.float32),
+                jnp.zeros((self.batch,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LmConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    d_ff: int
+    batch: int
+    l2: float = 0.0
+
+    def spec(self) -> ParamSpec:
+        s = ParamSpec()
+        s.add("emb", (self.vocab, self.d_model))
+        s.add("pos", (self.seq, self.d_model))
+        for li in range(self.n_layers):
+            s.add(f"l{li}.ln1_g", (self.d_model,))
+            s.add(f"l{li}.ln1_b", (self.d_model,))
+            s.add(f"l{li}.wqkv", (self.d_model, 3 * self.d_model))
+            s.add(f"l{li}.wo", (self.d_model, self.d_model))
+            s.add(f"l{li}.ln2_g", (self.d_model,))
+            s.add(f"l{li}.ln2_b", (self.d_model,))
+            s.add(f"l{li}.wff1", (self.d_model, self.d_ff))
+            s.add(f"l{li}.bff1", (self.d_ff,))
+            s.add(f"l{li}.wff2", (self.d_ff, self.d_model))
+        s.add("lnf_g", (self.d_model,))
+        s.add("lnf_b", (self.d_model,))
+        s.add("w_out", (self.d_model, self.vocab))
+        return s
+
+    def logits(self, params, tokens):
+        b, t = tokens.shape
+        dh = self.d_model // self.n_heads
+        h = params["emb"][tokens] + params["pos"][None, :t, :]
+        mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+        neg = jnp.float32(-1e9)
+        for li in range(self.n_layers):
+            pre = layer_norm(h, params[f"l{li}.ln1_g"], params[f"l{li}.ln1_b"])
+            qkv = pre @ params[f"l{li}.wqkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+
+            def heads(x):
+                return jnp.transpose(jnp.reshape(x, (b, t, self.n_heads, dh)), (0, 2, 1, 3))
+
+            q, k, v = heads(q), heads(k), heads(v)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+            att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            ctx = jnp.reshape(jnp.transpose(ctx, (0, 2, 1, 3)), (b, t, self.d_model))
+            h = h + ctx @ params[f"l{li}.wo"]
+
+            pre2 = layer_norm(h, params[f"l{li}.ln2_g"], params[f"l{li}.ln2_b"])
+            ff = jnp.reshape(pre2, (b * t, self.d_model)) @ params[f"l{li}.wff1"]
+            ff = bias_gelu(ff, params[f"l{li}.bff1"])
+            ff = jnp.reshape(ff @ params[f"l{li}.wff2"], (b, t, self.d_model))
+            h = h + ff
+        h = layer_norm(h, params["lnf_g"], params["lnf_b"])
+        return h @ params["w_out"]
+
+    def loss(self, w, tokens, targets):
+        params = self.spec().unpack(w)
+        logits = self.logits(params, tokens)
+        flat = jnp.reshape(logits, (-1, self.vocab))
+        out = softmax_xent(flat, jnp.reshape(targets, (-1,)))
+        if self.l2 > 0:
+            out = out + 0.5 * self.l2 * jnp.sum(jnp.square(w))
+        return out
+
+    def metrics(self, w, tokens, targets):
+        params = self.spec().unpack(w)
+        logits = jnp.reshape(self.logits(params, tokens), (-1, self.vocab))
+        y = jnp.reshape(targets, (-1,))
+        return softmax_xent(logits, y), n_correct(logits, y)
+
+    def example_inputs(self):
+        return (jnp.zeros((self.batch, self.seq), jnp.int32),
+                jnp.zeros((self.batch, self.seq), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "mlp_tiny": MlpConfig("mlp_tiny", in_dim=3 * 32 * 32, hidden=(32,), classes=10, batch=32),
+    "mlp_s": MlpConfig("mlp_s", in_dim=3 * 32 * 32, hidden=(128, 64), classes=10, batch=64),
+    "cnn_s": CnnConfig("cnn_s", hw=32, in_ch=3, ch=(8, 16), classes=10, batch=32),
+    "lm_tiny": LmConfig("lm_tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                        seq=32, d_ff=64, batch=8),
+    "lm_small": LmConfig("lm_small", vocab=256, d_model=128, n_layers=4, n_heads=4,
+                         seq=64, d_ff=512, batch=16),
+}
+
+
+def model_input_kind(cfg) -> str:
+    return "tokens" if isinstance(cfg, LmConfig) else "image"
+
+
+def fwdbwd_fn(cfg):
+    """(w, x, y) -> (loss, grad) — the artifact the worker hot loop executes."""
+
+    def f(w, x, y):
+        loss, grad = jax.value_and_grad(cfg.loss)(w, x, y)
+        return loss, grad
+
+    return f
+
+
+def eval_fn(cfg):
+    """(w, x, y) -> (loss, n_correct)."""
+
+    def f(w, x, y):
+        return cfg.metrics(w, x, y)
+
+    return f

@@ -1,0 +1,83 @@
+"""AOT lowering sanity: the HLO text we emit must parse-clean for the
+xla_extension 0.5.1 loader (no `topk` op, no pruned params) and the
+manifest schema must stay stable for the Rust side."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, compress_graph
+from compile.compress_graph import Scheme
+
+
+def lower_text(scheme, d=64):
+    step = compress_graph.build_step(scheme)
+    vec = jnp.zeros((d,), jnp.float32)
+    one = jnp.zeros((1,), jnp.float32)
+    args = (vec,) * 7 + (one, one)
+    lowered = jax.jit(step, keep_unused=True).lower(*args)
+    return aot.to_hlo_text(lowered)
+
+
+def test_topk_lowering_avoids_topk_hlo_op():
+    text = lower_text(Scheme("topk", "estk", True, 0.9, k=8))
+    # the 0.5.1 text parser rejects `topk(..., largest=true)`
+    assert " topk(" not in text
+    assert "sort" in text
+
+
+def entry_body(text):
+    """Lines of the ENTRY computation (the artifact's calling convention)."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if "ENTRY" in l)
+    body = []
+    for l in lines[start + 1:]:
+        if l.strip() == "}":
+            break
+        body.append(l.strip())
+    return body
+
+
+def test_signature_keeps_all_nine_params():
+    # even schemes that ignore EF/aux must keep the uniform signature
+    for scheme in [
+        Scheme("none", "zero", False, 0.9),
+        Scheme("sign", "plin", False, 0.9),
+        Scheme("randk", "zero", False, 0.9, randk_prob=0.1),
+    ]:
+        body = entry_body(lower_text(scheme))
+        params = [l for l in body if "parameter(" in l]
+        assert len(params) == 9, f"{scheme.tag}: {len(params)} params"
+
+
+def test_outputs_are_seven_tuple():
+    body = entry_body(lower_text(Scheme("topk", "estk", True, 0.9, k=4)))
+    root = [l for l in body if l.startswith("ROOT")]
+    assert root, "no ROOT instruction in ENTRY"
+    tuple_type = root[0].split(" tuple(")[0]  # "(f32[64]{0}, ...)" part
+    assert tuple_type.count("f32[64]") == 7, root[0]
+
+
+def test_model_scheme_list_valid():
+    # aot.model_schemes must produce valid schemes at any realistic d
+    for d in (1024, 98_666, 864_512):
+        schemes = aot.model_schemes(d)
+        assert len(schemes) >= 5
+        tags = [s.tag for s in schemes]
+        assert len(set(tags)) == len(tags)
+
+
+def test_manifest_roundtrips_json(tmp_path):
+    manifest = {"version": 1, "models": [], "compress": []}
+    scheme = Scheme("topk", "zero", False, 0.9, k=4)
+    aot.lower_compress(scheme, 64, str(tmp_path), manifest)
+    entry = manifest["compress"][0]
+    assert entry["d"] == 64
+    assert entry["k"] == 4
+    assert (tmp_path / entry["file"]).exists()
+    # stable schema for rust/src/model/mod.rs
+    assert set(entry) == {
+        "name", "file", "d", "quantizer", "predictor", "ef", "beta", "k", "randk_prob",
+    }
+    json.dumps(manifest)  # serializable

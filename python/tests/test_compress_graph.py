@@ -1,0 +1,123 @@
+"""The composed Pallas worker step (compress_graph) vs the jnp oracle.
+
+Threads state through multiple iterations so predictor/EF state transitions
+(not just single-shot algebra) are exercised for every scheme family the
+paper evaluates.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import compress_graph
+from compile.compress_graph import Scheme
+from compile.kernels import ref
+
+D = 300
+K = 12
+ITERS = 8
+
+SCHEMES = [
+    Scheme("none", "zero", False, 0.9),
+    Scheme("none", "zero", True, 0.9),
+    Scheme("sign", "zero", False, 0.9),
+    Scheme("sign", "plin", False, 0.99),
+    Scheme("topk", "zero", False, 0.9, k=K),
+    Scheme("topk", "plin", False, 0.99, k=K),
+    Scheme("topkq", "zero", False, 0.9, k=K),
+    Scheme("topkq", "plin", False, 0.9, k=K),
+    Scheme("topk", "zero", True, 0.9, k=K),
+    Scheme("topk", "estk", True, 0.995, k=K),
+    Scheme("topkq", "plin", True, 0.9, k=K),
+    Scheme("randk", "zero", False, 0.9, randk_prob=0.05),
+    Scheme("randk", "plin", True, 0.9, randk_prob=0.05),
+]
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.tag)
+def test_step_matches_ref_over_iterations(scheme):
+    rng = np.random.default_rng(hash(scheme.tag) % 2**31)
+    step = compress_graph.build_step(scheme)
+
+    v = e = rhat = p = s = tau = jnp.zeros((D,), jnp.float32)
+    vr, er, rhr, pr, sr, taur = (jnp.zeros((D,), jnp.float32),) * 6
+
+    for t in range(ITERS):
+        g = jnp.asarray(rng.normal(size=D), jnp.float32)
+        lr_ratio = 1.0 if t == 0 else float(rng.uniform(0.5, 2.0))
+        seed = t + 1
+
+        out = step(g, v, e, rhat, p, s, tau,
+                   jnp.asarray([lr_ratio], jnp.float32),
+                   jnp.asarray([float(seed)], jnp.float32))
+        utilde, v, e, rhat, p, s, tau = out
+
+        wout = ref.worker_step(
+            g, vr, er, rhr, pr, sr, taur, lr_ratio,
+            beta=scheme.beta, ef=scheme.ef, quantizer=scheme.quantizer,
+            predictor=scheme.predictor, k=scheme.k,
+            randk_prob=scheme.randk_prob, randk_seed=seed)
+        utilde_r, vr, er, rhr, pr, sr, taur = wout
+
+        np.testing.assert_allclose(utilde, utilde_r, atol=3e-5, rtol=3e-5,
+                                   err_msg=f"{scheme.tag} t={t} utilde")
+        for name, a, b in (("v", v, vr), ("e", e, er), ("rhat", rhat, rhr),
+                           ("p", p, pr), ("s", s, sr), ("tau", tau, taur)):
+            np.testing.assert_allclose(a, b, atol=3e-5, rtol=3e-5,
+                                       err_msg=f"{scheme.tag} t={t} {name}")
+
+
+def test_scheme_tag_unique():
+    tags = [s.tag for s in SCHEMES]
+    assert len(set(tags)) == len(tags)
+
+
+def test_scheme_validation():
+    with pytest.raises(ValueError):
+        Scheme("topk", "zero", False, 0.9)  # k missing
+    with pytest.raises(ValueError):
+        Scheme("sign", "estk", True, 0.9)  # estk requires topk
+    with pytest.raises(ValueError):
+        Scheme("bogus", "zero", False, 0.9)
+    with pytest.raises(ValueError):
+        Scheme("none", "bogus", False, 0.9)
+    with pytest.raises(ValueError):
+        Scheme("none", "zero", False, 1.0)  # beta out of range
+
+
+def test_none_zero_is_pure_momentum_sgd():
+    """With Q=none, P=zero, no EF: utilde == v == the plain momentum vector
+    (so the 'baseline' artifact really is uncompressed momentum-SGD)."""
+    scheme = Scheme("none", "zero", False, 0.9)
+    step = compress_graph.build_step(scheme)
+    rng = np.random.default_rng(0)
+    v = e = rhat = p = s = tau = jnp.zeros((D,), jnp.float32)
+    vm = np.zeros(D, np.float32)
+    one = jnp.asarray([1.0], jnp.float32)
+    for _ in range(5):
+        g = rng.normal(size=D).astype(np.float32)
+        utilde, v, e, rhat, p, s, tau = step(
+            jnp.asarray(g), v, e, rhat, p, s, tau, one, one)
+        vm = 0.9 * vm + 0.1 * g
+        np.testing.assert_allclose(utilde, vm, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(e, np.zeros(D), atol=1e-6)
+
+
+def test_ef_conservation():
+    """EF invariant: e_t = u_t - utilde_t and r_t - rtilde_t = e_t (Eq. 8)."""
+    scheme = Scheme("topk", "zero", True, 0.9, k=K)
+    step = compress_graph.build_step(scheme)
+    rng = np.random.default_rng(1)
+    v = e = rhat = p = s = tau = jnp.zeros((D,), jnp.float32)
+    one = jnp.asarray([1.0], jnp.float32)
+    v_prev = np.zeros(D, np.float32)
+    e_prev = np.zeros(D, np.float32)
+    for _ in range(6):
+        g = rng.normal(size=D).astype(np.float32)
+        utilde, v, e, rhat, p, s, tau = step(
+            jnp.asarray(g), v, e, rhat, p, s, tau, one, one)
+        v_np = 0.9 * v_prev + 0.1 * g
+        r_np = v_np + e_prev  # lr_ratio = 1
+        rtilde = np.asarray(utilde)  # rhat = 0 for P=zero
+        np.testing.assert_allclose(np.asarray(e), r_np - rtilde, atol=1e-5)
+        v_prev, e_prev = v_np, np.asarray(e)

@@ -1,0 +1,92 @@
+"""Replay paper Table III — the worked example that defines Est-K (Alg. 1).
+
+The paper only gives Alg. 1 through Table III's trace, so this test pins our
+reconstruction of the algorithm to every row of that table: a single
+component receives non-zero updates at t=3 and t=6; the predictor must emit
+   rhat_4 = beta*p3, rhat_5 = beta^2*p3, rhat_6 = beta^3*p3,
+   p3 = (0 + utilde_3)/4,  p6 = ((beta+beta^2+beta^3)*p3 + utilde_6)/3,
+and tau must follow 0,1,2,3,0,1,2,0.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+BETA = 0.9
+
+
+def run_trace(utilde_seq):
+    """Drive estk_update with a scripted utilde stream for one component."""
+    d = 1
+    rhat = jnp.zeros(d)
+    p = jnp.zeros(d)
+    s = jnp.zeros(d)
+    tau = jnp.zeros(d)
+    hist = []
+    for ut in utilde_seq:
+        ut_v = jnp.asarray([ut], jnp.float32)
+        rhat_next, p, s, tau = ref.estk_update(ut_v, rhat, p, s, tau, beta=BETA)
+        hist.append(dict(rhat_in=float(rhat[0]), utilde=ut,
+                         rhat_next=float(rhat_next[0]), p=float(p[0]),
+                         s=float(s[0]), tau=float(tau[0])))
+        rhat = rhat_next
+    return hist
+
+
+def test_table3_trace():
+    u3, u6 = 2.5, -1.3  # arbitrary non-zero received values
+    hist = run_trace([0.0, 0.0, 0.0, u3, 0.0, 0.0, u6, 0.0])
+
+    # t = 0..2: no update, rhat stays 0, tau counts 1,2,3 after each miss.
+    for t in range(3):
+        assert hist[t]["rhat_next"] == 0.0
+        assert hist[t]["p"] == 0.0
+    np.testing.assert_array_equal([h["tau"] for h in hist[:3]], [1.0, 2.0, 3.0])
+
+    # t = 3: hit with tau=3 -> divisor 4 (Table III: p3 = (v0+..+v3)/4 with
+    # utilde_3 = r_3 = v0+..+v3 and S=0).
+    p3 = (0.0 + u3) / 4.0
+    assert abs(hist[3]["p"] - p3) < 1e-6
+    assert hist[3]["tau"] == 0.0
+    assert abs(hist[3]["rhat_next"] - BETA * p3) < 1e-6
+    assert abs(hist[3]["s"] - BETA * p3) < 1e-6
+
+    # t = 4, 5: geometric decay of the prediction chain.
+    assert abs(hist[4]["rhat_next"] - BETA**2 * p3) < 1e-6
+    assert abs(hist[5]["rhat_next"] - BETA**3 * p3) < 1e-6
+    np.testing.assert_allclose(
+        hist[5]["s"], (BETA + BETA**2 + BETA**3) * p3, rtol=1e-6)
+    np.testing.assert_array_equal([hist[4]["tau"], hist[5]["tau"]], [1.0, 2.0])
+
+    # t = 6: hit with tau=2 -> divisor 3; S = (b+b^2+b^3) p3 (Table III row 6).
+    p6 = ((BETA + BETA**2 + BETA**3) * p3 + u6) / 3.0
+    assert abs(hist[6]["p"] - p6) < 1e-6
+    assert abs(hist[6]["rhat_next"] - BETA * p6) < 1e-6
+    assert hist[6]["tau"] == 0.0
+
+    # t = 7: miss again.
+    assert abs(hist[7]["rhat_next"] - BETA**2 * p6) < 1e-6
+    assert hist[7]["tau"] == 1.0
+
+
+def test_table3_full_pipeline_consistency():
+    """Drive the *whole* worker pipeline (Eq. (1) with EF + Est-K + Top-1 on
+    d=2) and assert the e_t bookkeeping of Table III: e_t = r_t - rtilde_t and
+    e_t = u_t on misses, e_t = 0 on hits."""
+    rng = np.random.default_rng(0)
+    d, k, beta = 2, 1, 0.9
+    v = jnp.zeros(d); e = jnp.zeros(d); rhat = jnp.zeros(d)
+    p = jnp.zeros(d); s = jnp.zeros(d); tau = jnp.zeros(d)
+    for t in range(60):
+        g = jnp.asarray(rng.normal(size=d), jnp.float32)
+        utilde, v, e_new, rhat_n, p, s, tau = ref.worker_step(
+            g, v, e, rhat, p, s, tau, 1.0, beta=beta, ef=True,
+            quantizer="topk", predictor="estk", k=k)
+        hits = np.asarray(utilde) != 0.0
+        e_np = np.asarray(e_new)
+        # on a hit the transmitted value is exact -> e = 0 there
+        assert np.all(np.abs(e_np[hits]) < 1e-6)
+        e, rhat = e_new, rhat_n
+    # Top-1 sends exactly one component per iteration
+    assert int(np.sum(np.asarray(utilde) != 0.0)) == 1

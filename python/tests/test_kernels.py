@@ -1,0 +1,258 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+hypothesis sweeps shapes, betas, seeds and block sizes (including
+non-divisible d so the zero-padding path is exercised). Tolerances: the
+elementwise integer-ish paths (Est-K, Top-K-Q reconstruction, Rand-K mask)
+must match exactly; float chains allow a few ulps for XLA fusion contraction
+differences between eager ref and the compiled Pallas graph.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import compress_step, estk, quantizers, ref
+from compile.kernels.gelu import bias_gelu
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def vecs(rng, d, n):
+    return [jnp.asarray(rng.normal(size=d), jnp.float32) for _ in range(n)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.integers(1, 700),
+    beta=st.sampled_from([0.0, 0.5, 0.9, 0.99, 0.995]),
+    ef=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([64, 256]),
+)
+def test_fused_front_matches_ref(d, beta, ef, seed, block):
+    rng = np.random.default_rng(seed)
+    g, v, e, rh = vecs(rng, d, 4)
+    lr = float(rng.uniform(0.1, 3.0))
+    v2, u2 = compress_step.fused_front(g, v, e, rh, lr, beta=beta, ef=ef, block=block)
+    vr, ur = ref.compress_front(g, v, e, rh, lr, beta=beta, ef=ef)
+    np.testing.assert_allclose(v2, vr, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(u2, ur, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 700), seed=st.integers(0, 2**31 - 1),
+       block=st.sampled_from([64, 256]))
+def test_fused_finish_matches_ref(d, seed, block):
+    rng = np.random.default_rng(seed)
+    u, ut, rh = vecs(rng, d, 3)
+    e, rtilde = compress_step.fused_finish(u, ut, rh, block=block)
+    np.testing.assert_allclose(e, u - ut, atol=ATOL, rtol=RTOL)
+    np.testing.assert_allclose(rtilde, ut + rh, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 900), seed=st.integers(0, 2**31 - 1),
+       block=st.sampled_from([64, 256]))
+def test_scaled_sign_matches_ref(d, seed, block):
+    rng = np.random.default_rng(seed)
+    (u,) = vecs(rng, d, 1)
+    got = quantizers.scaled_sign(u, block=block)
+    want = ref.q_scaled_sign(u)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_scaled_sign_zero_vector():
+    u = jnp.zeros((100,), jnp.float32)
+    np.testing.assert_array_equal(quantizers.scaled_sign(u, block=64), u)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(2, 700), seed=st.integers(0, 2**31 - 1))
+def test_topk_dense_matches_ref(d, seed):
+    rng = np.random.default_rng(seed)
+    (u,) = vecs(rng, d, 1)
+    k = int(rng.integers(1, d + 1))
+    got = quantizers.topk_dense(u, k)
+    want = ref.q_topk(u, k)
+    np.testing.assert_array_equal(got, want)
+    assert int(jnp.sum(got != 0)) <= k
+
+
+def test_topk_exactly_k_nonzeros():
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.normal(size=500), jnp.float32)
+    for k in (1, 5, 100, 500):
+        assert int(jnp.sum(quantizers.topk_dense(u, k) != 0)) == k
+
+
+def test_topk_keeps_largest_magnitudes():
+    u = jnp.asarray([0.1, -5.0, 2.0, -0.2, 3.0], jnp.float32)
+    got = quantizers.topk_dense(u, 2)
+    np.testing.assert_array_equal(got, jnp.asarray([0, -5.0, 0, 0, 3.0], jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(2, 700), seed=st.integers(0, 2**31 - 1),
+       block=st.sampled_from([64, 256]))
+def test_topkq_matches_ref(d, seed, block):
+    rng = np.random.default_rng(seed)
+    (u,) = vecs(rng, d, 1)
+    k = int(rng.integers(1, d + 1))
+    got = quantizers.topkq(u, k=k, block=block)
+    want = ref.q_topkq(u, k)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_topkq_two_reconstruction_points():
+    rng = np.random.default_rng(11)
+    u = jnp.asarray(rng.normal(size=300), jnp.float32)
+    out = np.asarray(quantizers.topkq(u, k=40))
+    pos = np.unique(out[out > 0])
+    neg = np.unique(out[out < 0])
+    assert len(pos) <= 1 and len(neg) <= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 900), seed=st.integers(0, 2**31 - 1),
+       rseed=st.integers(0, 1000), prob=st.floats(0.0, 1.0),
+       block=st.sampled_from([64, 256]))
+def test_randk_matches_ref(d, seed, rseed, prob, block):
+    rng = np.random.default_rng(seed)
+    (u,) = vecs(rng, d, 1)
+    got = quantizers.randk(u, rseed, prob=prob, block=block)
+    want = ref.q_randk(u, rseed, prob)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_randk_mask_is_seed_deterministic():
+    m1 = ref.randk_keep_mask(1000, 42, 0.1)
+    m2 = ref.randk_keep_mask(1000, 42, 0.1)
+    m3 = ref.randk_keep_mask(1000, 43, 0.1)
+    np.testing.assert_array_equal(m1, m2)
+    assert bool(jnp.any(m1 != m3))
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.integers(1, 700), beta=st.sampled_from([0.5, 0.9, 0.995]),
+       seed=st.integers(0, 2**31 - 1), block=st.sampled_from([64, 256]))
+def test_estk_update_matches_ref(d, beta, seed, block):
+    rng = np.random.default_rng(seed)
+    rh, p, s = vecs(rng, d, 3)
+    tau = jnp.asarray(rng.integers(0, 50, size=d), jnp.float32)
+    # sparse utilde: ~10% nonzero
+    ut = jnp.asarray(rng.normal(size=d) * (rng.random(d) < 0.1), jnp.float32)
+    got = estk.estk_update(ut, rh, p, s, tau, beta=beta, block=block)
+    want = ref.estk_update(ut, rh, p, s, tau, beta=beta)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(1, 500), seed=st.integers(0, 2**31 - 1),
+       block=st.sampled_from([64, 256]))
+def test_threshold_sparsify(d, seed, block):
+    rng = np.random.default_rng(seed)
+    (u,) = vecs(rng, d, 1)
+    thr = float(rng.uniform(0.0, 2.0))
+    got = quantizers.threshold_sparsify(u, thr, block=block)
+    want = jnp.where(jnp.abs(u) >= thr, u, 0.0)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# bias+GELU kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 20), f=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_bias_gelu_forward(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, f)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=f), jnp.float32)
+    got = bias_gelu(x, bias)
+    want = ref.gelu_ref(x, bias)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_bias_gelu_matches_jax_nn():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=32), jnp.float32)
+    want = jax.nn.gelu(x + b, approximate=True)
+    np.testing.assert_allclose(bias_gelu(x, b), want, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 12), f=st.integers(1, 48), seed=st.integers(0, 2**31 - 1))
+def test_bias_gelu_vjp_matches_autodiff_of_ref(b, f, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, f)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=f), jnp.float32)
+
+    def f_kernel(x, bias):
+        return jnp.sum(jnp.sin(bias_gelu(x, bias)))
+
+    def f_ref(x, bias):
+        return jnp.sum(jnp.sin(ref.gelu_ref(x, bias)))
+
+    gx, gb = jax.grad(f_kernel, argnums=(0, 1))(x, bias)
+    rx, rb = jax.grad(f_ref, argnums=(0, 1))(x, bias)
+    np.testing.assert_allclose(gx, rx, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(gb, rb, atol=1e-4, rtol=1e-4)
+
+
+def test_gelu_grad_ref_consistent_with_autodiff():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=16), jnp.float32)
+    dy = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    want = jax.vjp(lambda x: ref.gelu_ref(x, b), x)[1](dy)[0]
+    got = ref.gelu_grad_ref(x, b, dy)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer analytic invariants (paper §I-A: delta-compressor properties)
+# ---------------------------------------------------------------------------
+
+
+def test_topk_is_delta_compressor():
+    """Top-K satisfies ||x - Q(x)||^2 <= (1 - K/d) ||x||^2 (K/d-compressor)."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        d = int(rng.integers(10, 400))
+        k = int(rng.integers(1, d))
+        x = jnp.asarray(rng.normal(size=d), jnp.float32)
+        q = ref.q_topk(x, k)
+        lhs = float(jnp.sum((x - q) ** 2))
+        rhs = (1.0 - k / d) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-4
+
+
+def test_scaled_sign_is_delta_compressor():
+    """Scaled-sign satisfies the 1/d bound: ||x-Q(x)||^2 <= (1 - 1/d)||x||^2
+    ... in fact mean-|x| scaling gives ||x-Q||^2 = ||x||^2 - d*a^2."""
+    rng = np.random.default_rng(6)
+    for _ in range(20):
+        d = int(rng.integers(2, 400))
+        x = jnp.asarray(rng.normal(size=d), jnp.float32)
+        q = ref.q_scaled_sign(x)
+        lhs = float(jnp.sum((x - q) ** 2))
+        rhs = (1.0 - 1.0 / d) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-3
+
+
+def test_sign_quantizer_error_orthogonality():
+    """With a = mean|x|: ||x - a sign(x)||^2 = ||x||^2 - 2a*sum|x| + d a^2
+    = ||x||^2 - d a^2 (the projection identity)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=1000), jnp.float32)
+    a = float(jnp.mean(jnp.abs(x)))
+    q = ref.q_scaled_sign(x)
+    lhs = float(jnp.sum((x - q) ** 2))
+    want = float(jnp.sum(x ** 2)) - 1000 * a * a
+    assert abs(lhs - want) < 1e-2

@@ -1,0 +1,103 @@
+//! Coding-layer micro-benchmarks: bit I/O, Golomb index coding, payload
+//! encode/decode throughput at realistic (d, K).
+
+use tempo::coding::{decode_payload, encode_payload, golomb, BitReader, BitWriter, PayloadKind};
+use tempo::testing::bench::{black_box, Bencher};
+use tempo::util::Pcg64;
+
+fn sparse_vec(d: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seeded(seed);
+    let mut v = vec![0.0f32; d];
+    let mut placed = 0;
+    while placed < k {
+        let i = rng.below(d as u64) as usize;
+        if v[i] == 0.0 {
+            v[i] = rng.gaussian() as f32;
+            placed += 1;
+        }
+    }
+    v
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== coding micro-benchmarks ==");
+
+    // raw bit IO
+    let values: Vec<(u64, u32)> = {
+        let mut rng = Pcg64::seeded(1);
+        (0..4096).map(|_| (rng.next_u64() & 0xFFFF, 16u32)).collect()
+    };
+    b.bench("bitwriter/16bit-fields x4096", Some(4096), || {
+        let mut w = BitWriter::with_capacity(4096 * 2);
+        for &(v, n) in &values {
+            w.put_bits(v, n);
+        }
+        black_box(w.finish());
+    });
+    let bytes = {
+        let mut w = BitWriter::new();
+        for &(v, n) in &values {
+            w.put_bits(v, n);
+        }
+        w.finish()
+    };
+    b.bench("bitreader/16bit-fields x4096", Some(4096), || {
+        let mut r = BitReader::new(&bytes);
+        for _ in 0..4096 {
+            black_box(r.get_bits(16).unwrap());
+        }
+    });
+
+    // Golomb index coding at paper-like densities
+    for &(d, k) in &[(100_000usize, 1500usize), (1_000_000, 1200)] {
+        let indices: Vec<u32> = {
+            let mut rng = Pcg64::seeded(2);
+            let mut set: Vec<u32> = (0..d as u32).collect();
+            rng.shuffle(&mut set);
+            let mut idx = set[..k].to_vec();
+            idx.sort_unstable();
+            idx
+        };
+        b.bench(&format!("golomb/encode d={d} k={k}"), Some(k as u64), || {
+            let mut w = BitWriter::with_capacity(k * 4);
+            golomb::encode_indices(&mut w, &indices, d);
+            black_box(w.finish());
+        });
+        let enc = {
+            let mut w = BitWriter::new();
+            golomb::encode_indices(&mut w, &indices, d);
+            w.finish()
+        };
+        b.bench(&format!("golomb/decode d={d} k={k}"), Some(k as u64), || {
+            let mut r = BitReader::new(&enc);
+            black_box(golomb::decode_indices(&mut r, k).unwrap());
+        });
+    }
+
+    // full payload paths (the per-round wire cost at mlp_tiny scale)
+    let d = 98_666;
+    let k = 197;
+    let utilde = sparse_vec(d, k, 3);
+    b.bench("payload/topk encode d=98666 k=197", Some(d as u64), || {
+        black_box(encode_payload(PayloadKind::SparseValues, &utilde, 0));
+    });
+    let p = encode_payload(PayloadKind::SparseValues, &utilde, 0);
+    let mut out = Vec::new();
+    b.bench("payload/topk decode d=98666 k=197", Some(d as u64), || {
+        decode_payload(PayloadKind::SparseValues, &p, d, 0, &mut out).unwrap();
+        black_box(&out);
+    });
+    let mut rng = Pcg64::seeded(4);
+    let mut dense = vec![0.0f32; d];
+    rng.fill_gaussian(&mut dense, 1.0);
+    let sign: Vec<f32> = dense.iter().map(|&v| if v >= 0.0 { 1.0 } else { -1.0 }).collect();
+    b.bench("payload/sign encode d=98666", Some(d as u64), || {
+        black_box(encode_payload(PayloadKind::Sign, &sign, 0));
+    });
+    let ps = encode_payload(PayloadKind::Sign, &sign, 0);
+    b.bench("payload/sign decode d=98666", Some(d as u64), || {
+        decode_payload(PayloadKind::Sign, &ps, d, 0, &mut out).unwrap();
+        black_box(&out);
+    });
+}

@@ -1,0 +1,63 @@
+//! End-to-end per-table/figure benchmarks: shortened versions of the Table
+//! I and Fig. 7 configurations, reporting rounds/s and per-phase worker
+//! time — the numbers behind EXPERIMENTS.md §Perf. Requires `make artifacts`.
+
+use tempo::config::{ExperimentConfig, SchemeSpec};
+use tempo::coordinator::run_training;
+
+fn cfg_for(scheme: SchemeSpec) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.workers = 2;
+    cfg.steps = 30;
+    cfg.eval_every = 30;
+    cfg.eval_batches = 1;
+    cfg.train_len = 1024;
+    cfg.noise = 6.0;
+    cfg.scheme = scheme;
+    cfg
+}
+
+fn spec(q: &str, p: &str, ef: bool, kf: Option<f64>) -> SchemeSpec {
+    SchemeSpec {
+        quantizer: q.into(),
+        predictor: p.into(),
+        ef,
+        beta: 0.99,
+        k_frac: kf,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== end-to-end round benchmarks (Table I / Fig. 7 configs, shortened) ==");
+    println!(
+        "{:<30} {:>9} {:>12} {:>11} {:>10} {:>10}",
+        "scheme", "rounds/s", "gradient ms", "compress ms", "encode ms", "bits/comp"
+    );
+    let rows: Vec<(&str, SchemeSpec)> = vec![
+        ("T1 baseline", spec("none", "zero", false, None)),
+        ("T1 topk w/oP", spec("topk", "zero", false, Some(0.35))),
+        ("T1 topk w/P", spec("topk", "plin", false, Some(0.015))),
+        ("T1 topkq w/P", spec("topkq", "plin", false, Some(0.01))),
+        ("T1 sign w/P", spec("sign", "plin", false, None)),
+        ("T1/F7 topk EF", spec("topk", "zero", true, Some(2.4e-3))),
+        ("T1/F7 topk EF estk", spec("topk", "estk", true, Some(1.3e-3))),
+    ];
+    for (label, s) in rows {
+        let cfg = cfg_for(s);
+        let t0 = std::time::Instant::now();
+        let report = run_training(&cfg)?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<30} {:>9.2} {:>12.3} {:>11.3} {:>10.3} {:>10.4}",
+            label,
+            cfg.steps as f64 / secs,
+            report.worker_phases.mean("gradient") * 1e3,
+            report.worker_phases.mean("compress") * 1e3,
+            report.worker_phases.mean("encode") * 1e3,
+            report.bits_per_component,
+        );
+    }
+    Ok(())
+}

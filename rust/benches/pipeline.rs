@@ -1,0 +1,48 @@
+//! Compression-pipeline benchmarks: the L3 hot path per scheme at model
+//! scale (d = 98,666 — mlp_tiny; d = 864,512 — lm_small).
+
+use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use tempo::tensor::select_topk_indices;
+use tempo::testing::bench::{black_box, Bencher};
+use tempo::util::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    println!("== compression pipeline benchmarks ==");
+
+    for &d in &[98_666usize, 864_512usize] {
+        let mut rng = Pcg64::seeded(1);
+        let mut g = vec![0.0f32; d];
+        rng.fill_gaussian(&mut g, 1.0);
+        let k = (d as f64 * 2e-3) as usize;
+
+        b.bench(&format!("topk/select d={d} k={k}"), Some(d as u64), || {
+            black_box(select_topk_indices(&g, k));
+        });
+
+        let schemes: Vec<(String, SchemeCfg)> = vec![
+            (format!("pipeline/baseline d={d}"), SchemeCfg::baseline(0.99)),
+            (
+                format!("pipeline/sign+plin d={d}"),
+                SchemeCfg::new(QuantizerKind::Sign, PredictorKind::PLin, false, 0.99).unwrap(),
+            ),
+            (
+                format!("pipeline/topk+ef d={d} k={k}"),
+                SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::Zero, true, 0.99).unwrap(),
+            ),
+            (
+                format!("pipeline/topk+estk+ef d={d} k={k}"),
+                SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::EstK, true, 0.99).unwrap(),
+            ),
+        ];
+        for (name, cfg) in schemes {
+            let mut pipe = WorkerPipeline::new(cfg, d);
+            let mut t = 0u64;
+            b.bench(&name, Some(d as u64), || {
+                let lr = if t == 0 { 0.0 } else { 1.0 };
+                black_box(pipe.step(&g, lr));
+                t += 1;
+            });
+        }
+    }
+}

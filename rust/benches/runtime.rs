@@ -1,0 +1,57 @@
+//! PJRT runtime benchmarks: model fwd/bwd execution and the HLO-backend
+//! compression step (interpret-mode Pallas on CPU — structural numbers,
+//! not TPU estimates; see DESIGN.md §8). Requires `make artifacts`.
+
+use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use tempo::data::{Dataset, SynthImages};
+use tempo::model::Manifest;
+use tempo::runtime::{CompressExec, ModelExec, Runtime};
+use tempo::testing::bench::{black_box, Bencher};
+use tempo::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let runtime = Runtime::new(manifest.clone())?;
+    let mut b = Bencher::new();
+    b.measure_secs = 2.0;
+    println!("== PJRT runtime benchmarks (CPU, 1 core) ==");
+
+    // model fwd/bwd — the dominant per-round cost
+    let model = ModelExec::load(&runtime, "mlp_tiny")?;
+    let d = model.entry.d;
+    let w = manifest.load_init(&model.entry)?;
+    let ds = SynthImages::new(model.entry.classes, 1024, 64, 0, 6.0);
+    let batch = ds.batch(&(0..model.entry.batch).collect::<Vec<_>>());
+    b.bench("pjrt/mlp_tiny fwdbwd (batch 32)", Some(d as u64), || {
+        black_box(model.fwdbwd(&w, &batch).unwrap());
+    });
+    b.bench("pjrt/mlp_tiny eval (batch 32)", Some(d as u64), || {
+        black_box(model.evaluate(&w, &batch).unwrap());
+    });
+
+    // HLO compression step vs pure-Rust pipeline at the test dimension
+    let entry = manifest
+        .compress
+        .iter()
+        .find(|c| c.d == 1024 && c.quantizer == "topk" && c.predictor == "estk" && c.ef)
+        .expect("test artifact missing — run `make artifacts`")
+        .clone();
+    let cfg = SchemeCfg::new(
+        QuantizerKind::TopK { k: entry.k },
+        PredictorKind::EstK,
+        true,
+        entry.beta as f32,
+    )?;
+    let exec = CompressExec::load(&runtime, entry)?;
+    let mut hlo_pipe = WorkerPipeline::new(cfg.clone(), 1024);
+    let mut rust_pipe = WorkerPipeline::new(cfg, 1024);
+    let mut g = vec![0.0f32; 1024];
+    Pcg64::seeded(2).fill_gaussian(&mut g, 1.0);
+    b.bench("compress-step/hlo-backend d=1024", Some(1024), || {
+        black_box(exec.step(&mut hlo_pipe, &g, 1.0).unwrap());
+    });
+    b.bench("compress-step/rust-backend d=1024", Some(1024), || {
+        black_box(rust_pipe.step(&g, 1.0));
+    });
+    Ok(())
+}

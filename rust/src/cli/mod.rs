@@ -1,0 +1,157 @@
+//! Command-line interface (in-repo arg parser; offline build has no clap).
+//!
+//! Grammar: `tempo <subcommand> [--flag value]... [--switch]...`
+//! Unknown flags are errors; `--key=value` and `--key value` both work.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]). If the
+    /// first argument is a `--flag` there is no subcommand (example binaries
+    /// take flags only).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = match it.peek() {
+            Some(first) if first.starts_with("--") => String::new(),
+            _ => it.next().unwrap_or_else(|| "help".to_string()),
+        };
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// key=value overrides after the known flags (e.g. `--set scheme.beta=0.9`).
+    pub fn overrides(&self) -> Vec<(String, String)> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k.starts_with("set."))
+            .map(|(k, v)| (k["set.".len()..].to_string(), v.clone()))
+            .collect()
+    }
+}
+
+pub const USAGE: &str = "\
+tempo — temporal-correlation gradient compression for momentum-SGD
+(Adikari & Draper, IEEE JSAIT 2021 — three-layer rust/JAX/Pallas reproduction)
+
+USAGE:
+  tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo] [--csv out.csv]
+  tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
+        table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
+        ablation-beta | ablation-block | ablation-master | all
+  tempo inspect                                list artifacts from the manifest
+  tempo master-serve --listen <addr:port> --workers N --config <file.toml>
+  tempo worker-connect --connect <addr:port> --worker-id I --config <file.toml>
+  tempo help
+
+Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
+Run `make artifacts` first to lower the JAX/Pallas graphs.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config x.toml --steps 100 --smoke");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("config"), Some("x.toml"));
+        assert_eq!(a.u64_flag("steps", 0).unwrap(), 100);
+        assert!(a.has_switch("smoke"));
+        assert!(!a.has_switch("other"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let a = parse("exp fig6 --out=results --beta 0.99");
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional(), &["fig6".to_string()]);
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!((a.f64_flag("beta", 0.0).unwrap() - 0.99).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --steps abc");
+        assert!(a.u64_flag("steps", 0).is_err());
+    }
+
+    #[test]
+    fn empty_defaults_to_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "help");
+    }
+}

@@ -1,0 +1,249 @@
+//! LSB-first bit I/O over `Vec<u8>` buffers.
+//!
+//! The hot loops (Golomb encode of ~10^4 gaps per round per worker) are
+//! branch-light: bits accumulate in a u64 and spill whole bytes at once.
+
+use anyhow::{bail, Result};
+
+/// Writes bit fields LSB-first into a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n <= 57 per call to keep the
+    /// accumulator spill simple; larger fields go through `put_u64`).
+    #[inline]
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57, "put_bits supports up to 57 bits per call");
+        debug_assert!(n == 64 || v < (1u64 << n), "value {v} wider than {n} bits");
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, b: bool) {
+        self.put_bits(b as u64, 1);
+    }
+
+    /// `n` zero bits followed by a one — unary code for Golomb quotients.
+    #[inline]
+    pub fn put_unary(&mut self, n: u64) {
+        let mut left = n;
+        while left >= 32 {
+            self.put_bits(0, 32);
+            left -= 32;
+        }
+        self.put_bits(1u64 << left, left as u32 + 1);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.put_bits(v as u64, 32);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.put_bits(v & 0xFFFF_FFFF, 32);
+        self.put_bits(v >> 32, 32);
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    /// Total bits written so far (before final padding).
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Flush: pad the final partial byte with zeros and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+        self.buf
+    }
+}
+
+/// Reads bit fields LSB-first from a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte_pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, byte_pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.byte_pos < self.buf.len() {
+            self.acc |= (self.buf[self.byte_pos] as u64) << self.nbits;
+            self.byte_pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n <= 57).
+    #[inline]
+    pub fn get_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 57);
+        self.refill();
+        if self.nbits < n {
+            bail!("bitstream underrun: wanted {n} bits, have {}", self.nbits);
+        }
+        let out = if n == 0 { 0 } else { self.acc & ((1u64 << n) - 1) };
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(out)
+    }
+
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool> {
+        Ok(self.get_bits(1)? == 1)
+    }
+
+    /// Count zeros until the terminating one bit.
+    #[inline]
+    pub fn get_unary(&mut self) -> Result<u64> {
+        let mut n = 0u64;
+        loop {
+            self.refill();
+            if self.nbits == 0 {
+                bail!("bitstream underrun in unary code");
+            }
+            if self.acc == 0 {
+                // all remaining buffered bits are zeros
+                n += self.nbits as u64;
+                self.nbits = 0;
+                continue;
+            }
+            let tz = self.acc.trailing_zeros().min(self.nbits);
+            if tz < self.nbits {
+                n += tz as u64;
+                self.acc >>= tz + 1;
+                self.nbits -= tz + 1;
+                return Ok(n);
+            }
+            n += tz as u64;
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(self.get_bits(32)? as u32)
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let lo = self.get_bits(32)?;
+        let hi = self.get_bits(32)?;
+        Ok(lo | (hi << 32))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> u64 {
+        self.byte_pos as u64 * 8 - self.nbits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_fixed_fields() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        w.put_u32(0xDEADBEEF);
+        w.put_bit(true);
+        w.put_f32(-1.5);
+        w.put_u64(0x0123_4567_89AB_CDEF);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(3).unwrap(), 0b101);
+        assert_eq!(r.get_u32().unwrap(), 0xDEADBEEF);
+        assert!(r.get_bit().unwrap());
+        assert_eq!(r.get_f32().unwrap(), -1.5);
+        assert_eq!(r.get_u64().unwrap(), 0x0123_4567_89AB_CDEF);
+    }
+
+    #[test]
+    fn roundtrip_unary() {
+        for n in [0u64, 1, 7, 8, 31, 32, 33, 100, 1000] {
+            let mut w = BitWriter::new();
+            w.put_unary(n);
+            w.put_bits(0b11, 2); // trailing sentinel
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(r.get_unary().unwrap(), n);
+            assert_eq!(r.get_bits(2).unwrap(), 0b11);
+        }
+    }
+
+    #[test]
+    fn random_field_fuzz() {
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..50 {
+            let mut fields: Vec<(u64, u32)> = Vec::new();
+            let mut w = BitWriter::new();
+            for _ in 0..200 {
+                let n = 1 + rng.below(57) as u32;
+                let v = if n == 57 { rng.next_u64() >> 7 } else { rng.next_u64() & ((1 << n) - 1) };
+                w.put_bits(v, n);
+                fields.push((v, n));
+            }
+            let bit_len = w.bit_len();
+            let bytes = w.finish();
+            assert!(bytes.len() as u64 * 8 >= bit_len);
+            let mut r = BitReader::new(&bytes);
+            for (v, n) in fields {
+                assert_eq!(r.get_bits(n).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let bytes = vec![0xFF];
+        let mut r = BitReader::new(&bytes);
+        assert!(r.get_bits(8).is_ok());
+        assert!(r.get_bits(1).is_err());
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.put_bits(0, 10);
+        assert_eq!(w.bit_len(), 11);
+    }
+}

@@ -1,0 +1,165 @@
+//! Golomb–Rice coding of index gaps.
+//!
+//! The gaps between consecutive kept indices of a Top-K update are
+//! approximately geometric with mean d/K; Golomb codes are optimal for
+//! geometric sources and get within a fraction of a bit of the entropy
+//! `H_b(K/d)` per component that the paper assumes (Sec. III-B, refs
+//! [12], [27]). We use the Rice restriction (M = 2^b) for branch-light
+//! encode/decode, with b chosen from the mean gap.
+
+use anyhow::Result;
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Rice parameter for geometric gaps with success probability p = K/d:
+/// b ≈ log2(mean gap) keeps the expected quotient near 1.
+pub fn rice_param_for_density(k: usize, d: usize) -> u32 {
+    if k == 0 || d == 0 || k >= d {
+        return 0;
+    }
+    let mean_gap = d as f64 / k as f64;
+    let b = mean_gap.log2().floor();
+    b.max(0.0).min(30.0) as u32
+}
+
+/// Encode one non-negative value with Rice parameter b: quotient in unary,
+/// remainder in b fixed bits.
+#[inline]
+pub fn rice_encode(w: &mut BitWriter, v: u64, b: u32) {
+    let q = v >> b;
+    w.put_unary(q);
+    if b > 0 {
+        w.put_bits(v & ((1u64 << b) - 1), b);
+    }
+}
+
+#[inline]
+pub fn rice_decode(r: &mut BitReader, b: u32) -> Result<u64> {
+    let q = r.get_unary()?;
+    let rem = if b > 0 { r.get_bits(b)? } else { 0 };
+    Ok((q << b) | rem)
+}
+
+/// Bits rice(v; b) takes — for the rate accountant.
+pub fn rice_bits(v: u64, b: u32) -> u64 {
+    (v >> b) + 1 + b as u64
+}
+
+/// Encode a strictly-increasing u32 index sequence as first-index + gaps-1.
+/// Returns the Rice parameter used (also written to the stream as 5 bits).
+pub fn encode_indices(w: &mut BitWriter, indices: &[u32], d: usize) -> u32 {
+    let b = rice_param_for_density(indices.len(), d.max(1));
+    w.put_bits(b as u64, 5);
+    let mut prev: i64 = -1;
+    for &i in indices {
+        let gap = (i as i64 - prev - 1) as u64;
+        rice_encode(w, gap, b);
+        prev = i as i64;
+    }
+    b
+}
+
+/// Decode `count` indices written by [`encode_indices`].
+pub fn decode_indices(r: &mut BitReader, count: usize) -> Result<Vec<u32>> {
+    let b = r.get_bits(5)? as u32;
+    let mut out = Vec::with_capacity(count);
+    let mut prev: i64 = -1;
+    for _ in 0..count {
+        let gap = rice_decode(r, b)? as i64;
+        let idx = prev + 1 + gap;
+        anyhow::ensure!(idx <= u32::MAX as i64, "index overflow");
+        out.push(idx as u32);
+        prev = idx;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{binary_entropy, Pcg64};
+
+    #[test]
+    fn rice_roundtrip_all_params() {
+        for b in 0..12u32 {
+            let mut w = BitWriter::new();
+            let vals = [0u64, 1, 2, 7, 8, 100, 12345];
+            for &v in &vals {
+                rice_encode(&mut w, v, b);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &v in &vals {
+                assert_eq!(rice_decode(&mut r, b).unwrap(), v, "b={b} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rice_bits_formula() {
+        let mut w = BitWriter::new();
+        rice_encode(&mut w, 37, 3);
+        assert_eq!(w.bit_len(), rice_bits(37, 3));
+    }
+
+    #[test]
+    fn indices_roundtrip() {
+        let idx = vec![0u32, 3, 4, 100, 101, 5000];
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, &idx, 10_000);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(decode_indices(&mut r, idx.len()).unwrap(), idx);
+    }
+
+    #[test]
+    fn indices_empty_and_dense() {
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, &[], 100);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert!(decode_indices(&mut r, 0).unwrap().is_empty());
+
+        let all: Vec<u32> = (0..50).collect();
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, &all, 50);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(decode_indices(&mut r, 50).unwrap(), all);
+    }
+
+    #[test]
+    fn rate_close_to_entropy_for_random_sparsity() {
+        // Draw Bernoulli(p) index sets and check the realized rate is within
+        // ~15% of d*H_b(p) + small overhead — the paper's rate model.
+        let mut rng = Pcg64::seeded(11);
+        for &p in &[0.001f64, 0.01, 0.05, 0.2] {
+            let d = 200_000;
+            let mut idx = Vec::new();
+            for i in 0..d {
+                if rng.uniform() < p {
+                    idx.push(i as u32);
+                }
+            }
+            if idx.is_empty() {
+                continue;
+            }
+            let mut w = BitWriter::new();
+            encode_indices(&mut w, &idx, d);
+            let bits = w.bit_len() as f64;
+            let entropy = d as f64 * binary_entropy(p);
+            assert!(
+                bits < entropy * 1.15 + 64.0,
+                "p={p}: rate {bits:.0} vs entropy {entropy:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn param_choice_sane() {
+        assert_eq!(rice_param_for_density(0, 100), 0);
+        assert_eq!(rice_param_for_density(100, 100), 0);
+        let b = rice_param_for_density(10, 10_240); // mean gap 1024
+        assert_eq!(b, 10);
+    }
+}

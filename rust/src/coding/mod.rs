@@ -1,0 +1,20 @@
+//! Bit-level entropy coding and the wire payload formats.
+//!
+//! The paper's rate accounting (Sec. III-B) assumes the non-zero locations
+//! of sparse updates are losslessly compressed close to their entropy
+//! `d·H_b(K/d)` using e.g. Golomb coding [Strom'15, Sattler'19]. This module
+//! implements that coding stack for real:
+//!
+//! * [`bitio`] — LSB-first bit writer/reader over byte buffers.
+//! * [`golomb`] — Golomb–Rice codes for index gaps (geometric distribution).
+//! * [`elias`] — Elias-γ/δ for lengths and small headers.
+//! * [`payload`] — the per-quantizer message formats (Top-K, Top-K-Q,
+//!   Scaled-sign, Rand-K, dense) used on the wire between worker and master.
+
+pub mod bitio;
+pub mod elias;
+pub mod golomb;
+pub mod payload;
+
+pub use bitio::{BitReader, BitWriter};
+pub use payload::{decode_payload, encode_payload, Payload, PayloadKind};

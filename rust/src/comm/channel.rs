@@ -1,0 +1,112 @@
+//! In-process channel transport (std::sync::mpsc).
+//!
+//! One mpsc pair per direction per worker. This is the default fabric for
+//! single-host multi-worker runs — the same topology as the paper's
+//! 4-workers-on-one-machine Horovod setup, with the master simulated
+//! explicitly (the paper likewise "simulates a master-worker environment").
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{Context, Result};
+
+use super::frame::{Frame, FrameKind};
+use super::{MasterTransport, WorkerTransport};
+
+/// Worker endpoint.
+pub struct ChannelWorker {
+    pub worker_id: u32,
+    up: Sender<Frame>,
+    down: Receiver<Frame>,
+}
+
+/// Master endpoint over n workers.
+pub struct ChannelMaster {
+    ups: Vec<Receiver<Frame>>,
+    downs: Vec<Sender<Frame>>,
+}
+
+/// Build a fabric for n workers. Returns (master, workers).
+pub fn channel_fabric(n: usize) -> (ChannelMaster, Vec<ChannelWorker>) {
+    let mut ups = Vec::with_capacity(n);
+    let mut downs = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    for w in 0..n {
+        let (up_tx, up_rx) = channel();
+        let (down_tx, down_rx) = channel();
+        ups.push(up_rx);
+        downs.push(down_tx);
+        workers.push(ChannelWorker { worker_id: w as u32, up: up_tx, down: down_rx });
+    }
+    (ChannelMaster { ups, downs }, workers)
+}
+
+impl WorkerTransport for ChannelWorker {
+    fn send_update(&mut self, frame: Frame) -> Result<()> {
+        self.up.send(frame).context("master hung up")
+    }
+
+    fn recv_broadcast(&mut self) -> Result<Frame> {
+        self.down.recv().context("master hung up")
+    }
+}
+
+impl MasterTransport for ChannelMaster {
+    fn n_workers(&self) -> usize {
+        self.ups.len()
+    }
+
+    fn recv_updates(&mut self) -> Result<Vec<Frame>> {
+        // synchronous rounds: block on each worker in id order (they all
+        // compute in parallel; arrival order does not matter)
+        let mut out = Vec::with_capacity(self.ups.len());
+        for (w, rx) in self.ups.iter().enumerate() {
+            let f = rx.recv().with_context(|| format!("worker {w} hung up"))?;
+            anyhow::ensure!(
+                f.kind == FrameKind::Update || f.kind == FrameKind::Shutdown,
+                "unexpected frame kind from worker {w}"
+            );
+            out.push(f);
+        }
+        Ok(out)
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        for (w, tx) in self.downs.iter().enumerate() {
+            tx.send(frame.clone()).with_context(|| format!("worker {w} hung up"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::Payload;
+
+    #[test]
+    fn fabric_roundtrip() {
+        let (mut master, workers) = channel_fabric(3);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|mut w| {
+                std::thread::spawn(move || {
+                    let p = Payload { kind_tag: 1, bytes: vec![w.worker_id as u8], bits: 8 };
+                    w.send_update(Frame::update(w.worker_id, 0, p, 0.5)).unwrap();
+                    let b = w.recv_broadcast().unwrap();
+                    assert_eq!(b.kind, FrameKind::Broadcast);
+                    b.broadcast_f32(2).unwrap()
+                })
+            })
+            .collect();
+        let updates = master.recv_updates().unwrap();
+        assert_eq!(updates.len(), 3);
+        for (i, u) in updates.iter().enumerate() {
+            assert_eq!(u.worker, i as u32);
+            assert_eq!(u.bytes, vec![i as u8]);
+        }
+        master.broadcast(&Frame::broadcast(0, &[1.0, 2.0])).unwrap();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![1.0, 2.0]);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Wire frames: header + payload bytes, with (de)serialization for TCP.
+
+use anyhow::{bail, Result};
+
+/// Frame type tags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// worker → master: encoded ũ_t payload
+    Update = 1,
+    /// master → workers: averaged r̃_t (dense f32) — the broadcast the paper
+    /// leaves uncompressed (Sec. II-B: master→worker is not the bottleneck)
+    Broadcast = 2,
+    /// orderly shutdown
+    Shutdown = 3,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => FrameKind::Update,
+            2 => FrameKind::Broadcast,
+            3 => FrameKind::Shutdown,
+            _ => bail!("unknown frame kind {v}"),
+        })
+    }
+}
+
+/// One message on the fabric.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub worker: u32,
+    pub round: u64,
+    /// payload body (entropy-coded update or raw f32 broadcast)
+    pub payload_tag: u8,
+    pub bytes: Vec<u8>,
+    /// exact payload size in bits (pre-padding) for rate accounting
+    pub payload_bits: u64,
+    /// worker-side training loss this round (monitoring only, f32 header)
+    pub loss: f32,
+}
+
+impl Frame {
+    pub fn update(worker: u32, round: u64, payload: crate::coding::Payload, loss: f32) -> Self {
+        Self {
+            kind: FrameKind::Update,
+            worker,
+            round,
+            payload_tag: payload.kind_tag,
+            payload_bits: payload.bits,
+            bytes: payload.bytes,
+            loss,
+        }
+    }
+
+    pub fn broadcast(round: u64, dense: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(dense.len() * 4);
+        for v in dense {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        Self {
+            kind: FrameKind::Broadcast,
+            worker: u32::MAX,
+            round,
+            payload_tag: 0,
+            payload_bits: bytes.len() as u64 * 8,
+            bytes,
+            loss: 0.0,
+        }
+    }
+
+    pub fn shutdown() -> Self {
+        Self {
+            kind: FrameKind::Shutdown,
+            worker: u32::MAX,
+            round: 0,
+            payload_tag: 0,
+            bytes: Vec::new(),
+            payload_bits: 0,
+            loss: 0.0,
+        }
+    }
+
+    pub fn as_payload(&self) -> crate::coding::Payload {
+        crate::coding::Payload {
+            kind_tag: self.payload_tag,
+            bytes: self.bytes.clone(),
+            bits: self.payload_bits,
+        }
+    }
+
+    /// Decode a broadcast frame body into f32s.
+    pub fn broadcast_f32(&self, d: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.kind == FrameKind::Broadcast, "not a broadcast frame");
+        anyhow::ensure!(self.bytes.len() == d * 4, "broadcast size mismatch");
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Total bytes on the wire (header + body) — what TCP actually moves.
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_LEN + self.bytes.len()
+    }
+
+    // --- binary framing for the TCP transport ---
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.push(self.kind as u8);
+        out.push(self.payload_tag);
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.payload_bits.to_le_bytes());
+        out.extend_from_slice(&self.loss.to_le_bytes());
+        out.extend_from_slice(&(self.bytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.bytes);
+        out
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<Self> {
+        if buf.len() < HEADER_LEN {
+            bail!("frame too short: {} bytes", buf.len());
+        }
+        let kind = FrameKind::from_u8(buf[0])?;
+        let payload_tag = buf[1];
+        let worker = u32::from_le_bytes(buf[2..6].try_into().unwrap());
+        let round = u64::from_le_bytes(buf[6..14].try_into().unwrap());
+        let payload_bits = u64::from_le_bytes(buf[14..22].try_into().unwrap());
+        let loss = f32::from_le_bytes(buf[22..26].try_into().unwrap());
+        let body_len = u64::from_le_bytes(buf[26..34].try_into().unwrap()) as usize;
+        if buf.len() != HEADER_LEN + body_len {
+            bail!("frame body length mismatch: {} vs {}", buf.len() - HEADER_LEN, body_len);
+        }
+        Ok(Self {
+            kind,
+            worker,
+            round,
+            payload_tag,
+            payload_bits,
+            bytes: buf[HEADER_LEN..].to_vec(),
+            loss,
+        })
+    }
+}
+
+pub const HEADER_LEN: usize = 1 + 1 + 4 + 8 + 8 + 4 + 8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialize_roundtrip() {
+        let f = Frame {
+            kind: FrameKind::Update,
+            worker: 3,
+            round: 99,
+            payload_tag: 1,
+            bytes: vec![1, 2, 3, 4, 5],
+            payload_bits: 37,
+            loss: 1.25,
+        };
+        let buf = f.serialize();
+        assert_eq!(buf.len(), f.wire_bytes());
+        let g = Frame::deserialize(&buf).unwrap();
+        assert_eq!(g.kind, FrameKind::Update);
+        assert_eq!(g.worker, 3);
+        assert_eq!(g.round, 99);
+        assert_eq!(g.payload_bits, 37);
+        assert_eq!(g.loss, 1.25);
+        assert_eq!(g.bytes, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn broadcast_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let f = Frame::broadcast(7, &v);
+        assert_eq!(f.broadcast_f32(3).unwrap(), v);
+        assert!(f.broadcast_f32(4).is_err());
+    }
+
+    #[test]
+    fn bad_frames_rejected() {
+        assert!(Frame::deserialize(&[]).is_err());
+        let mut buf = Frame::shutdown().serialize();
+        buf[0] = 77;
+        assert!(Frame::deserialize(&buf).is_err());
+        let mut buf2 = Frame::shutdown().serialize();
+        buf2.push(0); // length mismatch
+        assert!(Frame::deserialize(&buf2).is_err());
+    }
+}

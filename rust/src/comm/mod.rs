@@ -1,0 +1,35 @@
+//! Communication fabric: message types, transports, byte accounting.
+//!
+//! The paper's testbed used Horovod/MPI on a single host; what its
+//! evaluation actually measures is *payload size* (bits per component).
+//! Our fabric therefore provides:
+//!
+//! * [`channel`] — in-process transport (std mpsc) for single-host
+//!   multi-worker runs (the default, like the paper's 4-GPU host);
+//! * [`tcp`] — length-prefixed TCP frames for real multi-process runs
+//!   (`tempo master-serve` / `tempo worker-connect`);
+//! * exact per-message byte accounting feeding [`crate::metrics::CommStats`].
+
+pub mod channel;
+pub mod frame;
+pub mod tcp;
+
+pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
+pub use frame::{Frame, FrameKind};
+
+use anyhow::Result;
+
+/// Worker-side endpoint: send updates up, receive broadcasts down.
+pub trait WorkerTransport: Send {
+    fn send_update(&mut self, frame: Frame) -> Result<()>;
+    fn recv_broadcast(&mut self) -> Result<Frame>;
+}
+
+/// Master-side endpoint over all workers.
+pub trait MasterTransport: Send {
+    fn n_workers(&self) -> usize;
+    /// Receive one update from each worker (any arrival order); returns
+    /// frames indexed by worker id.
+    fn recv_updates(&mut self) -> Result<Vec<Frame>>;
+    fn broadcast(&mut self, frame: &Frame) -> Result<()>;
+}

@@ -1,0 +1,158 @@
+//! TCP transport: length-prefixed frames over std::net sockets.
+//!
+//! Enables real multi-process deployment: `tempo master-serve --listen
+//! 0.0.0.0:7700 --workers 4` accepts one connection per worker;
+//! `tempo worker-connect --connect host:7700 --worker-id i` dials in.
+//! Frame layout: u64 LE total length, then `Frame::serialize` bytes.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+use anyhow::{Context, Result};
+
+use super::frame::Frame;
+use super::{MasterTransport, WorkerTransport};
+
+fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
+    let body = frame.serialize();
+    stream.write_all(&(body.len() as u64).to_le_bytes())?;
+    stream.write_all(&body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
+    let mut len_buf = [0u8; 8];
+    stream.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u64::from_le_bytes(len_buf) as usize;
+    anyhow::ensure!(len <= 1 << 31, "frame too large: {len}");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("read frame body")?;
+    Frame::deserialize(&body)
+}
+
+/// Worker endpoint over one TCP connection to the master.
+pub struct TcpWorker {
+    pub worker_id: u32,
+    stream: TcpStream,
+}
+
+impl TcpWorker {
+    /// Dial the master and announce our worker id with a handshake frame.
+    pub fn connect(addr: impl ToSocketAddrs, worker_id: u32) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr).context("connect to master")?;
+        stream.set_nodelay(true).ok();
+        // handshake: a zero-round Update frame carrying just the id
+        let hello = Frame {
+            kind: super::frame::FrameKind::Update,
+            worker: worker_id,
+            round: u64::MAX,
+            payload_tag: 0,
+            bytes: Vec::new(),
+            payload_bits: 0,
+            loss: 0.0,
+        };
+        write_frame(&mut stream, &hello)?;
+        Ok(Self { worker_id, stream })
+    }
+}
+
+impl WorkerTransport for TcpWorker {
+    fn send_update(&mut self, frame: Frame) -> Result<()> {
+        write_frame(&mut self.stream, &frame)
+    }
+
+    fn recv_broadcast(&mut self) -> Result<Frame> {
+        read_frame(&mut self.stream)
+    }
+}
+
+/// Master endpoint: one accepted connection per worker, indexed by the
+/// worker id sent in the handshake.
+pub struct TcpMaster {
+    streams: Vec<TcpStream>,
+}
+
+impl TcpMaster {
+    pub fn listen(addr: impl ToSocketAddrs, n_workers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("bind master socket")?;
+        Self::from_listener(listener, n_workers)
+    }
+
+    /// Accept workers on an already-bound listener (lets callers bind port 0
+    /// and learn the address before workers dial in).
+    pub fn from_listener(listener: TcpListener, n_workers: usize) -> Result<Self> {
+        let mut streams: Vec<Option<TcpStream>> = (0..n_workers).map(|_| None).collect();
+        let mut connected = 0;
+        while connected < n_workers {
+            let (mut stream, peer) = listener.accept().context("accept worker")?;
+            stream.set_nodelay(true).ok();
+            let hello = read_frame(&mut stream)?;
+            let id = hello.worker as usize;
+            anyhow::ensure!(id < n_workers, "worker id {id} out of range (peer {peer})");
+            anyhow::ensure!(streams[id].is_none(), "duplicate worker id {id}");
+            streams[id] = Some(stream);
+            connected += 1;
+        }
+        Ok(Self { streams: streams.into_iter().map(Option::unwrap).collect() })
+    }
+}
+
+impl MasterTransport for TcpMaster {
+    fn n_workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn recv_updates(&mut self) -> Result<Vec<Frame>> {
+        let mut out = Vec::with_capacity(self.streams.len());
+        for (w, s) in self.streams.iter_mut().enumerate() {
+            out.push(read_frame(s).with_context(|| format!("recv from worker {w}"))?);
+        }
+        Ok(out)
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        for (w, s) in self.streams.iter_mut().enumerate() {
+            write_frame(s, frame).with_context(|| format!("broadcast to worker {w}"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::Payload;
+    use crate::comm::frame::FrameKind;
+
+    #[test]
+    fn tcp_fabric_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let master_thread = std::thread::spawn(move || {
+            let mut master = TcpMaster::from_listener(listener, 2).unwrap();
+            let ups = master.recv_updates().unwrap();
+            assert_eq!(ups.len(), 2);
+            assert_eq!(ups[0].worker, 0);
+            assert_eq!(ups[1].worker, 1);
+            master.broadcast(&Frame::broadcast(5, &[9.0, 8.0])).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let workers: Vec<_> = (0..2u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(addr, id).unwrap();
+                    let p = Payload { kind_tag: 1, bytes: vec![id as u8; 3], bits: 24 };
+                    w.send_update(Frame::update(id, 1, p, 0.0)).unwrap();
+                    let b = w.recv_broadcast().unwrap();
+                    assert_eq!(b.kind, FrameKind::Broadcast);
+                    assert_eq!(b.broadcast_f32(2).unwrap(), vec![9.0, 8.0]);
+                })
+            })
+            .collect();
+        master_thread.join().unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! The paper's compression algorithms (pure-Rust reference backend).
+//!
+//! * [`SchemeCfg`] — a point in the design space: quantizer × predictor ×
+//!   error-feedback × β (paper Fig. 2 with the EF switch and blue blocks).
+//! * [`quantizer`] — Q: Top-K, Top-K-Q, Scaled-sign, Rand-K, identity.
+//! * [`predictor`] — P: Zero, P_Lin (Eq. 4), Est-K (Alg. 1).
+//! * [`pipeline`] — the full worker box (Eq. (1)) and the master-side
+//!   decode-and-predict chain, kept in bit-exact sync.
+//!
+//! The same step is also available as an AOT-compiled HLO artifact built
+//! from the Pallas kernels (see `runtime::CompressExec`); integration tests
+//! assert the two backends agree elementwise.
+
+pub mod pipeline;
+pub mod predictor;
+pub mod quantizer;
+pub mod randk;
+
+pub use pipeline::{MasterChain, StepStats, WorkerPipeline};
+pub use predictor::Predictor;
+pub use quantizer::QuantizerKind;
+
+use crate::coding::PayloadKind;
+
+/// Which predictor P to run (paper Sec. III-A, IV-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// No prediction (removes the blue blocks in Fig. 2).
+    Zero,
+    /// P_Lin(r̃) = β·r̃ — the DPCM first-order predictor (Eq. 4).
+    PLin,
+    /// Est-K — momentum estimate/extrapolate between Top-K peaks (Alg. 1).
+    EstK,
+}
+
+impl PredictorKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PredictorKind::Zero => "zero",
+            PredictorKind::PLin => "plin",
+            PredictorKind::EstK => "estk",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "zero" | "none" => PredictorKind::Zero,
+            "plin" | "lin" => PredictorKind::PLin,
+            "estk" => PredictorKind::EstK,
+            _ => anyhow::bail!("unknown predictor {s:?} (zero|plin|estk)"),
+        })
+    }
+}
+
+/// Full scheme configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchemeCfg {
+    pub quantizer: QuantizerKind,
+    pub predictor: PredictorKind,
+    /// Error-feedback switch (paper Eq. (1b)).
+    pub ef: bool,
+    /// Momentum / LPF bandwidth parameter β ∈ [0, 1).
+    pub beta: f32,
+}
+
+impl SchemeCfg {
+    pub fn new(quantizer: QuantizerKind, predictor: PredictorKind, ef: bool, beta: f32) -> anyhow::Result<Self> {
+        let cfg = Self { quantizer, predictor, ef, beta };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Uncompressed momentum-SGD baseline (Table I row 1).
+    pub fn baseline(beta: f32) -> Self {
+        Self { quantizer: QuantizerKind::None, predictor: PredictorKind::Zero, ef: false, beta }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.beta),
+            "beta must be in [0,1), got {}",
+            self.beta
+        );
+        if self.predictor == PredictorKind::EstK {
+            anyhow::ensure!(
+                matches!(self.quantizer, QuantizerKind::TopK { .. }),
+                "Est-K is defined only on top of the Top-K quantizer (paper Sec. IV-C)"
+            );
+        }
+        self.quantizer.validate()
+    }
+
+    /// Wire format for this scheme's messages.
+    pub fn payload_kind(&self) -> PayloadKind {
+        self.quantizer.payload_kind()
+    }
+
+    /// Human-readable tag, mirrors the python `Scheme.tag` naming.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}_{}_{}_b{}",
+            self.quantizer.tag(),
+            self.predictor.as_str(),
+            if self.ef { "ef" } else { "noef" },
+            fmt_beta(self.beta),
+        )
+    }
+}
+
+fn fmt_beta(beta: f32) -> String {
+    format!("{beta}").replace('.', "_")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_rules() {
+        assert!(SchemeCfg::new(QuantizerKind::None, PredictorKind::Zero, false, 0.9).is_ok());
+        // Est-K requires Top-K
+        assert!(SchemeCfg::new(QuantizerKind::Sign, PredictorKind::EstK, true, 0.9).is_err());
+        assert!(
+            SchemeCfg::new(QuantizerKind::TopK { k: 10 }, PredictorKind::EstK, true, 0.9).is_ok()
+        );
+        // beta range
+        assert!(SchemeCfg::new(QuantizerKind::None, PredictorKind::Zero, false, 1.0).is_err());
+        // k = 0 invalid
+        assert!(SchemeCfg::new(QuantizerKind::TopK { k: 0 }, PredictorKind::Zero, false, 0.9).is_err());
+    }
+
+    #[test]
+    fn tags_distinct() {
+        let a = SchemeCfg::new(QuantizerKind::TopK { k: 5 }, PredictorKind::Zero, true, 0.99).unwrap();
+        let b = SchemeCfg::new(QuantizerKind::TopK { k: 5 }, PredictorKind::EstK, true, 0.99).unwrap();
+        assert_ne!(a.tag(), b.tag());
+        assert!(a.tag().contains("ef"));
+    }
+
+    #[test]
+    fn predictor_parse_roundtrip() {
+        for p in [PredictorKind::Zero, PredictorKind::PLin, PredictorKind::EstK] {
+            assert_eq!(PredictorKind::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(PredictorKind::parse("bogus").is_err());
+    }
+}

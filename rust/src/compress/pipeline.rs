@@ -1,0 +1,398 @@
+//! The full Fig.-2 worker pipeline (paper Eq. (1)) and the master-side
+//! decode-and-predict chain — pure-Rust backend.
+//!
+//! Per iteration t at worker i:
+//! ```text
+//! v_t = β v_{t-1} + (1-β) g_t              (1a) momentum
+//! r_t = v_t + (η_{t-1}/η_t) e_{t-1}        (1b) error-feedback (if EF)
+//! u_t = r_t − r̂_t                          (1c) prediction error
+//! ũ_t = Q(u_t)                             (1d) quantizer
+//! e_t = u_t − ũ_t                          (1e) quantization error
+//! r̃_t = ũ_t + r̂_t                          (1f) reconstruction
+//! r̂_{t+1} = P(r̃_t)                         (1g) predictor
+//! ```
+//! Note e_t is tracked even when EF is off — it is the Fig. 5 / Fig. 8
+//! metric ‖e_t‖².
+
+use super::{Predictor, SchemeCfg};
+
+/// Per-step diagnostics (the quantities the paper plots).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// ‖e_t‖² — quantization error energy (Fig. 5).
+    pub e_norm_sq: f64,
+    /// (1/d)‖e_t‖² — the Fig. 8 right-panel metric.
+    pub e_mse: f64,
+    /// ‖u_t‖² — quantizer input energy (prediction shrinks this).
+    pub u_norm_sq: f64,
+    /// non-zeros in ũ_t (payload size driver).
+    pub nnz: usize,
+}
+
+/// Worker-side state + scratch for one model replica.
+#[derive(Clone, Debug)]
+pub struct WorkerPipeline {
+    pub cfg: SchemeCfg,
+    d: usize,
+    round: u64,
+    v: Vec<f32>,
+    e: Vec<f32>,
+    predictor: Predictor,
+    u: Vec<f32>,
+    utilde: Vec<f32>,
+}
+
+impl WorkerPipeline {
+    pub fn new(cfg: SchemeCfg, d: usize) -> Self {
+        let predictor = Predictor::new(cfg.predictor, cfg.beta, d);
+        Self {
+            cfg,
+            d,
+            round: 0,
+            v: vec![0.0; d],
+            e: vec![0.0; d],
+            predictor,
+            u: vec![0.0; d],
+            utilde: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Momentum vector v_t (read-only; Fig. 6 traces).
+    pub fn momentum(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Quantization error e_t.
+    pub fn error(&self) -> &[f32] {
+        &self.e
+    }
+
+    /// Quantizer input u_t of the last step.
+    pub fn quantizer_input(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// Quantized update ũ_t of the last step — what gets encoded.
+    pub fn utilde(&self) -> &[f32] {
+        &self.utilde
+    }
+
+    /// Current prediction r̂_t (before the next step consumes it).
+    pub fn rhat(&self) -> &[f32] {
+        self.predictor.rhat()
+    }
+
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+
+    /// Run one full Eq. (1) iteration. `lr_ratio` = η_{t-1}/η_t (0 at t=0).
+    pub fn step(&mut self, g: &[f32], lr_ratio: f32) -> StepStats {
+        assert_eq!(g.len(), self.d, "gradient dim mismatch");
+        let beta = self.cfg.beta;
+        let one_minus = 1.0 - beta;
+        let ef = self.cfg.ef;
+        let rhat = self.predictor.rhat();
+
+        // (1a)-(1c) fused: v, r, u in one pass (mirrors the Pallas kernel).
+        let mut u_norm_sq = 0.0f64;
+        for i in 0..self.d {
+            let v = beta * self.v[i] + one_minus * g[i];
+            self.v[i] = v;
+            let r = if ef { v + lr_ratio * self.e[i] } else { v };
+            let u = r - rhat[i];
+            self.u[i] = u;
+            u_norm_sq += (u as f64) * (u as f64);
+        }
+
+        // (1d)
+        self.cfg.quantizer.quantize(&self.u, &mut self.utilde, self.round);
+
+        // (1e) + stats
+        let mut e_norm_sq = 0.0f64;
+        let mut nnz = 0usize;
+        for i in 0..self.d {
+            let e = self.u[i] - self.utilde[i];
+            self.e[i] = e;
+            e_norm_sq += (e as f64) * (e as f64);
+            nnz += (self.utilde[i] != 0.0) as usize;
+        }
+
+        // (1f)+(1g): predictor consumes ũ_t (r̃ = ũ + r̂ internally).
+        self.predictor.update(&self.utilde);
+
+        self.round += 1;
+        StepStats {
+            e_norm_sq,
+            e_mse: e_norm_sq / self.d as f64,
+            u_norm_sq,
+            nnz,
+        }
+    }
+
+    /// HLO-backend bridge: replace all Eq.-(1) state with the outputs of the
+    /// AOT compress artifact for this step (see `runtime::CompressExec`).
+    pub fn overwrite_state_from_artifact(
+        &mut self,
+        utilde: &[f32],
+        v: &[f32],
+        e: &[f32],
+        rhat: &[f32],
+        p: Option<&[f32]>,
+        s: Option<&[f32]>,
+        tau: Option<&[f32]>,
+    ) {
+        self.utilde.copy_from_slice(utilde);
+        self.v.copy_from_slice(v);
+        self.e.copy_from_slice(e);
+        // reconstruct the quantizer input via Eq. (1e): u = ũ + e
+        for i in 0..self.d {
+            self.u[i] = utilde[i] + e[i];
+        }
+        self.predictor.load_state(rhat, p, s, tau);
+        self.round += 1;
+    }
+
+    /// State vectors handed to the HLO compress artifact
+    /// (g is supplied by the caller): (v, e, r̂, p, S, τ).
+    pub fn hlo_inputs(&self) -> (&[f32], &[f32], &[f32], Option<&[f32]>, Option<&[f32]>, Option<&[f32]>) {
+        let st = self.predictor.state_view();
+        (&self.v, &self.e, st.rhat, st.p, st.s, st.tau)
+    }
+}
+
+/// Master-side per-worker chain: decode ũ → r̃ = ũ + r̂ → advance P.
+#[derive(Clone, Debug)]
+pub struct MasterChain {
+    predictor: Predictor,
+    d: usize,
+}
+
+impl MasterChain {
+    pub fn new(cfg: &SchemeCfg, d: usize) -> Self {
+        Self { predictor: Predictor::new(cfg.predictor, cfg.beta, d), d }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Consume a decoded ũ_t; write r̃_t into `rtilde_out`.
+    pub fn receive(&mut self, utilde: &[f32], rtilde_out: &mut [f32]) {
+        assert_eq!(utilde.len(), self.d);
+        assert_eq!(rtilde_out.len(), self.d);
+        let rhat = self.predictor.rhat();
+        for i in 0..self.d {
+            rtilde_out[i] = utilde[i] + rhat[i];
+        }
+        self.predictor.update(utilde);
+    }
+
+    pub fn rhat(&self) -> &[f32] {
+        self.predictor.rhat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{PredictorKind, QuantizerKind};
+    use crate::util::Pcg64;
+
+    fn gvec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; d];
+        rng.fill_gaussian(&mut g, 1.0);
+        g
+    }
+
+    #[test]
+    fn baseline_is_exact_momentum() {
+        // Q=none, P=zero, no EF: utilde == v and e == 0
+        let d = 128;
+        let cfg = SchemeCfg::baseline(0.9);
+        let mut pipe = WorkerPipeline::new(cfg, d);
+        let mut rng = Pcg64::seeded(1);
+        let mut v_ref = vec![0.0f32; d];
+        for _ in 0..20 {
+            let g = gvec(&mut rng, d);
+            let stats = pipe.step(&g, 1.0);
+            let one_minus = 1.0f32 - 0.9f32; // match the pipeline's exact fp
+            for i in 0..d {
+                v_ref[i] = 0.9 * v_ref[i] + one_minus * g[i];
+            }
+            assert_eq!(pipe.utilde(), &v_ref[..]);
+            assert_eq!(stats.e_norm_sq, 0.0);
+            assert_eq!(stats.nnz, d);
+        }
+    }
+
+    #[test]
+    fn master_chain_reconstruction_identity() {
+        // r_t − r̃_t = e_t (paper Eq. (8)): master's r̃ equals worker's u+r̂−e
+        let d = 256;
+        let cfg = SchemeCfg::new(
+            QuantizerKind::TopK { k: 16 },
+            PredictorKind::EstK,
+            true,
+            0.95,
+        )
+        .unwrap();
+        let mut worker = WorkerPipeline::new(cfg.clone(), d);
+        let mut master = MasterChain::new(&cfg, d);
+        let mut rng = Pcg64::seeded(2);
+        let mut rtilde = vec![0.0f32; d];
+        for t in 0..100 {
+            let g = gvec(&mut rng, d);
+            let lr_ratio = if t == 0 { 0.0 } else { 1.0 };
+            // capture r̂_t and v/e BEFORE the step advances the predictor
+            let rhat_before: Vec<f32> = worker.rhat().to_vec();
+            worker.step(&g, lr_ratio);
+            master.receive(worker.utilde(), &mut rtilde);
+            // master r̂ stays in bit-exact sync with worker r̂
+            assert_eq!(master.rhat(), worker.rhat(), "t={t}");
+            // r̃ = ũ + r̂(pre-update)
+            for i in 0..d {
+                let want = worker.utilde()[i] + rhat_before[i];
+                assert_eq!(rtilde[i], want);
+            }
+            // e_t = u_t − ũ_t by construction
+            for i in 0..d {
+                let e = worker.quantizer_input()[i] - worker.utilde()[i];
+                assert_eq!(worker.error()[i], e);
+            }
+        }
+    }
+
+    #[test]
+    fn prediction_reduces_quantizer_input_variance() {
+        // the paper's core claim (Sec. III-A): with temporally-correlated
+        // streams, P_Lin shrinks var(u) vs no prediction
+        let d = 2048;
+        let beta = 0.99f32;
+        let mk = |pred| {
+            SchemeCfg::new(QuantizerKind::Sign, pred, false, beta).unwrap()
+        };
+        let mut with_p = WorkerPipeline::new(mk(PredictorKind::PLin), d);
+        let mut without_p = WorkerPipeline::new(mk(PredictorKind::Zero), d);
+        let mut rng = Pcg64::seeded(3);
+        // correlated gradient stream: g_t = base + noise
+        let base = gvec(&mut rng, d);
+        let (mut uw, mut uo) = (0.0, 0.0);
+        for t in 0..300 {
+            let mut g = base.clone();
+            for x in g.iter_mut() {
+                *x += 0.3 * rng.gaussian() as f32;
+            }
+            let sw = with_p.step(&g, 1.0);
+            let so = without_p.step(&g, 1.0);
+            if t >= 100 {
+                uw += sw.u_norm_sq;
+                uo += so.u_norm_sq;
+            }
+        }
+        assert!(
+            uw < uo * 0.25,
+            "prediction should shrink ||u||^2 by ~(1-beta) factors: {uw} vs {uo}"
+        );
+    }
+
+    #[test]
+    fn plin_with_ef_error_grows() {
+        // paper Fig. 5: P_Lin + EF => ||e_t||^2 grows; without EF it stays flat
+        let d = 512;
+        let mk = |ef| {
+            SchemeCfg::new(
+                QuantizerKind::TopKQ { k: 25 },
+                PredictorKind::PLin,
+                ef,
+                0.99,
+            )
+            .unwrap()
+        };
+        let mut with_ef = WorkerPipeline::new(mk(true), d);
+        let mut without_ef = WorkerPipeline::new(mk(false), d);
+        let mut rng = Pcg64::seeded(4);
+        let (mut e_ef_early, mut e_ef_late) = (0.0, 0.0);
+        let (mut e_no_early, mut e_no_late) = (0.0, 0.0);
+        for t in 0..120 {
+            let g = gvec(&mut rng, d);
+            let s1 = with_ef.step(&g, if t == 0 { 0.0 } else { 1.0 });
+            let s2 = without_ef.step(&g, 0.0);
+            if (10..30).contains(&t) {
+                e_ef_early += s1.e_norm_sq;
+                e_no_early += s2.e_norm_sq;
+            }
+            if t >= 100 {
+                e_ef_late += s1.e_norm_sq;
+                e_no_late += s2.e_norm_sq;
+            }
+        }
+        assert!(e_ef_late > 5.0 * e_ef_early, "EF+PLin must diverge: {e_ef_early} -> {e_ef_late}");
+        assert!(e_no_late < 3.0 * e_no_early, "no-EF stays bounded: {e_no_early} -> {e_no_late}");
+    }
+
+    #[test]
+    fn estk_tracks_momentum_better_than_no_prediction() {
+        // Fig. 6(c): with Est-K, max|u| over a stable stretch is roughly
+        // halved vs Top-K without prediction
+        let d = 1000;
+        let k = 10;
+        let beta = 0.995f32;
+        let cfg_estk =
+            SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::EstK, true, beta).unwrap();
+        let cfg_plain =
+            SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::Zero, true, beta).unwrap();
+        let mut pe = WorkerPipeline::new(cfg_estk, d);
+        let mut pp = WorkerPipeline::new(cfg_plain, d);
+        let mut r1 = Pcg64::seeded(5);
+        let mut r2 = Pcg64::seeded(5);
+        let (mut umax_e, mut umax_p) = (0.0f32, 0.0f32);
+        for t in 0..600 {
+            let g1 = gvec(&mut r1, d);
+            let g2 = gvec(&mut r2, d);
+            assert_eq!(g1, g2);
+            let lr = if t == 0 { 0.0 } else { 1.0 };
+            pe.step(&g1, lr);
+            pp.step(&g2, lr);
+            if t >= 300 {
+                umax_e = umax_e.max(pe.quantizer_input()[0].abs());
+                umax_p = umax_p.max(pp.quantizer_input()[0].abs());
+            }
+        }
+        assert!(
+            umax_e < 0.8 * umax_p,
+            "Est-K should shrink |u| vs plain Top-K: {umax_e} vs {umax_p}"
+        );
+    }
+
+    #[test]
+    fn lr_ratio_scales_fed_back_error() {
+        let d = 8;
+        let cfg = SchemeCfg::new(
+            QuantizerKind::TopK { k: 1 },
+            PredictorKind::Zero,
+            true,
+            0.0, // no momentum: v = g
+        )
+        .unwrap();
+        let mut pipe = WorkerPipeline::new(cfg, d);
+        let g = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        pipe.step(&g, 0.0); // t=0: keeps 8.0, e = [1..7, 0]
+        let e0: Vec<f32> = pipe.error().to_vec();
+        assert_eq!(e0[7], 0.0);
+        // t=1 with lr_ratio=2: u = g + 2*e0
+        pipe.step(&g, 2.0);
+        for i in 0..d {
+            let want = g[i] + 2.0 * e0[i];
+            assert_eq!(pipe.quantizer_input()[i], want);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Predictors P (paper Eq. (1g)) with their per-component state.
+//!
+//! The same `Predictor` value runs at the worker and (one per worker) at
+//! the master, fed the identical decoded `utilde` stream — so the two
+//! copies stay in bit-exact sync (same f32 ops in the same order).
+
+use super::PredictorKind;
+
+/// Predictor state machine. `rhat()` is the prediction of r_t used when the
+/// current iteration's u_t = r_t − r̂_t is formed; `update(utilde)` advances
+/// to r̂_{t+1} after the quantized update is known (Eq. (1g)).
+#[derive(Clone, Debug)]
+pub enum Predictor {
+    Zero {
+        zeros: Vec<f32>,
+    },
+    PLin {
+        beta: f32,
+        rhat: Vec<f32>,
+    },
+    EstK {
+        beta: f32,
+        rhat: Vec<f32>,
+        /// last estimate of the momentum (time-average between peaks)
+        p: Vec<f32>,
+        /// sum of predictions issued since the last received update
+        s: Vec<f32>,
+        /// iterations since the last received update
+        tau: Vec<f32>,
+    },
+}
+
+impl Predictor {
+    pub fn new(kind: PredictorKind, beta: f32, d: usize) -> Self {
+        match kind {
+            PredictorKind::Zero => Predictor::Zero { zeros: vec![0.0; d] },
+            PredictorKind::PLin => Predictor::PLin { beta, rhat: vec![0.0; d] },
+            PredictorKind::EstK => Predictor::EstK {
+                beta,
+                rhat: vec![0.0; d],
+                p: vec![0.0; d],
+                s: vec![0.0; d],
+                tau: vec![0.0; d],
+            },
+        }
+    }
+
+    pub fn kind(&self) -> PredictorKind {
+        match self {
+            Predictor::Zero { .. } => PredictorKind::Zero,
+            Predictor::PLin { .. } => PredictorKind::PLin,
+            Predictor::EstK { .. } => PredictorKind::EstK,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.rhat().len()
+    }
+
+    /// Current prediction r̂_t.
+    pub fn rhat(&self) -> &[f32] {
+        match self {
+            Predictor::Zero { zeros } => zeros,
+            Predictor::PLin { rhat, .. } => rhat,
+            Predictor::EstK { rhat, .. } => rhat,
+        }
+    }
+
+    /// Advance the state given the received quantized update ũ_t.
+    pub fn update(&mut self, utilde: &[f32]) {
+        match self {
+            Predictor::Zero { .. } => {}
+            Predictor::PLin { beta, rhat } => {
+                // r̂_{t+1} = β·r̃_t = β·(ũ_t + r̂_t)
+                debug_assert_eq!(rhat.len(), utilde.len());
+                let b = *beta;
+                for (r, &ut) in rhat.iter_mut().zip(utilde) {
+                    *r = b * (ut + *r);
+                }
+            }
+            Predictor::EstK { beta, rhat, p, s, tau } => {
+                debug_assert_eq!(rhat.len(), utilde.len());
+                let b = *beta;
+                for i in 0..utilde.len() {
+                    let ut = utilde[i];
+                    if ut != 0.0 {
+                        // received a Top-K peak: refresh the momentum
+                        // estimate to the time-average since the last peak
+                        let p_new = (s[i] + ut) / (tau[i] + 1.0);
+                        let rh = b * p_new;
+                        p[i] = p_new;
+                        rhat[i] = rh;
+                        s[i] = rh;
+                        tau[i] = 0.0;
+                    } else {
+                        // miss: decay the chain, accumulate the prediction
+                        let rh = b * rhat[i];
+                        rhat[i] = rh;
+                        s[i] += rh;
+                        tau[i] += 1.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Direct state access for the HLO-backend bridge (runtime feeds the
+    /// artifact the same (r̂, p, S, τ) buffers it maintains here).
+    pub fn state_view(&self) -> PredictorState<'_> {
+        match self {
+            Predictor::Zero { zeros } => PredictorState {
+                rhat: zeros,
+                p: None,
+                s: None,
+                tau: None,
+            },
+            Predictor::PLin { rhat, .. } => PredictorState { rhat, p: None, s: None, tau: None },
+            Predictor::EstK { rhat, p, s, tau, .. } => PredictorState {
+                rhat,
+                p: Some(p),
+                s: Some(s),
+                tau: Some(tau),
+            },
+        }
+    }
+
+    /// Overwrite state from the HLO artifact outputs.
+    pub fn load_state(&mut self, rhat_new: &[f32], p_new: Option<&[f32]>, s_new: Option<&[f32]>, tau_new: Option<&[f32]>) {
+        match self {
+            Predictor::Zero { .. } => {}
+            Predictor::PLin { rhat, .. } => rhat.copy_from_slice(rhat_new),
+            Predictor::EstK { rhat, p, s, tau, .. } => {
+                rhat.copy_from_slice(rhat_new);
+                if let Some(x) = p_new {
+                    p.copy_from_slice(x);
+                }
+                if let Some(x) = s_new {
+                    s.copy_from_slice(x);
+                }
+                if let Some(x) = tau_new {
+                    tau.copy_from_slice(x);
+                }
+            }
+        }
+    }
+}
+
+/// Borrowed view of predictor state vectors.
+pub struct PredictorState<'a> {
+    pub rhat: &'a [f32],
+    pub p: Option<&'a [f32]>,
+    pub s: Option<&'a [f32]>,
+    pub tau: Option<&'a [f32]>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_never_predicts() {
+        let mut p = Predictor::new(PredictorKind::Zero, 0.9, 4);
+        p.update(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.rhat(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn plin_geometric_chain() {
+        let mut p = Predictor::new(PredictorKind::PLin, 0.5, 2);
+        p.update(&[2.0, 0.0]); // rhat = 0.5*(2+0) = 1
+        assert_eq!(p.rhat(), &[1.0, 0.0]);
+        p.update(&[0.0, 0.0]); // rhat = 0.5*(0+1) = 0.5
+        assert_eq!(p.rhat(), &[0.5, 0.0]);
+    }
+
+    #[test]
+    fn estk_replays_paper_table3() {
+        // the Table III trace (see python/tests/test_estk_table3.py)
+        let beta = 0.9f32;
+        let mut pr = Predictor::new(PredictorKind::EstK, beta, 1);
+        let (u3, u6) = (2.5f32, -1.3f32);
+        let stream = [0.0, 0.0, 0.0, u3, 0.0, 0.0, u6, 0.0];
+        let mut rhats = Vec::new();
+        let mut taus = Vec::new();
+        for &ut in &stream {
+            pr.update(&[ut]);
+            rhats.push(pr.rhat()[0]);
+            if let Predictor::EstK { tau, .. } = &pr {
+                taus.push(tau[0]);
+            }
+        }
+        let p3 = u3 / 4.0;
+        assert!((rhats[3] - beta * p3).abs() < 1e-6);
+        assert!((rhats[4] - beta * beta * p3).abs() < 1e-6);
+        assert!((rhats[5] - beta.powi(3) * p3).abs() < 1e-6);
+        let s6 = (beta + beta * beta + beta.powi(3)) * p3;
+        let p6 = (s6 + u6) / 3.0;
+        assert!((rhats[6] - beta * p6).abs() < 1e-5);
+        assert_eq!(taus, vec![1.0, 2.0, 3.0, 0.0, 1.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn worker_master_sync_bit_exact() {
+        // both sides fed the same utilde stream -> identical rhat forever
+        let mut rng = crate::util::Pcg64::seeded(8);
+        for kind in [PredictorKind::PLin, PredictorKind::EstK] {
+            let d = 64;
+            let mut a = Predictor::new(kind, 0.97, d);
+            let mut b = Predictor::new(kind, 0.97, d);
+            for _ in 0..200 {
+                let ut: Vec<f32> = (0..d)
+                    .map(|_| {
+                        if rng.uniform() < 0.1 {
+                            rng.gaussian() as f32
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                a.update(&ut);
+                b.update(&ut);
+                assert_eq!(a.rhat(), b.rhat());
+            }
+        }
+    }
+
+    #[test]
+    fn load_state_roundtrip() {
+        let mut p = Predictor::new(PredictorKind::EstK, 0.9, 3);
+        p.update(&[1.0, 0.0, -1.0]);
+        let rh: Vec<f32> = p.rhat().to_vec();
+        let (pp, ss, tt) = match &p {
+            Predictor::EstK { p, s, tau, .. } => (p.clone(), s.clone(), tau.clone()),
+            _ => unreachable!(),
+        };
+        let mut q = Predictor::new(PredictorKind::EstK, 0.9, 3);
+        q.load_state(&rh, Some(&pp), Some(&ss), Some(&tt));
+        assert_eq!(q.rhat(), p.rhat());
+    }
+}

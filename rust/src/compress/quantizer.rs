@@ -1,0 +1,249 @@
+//! Quantizers Q (paper Eq. (1d)) — dense in, dense out.
+//!
+//! Semantics mirror `python/compile/kernels/ref.py` exactly (same tie-break
+//! for Top-K, sign(0) = 0 for Scaled-sign, mean-of-group reconstruction
+//! points for Top-K-Q) so the Rust and HLO backends agree.
+
+use crate::coding::PayloadKind;
+use crate::tensor::{self, select_topk_indices};
+
+use super::randk;
+
+/// Quantizer family and its parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantizerKind {
+    /// Identity (uncompressed baseline).
+    None,
+    /// Scaled-sign: mean(|u|) · sign(u).
+    Sign,
+    /// Top-K sparsification (keep exactly k).
+    TopK { k: usize },
+    /// Top-K + two-point value quantization.
+    TopKQ { k: usize },
+    /// Bernoulli Rand-K with shared-seed selection.
+    RandK { prob: f32 },
+}
+
+impl QuantizerKind {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            QuantizerKind::TopK { k } | QuantizerKind::TopKQ { k } => {
+                anyhow::ensure!(k > 0, "top-k requires k > 0");
+            }
+            QuantizerKind::RandK { prob } => {
+                anyhow::ensure!((0.0..=1.0).contains(&prob), "randk prob in [0,1]");
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    pub fn tag(&self) -> String {
+        match *self {
+            QuantizerKind::None => "none".into(),
+            QuantizerKind::Sign => "sign".into(),
+            QuantizerKind::TopK { k } => format!("topk_k{k}"),
+            QuantizerKind::TopKQ { k } => format!("topkq_k{k}"),
+            QuantizerKind::RandK { prob } => format!("randk_p{prob}").replace('.', "_"),
+        }
+    }
+
+    pub fn payload_kind(&self) -> PayloadKind {
+        match *self {
+            QuantizerKind::None => PayloadKind::Dense,
+            QuantizerKind::Sign => PayloadKind::Sign,
+            QuantizerKind::TopK { .. } => PayloadKind::SparseValues,
+            QuantizerKind::TopKQ { .. } => PayloadKind::SparseTwoPoint,
+            QuantizerKind::RandK { prob } => PayloadKind::MaskedValues { prob },
+        }
+    }
+
+    /// Quantize `u` into `out` (same length). `round` seeds Rand-K.
+    pub fn quantize(&self, u: &[f32], out: &mut [f32], round: u64) {
+        debug_assert_eq!(u.len(), out.len());
+        match *self {
+            QuantizerKind::None => out.copy_from_slice(u),
+            QuantizerKind::Sign => {
+                let a = tensor::mean_abs(u);
+                for (o, &v) in out.iter_mut().zip(u) {
+                    *o = if v > 0.0 {
+                        a
+                    } else if v < 0.0 {
+                        -a
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            QuantizerKind::TopK { k } => {
+                out.fill(0.0);
+                for &i in &select_topk_indices(u, k) {
+                    out[i as usize] = u[i as usize];
+                }
+            }
+            QuantizerKind::TopKQ { k } => {
+                out.fill(0.0);
+                let idx = select_topk_indices(u, k);
+                let (mut pos_sum, mut npos) = (0.0f64, 0u32);
+                let (mut neg_sum, mut nneg) = (0.0f64, 0u32);
+                for &i in &idx {
+                    let v = u[i as usize];
+                    if v > 0.0 {
+                        pos_sum += v as f64;
+                        npos += 1;
+                    } else if v < 0.0 {
+                        neg_sum += (-v) as f64;
+                        nneg += 1;
+                    }
+                }
+                // f32 group means, matching the jnp reference reduction order
+                // closely enough (values only, no index-dependent ops)
+                let a_pos = if npos > 0 { (pos_sum / npos as f64) as f32 } else { 0.0 };
+                let a_neg = if nneg > 0 { (neg_sum / nneg as f64) as f32 } else { 0.0 };
+                for &i in &idx {
+                    let v = u[i as usize];
+                    if v > 0.0 {
+                        out[i as usize] = a_pos;
+                    } else if v < 0.0 {
+                        out[i as usize] = -a_neg;
+                    }
+                }
+            }
+            QuantizerKind::RandK { prob } => randk::apply(u, out, round, prob),
+        }
+    }
+
+    /// The paper's analytic bits/component for this quantizer at dimension d
+    /// (Sec. III-B). Used to sanity-check measured payload sizes.
+    pub fn analytic_bits_per_component(&self, d: usize) -> f64 {
+        match *self {
+            QuantizerKind::None => 32.0,
+            QuantizerKind::Sign => 1.0 + 32.0 / d as f64,
+            QuantizerKind::TopK { k } => crate::util::topk_bits_per_component(k.min(d), d),
+            QuantizerKind::TopKQ { k } => {
+                // ternary entropy with the +/- split unknown a priori; use
+                // the symmetric worst case k/2 each plus the two scales
+                let kk = k.min(d);
+                crate::util::topkq_bits_per_component(kk / 2, kk - kk / 2, d) + 64.0 / d as f64
+            }
+            QuantizerKind::RandK { prob } => 32.0 * prob as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn randu(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        let mut v = vec![0.0f32; d];
+        rng.fill_gaussian(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let u = randu(100, 1);
+        let mut out = vec![0.0f32; 100];
+        QuantizerKind::None.quantize(&u, &mut out, 0);
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn sign_scale_and_zeros() {
+        let u = vec![2.0f32, -4.0, 0.0, 6.0];
+        let mut out = vec![0.0f32; 4];
+        QuantizerKind::Sign.quantize(&u, &mut out, 0);
+        assert_eq!(out, vec![3.0, -3.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn topk_keeps_exactly_k() {
+        let u = randu(1000, 2);
+        let mut out = vec![0.0f32; 1000];
+        QuantizerKind::TopK { k: 37 }.quantize(&u, &mut out, 0);
+        assert_eq!(tensor::nnz(&out), 37);
+        // kept values are unmodified
+        for i in 0..1000 {
+            assert!(out[i] == 0.0 || out[i] == u[i]);
+        }
+    }
+
+    #[test]
+    fn topkq_two_points() {
+        let u = randu(500, 3);
+        let mut out = vec![0.0f32; 500];
+        QuantizerKind::TopKQ { k: 50 }.quantize(&u, &mut out, 0);
+        let pos: Vec<f32> = out.iter().copied().filter(|&v| v > 0.0).collect();
+        let neg: Vec<f32> = out.iter().copied().filter(|&v| v < 0.0).collect();
+        assert!(pos.windows(2).all(|w| w[0] == w[1]));
+        assert!(neg.windows(2).all(|w| w[0] == w[1]));
+        assert_eq!(tensor::nnz(&out), 50);
+    }
+
+    #[test]
+    fn topkq_group_mean_minimizes_mse_vs_perturbation() {
+        // a+ = mean of kept positives is the MSE-optimal single point
+        let u = randu(300, 4);
+        let mut out = vec![0.0f32; 300];
+        let q = QuantizerKind::TopKQ { k: 60 };
+        q.quantize(&u, &mut out, 0);
+        let base: f64 = u.iter().zip(&out).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+        for scale in [0.9f32, 1.1] {
+            let perturbed: Vec<f32> = out.iter().map(|&v| v * scale).collect();
+            let alt: f64 =
+                u.iter().zip(&perturbed).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            assert!(base <= alt + 1e-6);
+        }
+    }
+
+    #[test]
+    fn randk_density() {
+        let u = randu(50_000, 5);
+        let mut out = vec![0.0f32; 50_000];
+        QuantizerKind::RandK { prob: 0.02 }.quantize(&u, &mut out, 9);
+        let n = tensor::nnz(&out) as f64;
+        assert!((n - 1000.0).abs() < 150.0, "{n}");
+    }
+
+    #[test]
+    fn delta_compressor_property_topk() {
+        // ||x - Q(x)||^2 <= (1 - K/d) ||x||^2 (paper Sec. I-A)
+        let mut rng = Pcg64::seeded(6);
+        for _ in 0..30 {
+            let d = 50 + rng.below(500) as usize;
+            let k = 1 + rng.below(d as u64) as usize;
+            let u = randu(d, rng.next_u64());
+            let mut out = vec![0.0f32; d];
+            QuantizerKind::TopK { k }.quantize(&u, &mut out, 0);
+            let err: f64 =
+                u.iter().zip(&out).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            let bound = (1.0 - k as f64 / d as f64) * tensor::norm2_sq(&u);
+            assert!(err <= bound + 1e-6, "d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn delta_compressor_property_sign() {
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..30 {
+            let d = 2 + rng.below(500) as usize;
+            let u = randu(d, rng.next_u64());
+            let mut out = vec![0.0f32; d];
+            QuantizerKind::Sign.quantize(&u, &mut out, 0);
+            let err: f64 =
+                u.iter().zip(&out).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum();
+            let bound = (1.0 - 1.0 / d as f64) * tensor::norm2_sq(&u);
+            assert!(err <= bound + 1e-4, "d={d}");
+        }
+    }
+
+    #[test]
+    fn analytic_rates() {
+        assert_eq!(QuantizerKind::None.analytic_bits_per_component(100), 32.0);
+        let r = QuantizerKind::TopK { k: 350 }.analytic_bits_per_component(1000);
+        assert!((r - 12.13).abs() < 0.05);
+    }
+}

@@ -1,0 +1,327 @@
+//! Typed experiment configuration (what `tempo train --config x.toml` runs).
+
+use anyhow::{Context, Result};
+
+use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
+use crate::optim::LrSchedule;
+
+use super::value::Value;
+
+/// Scheme spec as written in configs: K given as a *fraction* of d (the
+/// paper parameterizes K = c·d) or as an absolute count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchemeSpec {
+    pub quantizer: String,
+    pub predictor: String,
+    pub ef: bool,
+    pub beta: f32,
+    pub k_frac: Option<f64>,
+    pub k_abs: Option<usize>,
+    pub randk_prob: Option<f64>,
+}
+
+impl Default for SchemeSpec {
+    fn default() -> Self {
+        Self {
+            quantizer: "none".into(),
+            predictor: "zero".into(),
+            ef: false,
+            beta: 0.99,
+            k_frac: None,
+            k_abs: None,
+            randk_prob: None,
+        }
+    }
+}
+
+impl SchemeSpec {
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut s = Self::default();
+        if let Some(x) = v.opt("quantizer") {
+            s.quantizer = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.opt("predictor") {
+            s.predictor = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.opt("ef") {
+            s.ef = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("beta") {
+            s.beta = x.as_f32()?;
+        }
+        if let Some(x) = v.opt("k_frac") {
+            s.k_frac = Some(x.as_f64()?);
+        }
+        if let Some(x) = v.opt("k_abs") {
+            s.k_abs = Some(x.as_usize()?);
+        }
+        if let Some(x) = v.opt("randk_prob") {
+            s.randk_prob = Some(x.as_f64()?);
+        }
+        Ok(s)
+    }
+
+    /// Resolve K for a model dimension d.
+    pub fn resolve_k(&self, d: usize) -> usize {
+        if let Some(k) = self.k_abs {
+            return k.min(d).max(1);
+        }
+        if let Some(f) = self.k_frac {
+            return ((f * d as f64).round() as usize).clamp(1, d);
+        }
+        1
+    }
+
+    /// Build the runtime SchemeCfg for dimension d.
+    pub fn to_cfg(&self, d: usize) -> Result<SchemeCfg> {
+        let quantizer = match self.quantizer.as_str() {
+            "none" => QuantizerKind::None,
+            "sign" => QuantizerKind::Sign,
+            "topk" => QuantizerKind::TopK { k: self.resolve_k(d) },
+            "topkq" => QuantizerKind::TopKQ { k: self.resolve_k(d) },
+            "randk" => QuantizerKind::RandK {
+                prob: self
+                    .randk_prob
+                    .or(self.k_frac)
+                    .context("randk needs randk_prob or k_frac")? as f32,
+            },
+            other => anyhow::bail!("unknown quantizer {other:?}"),
+        };
+        SchemeCfg::new(quantizer, PredictorKind::parse(&self.predictor)?, self.ef, self.beta)
+    }
+}
+
+/// Which compression backend the workers run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust pipeline (flexible: any d, K, β).
+    Rust,
+    /// AOT-compiled HLO artifact built from the Pallas kernels (the
+    /// three-layer showcase path; requires a matching artifact).
+    Hlo,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rust" => Backend::Rust,
+            "hlo" => Backend::Hlo,
+            _ => anyhow::bail!("unknown backend {s:?} (rust|hlo)"),
+        })
+    }
+}
+
+/// Full training-experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Manifest model name (mlp_tiny, cnn_s, lm_tiny, lm_small, ...).
+    pub model: String,
+    pub workers: usize,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub scheme: SchemeSpec,
+    pub backend: Backend,
+    // LR schedule
+    pub lr: f32,
+    /// global-norm gradient clip (0 = disabled)
+    pub clip_norm: f32,
+    pub lr_decay_factor: f32,
+    pub lr_decay_every: u64,
+    pub warmup: u64,
+    // data
+    pub classes: usize,
+    pub train_len: usize,
+    pub test_len: usize,
+    pub noise: f32,
+    // output
+    pub csv: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "experiment".into(),
+            model: "cnn_s".into(),
+            workers: 4,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 4,
+            seed: 0,
+            scheme: SchemeSpec::default(),
+            backend: Backend::Rust,
+            lr: 0.1,
+            clip_norm: 0.0,
+            lr_decay_factor: 0.1,
+            lr_decay_every: u64::MAX / 2, // effectively constant unless set
+            warmup: 0,
+            classes: 10,
+            train_len: 8192,
+            test_len: 512,
+            noise: 1.0,
+            csv: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(x) = v.opt("name") {
+            c.name = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.opt("model") {
+            c.model = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.opt("workers") {
+            c.workers = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("steps") {
+            c.steps = x.as_int()? as u64;
+        }
+        if let Some(x) = v.opt("eval_every") {
+            c.eval_every = x.as_int()? as u64;
+        }
+        if let Some(x) = v.opt("eval_batches") {
+            c.eval_batches = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("seed") {
+            c.seed = x.as_int()? as u64;
+        }
+        if let Some(x) = v.opt("backend") {
+            c.backend = Backend::parse(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("scheme") {
+            c.scheme = SchemeSpec::from_value(x)?;
+        }
+        if let Some(t) = v.opt("lr") {
+            if let Some(x) = t.opt("base") {
+                c.lr = x.as_f32()?;
+            }
+            if let Some(x) = t.opt("clip_norm") {
+                c.clip_norm = x.as_f32()?;
+            }
+            if let Some(x) = t.opt("decay_factor") {
+                c.lr_decay_factor = x.as_f32()?;
+            }
+            if let Some(x) = t.opt("decay_every") {
+                c.lr_decay_every = x.as_int()? as u64;
+            }
+            if let Some(x) = t.opt("warmup") {
+                c.warmup = x.as_int()? as u64;
+            }
+        }
+        if let Some(t) = v.opt("data") {
+            if let Some(x) = t.opt("classes") {
+                c.classes = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("train_len") {
+                c.train_len = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("test_len") {
+                c.test_len = x.as_usize()?;
+            }
+            if let Some(x) = t.opt("noise") {
+                c.noise = x.as_f32()?;
+            }
+        }
+        if let Some(x) = v.opt("csv") {
+            c.csv = Some(x.as_str()?.to_string());
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn from_toml_str(s: &str) -> Result<Self> {
+        Self::from_value(&super::toml::parse(s)?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1, "need at least one worker");
+        anyhow::ensure!(self.steps >= 1, "need at least one step");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
+        Ok(())
+    }
+
+    pub fn schedule(&self) -> LrSchedule {
+        if self.warmup > 0 {
+            LrSchedule::warmup_step_decay(self.lr, self.warmup, self.lr_decay_factor, self.lr_decay_every)
+        } else {
+            LrSchedule::step_decay(self.lr, self.lr_decay_factor, self.lr_decay_every)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "fig7_estk"
+model = "cnn_s"
+workers = 4
+steps = 400
+seed = 3
+
+[scheme]
+quantizer = "topk"
+predictor = "estk"
+ef = true
+beta = 0.99
+k_frac = 6.5e-5
+
+[lr]
+base = 0.1
+decay_every = 160
+
+[data]
+classes = 10
+noise = 0.8
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let c = ExperimentConfig::from_toml_str(SAMPLE).unwrap();
+        assert_eq!(c.name, "fig7_estk");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.scheme.predictor, "estk");
+        assert!(c.scheme.ef);
+        let cfg = c.scheme.to_cfg(100_000).unwrap();
+        // 6.5e-5 * 1e5 = 6.4999... in binary f64 -> rounds to 6
+        assert_eq!(cfg.quantizer, QuantizerKind::TopK { k: 6 });
+        assert!(cfg.ef);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = ExperimentConfig::from_toml_str("name = \"x\"").unwrap();
+        assert_eq!(c.model, "cnn_s");
+        assert_eq!(c.backend, Backend::Rust);
+        let cfg = c.scheme.to_cfg(10).unwrap();
+        assert_eq!(cfg.quantizer, QuantizerKind::None);
+    }
+
+    #[test]
+    fn k_resolution_rules() {
+        let mut s = SchemeSpec { quantizer: "topk".into(), ..Default::default() };
+        s.k_frac = Some(0.01);
+        assert_eq!(s.resolve_k(1000), 10);
+        s.k_abs = Some(5); // absolute wins
+        assert_eq!(s.resolve_k(1000), 5);
+        // clamps
+        s.k_abs = Some(99999);
+        assert_eq!(s.resolve_k(100), 100);
+        let tiny = SchemeSpec { quantizer: "topk".into(), k_frac: Some(1e-9), ..Default::default() };
+        assert_eq!(tiny.resolve_k(1000), 1);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(ExperimentConfig::from_toml_str("workers = 0").is_err());
+        assert!(ExperimentConfig::from_toml_str("steps = 0").is_err());
+        let bad_backend = "backend = \"qpu\"";
+        assert!(ExperimentConfig::from_toml_str(bad_backend).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Minimal recursive-descent JSON parser — reads artifacts/manifest.json.
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null). Not performance-critical: it runs once at
+//! startup on a ~10 KiB manifest.
+
+use anyhow::{bail, Result};
+
+use super::value::Value;
+
+pub fn parse(input: &str) -> Result<Value> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing data at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow::anyhow!("unexpected EOF"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        if got != b {
+            bail!("expected {:?} at byte {}, got {:?}", b as char, self.pos - 1, got as char);
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Value::Bool(true)),
+            Some(b'f') => self.keyword("false", Value::Bool(false)),
+            Some(b'n') => self.keyword("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos);
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut map = std::collections::BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Table(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            map.insert(key, v);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Value::Table(map)),
+                c => bail!("expected ',' or '}}' got {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Value::Array(out)),
+                c => bail!("expected ',' or ']' got {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{8}'),
+                    b'f' => s.push('\u{c}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => bail!("bad escape \\{}", c as char),
+                },
+                c => s.push(c as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let mut is_float = false;
+        while let Some(c) = self.peek() {
+            match c {
+                b'0'..=b'9' => self.pos += 1,
+                b'.' | b'e' | b'E' | b'+' | b'-' => {
+                    is_float = true;
+                    self.pos += 1;
+                }
+                _ => break,
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        if is_float {
+            Ok(Value::Float(text.parse()?))
+        } else {
+            match text.parse::<i64>() {
+                Ok(i) => Ok(Value::Int(i)),
+                Err(_) => Ok(Value::Float(text.parse()?)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let v = parse(
+            r#"{"version": 1, "models": [{"name": "mlp", "d": 98666, "batch": 32}],
+               "compress": [], "f": 0.99, "neg": -3, "t": true, "n": null}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("version").unwrap().as_int().unwrap(), 1);
+        let models = v.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models[0].get("d").unwrap().as_usize().unwrap(), 98666);
+        assert_eq!(v.get("f").unwrap().as_f64().unwrap(), 0.99);
+        assert_eq!(v.get("neg").unwrap().as_int().unwrap(), -3);
+        assert!(v.get("t").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("n").unwrap(), &Value::Null);
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        let v = parse(r#"{"s": "a\"b\\c\ndA"}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a\"b\\c\ndA");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("[[1,2],[3,[4]]]").unwrap();
+        let a = v.as_array().unwrap();
+        assert_eq!(a[1].as_array().unwrap()[1].as_array().unwrap()[0], Value::Int(4));
+    }
+
+    #[test]
+    fn scientific_numbers() {
+        let v = parse(r#"{"x": 1.2e-4, "y": 5E3}"#).unwrap();
+        assert!((v.get("x").unwrap().as_f64().unwrap() - 1.2e-4).abs() < 1e-12);
+        assert_eq!(v.get("y").unwrap().as_f64().unwrap(), 5000.0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("123 45").is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration: value model, JSON parser (for artifacts/manifest.json),
+//! TOML-subset parser (for experiment configs), and the typed
+//! [`ExperimentConfig`] the launcher consumes.
+//!
+//! The offline build has no serde/toml crates, so both parsers are in-repo
+//! (see DESIGN.md "Offline-build note").
+
+pub mod experiment;
+pub mod json;
+pub mod toml;
+pub mod value;
+
+pub use experiment::{ExperimentConfig, SchemeSpec};
+pub use value::Value;

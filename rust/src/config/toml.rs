@@ -1,0 +1,185 @@
+//! TOML-subset parser for experiment configs (configs/*.toml).
+//!
+//! Supported: `[table]` / `[a.b]` headers, `key = value` with strings,
+//! integers, floats, booleans, inline arrays, and `#` comments. Not
+//! supported (not needed by our configs): array-of-tables, multi-line
+//! strings, dates, inline tables.
+
+use anyhow::{bail, Context, Result};
+
+use super::value::{parse_scalar, Value};
+
+pub fn parse(input: &str) -> Result<Value> {
+    let mut root = Value::table();
+    let mut prefix: Vec<String> = Vec::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let header = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if header.is_empty() || header.starts_with('[') {
+                bail!("line {}: unsupported table header {line:?}", lineno + 1);
+            }
+            prefix = header.split('.').map(|s| s.trim().to_string()).collect();
+            // materialise the table
+            let path = prefix.join(".");
+            if root.get_path(&path).is_err() {
+                root.set_path(&path, Value::table())?;
+            }
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let val = val.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let parsed = parse_value(val)
+            .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+        let full = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{}.{}", prefix.join("."), key)
+        };
+        root.set_path(&full, parsed)?;
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a quoted string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut out = Vec::new();
+        for item in split_top_level(inner) {
+            let item = item.trim();
+            if !item.is_empty() {
+                out.push(parse_value(item)?);
+            }
+        }
+        return Ok(Value::Array(out));
+    }
+    match parse_scalar(s) {
+        Value::Str(text) => {
+            // bare words are not valid TOML values except booleans handled
+            // by parse_scalar — reject to catch config typos early
+            bail!("bare value {text:?} (strings need quotes)")
+        }
+        v => Ok(v),
+    }
+}
+
+/// Split on commas not nested inside brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_shape() {
+        let v = parse(
+            r#"
+# experiment config
+name = "table1_topk"
+steps = 500          # inline comment
+
+[scheme]
+quantizer = "topk"
+k_frac = 1.5e-2
+ef = false
+beta = 0.99
+
+[data]
+classes = 10
+noise = 0.5
+sizes = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("name").unwrap().as_str().unwrap(), "table1_topk");
+        assert_eq!(v.get("steps").unwrap().as_int().unwrap(), 500);
+        assert_eq!(v.get_path("scheme.quantizer").unwrap().as_str().unwrap(), "topk");
+        assert!((v.get_path("scheme.k_frac").unwrap().as_f64().unwrap() - 0.015).abs() < 1e-9);
+        assert!(!v.get_path("scheme.ef").unwrap().as_bool().unwrap());
+        let sizes = v.get_path("data.sizes").unwrap().as_array().unwrap();
+        assert_eq!(sizes.len(), 3);
+    }
+
+    #[test]
+    fn dotted_headers() {
+        let v = parse("[a.b]\nx = 1\n[a.c]\ny = 2").unwrap();
+        assert_eq!(v.get_path("a.b.x").unwrap().as_int().unwrap(), 1);
+        assert_eq!(v.get_path("a.c.y").unwrap().as_int().unwrap(), 2);
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let v = parse(r#"s = "a#b\"c""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a#b\"c");
+    }
+
+    #[test]
+    fn rejects_bare_words_and_bad_lines() {
+        assert!(parse("x = hello").is_err());
+        assert!(parse("just a line").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let m = v.get("m").unwrap().as_array().unwrap();
+        assert_eq!(m[1].as_array().unwrap()[0].as_int().unwrap(), 3);
+    }
+}

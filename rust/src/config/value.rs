@@ -1,0 +1,170 @@
+//! Dynamic value tree shared by the JSON and TOML parsers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            Value::Float(f) if f.fract() == 0.0 => Ok(*f as i64),
+            _ => bail!("expected int, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_int()?;
+        anyhow::ensure!(i >= 0, "expected non-negative int, got {i}");
+        Ok(i as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        Ok(self.as_f64()? as f32)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_table(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Ok(t),
+            _ => bail!("expected table, got {self:?}"),
+        }
+    }
+
+    /// Table lookup with a path-aware error.
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        self.as_table()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing key {key:?}"))
+    }
+
+    /// Optional table lookup.
+    pub fn opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup ("scheme.quantizer").
+    pub fn get_path(&self, path: &str) -> Result<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Ok(cur)
+    }
+
+    /// Dotted-path insert, creating intermediate tables (CLI overrides).
+    pub fn set_path(&mut self, path: &str, v: Value) -> Result<()> {
+        let parts: Vec<&str> = path.split('.').collect();
+        let mut cur = self;
+        for (i, part) in parts.iter().enumerate() {
+            let table = match cur {
+                Value::Table(t) => t,
+                _ => bail!("set_path: {part:?} parent is not a table"),
+            };
+            if i == parts.len() - 1 {
+                table.insert(part.to_string(), v);
+                return Ok(());
+            }
+            cur = table
+                .entry(part.to_string())
+                .or_insert_with(|| Value::Table(BTreeMap::new()));
+        }
+        unreachable!()
+    }
+
+    pub fn table() -> Value {
+        Value::Table(BTreeMap::new())
+    }
+}
+
+/// Parse a CLI scalar ("1.5", "true", "text") into the closest Value type.
+pub fn parse_scalar(s: &str) -> Value {
+    match s {
+        "true" => return Value::Bool(true),
+        "false" => return Value::Bool(false),
+        "null" => return Value::Null,
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Value::Int(i);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Value::Float(f);
+    }
+    Value::Str(s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(Value::Int(3).as_f64().unwrap(), 3.0);
+        assert_eq!(Value::Float(4.0).as_int().unwrap(), 4);
+        assert!(Value::Float(4.5).as_int().is_err());
+        assert!(Value::Str("x".into()).as_bool().is_err());
+        assert!(Value::Int(-1).as_usize().is_err());
+    }
+
+    #[test]
+    fn path_get_set() {
+        let mut v = Value::table();
+        v.set_path("a.b.c", Value::Int(7)).unwrap();
+        assert_eq!(v.get_path("a.b.c").unwrap(), &Value::Int(7));
+        assert!(v.get_path("a.x").is_err());
+        v.set_path("a.b.c", Value::Int(9)).unwrap();
+        assert_eq!(v.get_path("a.b.c").unwrap(), &Value::Int(9));
+    }
+
+    #[test]
+    fn scalar_parsing() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("4.5"), Value::Float(4.5));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("hello"), Value::Str("hello".into()));
+    }
+}

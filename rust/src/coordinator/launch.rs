@@ -1,0 +1,190 @@
+//! Single-process launcher: datasets + channel fabric + one thread per
+//! worker + the master inline. TCP deployments use the same Worker/Master
+//! loops over `comm::tcp` endpoints (see cli::master_serve / worker_connect).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::comm::channel_fabric;
+use crate::config::ExperimentConfig;
+use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
+use crate::metrics::RunPoint;
+use crate::model::{Manifest, ModelKind};
+use crate::runtime::Runtime;
+use crate::util::timer::PhaseTimes;
+
+use super::master::{MasterLoop, MasterSpec};
+use super::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
+
+/// Aggregated result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub points: Vec<RunPoint>,
+    pub final_test_acc: f64,
+    pub final_test_loss: f64,
+    pub bits_per_component: f64,
+    pub compression_ratio: f64,
+    pub simulated_comm_secs: f64,
+    pub worker_phases: PhaseTimes,
+    /// per-round mean over workers of (1/d)‖e_t‖²
+    pub e_mse_trace: Vec<f64>,
+    /// per-round mean over workers of ‖u_t‖²
+    pub u_norm_trace: Vec<f64>,
+    pub workers: Vec<WorkerSummary>,
+}
+
+impl TrainReport {
+    /// Mean per-iteration worker compute time split by phase — Fig. 1's bars.
+    pub fn phase_means(&self) -> Vec<(String, f64)> {
+        ["gradient", "compress", "encode", "apply"]
+            .iter()
+            .map(|p| (p.to_string(), self.worker_phases.mean(p)))
+            .collect()
+    }
+}
+
+/// Build the training dataset for a model kind.
+pub fn build_dataset(
+    kind: ModelKind,
+    entry: &crate::model::ModelEntry,
+    cfg: &ExperimentConfig,
+) -> Arc<dyn Dataset> {
+    match kind {
+        ModelKind::Classifier => Arc::new(SynthImages::new(
+            entry.classes.max(2),
+            cfg.train_len,
+            cfg.test_len,
+            cfg.seed,
+            cfg.noise,
+        )),
+        ModelKind::Lm => Arc::new(MarkovCorpus::new(
+            entry.vocab,
+            entry.seq,
+            cfg.train_len,
+            cfg.seed,
+        )),
+    }
+}
+
+/// Run a full experiment in-process: n worker threads + the master on the
+/// calling thread. Deterministic given cfg.seed.
+pub fn run_training(cfg: &ExperimentConfig) -> Result<TrainReport> {
+    let manifest = Manifest::load_default()?;
+    run_training_with_manifest(cfg, &manifest)
+}
+
+pub fn run_training_with_manifest(
+    cfg: &ExperimentConfig,
+    manifest: &Manifest,
+) -> Result<TrainReport> {
+    cfg.validate()?;
+    let entry = manifest.model(&cfg.model)?.clone();
+    let d = entry.d;
+    let scheme = cfg.scheme.to_cfg(d)?;
+    let dataset = build_dataset(entry.kind, &entry, cfg);
+    let schedule = cfg.schedule();
+
+    let (master_tx, workers_tx) = channel_fabric(cfg.workers);
+
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: cfg.model.clone(),
+            scheme: scheme.clone(),
+            backend: cfg.backend,
+            schedule,
+            steps: cfg.steps,
+            seed: cfg.seed,
+            clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
+        };
+        let shard = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
+        let dataset = Arc::clone(&dataset);
+        let manifest = manifest.clone();
+        handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
+            // PJRT objects are !Send: each worker builds its own runtime
+            let runtime = Runtime::new(manifest)?;
+            WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: cfg.model.clone(),
+        scheme: scheme.clone(),
+        schedule,
+        steps: cfg.steps,
+        eval_every: cfg.eval_every,
+        eval_batches: cfg.eval_batches,
+        seed: cfg.seed,
+        samples_per_round: entry.batch * cfg.workers,
+        train_len: cfg.train_len,
+        data_noise: cfg.noise,
+    };
+    let master_runtime = Runtime::new(manifest.clone())?;
+    let master_result = MasterLoop::new(master_spec, master_tx)
+        .run(&master_runtime)
+        .context("master loop");
+
+    // Join workers FIRST: if one of them failed, its error (e.g. "loss
+    // diverged") is the root cause — the master only sees a hung channel.
+    let mut summaries = Vec::with_capacity(cfg.workers);
+    let mut worker_errors = Vec::new();
+    for (wid, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Err(_) => worker_errors.push(anyhow::anyhow!("worker {wid} panicked")),
+            Ok(Err(e)) => worker_errors.push(e.context(format!("worker {wid} failed"))),
+            Ok(Ok(s)) => summaries.push(s),
+        }
+    }
+    // Prefer a substantive worker error (e.g. "loss diverged") over
+    // secondary hung-up-channel errors on either side.
+    if let Some(pos) = worker_errors
+        .iter()
+        .position(|e| !format!("{e:#}").contains("hung up"))
+    {
+        return Err(worker_errors.swap_remove(pos));
+    }
+    let report = match master_result {
+        Ok(r) => r,
+        Err(e) => {
+            return Err(match worker_errors.into_iter().next() {
+                Some(we) => we.context(format!("master: {e:#}")),
+                None => e,
+            })
+        }
+    };
+
+    // merge per-worker traces and phase times
+    let mut phases = PhaseTimes::new();
+    let steps = cfg.steps as usize;
+    let mut e_mse_trace = vec![0.0f64; steps];
+    let mut u_norm_trace = vec![0.0f64; steps];
+    for s in &summaries {
+        phases.merge(&s.phases);
+        for (t, &v) in s.e_mse_trace.iter().enumerate() {
+            e_mse_trace[t] += v / cfg.workers as f64;
+        }
+        for (t, &v) in s.u_norm_trace.iter().enumerate() {
+            u_norm_trace[t] += v / cfg.workers as f64;
+        }
+    }
+    let mut points = report.points;
+    for p in points.iter_mut() {
+        let idx = (p.step as usize).min(steps) - 1;
+        p.e_mse = e_mse_trace[idx];
+    }
+
+    Ok(TrainReport {
+        points,
+        final_test_acc: report.final_test_acc,
+        final_test_loss: report.final_test_loss,
+        bits_per_component: report.comm.bits_per_component(),
+        compression_ratio: report.comm.compression_ratio(),
+        simulated_comm_secs: report.comm.simulated_comm_secs(),
+        worker_phases: phases,
+        e_mse_trace,
+        u_norm_trace,
+        workers: summaries,
+    })
+}

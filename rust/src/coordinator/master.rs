@@ -1,0 +1,199 @@
+//! Master-side loop.
+//!
+//! Owns: the canonical parameter vector, one decode-and-predict chain per
+//! worker (paper Sec. IV-C: "the master operates a separate
+//! decoding-and-prediction chain composed of a D, a P, and a delay block"),
+//! the LR schedule, rate accounting and periodic evaluation.
+
+use anyhow::{Context, Result};
+
+use crate::coding::decode_payload;
+use crate::comm::{Frame, MasterTransport};
+use crate::compress::{MasterChain, SchemeCfg};
+use crate::data::{Batch, MarkovCorpus, SynthImages};
+use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
+use crate::model::ModelKind;
+use crate::optim::LrSchedule;
+use crate::runtime::{ModelExec, Runtime};
+use crate::util::Timer;
+
+/// Master configuration (plain data).
+#[derive(Clone, Debug)]
+pub struct MasterSpec {
+    pub model: String,
+    pub scheme: SchemeCfg,
+    pub schedule: LrSchedule,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// samples consumed per round across all workers (epoch bookkeeping)
+    pub samples_per_round: usize,
+    pub train_len: usize,
+    pub data_noise: f32,
+}
+
+/// Held-out evaluation stream (kind matches the model).
+pub enum TestStream {
+    Images(SynthImages),
+    Tokens(MarkovCorpus),
+}
+
+impl TestStream {
+    pub fn for_model(entry: &crate::model::ModelEntry, spec: &MasterSpec) -> Self {
+        match entry.kind {
+            ModelKind::Classifier => TestStream::Images(SynthImages::new(
+                entry.classes.max(2),
+                spec.train_len,
+                4096,
+                spec.seed,
+                spec.data_noise,
+            )),
+            ModelKind::Lm => TestStream::Tokens(MarkovCorpus::new(
+                entry.vocab,
+                entry.seq,
+                spec.train_len,
+                spec.seed,
+            )),
+        }
+    }
+
+    /// Deterministic held-out batch #i for the given model geometry.
+    pub fn batch(&self, entry: &crate::model::ModelEntry, i: usize, salt: u64) -> Batch {
+        let b = entry.batch;
+        let start = (salt as usize).wrapping_mul(7919).wrapping_add(i * b);
+        match self {
+            TestStream::Images(ds) => ds.test_batch(start, b),
+            TestStream::Tokens(ds) => {
+                // windows beyond train_len are never visited by shards
+                let base = ds.train_len + (start % 1_000_000);
+                let mut x = vec![0i32; b * entry.seq];
+                let mut y = vec![0i32; b * entry.seq];
+                for row in 0..b {
+                    ds.window(
+                        base + row,
+                        &mut x[row * entry.seq..(row + 1) * entry.seq],
+                        &mut y[row * entry.seq..(row + 1) * entry.seq],
+                    );
+                }
+                Batch::Tokens { x, y, batch: b }
+            }
+        }
+    }
+}
+
+/// Everything the master measured during a run.
+#[derive(Clone, Debug)]
+pub struct MasterReport {
+    pub points: Vec<RunPoint>,
+    pub comm: CommStats,
+    pub final_test_acc: f64,
+    pub final_test_loss: f64,
+    pub final_w_norm: f64,
+}
+
+/// Master loop: drives `steps` synchronous rounds over the transport.
+pub struct MasterLoop<T: MasterTransport> {
+    spec: MasterSpec,
+    transport: T,
+}
+
+impl<T: MasterTransport> MasterLoop<T> {
+    pub fn new(spec: MasterSpec, transport: T) -> Self {
+        Self { spec, transport }
+    }
+
+    pub fn run(mut self, runtime: &Runtime) -> Result<MasterReport> {
+        let spec = self.spec.clone();
+        let n = self.transport.n_workers();
+        let model = ModelExec::load(runtime, &spec.model).context("master: load model")?;
+        let d = model.entry.d;
+        let mut w = runtime.manifest.load_init(&model.entry)?;
+        let test = TestStream::for_model(&model.entry, &spec);
+
+        let mut chains: Vec<MasterChain> =
+            (0..n).map(|_| MasterChain::new(&spec.scheme, d)).collect();
+        let payload_kind = spec.scheme.payload_kind();
+        let mut comm = CommStats::new(d);
+        let mut train_loss = LossMeter::new();
+        let mut points = Vec::new();
+        let wall = Timer::start();
+
+        let mut utilde = Vec::with_capacity(d);
+        let mut rtilde = vec![0.0f32; d];
+        let mut agg = vec![0.0f32; d];
+
+        for t in 0..spec.steps {
+            let frames = self.transport.recv_updates()?;
+            anyhow::ensure!(frames.len() == n, "round {t}: missing updates");
+            agg.iter_mut().for_each(|x| *x = 0.0);
+            for frame in &frames {
+                anyhow::ensure!(frame.round == t, "round skew: {} vs {t}", frame.round);
+                let wid = frame.worker as usize;
+                anyhow::ensure!(wid < n, "bad worker id {wid}");
+                comm.record_message(frame.payload_bits);
+                train_loss.push(frame.loss as f64);
+                let payload = frame.as_payload();
+                decode_payload(payload_kind, &payload, d, t, &mut utilde)
+                    .with_context(|| format!("round {t}: decode worker {wid}"))?;
+                chains[wid].receive(&utilde, &mut rtilde);
+                let scale = 1.0 / n as f32;
+                for i in 0..d {
+                    agg[i] += scale * rtilde[i];
+                }
+            }
+
+            // broadcast the averaged r̃; workers (and we) apply w -= η·agg
+            self.transport.broadcast(&Frame::broadcast(t, &agg))?;
+            let lr = spec.schedule.lr_at(t);
+            for i in 0..d {
+                w[i] -= lr * agg[i];
+            }
+
+            if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
+                let (test_loss, test_acc) =
+                    evaluate(&model, &w, &test, spec.eval_batches, t)?;
+                points.push(RunPoint {
+                    step: t + 1,
+                    epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
+                        / spec.train_len.max(1) as f64,
+                    train_loss: train_loss.smoothed(),
+                    test_loss,
+                    test_acc,
+                    bits_per_component: comm.bits_per_component(),
+                    e_mse: 0.0, // filled from worker traces by launch glue
+                    wall_secs: wall.elapsed_secs(),
+                });
+            }
+        }
+
+        let (final_test_loss, final_test_acc) =
+            evaluate(&model, &w, &test, (spec.eval_batches * 4).max(8), spec.steps)?;
+        Ok(MasterReport {
+            points,
+            comm,
+            final_test_acc,
+            final_test_loss,
+            final_w_norm: crate::tensor::norm2(&w),
+        })
+    }
+}
+
+/// Mean loss / accuracy over `batches` held-out batches.
+pub fn evaluate(
+    model: &ModelExec,
+    w: &[f32],
+    test: &TestStream,
+    batches: usize,
+    salt: u64,
+) -> Result<(f64, f64)> {
+    let mut loss_sum = 0.0;
+    let mut acc = AccuracyMeter::new();
+    for i in 0..batches.max(1) {
+        let batch = test.batch(&model.entry, i, salt);
+        let (l, ncorr) = model.evaluate(w, &batch)?;
+        loss_sum += l;
+        acc.push(ncorr, model.eval_denominator());
+    }
+    Ok((loss_sum / batches.max(1) as f64, acc.accuracy()))
+}

@@ -1,0 +1,18 @@
+//! The distributed training coordinator — the paper's system (Fig. 2) as a
+//! master + n-worker synchronous-round machine.
+//!
+//! * [`worker`] — per-worker loop: shard → PJRT fwd/bwd → compression
+//!   pipeline (pure-Rust or HLO backend) → entropy encode → send; receive
+//!   broadcast → apply parameter update.
+//! * [`master`] — per-worker decode-and-predict chains, aggregation,
+//!   broadcast, LR schedule, evaluation, rate accounting.
+//! * [`launch`] — wires datasets, the channel fabric and threads together
+//!   for single-process runs; TCP deployment reuses the same loops.
+
+pub mod launch;
+pub mod master;
+pub mod worker;
+
+pub use launch::{run_training, TrainReport};
+pub use master::MasterLoop;
+pub use worker::{WorkerLoop, WorkerSummary};

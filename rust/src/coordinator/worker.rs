@@ -1,0 +1,178 @@
+//! Worker-side loop.
+//!
+//! Owns: a data shard, a thread-confined PJRT runtime (model fwd/bwd and,
+//! for the HLO backend, the compress artifact), the Eq.-(1) pipeline state,
+//! and its replica of the parameter vector. Per round:
+//!
+//! 1. fetch a batch from the shard
+//! 2. (loss, g) = PJRT fwd/bwd                         [phase "gradient"]
+//! 3. pipeline step (momentum/EF/predict/quantize)     [phase "compress"]
+//! 4. entropy-encode ũ and send to the master          [phase "encode"]
+//! 5. receive the averaged r̃ broadcast, apply w-update [phase "apply"]
+//!
+//! Phases 2-4 are what the paper's Fig. 1 times per iteration.
+
+use anyhow::{Context, Result};
+
+use crate::coding::encode_payload;
+use crate::comm::{Frame, WorkerTransport};
+use crate::compress::{SchemeCfg, WorkerPipeline};
+use crate::config::experiment::Backend;
+use crate::data::{Batch, Dataset, Shard};
+use crate::optim::LrSchedule;
+use crate::runtime::{CompressExec, ModelExec, Runtime};
+use crate::util::timer::{PhaseTimes, Timer};
+
+/// What a worker thread returns when the run completes.
+#[derive(Clone, Debug)]
+pub struct WorkerSummary {
+    pub worker_id: u32,
+    pub rounds: u64,
+    pub phases: PhaseTimes,
+    pub mean_loss_last_quarter: f64,
+    /// trace of per-round (1/d)‖e_t‖² (Fig. 5 / Fig. 8 right panel)
+    pub e_mse_trace: Vec<f64>,
+    /// trace of ‖u_t‖² (prediction-effect diagnostics)
+    pub u_norm_trace: Vec<f64>,
+}
+
+/// Worker configuration (plain data; crosses the thread boundary).
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    pub worker_id: u32,
+    pub model: String,
+    pub scheme: SchemeCfg,
+    pub backend: Backend,
+    pub schedule: LrSchedule,
+    pub steps: u64,
+    pub seed: u64,
+    /// Clip the gradient to this global l2 norm before Eq. (1a) (None = off).
+    pub clip_norm: Option<f32>,
+}
+
+/// The worker loop body. Generic over transport so channel and TCP runs
+/// share the exact same code path.
+pub struct WorkerLoop<T: WorkerTransport> {
+    spec: WorkerSpec,
+    transport: T,
+    shard: Shard,
+    dataset: std::sync::Arc<dyn Dataset>,
+}
+
+impl<T: WorkerTransport> WorkerLoop<T> {
+    pub fn new(
+        spec: WorkerSpec,
+        transport: T,
+        shard: Shard,
+        dataset: std::sync::Arc<dyn Dataset>,
+    ) -> Self {
+        Self { spec, transport, shard, dataset }
+    }
+
+    /// Run `steps` synchronous rounds. Creates the PJRT runtime inside the
+    /// calling thread (PJRT objects are not Send).
+    pub fn run(mut self, runtime: &Runtime) -> Result<WorkerSummary> {
+        let spec = self.spec.clone();
+        let model = ModelExec::load(runtime, &spec.model)
+            .with_context(|| format!("worker {}: load model", spec.worker_id))?;
+        let d = model.entry.d;
+        let mut w = runtime.manifest.load_init(&model.entry)?;
+        let mut pipeline = WorkerPipeline::new(spec.scheme.clone(), d);
+        let hlo_backend = match spec.backend {
+            Backend::Rust => None,
+            Backend::Hlo => Some(CompressExec::for_pipeline(runtime, &pipeline)?),
+        };
+        let payload_kind = spec.scheme.payload_kind();
+
+        let mut phases = PhaseTimes::new();
+        let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
+        let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
+        let mut losses = Vec::with_capacity(spec.steps as usize);
+        let mut update = vec![0.0f32; d];
+
+        for t in 0..spec.steps {
+            // 1-2. gradient
+            let indices = self.shard.next_indices();
+            let batch: Batch = self.dataset.batch(&indices);
+            let timer = Timer::start();
+            let (loss, mut g) = model.fwdbwd(&w, &batch)?;
+            phases.add("gradient", timer.elapsed_secs());
+            if let Some(max_norm) = spec.clip_norm {
+                let norm = crate::tensor::norm2(&g) as f32;
+                if norm > max_norm {
+                    crate::tensor::scale(&mut g, max_norm / norm);
+                }
+            }
+            anyhow::ensure!(
+                loss.is_finite(),
+                "worker {}: loss diverged (non-finite) at round {t} — lower the \
+                 learning rate or add warmup",
+                spec.worker_id
+            );
+            losses.push(loss);
+
+            // 3. compression pipeline (Eq. (1))
+            let lr_ratio = lr_ratio(&spec.schedule, t);
+            let timer = Timer::start();
+            let stats = match &hlo_backend {
+                Some(exec) => exec.step(&mut pipeline, &g, lr_ratio)?,
+                None => pipeline.step(&g, lr_ratio),
+            };
+            phases.add("compress", timer.elapsed_secs());
+            e_mse_trace.push(stats.e_mse);
+            u_norm_trace.push(stats.u_norm_sq);
+
+            // 4. encode + send
+            let timer = Timer::start();
+            let payload = encode_payload(payload_kind, pipeline.utilde(), t);
+            phases.add("encode", timer.elapsed_secs());
+            self.transport
+                .send_update(Frame::update(spec.worker_id, t, payload, loss as f32))?;
+
+            // 5. receive averaged r̃, apply update
+            let frame = self.transport.recv_broadcast()?;
+            let timer = Timer::start();
+            let avg = frame.broadcast_f32(d)?;
+            let lr = spec.schedule.lr_at(t);
+            for i in 0..d {
+                update[i] = avg[i];
+                w[i] -= lr * update[i];
+            }
+            phases.add("apply", timer.elapsed_secs());
+        }
+
+        let q = (losses.len() / 4).max(1);
+        let tail = &losses[losses.len() - q..];
+        Ok(WorkerSummary {
+            worker_id: spec.worker_id,
+            rounds: spec.steps,
+            phases,
+            mean_loss_last_quarter: tail.iter().sum::<f64>() / tail.len() as f64,
+            e_mse_trace,
+            u_norm_trace,
+        })
+    }
+}
+
+/// η_{t-1}/η_t with the paper's η_{-1} = 0 convention.
+pub fn lr_ratio(schedule: &LrSchedule, t: u64) -> f32 {
+    if t == 0 {
+        0.0
+    } else {
+        schedule.lr_at(t - 1) / schedule.lr_at(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_ratio_convention() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(lr_ratio(&s, 0), 0.0);
+        assert_eq!(lr_ratio(&s, 5), 1.0);
+        let dec = LrSchedule::step_decay(1.0, 0.1, 10);
+        assert!((lr_ratio(&dec, 10) - 10.0).abs() < 1e-4);
+    }
+}

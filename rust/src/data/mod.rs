@@ -1,0 +1,53 @@
+//! Datasets: the paper's ImageNet-32 is substituted (see DESIGN.md §4) by a
+//! deterministic synthetic 32×32×3 classification set with Gaussian class
+//! prototypes, and the LM example trains on a seeded Markov-chain corpus.
+//! Both are index-addressable (sample i is a pure function of (seed, i)), so
+//! sharding across workers is exact and reproducible — the property the
+//! paper gets from partitioning ImageNet into n equal training sets.
+
+pub mod markov_text;
+pub mod shard;
+pub mod synth_images;
+
+pub use markov_text::MarkovCorpus;
+pub use shard::Shard;
+pub use synth_images::SynthImages;
+
+/// A batch in the layout the PJRT model artifacts expect.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// Images: x = f32[batch * in_dim] row-major, y = i32[batch].
+    Image { x: Vec<f32>, y: Vec<i32>, batch: usize },
+    /// LM: tokens/targets = i32[batch * seq] row-major.
+    Tokens { x: Vec<i32>, y: Vec<i32>, batch: usize },
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        match self {
+            Batch::Image { batch, .. } | Batch::Tokens { batch, .. } => *batch,
+        }
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        match self {
+            Batch::Image { y, .. } | Batch::Tokens { y, .. } => y,
+        }
+    }
+}
+
+/// Anything that can produce the i-th sample of a deterministic stream.
+pub trait Dataset: Send + Sync {
+    /// Number of distinct training samples (indices wrap beyond this).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble a batch from explicit sample indices.
+    fn batch(&self, indices: &[usize]) -> Batch;
+
+    /// Label count (classes or vocab) — for accuracy normalization.
+    fn label_space(&self) -> usize;
+}

@@ -1,0 +1,144 @@
+//! Worker data sharding.
+//!
+//! The paper partitions the training set into n equal parts (Sec. VI). We
+//! use strided assignment: worker w of n owns indices {w, w+n, w+2n, ...},
+//! and each epoch reshuffles the *visit order* of the shard deterministically
+//! from (seed, epoch) — every worker sees only its shard, every sample is
+//! visited once per epoch.
+
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub n_workers: usize,
+    pub dataset_len: usize,
+    pub batch: usize,
+    seed: u64,
+    epoch: u64,
+    order: Vec<usize>,
+    cursor: usize,
+}
+
+impl Shard {
+    pub fn new(worker: usize, n_workers: usize, dataset_len: usize, batch: usize, seed: u64) -> Self {
+        assert!(worker < n_workers, "worker {worker} >= n_workers {n_workers}");
+        assert!(batch > 0);
+        let mut s = Self {
+            worker,
+            n_workers,
+            dataset_len,
+            batch,
+            seed,
+            epoch: 0,
+            order: Vec::new(),
+            cursor: 0,
+        };
+        s.reshuffle();
+        s
+    }
+
+    /// Samples owned by this worker.
+    pub fn shard_len(&self) -> usize {
+        let d = self.dataset_len;
+        let (n, w) = (self.n_workers, self.worker);
+        if d == 0 {
+            0
+        } else {
+            (d - w + n - 1) / n
+        }
+    }
+
+    /// Batches per epoch (floor — ragged tails are dropped like the usual
+    /// drop_remainder=True input pipelines).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.shard_len() / self.batch
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn reshuffle(&mut self) {
+        self.order = (0..self.shard_len())
+            .map(|j| self.worker + j * self.n_workers)
+            .collect();
+        let mut rng = Pcg64::new(self.seed ^ (self.epoch.wrapping_mul(0x9E37)), self.worker as u64);
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next batch of sample indices; rolls the epoch when exhausted.
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        if self.cursor + self.batch > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shards_partition_dataset() {
+        let n = 4;
+        let len = 103;
+        let mut seen = HashSet::new();
+        let mut total = 0;
+        for w in 0..n {
+            let s = Shard::new(w, n, len, 1, 0);
+            total += s.shard_len();
+            for j in 0..s.shard_len() {
+                assert!(seen.insert(w + j * n));
+            }
+        }
+        assert_eq!(total, len);
+        assert_eq!(seen.len(), len);
+    }
+
+    #[test]
+    fn epoch_visits_each_sample_once() {
+        let mut s = Shard::new(1, 3, 30, 2, 7);
+        let mut seen = Vec::new();
+        for _ in 0..s.batches_per_epoch() {
+            seen.extend(s.next_indices());
+        }
+        seen.sort_unstable();
+        let expect: Vec<usize> = (0..10).map(|j| 1 + 3 * j).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn epoch_rolls_and_reshuffles() {
+        let mut s = Shard::new(0, 1, 16, 4, 3);
+        let mut first_epoch = Vec::new();
+        for _ in 0..4 {
+            first_epoch.push(s.next_indices());
+        }
+        assert_eq!(s.epoch(), 0);
+        let b = s.next_indices(); // rolls into epoch 1
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(b.len(), 4);
+        // ordering differs between epochs (with overwhelming probability)
+        let mut second_epoch = vec![b];
+        for _ in 0..3 {
+            second_epoch.push(s.next_indices());
+        }
+        assert_ne!(first_epoch, second_epoch);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Shard::new(2, 4, 100, 8, 11);
+        let mut b = Shard::new(2, 4, 100, 8, 11);
+        for _ in 0..10 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
+    }
+}

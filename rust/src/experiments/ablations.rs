@@ -1,0 +1,207 @@
+//! Design-choice ablations called out in DESIGN.md §4 (A1–A3).
+
+use anyhow::Result;
+
+use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use crate::metrics::CsvWriter;
+use crate::tensor;
+use crate::util::Pcg64;
+
+use super::common::{simulate_pipeline, GradStream};
+use super::ExpOptions;
+
+/// A1 — β sweep: how much does P_Lin shrink the quantizer-input energy as a
+/// function of the momentum bandwidth? (§III-B notes savings grow with β
+/// until over-smoothing hurts accuracy; the rate side is reproduced here.)
+pub fn beta_sweep(opts: &ExpOptions) -> Result<()> {
+    let d = if opts.smoke { 512 } else { 4096 };
+    let steps = if opts.smoke { 200 } else { 800 };
+    let betas = [0.5f32, 0.8, 0.9, 0.95, 0.99, 0.995];
+    let path = format!("{}/ablation_beta.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "beta,u_energy_nopred,u_energy_plin,gain")?;
+    println!("A1 — prediction gain vs beta (Sign quantizer, no EF, correlated stream)");
+    println!("{:>8} {:>14} {:>14} {:>8}", "beta", "E||u||² w/oP", "E||u||² w/P", "gain");
+    for &beta in &betas {
+        let mk = |pred| SchemeCfg::new(QuantizerKind::Sign, pred, false, beta).unwrap();
+        let mut s1 = GradStream::correlated(d, opts.seed + 7, 1.0, 0.5);
+        let mut s2 = GradStream::correlated(d, opts.seed + 7, 1.0, 0.5);
+        let skip = steps / 2;
+        let no_p: f64 = simulate_pipeline(mk(PredictorKind::Zero), &mut s1, steps)[skip..]
+            .iter()
+            .map(|s| s.u_norm_sq)
+            .sum::<f64>()
+            / skip as f64;
+        let with_p: f64 = simulate_pipeline(mk(PredictorKind::PLin), &mut s2, steps)[skip..]
+            .iter()
+            .map(|s| s.u_norm_sq)
+            .sum::<f64>()
+            / skip as f64;
+        let gain = no_p / with_p;
+        w.row(&format!("{beta},{no_p:.5e},{with_p:.5e},{gain:.3}"))?;
+        println!("{beta:>8} {no_p:>14.4e} {with_p:>14.4e} {gain:>8.2}");
+    }
+    w.flush()?;
+    println!("  csv: {path}");
+    Ok(())
+}
+
+/// A2 — blockwise vs whole-vector compression (§VI: "in all compression
+/// algorithms we use blockwise compression ... per tensor"). With
+/// heterogeneous per-block scales, whole-vector Top-K starves the
+/// small-scale blocks; blockwise Top-K spends the same budget per block and
+/// achieves lower *normalized* distortion on the starved blocks.
+pub fn blockwise(opts: &ExpOptions) -> Result<()> {
+    let blocks = 4usize;
+    let block_d = if opts.smoke { 256 } else { 2048 };
+    let d = blocks * block_d;
+    let k_total = d / 100;
+    let scales = [10.0f32, 1.0, 0.1, 0.01]; // tensor-like scale spread
+    let mut rng = Pcg64::new(opts.seed + 21, 0xAB);
+    let mut u = vec![0.0f32; d];
+    for b in 0..blocks {
+        for i in 0..block_d {
+            u[b * block_d + i] = scales[b] * rng.gaussian() as f32;
+        }
+    }
+    // whole-vector Top-K
+    let mut whole = vec![0.0f32; d];
+    QuantizerKind::TopK { k: k_total }.quantize(&u, &mut whole, 0);
+    // blockwise Top-(K/blocks)
+    let mut blockw = vec![0.0f32; d];
+    for b in 0..blocks {
+        let sl = &u[b * block_d..(b + 1) * block_d];
+        let mut out = vec![0.0f32; block_d];
+        QuantizerKind::TopK { k: k_total / blocks }.quantize(sl, &mut out, 0);
+        blockw[b * block_d..(b + 1) * block_d].copy_from_slice(&out);
+    }
+    let path = format!("{}/ablation_block.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "block,scale,kept_whole,kept_block,nmse_whole,nmse_block")?;
+    println!("A2 — blockwise vs whole-vector Top-K (d={d}, K={k_total}, 4 scale groups)");
+    println!("{:>6} {:>8} {:>11} {:>11} {:>12} {:>12}", "block", "scale", "kept(whole)", "kept(block)", "nMSE whole", "nMSE block");
+    let mut starved_any = false;
+    for b in 0..blocks {
+        let r = b * block_d..(b + 1) * block_d;
+        let kept_w = tensor::nnz(&whole[r.clone()]);
+        let kept_b = tensor::nnz(&blockw[r.clone()]);
+        let energy = tensor::norm2_sq(&u[r.clone()]).max(1e-30);
+        let nmse_w = u[r.clone()]
+            .iter()
+            .zip(&whole[r.clone()])
+            .map(|(&a, &q)| ((a - q) as f64).powi(2))
+            .sum::<f64>()
+            / energy;
+        let nmse_b = u[r.clone()]
+            .iter()
+            .zip(&blockw[r.clone()])
+            .map(|(&a, &q)| ((a - q) as f64).powi(2))
+            .sum::<f64>()
+            / energy;
+        if kept_w == 0 && kept_b > 0 {
+            starved_any = true;
+        }
+        w.row(&format!("{b},{},{kept_w},{kept_b},{nmse_w:.5},{nmse_b:.5}", scales[b]))?;
+        println!("{b:>6} {:>8} {kept_w:>11} {kept_b:>11} {nmse_w:>12.4} {nmse_b:>12.4}", scales[b]);
+    }
+    w.flush()?;
+    println!("  whole-vector starves small-scale blocks: {starved_any}");
+    println!("  csv: {path}");
+    Ok(())
+}
+
+/// A3 — App. A: momentum at the master accumulates quantization error.
+/// Compares ‖ṽ_t − v_t^{ideal}‖² when momentum is applied (i) at the worker
+/// (paper Fig. 2) vs (ii) at the master after quantization (paper Fig. 9,
+/// Eq. (13)/(15)).
+pub fn master_momentum(opts: &ExpOptions) -> Result<()> {
+    let d = if opts.smoke { 512 } else { 4096 };
+    let steps = if opts.smoke { 200 } else { 600 };
+    let beta = 0.99f32;
+    let k = d / 50;
+
+    // shared gradient stream
+    let mut rng = Pcg64::new(opts.seed + 31, 0x9);
+    let grads: Vec<Vec<f32>> = (0..steps)
+        .map(|_| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            g
+        })
+        .collect();
+
+    // ideal momentum (no compression)
+    let mut v_ideal = vec![0.0f32; d];
+    // (i) worker-side momentum then Top-K+EF (paper Fig. 2, P = zero)
+    let cfg = SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::Zero, true, beta)?;
+    let mut worker_pipe = WorkerPipeline::new(cfg, d);
+    // master's view under (i): r̃ = ũ (P zero)
+    // (ii) master-side momentum: worker quantizes raw g with EF; master
+    // applies the momentum filter to the decoded ũ
+    let q = QuantizerKind::TopK { k };
+    let mut e2 = vec![0.0f32; d];
+    let mut r2 = vec![0.0f32; d];
+    let mut ut2 = vec![0.0f32; d];
+    let mut v_master = vec![0.0f32; d];
+
+    let path = format!("{}/ablation_master_momentum.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "t,err_worker_side,err_master_side")?;
+    let (mut tail_worker, mut tail_master) = (0.0f64, 0.0f64);
+    for (t, g) in grads.iter().enumerate() {
+        // ideal
+        for i in 0..d {
+            v_ideal[i] = beta * v_ideal[i] + (1.0 - beta) * g[i];
+        }
+        // (i): the master receives r̃_t = ũ_t; its best momentum estimate IS
+        // r̃_t (worker already applied the filter). error = ||r̃ − v_ideal||²
+        worker_pipe.step(g, if t == 0 { 0.0 } else { 1.0 });
+        let err_worker: f64 = worker_pipe
+            .utilde()
+            .iter()
+            .zip(&v_ideal)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        // (ii): quantize g with EF, master filters ũ
+        for i in 0..d {
+            r2[i] = g[i] + e2[i];
+        }
+        q.quantize(&r2, &mut ut2, t as u64);
+        for i in 0..d {
+            e2[i] = r2[i] - ut2[i];
+            v_master[i] = beta * v_master[i] + (1.0 - beta) * ut2[i];
+        }
+        let err_master: f64 = v_master
+            .iter()
+            .zip(&v_ideal)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        w.row(&format!("{t},{err_worker:.6e},{err_master:.6e}"))?;
+        if t >= steps * 3 / 4 {
+            tail_worker += err_worker;
+            tail_master += err_master;
+        }
+    }
+    w.flush()?;
+    println!("A3 — momentum placement (App. A), d={d}, K={k}, beta={beta}");
+    println!("  tail mean ||ṽ − v_ideal||²: worker-side = {:.4e}, master-side = {:.4e}",
+             tail_worker / (steps as f64 / 4.0), tail_master / (steps as f64 / 4.0));
+    println!("  master-side/worker-side error ratio = {:.2} (paper: master-side accumulates error)",
+             tail_master / tail_worker.max(1e-30));
+    println!("  csv: {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_smoke_all() {
+        let opts = ExpOptions {
+            smoke: true,
+            out_dir: std::env::temp_dir().join("tempo_abl").to_string_lossy().into_owned(),
+            seed: 1,
+        };
+        beta_sweep(&opts).unwrap();
+        blockwise(&opts).unwrap();
+        master_momentum(&opts).unwrap();
+    }
+}

@@ -1,0 +1,62 @@
+//! Fig. 1 — average computation time per iteration at a worker, with and
+//! without prediction, for each quantizer (gradient + quantization +
+//! prediction phases; communication excluded, as in the paper).
+
+use anyhow::Result;
+
+use crate::metrics::CsvWriter;
+
+use super::common::{base_config, run_labeled, spec, spec_k};
+use super::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let beta = 0.99f32;
+    let pairs: Vec<(&str, crate::config::SchemeSpec)> = vec![
+        ("Top-K w/oP", spec_k("topk", "zero", false, beta, 0.05)),
+        ("Top-K w/P", spec_k("topk", "plin", false, beta, 0.05)),
+        ("Top-K-Q w/oP", spec_k("topkq", "zero", false, beta, 0.05)),
+        ("Top-K-Q w/P", spec_k("topkq", "plin", false, beta, 0.05)),
+        ("Scaled-sign w/oP", spec("sign", "zero", false, beta)),
+        ("Scaled-sign w/P", spec("sign", "plin", false, beta)),
+        ("EF Top-K w/oP", spec_k("topk", "zero", true, beta, 2.4e-3)),
+        ("EF Top-K w/Est-K", spec_k("topk", "estk", true, beta, 1.3e-3)),
+    ];
+
+    let path = format!("{}/fig1_timing.csv", opts.out_dir);
+    let mut w = CsvWriter::create(
+        &path,
+        "scheme,gradient_ms,compress_ms,encode_ms,total_ms,overhead_vs_gradient_pct",
+    )?;
+    println!("Fig. 1 — per-iteration worker compute time (ms), communication excluded");
+    println!("{:<20} {:>10} {:>10} {:>9} {:>9} {:>12}", "scheme", "gradient", "compress", "encode", "total", "pred overhd");
+    let mut rows = Vec::new();
+    for (label, s) in pairs {
+        let mut cfg = base_config(opts, "mlp_tiny");
+        cfg.steps = if opts.smoke { 4 } else { 100 };
+        cfg.eval_every = cfg.steps; // timing run: evaluate once
+        // single worker: the paper reports per-worker compute time, and on
+        // a 1-core host multi-worker threads contend and pollute the clock
+        cfg.workers = 1;
+        let run = run_labeled(label, cfg, s)?;
+        let ph = &run.report.worker_phases;
+        let (g, c, e) = (ph.mean("gradient") * 1e3, ph.mean("compress") * 1e3, ph.mean("encode") * 1e3);
+        rows.push((label.to_string(), g, c, e));
+    }
+    // overhead of prediction = time(w/P) − time(w/oP) per quantizer pair
+    for chunk in rows.chunks(2) {
+        if let [a, b] = chunk {
+            let ta = a.1 + a.2 + a.3;
+            let tb = b.1 + b.2 + b.3;
+            let over = (tb - ta) / ta * 100.0;
+            for (label, g, c, e) in [a, b] {
+                let total = g + c + e;
+                w.row(&format!("{label},{g:.3},{c:.3},{e:.3},{total:.3},{over:.1}"))?;
+                println!("{label:<20} {g:>10.3} {c:>10.3} {e:>9.3} {total:>9.3} {over:>11.1}%");
+            }
+        }
+    }
+    w.flush()?;
+    println!("  (paper: w/P only slightly higher than w/oP — prediction is cheap)");
+    println!("  csv: {path}");
+    Ok(())
+}

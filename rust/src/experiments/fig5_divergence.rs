@@ -1,0 +1,77 @@
+//! Fig. 5 — P_Lin with error-feedback diverges.
+//!
+//! Runs Top-K-Q + P_Lin on the same gradient stream with the EF switch open
+//! and closed, tracking ‖e_t‖² over the first iterations. The paper shows
+//! the EF curve growing unbounded while the no-EF curve stays flat
+//! (Eq. (7): the β e_{t-1} term re-enters the prediction error every step).
+
+use anyhow::Result;
+
+use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
+use crate::metrics::CsvWriter;
+
+use super::common::{simulate_pipeline, GradStream};
+use super::ExpOptions;
+
+pub struct DivergenceResult {
+    pub e_ef: Vec<f64>,
+    pub e_noef: Vec<f64>,
+}
+
+pub fn simulate(d: usize, k: usize, beta: f32, steps: usize, seed: u64) -> Result<DivergenceResult> {
+    let mk = |ef| {
+        SchemeCfg::new(QuantizerKind::TopKQ { k }, PredictorKind::PLin, ef, beta)
+    };
+    let mut s1 = GradStream::iid(d, seed);
+    let mut s2 = GradStream::iid(d, seed);
+    let ef = simulate_pipeline(mk(true)?, &mut s1, steps);
+    let noef = simulate_pipeline(mk(false)?, &mut s2, steps);
+    Ok(DivergenceResult {
+        e_ef: ef.iter().map(|s| s.e_norm_sq).collect(),
+        e_noef: noef.iter().map(|s| s.e_norm_sq).collect(),
+    })
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let (d, steps) = if opts.smoke { (256, 100) } else { (4096, 100) };
+    let k = (d as f64 * 0.02).round() as usize;
+    let beta = 0.99;
+    let r = simulate(d, k, beta, steps, opts.seed + 50)?;
+
+    let path = format!("{}/fig5_divergence.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "t,e_norm_sq_ef,e_norm_sq_noef")?;
+    for t in 0..steps {
+        w.row(&format!("{},{:.6e},{:.6e}", t, r.e_ef[t], r.e_noef[t]))?;
+    }
+    w.flush()?;
+
+    let early_ef: f64 = r.e_ef[5..15].iter().sum::<f64>() / 10.0;
+    let late_ef: f64 = r.e_ef[steps - 10..].iter().sum::<f64>() / 10.0;
+    let early_no: f64 = r.e_noef[5..15].iter().sum::<f64>() / 10.0;
+    let late_no: f64 = r.e_noef[steps - 10..].iter().sum::<f64>() / 10.0;
+    println!("Fig. 5 — ||e_t||^2 with P_Lin + Top-K-Q (d={d}, K={k}, beta={beta})");
+    println!("  with EF:    t∈[5,15) mean = {early_ef:.3e}   t∈[{},{}) mean = {late_ef:.3e}  (growth ×{:.1})",
+             steps - 10, steps, late_ef / early_ef);
+    println!("  without EF: t∈[5,15) mean = {early_no:.3e}   t∈[{},{}) mean = {late_no:.3e}  (growth ×{:.1})",
+             steps - 10, steps, late_no / early_no);
+    println!("  paper shape: EF curve grows unbounded, no-EF flat ✓={}",
+             late_ef / early_ef > 10.0 && late_no / early_no < 3.0);
+    println!("  traces: {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ef_diverges_noef_flat() {
+        let r = simulate(512, 10, 0.99, 100, 7).unwrap();
+        let early_ef: f64 = r.e_ef[5..15].iter().sum();
+        let late_ef: f64 = r.e_ef[90..].iter().sum();
+        let early_no: f64 = r.e_noef[5..15].iter().sum();
+        let late_no: f64 = r.e_noef[90..].iter().sum();
+        assert!(late_ef > 10.0 * early_ef, "{early_ef} -> {late_ef}");
+        assert!(late_no < 3.0 * early_no, "{early_no} -> {late_no}");
+    }
+}

@@ -1,0 +1,130 @@
+//! Fig. 6 — the §IV-B illustrative synthetic experiment.
+//!
+//! d = 1000, K = 0.01d, g_t i.i.d. N(0,1). Traces component 0 of
+//! (v_t, u_t, ũ_t, r̂_t) for (a) β=0.8 Top-K+EF no prediction,
+//! (b) β=0.995 Top-K+EF no prediction, (c) β=0.995 Top-K+EF with Est-K.
+//! The same gradient seed is used for all three (the paper notes v_t is
+//! identical between (b) and (c)).
+//!
+//! Quantitative shape checks printed: peak-spacing regularity (std/mean of
+//! inter-peak gaps) is much lower for β=0.995 than β=0.8, and Est-K roughly
+//! halves max|u[0]| vs no prediction.
+
+use anyhow::Result;
+
+use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use crate::metrics::CsvWriter;
+use crate::util::Pcg64;
+
+use super::ExpOptions;
+
+pub struct Trace {
+    pub label: String,
+    pub v: Vec<f32>,
+    pub u: Vec<f32>,
+    pub utilde: Vec<f32>,
+    pub rhat: Vec<f32>,
+}
+
+pub fn run_trace(beta: f32, predictor: PredictorKind, d: usize, k: usize, steps: usize, seed: u64, label: &str) -> Result<Trace> {
+    let cfg = SchemeCfg::new(QuantizerKind::TopK { k }, predictor, true, beta)?;
+    let mut pipe = WorkerPipeline::new(cfg, d);
+    let mut rng = Pcg64::new(seed, 0xF16);
+    let mut g = vec![0.0f32; d];
+    let mut tr = Trace {
+        label: label.to_string(),
+        v: Vec::with_capacity(steps),
+        u: Vec::with_capacity(steps),
+        utilde: Vec::with_capacity(steps),
+        rhat: Vec::with_capacity(steps),
+    };
+    for t in 0..steps {
+        rng.fill_gaussian(&mut g, 1.0);
+        tr.rhat.push(pipe.rhat()[0]);
+        pipe.step(&g, if t == 0 { 0.0 } else { 1.0 });
+        tr.v.push(pipe.momentum()[0]);
+        tr.u.push(pipe.quantizer_input()[0]);
+        tr.utilde.push(pipe.utilde()[0]);
+    }
+    Ok(tr)
+}
+
+/// Inter-peak gap regularity: std/mean of gaps between non-zero ũ[0].
+pub fn peak_gap_cv(utilde: &[f32]) -> f64 {
+    let peaks: Vec<usize> =
+        utilde.iter().enumerate().filter(|(_, &v)| v != 0.0).map(|(i, _)| i).collect();
+    if peaks.len() < 3 {
+        return f64::NAN;
+    }
+    let gaps: Vec<f64> = peaks.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+    var.sqrt() / mean
+}
+
+pub fn max_abs_tail(xs: &[f32], skip: usize) -> f32 {
+    xs.iter().skip(skip).fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let (d, steps) = if opts.smoke { (200, 150) } else { (1000, 1500) };
+    let k = (d / 100).max(1); // K = 0.01 d
+    let seed = opts.seed + 60;
+
+    let a = run_trace(0.8, PredictorKind::Zero, d, k, steps, seed, "a_beta0.8_topk")?;
+    let b = run_trace(0.995, PredictorKind::Zero, d, k, steps, seed, "b_beta0.995_topk")?;
+    let c = run_trace(0.995, PredictorKind::EstK, d, k, steps, seed, "c_beta0.995_estk")?;
+
+    // identical momentum sample paths for (b) and (c) — paper's note
+    assert_eq!(b.v, c.v, "v_t must be identical between (b) and (c)");
+
+    let path = format!("{}/fig6_traces.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "label,t,v0,u0,utilde0,rhat0")?;
+    for tr in [&a, &b, &c] {
+        for t in 0..tr.v.len() {
+            w.row(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6}",
+                tr.label, t, tr.v[t], tr.u[t], tr.utilde[t], tr.rhat[t]
+            ))?;
+        }
+    }
+    w.flush()?;
+
+    let skip = steps / 3;
+    let cv_a = peak_gap_cv(&a.utilde);
+    let cv_b = peak_gap_cv(&b.utilde);
+    let umax_b = max_abs_tail(&b.u, skip);
+    let umax_c = max_abs_tail(&c.u, skip);
+    println!("Fig. 6 synthetic experiment (d={d}, K={k}, {steps} iters)");
+    println!("  (a) beta=0.8   peak-gap CV = {cv_a:.3}");
+    println!("  (b) beta=0.995 peak-gap CV = {cv_b:.3}   (paper: large beta => regular peaks)");
+    println!("  (b) max|u[0]| tail = {umax_b:.4}");
+    println!("  (c) max|u[0]| tail = {umax_c:.4}   Est-K/Top-K ratio = {:.2} (paper: ~0.5)",
+             umax_c / umax_b);
+    println!("  traces: {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regular_peaks_at_large_beta_and_estk_shrinks_u() {
+        let d = 500;
+        let k = 5;
+        let steps = 1200;
+        let a = run_trace(0.8, PredictorKind::Zero, d, k, steps, 1, "a").unwrap();
+        let b = run_trace(0.995, PredictorKind::Zero, d, k, steps, 1, "b").unwrap();
+        let c = run_trace(0.995, PredictorKind::EstK, d, k, steps, 1, "c").unwrap();
+        assert_eq!(b.v, c.v);
+        let (cv_a, cv_b) = (peak_gap_cv(&a.utilde), peak_gap_cv(&b.utilde));
+        // may be NaN if component 0 never peaks at small beta — then the
+        // comparison is vacuous; require b to be meaningfully regular
+        if cv_a.is_finite() && cv_b.is_finite() {
+            assert!(cv_b < cv_a, "cv_b={cv_b} cv_a={cv_a}");
+        }
+        let (ub, uc) = (max_abs_tail(&b.u, steps / 3), max_abs_tail(&c.u, steps / 3));
+        assert!(uc < ub, "Est-K should shrink |u|: {uc} vs {ub}");
+    }
+}

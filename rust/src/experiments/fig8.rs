@@ -1,0 +1,71 @@
+//! Fig. 8 — loss curves and (1/d)‖e_t‖² with and without Est-K, β = 0.995.
+//!
+//! The paper trains ResNet-50 on full ImageNet for ~450k iterations here;
+//! our CPU budget allows ~600 rounds of the MLP classifier, so the K gap
+//! between Top-K visits (d/K) is kept comparable to the momentum time
+//! constant 1/(1−β) — the regime where the paper's "v_t changes slowly
+//! between peaks" assumption (Sec. IV-B) actually holds. The two target
+//! shapes: (i) the predicted run's loss tracks the baseline at equal rate,
+//! (ii) prediction cuts the mean squared quantization error (right panel).
+//! At the paper's 1000× longer horizon the MSE gap reaches ~2 orders of
+//! magnitude; at ours it is a smaller but systematic factor (EXPERIMENTS.md
+//! quantifies the deviation).
+
+use anyhow::Result;
+
+use crate::metrics::CsvWriter;
+
+use super::common::{base_config, run_labeled, spec, spec_k, write_curves_csv, NamedRun};
+use super::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let beta = 0.995f32;
+    let kf = 4.0e-3; // gap d/K ≈ 250 ≈ 1/(1−β) = 200
+    let schemes: Vec<(&str, crate::config::SchemeSpec)> = vec![
+        ("momentum-SGD", spec("none", "zero", false, beta)),
+        ("EF Top-K w/o Est-K", spec_k("topk", "zero", true, beta, kf)),
+        ("EF Top-K w/ Est-K", spec_k("topk", "estk", true, beta, kf)),
+    ];
+
+    println!("Fig. 8 — loss + quantization MSE, beta={beta}, K={kf}d");
+    let mut runs: Vec<NamedRun> = Vec::new();
+    for (label, s) in schemes {
+        let mut cfg = base_config(opts, "mlp_tiny");
+        if !opts.smoke {
+            cfg.steps = 600;
+            cfg.eval_every = 60;
+        }
+        runs.push(run_labeled(label, cfg, s)?);
+    }
+    write_curves_csv(&format!("{}/fig8_curves.csv", opts.out_dir), &runs)?;
+
+    // right panel: e_mse traces
+    let path = format!("{}/fig8_emse.csv", opts.out_dir);
+    let mut w = CsvWriter::create(&path, "label,t,e_mse")?;
+    for r in &runs[1..] {
+        for (t, &v) in r.report.e_mse_trace.iter().enumerate() {
+            w.row(&format!("{},{},{:.8e}", r.label, t, v))?;
+        }
+    }
+    w.flush()?;
+
+    let tail = |r: &NamedRun| {
+        let tr = &r.report.e_mse_trace;
+        let q = (tr.len() / 4).max(1);
+        tr[tr.len() - q..].iter().sum::<f64>() / q as f64
+    };
+    let mse_plain = tail(&runs[1]);
+    let mse_estk = tail(&runs[2]);
+    println!("\ntail (1/d)||e_t||²: w/o Est-K = {mse_plain:.4e}, w/ Est-K = {mse_estk:.4e}  (reduction ×{:.2})",
+             mse_plain / mse_estk.max(1e-30));
+    println!("final test loss: baseline={:.4} w/o EstK={:.4} w/ EstK={:.4}",
+             runs[0].report.final_test_loss,
+             runs[1].report.final_test_loss,
+             runs[2].report.final_test_loss);
+    println!("final test acc:  baseline={:.3} w/o EstK={:.3} w/ EstK={:.3}",
+             runs[0].report.final_test_acc,
+             runs[1].report.final_test_acc,
+             runs[2].report.final_test_acc);
+    println!("  csv: {path}");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//!
+//! Every driver supports a `smoke` mode (tiny steps/dims, used by tests)
+//! and a full mode whose output is recorded in EXPERIMENTS.md. Drivers
+//! print the paper's rows/series to stdout and write CSVs under `out/`.
+
+pub mod ablations;
+pub mod common;
+pub mod fig1_timing;
+pub mod fig3;
+pub mod fig5_divergence;
+pub mod fig6_synthetic;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod theorem1;
+
+use anyhow::Result;
+
+/// Shared options for experiment drivers.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Tiny configuration for CI/tests.
+    pub smoke: bool,
+    /// Output directory for CSVs.
+    pub out_dir: String,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self { smoke: false, out_dir: "results".into(), seed: 0 }
+    }
+}
+
+/// Dispatch by experiment id.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "table1" => table1::run(opts),
+        "fig1" => fig1_timing::run(opts),
+        "fig3" => fig3::run(opts, fig3::Variant::Fig3),
+        "fig4" => fig3::run(opts, fig3::Variant::Fig4),
+        "fig5" => fig5_divergence::run(opts),
+        "fig6" => fig6_synthetic::run(opts),
+        "fig7" => fig7::run(opts),
+        "fig8" => fig8::run(opts),
+        "theorem1" => theorem1::run(opts),
+        "ablation-beta" => ablations::beta_sweep(opts),
+        "ablation-block" => ablations::blockwise(opts),
+        "ablation-master" => ablations::master_momentum(opts),
+        "all" => {
+            for id in [
+                "fig6", "fig5", "theorem1", "fig1", "fig3", "fig4", "fig7", "fig8", "table1",
+                "ablation-beta", "ablation-block", "ablation-master",
+            ] {
+                println!("\n════════ experiment {id} ════════");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!("unknown experiment {id:?} — see `tempo help`"),
+    }
+}

@@ -1,0 +1,45 @@
+//! # tempo — temporal-correlation gradient compression for momentum-SGD
+//!
+//! A three-layer (Rust coordinator + JAX graphs + Pallas kernels, AOT via
+//! PJRT) reproduction of Adikari & Draper, *"Compressing gradients by
+//! exploiting temporal correlation in momentum-SGD"*, IEEE JSAIT 2021.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — RNG (PCG64 / SplitMix64), statistics, timers.
+//! * [`tensor`] — flat f32 vector kernels used on the coordinator hot path.
+//! * [`coding`] — bit-level entropy coding (Golomb–Rice, Elias, sign-pack)
+//!   and the per-quantizer wire payload formats.
+//! * [`compress`] — the paper's algorithms: quantizers (Top-K, Top-K-Q,
+//!   Scaled-sign, Rand-K), predictors (P_Lin, Est-K), error-feedback, and
+//!   the full Fig.-2 worker pipeline.
+//! * [`optim`] — LR schedules and the parameter update rule.
+//! * [`data`] — synthetic ImageNet-32 stand-in + Markov text corpus.
+//! * [`config`] — TOML-subset/JSON parsers and typed experiment configs.
+//! * [`model`] — the artifact-backed model zoo (reads artifacts/manifest.json).
+//! * [`runtime`] — PJRT client wrapper: load HLO text, compile, execute.
+//! * [`comm`] — transports (in-process channels, TCP) with byte accounting
+//!   and a simulated network cost model.
+//! * [`coordinator`] — master/worker round loop (the paper's system).
+//! * [`metrics`] — meters, CSV/JSONL run logs.
+//! * [`experiments`] — one driver per paper table/figure (see DESIGN.md §4).
+//! * [`testing`] — in-repo property-testing + bench harness (offline build).
+
+pub mod cli;
+pub mod coding;
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

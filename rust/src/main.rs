@@ -1,0 +1,222 @@
+//! tempo CLI — leader entrypoint.
+//!
+//! See `tempo help` (cli::USAGE) for the full command surface.
+
+use anyhow::{Context, Result};
+
+use tempo::cli::{Args, USAGE};
+use tempo::comm::tcp::{TcpMaster, TcpWorker};
+use tempo::config::{toml, ExperimentConfig};
+use tempo::coordinator::master::{MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::coordinator::{launch, run_training};
+use tempo::data::Shard;
+use tempo::experiments::{self, ExpOptions};
+use tempo::metrics::{CsvWriter, RunPoint};
+use tempo::model::Manifest;
+use tempo::runtime::Runtime;
+
+fn main() {
+    let code = match real_main() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "inspect" => cmd_inspect(),
+        "master-serve" => cmd_master_serve(&args),
+        "worker-connect" => cmd_worker_connect(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut value = match args.flag("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("read config {path}"))?;
+            toml::parse(&text)?
+        }
+        None => tempo::config::Value::table(),
+    };
+    // CLI overrides: --set.scheme.beta 0.9 etc.
+    for (path, raw) in args.overrides() {
+        value.set_path(&path, tempo::config::value::parse_scalar(&raw))?;
+    }
+    let mut cfg = ExperimentConfig::from_value(&value)?;
+    if let Some(v) = args.flag("steps") {
+        cfg.steps = v.parse().context("--steps")?;
+    }
+    if let Some(v) = args.flag("workers") {
+        cfg.workers = v.parse().context("--workers")?;
+    }
+    if let Some(v) = args.flag("model") {
+        cfg.model = v.to_string();
+    }
+    if let Some(v) = args.flag("backend") {
+        cfg.backend = tempo::config::experiment::Backend::parse(v)?;
+    }
+    if let Some(v) = args.flag("csv") {
+        cfg.csv = Some(v.to_string());
+    }
+    if let Some(v) = args.flag("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!(
+        "tempo train: model={} workers={} steps={} scheme={}/{}/ef={} backend={:?}",
+        cfg.model,
+        cfg.workers,
+        cfg.steps,
+        cfg.scheme.quantizer,
+        cfg.scheme.predictor,
+        cfg.scheme.ef,
+        cfg.backend
+    );
+    let report = run_training(&cfg)?;
+    print_report(&report);
+    if let Some(path) = &cfg.csv {
+        let mut w = CsvWriter::create(path, RunPoint::csv_header())?;
+        for p in &report.points {
+            w.row(&p.to_csv_row())?;
+        }
+        w.flush()?;
+        println!("log: {path}");
+    }
+    Ok(())
+}
+
+fn print_report(report: &launch::TrainReport) {
+    println!("\n{:<8} {:>8} {:>12} {:>12} {:>9} {:>12}", "step", "epoch", "train_loss", "test_loss", "test_acc", "bits/comp");
+    for p in &report.points {
+        println!(
+            "{:<8} {:>8.2} {:>12.4} {:>12.4} {:>9.3} {:>12.4}",
+            p.step, p.epoch_equiv, p.train_loss, p.test_loss, p.test_acc, p.bits_per_component
+        );
+    }
+    println!(
+        "\nfinal: acc={:.4} loss={:.4} | bits/comp={:.4} (x{:.0} vs fp32) | sim comm {:.2}s",
+        report.final_test_acc,
+        report.final_test_loss,
+        report.bits_per_component,
+        report.compression_ratio,
+        report.simulated_comm_secs
+    );
+    println!("worker phase means (ms/iter):");
+    for (name, secs) in report.phase_means() {
+        println!("  {name:<10} {:>8.3}", secs * 1e3);
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional()
+        .first()
+        .context("usage: tempo exp <id> (see `tempo help`)")?
+        .clone();
+    let opts = ExpOptions {
+        smoke: args.has_switch("smoke"),
+        out_dir: args.flag_or("out", "results"),
+        seed: args.u64_flag("seed", 0)?,
+    };
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    experiments::run(&id, &opts)
+}
+
+fn cmd_inspect() -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    println!("artifacts dir: {}", manifest.dir.display());
+    println!("\nmodels ({}):", manifest.models.len());
+    for m in &manifest.models {
+        println!(
+            "  {:<10} d={:<8} batch={:<4} kind={:?} files: {} / {} / {}",
+            m.name, m.d, m.batch, m.kind, m.fwdbwd_file, m.eval_file, m.init_file
+        );
+    }
+    println!("\ncompress steps ({}):", manifest.compress.len());
+    for c in &manifest.compress {
+        println!(
+            "  {:<48} d={:<8} q={:<6} p={:<5} ef={} beta={} k={}",
+            c.name, c.d, c.quantizer, c.predictor, c.ef, c.beta, c.k
+        );
+    }
+    Ok(())
+}
+
+fn cmd_master_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let listen = args.flag("listen").context("--listen addr:port required")?;
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&cfg.model)?.clone();
+    let scheme = cfg.scheme.to_cfg(entry.d)?;
+    println!("master: listening on {listen} for {} workers", cfg.workers);
+    let transport = TcpMaster::listen(listen, cfg.workers)?;
+    let spec = MasterSpec {
+        model: cfg.model.clone(),
+        scheme,
+        schedule: cfg.schedule(),
+        steps: cfg.steps,
+        eval_every: cfg.eval_every,
+        eval_batches: cfg.eval_batches,
+        seed: cfg.seed,
+        samples_per_round: entry.batch * cfg.workers,
+        train_len: cfg.train_len,
+        data_noise: cfg.noise,
+    };
+    let runtime = Runtime::new(manifest)?;
+    let report = MasterLoop::new(spec, transport).run(&runtime)?;
+    println!(
+        "master done: acc={:.4} bits/comp={:.4}",
+        report.final_test_acc,
+        report.comm.bits_per_component()
+    );
+    Ok(())
+}
+
+fn cmd_worker_connect(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let connect = args.flag("connect").context("--connect addr:port required")?;
+    let worker_id = args.u64_flag("worker-id", 0)? as u32;
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.model(&cfg.model)?.clone();
+    let scheme = cfg.scheme.to_cfg(entry.d)?;
+    println!("worker {worker_id}: connecting to {connect}");
+    let transport = TcpWorker::connect(connect, worker_id)?;
+    let spec = WorkerSpec {
+        worker_id,
+        model: cfg.model.clone(),
+        scheme,
+        backend: cfg.backend,
+        schedule: cfg.schedule(),
+        steps: cfg.steps,
+        seed: cfg.seed,
+        clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
+    };
+    let shard = Shard::new(worker_id as usize, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
+    let dataset = launch::build_dataset(entry.kind, &entry, &cfg);
+    let runtime = Runtime::new(manifest)?;
+    let summary = WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)?;
+    println!(
+        "worker {worker_id} done: {} rounds, mean tail loss {:.4}",
+        summary.rounds, summary.mean_loss_last_quarter
+    );
+    Ok(())
+}

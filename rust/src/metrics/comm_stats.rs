@@ -1,0 +1,92 @@
+//! Communication accounting — the paper's primary metric is bits per
+//! gradient component per iteration (Table I last column).
+
+/// Tracks worker→master payload sizes for one run.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    total_payload_bits: u64,
+    total_messages: u64,
+    /// gradient components per message (model dim d)
+    d: usize,
+    /// simulated network parameters for comm-time estimates
+    pub bandwidth_gbps: f64,
+    pub latency_ms: f64,
+}
+
+impl CommStats {
+    pub fn new(d: usize) -> Self {
+        Self {
+            d,
+            bandwidth_gbps: 10.0, // 10 GbE default
+            latency_ms: 0.1,
+            ..Default::default()
+        }
+    }
+
+    pub fn record_message(&mut self, payload_bits: u64) {
+        self.total_payload_bits += payload_bits;
+        self.total_messages += 1;
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.total_messages
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.total_payload_bits
+    }
+
+    /// Mean bits per gradient component per message — Table I's metric.
+    pub fn bits_per_component(&self) -> f64 {
+        if self.total_messages == 0 || self.d == 0 {
+            return 0.0;
+        }
+        self.total_payload_bits as f64 / (self.total_messages as f64 * self.d as f64)
+    }
+
+    /// Simulated wall-clock for all recorded messages on the modelled link
+    /// (serialized worker→master uplink; the paper's bottleneck direction).
+    pub fn simulated_comm_secs(&self) -> f64 {
+        let bytes = self.total_payload_bits as f64 / 8.0;
+        let bw = self.bandwidth_gbps * 1e9 / 8.0; // bytes/sec
+        bytes / bw + self.total_messages as f64 * self.latency_ms / 1e3
+    }
+
+    /// Speedup of this stream vs sending d raw f32 per message.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total_payload_bits == 0 {
+            return 0.0;
+        }
+        (self.total_messages as f64 * self.d as f64 * 32.0) / self.total_payload_bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_per_component() {
+        let mut c = CommStats::new(100);
+        c.record_message(3200); // 32 bits/comp
+        c.record_message(0);
+        assert!((c.bits_per_component() - 16.0).abs() < 1e-12);
+        assert!((c.compression_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simulated_time_scales_with_payload() {
+        let mut a = CommStats::new(1000);
+        a.bandwidth_gbps = 1.0;
+        a.latency_ms = 0.0;
+        a.record_message(8e9 as u64); // 1 GB at 1 Gb/s = 8 s
+        assert!((a.simulated_comm_secs() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let c = CommStats::new(10);
+        assert_eq!(c.bits_per_component(), 0.0);
+        assert_eq!(c.compression_ratio(), 0.0);
+    }
+}

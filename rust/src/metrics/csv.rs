@@ -1,0 +1,58 @@
+//! Tiny CSV writer for run logs (results/*.csv consumed by EXPERIMENTS.md).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV file, creating parent dirs, and write the
+    /// header line.
+    pub fn create(path: impl AsRef<Path>, header: &str) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)
+                    .with_context(|| format!("mkdir -p {}", parent.display()))?;
+            }
+        }
+        let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = Self { out: BufWriter::new(file) };
+        w.row(header)?;
+        Ok(w)
+    }
+
+    pub fn row(&mut self, line: &str) -> Result<()> {
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("tempo_csv_test");
+        let path = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&path, "a,b").unwrap();
+            w.row("1,2").unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,97 @@
+//! Loss / accuracy meters.
+
+use crate::util::stats::Ema;
+
+/// Smoothed training-loss meter (EMA, debiased) + raw last value.
+#[derive(Clone, Debug)]
+pub struct LossMeter {
+    ema: Ema,
+    last: f64,
+    count: u64,
+}
+
+impl LossMeter {
+    pub fn new() -> Self {
+        Self { ema: Ema::new(0.95), last: f64::NAN, count: 0 }
+    }
+
+    pub fn push(&mut self, loss: f64) {
+        self.ema.push(loss);
+        self.last = loss;
+        self.count += 1;
+    }
+
+    pub fn smoothed(&self) -> f64 {
+        self.ema.get()
+    }
+
+    pub fn last(&self) -> f64 {
+        self.last
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+impl Default for LossMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Accumulates correct/total over eval batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccuracyMeter {
+    correct: f64,
+    total: f64,
+}
+
+impl AccuracyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, n_correct: f64, n_total: usize) {
+        self.correct += n_correct;
+        self.total += n_total as f64;
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            self.correct / self.total
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_meter_smooths() {
+        let mut m = LossMeter::new();
+        for _ in 0..50 {
+            m.push(2.0);
+        }
+        assert!((m.smoothed() - 2.0).abs() < 1e-6);
+        assert_eq!(m.last(), 2.0);
+        assert_eq!(m.count(), 50);
+    }
+
+    #[test]
+    fn accuracy_meter_accumulates() {
+        let mut m = AccuracyMeter::new();
+        m.push(3.0, 4);
+        m.push(1.0, 4);
+        assert!((m.accuracy() - 0.5).abs() < 1e-12);
+        m.reset();
+        assert_eq!(m.accuracy(), 0.0);
+    }
+}

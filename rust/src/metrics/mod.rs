@@ -1,0 +1,45 @@
+//! Run metrics: meters, communication accounting, CSV logs.
+
+pub mod comm_stats;
+pub mod csv;
+pub mod meters;
+
+pub use comm_stats::CommStats;
+pub use csv::CsvWriter;
+pub use meters::{AccuracyMeter, LossMeter};
+
+/// One evaluation/logging row of a training run — what the experiment
+/// drivers print and what regenerates the paper's learning curves.
+#[derive(Clone, Debug)]
+pub struct RunPoint {
+    pub step: u64,
+    pub epoch_equiv: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// measured bits per gradient component per iteration (mean so far)
+    pub bits_per_component: f64,
+    /// mean squared quantization error (1/d)||e_t||^2
+    pub e_mse: f64,
+    pub wall_secs: f64,
+}
+
+impl RunPoint {
+    pub fn csv_header() -> &'static str {
+        "step,epoch,train_loss,test_loss,test_acc,bits_per_comp,e_mse,wall_secs"
+    }
+
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{:.4},{:.6},{:.6},{:.4},{:.6},{:.8e},{:.3}",
+            self.step,
+            self.epoch_equiv,
+            self.train_loss,
+            self.test_loss,
+            self.test_acc,
+            self.bits_per_component,
+            self.e_mse,
+            self.wall_secs
+        )
+    }
+}

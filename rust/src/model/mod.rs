@@ -1,0 +1,209 @@
+//! Artifact manifest + model zoo.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every AOT
+//! artifact (models and compression steps). This module parses it into
+//! plain-data structs (Send + Sync, shareable across worker threads —
+//! unlike the PJRT objects, which stay thread-confined in [`crate::runtime`]).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::{json, Value};
+
+/// Model kinds the coordinator knows how to feed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Classifier,
+    Lm,
+}
+
+/// One model entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    /// flat parameter dimension
+    pub d: usize,
+    pub batch: usize,
+    pub kind: ModelKind,
+    /// classifier: input dim (e.g. 3072) / classes; lm: vocab / seq
+    pub in_dim: usize,
+    pub classes: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub fwdbwd_file: String,
+    pub eval_file: String,
+    pub init_file: String,
+}
+
+/// One compression-step artifact entry.
+#[derive(Clone, Debug)]
+pub struct CompressEntry {
+    pub name: String,
+    pub file: String,
+    pub d: usize,
+    pub quantizer: String,
+    pub predictor: String,
+    pub ef: bool,
+    pub beta: f64,
+    pub k: usize,
+    pub randk_prob: f64,
+}
+
+/// Parsed artifacts/manifest.json plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub compress: Vec<CompressEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default location: ./artifacts (or $TEMPO_ARTIFACTS).
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("TEMPO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = json::parse(text).context("parse manifest.json")?;
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_array()? {
+            let kind = match m.get("kind")?.as_str()? {
+                "lm" => ModelKind::Lm,
+                _ => ModelKind::Classifier,
+            };
+            models.push(ModelEntry {
+                name: m.get("name")?.as_str()?.to_string(),
+                d: m.get("d")?.as_usize()?,
+                batch: m.get("batch")?.as_usize()?,
+                kind,
+                in_dim: opt_usize(m, "in_dim"),
+                classes: opt_usize(m, "classes"),
+                vocab: opt_usize(m, "vocab"),
+                seq: opt_usize(m, "seq"),
+                fwdbwd_file: m.get("fwdbwd")?.as_str()?.to_string(),
+                eval_file: m.get("eval")?.as_str()?.to_string(),
+                init_file: m.get("init")?.as_str()?.to_string(),
+            });
+        }
+        let mut compress = Vec::new();
+        for c in v.get("compress")?.as_array()? {
+            compress.push(CompressEntry {
+                name: c.get("name")?.as_str()?.to_string(),
+                file: c.get("file")?.as_str()?.to_string(),
+                d: c.get("d")?.as_usize()?,
+                quantizer: c.get("quantizer")?.as_str()?.to_string(),
+                predictor: c.get("predictor")?.as_str()?.to_string(),
+                ef: c.get("ef")?.as_bool()?,
+                beta: c.get("beta")?.as_f64()?,
+                k: c.get("k")?.as_usize()?,
+                randk_prob: c.get("randk_prob")?.as_f64()?,
+            });
+        }
+        Ok(Self { dir, models, compress })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                let names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+                format!("model {name:?} not in manifest (have: {names:?})")
+            })
+    }
+
+    /// Find a compress artifact matching a scheme at dimension d.
+    pub fn find_compress(
+        &self,
+        d: usize,
+        quantizer: &str,
+        predictor: &str,
+        ef: bool,
+    ) -> Option<&CompressEntry> {
+        self.compress
+            .iter()
+            .find(|c| c.d == d && c.quantizer == quantizer && c.predictor == predictor && c.ef == ef)
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a model's initial flat parameter vector (raw f32 LE bytes).
+    pub fn load_init(&self, model: &ModelEntry) -> Result<Vec<f32>> {
+        let path = self.artifact_path(&model.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read init params {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == model.d * 4,
+            "init file {} has {} bytes, expected {} (d={})",
+            path.display(),
+            bytes.len(),
+            model.d * 4,
+            model.d
+        );
+        let mut out = vec![0.0f32; model.d];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(out)
+    }
+}
+
+fn opt_usize(v: &Value, key: &str) -> usize {
+    v.opt(key).and_then(|x| x.as_usize().ok()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": [
+        {"name": "cnn_s", "d": 11642, "batch": 32, "kind": "classifier",
+         "in_dim": 3072, "classes": 10,
+         "fwdbwd": "model_cnn_s_fwdbwd.hlo.txt",
+         "eval": "model_cnn_s_eval.hlo.txt", "init": "init_cnn_s.bin"},
+        {"name": "lm_tiny", "d": 21952, "batch": 8, "kind": "lm",
+         "vocab": 64, "seq": 32,
+         "fwdbwd": "f.hlo.txt", "eval": "e.hlo.txt", "init": "i.bin"}
+      ],
+      "compress": [
+        {"name": "c1", "file": "c1.hlo.txt", "d": 1024, "quantizer": "topk",
+         "predictor": "estk", "ef": true, "beta": 0.9, "k": 32, "randk_prob": 0.0}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_models_and_compress() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.models.len(), 2);
+        let cnn = m.model("cnn_s").unwrap();
+        assert_eq!(cnn.d, 11642);
+        assert_eq!(cnn.kind, ModelKind::Classifier);
+        let lm = m.model("lm_tiny").unwrap();
+        assert_eq!(lm.kind, ModelKind::Lm);
+        assert_eq!(lm.vocab, 64);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn compress_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.find_compress(1024, "topk", "estk", true).is_some());
+        assert!(m.find_compress(1024, "topk", "estk", false).is_none());
+        assert!(m.find_compress(999, "topk", "estk", true).is_none());
+    }
+}

@@ -1,0 +1,89 @@
+//! Optimizer plumbing: LR schedules and the parameter update rule.
+//!
+//! The paper's update (Sec. II-B) is `w_{t+1} = w_t − η_t · (1/n) Σ_i r̃_t^i`
+//! — momentum lives inside the per-worker pipelines, so the master-side
+//! "optimizer" is just the schedule plus an axpy. Weight decay is applied
+//! as L2 regularization inside the model loss (matching the paper's setup),
+//! not decoupled here.
+
+pub mod schedule;
+
+pub use schedule::{LrSchedule, ScheduleKind};
+
+use crate::tensor;
+
+/// Applies w ← w − η·update. Kept as a struct so optimizer variants
+/// (e.g. master-side Nesterov in App.-A ablations) can slot in.
+#[derive(Clone, Debug)]
+pub struct SgdUpdater {
+    pub schedule: LrSchedule,
+    step: u64,
+}
+
+impl SgdUpdater {
+    pub fn new(schedule: LrSchedule) -> Self {
+        Self { schedule, step: 0 }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Current learning rate η_t.
+    pub fn lr(&self) -> f32 {
+        self.schedule.lr_at(self.step)
+    }
+
+    /// Ratio η_{t-1}/η_t fed into the EF branch (0 at t = 0, paper init
+    /// η_{-1} = 0).
+    pub fn lr_ratio(&self) -> f32 {
+        if self.step == 0 {
+            0.0
+        } else {
+            self.schedule.lr_at(self.step - 1) / self.schedule.lr_at(self.step)
+        }
+    }
+
+    /// w ← w − η_t · update, then advance t.
+    pub fn apply(&mut self, w: &mut [f32], update: &[f32]) {
+        let lr = self.lr();
+        tensor::axpy(-lr, update, w);
+        self.step += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_applies_lr_and_advances() {
+        let mut opt = SgdUpdater::new(LrSchedule::constant(0.5));
+        let mut w = vec![1.0f32, 2.0];
+        opt.apply(&mut w, &[1.0, -1.0]);
+        assert_eq!(w, vec![0.5, 2.5]);
+        assert_eq!(opt.step_count(), 1);
+    }
+
+    #[test]
+    fn lr_ratio_zero_at_start_one_when_flat() {
+        let mut opt = SgdUpdater::new(LrSchedule::constant(0.1));
+        assert_eq!(opt.lr_ratio(), 0.0);
+        opt.apply(&mut [0.0], &[0.0]);
+        assert_eq!(opt.lr_ratio(), 1.0);
+    }
+
+    #[test]
+    fn lr_ratio_across_decay_boundary() {
+        // step decay x0.1 every 10 steps: at the boundary step the ratio
+        // is eta_prev/eta_now = 10
+        let sched = LrSchedule::step_decay(1.0, 0.1, 10);
+        let mut opt = SgdUpdater::new(sched);
+        for _ in 0..10 {
+            opt.apply(&mut [0.0], &[0.0]);
+        }
+        assert_eq!(opt.step_count(), 10);
+        assert!((opt.lr() - 0.1).abs() < 1e-7);
+        assert!((opt.lr_ratio() - 10.0).abs() < 1e-4);
+    }
+}

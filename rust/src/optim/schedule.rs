@@ -1,0 +1,98 @@
+//! Learning-rate schedules.
+//!
+//! The paper's recipe (Sec. VI): start at 0.1 and multiply by 0.1 every 8
+//! epochs (WRN-28-2) or every 5 epochs (ResNet-50). Expressed here in
+//! steps; the config layer converts epochs → steps.
+
+/// Schedule family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleKind {
+    Constant,
+    /// lr · factor^(floor(step / every)).
+    StepDecay { factor: f32, every: u64 },
+    /// Linear warmup to base over `warmup` steps, then step decay.
+    WarmupStepDecay { warmup: u64, factor: f32, every: u64 },
+}
+
+/// A concrete schedule: base LR + kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub kind: ScheduleKind,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        Self { base, kind: ScheduleKind::Constant }
+    }
+
+    /// The paper's ×factor-every-N schedule.
+    pub fn step_decay(base: f32, factor: f32, every: u64) -> Self {
+        assert!(every > 0);
+        Self { base, kind: ScheduleKind::StepDecay { factor, every } }
+    }
+
+    pub fn warmup_step_decay(base: f32, warmup: u64, factor: f32, every: u64) -> Self {
+        assert!(every > 0);
+        Self { base, kind: ScheduleKind::WarmupStepDecay { warmup, factor, every } }
+    }
+
+    /// Theorem-1 style η_t = c/(L√T): a constant chosen from problem
+    /// constants — exposed for the convergence-validation experiment.
+    pub fn theorem1(c: f64, lipschitz: f64, total_steps: u64) -> Self {
+        let lr = c / (lipschitz * (total_steps as f64).sqrt());
+        Self::constant(lr as f32)
+    }
+
+    pub fn lr_at(&self, step: u64) -> f32 {
+        match self.kind {
+            ScheduleKind::Constant => self.base,
+            ScheduleKind::StepDecay { factor, every } => {
+                self.base * factor.powi((step / every) as i32)
+            }
+            ScheduleKind::WarmupStepDecay { warmup, factor, every } => {
+                if step < warmup {
+                    self.base * (step + 1) as f32 / warmup as f32
+                } else {
+                    self.base * factor.powi(((step - warmup) / every) as i32)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.3);
+        assert_eq!(s.lr_at(0), 0.3);
+        assert_eq!(s.lr_at(10_000), 0.3);
+    }
+
+    #[test]
+    fn step_decay_boundaries() {
+        let s = LrSchedule::step_decay(1.0, 0.1, 100);
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(99), 1.0);
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-7);
+        assert!((s.lr_at(250) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::warmup_step_decay(1.0, 10, 0.5, 100);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-7);
+        assert!((s.lr_at(4) - 0.5).abs() < 1e-7);
+        assert_eq!(s.lr_at(10), 1.0);
+        assert!((s.lr_at(110) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn theorem1_schedule_formula() {
+        let s = LrSchedule::theorem1(0.9, 2.0, 10_000);
+        assert!((s.lr_at(0) - 0.0045).abs() < 1e-6);
+    }
+}

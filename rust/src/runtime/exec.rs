@@ -1,0 +1,172 @@
+//! Typed wrappers over the raw executables: model fwd/bwd+eval and the
+//! HLO compression-step backend.
+
+use anyhow::{Context, Result};
+
+use crate::compress::{StepStats, WorkerPipeline};
+use crate::data::Batch;
+use crate::model::{CompressEntry, ModelEntry, ModelKind};
+
+use super::{Arg, Executable, Runtime};
+
+/// A model's compiled fwdbwd + eval artifacts plus its manifest entry.
+pub struct ModelExec {
+    pub entry: ModelEntry,
+    fwdbwd: Executable,
+    eval: Executable,
+}
+
+impl ModelExec {
+    pub fn load(rt: &Runtime, name: &str) -> Result<Self> {
+        let entry = rt.manifest.model(name)?.clone();
+        let fwdbwd = rt
+            .compile_file(&entry.fwdbwd_file)
+            .with_context(|| format!("compile fwdbwd for {name}"))?;
+        let eval = rt
+            .compile_file(&entry.eval_file)
+            .with_context(|| format!("compile eval for {name}"))?;
+        Ok(Self { entry, fwdbwd, eval })
+    }
+
+    fn batch_args<'a>(&self, batch: &'a Batch) -> Result<(Arg<'a>, Arg<'a>)> {
+        match (self.entry.kind, batch) {
+            (ModelKind::Classifier, Batch::Image { x, y, batch }) => {
+                anyhow::ensure!(*batch == self.entry.batch, "batch size mismatch");
+                Ok((Arg::mat_f32(x, *batch, self.entry.in_dim), Arg::vec_i32(y)))
+            }
+            (ModelKind::Lm, Batch::Tokens { x, y, batch }) => {
+                anyhow::ensure!(*batch == self.entry.batch, "batch size mismatch");
+                Ok((
+                    Arg::mat_i32(x, *batch, self.entry.seq),
+                    Arg::mat_i32(y, *batch, self.entry.seq),
+                ))
+            }
+            _ => anyhow::bail!("batch kind does not match model kind"),
+        }
+    }
+
+    /// (loss, flat gradient) at parameters w on this batch — the per-worker
+    /// hot-path call.
+    pub fn fwdbwd(&self, w: &[f32], batch: &Batch) -> Result<(f64, Vec<f32>)> {
+        anyhow::ensure!(w.len() == self.entry.d, "param dim mismatch");
+        let (x, y) = self.batch_args(batch)?;
+        let out = self.fwdbwd.run(&[Arg::vec_f32(w), x, y])?;
+        anyhow::ensure!(out.len() == 2, "fwdbwd must return (loss, grad)");
+        let loss = out[0].get_first_element::<f32>()? as f64;
+        let grad = out[1].to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == self.entry.d, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+
+    /// (loss, n_correct) on an eval batch.
+    pub fn evaluate(&self, w: &[f32], batch: &Batch) -> Result<(f64, f64)> {
+        let (x, y) = self.batch_args(batch)?;
+        let out = self.eval.run(&[Arg::vec_f32(w), x, y])?;
+        anyhow::ensure!(out.len() == 2, "eval must return (loss, n_correct)");
+        Ok((
+            out[0].get_first_element::<f32>()? as f64,
+            out[1].get_first_element::<f32>()? as f64,
+        ))
+    }
+
+    /// Labels per eval item: classifier counts images, LM counts tokens.
+    pub fn eval_denominator(&self) -> usize {
+        match self.entry.kind {
+            ModelKind::Classifier => self.entry.batch,
+            ModelKind::Lm => self.entry.batch * self.entry.seq,
+        }
+    }
+}
+
+/// HLO backend for the worker compression step: executes the AOT artifact
+/// built from the Pallas kernels and writes the resulting state back into a
+/// [`WorkerPipeline`] (which stays the single owner of algorithm state).
+pub struct CompressExec {
+    pub entry: CompressEntry,
+    exe: Executable,
+    zeros: Vec<f32>,
+}
+
+impl CompressExec {
+    pub fn load(rt: &Runtime, entry: CompressEntry) -> Result<Self> {
+        let exe = rt
+            .compile_file(&entry.file)
+            .with_context(|| format!("compile compress artifact {}", entry.name))?;
+        let zeros = vec![0.0f32; entry.d];
+        Ok(Self { entry, exe, zeros })
+    }
+
+    /// Locate + load the artifact matching a pipeline's scheme.
+    pub fn for_pipeline(rt: &Runtime, pipe: &WorkerPipeline) -> Result<Self> {
+        let cfg = &pipe.cfg;
+        let (qname, _k) = match cfg.quantizer {
+            crate::compress::QuantizerKind::None => ("none", 0),
+            crate::compress::QuantizerKind::Sign => ("sign", 0),
+            crate::compress::QuantizerKind::TopK { k } => ("topk", k),
+            crate::compress::QuantizerKind::TopKQ { k } => ("topkq", k),
+            crate::compress::QuantizerKind::RandK { .. } => ("randk", 0),
+        };
+        let entry = rt
+            .manifest
+            .find_compress(pipe.dim(), qname, cfg.predictor.as_str(), cfg.ef)
+            .with_context(|| {
+                format!(
+                    "no compress artifact for d={} {}/{}/ef={} — add it to aot.py",
+                    pipe.dim(),
+                    qname,
+                    cfg.predictor.as_str(),
+                    cfg.ef
+                )
+            })?
+            .clone();
+        Self::load(rt, entry)
+    }
+
+    /// One Eq.-(1) step through the HLO artifact. Mirrors
+    /// `WorkerPipeline::step` semantics exactly (asserted by integration
+    /// tests to ~1e-5; fp contraction may differ in the last ulps).
+    pub fn step(&self, pipe: &mut WorkerPipeline, g: &[f32], lr_ratio: f32) -> Result<StepStats> {
+        let d = self.entry.d;
+        anyhow::ensure!(g.len() == d, "gradient dim mismatch");
+        anyhow::ensure!(pipe.dim() == d, "pipeline dim mismatch");
+        let round_seed = [pipe.round() as f32];
+        let lr = [lr_ratio];
+        let (v, e, rhat, p, s, tau) = pipe.hlo_inputs();
+        let args = [
+            Arg::vec_f32(g),
+            Arg::vec_f32(v),
+            Arg::vec_f32(e),
+            Arg::vec_f32(rhat),
+            Arg::vec_f32(p.unwrap_or(&self.zeros)),
+            Arg::vec_f32(s.unwrap_or(&self.zeros)),
+            Arg::vec_f32(tau.unwrap_or(&self.zeros)),
+            Arg::scalar_f32(&lr),
+            Arg::scalar_f32(&round_seed),
+        ];
+        let out = self.exe.run_f32(&args)?;
+        anyhow::ensure!(out.len() == 7, "compress artifact must return 7 outputs");
+        let (utilde, v2, e2, rhat2, p2, s2, tau2) =
+            (&out[0], &out[1], &out[2], &out[3], &out[4], &out[5], &out[6]);
+
+        let mut e_norm_sq = 0.0f64;
+        let mut u_norm_sq = 0.0f64;
+        let mut nnz = 0usize;
+        for i in 0..d {
+            // u = utilde + e by Eq. (1e)
+            let u = utilde[i] + e2[i];
+            u_norm_sq += (u as f64) * (u as f64);
+            e_norm_sq += (e2[i] as f64) * (e2[i] as f64);
+            nnz += (utilde[i] != 0.0) as usize;
+        }
+        pipe.overwrite_state_from_artifact(
+            utilde,
+            v2,
+            e2,
+            rhat2,
+            Some(p2),
+            Some(s2),
+            Some(tau2),
+        );
+        Ok(StepStats { e_norm_sq, e_mse: e_norm_sq / d as f64, u_norm_sq, nnz })
+    }
+}

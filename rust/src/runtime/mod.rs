@@ -1,0 +1,144 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile, execute.
+//!
+//! PJRT objects wrap raw C++ pointers with no `Send`/`Sync`, so a
+//! [`Runtime`] is **thread-confined**: each worker/master thread constructs
+//! its own `Runtime` (CPU clients are independent) and compiles the
+//! artifacts it needs. All data crossing threads is plain `Vec<f32>`.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod exec;
+
+pub use exec::{CompressExec, ModelExec};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::Manifest;
+
+/// Input argument for an executable.
+pub enum Arg<'a> {
+    /// flat f32 vector of the given logical dims
+    F32(&'a [f32], Vec<usize>),
+    /// flat i32 tensor of the given logical dims
+    I32(&'a [i32], Vec<usize>),
+}
+
+impl<'a> Arg<'a> {
+    pub fn vec_f32(v: &'a [f32]) -> Self {
+        Arg::F32(v, vec![v.len()])
+    }
+
+    pub fn scalar_f32(v: &'a [f32; 1]) -> Self {
+        Arg::F32(&v[..], vec![1])
+    }
+
+    pub fn mat_f32(v: &'a [f32], rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(v.len(), rows * cols);
+        Arg::F32(v, vec![rows, cols])
+    }
+
+    pub fn mat_i32(v: &'a [i32], rows: usize, cols: usize) -> Self {
+        debug_assert_eq!(v.len(), rows * cols);
+        Arg::I32(v, vec![rows, cols])
+    }
+
+    pub fn vec_i32(v: &'a [i32]) -> Self {
+        Arg::I32(v, vec![v.len()])
+    }
+
+    /// Upload to a device buffer we own. NOTE: we deliberately avoid
+    /// `PjRtLoadedExecutable::execute(&[Literal])` — its C shim converts
+    /// each input literal to a PjRtBuffer and leaks it (`buffer.release()`
+    /// with no later free), which OOMs long training runs. Owning the input
+    /// buffers and calling `execute_b` both fixes the leak and skips a
+    /// per-call literal copy.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        Ok(match self {
+            Arg::F32(data, dims) => client.buffer_from_host_buffer(data, dims, None)?,
+            Arg::I32(data, dims) => client.buffer_from_host_buffer(data, dims, None)?,
+        })
+    }
+}
+
+/// A compiled artifact. Outputs are returned as decomposed tuple literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given args; returns the tuple elements (the aot.py
+    /// lowering always wraps outputs in a single tuple).
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        // input buffers are owned here and freed on drop (see Arg::to_buffer)
+        let buffers: Vec<xla::PjRtBuffer> =
+            args.iter().map(|a| a.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let mut results = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        anyhow::ensure!(
+            !results.is_empty() && !results[0].is_empty(),
+            "{}: empty execution result",
+            self.name
+        );
+        let tuple = results
+            .remove(0)
+            .remove(0)
+            .to_literal_sync()
+            .with_context(|| format!("{}: fetch result", self.name))?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Convenience: run and convert every output to Vec<f32>.
+    pub fn run_f32(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.run(args)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// Thread-confined PJRT CPU runtime + artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, manifest })
+    }
+
+    pub fn with_default_manifest() -> Result<Self> {
+        Self::new(Manifest::load_default()?)
+    }
+
+    /// Load + compile an artifact by file name (relative to artifacts/).
+    pub fn compile_file(&self, file: &str) -> Result<Executable> {
+        let path = self.manifest.artifact_path(file);
+        self.compile_path(&path)
+    }
+
+    pub fn compile_path(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            name: path.file_name().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,152 @@
+//! Flat f32 vector kernels for the coordinator hot path.
+//!
+//! Everything the master/worker loop does outside PJRT is expressed over
+//! contiguous `&[f32]` slices of dimension d: axpy-style updates, norms, and
+//! the Top-K magnitude selection (quickselect — the L3 hot spot for large d).
+
+pub mod topk;
+
+pub use topk::{select_topk_indices, topk_threshold};
+
+/// y += a * x
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * x + b * y (in place on y)
+pub fn axpby(a: f32, x: &[f32], b: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// out = x - y
+pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+        *o = xi - yi;
+    }
+}
+
+/// out = x + y
+pub fn add_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for ((o, xi), yi) in out.iter_mut().zip(x).zip(y) {
+        *o = xi + yi;
+    }
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+pub fn fill(x: &mut [f32], v: f32) {
+    for xi in x.iter_mut() {
+        *xi = v;
+    }
+}
+
+/// Squared l2 norm, accumulated in f64 for stability.
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// Mean of |x| (the Scaled-sign scale), f64 accumulator.
+pub fn mean_abs(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = x.iter().map(|&v| v.abs() as f64).sum();
+    (s / x.len() as f64) as f32
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// Count of non-zero components (payload size driver for sparse schemes).
+pub fn nnz(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Mean squared difference (1/d)||x-y||^2 — the Fig. 8 right-panel metric.
+pub fn mse(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum();
+    s / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_momentum_form() {
+        // v = (1-beta) g + beta v — the Eq. (1a) update as axpby
+        let g = [1.0f32, -1.0];
+        let mut v = [0.5f32, 0.5];
+        axpby(0.1, &g, 0.9, &mut v);
+        assert!((v[0] - 0.55).abs() < 1e-7);
+        assert!((v[1] - 0.35).abs() < 1e-7);
+    }
+
+    #[test]
+    fn norms_and_mse() {
+        let x = [3.0f32, 4.0];
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+        let y = [0.0f32, 0.0];
+        assert!((mse(&x, &y) - 12.5).abs() < 1e-12);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn mean_abs_and_nnz() {
+        let x = [-2.0f32, 0.0, 2.0, 4.0];
+        assert!((mean_abs(&x) - 2.0).abs() < 1e-7);
+        assert_eq!(nnz(&x), 3);
+        assert_eq!(mean_abs(&[]), 0.0);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let x = [1.0f32, 2.0, 3.0];
+        let y = [0.5f32, -0.5, 1.0];
+        let mut s = [0.0f32; 3];
+        let mut back = [0.0f32; 3];
+        add_into(&x, &y, &mut s);
+        sub_into(&s, &y, &mut back);
+        assert_eq!(back, x);
+    }
+}

@@ -1,0 +1,131 @@
+//! Miniature benchmark harness (criterion stand-in) for `cargo bench`
+//! targets with `harness = false`.
+//!
+//! Protocol per benchmark: warm up for a fixed budget, pick an iteration
+//! count targeting ~`measure_secs` of work, run batches and report
+//! mean/p50/p99 and derived throughput.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    /// per-iteration seconds
+    pub summary: Summary,
+    /// optional elements-per-iteration for throughput reporting
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean * 1e9
+    }
+
+    pub fn throughput_melems(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.summary.mean / 1e6)
+    }
+
+    pub fn report_line(&self) -> String {
+        let thr = match self.throughput_melems() {
+            Some(t) => format!("  {:>10.1} Melem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12.3} µs/iter  (p50 {:>10.3} µs, p99 {:>10.3} µs, n={}){}",
+            self.name,
+            self.summary.mean * 1e6,
+            self.summary.p50 * 1e6,
+            self.summary.p99 * 1e6,
+            self.iters,
+            thr
+        )
+    }
+}
+
+/// Bench runner with fixed warmup/measure budgets.
+pub struct Bencher {
+    pub warmup_secs: f64,
+    pub measure_secs: f64,
+    pub max_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_secs: 0.3, measure_secs: 1.0, max_iters: 1_000_000, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Self { warmup_secs: 0.05, measure_secs: 0.2, max_iters: 100_000, ..Default::default() }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration per call.
+    pub fn bench(&mut self, name: &str, elements: Option<u64>, mut f: impl FnMut()) -> &BenchResult {
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let target = ((self.measure_secs / per_iter.max(1e-9)) as u64)
+            .clamp(10, self.max_iters);
+        // measure in 10 batches for percentile stability
+        let batches = 10u64;
+        let per_batch = (target / batches).max(1);
+        let mut samples = Vec::with_capacity(batches as usize);
+        for _ in 0..batches {
+            let t = Instant::now();
+            for _ in 0..per_batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / per_batch as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: per_batch * batches,
+            summary: Summary::of(&samples),
+            elements,
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box is
+/// stable since 1.66 — thin wrapper so call sites read uniformly).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bencher { warmup_secs: 0.01, measure_secs: 0.02, ..Default::default() };
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", Some(1), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters >= 10);
+    }
+}

@@ -1,0 +1,28 @@
+//! In-repo testing/benchmarking substrates (the offline build has neither
+//! proptest nor criterion — see DESIGN.md "Offline-build note").
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{BenchResult, Bencher};
+pub use prop::{Gen, PropConfig, PropError};
+
+/// Approximate slice equality with both absolute and relative tolerance.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for i in 0..a.len() {
+        let (x, y) = (a[i], b[i]);
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+/// Max absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}

@@ -1,0 +1,186 @@
+//! Miniature property-testing framework (proptest stand-in).
+//!
+//! A [`Gen`] wraps the crate RNG with convenience draws; [`for_all`] runs a
+//! property over many seeded cases and, on failure, retries with "shrunk"
+//! size hints to report the smallest failing scale it can find. Not a full
+//! shrinker — but deterministic, dependency-free, and enough to pin the
+//! coordinator/coding invariants.
+
+use crate::util::Pcg64;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+    /// Upper bound for `Gen::size`-derived collection lengths.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x7E4A0, max_size: 512 }
+    }
+}
+
+/// Failure report.
+#[derive(Debug)]
+pub struct PropError {
+    pub case: u32,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (seed {:#x}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Draw helper handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Pcg64::seeded(seed), size }
+    }
+
+    /// Current size hint (shrinks on failure retries).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo as f64, hi as f64) as f32
+    }
+
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.rng.gaussian() as f32
+    }
+
+    /// Length in [1, size].
+    pub fn len(&mut self) -> usize {
+        self.usize_in(1, self.size.max(1))
+    }
+
+    /// Gaussian vector of drawn length.
+    pub fn gaussian_vec(&mut self) -> Vec<f32> {
+        let n = self.len();
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_gaussian(&mut v, 1.0);
+        v
+    }
+
+    /// Sparse vector: each component non-zero with probability `density`.
+    pub fn sparse_vec(&mut self, density: f64) -> Vec<f32> {
+        let n = self.len();
+        (0..n)
+            .map(|_| {
+                if self.rng.uniform() < density {
+                    self.rng.gaussian() as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `prop` returns Err(message) on
+/// violation. On failure, retries the same case seed at smaller sizes to
+/// report a reduced reproduction.
+pub fn for_all(cfg: PropConfig, prop: impl Fn(&mut Gen) -> Result<(), String>) -> Result<(), PropError> {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, cfg.max_size);
+        if let Err(message) = prop(&mut g) {
+            // crude shrink: retry at smaller size hints with the same seed
+            let mut best = (cfg.max_size, message);
+            let mut size = cfg.max_size / 2;
+            while size >= 1 {
+                let mut g2 = Gen::new(seed, size);
+                match prop(&mut g2) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return Err(PropError {
+                case,
+                seed,
+                message: format!("{} (smallest failing size hint: {})", best.1, best.0),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Assert-style wrapper.
+pub fn check(cfg: PropConfig, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    if let Err(e) = for_all(cfg, prop) {
+        panic!("{e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(PropConfig::default(), |g| {
+            let v = g.gaussian_vec();
+            if v.is_empty() {
+                return Err("gen produced empty vec".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case_and_shrinks() {
+        let err = for_all(PropConfig { cases: 16, ..Default::default() }, |g| {
+            let v = g.gaussian_vec();
+            if v.len() > 3 {
+                Err(format!("len {} > 3", v.len()))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.message.contains("smallest failing size hint"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(5, 10);
+        let mut b = Gen::new(5, 10);
+        assert_eq!(a.gaussian_vec(), b.gaussian_vec());
+    }
+}

@@ -1,0 +1,92 @@
+//! Low-level utilities: deterministic RNG, statistics, timing.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use stats::Summary;
+pub use timer::Timer;
+
+/// Binary entropy H_b(p) in bits. Returns 0 at the endpoints.
+pub fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -(p * p.log2() + (1.0 - p) * (1.0 - p).log2())
+}
+
+/// Entropy (bits/symbol) of a discrete distribution given raw counts.
+pub fn entropy_from_counts(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.log2();
+        }
+    }
+    h
+}
+
+/// The paper's Top-K rate formula (Sec. III-B): bits per gradient component
+/// for Top-K with lossless index coding: H_b(K/d) + 32 K/d.
+pub fn topk_bits_per_component(k: usize, d: usize) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    let p = k as f64 / d as f64;
+    binary_entropy(p) + 32.0 * p
+}
+
+/// Ternary-entropy rate for Top-K-Q (Sec. III-B, Fig. 4): the kept
+/// components split into +/− points, the rest are 0.
+pub fn topkq_bits_per_component(k_pos: usize, k_neg: usize, d: usize) -> f64 {
+    if d == 0 {
+        return 0.0;
+    }
+    let counts = [k_pos as u64, k_neg as u64, (d - k_pos - k_neg) as u64];
+    entropy_from_counts(&counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_entropy_endpoints_and_symmetry() {
+        assert_eq!(binary_entropy(0.0), 0.0);
+        assert_eq!(binary_entropy(1.0), 0.0);
+        assert!((binary_entropy(0.5) - 1.0).abs() < 1e-12);
+        assert!((binary_entropy(0.1) - binary_entropy(0.9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn topk_rate_matches_paper_examples() {
+        // Table I: K = 0.35d -> ~12 bits (0.934 + 11.2 = 12.1)
+        let r = topk_bits_per_component(35, 100);
+        assert!((r - 12.13).abs() < 0.05, "{r}");
+        // K = 0.015d -> ~0.6 bits (0.112 + 0.48 = 0.59)
+        let r = topk_bits_per_component(15, 1000);
+        assert!((r - 0.59).abs() < 0.02, "{r}");
+    }
+
+    #[test]
+    fn ternary_entropy_sane() {
+        // equal thirds -> log2(3)
+        let h = topkq_bits_per_component(1, 1, 3);
+        assert!((h - 3f64.log2()).abs() < 1e-12);
+        // all zero class -> 0 bits
+        assert_eq!(topkq_bits_per_component(0, 0, 10), 0.0);
+    }
+
+    #[test]
+    fn entropy_from_counts_uniform() {
+        assert!((entropy_from_counts(&[1, 1, 1, 1]) - 2.0).abs() < 1e-12);
+        assert_eq!(entropy_from_counts(&[]), 0.0);
+        assert_eq!(entropy_from_counts(&[0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so we carry our own generators:
+//! [`SplitMix64`] for seeding/stream-splitting and [`Pcg64`]
+//! (PCG-XSL-RR 128/64) as the workhorse. Both are tiny, fast, and produce
+//! identical streams across platforms — important because dataset sharding
+//! and synthetic experiments must be reproducible bit-for-bit.
+
+/// SplitMix64 — used to expand small seeds into full generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second gaussian from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Seed from a u64; `stream` selects an independent sequence (used to
+    /// give each worker/component its own stream).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.rotate_left(32));
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state, inc, gauss_spare: None };
+        rng.next_u64(); // burn-in so state != raw seed material
+        rng
+    }
+
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire reduction).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Standard gaussian via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Fill a slice with i.i.d. N(0, sigma^2) f32 samples.
+    pub fn fill_gaussian(&mut self, out: &mut [f32], sigma: f32) {
+        for x in out.iter_mut() {
+            *x = self.gaussian() as f32 * sigma;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample from a categorical distribution given cumulative weights.
+    pub fn categorical_cdf(&mut self, cdf: &[f64]) -> usize {
+        let total = *cdf.last().expect("empty cdf");
+        let x = self.uniform() * total;
+        match cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cdf.len() - 1),
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 0);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(42, 1);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.uniform();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small_n() {
+        let mut r = Pcg64::seeded(2);
+        let mut counts = [0u64; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::seeded(3);
+        let n = 100_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(4);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::seeded(5);
+        let cdf = [0.1, 0.1, 0.9, 1.0]; // class 1 has zero mass
+        let mut counts = [0u64; 4];
+        for _ in 0..20_000 {
+            counts[r.categorical_cdf(&cdf)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5);
+    }
+}

@@ -1,0 +1,121 @@
+//! Wall-clock timing helpers (Fig. 1 measures per-iteration compute time).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named phase timings (gradient / quantize / predict / encode),
+/// the decomposition reported by the Fig.-1 experiment.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64, u64)>, // (name, total_secs, count)
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += secs;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), secs, 1));
+        }
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed_secs());
+        out
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.entries.iter().find(|e| e.0 == name).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    pub fn mean(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|e| e.0 == name)
+            .map(|e| if e.2 > 0 { e.1 / e.2 as f64 } else { 0.0 })
+            .unwrap_or(0.0)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.0.as_str())
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        for (name, secs, count) in &other.entries {
+            if let Some(e) = self.entries.iter_mut().find(|e| &e.0 == name) {
+                e.1 += secs;
+                e.2 += count;
+            } else {
+                self.entries.push((name.clone(), *secs, *count));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("q", 1.0);
+        p.add("q", 3.0);
+        p.add("p", 0.5);
+        assert_eq!(p.total("q"), 4.0);
+        assert_eq!(p.mean("q"), 2.0);
+        assert_eq!(p.total("missing"), 0.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = PhaseTimes::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimes::new();
+        b.add("x", 2.0);
+        b.add("y", 5.0);
+        a.merge(&b);
+        assert_eq!(a.total("x"), 3.0);
+        assert_eq!(a.total("y"), 5.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_secs() >= 0.001);
+    }
+}

@@ -1,0 +1,44 @@
+//! Smoke-runs every experiment driver end to end (tiny configs).
+//! Guarantees `tempo exp <id>` never bit-rots. Requires `make artifacts`.
+
+use tempo::experiments::{self, ExpOptions};
+
+fn opts(tag: &str) -> ExpOptions {
+    let dir = std::env::temp_dir().join(format!("tempo_exp_smoke_{tag}"));
+    ExpOptions { smoke: true, out_dir: dir.to_string_lossy().into_owned(), seed: 3 }
+}
+
+#[test]
+fn smoke_pure_rust_experiments() {
+    // no-PJRT drivers: fast
+    for id in ["fig5", "fig6", "theorem1", "ablation-beta", "ablation-block", "ablation-master"] {
+        experiments::run(id, &opts(id)).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+    }
+}
+
+#[test]
+fn smoke_table1() {
+    experiments::run("table1", &opts("t1")).unwrap();
+}
+
+#[test]
+fn smoke_fig1() {
+    experiments::run("fig1", &opts("f1")).unwrap();
+}
+
+#[test]
+fn smoke_fig3_fig4() {
+    experiments::run("fig3", &opts("f3")).unwrap();
+    experiments::run("fig4", &opts("f4")).unwrap();
+}
+
+#[test]
+fn smoke_fig7_fig8() {
+    experiments::run("fig7", &opts("f7")).unwrap();
+    experiments::run("fig8", &opts("f8")).unwrap();
+}
+
+#[test]
+fn unknown_experiment_errors() {
+    assert!(experiments::run("figx", &opts("x")).is_err());
+}

@@ -1,0 +1,102 @@
+//! Cross-backend integration: the AOT HLO compress artifacts (built from
+//! the Pallas kernels) must agree with the pure-Rust pipeline elementwise
+//! over multi-step stateful runs, for every scheme family lowered at the
+//! test dimension d=1024.
+//!
+//! Requires `make artifacts`.
+
+use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use tempo::model::Manifest;
+use tempo::runtime::{CompressExec, Runtime};
+use tempo::testing::assert_allclose;
+use tempo::util::Pcg64;
+
+const D: usize = 1024;
+const STEPS: usize = 6;
+const ATOL: f32 = 2e-4;
+const RTOL: f32 = 2e-4;
+
+fn quantizer_from(entry: &tempo::model::CompressEntry) -> QuantizerKind {
+    match entry.quantizer.as_str() {
+        "none" => QuantizerKind::None,
+        "sign" => QuantizerKind::Sign,
+        "topk" => QuantizerKind::TopK { k: entry.k },
+        "topkq" => QuantizerKind::TopKQ { k: entry.k },
+        "randk" => QuantizerKind::RandK { prob: entry.randk_prob as f32 },
+        other => panic!("unknown quantizer {other}"),
+    }
+}
+
+fn scheme_from(entry: &tempo::model::CompressEntry) -> SchemeCfg {
+    SchemeCfg::new(
+        quantizer_from(entry),
+        PredictorKind::parse(&entry.predictor).unwrap(),
+        entry.ef,
+        entry.beta as f32,
+    )
+    .unwrap()
+}
+
+#[test]
+fn hlo_artifacts_match_rust_pipeline() {
+    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    let runtime = Runtime::new(manifest.clone()).unwrap();
+    let entries: Vec<_> = manifest.compress.iter().filter(|c| c.d == D).cloned().collect();
+    assert!(
+        entries.len() >= 10,
+        "expected the full d=1024 test scheme set, found {}",
+        entries.len()
+    );
+
+    for entry in entries {
+        // The P_Lin + EF divergence case (fig5) grows ||e|| exponentially;
+        // relative comparison still holds but needs a looser pass count.
+        let steps = if entry.predictor == "plin" && entry.ef { 4 } else { STEPS };
+        let cfg = scheme_from(&entry);
+        let exec = CompressExec::load(&runtime, entry.clone()).unwrap();
+        let mut hlo_pipe = WorkerPipeline::new(cfg.clone(), D);
+        let mut rust_pipe = WorkerPipeline::new(cfg.clone(), D);
+        let mut rng = Pcg64::seeded(0xC0FFEE ^ entry.k as u64);
+        let mut g = vec![0.0f32; D];
+
+        for t in 0..steps {
+            rng.fill_gaussian(&mut g, 1.0);
+            let lr_ratio = if t == 0 { 0.0 } else { 1.0 };
+            let s_hlo = exec.step(&mut hlo_pipe, &g, lr_ratio).unwrap();
+            let s_rust = rust_pipe.step(&g, lr_ratio);
+            let what = format!("{} t={t}", entry.name);
+            assert_allclose(hlo_pipe.utilde(), rust_pipe.utilde(), ATOL, RTOL, &format!("{what} utilde"));
+            assert_allclose(hlo_pipe.momentum(), rust_pipe.momentum(), ATOL, RTOL, &format!("{what} v"));
+            assert_allclose(hlo_pipe.error(), rust_pipe.error(), ATOL, RTOL, &format!("{what} e"));
+            assert_allclose(hlo_pipe.rhat(), rust_pipe.rhat(), ATOL, RTOL, &format!("{what} rhat"));
+            // sparse support must be IDENTICAL (selection is integer-exact)
+            let nz_h: Vec<usize> = (0..D).filter(|&i| hlo_pipe.utilde()[i] != 0.0).collect();
+            let nz_r: Vec<usize> = (0..D).filter(|&i| rust_pipe.utilde()[i] != 0.0).collect();
+            if entry.quantizer == "topk" || entry.quantizer == "randk" {
+                assert_eq!(nz_h, nz_r, "{what} support");
+            }
+            assert_eq!(s_hlo.nnz, s_rust.nnz, "{what} nnz");
+        }
+        println!("OK {}", entry.name);
+    }
+}
+
+#[test]
+fn hlo_baked_k_matches_manifest() {
+    // artifact k metadata must equal the actual sparsity the artifact emits
+    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    let runtime = Runtime::new(manifest.clone()).unwrap();
+    let entry = manifest
+        .compress
+        .iter()
+        .find(|c| c.d == D && c.quantizer == "topk" && !c.ef)
+        .unwrap()
+        .clone();
+    let cfg = scheme_from(&entry);
+    let exec = CompressExec::load(&runtime, entry.clone()).unwrap();
+    let mut pipe = WorkerPipeline::new(cfg, D);
+    let mut g = vec![0.0f32; D];
+    Pcg64::seeded(7).fill_gaussian(&mut g, 1.0);
+    let stats = exec.step(&mut pipe, &g, 0.0).unwrap();
+    assert_eq!(stats.nnz, entry.k);
+}

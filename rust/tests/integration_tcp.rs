@@ -1,0 +1,82 @@
+//! Multi-process-style deployment test: the same Worker/Master loops over
+//! the TCP transport (in-process threads, real sockets on 127.0.0.1).
+//! Requires `make artifacts`.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use tempo::comm::tcp::{TcpMaster, TcpWorker};
+use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg};
+use tempo::coordinator::master::{MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::data::{Shard, SynthImages};
+use tempo::model::Manifest;
+use tempo::optim::LrSchedule;
+use tempo::runtime::Runtime;
+
+#[test]
+fn tcp_training_round_trip() {
+    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    let entry = manifest.model("mlp_tiny").unwrap().clone();
+    let d = entry.d;
+    let n_workers = 2usize;
+    let steps = 6u64;
+    let scheme = SchemeCfg::new(
+        QuantizerKind::TopK { k: d / 100 },
+        PredictorKind::EstK,
+        true,
+        0.9,
+    )
+    .unwrap();
+    let schedule = LrSchedule::constant(0.05);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let mut worker_threads = Vec::new();
+    for wid in 0..n_workers {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "mlp_tiny".into(),
+            scheme: scheme.clone(),
+            backend: tempo::config::experiment::Backend::Rust,
+            schedule,
+            steps,
+            seed: 7,
+            clip_norm: None,
+        };
+        let manifest = manifest.clone();
+        let entry = entry.clone();
+        worker_threads.push(std::thread::spawn(move || {
+            let transport = TcpWorker::connect(addr, wid as u32).unwrap();
+            let shard = Shard::new(wid, n_workers, 512, entry.batch, 7);
+            let dataset = Arc::new(SynthImages::new(entry.classes, 512, 64, 7, 4.0));
+            let runtime = Runtime::new(manifest).unwrap();
+            WorkerLoop::new(spec, transport, shard, dataset).run(&runtime).unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "mlp_tiny".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed: 7,
+        samples_per_round: entry.batch * n_workers,
+        train_len: 512,
+        data_noise: 4.0,
+    };
+    let transport = TcpMaster::from_listener(listener, n_workers).unwrap();
+    let runtime = Runtime::new(manifest).unwrap();
+    let report = MasterLoop::new(master_spec, transport).run(&runtime).unwrap();
+
+    assert_eq!(report.comm.messages(), steps * n_workers as u64);
+    assert!(report.comm.bits_per_component() > 0.0);
+    assert!(report.final_test_loss.is_finite());
+    for t in worker_threads {
+        let summary = t.join().unwrap();
+        assert_eq!(summary.rounds, steps);
+    }
+}

@@ -1,0 +1,212 @@
+//! Property tests over the coordinator-side invariants (no PJRT needed):
+//! payload round trips, aggregation algebra, predictor sync, EF accounting,
+//! frame wire format. Uses the in-repo prop framework (testing::prop).
+
+use tempo::coding::{decode_payload, encode_payload};
+use tempo::comm::Frame;
+use tempo::compress::{
+    MasterChain, Predictor, PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline,
+};
+use tempo::testing::prop::{check, PropConfig};
+
+fn cfgp(cases: u32) -> PropConfig {
+    PropConfig { cases, seed: 0xBEEF, max_size: 300 }
+}
+
+fn arbitrary_scheme(g: &mut tempo::testing::prop::Gen, d: usize) -> SchemeCfg {
+    let quantizer = match g.usize_in(0, 4) {
+        0 => QuantizerKind::None,
+        1 => QuantizerKind::Sign,
+        2 => QuantizerKind::TopK { k: g.usize_in(1, d) },
+        3 => QuantizerKind::TopKQ { k: g.usize_in(1, d) },
+        _ => QuantizerKind::RandK { prob: g.f32_range(0.0, 1.0) },
+    };
+    let predictor = if matches!(quantizer, QuantizerKind::TopK { .. }) {
+        *g.pick(&[PredictorKind::Zero, PredictorKind::PLin, PredictorKind::EstK])
+    } else {
+        *g.pick(&[PredictorKind::Zero, PredictorKind::PLin])
+    };
+    // exclude the known-divergent PLin+EF combination from long-horizon
+    // sync checks (fig5 reproduces it on purpose)
+    let ef = predictor != PredictorKind::PLin && g.bool();
+    SchemeCfg::new(quantizer, predictor, ef, g.f32_range(0.0, 0.999)).unwrap()
+}
+
+#[test]
+fn prop_payload_roundtrip_every_quantizer() {
+    check(cfgp(80), |g| {
+        let d = g.usize_in(1, 400);
+        let scheme = arbitrary_scheme(g, d);
+        let mut pipe = WorkerPipeline::new(scheme.clone(), d);
+        // advance a random number of rounds so Rand-K masks vary; the
+        // encoder must be called with the round the quantizer used
+        let rounds = g.usize_in(1, 5) as u64;
+        let mut round = 0;
+        for t in 0..rounds {
+            let gvec: Vec<f32> = (0..d).map(|_| g.gaussian_f32()).collect();
+            pipe.step(&gvec, if t == 0 { 0.0 } else { 1.0 });
+            round = t;
+        }
+        let payload = encode_payload(scheme.payload_kind(), pipe.utilde(), round);
+        let mut out = Vec::new();
+        decode_payload(scheme.payload_kind(), &payload, d, round, &mut out)
+            .map_err(|e| format!("decode failed: {e}"))?;
+        // exact f32 round trip (sign quantizer zeros documented aside, but
+        // gaussian inputs are never exactly zero)
+        if out != pipe.utilde() {
+            return Err(format!("payload roundtrip mismatch for {}", scheme.tag()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_master_chain_stays_in_sync_with_worker() {
+    check(cfgp(40), |g| {
+        let d = g.usize_in(2, 200);
+        let scheme = arbitrary_scheme(g, d);
+        let mut worker = WorkerPipeline::new(scheme.clone(), d);
+        let mut master = MasterChain::new(&scheme, d);
+        let mut rtilde = vec![0.0f32; d];
+        for t in 0..30u64 {
+            let gvec: Vec<f32> = (0..d).map(|_| g.gaussian_f32()).collect();
+            let lr_ratio = if t == 0 { 0.0 } else { 1.0 };
+            let rhat_pre: Vec<f32> = worker.rhat().to_vec();
+            worker.step(&gvec, lr_ratio);
+            master.receive(worker.utilde(), &mut rtilde);
+            if master.rhat() != worker.rhat() {
+                return Err(format!("rhat desync at t={t} for {}", scheme.tag()));
+            }
+            for i in 0..d {
+                let want = worker.utilde()[i] + rhat_pre[i];
+                if rtilde[i] != want {
+                    return Err(format!("rtilde[{i}] = {} != {want}", rtilde[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregation_is_mean_of_reconstructions() {
+    check(cfgp(30), |g| {
+        let d = g.usize_in(1, 128);
+        let n = g.usize_in(1, 6);
+        let scheme = SchemeCfg::new(
+            QuantizerKind::TopK { k: g.usize_in(1, d) },
+            PredictorKind::EstK,
+            true,
+            0.9,
+        )
+        .unwrap();
+        let mut workers: Vec<WorkerPipeline> =
+            (0..n).map(|_| WorkerPipeline::new(scheme.clone(), d)).collect();
+        let mut chains: Vec<MasterChain> =
+            (0..n).map(|_| MasterChain::new(&scheme, d)).collect();
+        let mut rtilde = vec![0.0f32; d];
+        let mut agg = vec![0.0f32; d];
+        let mut expect = vec![0.0f64; d];
+        for t in 0..5u64 {
+            agg.iter_mut().for_each(|x| *x = 0.0);
+            expect.iter_mut().for_each(|x| *x = 0.0);
+            for (wkr, chain) in workers.iter_mut().zip(chains.iter_mut()) {
+                let gvec: Vec<f32> = (0..d).map(|_| g.gaussian_f32()).collect();
+                wkr.step(&gvec, if t == 0 { 0.0 } else { 1.0 });
+                chain.receive(wkr.utilde(), &mut rtilde);
+                for i in 0..d {
+                    agg[i] += rtilde[i] / n as f32;
+                    expect[i] += rtilde[i] as f64;
+                }
+            }
+            for i in 0..d {
+                let want = (expect[i] / n as f64) as f32;
+                if (agg[i] - want).abs() > 1e-5 * want.abs().max(1.0) {
+                    return Err(format!("agg[{i}] {} != {want}", agg[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ef_error_accounting() {
+    // e_t == u_t − ũ_t and (no-EF) ‖ũ‖² + ‖e‖² ≈ ‖u‖² for Top-K (kept
+    // components exact, dropped components become error: orthogonal split)
+    check(cfgp(40), |g| {
+        let d = g.usize_in(2, 300);
+        let k = g.usize_in(1, d);
+        let scheme =
+            SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::Zero, false, 0.9).unwrap();
+        let mut pipe = WorkerPipeline::new(scheme, d);
+        for _ in 0..5 {
+            let gvec: Vec<f32> = (0..d).map(|_| g.gaussian_f32()).collect();
+            let stats = pipe.step(&gvec, 1.0);
+            let ut2 = tempo::tensor::norm2_sq(pipe.utilde());
+            let sum = ut2 + stats.e_norm_sq;
+            if (sum - stats.u_norm_sq).abs() > 1e-4 * stats.u_norm_sq.max(1.0) {
+                return Err(format!(
+                    "energy split violated: {sum} vs {}",
+                    stats.u_norm_sq
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frame_wire_roundtrip() {
+    check(cfgp(60), |g| {
+        let n = g.usize_in(0, 512);
+        let bytes: Vec<u8> = (0..n).map(|_| (g.u64() & 0xFF) as u8).collect();
+        let f = Frame {
+            kind: tempo::comm::FrameKind::Update,
+            worker: (g.u64() & 0xFFFF) as u32,
+            round: g.u64(),
+            payload_tag: (g.u64() & 0x7) as u8,
+            payload_bits: g.u64() & 0xFFFF_FFFF,
+            bytes,
+            loss: g.gaussian_f32(),
+        };
+        let back = Frame::deserialize(&f.serialize()).map_err(|e| e.to_string())?;
+        if back.worker != f.worker
+            || back.round != f.round
+            || back.payload_bits != f.payload_bits
+            || back.bytes != f.bytes
+            || back.loss.to_bits() != f.loss.to_bits()
+        {
+            return Err("frame roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_predictor_state_machine_tau_bounds() {
+    // tau counts misses since last hit; after any hit it resets to 0 and
+    // never exceeds the global step count
+    check(cfgp(40), |g| {
+        let d = g.usize_in(1, 100);
+        let mut p = Predictor::new(PredictorKind::EstK, 0.9, d);
+        let steps = g.usize_in(1, 60);
+        for t in 0..steps {
+            let ut: Vec<f32> = (0..d)
+                .map(|_| if g.bool() { g.gaussian_f32() } else { 0.0 })
+                .collect();
+            p.update(&ut);
+            if let Predictor::EstK { tau, .. } = &p {
+                for (i, &tv) in tau.iter().enumerate() {
+                    if ut[i] != 0.0 && tv != 0.0 {
+                        return Err(format!("tau[{i}] != 0 after hit"));
+                    }
+                    if tv > (t + 1) as f32 {
+                        return Err(format!("tau[{i}]={tv} exceeds step {t}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
