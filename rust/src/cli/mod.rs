@@ -1,7 +1,12 @@
 //! Command-line interface (in-repo arg parser; offline build has no clap).
 //!
-//! Grammar: `tempo <subcommand> [--flag value]... [--switch]...`
-//! Unknown flags are errors; `--key=value` and `--key value` both work.
+//! Grammar: `tempo <subcommand> [--flag value]... [--switch]... [--] [pos]...`
+//! `--key=value` and `--key value` both work; everything after a bare `--`
+//! is positional. A `--flag` followed by another `--token` is recorded as a
+//! switch — and because the parser is schema-less it cannot know a value
+//! was intended, so the typed accessors (`flag`, `usize_flag`, ...) report
+//! an error instead of silently falling back to the default (use
+//! `--flag=value` for values that start with `-`).
 
 use std::collections::BTreeMap;
 
@@ -27,18 +32,27 @@ impl Args {
             _ => it.next().unwrap_or_else(|| "help".to_string()),
         };
         let mut out = Args { subcommand, ..Default::default() };
+        let mut only_positional = false;
         while let Some(a) = it.next() {
+            if only_positional {
+                out.positional.push(a);
+                continue;
+            }
+            if a == "--" {
+                // end-of-flags separator: the rest is positional verbatim
+                only_positional = true;
+                continue;
+            }
             if let Some(rest) = a.strip_prefix("--") {
-                if rest.is_empty() {
-                    bail!("bare -- not supported");
-                }
                 if let Some((k, v)) = rest.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().map(|n| n.starts_with("--")).unwrap_or(true) {
+                    // next token is absent, the separator, or another flag:
+                    // record a switch (see module docs for the error path)
+                    out.switches.push(rest.to_string());
+                } else {
                     let v = it.next().unwrap();
                     out.flags.insert(rest.to_string(), v);
-                } else {
-                    out.switches.push(rest.to_string());
                 }
             } else {
                 out.positional.push(a);
@@ -51,30 +65,41 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
-    pub fn flag(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+    /// Value of `--name`. Errors when `--name` was given but its value got
+    /// parsed as a switch (the next argument started with `--`).
+    pub fn flag(&self, name: &str) -> Result<Option<&str>> {
+        if let Some(v) = self.flags.get(name) {
+            return Ok(Some(v.as_str()));
+        }
+        if self.switches.iter().any(|s| s == name) {
+            bail!(
+                "flag --{name} requires a value but none was consumed (the next \
+                 argument started with '--'); write --{name}=<value> instead"
+            );
+        }
+        Ok(None)
     }
 
-    pub fn flag_or(&self, name: &str, default: &str) -> String {
-        self.flag(name).unwrap_or(default).to_string()
+    pub fn flag_or(&self, name: &str, default: &str) -> Result<String> {
+        Ok(self.flag(name)?.unwrap_or(default).to_string())
     }
 
     pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
-        match self.flag(name) {
+        match self.flag(name)? {
             Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
             None => Ok(default),
         }
     }
 
     pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
-        match self.flag(name) {
+        match self.flag(name)? {
             Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
             None => Ok(default),
         }
     }
 
     pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
-        match self.flag(name) {
+        match self.flag(name)? {
             Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
             None => Ok(default),
         }
@@ -88,7 +113,7 @@ impl Args {
         &self.positional
     }
 
-    /// key=value overrides after the known flags (e.g. `--set scheme.beta=0.9`).
+    /// key=value overrides after the known flags (e.g. `--set.scheme.beta 0.9`).
     pub fn overrides(&self) -> Vec<(String, String)> {
         self.flags
             .iter()
@@ -103,7 +128,8 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 (Adikari & Draper, IEEE JSAIT 2021 — three-layer rust/JAX/Pallas reproduction)
 
 USAGE:
-  tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo] [--csv out.csv]
+  tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
+              [--scheme <spec>] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         ablation-beta | ablation-block | ablation-master | all
@@ -112,8 +138,14 @@ USAGE:
   tempo worker-connect --connect <addr:port> --worker-id I --config <file.toml>
   tempo help
 
+Scheme spec strings (see DESIGN.md for the grammar → paper Eq. (1) mapping):
+  topk:k_frac=0.0024/estk/ef/beta=0.99        Table I bottom row
+  sign/plin/beta=0.99                         scaled-sign with prediction
+  blocks(emb=0.25:topk:k=64/estk/ef;rest=0.75:sign/plin)   blockwise composite
+
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.
+Tier-1 CI entry point: scripts/ci.sh (fmt, clippy, build, test).
 ";
 
 #[cfg(test)]
@@ -128,7 +160,7 @@ mod tests {
     fn subcommand_and_flags() {
         let a = parse("train --config x.toml --steps 100 --smoke");
         assert_eq!(a.subcommand, "train");
-        assert_eq!(a.flag("config"), Some("x.toml"));
+        assert_eq!(a.flag("config").unwrap(), Some("x.toml"));
         assert_eq!(a.u64_flag("steps", 0).unwrap(), 100);
         assert!(a.has_switch("smoke"));
         assert!(!a.has_switch("other"));
@@ -139,7 +171,7 @@ mod tests {
         let a = parse("exp fig6 --out=results --beta 0.99");
         assert_eq!(a.subcommand, "exp");
         assert_eq!(a.positional(), &["fig6".to_string()]);
-        assert_eq!(a.flag("out"), Some("results"));
+        assert_eq!(a.flag("out").unwrap(), Some("results"));
         assert!((a.f64_flag("beta", 0.0).unwrap() - 0.99).abs() < 1e-12);
     }
 
@@ -153,5 +185,73 @@ mod tests {
     fn empty_defaults_to_help() {
         let a = Args::parse(Vec::<String>::new()).unwrap();
         assert_eq!(a.subcommand, "help");
+    }
+
+    #[test]
+    fn swallowed_flag_value_is_an_error_not_a_silent_default() {
+        // `--steps --smoke`: the user almost certainly forgot the value; the
+        // old parser silently used the default. Typed lookups now error.
+        let a = parse("train --steps --smoke");
+        assert!(a.has_switch("steps"));
+        assert!(a.has_switch("smoke"));
+        let e = a.u64_flag("steps", 7).unwrap_err();
+        assert!(format!("{e:#}").contains("--steps=<value>"), "{e:#}");
+        assert!(a.flag("steps").is_err());
+        assert!(a.flag_or("steps", "x").is_err());
+        // flags that were never mentioned still default cleanly
+        assert_eq!(a.u64_flag("workers", 4).unwrap(), 4);
+        assert_eq!(a.flag("workers").unwrap(), None);
+    }
+
+    #[test]
+    fn dashed_values_work_via_equals_form() {
+        let a = parse("pr --note=--draft --title=a=b --empty=");
+        assert_eq!(a.flag("note").unwrap(), Some("--draft"));
+        // only the first '=' splits key from value
+        assert_eq!(a.flag("title").unwrap(), Some("a=b"));
+        assert_eq!(a.flag("empty").unwrap(), Some(""));
+    }
+
+    #[test]
+    fn single_dash_values_are_consumed() {
+        // negative numbers are ordinary values
+        let a = parse("train --lr -0.5 --offset -3");
+        assert!((a.f64_flag("lr", 0.0).unwrap() + 0.5).abs() < 1e-12);
+        assert_eq!(a.flag("offset").unwrap(), Some("-3"));
+    }
+
+    #[test]
+    fn double_dash_ends_flag_parsing() {
+        let a = parse("run --steps 3 -- --not-a-flag pos --x=y");
+        assert_eq!(a.u64_flag("steps", 0).unwrap(), 3);
+        assert_eq!(
+            a.positional(),
+            &["--not-a-flag".to_string(), "pos".to_string(), "--x=y".to_string()]
+        );
+        assert!(!a.has_switch("not-a-flag"));
+    }
+
+    #[test]
+    fn trailing_flag_is_a_switch() {
+        let a = parse("run --verbose");
+        assert!(a.has_switch("verbose"));
+        // and `--flag --` (separator next) is a switch too
+        let a = parse("run --verbose -- x");
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.positional(), &["x".to_string()]);
+    }
+
+    #[test]
+    fn overrides_pass_through() {
+        let a = parse("train --set.scheme.beta 0.9 --set.lr.base 0.1");
+        let mut o = a.overrides();
+        o.sort();
+        assert_eq!(
+            o,
+            vec![
+                ("lr.base".to_string(), "0.1".to_string()),
+                ("scheme.beta".to_string(), "0.9".to_string())
+            ]
+        );
     }
 }

@@ -1,11 +1,21 @@
 //! The paper's compression algorithms (pure-Rust reference backend).
 //!
-//! * [`SchemeCfg`] — a point in the design space: quantizer × predictor ×
-//!   error-feedback × β (paper Fig. 2 with the EF switch and blue blocks).
-//! * [`quantizer`] — Q: Top-K, Top-K-Q, Scaled-sign, Rand-K, identity.
-//! * [`predictor`] — P: Zero, P_Lin (Eq. 4), Est-K (Alg. 1).
+//! The open, composable API lives in [`crate::scheme`] (traits + registry +
+//! spec strings); this module holds the Eq.-(1) pipeline machinery built on
+//! it, plus the legacy closed-enum configuration kept as a thin shim:
+//!
 //! * [`pipeline`] — the full worker box (Eq. (1)) and the master-side
-//!   decode-and-predict chain, kept in bit-exact sync.
+//!   decode-and-predict chain, generic over `dyn Quantize`/`dyn Predict`
+//!   and kept in bit-exact sync across worker and master.
+//! * [`quantizer`] / [`predictor`] — **deprecated shims**: the old
+//!   `QuantizerKind` / `Predictor` enums, now delegating into the trait
+//!   objects so every match arm disappeared from the hot path. Kept so
+//!   existing configs, tests and the HLO-equivalence suite stay source- and
+//!   bit-compatible. New code should use `scheme::Scheme` / spec strings.
+//! * [`SchemeCfg`] — **deprecated shim**: quantizer × predictor × EF × β as
+//!   plain data; [`SchemeCfg::to_scheme`] forwards into the registry.
+//! * [`randk`] — shared-seed Bernoulli mask helpers (used by the Rand-K
+//!   quantizer and the `MaskedValues` wire format).
 //!
 //! The same step is also available as an AOT-compiled HLO artifact built
 //! from the Pallas kernels (see `runtime::CompressExec`); integration tests
@@ -21,8 +31,10 @@ pub use predictor::Predictor;
 pub use quantizer::QuantizerKind;
 
 use crate::coding::PayloadKind;
+use crate::scheme::{Predict, QuantParams, Scheme, SchemeRegistry};
 
-/// Which predictor P to run (paper Sec. III-A, IV-C).
+/// Which predictor P to run (paper Sec. III-A, IV-C). Deprecated shim —
+/// predictors are open via `scheme::SchemeRegistry::register_predictor`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PredictorKind {
     /// No prediction (removes the blue blocks in Fig. 2).
@@ -50,9 +62,16 @@ impl PredictorKind {
             _ => anyhow::bail!("unknown predictor {s:?} (zero|plin|estk)"),
         })
     }
+
+    /// Owned trait object for the new Scheme API.
+    pub fn to_object(&self, beta: f32, d: usize) -> Box<dyn Predict> {
+        Predictor::new(*self, beta, d).into_box()
+    }
 }
 
-/// Full scheme configuration.
+/// Full scheme configuration. Deprecated shim over [`crate::scheme::Scheme`]
+/// — kept for config compatibility and the golden-equivalence tests;
+/// [`Self::to_scheme`] forwards into the registry.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchemeCfg {
     pub quantizer: QuantizerKind,
@@ -93,6 +112,31 @@ impl SchemeCfg {
     /// Wire format for this scheme's messages.
     pub fn payload_kind(&self) -> PayloadKind {
         self.quantizer.payload_kind()
+    }
+
+    /// Forward into the registry-backed Scheme API. Panics only on
+    /// configurations [`Self::validate`] rejects (e.g. β outside [0,1)).
+    pub fn to_scheme(&self) -> Scheme {
+        let mut params = QuantParams::new();
+        let qname = match self.quantizer {
+            QuantizerKind::None => "none",
+            QuantizerKind::Sign => "sign",
+            QuantizerKind::TopK { k } => {
+                params.insert("k".to_string(), k as f64);
+                "topk"
+            }
+            QuantizerKind::TopKQ { k } => {
+                params.insert("k".to_string(), k as f64);
+                "topkq"
+            }
+            QuantizerKind::RandK { prob } => {
+                params.insert("p".to_string(), prob as f64);
+                "randk"
+            }
+        };
+        SchemeRegistry::global()
+            .single(qname, params, self.predictor.as_str(), self.ef, self.beta)
+            .expect("SchemeCfg maps onto built-in registry entries")
     }
 
     /// Human-readable tag, mirrors the python `Scheme.tag` naming.
@@ -143,5 +187,19 @@ mod tests {
             assert_eq!(PredictorKind::parse(p.as_str()).unwrap(), p);
         }
         assert!(PredictorKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn to_scheme_forwards_into_registry() {
+        let cfg = SchemeCfg::new(
+            QuantizerKind::RandK { prob: 0.25 },
+            PredictorKind::PLin,
+            false,
+            0.9,
+        )
+        .unwrap();
+        let s = cfg.to_scheme();
+        assert_eq!(s.spec(), "randk:p=0.25/plin/noef/beta=0.9");
+        assert!(s.worker(32).is_ok());
     }
 }

@@ -1,5 +1,6 @@
 //! The full Fig.-2 worker pipeline (paper Eq. (1)) and the master-side
-//! decode-and-predict chain — pure-Rust backend.
+//! decode-and-predict chain — pure-Rust backend, built from the trait
+//! objects of [`crate::scheme`] (any `Quantize` × any `Predict`).
 //!
 //! Per iteration t at worker i:
 //! ```text
@@ -13,6 +14,11 @@
 //! ```
 //! Note e_t is tracked even when EF is off — it is the Fig. 5 / Fig. 8
 //! metric ‖e_t‖².
+
+use std::sync::Arc;
+
+use crate::coding::PayloadKind;
+use crate::scheme::{Predict, Quantize};
 
 use super::{Predictor, SchemeCfg};
 
@@ -32,26 +38,44 @@ pub struct StepStats {
 /// Worker-side state + scratch for one model replica.
 #[derive(Clone, Debug)]
 pub struct WorkerPipeline {
-    pub cfg: SchemeCfg,
+    quantizer: Arc<dyn Quantize>,
+    predictor: Box<dyn Predict>,
+    ef: bool,
+    beta: f32,
     d: usize,
     round: u64,
     v: Vec<f32>,
     e: Vec<f32>,
-    predictor: Predictor,
     u: Vec<f32>,
     utilde: Vec<f32>,
 }
 
 impl WorkerPipeline {
+    /// Build from the legacy closed-enum configuration (shim path — maps
+    /// onto the same trait objects as the registry).
     pub fn new(cfg: SchemeCfg, d: usize) -> Self {
-        let predictor = Predictor::new(cfg.predictor, cfg.beta, d);
+        let predictor = Predictor::new(cfg.predictor, cfg.beta, d).into_box();
+        Self::from_parts(cfg.quantizer.to_object(), predictor, cfg.ef, cfg.beta, d)
+    }
+
+    /// Build from trait objects (the Scheme-API path).
+    pub fn from_parts(
+        quantizer: Arc<dyn Quantize>,
+        predictor: Box<dyn Predict>,
+        ef: bool,
+        beta: f32,
+        d: usize,
+    ) -> Self {
+        debug_assert_eq!(predictor.dim(), d, "predictor dim mismatch");
         Self {
-            cfg,
+            quantizer,
+            predictor,
+            ef,
+            beta,
             d,
             round: 0,
             v: vec![0.0; d],
             e: vec![0.0; d],
-            predictor,
             u: vec![0.0; d],
             utilde: vec![0.0; d],
         }
@@ -63,6 +87,27 @@ impl WorkerPipeline {
 
     pub fn round(&self) -> u64 {
         self.round
+    }
+
+    pub fn ef(&self) -> bool {
+        self.ef
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    pub fn quantizer(&self) -> &dyn Quantize {
+        &*self.quantizer
+    }
+
+    pub fn predictor(&self) -> &dyn Predict {
+        &*self.predictor
+    }
+
+    /// Wire format of this pipeline's quantizer.
+    pub fn payload_kind(&self) -> PayloadKind {
+        self.quantizer.payload_kind()
     }
 
     /// Momentum vector v_t (read-only; Fig. 6 traces).
@@ -90,16 +135,12 @@ impl WorkerPipeline {
         self.predictor.rhat()
     }
 
-    pub fn predictor(&self) -> &Predictor {
-        &self.predictor
-    }
-
     /// Run one full Eq. (1) iteration. `lr_ratio` = η_{t-1}/η_t (0 at t=0).
     pub fn step(&mut self, g: &[f32], lr_ratio: f32) -> StepStats {
         assert_eq!(g.len(), self.d, "gradient dim mismatch");
-        let beta = self.cfg.beta;
+        let beta = self.beta;
         let one_minus = 1.0 - beta;
-        let ef = self.cfg.ef;
+        let ef = self.ef;
         let rhat = self.predictor.rhat();
 
         // (1a)-(1c) fused: v, r, u in one pass (mirrors the Pallas kernel).
@@ -114,7 +155,7 @@ impl WorkerPipeline {
         }
 
         // (1d)
-        self.cfg.quantizer.quantize(&self.u, &mut self.utilde, self.round);
+        self.quantizer.quantize(&self.u, &mut self.utilde, self.round);
 
         // (1e) + stats
         let mut e_norm_sq = 0.0f64;
@@ -172,13 +213,20 @@ impl WorkerPipeline {
 /// Master-side per-worker chain: decode ũ → r̃ = ũ + r̂ → advance P.
 #[derive(Clone, Debug)]
 pub struct MasterChain {
-    predictor: Predictor,
+    predictor: Box<dyn Predict>,
     d: usize,
 }
 
 impl MasterChain {
+    /// Legacy shim constructor (closed-enum configuration).
     pub fn new(cfg: &SchemeCfg, d: usize) -> Self {
-        Self { predictor: Predictor::new(cfg.predictor, cfg.beta, d), d }
+        Self::from_predictor(Predictor::new(cfg.predictor, cfg.beta, d).into_box(), d)
+    }
+
+    /// Build from a trait object (the Scheme-API path).
+    pub fn from_predictor(predictor: Box<dyn Predict>, d: usize) -> Self {
+        debug_assert_eq!(predictor.dim(), d, "predictor dim mismatch");
+        Self { predictor, d }
     }
 
     pub fn dim(&self) -> usize {
@@ -394,5 +442,38 @@ mod tests {
             let want = g[i] + 2.0 * e0[i];
             assert_eq!(pipe.quantizer_input()[i], want);
         }
+    }
+
+    #[test]
+    fn from_parts_equals_enum_construction() {
+        // the two construction paths must produce bit-identical pipelines
+        let d = 200;
+        let cfg = SchemeCfg::new(
+            QuantizerKind::TopK { k: 9 },
+            PredictorKind::EstK,
+            true,
+            0.95,
+        )
+        .unwrap();
+        let mut a = WorkerPipeline::new(cfg.clone(), d);
+        let mut b = WorkerPipeline::from_parts(
+            cfg.quantizer.to_object(),
+            Predictor::new(cfg.predictor, cfg.beta, d).into_box(),
+            cfg.ef,
+            cfg.beta,
+            d,
+        );
+        let mut rng = Pcg64::seeded(12);
+        for t in 0..50 {
+            let g = gvec(&mut rng, d);
+            let lr = if t == 0 { 0.0 } else { 1.0 };
+            let sa = a.step(&g, lr);
+            let sb = b.step(&g, lr);
+            assert_eq!(sa.e_norm_sq, sb.e_norm_sq);
+            assert_eq!(a.utilde(), b.utilde());
+        }
+        assert_eq!(a.quantizer().name(), "topk");
+        assert_eq!(a.predictor().name(), "estk");
+        assert!(a.ef());
     }
 }

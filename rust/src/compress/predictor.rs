@@ -1,156 +1,97 @@
-//! Predictors P (paper Eq. (1g)) with their per-component state.
+//! Legacy predictor selector — now a thin shim over the trait-based state
+//! machines in [`crate::scheme::predict`].
 //!
-//! The same `Predictor` value runs at the worker and (one per worker) at
-//! the master, fed the identical decoded `utilde` stream — so the two
-//! copies stay in bit-exact sync (same f32 ops in the same order).
+//! The numeric bodies (and their per-component state) live in
+//! `ZeroPredictor` / `PLinPredictor` / `EstKPredictor`; this enum wraps one
+//! of them so existing call sites keep compiling. New code should hold a
+//! `Box<dyn Predict>` (what `WorkerPipeline` does internally).
 
 use super::PredictorKind;
+use crate::scheme::predict::{EstKPredictor, PLinPredictor, Predict, ZeroPredictor};
 
-/// Predictor state machine. `rhat()` is the prediction of r_t used when the
-/// current iteration's u_t = r_t − r̂_t is formed; `update(utilde)` advances
-/// to r̂_{t+1} after the quantized update is known (Eq. (1g)).
+pub use crate::scheme::predict::PredictorState;
+
+/// Predictor state machine (deprecated shim; see module docs). `rhat()` is
+/// the prediction of r_t used when u_t = r_t − r̂_t is formed;
+/// `update(utilde)` advances to r̂_{t+1} (Eq. (1g)).
 #[derive(Clone, Debug)]
 pub enum Predictor {
-    Zero {
-        zeros: Vec<f32>,
-    },
-    PLin {
-        beta: f32,
-        rhat: Vec<f32>,
-    },
-    EstK {
-        beta: f32,
-        rhat: Vec<f32>,
-        /// last estimate of the momentum (time-average between peaks)
-        p: Vec<f32>,
-        /// sum of predictions issued since the last received update
-        s: Vec<f32>,
-        /// iterations since the last received update
-        tau: Vec<f32>,
-    },
+    Zero(ZeroPredictor),
+    PLin(PLinPredictor),
+    EstK(EstKPredictor),
 }
 
 impl Predictor {
     pub fn new(kind: PredictorKind, beta: f32, d: usize) -> Self {
         match kind {
-            PredictorKind::Zero => Predictor::Zero { zeros: vec![0.0; d] },
-            PredictorKind::PLin => Predictor::PLin { beta, rhat: vec![0.0; d] },
-            PredictorKind::EstK => Predictor::EstK {
-                beta,
-                rhat: vec![0.0; d],
-                p: vec![0.0; d],
-                s: vec![0.0; d],
-                tau: vec![0.0; d],
-            },
+            PredictorKind::Zero => Predictor::Zero(ZeroPredictor::new(d)),
+            PredictorKind::PLin => Predictor::PLin(PLinPredictor::new(beta, d)),
+            PredictorKind::EstK => Predictor::EstK(EstKPredictor::new(beta, d)),
         }
     }
 
     pub fn kind(&self) -> PredictorKind {
         match self {
-            Predictor::Zero { .. } => PredictorKind::Zero,
-            Predictor::PLin { .. } => PredictorKind::PLin,
-            Predictor::EstK { .. } => PredictorKind::EstK,
+            Predictor::Zero(_) => PredictorKind::Zero,
+            Predictor::PLin(_) => PredictorKind::PLin,
+            Predictor::EstK(_) => PredictorKind::EstK,
+        }
+    }
+
+    fn as_dyn(&self) -> &dyn Predict {
+        match self {
+            Predictor::Zero(p) => p,
+            Predictor::PLin(p) => p,
+            Predictor::EstK(p) => p,
+        }
+    }
+
+    fn as_dyn_mut(&mut self) -> &mut dyn Predict {
+        match self {
+            Predictor::Zero(p) => p,
+            Predictor::PLin(p) => p,
+            Predictor::EstK(p) => p,
+        }
+    }
+
+    /// Move into a trait object for the new Scheme API.
+    pub fn into_box(self) -> Box<dyn Predict> {
+        match self {
+            Predictor::Zero(p) => Box::new(p),
+            Predictor::PLin(p) => Box::new(p),
+            Predictor::EstK(p) => Box::new(p),
         }
     }
 
     pub fn dim(&self) -> usize {
-        self.rhat().len()
+        self.as_dyn().dim()
     }
 
     /// Current prediction r̂_t.
     pub fn rhat(&self) -> &[f32] {
-        match self {
-            Predictor::Zero { zeros } => zeros,
-            Predictor::PLin { rhat, .. } => rhat,
-            Predictor::EstK { rhat, .. } => rhat,
-        }
+        self.as_dyn().rhat()
     }
 
     /// Advance the state given the received quantized update ũ_t.
     pub fn update(&mut self, utilde: &[f32]) {
-        match self {
-            Predictor::Zero { .. } => {}
-            Predictor::PLin { beta, rhat } => {
-                // r̂_{t+1} = β·r̃_t = β·(ũ_t + r̂_t)
-                debug_assert_eq!(rhat.len(), utilde.len());
-                let b = *beta;
-                for (r, &ut) in rhat.iter_mut().zip(utilde) {
-                    *r = b * (ut + *r);
-                }
-            }
-            Predictor::EstK { beta, rhat, p, s, tau } => {
-                debug_assert_eq!(rhat.len(), utilde.len());
-                let b = *beta;
-                for i in 0..utilde.len() {
-                    let ut = utilde[i];
-                    if ut != 0.0 {
-                        // received a Top-K peak: refresh the momentum
-                        // estimate to the time-average since the last peak
-                        let p_new = (s[i] + ut) / (tau[i] + 1.0);
-                        let rh = b * p_new;
-                        p[i] = p_new;
-                        rhat[i] = rh;
-                        s[i] = rh;
-                        tau[i] = 0.0;
-                    } else {
-                        // miss: decay the chain, accumulate the prediction
-                        let rh = b * rhat[i];
-                        rhat[i] = rh;
-                        s[i] += rh;
-                        tau[i] += 1.0;
-                    }
-                }
-            }
-        }
+        self.as_dyn_mut().update(utilde)
     }
 
-    /// Direct state access for the HLO-backend bridge (runtime feeds the
-    /// artifact the same (r̂, p, S, τ) buffers it maintains here).
+    /// Direct state access for the HLO-backend bridge.
     pub fn state_view(&self) -> PredictorState<'_> {
-        match self {
-            Predictor::Zero { zeros } => PredictorState {
-                rhat: zeros,
-                p: None,
-                s: None,
-                tau: None,
-            },
-            Predictor::PLin { rhat, .. } => PredictorState { rhat, p: None, s: None, tau: None },
-            Predictor::EstK { rhat, p, s, tau, .. } => PredictorState {
-                rhat,
-                p: Some(p),
-                s: Some(s),
-                tau: Some(tau),
-            },
-        }
+        self.as_dyn().state_view()
     }
 
     /// Overwrite state from the HLO artifact outputs.
-    pub fn load_state(&mut self, rhat_new: &[f32], p_new: Option<&[f32]>, s_new: Option<&[f32]>, tau_new: Option<&[f32]>) {
-        match self {
-            Predictor::Zero { .. } => {}
-            Predictor::PLin { rhat, .. } => rhat.copy_from_slice(rhat_new),
-            Predictor::EstK { rhat, p, s, tau, .. } => {
-                rhat.copy_from_slice(rhat_new);
-                if let Some(x) = p_new {
-                    p.copy_from_slice(x);
-                }
-                if let Some(x) = s_new {
-                    s.copy_from_slice(x);
-                }
-                if let Some(x) = tau_new {
-                    tau.copy_from_slice(x);
-                }
-            }
-        }
+    pub fn load_state(
+        &mut self,
+        rhat_new: &[f32],
+        p_new: Option<&[f32]>,
+        s_new: Option<&[f32]>,
+        tau_new: Option<&[f32]>,
+    ) {
+        self.as_dyn_mut().load_state(rhat_new, p_new, s_new, tau_new)
     }
-}
-
-/// Borrowed view of predictor state vectors.
-pub struct PredictorState<'a> {
-    pub rhat: &'a [f32],
-    pub p: Option<&'a [f32]>,
-    pub s: Option<&'a [f32]>,
-    pub tau: Option<&'a [f32]>,
 }
 
 #[cfg(test)]
@@ -158,45 +99,26 @@ mod tests {
     use super::*;
 
     #[test]
-    fn zero_never_predicts() {
-        let mut p = Predictor::new(PredictorKind::Zero, 0.9, 4);
-        p.update(&[1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(p.rhat(), &[0.0; 4]);
-    }
-
-    #[test]
-    fn plin_geometric_chain() {
+    fn shim_wraps_trait_machines() {
         let mut p = Predictor::new(PredictorKind::PLin, 0.5, 2);
-        p.update(&[2.0, 0.0]); // rhat = 0.5*(2+0) = 1
+        assert_eq!(p.kind(), PredictorKind::PLin);
+        p.update(&[2.0, 0.0]);
         assert_eq!(p.rhat(), &[1.0, 0.0]);
-        p.update(&[0.0, 0.0]); // rhat = 0.5*(0+1) = 0.5
-        assert_eq!(p.rhat(), &[0.5, 0.0]);
+        let b = p.into_box();
+        assert_eq!(b.name(), "plin");
+        assert_eq!(b.rhat(), &[1.0, 0.0]);
     }
 
     #[test]
-    fn estk_replays_paper_table3() {
-        // the Table III trace (see python/tests/test_estk_table3.py)
-        let beta = 0.9f32;
-        let mut pr = Predictor::new(PredictorKind::EstK, beta, 1);
-        let (u3, u6) = (2.5f32, -1.3f32);
-        let stream = [0.0, 0.0, 0.0, u3, 0.0, 0.0, u6, 0.0];
-        let mut rhats = Vec::new();
-        let mut taus = Vec::new();
-        for &ut in &stream {
-            pr.update(&[ut]);
-            rhats.push(pr.rhat()[0]);
-            if let Predictor::EstK { tau, .. } = &pr {
-                taus.push(tau[0]);
+    fn estk_state_accessible_through_variant() {
+        let mut p = Predictor::new(PredictorKind::EstK, 0.9, 2);
+        p.update(&[0.0, 1.0]);
+        match &p {
+            Predictor::EstK(e) => {
+                assert_eq!(e.tau(), &[1.0, 0.0]);
             }
+            _ => unreachable!(),
         }
-        let p3 = u3 / 4.0;
-        assert!((rhats[3] - beta * p3).abs() < 1e-6);
-        assert!((rhats[4] - beta * beta * p3).abs() < 1e-6);
-        assert!((rhats[5] - beta.powi(3) * p3).abs() < 1e-6);
-        let s6 = (beta + beta * beta + beta.powi(3)) * p3;
-        let p6 = (s6 + u6) / 3.0;
-        assert!((rhats[6] - beta * p6).abs() < 1e-5);
-        assert_eq!(taus, vec![1.0, 2.0, 3.0, 0.0, 1.0, 2.0, 0.0, 1.0]);
     }
 
     #[test]
@@ -230,7 +152,7 @@ mod tests {
         p.update(&[1.0, 0.0, -1.0]);
         let rh: Vec<f32> = p.rhat().to_vec();
         let (pp, ss, tt) = match &p {
-            Predictor::EstK { p, s, tau, .. } => (p.clone(), s.clone(), tau.clone()),
+            Predictor::EstK(e) => (e.p().to_vec(), e.s().to_vec(), e.tau().to_vec()),
             _ => unreachable!(),
         };
         let mut q = Predictor::new(PredictorKind::EstK, 0.9, 3);

@@ -1,15 +1,21 @@
-//! Quantizers Q (paper Eq. (1d)) — dense in, dense out.
+//! Legacy closed-enum quantizer selector — now a thin shim over the open
+//! trait objects in [`crate::scheme::quantize`].
 //!
-//! Semantics mirror `python/compile/kernels/ref.py` exactly (same tie-break
-//! for Top-K, sign(0) = 0 for Scaled-sign, mean-of-group reconstruction
-//! points for Top-K-Q) so the Rust and HLO backends agree.
+//! The numeric bodies live in the trait impls (`NoneQuantizer`,
+//! `SignQuantizer`, `TopKQuantizer`, `TopKQQuantizer`, `RandKQuantizer`);
+//! every method here dispatches to a stack-constructed trait value, so the
+//! enum and trait paths are bit-exact by construction. Prefer
+//! [`crate::scheme::Scheme`] / spec strings in new code; this enum stays for
+//! config compatibility and the golden-equivalence tests.
+
+use std::sync::Arc;
 
 use crate::coding::PayloadKind;
-use crate::tensor::{self, select_topk_indices};
+use crate::scheme::quantize::{
+    NoneQuantizer, Quantize, RandKQuantizer, SignQuantizer, TopKQQuantizer, TopKQuantizer,
+};
 
-use super::randk;
-
-/// Quantizer family and its parameters.
+/// Quantizer family and its parameters (deprecated shim; see module docs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum QuantizerKind {
     /// Identity (uncompressed baseline).
@@ -25,115 +31,56 @@ pub enum QuantizerKind {
 }
 
 impl QuantizerKind {
-    pub fn validate(&self) -> anyhow::Result<()> {
+    /// Dispatch to the trait object on the stack (no allocation).
+    fn with_object<R>(&self, f: impl FnOnce(&dyn Quantize) -> R) -> R {
         match *self {
-            QuantizerKind::TopK { k } | QuantizerKind::TopKQ { k } => {
-                anyhow::ensure!(k > 0, "top-k requires k > 0");
-            }
-            QuantizerKind::RandK { prob } => {
-                anyhow::ensure!((0.0..=1.0).contains(&prob), "randk prob in [0,1]");
-            }
-            _ => {}
+            QuantizerKind::None => f(&NoneQuantizer),
+            QuantizerKind::Sign => f(&SignQuantizer),
+            QuantizerKind::TopK { k } => f(&TopKQuantizer { k }),
+            QuantizerKind::TopKQ { k } => f(&TopKQQuantizer { k }),
+            QuantizerKind::RandK { prob } => f(&RandKQuantizer { prob }),
         }
-        Ok(())
+    }
+
+    /// Owned trait object for the new Scheme API.
+    pub fn to_object(&self) -> Arc<dyn Quantize> {
+        match *self {
+            QuantizerKind::None => Arc::new(NoneQuantizer),
+            QuantizerKind::Sign => Arc::new(SignQuantizer),
+            QuantizerKind::TopK { k } => Arc::new(TopKQuantizer { k }),
+            QuantizerKind::TopKQ { k } => Arc::new(TopKQQuantizer { k }),
+            QuantizerKind::RandK { prob } => Arc::new(RandKQuantizer { prob }),
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.with_object(|q| q.validate())
     }
 
     pub fn tag(&self) -> String {
-        match *self {
-            QuantizerKind::None => "none".into(),
-            QuantizerKind::Sign => "sign".into(),
-            QuantizerKind::TopK { k } => format!("topk_k{k}"),
-            QuantizerKind::TopKQ { k } => format!("topkq_k{k}"),
-            QuantizerKind::RandK { prob } => format!("randk_p{prob}").replace('.', "_"),
-        }
+        self.with_object(|q| q.tag())
     }
 
     pub fn payload_kind(&self) -> PayloadKind {
-        match *self {
-            QuantizerKind::None => PayloadKind::Dense,
-            QuantizerKind::Sign => PayloadKind::Sign,
-            QuantizerKind::TopK { .. } => PayloadKind::SparseValues,
-            QuantizerKind::TopKQ { .. } => PayloadKind::SparseTwoPoint,
-            QuantizerKind::RandK { prob } => PayloadKind::MaskedValues { prob },
-        }
+        self.with_object(|q| q.payload_kind())
     }
 
     /// Quantize `u` into `out` (same length). `round` seeds Rand-K.
     pub fn quantize(&self, u: &[f32], out: &mut [f32], round: u64) {
-        debug_assert_eq!(u.len(), out.len());
-        match *self {
-            QuantizerKind::None => out.copy_from_slice(u),
-            QuantizerKind::Sign => {
-                let a = tensor::mean_abs(u);
-                for (o, &v) in out.iter_mut().zip(u) {
-                    *o = if v > 0.0 {
-                        a
-                    } else if v < 0.0 {
-                        -a
-                    } else {
-                        0.0
-                    };
-                }
-            }
-            QuantizerKind::TopK { k } => {
-                out.fill(0.0);
-                for &i in &select_topk_indices(u, k) {
-                    out[i as usize] = u[i as usize];
-                }
-            }
-            QuantizerKind::TopKQ { k } => {
-                out.fill(0.0);
-                let idx = select_topk_indices(u, k);
-                let (mut pos_sum, mut npos) = (0.0f64, 0u32);
-                let (mut neg_sum, mut nneg) = (0.0f64, 0u32);
-                for &i in &idx {
-                    let v = u[i as usize];
-                    if v > 0.0 {
-                        pos_sum += v as f64;
-                        npos += 1;
-                    } else if v < 0.0 {
-                        neg_sum += (-v) as f64;
-                        nneg += 1;
-                    }
-                }
-                // f32 group means, matching the jnp reference reduction order
-                // closely enough (values only, no index-dependent ops)
-                let a_pos = if npos > 0 { (pos_sum / npos as f64) as f32 } else { 0.0 };
-                let a_neg = if nneg > 0 { (neg_sum / nneg as f64) as f32 } else { 0.0 };
-                for &i in &idx {
-                    let v = u[i as usize];
-                    if v > 0.0 {
-                        out[i as usize] = a_pos;
-                    } else if v < 0.0 {
-                        out[i as usize] = -a_neg;
-                    }
-                }
-            }
-            QuantizerKind::RandK { prob } => randk::apply(u, out, round, prob),
-        }
+        self.with_object(|q| q.quantize(u, out, round))
     }
 
     /// The paper's analytic bits/component for this quantizer at dimension d
     /// (Sec. III-B). Used to sanity-check measured payload sizes.
     pub fn analytic_bits_per_component(&self, d: usize) -> f64 {
-        match *self {
-            QuantizerKind::None => 32.0,
-            QuantizerKind::Sign => 1.0 + 32.0 / d as f64,
-            QuantizerKind::TopK { k } => crate::util::topk_bits_per_component(k.min(d), d),
-            QuantizerKind::TopKQ { k } => {
-                // ternary entropy with the +/- split unknown a priori; use
-                // the symmetric worst case k/2 each plus the two scales
-                let kk = k.min(d);
-                crate::util::topkq_bits_per_component(kk / 2, kk - kk / 2, d) + 64.0 / d as f64
-            }
-            QuantizerKind::RandK { prob } => 32.0 * prob as f64,
-        }
+        self.with_object(|q| q.analytic_bits_per_component(d))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor;
     use crate::util::Pcg64;
 
     fn randu(d: usize, seed: u64) -> Vec<f32> {
@@ -245,5 +192,12 @@ mod tests {
         assert_eq!(QuantizerKind::None.analytic_bits_per_component(100), 32.0);
         let r = QuantizerKind::TopK { k: 350 }.analytic_bits_per_component(1000);
         assert!((r - 12.13).abs() < 0.05);
+    }
+
+    #[test]
+    fn validation_via_shim() {
+        assert!(QuantizerKind::TopK { k: 0 }.validate().is_err());
+        assert!(QuantizerKind::RandK { prob: 2.0 }.validate().is_err());
+        assert!(QuantizerKind::Sign.validate().is_ok());
     }
 }

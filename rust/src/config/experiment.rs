@@ -4,13 +4,19 @@ use anyhow::{Context, Result};
 
 use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
 use crate::optim::LrSchedule;
+use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 
 use super::value::Value;
 
-/// Scheme spec as written in configs: K given as a *fraction* of d (the
-/// paper parameterizes K = c·d) or as an absolute count.
+/// Scheme spec as written in configs: either a registry spec *string*
+/// (`spec = "topk:k_frac=0.01/estk/ef/beta=0.99"`, which also unlocks
+/// `blocks(...)` composition) or the legacy structured fields with K given
+/// as a *fraction* of d (the paper parameterizes K = c·d) or as an absolute
+/// count. When `spec` is set it takes precedence.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchemeSpec {
+    /// Registry spec string (see `scheme::SchemeRegistry::parse`).
+    pub spec: Option<String>,
     pub quantizer: String,
     pub predictor: String,
     pub ef: bool,
@@ -23,6 +29,7 @@ pub struct SchemeSpec {
 impl Default for SchemeSpec {
     fn default() -> Self {
         Self {
+            spec: None,
             quantizer: "none".into(),
             predictor: "zero".into(),
             ef: false,
@@ -35,8 +42,16 @@ impl Default for SchemeSpec {
 }
 
 impl SchemeSpec {
+    /// Wrap a registry spec string.
+    pub fn from_spec_str(spec: impl Into<String>) -> Self {
+        Self { spec: Some(spec.into()), ..Default::default() }
+    }
+
     pub fn from_value(v: &Value) -> Result<Self> {
         let mut s = Self::default();
+        if let Some(x) = v.opt("spec") {
+            s.spec = Some(x.as_str()?.to_string());
+        }
         if let Some(x) = v.opt("quantizer") {
             s.quantizer = x.as_str()?.to_string();
         }
@@ -61,18 +76,39 @@ impl SchemeSpec {
         Ok(s)
     }
 
-    /// Resolve K for a model dimension d.
+    /// Resolve K for a model dimension d (shared rule — see
+    /// `scheme::resolve_k` — so config- and registry-built pipelines agree).
     pub fn resolve_k(&self, d: usize) -> usize {
-        if let Some(k) = self.k_abs {
-            return k.min(d).max(1);
-        }
-        if let Some(f) = self.k_frac {
-            return ((f * d as f64).round() as usize).clamp(1, d);
-        }
-        1
+        crate::scheme::resolve_k(self.k_abs, self.k_frac, d)
     }
 
-    /// Build the runtime SchemeCfg for dimension d.
+    /// Resolve into the registry-backed [`Scheme`] (dimension-free). The
+    /// `spec` string takes precedence; otherwise the structured fields map
+    /// onto registry parameters with the same K-resolution rule as
+    /// [`Self::to_cfg`], so both paths build bit-identical pipelines.
+    pub fn to_scheme(&self) -> Result<Scheme> {
+        if let Some(spec) = &self.spec {
+            return SchemeRegistry::global().parse(spec);
+        }
+        let mut params = QuantParams::new();
+        if let Some(k) = self.k_abs {
+            params.insert("k".to_string(), k as f64);
+        }
+        if let Some(f) = self.k_frac {
+            // absolute K wins, as in resolve_k
+            params.entry("k_frac".to_string()).or_insert(f);
+        }
+        if let Some(p) = self.randk_prob {
+            params.insert("p".to_string(), p);
+        } else if let Some(f) = self.k_frac {
+            // legacy fallback: randk density from k_frac
+            params.insert("p".to_string(), f);
+        }
+        SchemeRegistry::global().single(&self.quantizer, params, &self.predictor, self.ef, self.beta)
+    }
+
+    /// Build the legacy closed-enum SchemeCfg for dimension d (deprecated
+    /// shim path; kept for the golden-equivalence tests).
     pub fn to_cfg(&self, d: usize) -> Result<SchemeCfg> {
         let quantizer = match self.quantizer.as_str() {
             "none" => QuantizerKind::None,
@@ -242,6 +278,7 @@ impl ExperimentConfig {
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
         anyhow::ensure!(self.steps >= 1, "need at least one step");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
+        self.scheme.to_scheme().context("invalid [scheme]")?;
         Ok(())
     }
 
@@ -323,5 +360,40 @@ noise = 0.8
         assert!(ExperimentConfig::from_toml_str("steps = 0").is_err());
         let bad_backend = "backend = \"qpu\"";
         assert!(ExperimentConfig::from_toml_str(bad_backend).is_err());
+    }
+
+    #[test]
+    fn scheme_spec_string_path() {
+        let toml = "name = \"x\"\n\n[scheme]\nspec = \"topk:k=16/estk/ef/beta=0.9\"\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        let s = c.scheme.to_scheme().unwrap();
+        assert_eq!(s.spec(), "topk:k=16/estk/ef/beta=0.9");
+        // blockwise specs ride the same key
+        let toml = "name = \"x\"\n\n[scheme]\nspec = \"blocks(a=0.5:sign;b=0.5:none)\"\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert!(c.scheme.to_scheme().unwrap().is_blockwise());
+        // bad spec strings are rejected at config time
+        let bad = "name = \"x\"\n\n[scheme]\nspec = \"warp9\"\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+    }
+
+    #[test]
+    fn structured_fields_and_scheme_agree_on_k() {
+        use crate::scheme::{Quantize, WorkerScheme};
+        // both paths must resolve the same K at any d (bit-exact parity)
+        let s = SchemeSpec {
+            quantizer: "topk".into(),
+            predictor: "estk".into(),
+            ef: true,
+            k_frac: Some(6.5e-5),
+            ..Default::default()
+        };
+        let d = 100_000;
+        let cfg = s.to_cfg(d).unwrap();
+        let scheme = s.to_scheme().unwrap();
+        let worker = scheme.worker(d).unwrap();
+        let pipe = worker.as_pipeline().unwrap();
+        assert_eq!(pipe.quantizer().spec(), "topk:k=6");
+        assert_eq!(cfg.quantizer, QuantizerKind::TopK { k: 6 });
     }
 }

@@ -26,6 +26,9 @@ pub struct TrainReport {
     pub bits_per_component: f64,
     pub compression_ratio: f64,
     pub simulated_comm_secs: f64,
+    /// Per-block (name, bits/component) for blockwise schemes (empty
+    /// otherwise) — mirrors `CommStats::block_rates`.
+    pub block_rates: Vec<(String, f64)>,
     pub worker_phases: PhaseTimes,
     /// per-round mean over workers of (1/d)‖e_t‖²
     pub e_mse_trace: Vec<f64>,
@@ -81,7 +84,9 @@ pub fn run_training_with_manifest(
     cfg.validate()?;
     let entry = manifest.model(&cfg.model)?.clone();
     let d = entry.d;
-    let scheme = cfg.scheme.to_cfg(d)?;
+    let scheme = cfg.scheme.to_scheme()?;
+    // bind-check once up front so scheme errors surface before threads spawn
+    scheme.worker(d).context("invalid scheme for this model dimension")?;
     let dataset = build_dataset(entry.kind, &entry, cfg);
     let schedule = cfg.schedule();
 
@@ -182,6 +187,7 @@ pub fn run_training_with_manifest(
         bits_per_component: report.comm.bits_per_component(),
         compression_ratio: report.comm.compression_ratio(),
         simulated_comm_secs: report.comm.simulated_comm_secs(),
+        block_rates: report.comm.block_rates(),
         worker_phases: phases,
         e_mse_trace,
         u_norm_trace,

@@ -1,27 +1,31 @@
 //! Master-side loop.
 //!
-//! Owns: the canonical parameter vector, one decode-and-predict chain per
-//! worker (paper Sec. IV-C: "the master operates a separate
-//! decoding-and-prediction chain composed of a D, a P, and a delay block"),
-//! the LR schedule, rate accounting and periodic evaluation.
+//! Owns: the canonical parameter vector, one decode-and-predict
+//! [`MasterScheme`] per worker (paper Sec. IV-C: "the master operates a
+//! separate decoding-and-prediction chain composed of a D, a P, and a delay
+//! block"), the LR schedule, rate accounting (total and per block for
+//! blockwise schemes) and periodic evaluation.
+//!
+//! Evaluation is injectable: [`MasterLoop::run`] wires the PJRT model, while
+//! [`MasterLoop::run_headless`] drives the identical round loop with no
+//! model at all (test/synthetic path — eval columns become NaN).
 
 use anyhow::{Context, Result};
 
-use crate::coding::decode_payload;
 use crate::comm::{Frame, MasterTransport};
-use crate::compress::{MasterChain, SchemeCfg};
 use crate::data::{Batch, MarkovCorpus, SynthImages};
 use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
 use crate::model::ModelKind;
 use crate::optim::LrSchedule;
 use crate::runtime::{ModelExec, Runtime};
+use crate::scheme::{MasterScheme, Scheme};
 use crate::util::Timer;
 
 /// Master configuration (plain data).
 #[derive(Clone, Debug)]
 pub struct MasterSpec {
     pub model: String,
-    pub scheme: SchemeCfg,
+    pub scheme: Scheme,
     pub schedule: LrSchedule,
     pub steps: u64,
     pub eval_every: u64,
@@ -92,6 +96,9 @@ pub struct MasterReport {
     pub final_w_norm: f64,
 }
 
+/// (w, eval_batches, salt) → (test_loss, test_acc).
+type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
+
 /// Master loop: drives `steps` synchronous rounds over the transport.
 pub struct MasterLoop<T: MasterTransport> {
     spec: MasterSpec,
@@ -103,80 +110,109 @@ impl<T: MasterTransport> MasterLoop<T> {
         Self { spec, transport }
     }
 
-    pub fn run(mut self, runtime: &Runtime) -> Result<MasterReport> {
-        let spec = self.spec.clone();
-        let n = self.transport.n_workers();
+    /// Model-backed run: PJRT evaluation on held-out batches.
+    pub fn run(self, runtime: &Runtime) -> Result<MasterReport> {
+        let MasterLoop { spec, transport } = self;
         let model = ModelExec::load(runtime, &spec.model).context("master: load model")?;
         let d = model.entry.d;
-        let mut w = runtime.manifest.load_init(&model.entry)?;
+        let w = runtime.manifest.load_init(&model.entry)?;
         let test = TestStream::for_model(&model.entry, &spec);
+        let mut eval = |w: &[f32], batches: usize, salt: u64| -> Result<(f64, f64)> {
+            evaluate(&model, w, &test, batches, salt)
+        };
+        run_rounds(&spec, transport, w, Some(&mut eval))
+    }
 
-        let mut chains: Vec<MasterChain> =
-            (0..n).map(|_| MasterChain::new(&spec.scheme, d)).collect();
-        let payload_kind = spec.scheme.payload_kind();
-        let mut comm = CommStats::new(d);
-        let mut train_loss = LossMeter::new();
-        let mut points = Vec::new();
-        let wall = Timer::start();
+    /// Headless run at dimension d: no model, no evaluation (test metrics
+    /// are NaN/0); parameters start at zero. The round loop — decode,
+    /// per-worker chains, aggregation, broadcast, rate accounting — is the
+    /// exact same code as [`Self::run`].
+    pub fn run_headless(self, d: usize) -> Result<MasterReport> {
+        let MasterLoop { spec, transport } = self;
+        run_rounds(&spec, transport, vec![0.0f32; d], None)
+    }
+}
 
-        let mut utilde = Vec::with_capacity(d);
-        let mut rtilde = vec![0.0f32; d];
-        let mut agg = vec![0.0f32; d];
+fn run_rounds<T: MasterTransport>(
+    spec: &MasterSpec,
+    mut transport: T,
+    mut w: Vec<f32>,
+    mut eval: Option<&mut EvalFn<'_>>,
+) -> Result<MasterReport> {
+    let d = w.len();
+    let n = transport.n_workers();
+    let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        chains.push(spec.scheme.master(d)?);
+    }
+    let mut comm = CommStats::new(d);
+    let mut train_loss = LossMeter::new();
+    let mut points = Vec::new();
+    let wall = Timer::start();
 
-        for t in 0..spec.steps {
-            let frames = self.transport.recv_updates()?;
-            anyhow::ensure!(frames.len() == n, "round {t}: missing updates");
-            agg.iter_mut().for_each(|x| *x = 0.0);
-            for frame in &frames {
-                anyhow::ensure!(frame.round == t, "round skew: {} vs {t}", frame.round);
-                let wid = frame.worker as usize;
-                anyhow::ensure!(wid < n, "bad worker id {wid}");
-                comm.record_message(frame.payload_bits);
-                train_loss.push(frame.loss as f64);
-                let payload = frame.as_payload();
-                decode_payload(payload_kind, &payload, d, t, &mut utilde)
-                    .with_context(|| format!("round {t}: decode worker {wid}"))?;
-                chains[wid].receive(&utilde, &mut rtilde);
-                let scale = 1.0 / n as f32;
-                for i in 0..d {
-                    agg[i] += scale * rtilde[i];
-                }
+    let mut rtilde = vec![0.0f32; d];
+    let mut agg = vec![0.0f32; d];
+
+    for t in 0..spec.steps {
+        let frames = transport.recv_updates()?;
+        anyhow::ensure!(frames.len() == n, "round {t}: missing updates");
+        agg.iter_mut().for_each(|x| *x = 0.0);
+        for frame in &frames {
+            anyhow::ensure!(frame.round == t, "round skew: {} vs {t}", frame.round);
+            let wid = frame.worker as usize;
+            anyhow::ensure!(wid < n, "bad worker id {wid}");
+            comm.record_message(frame.payload_bits);
+            train_loss.push(frame.loss as f64);
+            let payload = frame.as_payload();
+            chains[wid]
+                .receive(&payload, t, &mut rtilde)
+                .with_context(|| format!("round {t}: decode worker {wid}"))?;
+            for bb in chains[wid].last_block_bits() {
+                comm.record_block(&bb.name, bb.bits, bb.components);
             }
-
-            // broadcast the averaged r̃; workers (and we) apply w -= η·agg
-            self.transport.broadcast(&Frame::broadcast(t, &agg))?;
-            let lr = spec.schedule.lr_at(t);
+            let scale = 1.0 / n as f32;
             for i in 0..d {
-                w[i] -= lr * agg[i];
-            }
-
-            if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
-                let (test_loss, test_acc) =
-                    evaluate(&model, &w, &test, spec.eval_batches, t)?;
-                points.push(RunPoint {
-                    step: t + 1,
-                    epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
-                        / spec.train_len.max(1) as f64,
-                    train_loss: train_loss.smoothed(),
-                    test_loss,
-                    test_acc,
-                    bits_per_component: comm.bits_per_component(),
-                    e_mse: 0.0, // filled from worker traces by launch glue
-                    wall_secs: wall.elapsed_secs(),
-                });
+                agg[i] += scale * rtilde[i];
             }
         }
 
-        let (final_test_loss, final_test_acc) =
-            evaluate(&model, &w, &test, (spec.eval_batches * 4).max(8), spec.steps)?;
-        Ok(MasterReport {
-            points,
-            comm,
-            final_test_acc,
-            final_test_loss,
-            final_w_norm: crate::tensor::norm2(&w),
-        })
+        // broadcast the averaged r̃; workers (and we) apply w -= η·agg
+        transport.broadcast(&Frame::broadcast(t, &agg))?;
+        let lr = spec.schedule.lr_at(t);
+        for i in 0..d {
+            w[i] -= lr * agg[i];
+        }
+
+        if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
+            let (test_loss, test_acc) = match eval.as_mut() {
+                Some(f) => f(&w, spec.eval_batches, t)?,
+                None => (f64::NAN, 0.0),
+            };
+            points.push(RunPoint {
+                step: t + 1,
+                epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
+                    / spec.train_len.max(1) as f64,
+                train_loss: train_loss.smoothed(),
+                test_loss,
+                test_acc,
+                bits_per_component: comm.bits_per_component(),
+                e_mse: 0.0, // filled from worker traces by launch glue
+                wall_secs: wall.elapsed_secs(),
+            });
+        }
     }
+
+    let (final_test_loss, final_test_acc) = match eval.as_mut() {
+        Some(f) => f(&w, (spec.eval_batches * 4).max(8), spec.steps)?,
+        None => (f64::NAN, 0.0),
+    };
+    Ok(MasterReport {
+        points,
+        comm,
+        final_test_acc,
+        final_test_loss,
+        final_w_norm: crate::tensor::norm2(&w),
+    })
 }
 
 /// Mean loss / accuracy over `batches` held-out batches.

@@ -1,26 +1,29 @@
 //! Worker-side loop.
 //!
-//! Owns: a data shard, a thread-confined PJRT runtime (model fwd/bwd and,
-//! for the HLO backend, the compress artifact), the Eq.-(1) pipeline state,
-//! and its replica of the parameter vector. Per round:
+//! Per round:
 //!
-//! 1. fetch a batch from the shard
-//! 2. (loss, g) = PJRT fwd/bwd                         [phase "gradient"]
-//! 3. pipeline step (momentum/EF/predict/quantize)     [phase "compress"]
-//! 4. entropy-encode ũ and send to the master          [phase "encode"]
-//! 5. receive the averaged r̃ broadcast, apply w-update [phase "apply"]
+//! 1. pull (loss, gradient) from the [`GradSource`]          [phase "gradient"]
+//! 2. scheme pipeline step (momentum/EF/predict/quantize)    [phase "compress"]
+//! 3. entropy-encode ũ and send to the master                [phase "encode"]
+//! 4. receive the averaged r̃ broadcast, apply w-update       [phase "apply"]
 //!
-//! Phases 2-4 are what the paper's Fig. 1 times per iteration.
+//! Phases 1-3 are what the paper's Fig. 1 times per iteration.
+//!
+//! The gradient source is injectable: the production path wraps a
+//! thread-confined PJRT model (shard → fwd/bwd), while tests and synthetic
+//! workloads plug in any closure — which is what lets the full coordinator
+//! round loop (including blockwise schemes) run without artifacts.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::coding::encode_payload;
 use crate::comm::{Frame, WorkerTransport};
-use crate::compress::{SchemeCfg, WorkerPipeline};
 use crate::config::experiment::Backend;
 use crate::data::{Batch, Dataset, Shard};
 use crate::optim::LrSchedule;
 use crate::runtime::{CompressExec, ModelExec, Runtime};
+use crate::scheme::{Scheme, WorkerScheme};
 use crate::util::timer::{PhaseTimes, Timer};
 
 /// What a worker thread returns when the run completes.
@@ -41,7 +44,7 @@ pub struct WorkerSummary {
 pub struct WorkerSpec {
     pub worker_id: u32,
     pub model: String,
-    pub scheme: SchemeCfg,
+    pub scheme: Scheme,
     pub backend: Backend,
     pub schedule: LrSchedule,
     pub steps: u64,
@@ -50,108 +53,213 @@ pub struct WorkerSpec {
     pub clip_norm: Option<f32>,
 }
 
+/// Produces (loss, gradient) at the current parameters for round t.
+/// Implemented for any `FnMut(&[f32], u64) -> Result<(f64, Vec<f32>)>`.
+pub trait GradSource {
+    /// Untimed data-pipeline work (shard indexing, batch materialization).
+    /// Called before the round's "gradient" phase timer starts, so phase
+    /// times measure compute only — matching the paper's Fig. 1 breakdown.
+    fn prefetch(&mut self, _round: u64) {}
+
+    fn next_grad(&mut self, w: &[f32], round: u64) -> Result<(f64, Vec<f32>)>;
+}
+
+impl<F> GradSource for F
+where
+    F: FnMut(&[f32], u64) -> Result<(f64, Vec<f32>)>,
+{
+    fn next_grad(&mut self, w: &[f32], round: u64) -> Result<(f64, Vec<f32>)> {
+        self(w, round)
+    }
+}
+
+/// PJRT-model gradient source: shard → synthesize batch (prefetch, untimed)
+/// → fwd/bwd (timed). Thread-confined like the `ModelExec` it owns.
+struct ModelSource {
+    model: ModelExec,
+    shard: Shard,
+    dataset: Arc<dyn Dataset>,
+    batch: Option<Batch>,
+}
+
+impl GradSource for ModelSource {
+    fn prefetch(&mut self, _round: u64) {
+        let indices = self.shard.next_indices();
+        self.batch = Some(self.dataset.batch(&indices));
+    }
+
+    fn next_grad(&mut self, w: &[f32], _round: u64) -> Result<(f64, Vec<f32>)> {
+        let batch = self.batch.take().context("model source: prefetch not called")?;
+        self.model.fwdbwd(w, &batch)
+    }
+}
+
+enum Body {
+    /// PJRT model execution over a data shard (the production path).
+    Model { shard: Shard, dataset: Arc<dyn Dataset> },
+    /// Injected gradient source with explicit initial parameters.
+    Source { source: Box<dyn GradSource>, init_w: Vec<f32> },
+}
+
 /// The worker loop body. Generic over transport so channel and TCP runs
 /// share the exact same code path.
 pub struct WorkerLoop<T: WorkerTransport> {
     spec: WorkerSpec,
     transport: T,
-    shard: Shard,
-    dataset: std::sync::Arc<dyn Dataset>,
+    body: Body,
 }
 
 impl<T: WorkerTransport> WorkerLoop<T> {
+    /// Model-backed worker (requires a PJRT runtime at `run` time).
     pub fn new(
         spec: WorkerSpec,
         transport: T,
         shard: Shard,
-        dataset: std::sync::Arc<dyn Dataset>,
+        dataset: Arc<dyn Dataset>,
     ) -> Self {
-        Self { spec, transport, shard, dataset }
+        Self { spec, transport, body: Body::Model { shard, dataset } }
     }
 
-    /// Run `steps` synchronous rounds. Creates the PJRT runtime inside the
+    /// Worker over an injected gradient source (rust backend only; runs
+    /// without PJRT via [`Self::run_local`]).
+    pub fn with_source(
+        spec: WorkerSpec,
+        transport: T,
+        source: Box<dyn GradSource>,
+        init_w: Vec<f32>,
+    ) -> Self {
+        Self { spec, transport, body: Body::Source { source, init_w } }
+    }
+
+    /// Run `steps` synchronous rounds. Creates PJRT executables inside the
     /// calling thread (PJRT objects are not Send).
-    pub fn run(mut self, runtime: &Runtime) -> Result<WorkerSummary> {
-        let spec = self.spec.clone();
-        let model = ModelExec::load(runtime, &spec.model)
-            .with_context(|| format!("worker {}: load model", spec.worker_id))?;
-        let d = model.entry.d;
-        let mut w = runtime.manifest.load_init(&model.entry)?;
-        let mut pipeline = WorkerPipeline::new(spec.scheme.clone(), d);
-        let hlo_backend = match spec.backend {
-            Backend::Rust => None,
-            Backend::Hlo => Some(CompressExec::for_pipeline(runtime, &pipeline)?),
-        };
-        let payload_kind = spec.scheme.payload_kind();
-
-        let mut phases = PhaseTimes::new();
-        let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
-        let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
-        let mut losses = Vec::with_capacity(spec.steps as usize);
-        let mut update = vec![0.0f32; d];
-
-        for t in 0..spec.steps {
-            // 1-2. gradient
-            let indices = self.shard.next_indices();
-            let batch: Batch = self.dataset.batch(&indices);
-            let timer = Timer::start();
-            let (loss, mut g) = model.fwdbwd(&w, &batch)?;
-            phases.add("gradient", timer.elapsed_secs());
-            if let Some(max_norm) = spec.clip_norm {
-                let norm = crate::tensor::norm2(&g) as f32;
-                if norm > max_norm {
-                    crate::tensor::scale(&mut g, max_norm / norm);
-                }
+    pub fn run(self, runtime: &Runtime) -> Result<WorkerSummary> {
+        let WorkerLoop { spec, transport, body } = self;
+        match body {
+            Body::Model { shard, dataset } => {
+                let model = ModelExec::load(runtime, &spec.model)
+                    .with_context(|| format!("worker {}: load model", spec.worker_id))?;
+                let d = model.entry.d;
+                let w = runtime.manifest.load_init(&model.entry)?;
+                let hlo = match spec.backend {
+                    Backend::Rust => None,
+                    Backend::Hlo => Some(CompressExec::for_scheme(runtime, &spec.scheme, d)?),
+                };
+                let mut source = ModelSource { model, shard, dataset, batch: None };
+                run_rounds(&spec, transport, &mut source, w, hlo)
             }
-            anyhow::ensure!(
-                loss.is_finite(),
-                "worker {}: loss diverged (non-finite) at round {t} — lower the \
-                 learning rate or add warmup",
-                spec.worker_id
-            );
-            losses.push(loss);
-
-            // 3. compression pipeline (Eq. (1))
-            let lr_ratio = lr_ratio(&spec.schedule, t);
-            let timer = Timer::start();
-            let stats = match &hlo_backend {
-                Some(exec) => exec.step(&mut pipeline, &g, lr_ratio)?,
-                None => pipeline.step(&g, lr_ratio),
-            };
-            phases.add("compress", timer.elapsed_secs());
-            e_mse_trace.push(stats.e_mse);
-            u_norm_trace.push(stats.u_norm_sq);
-
-            // 4. encode + send
-            let timer = Timer::start();
-            let payload = encode_payload(payload_kind, pipeline.utilde(), t);
-            phases.add("encode", timer.elapsed_secs());
-            self.transport
-                .send_update(Frame::update(spec.worker_id, t, payload, loss as f32))?;
-
-            // 5. receive averaged r̃, apply update
-            let frame = self.transport.recv_broadcast()?;
-            let timer = Timer::start();
-            let avg = frame.broadcast_f32(d)?;
-            let lr = spec.schedule.lr_at(t);
-            for i in 0..d {
-                update[i] = avg[i];
-                w[i] -= lr * update[i];
+            Body::Source { mut source, init_w } => {
+                anyhow::ensure!(
+                    spec.backend == Backend::Rust,
+                    "worker {}: injected gradient sources support the rust backend only",
+                    spec.worker_id
+                );
+                run_rounds(&spec, transport, source.as_mut(), init_w, None)
             }
-            phases.add("apply", timer.elapsed_secs());
         }
-
-        let q = (losses.len() / 4).max(1);
-        let tail = &losses[losses.len() - q..];
-        Ok(WorkerSummary {
-            worker_id: spec.worker_id,
-            rounds: spec.steps,
-            phases,
-            mean_loss_last_quarter: tail.iter().sum::<f64>() / tail.len() as f64,
-            e_mse_trace,
-            u_norm_trace,
-        })
     }
+
+    /// Run without a PJRT runtime — only valid for source-backed workers.
+    pub fn run_local(self) -> Result<WorkerSummary> {
+        let WorkerLoop { spec, transport, body } = self;
+        match body {
+            Body::Source { mut source, init_w } => {
+                anyhow::ensure!(
+                    spec.backend == Backend::Rust,
+                    "worker {}: injected gradient sources support the rust backend only",
+                    spec.worker_id
+                );
+                run_rounds(&spec, transport, source.as_mut(), init_w, None)
+            }
+            Body::Model { .. } => anyhow::bail!(
+                "worker {}: model-backed workers need a PJRT runtime (use run)",
+                spec.worker_id
+            ),
+        }
+    }
+}
+
+fn run_rounds<T: WorkerTransport>(
+    spec: &WorkerSpec,
+    mut transport: T,
+    source: &mut dyn GradSource,
+    mut w: Vec<f32>,
+    hlo: Option<CompressExec>,
+) -> Result<WorkerSummary> {
+    let d = w.len();
+    let mut wscheme = spec.scheme.worker(d)?;
+
+    let mut phases = PhaseTimes::new();
+    let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
+    let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    let mut update = vec![0.0f32; d];
+
+    for t in 0..spec.steps {
+        // 1. gradient (data prep untimed; the phase measures compute only)
+        source.prefetch(t);
+        let timer = Timer::start();
+        let (loss, mut g) = source.next_grad(&w, t)?;
+        phases.add("gradient", timer.elapsed_secs());
+        anyhow::ensure!(g.len() == d, "worker {}: gradient dim mismatch", spec.worker_id);
+        if let Some(max_norm) = spec.clip_norm {
+            let norm = crate::tensor::norm2(&g) as f32;
+            if norm > max_norm {
+                crate::tensor::scale(&mut g, max_norm / norm);
+            }
+        }
+        anyhow::ensure!(
+            loss.is_finite(),
+            "worker {}: loss diverged (non-finite) at round {t} — lower the \
+             learning rate or add warmup",
+            spec.worker_id
+        );
+        losses.push(loss);
+
+        // 2. compression pipeline (Eq. (1))
+        let lr_ratio = lr_ratio(&spec.schedule, t);
+        let timer = Timer::start();
+        let stats = match &hlo {
+            Some(exec) => {
+                let pipe = wscheme
+                    .as_pipeline_mut()
+                    .context("HLO backend needs a single-scheme pipeline")?;
+                exec.step(pipe, &g, lr_ratio)?
+            }
+            None => wscheme.step(&g, lr_ratio),
+        };
+        phases.add("compress", timer.elapsed_secs());
+        e_mse_trace.push(stats.e_mse);
+        u_norm_trace.push(stats.u_norm_sq);
+
+        // 3. encode + send
+        let timer = Timer::start();
+        let payload = wscheme.encode(t);
+        phases.add("encode", timer.elapsed_secs());
+        transport.send_update(Frame::update(spec.worker_id, t, payload, loss as f32))?;
+
+        // 4. receive averaged r̃, apply update
+        let frame = transport.recv_broadcast()?;
+        let timer = Timer::start();
+        let avg = frame.broadcast_f32(d)?;
+        let lr = spec.schedule.lr_at(t);
+        for i in 0..d {
+            update[i] = avg[i];
+            w[i] -= lr * update[i];
+        }
+        phases.add("apply", timer.elapsed_secs());
+    }
+
+    let q = (losses.len() / 4).max(1);
+    let tail = &losses[losses.len() - q..];
+    Ok(WorkerSummary {
+        worker_id: spec.worker_id,
+        rounds: spec.steps,
+        phases,
+        mean_loss_last_quarter: tail.iter().sum::<f64>() / tail.len() as f64,
+        e_mse_trace,
+        u_norm_trace,
+    })
 }
 
 /// η_{t-1}/η_t with the paper's η_{-1} = 0 convention.

@@ -2,10 +2,11 @@
 
 use anyhow::Result;
 
-use crate::compress::{SchemeCfg, WorkerPipeline};
+use crate::compress::StepStats;
 use crate::config::{ExperimentConfig, SchemeSpec};
 use crate::coordinator::{run_training, TrainReport};
 use crate::metrics::CsvWriter;
+use crate::scheme::{Scheme, WorkerScheme};
 use crate::util::Pcg64;
 
 use super::ExpOptions;
@@ -45,13 +46,18 @@ impl GradStream {
 }
 
 /// Run a compression pipeline over a synthetic stream for `steps`,
-/// returning per-step (e_norm_sq, u_norm_sq, nnz).
+/// returning per-step (e_norm_sq, u_norm_sq, nnz). Accepts anything that
+/// converts into a [`Scheme`] — a spec-string-parsed scheme, a blockwise
+/// composite, or a legacy `SchemeCfg`.
 pub fn simulate_pipeline(
-    cfg: SchemeCfg,
+    scheme: impl Into<Scheme>,
     stream: &mut GradStream,
     steps: usize,
-) -> Vec<crate::compress::StepStats> {
-    let mut pipe = WorkerPipeline::new(cfg, stream.dim());
+) -> Vec<StepStats> {
+    let scheme: Scheme = scheme.into();
+    let mut pipe = scheme
+        .worker(stream.dim())
+        .unwrap_or_else(|e| panic!("invalid scheme {:?}: {e:#}", scheme.spec()));
     let mut out = Vec::with_capacity(steps);
     for t in 0..steps {
         let lr_ratio = if t == 0 { 0.0 } else { 1.0 };
@@ -141,10 +147,16 @@ pub fn spec_k(quantizer: &str, predictor: &str, ef: bool, beta: f32, k_frac: f64
     SchemeSpec { k_frac: Some(k_frac), ..spec(quantizer, predictor, ef, beta) }
 }
 
+/// Registry spec-string constructor (`topk:k_frac=0.01/estk/ef/beta=0.99`,
+/// `blocks(...)`, ...) — the preferred way to name a scheme in drivers.
+pub fn spec_str(spec: &str) -> SchemeSpec {
+    SchemeSpec::from_spec_str(spec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::{PredictorKind, QuantizerKind};
+    use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
 
     #[test]
     fn grad_stream_shapes_and_determinism() {

@@ -11,39 +11,44 @@ use anyhow::Result;
 
 use crate::metrics::CsvWriter;
 
-use super::common::{base_config, run_labeled, spec, spec_k, NamedRun};
+use super::common::{base_config, run_labeled, spec_str, NamedRun};
 use super::ExpOptions;
 
 struct Row {
     label: &'static str,
-    quantizer: &'static str,
+    /// Registry spec string (all Table I rows are constructible via
+    /// `SchemeRegistry::parse`; the golden-vector test pins them bit-exact
+    /// against the legacy enum pipeline).
+    spec: &'static str,
     predictor: &'static str,
     ef: bool,
     k_frac: Option<f64>,
 }
 
+#[rustfmt::skip]
 const ROWS: &[Row] = &[
-    Row { label: "baseline (no compression)", quantizer: "none", predictor: "zero", ef: false, k_frac: None },
-    Row { label: "Top-K w/o P", quantizer: "topk", predictor: "zero", ef: false, k_frac: Some(0.35) },
-    Row { label: "Top-K w/ P", quantizer: "topk", predictor: "plin", ef: false, k_frac: Some(0.015) },
-    Row { label: "Top-K-Q w/o P", quantizer: "topkq", predictor: "zero", ef: false, k_frac: Some(0.23) },
-    Row { label: "Top-K-Q w/ P", quantizer: "topkq", predictor: "plin", ef: false, k_frac: Some(0.01) },
-    Row { label: "Scaled-sign w/o P", quantizer: "sign", predictor: "zero", ef: false, k_frac: None },
-    Row { label: "Scaled-sign w/ P", quantizer: "sign", predictor: "plin", ef: false, k_frac: None },
-    Row { label: "Top-K EF w/o P", quantizer: "topk", predictor: "zero", ef: true, k_frac: Some(2.4e-3) },
-    Row { label: "Top-K EF w/ Est-K", quantizer: "topk", predictor: "estk", ef: true, k_frac: Some(1.3e-3) },
+    Row { label: "baseline (no compression)", spec: "none/zero/noef/beta=0.99", predictor: "zero", ef: false, k_frac: None },
+    Row { label: "Top-K w/o P", spec: "topk:k_frac=0.35/zero/noef/beta=0.99", predictor: "zero", ef: false, k_frac: Some(0.35) },
+    Row { label: "Top-K w/ P", spec: "topk:k_frac=0.015/plin/noef/beta=0.99", predictor: "plin", ef: false, k_frac: Some(0.015) },
+    Row { label: "Top-K-Q w/o P", spec: "topkq:k_frac=0.23/zero/noef/beta=0.99", predictor: "zero", ef: false, k_frac: Some(0.23) },
+    Row { label: "Top-K-Q w/ P", spec: "topkq:k_frac=0.01/plin/noef/beta=0.99", predictor: "plin", ef: false, k_frac: Some(0.01) },
+    Row { label: "Scaled-sign w/o P", spec: "sign/zero/noef/beta=0.99", predictor: "zero", ef: false, k_frac: None },
+    Row { label: "Scaled-sign w/ P", spec: "sign/plin/noef/beta=0.99", predictor: "plin", ef: false, k_frac: None },
+    Row { label: "Top-K EF w/o P", spec: "topk:k_frac=0.0024/zero/ef/beta=0.99", predictor: "zero", ef: true, k_frac: Some(2.4e-3) },
+    Row { label: "Top-K EF w/ Est-K", spec: "topk:k_frac=0.0013/estk/ef/beta=0.99", predictor: "estk", ef: true, k_frac: Some(1.3e-3) },
 ];
 
+/// (label, spec string) for every Table I row — consumed by the golden
+/// trait-vs-enum equivalence test.
+pub fn specs() -> Vec<(&'static str, &'static str)> {
+    ROWS.iter().map(|r| (r.label, r.spec)).collect()
+}
+
 pub fn run(opts: &ExpOptions) -> Result<()> {
-    let beta = 0.99f32;
     let mut runs: Vec<NamedRun> = Vec::new();
     for row in ROWS {
         let cfg = base_config(opts, "mlp_tiny");
-        let s = match row.k_frac {
-            Some(f) => spec_k(row.quantizer, row.predictor, row.ef, beta, f),
-            None => spec(row.quantizer, row.predictor, row.ef, beta),
-        };
-        runs.push(run_labeled(row.label, cfg, s)?);
+        runs.push(run_labeled(row.label, cfg, spec_str(row.spec))?);
     }
 
     let path = format!("{}/table1.csv", opts.out_dir);

@@ -44,7 +44,7 @@ fn real_main() -> Result<()> {
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
-    let mut value = match args.flag("config") {
+    let mut value = match args.flag("config")? {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("read config {path}"))?;
@@ -57,22 +57,26 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         value.set_path(&path, tempo::config::value::parse_scalar(&raw))?;
     }
     let mut cfg = ExperimentConfig::from_value(&value)?;
-    if let Some(v) = args.flag("steps") {
+    if let Some(v) = args.flag("steps")? {
         cfg.steps = v.parse().context("--steps")?;
     }
-    if let Some(v) = args.flag("workers") {
+    if let Some(v) = args.flag("workers")? {
         cfg.workers = v.parse().context("--workers")?;
     }
-    if let Some(v) = args.flag("model") {
+    if let Some(v) = args.flag("model")? {
         cfg.model = v.to_string();
     }
-    if let Some(v) = args.flag("backend") {
+    if let Some(v) = args.flag("backend")? {
         cfg.backend = tempo::config::experiment::Backend::parse(v)?;
     }
-    if let Some(v) = args.flag("csv") {
+    if let Some(v) = args.flag("scheme")? {
+        // full registry spec string, e.g. --scheme topk:k_frac=0.01/estk/ef
+        cfg.scheme = tempo::config::SchemeSpec::from_spec_str(v);
+    }
+    if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
-    if let Some(v) = args.flag("seed") {
+    if let Some(v) = args.flag("seed")? {
         cfg.seed = v.parse().context("--seed")?;
     }
     cfg.validate()?;
@@ -82,13 +86,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     println!(
-        "tempo train: model={} workers={} steps={} scheme={}/{}/ef={} backend={:?}",
+        "tempo train: model={} workers={} steps={} scheme={} backend={:?}",
         cfg.model,
         cfg.workers,
         cfg.steps,
-        cfg.scheme.quantizer,
-        cfg.scheme.predictor,
-        cfg.scheme.ef,
+        cfg.scheme.to_scheme()?.spec(),
         cfg.backend
     );
     let report = run_training(&cfg)?;
@@ -134,7 +136,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .clone();
     let opts = ExpOptions {
         smoke: args.has_switch("smoke"),
-        out_dir: args.flag_or("out", "results"),
+        out_dir: args.flag_or("out", "results")?,
         seed: args.u64_flag("seed", 0)?,
     };
     std::fs::create_dir_all(&opts.out_dir).ok();
@@ -163,10 +165,10 @@ fn cmd_inspect() -> Result<()> {
 
 fn cmd_master_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let listen = args.flag("listen").context("--listen addr:port required")?;
+    let listen = args.flag("listen")?.context("--listen addr:port required")?;
     let manifest = Manifest::load_default()?;
     let entry = manifest.model(&cfg.model)?.clone();
-    let scheme = cfg.scheme.to_cfg(entry.d)?;
+    let scheme = cfg.scheme.to_scheme()?;
     println!("master: listening on {listen} for {} workers", cfg.workers);
     let transport = TcpMaster::listen(listen, cfg.workers)?;
     let spec = MasterSpec {
@@ -193,11 +195,11 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
 
 fn cmd_worker_connect(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let connect = args.flag("connect").context("--connect addr:port required")?;
+    let connect = args.flag("connect")?.context("--connect addr:port required")?;
     let worker_id = args.u64_flag("worker-id", 0)? as u32;
     let manifest = Manifest::load_default()?;
     let entry = manifest.model(&cfg.model)?.clone();
-    let scheme = cfg.scheme.to_cfg(entry.d)?;
+    let scheme = cfg.scheme.to_scheme()?;
     println!("worker {worker_id}: connecting to {connect}");
     let transport = TcpWorker::connect(connect, worker_id)?;
     let spec = WorkerSpec {

@@ -1,5 +1,28 @@
 //! Communication accounting — the paper's primary metric is bits per
-//! gradient component per iteration (Table I last column).
+//! gradient component per iteration (Table I last column). Blockwise
+//! schemes additionally report a per-block breakdown (same metric, per
+//! named block).
+
+use std::collections::BTreeMap;
+
+/// Accumulated payload accounting for one named block.
+#[derive(Clone, Debug, Default)]
+pub struct BlockRate {
+    pub bits: u64,
+    pub messages: u64,
+    /// gradient components in this block
+    pub components: u64,
+}
+
+impl BlockRate {
+    /// Mean bits per component per message for this block.
+    pub fn bits_per_component(&self) -> f64 {
+        if self.messages == 0 || self.components == 0 {
+            return 0.0;
+        }
+        self.bits as f64 / (self.messages as f64 * self.components as f64)
+    }
+}
 
 /// Tracks worker→master payload sizes for one run.
 #[derive(Clone, Debug, Default)]
@@ -8,6 +31,8 @@ pub struct CommStats {
     total_messages: u64,
     /// gradient components per message (model dim d)
     d: usize,
+    /// per-block accounting (blockwise schemes only)
+    per_block: BTreeMap<String, BlockRate>,
     /// simulated network parameters for comm-time estimates
     pub bandwidth_gbps: f64,
     pub latency_ms: f64,
@@ -26,6 +51,27 @@ impl CommStats {
     pub fn record_message(&mut self, payload_bits: u64) {
         self.total_payload_bits += payload_bits;
         self.total_messages += 1;
+    }
+
+    /// Record one block's share of a message (blockwise schemes).
+    pub fn record_block(&mut self, name: &str, bits: u64, components: usize) {
+        let e = self.per_block.entry(name.to_string()).or_default();
+        e.bits += bits;
+        e.messages += 1;
+        e.components = components as u64;
+    }
+
+    /// Per-block (name, mean bits/component) — empty for single schemes.
+    pub fn block_rates(&self) -> Vec<(String, f64)> {
+        self.per_block
+            .iter()
+            .map(|(name, r)| (name.clone(), r.bits_per_component()))
+            .collect()
+    }
+
+    /// Full per-block accounting.
+    pub fn blocks(&self) -> &BTreeMap<String, BlockRate> {
+        &self.per_block
     }
 
     pub fn messages(&self) -> u64 {
@@ -88,5 +134,23 @@ mod tests {
         let c = CommStats::new(10);
         assert_eq!(c.bits_per_component(), 0.0);
         assert_eq!(c.compression_ratio(), 0.0);
+        assert!(c.block_rates().is_empty());
+    }
+
+    #[test]
+    fn per_block_rates() {
+        let mut c = CommStats::new(100);
+        // two messages: block "a" (40 comps) and "b" (60 comps)
+        for _ in 0..2 {
+            c.record_message(1000);
+            c.record_block("a", 400, 40);
+            c.record_block("b", 600, 60);
+        }
+        let rates = c.block_rates();
+        assert_eq!(rates.len(), 2);
+        assert_eq!(rates[0].0, "a");
+        assert!((rates[0].1 - 10.0).abs() < 1e-12);
+        assert!((rates[1].1 - 10.0).abs() < 1e-12);
+        assert_eq!(c.blocks()["a"].messages, 2);
     }
 }

@@ -96,27 +96,20 @@ impl CompressExec {
         Ok(Self { entry, exe, zeros })
     }
 
-    /// Locate + load the artifact matching a pipeline's scheme.
-    pub fn for_pipeline(rt: &Runtime, pipe: &WorkerPipeline) -> Result<Self> {
-        let cfg = &pipe.cfg;
-        let (qname, _k) = match cfg.quantizer {
-            crate::compress::QuantizerKind::None => ("none", 0),
-            crate::compress::QuantizerKind::Sign => ("sign", 0),
-            crate::compress::QuantizerKind::TopK { k } => ("topk", k),
-            crate::compress::QuantizerKind::TopKQ { k } => ("topkq", k),
-            crate::compress::QuantizerKind::RandK { .. } => ("randk", 0),
-        };
+    /// Locate + load the artifact matching a scheme at dimension d. Only
+    /// single (non-blockwise) schemes have AOT artifacts.
+    pub fn for_scheme(rt: &Runtime, scheme: &crate::scheme::Scheme, d: usize) -> Result<Self> {
+        let (qname, pname, ef) = scheme.hlo_names().with_context(|| {
+            format!(
+                "the HLO backend supports single (non-blockwise) schemes only, got {:?}",
+                scheme.spec()
+            )
+        })?;
         let entry = rt
             .manifest
-            .find_compress(pipe.dim(), qname, cfg.predictor.as_str(), cfg.ef)
+            .find_compress(d, &qname, &pname, ef)
             .with_context(|| {
-                format!(
-                    "no compress artifact for d={} {}/{}/ef={} — add it to aot.py",
-                    pipe.dim(),
-                    qname,
-                    cfg.predictor.as_str(),
-                    cfg.ef
-                )
+                format!("no compress artifact for d={d} {qname}/{pname}/ef={ef} — add it to aot.py")
             })?
             .clone();
         Self::load(rt, entry)

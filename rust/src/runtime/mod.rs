@@ -13,6 +13,13 @@ pub mod exec;
 
 pub use exec::{CompressExec, ModelExec};
 
+/// Whether a PJRT CPU client can be created in this build. False under the
+/// offline `xla` stub crate; true when the real bindings are linked. Tests
+/// that execute artifacts gate on this (see `testing::runtime_available`).
+pub fn pjrt_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}
+
 use std::path::Path;
 
 use anyhow::{Context, Result};

@@ -1,0 +1,104 @@
+//! The [`PayloadCodec`] trait — one object per wire format, unifying the
+//! `coding::payload` encode/decode dispatch behind a composable interface.
+//!
+//! The five built-in formats are served by [`KindCodec`], which delegates to
+//! the bit-level implementations in [`crate::coding::payload`] (the wire
+//! formats stay single-sourced there). The blockwise container codec in
+//! [`super::blockwise`] implements the same trait, which is what lets a
+//! composite scheme ride the identical worker→master path as a single one.
+
+use std::fmt::Debug;
+use std::sync::Arc;
+
+use crate::coding::{decode_payload, encode_payload, Payload, PayloadKind};
+
+/// Encoder/decoder pair for one wire format.
+pub trait PayloadCodec: Send + Sync + Debug {
+    /// Wire-format tag byte this codec produces/accepts.
+    fn kind_tag(&self) -> u8;
+
+    /// Encode the dense quantizer output. `round` seeds shared-mask formats.
+    fn encode(&self, utilde: &[f32], round: u64) -> Payload;
+
+    /// Decode a payload back to the dense d-vector.
+    fn decode(&self, payload: &Payload, d: usize, round: u64, out: &mut Vec<f32>)
+        -> anyhow::Result<()>;
+}
+
+/// Codec for one of the five built-in [`PayloadKind`] wire formats.
+#[derive(Clone, Copy, Debug)]
+pub struct KindCodec(pub PayloadKind);
+
+impl PayloadCodec for KindCodec {
+    fn kind_tag(&self) -> u8 {
+        // encode a zero-length probe is wasteful; tags are stable constants
+        match self.0 {
+            PayloadKind::Dense => 0,
+            PayloadKind::SparseValues => 1,
+            PayloadKind::SparseTwoPoint => 2,
+            PayloadKind::Sign => 3,
+            PayloadKind::MaskedValues { .. } => 4,
+        }
+    }
+
+    fn encode(&self, utilde: &[f32], round: u64) -> Payload {
+        encode_payload(self.0, utilde, round)
+    }
+
+    fn decode(
+        &self,
+        payload: &Payload,
+        d: usize,
+        round: u64,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        decode_payload(self.0, payload, d, round, out)
+    }
+}
+
+/// Build the codec object for a payload kind.
+pub fn codec_for(kind: PayloadKind) -> Arc<dyn PayloadCodec> {
+    Arc::new(KindCodec(kind))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn kind_codec_matches_free_functions() {
+        let mut rng = Pcg64::seeded(11);
+        let mut u = vec![0.0f32; 300];
+        rng.fill_gaussian(&mut u, 1.0);
+        for i in 0..300 {
+            if i % 3 != 0 {
+                u[i] = 0.0;
+            }
+        }
+        let codec = KindCodec(PayloadKind::SparseValues);
+        let a = codec.encode(&u, 5);
+        let b = encode_payload(PayloadKind::SparseValues, &u, 5);
+        assert_eq!(a.bytes, b.bytes);
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.kind_tag, codec.kind_tag());
+        let mut out = Vec::new();
+        codec.decode(&a, 300, 5, &mut out).unwrap();
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn tags_agree_with_encoder() {
+        let u = vec![1.0f32, 0.0, -1.0, 2.0];
+        for kind in [
+            PayloadKind::Dense,
+            PayloadKind::SparseValues,
+            PayloadKind::SparseTwoPoint,
+            PayloadKind::Sign,
+            PayloadKind::MaskedValues { prob: 0.5 },
+        ] {
+            let codec = KindCodec(kind);
+            assert_eq!(codec.encode(&u, 0).kind_tag, codec.kind_tag());
+        }
+    }
+}

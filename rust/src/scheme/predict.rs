@@ -1,0 +1,306 @@
+//! The [`Predict`] trait — the open P box of paper Eq. (1g) — and the three
+//! built-in predictor state machines.
+//!
+//! A predictor instance is *stateful*: `rhat()` is the prediction of r_t
+//! consumed when u_t = r_t − r̂_t is formed, and `update(utilde)` advances to
+//! r̂_{t+1} once the quantized update is known. The same implementation runs
+//! at the worker and (one per worker) at the master, fed the identical
+//! decoded `utilde` stream, so the two copies stay in bit-exact sync (same
+//! f32 ops in the same order).
+//!
+//! The numeric bodies moved here from the legacy `compress::Predictor` enum,
+//! which is now a thin shim over these structs.
+
+use std::fmt::Debug;
+
+/// Predictor state machine (see module docs for the protocol).
+pub trait Predict: Send + Debug {
+    /// Registry name (e.g. `"estk"`).
+    fn name(&self) -> &'static str;
+
+    fn dim(&self) -> usize {
+        self.rhat().len()
+    }
+
+    /// Current prediction r̂_t.
+    fn rhat(&self) -> &[f32];
+
+    /// Advance the state given the received quantized update ũ_t.
+    fn update(&mut self, utilde: &[f32]);
+
+    /// Borrowed state vectors for the HLO-backend bridge.
+    fn state_view(&self) -> PredictorState<'_>;
+
+    /// Overwrite state from the HLO artifact outputs.
+    fn load_state(
+        &mut self,
+        rhat_new: &[f32],
+        p_new: Option<&[f32]>,
+        s_new: Option<&[f32]>,
+        tau_new: Option<&[f32]>,
+    );
+
+    fn clone_box(&self) -> Box<dyn Predict>;
+}
+
+impl Clone for Box<dyn Predict> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Borrowed view of predictor state vectors (r̂ always; p/S/τ for Est-K).
+pub struct PredictorState<'a> {
+    pub rhat: &'a [f32],
+    pub p: Option<&'a [f32]>,
+    pub s: Option<&'a [f32]>,
+    pub tau: Option<&'a [f32]>,
+}
+
+/// No prediction — removes the blue blocks of Fig. 2.
+#[derive(Clone, Debug)]
+pub struct ZeroPredictor {
+    zeros: Vec<f32>,
+}
+
+impl ZeroPredictor {
+    pub fn new(d: usize) -> Self {
+        Self { zeros: vec![0.0; d] }
+    }
+}
+
+impl Predict for ZeroPredictor {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+
+    fn rhat(&self) -> &[f32] {
+        &self.zeros
+    }
+
+    fn update(&mut self, _utilde: &[f32]) {}
+
+    fn state_view(&self) -> PredictorState<'_> {
+        PredictorState { rhat: &self.zeros, p: None, s: None, tau: None }
+    }
+
+    fn load_state(&mut self, _r: &[f32], _p: Option<&[f32]>, _s: Option<&[f32]>, _t: Option<&[f32]>) {}
+
+    fn clone_box(&self) -> Box<dyn Predict> {
+        Box::new(self.clone())
+    }
+}
+
+/// P_Lin(r̃) = β·r̃ — the DPCM first-order predictor (paper Eq. 4).
+#[derive(Clone, Debug)]
+pub struct PLinPredictor {
+    beta: f32,
+    rhat: Vec<f32>,
+}
+
+impl PLinPredictor {
+    pub fn new(beta: f32, d: usize) -> Self {
+        Self { beta, rhat: vec![0.0; d] }
+    }
+}
+
+impl Predict for PLinPredictor {
+    fn name(&self) -> &'static str {
+        "plin"
+    }
+
+    fn rhat(&self) -> &[f32] {
+        &self.rhat
+    }
+
+    fn update(&mut self, utilde: &[f32]) {
+        // r̂_{t+1} = β·r̃_t = β·(ũ_t + r̂_t)
+        debug_assert_eq!(self.rhat.len(), utilde.len());
+        let b = self.beta;
+        for (r, &ut) in self.rhat.iter_mut().zip(utilde) {
+            *r = b * (ut + *r);
+        }
+    }
+
+    fn state_view(&self) -> PredictorState<'_> {
+        PredictorState { rhat: &self.rhat, p: None, s: None, tau: None }
+    }
+
+    fn load_state(&mut self, rhat_new: &[f32], _p: Option<&[f32]>, _s: Option<&[f32]>, _t: Option<&[f32]>) {
+        self.rhat.copy_from_slice(rhat_new);
+    }
+
+    fn clone_box(&self) -> Box<dyn Predict> {
+        Box::new(self.clone())
+    }
+}
+
+/// Est-K — momentum estimate/extrapolate between Top-K peaks (Alg. 1).
+#[derive(Clone, Debug)]
+pub struct EstKPredictor {
+    beta: f32,
+    rhat: Vec<f32>,
+    /// last estimate of the momentum (time-average between peaks)
+    p: Vec<f32>,
+    /// sum of predictions issued since the last received update
+    s: Vec<f32>,
+    /// iterations since the last received update
+    tau: Vec<f32>,
+}
+
+impl EstKPredictor {
+    pub fn new(beta: f32, d: usize) -> Self {
+        Self {
+            beta,
+            rhat: vec![0.0; d],
+            p: vec![0.0; d],
+            s: vec![0.0; d],
+            tau: vec![0.0; d],
+        }
+    }
+
+    pub fn p(&self) -> &[f32] {
+        &self.p
+    }
+
+    pub fn s(&self) -> &[f32] {
+        &self.s
+    }
+
+    pub fn tau(&self) -> &[f32] {
+        &self.tau
+    }
+}
+
+impl Predict for EstKPredictor {
+    fn name(&self) -> &'static str {
+        "estk"
+    }
+
+    fn rhat(&self) -> &[f32] {
+        &self.rhat
+    }
+
+    fn update(&mut self, utilde: &[f32]) {
+        debug_assert_eq!(self.rhat.len(), utilde.len());
+        let b = self.beta;
+        for i in 0..utilde.len() {
+            let ut = utilde[i];
+            if ut != 0.0 {
+                // received a Top-K peak: refresh the momentum estimate to
+                // the time-average since the last peak
+                let p_new = (self.s[i] + ut) / (self.tau[i] + 1.0);
+                let rh = b * p_new;
+                self.p[i] = p_new;
+                self.rhat[i] = rh;
+                self.s[i] = rh;
+                self.tau[i] = 0.0;
+            } else {
+                // miss: decay the chain, accumulate the prediction
+                let rh = b * self.rhat[i];
+                self.rhat[i] = rh;
+                self.s[i] += rh;
+                self.tau[i] += 1.0;
+            }
+        }
+    }
+
+    fn state_view(&self) -> PredictorState<'_> {
+        PredictorState {
+            rhat: &self.rhat,
+            p: Some(&self.p),
+            s: Some(&self.s),
+            tau: Some(&self.tau),
+        }
+    }
+
+    fn load_state(
+        &mut self,
+        rhat_new: &[f32],
+        p_new: Option<&[f32]>,
+        s_new: Option<&[f32]>,
+        tau_new: Option<&[f32]>,
+    ) {
+        self.rhat.copy_from_slice(rhat_new);
+        if let Some(x) = p_new {
+            self.p.copy_from_slice(x);
+        }
+        if let Some(x) = s_new {
+            self.s.copy_from_slice(x);
+        }
+        if let Some(x) = tau_new {
+            self.tau.copy_from_slice(x);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn Predict> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_never_predicts() {
+        let mut p: Box<dyn Predict> = Box::new(ZeroPredictor::new(4));
+        p.update(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.rhat(), &[0.0; 4]);
+        assert_eq!(p.name(), "zero");
+    }
+
+    #[test]
+    fn plin_geometric_chain() {
+        let mut p = PLinPredictor::new(0.5, 2);
+        p.update(&[2.0, 0.0]); // rhat = 0.5*(2+0) = 1
+        assert_eq!(p.rhat(), &[1.0, 0.0]);
+        p.update(&[0.0, 0.0]); // rhat = 0.5*(0+1) = 0.5
+        assert_eq!(p.rhat(), &[0.5, 0.0]);
+    }
+
+    #[test]
+    fn estk_replays_paper_table3() {
+        // the Table III trace (see python/tests/test_estk_table3.py)
+        let beta = 0.9f32;
+        let mut pr = EstKPredictor::new(beta, 1);
+        let (u3, u6) = (2.5f32, -1.3f32);
+        let stream = [0.0, 0.0, 0.0, u3, 0.0, 0.0, u6, 0.0];
+        let mut rhats = Vec::new();
+        let mut taus = Vec::new();
+        for &ut in &stream {
+            pr.update(&[ut]);
+            rhats.push(pr.rhat()[0]);
+            taus.push(pr.tau()[0]);
+        }
+        let p3 = u3 / 4.0;
+        assert!((rhats[3] - beta * p3).abs() < 1e-6);
+        assert!((rhats[4] - beta * beta * p3).abs() < 1e-6);
+        assert!((rhats[5] - beta.powi(3) * p3).abs() < 1e-6);
+        let s6 = (beta + beta * beta + beta.powi(3)) * p3;
+        let p6 = (s6 + u6) / 3.0;
+        assert!((rhats[6] - beta * p6).abs() < 1e-5);
+        assert_eq!(taus, vec![1.0, 2.0, 3.0, 0.0, 1.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn clone_box_is_independent() {
+        let mut a: Box<dyn Predict> = Box::new(EstKPredictor::new(0.9, 3));
+        a.update(&[1.0, 0.0, -1.0]);
+        let b = a.clone();
+        assert_eq!(a.rhat(), b.rhat());
+        a.update(&[0.0, 0.0, 0.0]);
+        assert_ne!(a.rhat(), b.rhat());
+    }
+
+    #[test]
+    fn load_state_roundtrip() {
+        let mut p = EstKPredictor::new(0.9, 3);
+        p.update(&[1.0, 0.0, -1.0]);
+        let rh: Vec<f32> = p.rhat().to_vec();
+        let (pp, ss, tt) = (p.p().to_vec(), p.s().to_vec(), p.tau().to_vec());
+        let mut q = EstKPredictor::new(0.9, 3);
+        q.load_state(&rh, Some(&pp), Some(&ss), Some(&tt));
+        assert_eq!(q.rhat(), p.rhat());
+    }
+}

@@ -1,0 +1,709 @@
+//! [`SchemeRegistry`] — resolves human-readable spec strings into built
+//! compression pipelines — plus the resolved [`Scheme`] description.
+//!
+//! Spec grammar (full mapping to paper Eq. (1) in `DESIGN.md`):
+//!
+//! ```text
+//! scheme     := single | "blocks(" block (";" block)* ")"
+//! single     := quant ("/" part)*
+//! quant      := name (":" key "=" num ("," key "=" num)*)?
+//! part       := predictor-name | "ef" | "noef" | "beta=" num
+//! block      := name "=" frac ":" single
+//! ```
+//!
+//! Examples: `topk:k=128/estk/ef/beta=0.9`, `sign/plin/beta=0.99`,
+//! `blocks(emb=0.25:topk:k_frac=0.01/estk/ef/beta=0.99;rest=0.75:sign/plin)`.
+//!
+//! Defaults: predictor `zero`, `noef`, `beta=0.99`. Fractional K
+//! (`k_frac=`) resolves against the bound dimension d with the same
+//! rounding/clamping rule as the legacy config path (see
+//! [`super::quantize::resolve_k`]), so registry-built and enum-built
+//! pipelines are bit-exact.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::Range;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{MasterChain, SchemeCfg, WorkerPipeline};
+
+use super::blockwise::{BlockwiseMaster, BlockwiseWorker};
+use super::codec::codec_for;
+use super::predict::{EstKPredictor, PLinPredictor, Predict, ZeroPredictor};
+use super::quantize::{
+    resolve_k, NoneQuantizer, Quantize, RandKQuantizer, SignQuantizer, TopKQQuantizer,
+    TopKQuantizer,
+};
+use super::{MasterScheme, SingleMaster, SingleWorker, WorkerScheme};
+
+/// Numeric parameters of a quantizer spec fragment (e.g. `k`, `k_frac`).
+pub type QuantParams = BTreeMap<String, f64>;
+
+type QuantBuildFn = dyn Fn(&QuantParams, usize) -> Result<Arc<dyn Quantize>> + Send + Sync;
+type PredictBuildFn = dyn Fn(f32, usize) -> Box<dyn Predict> + Send + Sync;
+
+/// A registered quantizer family: builder plus its accepted parameter keys.
+#[derive(Clone)]
+pub struct QuantizerEntry {
+    build: Arc<QuantBuildFn>,
+    params: Vec<String>,
+}
+
+/// A registered predictor family.
+#[derive(Clone)]
+pub struct PredictorEntry {
+    build: Arc<PredictBuildFn>,
+    /// Est-K-style predictors are only defined on exact-sparse quantizers.
+    needs_exact_sparse: bool,
+}
+
+/// Open registry of quantizer and predictor families. [`Self::builtin`]
+/// carries the paper's five quantizers and three predictors; plugins add
+/// more with [`Self::register_quantizer`] / [`Self::register_predictor`].
+pub struct SchemeRegistry {
+    quantizers: BTreeMap<String, QuantizerEntry>,
+    predictors: BTreeMap<String, PredictorEntry>,
+}
+
+impl SchemeRegistry {
+    /// Empty registry (no families registered).
+    pub fn new() -> Self {
+        Self { quantizers: BTreeMap::new(), predictors: BTreeMap::new() }
+    }
+
+    /// Registry with the paper's built-in families.
+    pub fn builtin() -> Self {
+        let mut r = Self::new();
+        r.register_quantizer("none", &[], |_p, _d| Ok(Arc::new(NoneQuantizer)));
+        r.register_quantizer("sign", &[], |_p, _d| Ok(Arc::new(SignQuantizer)));
+        r.register_quantizer("topk", &["k", "k_frac"], |p, d| {
+            Ok(Arc::new(TopKQuantizer { k: resolve_params_k(p, d)? }))
+        });
+        r.register_quantizer("topkq", &["k", "k_frac"], |p, d| {
+            Ok(Arc::new(TopKQQuantizer { k: resolve_params_k(p, d)? }))
+        });
+        r.register_quantizer("randk", &["p", "prob", "k_frac"], |p, _d| {
+            let prob = p
+                .get("p")
+                .or_else(|| p.get("prob"))
+                .or_else(|| p.get("k_frac"))
+                .context("randk needs p=, prob= or k_frac=")?;
+            Ok(Arc::new(RandKQuantizer { prob: *prob as f32 }))
+        });
+        r.register_predictor("zero", false, |_beta, d| Box::new(ZeroPredictor::new(d)));
+        r.register_predictor("none", false, |_beta, d| Box::new(ZeroPredictor::new(d)));
+        r.register_predictor("plin", false, |beta, d| Box::new(PLinPredictor::new(beta, d)));
+        r.register_predictor("lin", false, |beta, d| Box::new(PLinPredictor::new(beta, d)));
+        r.register_predictor("estk", true, |beta, d| Box::new(EstKPredictor::new(beta, d)));
+        r
+    }
+
+    /// Process-wide shared builtin registry.
+    pub fn global() -> &'static SchemeRegistry {
+        static REG: OnceLock<SchemeRegistry> = OnceLock::new();
+        REG.get_or_init(SchemeRegistry::builtin)
+    }
+
+    pub fn register_quantizer(
+        &mut self,
+        name: &str,
+        params: &[&str],
+        build: impl Fn(&QuantParams, usize) -> Result<Arc<dyn Quantize>> + Send + Sync + 'static,
+    ) {
+        self.quantizers.insert(
+            name.to_string(),
+            QuantizerEntry {
+                build: Arc::new(build),
+                params: params.iter().map(|s| s.to_string()).collect(),
+            },
+        );
+    }
+
+    pub fn register_predictor(
+        &mut self,
+        name: &str,
+        needs_exact_sparse: bool,
+        build: impl Fn(f32, usize) -> Box<dyn Predict> + Send + Sync + 'static,
+    ) {
+        self.predictors.insert(
+            name.to_string(),
+            PredictorEntry { build: Arc::new(build), needs_exact_sparse },
+        );
+    }
+
+    pub fn quantizer_names(&self) -> Vec<&str> {
+        self.quantizers.keys().map(String::as_str).collect()
+    }
+
+    pub fn predictor_names(&self) -> Vec<&str> {
+        self.predictors.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve a spec string into a [`Scheme`].
+    pub fn parse(&self, spec: &str) -> Result<Scheme> {
+        let s = spec.trim();
+        if let Some(inner) = s.strip_prefix("blocks(").and_then(|r| r.strip_suffix(')')) {
+            let mut blocks: Vec<BlockSpec> = Vec::new();
+            for part in inner.split(';') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (head, sub) = part
+                    .split_once(':')
+                    .with_context(|| format!("block {part:?}: expected <name>=<frac>:<scheme>"))?;
+                let (name, frac) = head
+                    .split_once('=')
+                    .with_context(|| format!("block head {head:?}: expected <name>=<frac>"))?;
+                let name = name.trim();
+                let frac: f64 = frac
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("block {name:?}: fraction {frac:?}"))?;
+                anyhow::ensure!(!name.is_empty(), "block name must be non-empty");
+                anyhow::ensure!(
+                    frac > 0.0 && frac <= 1.0,
+                    "block {name:?}: fraction must be in (0,1], got {frac}"
+                );
+                anyhow::ensure!(
+                    blocks.iter().all(|b| b.name != name),
+                    "duplicate block name {name:?}"
+                );
+                blocks.push(BlockSpec {
+                    name: name.to_string(),
+                    frac,
+                    scheme: self.parse_single(sub)?,
+                });
+            }
+            anyhow::ensure!(blocks.len() >= 2, "blocks(...) needs at least two blocks");
+            let total: f64 = blocks.iter().map(|b| b.frac).sum();
+            anyhow::ensure!(
+                (total - 1.0).abs() <= 1e-6,
+                "block fractions must sum to 1, got {total}"
+            );
+            Ok(Scheme { kind: Arc::new(SchemeKind::Blockwise(blocks)) })
+        } else {
+            Ok(Scheme { kind: Arc::new(SchemeKind::Single(self.parse_single(s)?)) })
+        }
+    }
+
+    fn parse_single(&self, s: &str) -> Result<SingleScheme> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty scheme spec");
+        let mut parts = s.split('/');
+        let qpart = parts.next().unwrap_or("").trim();
+        let (qname, params) = parse_quant_part(qpart)?;
+        let quant = self.quantizers.get(qname).with_context(|| {
+            format!("unknown quantizer {qname:?} (have: {:?})", self.quantizer_names())
+        })?;
+        for key in params.keys() {
+            anyhow::ensure!(
+                quant.params.iter().any(|p| p == key),
+                "quantizer {qname:?} does not take parameter {key:?} (allowed: {:?})",
+                quant.params
+            );
+        }
+        let mut pred_name: Option<String> = None;
+        let mut ef = false;
+        let mut beta = 0.99f32;
+        for part in parts {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if part == "ef" {
+                ef = true;
+            } else if part == "noef" {
+                ef = false;
+            } else if let Some(b) = part.strip_prefix("beta=") {
+                beta = b.parse().with_context(|| format!("beta value {b:?}"))?;
+            } else if self.predictors.contains_key(part) {
+                anyhow::ensure!(
+                    pred_name.is_none(),
+                    "duplicate predictor {part:?} in spec {s:?}"
+                );
+                pred_name = Some(part.to_string());
+            } else {
+                bail!(
+                    "unknown scheme part {part:?} in {s:?} \
+                     (expected a predictor {:?}, ef|noef, or beta=<f32>)",
+                    self.predictor_names()
+                );
+            }
+        }
+        self.single_resolved(qname, params, pred_name.as_deref().unwrap_or("zero"), ef, beta)
+    }
+
+    /// Programmatic single-scheme construction (config-struct path). Unlike
+    /// spec-string parsing this is lenient about extra parameters: keys the
+    /// quantizer does not take are dropped, mirroring the legacy
+    /// `SchemeSpec::to_cfg` behaviour where e.g. `k_frac` is ignored by the
+    /// sign quantizer.
+    pub fn single(
+        &self,
+        quantizer: &str,
+        params: QuantParams,
+        predictor: &str,
+        ef: bool,
+        beta: f32,
+    ) -> Result<Scheme> {
+        let quant = self.quantizers.get(quantizer).with_context(|| {
+            format!("unknown quantizer {quantizer:?} (have: {:?})", self.quantizer_names())
+        })?;
+        let mut params = params;
+        params.retain(|k, _| quant.params.iter().any(|p| p == k));
+        let single = self.single_resolved(quantizer, params, predictor, ef, beta)?;
+        Ok(Scheme { kind: Arc::new(SchemeKind::Single(single)) })
+    }
+
+    fn single_resolved(
+        &self,
+        quantizer: &str,
+        params: QuantParams,
+        predictor: &str,
+        ef: bool,
+        beta: f32,
+    ) -> Result<SingleScheme> {
+        let quant = self
+            .quantizers
+            .get(quantizer)
+            .with_context(|| format!("unknown quantizer {quantizer:?}"))?
+            .clone();
+        let pred = self.predictors.get(predictor).with_context(|| {
+            format!("unknown predictor {predictor:?} (have: {:?})", self.predictor_names())
+        })?;
+        anyhow::ensure!((0.0..1.0).contains(&beta), "beta must be in [0,1), got {beta}");
+        Ok(SingleScheme {
+            quant_name: quantizer.to_string(),
+            quant_params: params,
+            quant,
+            pred_name: predictor.to_string(),
+            pred: pred.clone(),
+            ef,
+            beta,
+        })
+    }
+}
+
+impl Default for SchemeRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+fn resolve_params_k(p: &QuantParams, d: usize) -> Result<usize> {
+    // explicit bad parameters are user errors, not something to clamp or
+    // truncate away (the valid k_frac path keeps the legacy
+    // round-then-clamp-to-[1,d] rule)
+    if let Some(k) = p.get("k") {
+        anyhow::ensure!(
+            *k >= 1.0 && k.fract() == 0.0,
+            "top-k requires an integer k >= 1, got {k}"
+        );
+    }
+    if let Some(f) = p.get("k_frac") {
+        anyhow::ensure!(*f > 0.0 && *f <= 1.0, "k_frac must be in (0,1], got {f}");
+    }
+    Ok(resolve_k(p.get("k").map(|v| *v as usize), p.get("k_frac").copied(), d))
+}
+
+fn parse_quant_part(s: &str) -> Result<(&str, QuantParams)> {
+    match s.split_once(':') {
+        None => Ok((s, QuantParams::new())),
+        Some((name, rest)) => {
+            let mut params = QuantParams::new();
+            for kv in rest.split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("quantizer parameter {kv:?} must be key=value"))?;
+                let val: f64 = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("quantizer parameter {k:?}: bad number {v:?}"))?;
+                params.insert(k.trim().to_string(), val);
+            }
+            Ok((name, params))
+        }
+    }
+}
+
+/// A resolved single (quantizer, predictor, EF, β) scheme, dimension-free.
+#[derive(Clone)]
+pub struct SingleScheme {
+    quant_name: String,
+    quant_params: QuantParams,
+    quant: QuantizerEntry,
+    pred_name: String,
+    pred: PredictorEntry,
+    ef: bool,
+    beta: f32,
+}
+
+impl SingleScheme {
+    pub fn ef(&self) -> bool {
+        self.ef
+    }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    /// Canonical round-trippable spec string.
+    pub fn spec(&self) -> String {
+        let mut q = self.quant_name.clone();
+        if !self.quant_params.is_empty() {
+            let kv: Vec<String> =
+                self.quant_params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            q = format!("{q}:{}", kv.join(","));
+        }
+        format!(
+            "{q}/{}/{}/beta={}",
+            self.pred_name,
+            if self.ef { "ef" } else { "noef" },
+            self.beta
+        )
+    }
+
+    /// Filename-safe tag.
+    pub fn tag(&self) -> String {
+        let mut q = self.quant_name.clone();
+        for (k, v) in &self.quant_params {
+            q.push_str(&format!("_{k}{v}"));
+        }
+        format!(
+            "{q}_{}_{}_b{}",
+            self.pred_name,
+            if self.ef { "ef" } else { "noef" },
+            self.beta
+        )
+        .replace('.', "_")
+        .replace('-', "m")
+    }
+
+    fn build_quantizer(&self, d: usize) -> Result<Arc<dyn Quantize>> {
+        let q = (self.quant.build)(&self.quant_params, d)
+            .with_context(|| format!("build quantizer {:?}", self.quant_name))?;
+        q.validate()?;
+        if self.pred.needs_exact_sparse && !q.supports_estk() {
+            bail!(
+                "predictor {:?} is defined only on exact-sparse quantizers such as top-k \
+                 (paper Sec. IV-C), not on {:?}",
+                self.pred_name,
+                self.quant_name
+            );
+        }
+        Ok(q)
+    }
+
+    fn build_predictor(&self, d: usize) -> Box<dyn Predict> {
+        (self.pred.build)(self.beta, d)
+    }
+
+    /// Bind at dimension d into a worker-side pipeline.
+    pub fn worker(&self, d: usize) -> Result<SingleWorker> {
+        let q = self.build_quantizer(d)?;
+        let codec = codec_for(q.payload_kind());
+        let pipeline =
+            WorkerPipeline::from_parts(q, self.build_predictor(d), self.ef, self.beta, d);
+        Ok(SingleWorker::new(pipeline, codec))
+    }
+
+    /// Bind at dimension d into one master-side decode-and-predict chain.
+    pub fn master(&self, d: usize) -> Result<SingleMaster> {
+        let q = self.build_quantizer(d)?;
+        let codec = codec_for(q.payload_kind());
+        let chain = MasterChain::from_predictor(self.build_predictor(d), d);
+        Ok(SingleMaster::new(chain, codec, d))
+    }
+}
+
+impl fmt::Debug for SingleScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_tuple("SingleScheme").field(&self.spec()).finish()
+    }
+}
+
+/// One named block of a blockwise scheme.
+#[derive(Clone, Debug)]
+pub struct BlockSpec {
+    pub name: String,
+    /// Fraction of the parameter vector this block covers.
+    pub frac: f64,
+    scheme: SingleScheme,
+}
+
+impl BlockSpec {
+    pub fn scheme(&self) -> &SingleScheme {
+        &self.scheme
+    }
+}
+
+#[derive(Debug)]
+enum SchemeKind {
+    Single(SingleScheme),
+    Blockwise(Vec<BlockSpec>),
+}
+
+/// A resolved, dimension-independent scheme description. Cheap to clone
+/// (`Arc` inside), `Send + Sync`, and bindable at any dimension via
+/// [`Self::worker`] / [`Self::master`].
+#[derive(Clone)]
+pub struct Scheme {
+    kind: Arc<SchemeKind>,
+}
+
+impl Scheme {
+    /// Parse a spec string against the global builtin registry.
+    pub fn parse(spec: &str) -> Result<Scheme> {
+        SchemeRegistry::global().parse(spec)
+    }
+
+    /// Canonical spec string (round-trips through [`SchemeRegistry::parse`]).
+    pub fn spec(&self) -> String {
+        match &*self.kind {
+            SchemeKind::Single(s) => s.spec(),
+            SchemeKind::Blockwise(blocks) => {
+                let inner: Vec<String> = blocks
+                    .iter()
+                    .map(|b| format!("{}={}:{}", b.name, b.frac, b.scheme.spec()))
+                    .collect();
+                format!("blocks({})", inner.join(";"))
+            }
+        }
+    }
+
+    /// Filename-safe tag.
+    pub fn tag(&self) -> String {
+        match &*self.kind {
+            SchemeKind::Single(s) => s.tag(),
+            SchemeKind::Blockwise(blocks) => {
+                let inner: Vec<String> =
+                    blocks.iter().map(|b| format!("{}-{}", b.name, b.scheme.tag())).collect();
+                format!("bw__{}", inner.join("__"))
+            }
+        }
+    }
+
+    pub fn is_blockwise(&self) -> bool {
+        matches!(&*self.kind, SchemeKind::Blockwise(_))
+    }
+
+    /// (quantizer, predictor, ef) names for HLO-artifact lookup; `None` for
+    /// composite schemes (the AOT backend runs single pipelines only).
+    pub fn hlo_names(&self) -> Option<(String, String, bool)> {
+        match &*self.kind {
+            SchemeKind::Single(s) => {
+                // probe-build the predictor to canonicalize aliases
+                let pname = s.build_predictor(1).name().to_string();
+                Some((s.quant_name.clone(), pname, s.ef))
+            }
+            SchemeKind::Blockwise(_) => None,
+        }
+    }
+
+    /// Named block ranges at dimension d (single schemes: one `"all"` block).
+    pub fn block_layout(&self, d: usize) -> Result<Vec<(String, Range<usize>)>> {
+        match &*self.kind {
+            SchemeKind::Single(_) => Ok(vec![("all".to_string(), 0..d)]),
+            SchemeKind::Blockwise(blocks) => blockwise_layout(blocks, d),
+        }
+    }
+
+    /// Bind at dimension d into a worker-side pipeline object.
+    pub fn worker(&self, d: usize) -> Result<Box<dyn WorkerScheme>> {
+        match &*self.kind {
+            SchemeKind::Single(s) => Ok(Box::new(s.worker(d)?)),
+            SchemeKind::Blockwise(blocks) => {
+                let layout = blockwise_layout(blocks, d)?;
+                let mut parts = Vec::with_capacity(blocks.len());
+                for (b, (name, range)) in blocks.iter().zip(layout) {
+                    let worker = b
+                        .scheme
+                        .worker(range.len())
+                        .with_context(|| format!("block {name:?}"))?;
+                    parts.push((name, range, worker));
+                }
+                Ok(Box::new(BlockwiseWorker::new(d, parts)))
+            }
+        }
+    }
+
+    /// Bind at dimension d into one master-side chain (call once per worker).
+    pub fn master(&self, d: usize) -> Result<Box<dyn MasterScheme>> {
+        match &*self.kind {
+            SchemeKind::Single(s) => Ok(Box::new(s.master(d)?)),
+            SchemeKind::Blockwise(blocks) => {
+                let layout = blockwise_layout(blocks, d)?;
+                let mut parts = Vec::with_capacity(blocks.len());
+                for (b, (name, range)) in blocks.iter().zip(layout) {
+                    let master = b
+                        .scheme
+                        .master(range.len())
+                        .with_context(|| format!("block {name:?}"))?;
+                    parts.push((name, range, master));
+                }
+                Ok(Box::new(BlockwiseMaster::new(d, parts)))
+            }
+        }
+    }
+}
+
+impl fmt::Debug for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_tuple("Scheme").field(&self.spec()).finish()
+    }
+}
+
+impl From<SchemeCfg> for Scheme {
+    fn from(cfg: SchemeCfg) -> Scheme {
+        cfg.to_scheme()
+    }
+}
+
+/// Partition d into the blocks' ranges: every block but the last gets
+/// `round(frac·d)` (clamped so later blocks keep ≥ 1 component); the last
+/// takes the remainder.
+pub fn blockwise_layout(blocks: &[BlockSpec], d: usize) -> Result<Vec<(String, Range<usize>)>> {
+    let n = blocks.len();
+    anyhow::ensure!(n >= 1, "blockwise scheme needs at least one block");
+    anyhow::ensure!(d >= n, "dimension {d} too small for {n} blocks");
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for (i, b) in blocks.iter().enumerate() {
+        let remaining = n - 1 - i;
+        let len = if i == n - 1 {
+            d - start
+        } else {
+            let want = (b.frac * d as f64).round() as usize;
+            want.clamp(1, d - start - remaining)
+        };
+        out.push((b.name.clone(), start..start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, d);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_canonical_roundtrip() {
+        for spec in [
+            "topk:k=128/estk/ef/beta=0.9",
+            "sign/plin/noef/beta=0.99",
+            "none/zero/noef/beta=0.99",
+            "randk:p=0.05/zero/noef/beta=0.5",
+            "topkq:k_frac=0.01/plin/noef/beta=0.99",
+        ] {
+            let s = Scheme::parse(spec).unwrap();
+            assert_eq!(s.spec(), spec, "canonical spec must round-trip");
+            let again = Scheme::parse(&s.spec()).unwrap();
+            assert_eq!(again.spec(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_defaults() {
+        let s = Scheme::parse("sign").unwrap();
+        assert_eq!(s.spec(), "sign/zero/noef/beta=0.99");
+        let s = Scheme::parse("topk:k=4/ef").unwrap();
+        assert_eq!(s.spec(), "topk:k=4/zero/ef/beta=0.99");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Scheme::parse("").is_err());
+        assert!(Scheme::parse("warp9").is_err(), "unknown quantizer");
+        assert!(Scheme::parse("topk:k=4/warp9").is_err(), "unknown part");
+        assert!(Scheme::parse("topk:q=4").is_err(), "unknown parameter");
+        assert!(Scheme::parse("topk:k=oops").is_err(), "bad number");
+        assert!(Scheme::parse("sign/beta=1.0").is_err(), "beta out of range");
+        assert!(Scheme::parse("sign/plin/plin").is_err(), "duplicate predictor");
+        // estk is rejected at bind time on non-sparse quantizers
+        let s = Scheme::parse("sign/estk").unwrap();
+        assert!(s.worker(16).is_err());
+        // bad K parameters are rejected at bind time, not clamped/truncated
+        for bad in ["topk:k=0", "topk:k=2.7", "topk:k_frac=-0.5", "topk:k_frac=1.5"] {
+            let s = Scheme::parse(bad).unwrap();
+            assert!(s.worker(16).is_err(), "{bad} must fail to bind");
+        }
+    }
+
+    #[test]
+    fn blockwise_parse_and_layout() {
+        let s = Scheme::parse(
+            "blocks(head=0.25:topk:k=4/estk/ef/beta=0.9;tail=0.75:sign/plin/noef/beta=0.8)",
+        )
+        .unwrap();
+        assert!(s.is_blockwise());
+        assert!(s.hlo_names().is_none());
+        let layout = s.block_layout(1000).unwrap();
+        assert_eq!(layout.len(), 2);
+        assert_eq!(layout[0], ("head".to_string(), 0..250));
+        assert_eq!(layout[1], ("tail".to_string(), 250..1000));
+        // round-trips
+        let again = Scheme::parse(&s.spec()).unwrap();
+        assert_eq!(again.spec(), s.spec());
+    }
+
+    #[test]
+    fn blockwise_parse_errors() {
+        assert!(Scheme::parse("blocks(a=0.5:sign)").is_err(), "needs two blocks");
+        assert!(Scheme::parse("blocks(a=0.5:sign;a=0.5:none)").is_err(), "dup name");
+        assert!(Scheme::parse("blocks(a=0.6:sign;b=0.6:none)").is_err(), "fractions");
+        assert!(Scheme::parse("blocks(a=0.5:sign;b=0.5:warp9)").is_err());
+    }
+
+    #[test]
+    fn layout_clamps_tiny_blocks() {
+        let r = SchemeRegistry::global();
+        let s = r.parse("blocks(a=0.0001:sign;b=0.9999:none)").unwrap();
+        let layout = s.block_layout(10).unwrap();
+        assert_eq!(layout[0].1.len(), 1, "rounded-to-zero block keeps one component");
+        assert_eq!(layout[1].1.len(), 9);
+    }
+
+    #[test]
+    fn hlo_names_canonicalize_aliases() {
+        let s = Scheme::parse("topk:k=4/lin").unwrap();
+        let (q, p, ef) = s.hlo_names().unwrap();
+        assert_eq!((q.as_str(), p.as_str(), ef), ("topk", "plin", false));
+    }
+
+    #[test]
+    fn plugin_quantizer_is_parseable() {
+        // a one-file plugin: uniform stochastic rounding stand-in (identity
+        // here; the point is the registration path, not the math)
+        let mut r = SchemeRegistry::builtin();
+        r.register_quantizer("ident2", &["gain"], |p, _d| {
+            let _gain = p.get("gain").copied().unwrap_or(1.0);
+            Ok(Arc::new(NoneQuantizer))
+        });
+        let s = r.parse("ident2:gain=2/plin/beta=0.9").unwrap();
+        let mut w = s.worker(8).unwrap();
+        let stats = w.step(&[1.0; 8], 0.0);
+        assert_eq!(stats.nnz, 8);
+        // and the global registry does not know it
+        assert!(Scheme::parse("ident2:gain=2").is_err());
+    }
+
+    #[test]
+    fn scheme_cfg_shim_round_trips() {
+        use crate::compress::{PredictorKind, QuantizerKind};
+        let cfg =
+            SchemeCfg::new(QuantizerKind::TopK { k: 7 }, PredictorKind::EstK, true, 0.95).unwrap();
+        let scheme: Scheme = cfg.clone().into();
+        assert_eq!(scheme.spec(), "topk:k=7/estk/ef/beta=0.95");
+        assert!(!scheme.is_blockwise());
+        let w = scheme.worker(64).unwrap();
+        assert_eq!(w.dim(), 64);
+    }
+}

@@ -7,6 +7,19 @@ pub mod prop;
 pub use bench::{BenchResult, Bencher};
 pub use prop::{Gen, PropConfig, PropError};
 
+/// Whether the AOT artifacts are present (`make artifacts` has been run).
+pub fn artifacts_available() -> bool {
+    crate::model::Manifest::load_default().is_ok()
+}
+
+/// Whether PJRT-backed integration tests can run: artifacts on disk AND a
+/// real PJRT client (false under the offline `xla` stub). Tests that need
+/// model execution call this and skip with a message when it is false —
+/// the offline tier-1 suite stays green without `make artifacts`.
+pub fn runtime_available() -> bool {
+    artifacts_available() && crate::runtime::pjrt_available()
+}
+
 /// Approximate slice equality with both absolute and relative tolerance.
 pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");

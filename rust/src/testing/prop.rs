@@ -183,4 +183,98 @@ mod tests {
         let mut b = Gen::new(5, 10);
         assert_eq!(a.gaussian_vec(), b.gaussian_vec());
     }
+
+    /// Bit-exact f32 comparison against the expected decode.
+    fn roundtrip(
+        kind: crate::coding::PayloadKind,
+        input: &[f32],
+        expect: &[f32],
+        round: u64,
+    ) -> Result<(), String> {
+        use crate::scheme::PayloadCodec;
+        let codec = crate::scheme::codec_for(kind);
+        let payload = codec.encode(input, round);
+        if payload.kind_tag != codec.kind_tag() {
+            return Err(format!("{kind:?}: tag mismatch"));
+        }
+        let mut out = Vec::new();
+        codec
+            .decode(&payload, input.len(), round, &mut out)
+            .map_err(|e| format!("{kind:?}: decode failed: {e:#}"))?;
+        if out.len() != expect.len() {
+            return Err(format!("{kind:?}: length {} vs {}", out.len(), expect.len()));
+        }
+        for i in 0..out.len() {
+            if out[i].to_bits() != expect[i].to_bits() {
+                return Err(format!(
+                    "{kind:?}: component {i} not bit-exact: {} vs {}",
+                    out[i], expect[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn all_payload_kinds_roundtrip_bit_exact() {
+        use crate::coding::PayloadKind;
+        let cfg = PropConfig { cases: 48, seed: 0xC0DEC, max_size: 400 };
+        check(cfg, |g| {
+            let round = g.u64() & 0xFFFF;
+
+            // Dense: arbitrary values round-trip verbatim.
+            let dense = g.gaussian_vec();
+            roundtrip(PayloadKind::Dense, &dense, &dense, round)?;
+
+            // SparseValues: arbitrary sparse vectors round-trip verbatim.
+            let sparse = g.sparse_vec(0.15);
+            roundtrip(PayloadKind::SparseValues, &sparse, &sparse, round)?;
+
+            // SparseTwoPoint: all positives equal a+, all negatives equal
+            // −a− (the quantizer's output structure).
+            let (a_pos, a_neg) = (g.f32_range(0.1, 2.0), g.f32_range(0.1, 2.0));
+            let two_point: Vec<f32> = g
+                .sparse_vec(0.2)
+                .iter()
+                .map(|&v| {
+                    if v > 0.0 {
+                        a_pos
+                    } else if v < 0.0 {
+                        -a_neg
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            roundtrip(PayloadKind::SparseTwoPoint, &two_point, &two_point, round)?;
+
+            // Sign: ±a everywhere, including the documented degenerate case
+            // — exact zeros decode as +a.
+            let a = g.f32_range(0.1, 2.0);
+            let signs: Vec<f32> = (0..g.len())
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0.0, // ~10% exact zeros
+                    n if n % 2 == 0 => a,
+                    _ => -a,
+                })
+                .collect();
+            // scale as the encoder recovers it (0 when the vector is all-zero)
+            let enc_a = signs.iter().find(|&&v| v != 0.0).map(|v| v.abs()).unwrap_or(0.0);
+            let expect: Vec<f32> =
+                signs.iter().map(|&v| if v < 0.0 { -enc_a } else { enc_a }).collect();
+            roundtrip(PayloadKind::Sign, &signs, &expect, round)?;
+
+            // MaskedValues: values live exactly on the shared-seed mask.
+            let d = g.len();
+            let prob = g.f32_range(0.0, 1.0);
+            let mask = crate::compress::randk::mask_indices(d, round, prob);
+            let mut masked = vec![0.0f32; d];
+            for &i in &mask {
+                masked[i as usize] = g.gaussian_f32();
+            }
+            roundtrip(PayloadKind::MaskedValues { prob }, &masked, &masked, round)?;
+
+            Ok(())
+        });
+    }
 }

@@ -1,0 +1,99 @@
+//! BlockwiseScheme end-to-end through the coordinator round loop over the
+//! in-process channel fabric: two blocks with different sub-schemes
+//! (Top-K+Est-K+EF and Scaled-sign+P_Lin), synthetic gradient sources on
+//! the workers, headless master — and per-block rate accounting reported in
+//! `comm_stats`. Runs fully offline (no artifacts, no PJRT).
+
+use tempo::comm::channel_fabric;
+use tempo::config::experiment::Backend;
+use tempo::coordinator::master::{MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::optim::LrSchedule;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+#[test]
+fn blockwise_scheme_end_to_end_over_channels() {
+    let d = 600usize;
+    let d_head = 300usize;
+    let spec_str = "blocks(head=0.5:topk:k=8/estk/ef/beta=0.9;tail=0.5:sign/plin/noef/beta=0.8)";
+    let scheme = Scheme::parse(spec_str).unwrap();
+    let n_workers = 2usize;
+    let steps = 12u64;
+    let schedule = LrSchedule::constant(0.05);
+
+    let (master_tx, workers_tx) = channel_fabric(n_workers);
+
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed: 1,
+            clip_norm: None,
+        };
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::seeded(100 + wid as u64);
+            let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+                let mut g = vec![0.0f32; d];
+                rng.fill_gaussian(&mut g, 1.0);
+                Ok((1.0, g))
+            };
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme: scheme.clone(),
+        schedule,
+        steps,
+        eval_every: 6,
+        eval_batches: 1,
+        seed: 1,
+        samples_per_round: n_workers,
+        train_len: 64,
+        data_noise: 1.0,
+    };
+    let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
+
+    for h in handles {
+        let summary = h.join().unwrap().unwrap();
+        assert_eq!(summary.rounds, steps);
+        // sign block always quantizes with error => e_mse trace is non-zero
+        assert!(summary.e_mse_trace.iter().all(|&x| x > 0.0));
+    }
+
+    // every message arrived and was accounted
+    assert_eq!(report.comm.messages(), steps * n_workers as u64);
+    assert!(report.comm.bits_per_component() > 0.0);
+
+    // per-block rate accounting (the acceptance criterion)
+    let rates = report.comm.block_rates();
+    assert_eq!(rates.len(), 2, "two named blocks: {rates:?}");
+    assert_eq!(rates[0].0, "head");
+    assert_eq!(rates[1].0, "tail");
+    // head: top-8 of 300 comps ≈ well under 2 bits/comp
+    assert!(rates[0].1 > 0.0 && rates[0].1 < 2.0, "head rate {rates:?}");
+    // tail: scaled-sign = 1 bit/comp + 32-bit scale = 1.10667
+    assert!((rates[1].1 - (1.0 + 32.0 / d_head as f64)).abs() < 1e-9, "tail rate {rates:?}");
+    let blocks = report.comm.blocks();
+    assert_eq!(blocks["head"].messages, steps * n_workers as u64);
+    assert_eq!(blocks["head"].components as usize, d_head);
+    assert_eq!(blocks["tail"].components as usize, d - d_head);
+
+    // the whole-message rate includes container overhead on top of the
+    // per-block payloads
+    let per_block_total: u64 = blocks.values().map(|b| b.bits).sum();
+    assert!(report.comm.total_bits() > per_block_total);
+
+    // headless master: eval columns are NaN, bookkeeping still works
+    assert_eq!(report.points.len(), 2);
+    assert!(report.final_test_loss.is_nan());
+    assert!(report.final_w_norm > 0.0);
+}

@@ -3,7 +3,7 @@
 //! over multi-step stateful runs, for every scheme family lowered at the
 //! test dimension d=1024.
 //!
-//! Requires `make artifacts`.
+//! Skips unless `make artifacts` has been run and real PJRT is linked.
 
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
 use tempo::model::Manifest;
@@ -39,7 +39,11 @@ fn scheme_from(entry: &tempo::model::CompressEntry) -> SchemeCfg {
 
 #[test]
 fn hlo_artifacts_match_rust_pipeline() {
-    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    if !tempo::testing::runtime_available() {
+        eprintln!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
     let runtime = Runtime::new(manifest.clone()).unwrap();
     let entries: Vec<_> = manifest.compress.iter().filter(|c| c.d == D).cloned().collect();
     assert!(
@@ -83,8 +87,12 @@ fn hlo_artifacts_match_rust_pipeline() {
 
 #[test]
 fn hlo_baked_k_matches_manifest() {
+    if !tempo::testing::runtime_available() {
+        eprintln!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+        return;
+    }
     // artifact k metadata must equal the actual sparsity the artifact emits
-    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    let manifest = Manifest::load_default().unwrap();
     let runtime = Runtime::new(manifest.clone()).unwrap();
     let entry = manifest
         .compress

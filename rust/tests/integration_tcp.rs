@@ -1,6 +1,6 @@
 //! Multi-process-style deployment test: the same Worker/Master loops over
 //! the TCP transport (in-process threads, real sockets on 127.0.0.1).
-//! Requires `make artifacts`.
+//! Skips unless `make artifacts` has been run and real PJRT is linked.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -16,7 +16,11 @@ use tempo::runtime::Runtime;
 
 #[test]
 fn tcp_training_round_trip() {
-    let manifest = Manifest::load_default().expect("run `make artifacts` first");
+    if !tempo::testing::runtime_available() {
+        eprintln!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
     let entry = manifest.model("mlp_tiny").unwrap().clone();
     let d = entry.d;
     let n_workers = 2usize;
@@ -27,7 +31,8 @@ fn tcp_training_round_trip() {
         true,
         0.9,
     )
-    .unwrap();
+    .unwrap()
+    .to_scheme();
     let schedule = LrSchedule::constant(0.05);
 
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();

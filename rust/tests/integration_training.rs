@@ -1,9 +1,19 @@
 //! End-to-end training integration: full coordinator runs over the channel
-//! fabric with real PJRT model execution. Requires `make artifacts`.
+//! fabric with real PJRT model execution. Skips unless `make artifacts` has
+//! been run and a real PJRT backend is linked.
 
 use tempo::config::experiment::Backend;
 use tempo::config::{ExperimentConfig, SchemeSpec};
 use tempo::coordinator::run_training;
+
+macro_rules! require_runtime {
+    () => {
+        if !tempo::testing::runtime_available() {
+            eprintln!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+            return;
+        }
+    };
+}
 
 fn quick_cfg(model: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -21,6 +31,7 @@ fn quick_cfg(model: &str) -> ExperimentConfig {
 
 #[test]
 fn baseline_training_reduces_loss() {
+    require_runtime!();
     let cfg = quick_cfg("mlp_tiny");
     let report = run_training(&cfg).unwrap();
     assert_eq!(report.points.len(), 2);
@@ -40,6 +51,7 @@ fn baseline_training_reduces_loss() {
 
 #[test]
 fn estk_compressed_training_runs_and_compresses() {
+    require_runtime!();
     let mut cfg = quick_cfg("mlp_tiny");
     cfg.scheme = SchemeSpec {
         quantizer: "topk".into(),
@@ -67,6 +79,7 @@ fn estk_compressed_training_runs_and_compresses() {
 
 #[test]
 fn deterministic_given_seed() {
+    require_runtime!();
     let mut cfg = quick_cfg("mlp_tiny");
     cfg.steps = 10;
     cfg.eval_every = 10;
@@ -84,6 +97,7 @@ fn deterministic_given_seed() {
 
 #[test]
 fn hlo_backend_trains_like_rust_backend() {
+    require_runtime!();
     // the three-layer showcase path: compression via the AOT Pallas artifact
     let mk = |backend| {
         let mut cfg = quick_cfg("mlp_tiny");
@@ -116,6 +130,7 @@ fn hlo_backend_trains_like_rust_backend() {
 
 #[test]
 fn lm_training_reduces_loss() {
+    require_runtime!();
     let mut cfg = quick_cfg("lm_tiny");
     cfg.steps = 30;
     cfg.eval_every = 15;

@@ -196,8 +196,8 @@ fn prop_predictor_state_machine_tau_bounds() {
                 .map(|_| if g.bool() { g.gaussian_f32() } else { 0.0 })
                 .collect();
             p.update(&ut);
-            if let Predictor::EstK { tau, .. } = &p {
-                for (i, &tv) in tau.iter().enumerate() {
+            if let Predictor::EstK(est) = &p {
+                for (i, &tv) in est.tau().iter().enumerate() {
                     if ut[i] != 0.0 && tv != 0.0 {
                         return Err(format!("tau[{i}] != 0 after hit"));
                     }

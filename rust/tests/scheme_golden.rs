@@ -1,0 +1,113 @@
+//! Golden-vector equivalence: for every Table I scheme configuration, the
+//! registry-parsed trait pipeline must be **bit-exact** with the legacy
+//! closed-enum pipeline — same `StepStats`, same ũ_t, same payload bytes,
+//! same master-side reconstruction — over a multi-step stateful run.
+//!
+//! This is the contract that let the enum shims survive the API redesign:
+//! any divergence between `SchemeRegistry::parse(spec)` and
+//! `SchemeSpec{..}.to_cfg(d)` + `WorkerPipeline::new` fails here.
+
+use tempo::coding::{decode_payload, encode_payload};
+use tempo::compress::{MasterChain, WorkerPipeline};
+use tempo::config::SchemeSpec;
+use tempo::experiments::table1;
+use tempo::scheme::{MasterScheme, SchemeRegistry, WorkerScheme};
+use tempo::util::Pcg64;
+
+const D: usize = 512;
+const STEPS: u64 = 25;
+
+/// The Table I rows as legacy structured configs, index-aligned with
+/// `table1::specs()`.
+fn legacy_rows() -> Vec<SchemeSpec> {
+    let mk = |quantizer: &str, predictor: &str, ef: bool, k_frac: Option<f64>| SchemeSpec {
+        quantizer: quantizer.into(),
+        predictor: predictor.into(),
+        ef,
+        beta: 0.99,
+        k_frac,
+        ..Default::default()
+    };
+    vec![
+        mk("none", "zero", false, None),
+        mk("topk", "zero", false, Some(0.35)),
+        mk("topk", "plin", false, Some(0.015)),
+        mk("topkq", "zero", false, Some(0.23)),
+        mk("topkq", "plin", false, Some(0.01)),
+        mk("sign", "zero", false, None),
+        mk("sign", "plin", false, None),
+        mk("topk", "zero", true, Some(2.4e-3)),
+        mk("topk", "estk", true, Some(1.3e-3)),
+    ]
+}
+
+#[test]
+fn table1_trait_pipeline_bit_exact_with_enum_pipeline() {
+    let specs = table1::specs();
+    let legacy = legacy_rows();
+    assert_eq!(specs.len(), legacy.len(), "row tables out of sync");
+
+    for ((label, spec), legacy_spec) in specs.into_iter().zip(&legacy) {
+        // new path: registry spec string → trait pipeline
+        let scheme = SchemeRegistry::global()
+            .parse(spec)
+            .unwrap_or_else(|e| panic!("{label}: parse {spec:?}: {e:#}"));
+        let mut trait_worker = scheme.worker(D).unwrap();
+        let mut trait_master = scheme.master(D).unwrap();
+
+        // old path: structured config → enum cfg → enum-built pipeline
+        let cfg = legacy_spec.to_cfg(D).unwrap();
+        let payload_kind = cfg.payload_kind();
+        let mut enum_worker = WorkerPipeline::new(cfg.clone(), D);
+        let mut enum_master = MasterChain::new(&cfg, D);
+
+        let mut rng = Pcg64::seeded(0x601D);
+        let mut g = vec![0.0f32; D];
+        let mut rtilde_trait = vec![0.0f32; D];
+        let mut rtilde_enum = vec![0.0f32; D];
+        let mut utilde_dec = Vec::new();
+
+        for t in 0..STEPS {
+            rng.fill_gaussian(&mut g, 1.0);
+            let lr_ratio = if t == 0 { 0.0 } else { 1.0 };
+
+            let st = trait_worker.step(&g, lr_ratio);
+            let se = enum_worker.step(&g, lr_ratio);
+            assert_eq!(st.nnz, se.nnz, "{label} t={t}: nnz");
+            assert_eq!(st.e_norm_sq, se.e_norm_sq, "{label} t={t}: e_norm_sq");
+            assert_eq!(st.u_norm_sq, se.u_norm_sq, "{label} t={t}: u_norm_sq");
+            assert_eq!(st.e_mse, se.e_mse, "{label} t={t}: e_mse");
+            assert_eq!(trait_worker.utilde(), enum_worker.utilde(), "{label} t={t}: utilde");
+
+            // identical wire bytes
+            let pt = trait_worker.encode(t);
+            let pe = encode_payload(payload_kind, enum_worker.utilde(), t);
+            assert_eq!(pt.kind_tag, pe.kind_tag, "{label} t={t}: payload tag");
+            assert_eq!(pt.bits, pe.bits, "{label} t={t}: payload bits");
+            assert_eq!(pt.bytes, pe.bytes, "{label} t={t}: payload bytes");
+
+            // identical master-side reconstruction
+            trait_master.receive(&pt, t, &mut rtilde_trait).unwrap();
+            decode_payload(payload_kind, &pe, D, t, &mut utilde_dec).unwrap();
+            enum_master.receive(&utilde_dec, &mut rtilde_enum);
+            assert_eq!(rtilde_trait, rtilde_enum, "{label} t={t}: rtilde");
+        }
+    }
+}
+
+#[test]
+fn table1_specs_all_resolve_via_registry() {
+    // acceptance: every Table I configuration is constructible via
+    // SchemeRegistry::parse and binds at a realistic model dimension
+    for (label, spec) in table1::specs() {
+        let scheme = SchemeRegistry::global().parse(spec).unwrap();
+        assert!(
+            scheme.worker(98_666).is_ok(),
+            "{label}: spec {spec:?} must bind at mlp_tiny dimension"
+        );
+        // canonical spec round-trips
+        let canon = scheme.spec();
+        let again = SchemeRegistry::global().parse(&canon).unwrap();
+        assert_eq!(again.spec(), canon, "{label}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Offline **stub** of the `xla_extension` PJRT bindings.
+//!
+//! Mirrors the type/method surface `tempo::runtime` consumes so the whole
+//! crate compiles without the native XLA library. Every entry point that
+//! would touch PJRT returns [`Error`] instead; callers detect availability
+//! with `PjRtClient::cpu().is_ok()` (see `tempo::runtime::pjrt_available`).
+//!
+//! Swap this crate for the real bindings (path dependency or `[patch]`) to
+//! enable the HLO/AOT backend — the call surface is compatible.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the shape of the real bindings' error.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT is unavailable in this offline build (stub `xla` crate; \
+             link the real xla_extension bindings to enable the HLO backend)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to/from device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Argument types accepted by [`PjRtLoadedExecutable::execute_b`].
+pub trait BufferArg {}
+impl BufferArg for PjRtBuffer {}
+
+/// PJRT client handle (stub: construction always fails).
+#[derive(Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Device buffer handle (stub: never constructible).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructible).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned device buffers; results are `[device][output]`.
+    pub fn execute_b<B: BufferArg>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Host-side literal value (stub: never constructible).
+pub struct Literal(());
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error::unavailable("Literal::get_first_element"))
+    }
+}
+
+/// Parsed HLO module proto (stub: parsing always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("PJRT is unavailable"));
+        assert!(HloModuleProto::from_text_file("/tmp/nope.hlo.txt").is_err());
+    }
+}
