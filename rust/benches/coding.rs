@@ -1,8 +1,9 @@
 //! Coding-layer micro-benchmarks: bit I/O, Golomb index coding, payload
 //! encode/decode throughput at realistic (d, K).
 
+use tempo::cli::Args;
 use tempo::coding::{decode_payload, encode_payload, golomb, BitReader, BitWriter, PayloadKind};
-use tempo::testing::bench::{black_box, Bencher};
+use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
 
 fn sparse_vec(d: usize, k: usize, seed: u64) -> Vec<f32> {
@@ -19,8 +20,9 @@ fn sparse_vec(d: usize, k: usize, seed: u64) -> Vec<f32> {
     v
 }
 
-fn main() {
-    let mut b = Bencher::new();
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let mut b = Bencher::from_args(&args);
     println!("== coding micro-benchmarks ==");
 
     // raw bit IO
@@ -100,4 +102,5 @@ fn main() {
         decode_payload(PayloadKind::Sign, &ps, d, 0, &mut out).unwrap();
         black_box(&out);
     });
+    maybe_write_json(&b, &args)
 }

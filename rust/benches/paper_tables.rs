@@ -2,20 +2,24 @@
 //! I and Fig. 7 configurations, reporting rounds/s and per-phase worker
 //! time — the numbers behind EXPERIMENTS.md §Perf. Requires `make artifacts`.
 
+use tempo::cli::Args;
 use tempo::config::{ExperimentConfig, SchemeSpec};
 use tempo::coordinator::run_training;
+use tempo::testing::bench::{write_json_results, BenchResult};
+use tempo::util::stats::Summary;
 
 fn cfg_for(scheme: SchemeSpec) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = "mlp_tiny".into();
-    cfg.workers = 2;
-    cfg.steps = 30;
-    cfg.eval_every = 30;
-    cfg.eval_batches = 1;
-    cfg.train_len = 1024;
-    cfg.noise = 6.0;
-    cfg.scheme = scheme;
-    cfg
+    ExperimentConfig {
+        model: "mlp_tiny".into(),
+        workers: 2,
+        steps: 30,
+        eval_every: 30,
+        eval_batches: 1,
+        train_len: 1024,
+        noise: 6.0,
+        scheme,
+        ..ExperimentConfig::default()
+    }
 }
 
 fn spec(q: &str, p: &str, ef: bool, kf: Option<f64>) -> SchemeSpec {
@@ -30,6 +34,13 @@ fn spec(q: &str, p: &str, ef: bool, kf: Option<f64>) -> SchemeSpec {
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    if !tempo::testing::runtime_available() {
+        // end-to-end rounds execute models; offline builds report the skip
+        // and keep the bench (and its JSON slot) green
+        println!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+        return write_json_results(&[], &args);
+    }
     println!("== end-to-end round benchmarks (Table I / Fig. 7 configs, shortened) ==");
     println!(
         "{:<30} {:>9} {:>12} {:>11} {:>10} {:>10}",
@@ -44,8 +55,13 @@ fn main() -> anyhow::Result<()> {
         ("T1/F7 topk EF", spec("topk", "zero", true, Some(2.4e-3))),
         ("T1/F7 topk EF estk", spec("topk", "estk", true, Some(1.3e-3))),
     ];
+    let mut results = Vec::new();
     for (label, s) in rows {
-        let cfg = cfg_for(s);
+        let mut cfg = cfg_for(s);
+        if args.has_switch("smoke") {
+            cfg.steps = 8;
+            cfg.eval_every = 8;
+        }
         let t0 = std::time::Instant::now();
         let report = run_training(&cfg)?;
         let secs = t0.elapsed().as_secs_f64();
@@ -58,6 +74,13 @@ fn main() -> anyhow::Result<()> {
             report.worker_phases.mean("encode") * 1e3,
             report.bits_per_component,
         );
+        // one sample per run: per-round wall clock (p50/p99 degenerate)
+        results.push(BenchResult {
+            name: format!("e2e/{label}"),
+            iters: cfg.steps,
+            summary: Summary::of(&[secs / cfg.steps as f64]),
+            elements: None,
+        });
     }
-    Ok(())
+    write_json_results(&results, &args)
 }

@@ -1,16 +1,22 @@
 //! Compression-pipeline benchmarks: the L3 hot path per scheme at model
 //! scale (d = 98,666 — mlp_tiny; d = 864,512 — lm_small).
 
+use tempo::cli::Args;
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
 use tempo::tensor::select_topk_indices;
-use tempo::testing::bench::{black_box, Bencher};
+use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
 
-fn main() {
-    let mut b = Bencher::new();
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let mut b = Bencher::from_args(&args);
     println!("== compression pipeline benchmarks ==");
 
-    for &d in &[98_666usize, 864_512usize] {
+    // smoke mode drops the large-model dimension: trajectory seeding only
+    // needs the shape, and CI minutes are better spent on tests
+    let dims: &[usize] =
+        if args.has_switch("smoke") { &[98_666] } else { &[98_666, 864_512] };
+    for &d in dims {
         let mut rng = Pcg64::seeded(1);
         let mut g = vec![0.0f32; d];
         rng.fill_gaussian(&mut g, 1.0);
@@ -45,4 +51,5 @@ fn main() {
             });
         }
     }
+    maybe_write_json(&b, &args)
 }

@@ -2,18 +2,30 @@
 //! compression step (interpret-mode Pallas on CPU — structural numbers,
 //! not TPU estimates; see DESIGN.md §8). Requires `make artifacts`.
 
+use tempo::cli::Args;
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
 use tempo::data::{Dataset, SynthImages};
 use tempo::model::Manifest;
 use tempo::runtime::{CompressExec, ModelExec, Runtime};
-use tempo::testing::bench::{black_box, Bencher};
+use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    if !tempo::testing::runtime_available() {
+        // offline build: keep `cargo bench` (and ci.sh --bench) green —
+        // report the skip and still emit a (empty) JSON array so the
+        // trajectory file has a slot for this target
+        println!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
+        let b = Bencher::from_args(&args);
+        return maybe_write_json(&b, &args);
+    }
     let manifest = Manifest::load_default()?;
     let runtime = Runtime::new(manifest.clone())?;
-    let mut b = Bencher::new();
-    b.measure_secs = 2.0;
+    let mut b = Bencher::from_args(&args);
+    if !args.has_switch("smoke") {
+        b.measure_secs = 2.0;
+    }
     println!("== PJRT runtime benchmarks (CPU, 1 core) ==");
 
     // model fwd/bwd — the dominant per-round cost
@@ -53,5 +65,5 @@ fn main() -> anyhow::Result<()> {
     b.bench("compress-step/rust-backend d=1024", Some(1024), || {
         black_box(rust_pipe.step(&g, 1.0));
     });
-    Ok(())
+    maybe_write_json(&b, &args)
 }

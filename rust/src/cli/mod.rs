@@ -129,10 +129,10 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
-              [--scheme <spec>] [--csv out.csv]
+              [--scheme <spec>] [--fabric <spec>] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
-        ablation-beta | ablation-block | ablation-master | all
+        fabric | ablation-beta | ablation-block | ablation-master | all
   tempo inspect                                list artifacts from the manifest
   tempo master-serve --listen <addr:port> --workers N --config <file.toml>
   tempo worker-connect --connect <addr:port> --worker-id I --config <file.toml>
@@ -142,6 +142,15 @@ Scheme spec strings (see DESIGN.md for the grammar → paper Eq. (1) mapping):
   topk:k_frac=0.0024/estk/ef/beta=0.99        Table I bottom row
   sign/plin/beta=0.99                         scaled-sign with prediction
   blocks(emb=0.25:topk:k=64/estk/ef;rest=0.75:sign/plin)   blockwise composite
+
+Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2):
+  channel | tcp                 transport (default channel; tcp = real sockets)
+  pipelined | inline            double-buffered vs blocking sends (default pipelined)
+  staleness=S,quorum=Q          bounded-staleness aggregation (S=0 ⇒ full sync)
+  straggler=W:MS[;W:MS]         per-worker pre-send delay in ms
+  drop=P,retransmit_ms=T        drop-and-retransmit injection
+  churn=W:A..B[;...]            worker W absent for rounds [A, B)
+  e.g.  --fabric tcp,staleness=2,quorum=2,straggler=1:5,drop=0.01,churn=3:10..20
 
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.

@@ -1,78 +1,141 @@
 //! In-process channel transport (std::sync::mpsc).
 //!
-//! One mpsc pair per direction per worker. This is the default fabric for
-//! single-host multi-worker runs — the same topology as the paper's
-//! 4-workers-on-one-machine Horovod setup, with the master simulated
-//! explicitly (the paper likewise "simulates a master-worker environment").
+//! Uplink: ONE shared mpsc channel carrying `(worker_id, Frame)` — the
+//! master sees a single merged arrival stream, exactly like the TCP
+//! fabric's reader threads produce, so aggregation code cannot
+//! accidentally depend on a per-worker blocking order. Downlink: one mpsc
+//! pair per worker. This is the default fabric for single-host
+//! multi-worker runs — the paper's 4-workers-on-one-machine Horovod
+//! topology with the master simulated explicitly.
+//!
+//! Liveness: the worker loop sends [`Frame::done`] after its last round
+//! and [`Frame::abort`] on an error; the endpoint's Drop also sends an
+//! abort (covering panicking worker threads), which the master ignores
+//! for workers already marked done. An abort surfaces as a "hung up"
+//! error on the master instead of a blocked `recv_any`.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 use anyhow::{Context, Result};
 
 use super::frame::{Frame, FrameKind};
-use super::{MasterTransport, WorkerTransport};
+use super::{FrameSender, MasterTransport, PeerState, WorkerTransport};
 
 /// Worker endpoint.
 pub struct ChannelWorker {
     pub worker_id: u32,
-    up: Sender<Frame>,
+    up: Sender<(usize, Frame)>,
     down: Receiver<Frame>,
+}
+
+impl Drop for ChannelWorker {
+    fn drop(&mut self) {
+        // best-effort crash marker; after a clean run the worker loop has
+        // already sent its done marker and the master ignores this one
+        let _ = self.up.send((self.worker_id as usize, Frame::abort(self.worker_id)));
+    }
+}
+
+/// Split-off update sender (clone of the shared uplink).
+pub struct ChannelSender {
+    worker_id: u32,
+    up: Sender<(usize, Frame)>,
 }
 
 /// Master endpoint over n workers.
 pub struct ChannelMaster {
-    ups: Vec<Receiver<Frame>>,
+    up: Receiver<(usize, Frame)>,
     downs: Vec<Sender<Frame>>,
+    state: Vec<PeerState>,
 }
 
 /// Build a fabric for n workers. Returns (master, workers).
 pub fn channel_fabric(n: usize) -> (ChannelMaster, Vec<ChannelWorker>) {
-    let mut ups = Vec::with_capacity(n);
+    let (up_tx, up_rx) = channel();
     let mut downs = Vec::with_capacity(n);
     let mut workers = Vec::with_capacity(n);
     for w in 0..n {
-        let (up_tx, up_rx) = channel();
         let (down_tx, down_rx) = channel();
-        ups.push(up_rx);
         downs.push(down_tx);
-        workers.push(ChannelWorker { worker_id: w as u32, up: up_tx, down: down_rx });
+        workers.push(ChannelWorker { worker_id: w as u32, up: up_tx.clone(), down: down_rx });
     }
-    (ChannelMaster { ups, downs }, workers)
+    (ChannelMaster { up: up_rx, downs, state: vec![PeerState::Alive; n] }, workers)
 }
 
 impl WorkerTransport for ChannelWorker {
     fn send_update(&mut self, frame: Frame) -> Result<()> {
-        self.up.send(frame).context("master hung up")
+        self.up.send((self.worker_id as usize, frame)).ok().context("master hung up")
     }
 
     fn recv_broadcast(&mut self) -> Result<Frame> {
         self.down.recv().context("master hung up")
     }
+
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        Ok(Box::new(ChannelSender { worker_id: self.worker_id, up: self.up.clone() }))
+    }
+}
+
+impl FrameSender for ChannelSender {
+    fn send(&mut self, frame: Frame) -> Result<()> {
+        self.up.send((self.worker_id as usize, frame)).ok().context("master hung up")
+    }
+}
+
+impl ChannelMaster {
+    /// Apply liveness bookkeeping; `Some` when the frame is for the engine,
+    /// `Err` when the worker aborted mid-run.
+    fn absorb(&mut self, wid: usize, frame: Frame) -> Result<Option<(usize, Frame)>> {
+        anyhow::ensure!(wid < self.state.len(), "bad worker id {wid}");
+        if frame.kind == FrameKind::Shutdown {
+            if self.state[wid] == PeerState::Done {
+                return Ok(None); // post-done Drop marker: expected
+            }
+            if frame.is_done_marker() {
+                self.state[wid] = PeerState::Done;
+                return Ok(None);
+            }
+            self.state[wid] = PeerState::Lost;
+            anyhow::bail!("worker {wid} hung up (aborted mid-run)");
+        }
+        Ok(Some((wid, frame)))
+    }
 }
 
 impl MasterTransport for ChannelMaster {
     fn n_workers(&self) -> usize {
-        self.ups.len()
+        self.state.len()
     }
 
-    fn recv_updates(&mut self) -> Result<Vec<Frame>> {
-        // synchronous rounds: block on each worker in id order (they all
-        // compute in parallel; arrival order does not matter)
-        let mut out = Vec::with_capacity(self.ups.len());
-        for (w, rx) in self.ups.iter().enumerate() {
-            let f = rx.recv().with_context(|| format!("worker {w} hung up"))?;
-            anyhow::ensure!(
-                f.kind == FrameKind::Update || f.kind == FrameKind::Shutdown,
-                "unexpected frame kind from worker {w}"
-            );
-            out.push(f);
+    fn recv_any(&mut self) -> Result<(usize, Frame)> {
+        loop {
+            let (wid, frame) = self.up.recv().ok().context("all workers hung up")?;
+            if let Some(x) = self.absorb(wid, frame)? {
+                return Ok(x);
+            }
         }
-        Ok(out)
+    }
+
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
+        loop {
+            let (wid, frame) = match self.up.try_recv() {
+                Ok(x) => x,
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => anyhow::bail!("all workers hung up"),
+            };
+            if let Some(x) = self.absorb(wid, frame)? {
+                return Ok(Some(x));
+            }
+        }
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
         for (w, tx) in self.downs.iter().enumerate() {
-            tx.send(frame.clone()).with_context(|| format!("worker {w} hung up"))?;
+            // a done/lost worker no longer listens; skipping it keeps late
+            // broadcasts from erroring after a clean early exit
+            if self.state[w] == PeerState::Alive {
+                tx.send(frame.clone()).ok().with_context(|| format!("worker {w} hung up"))?;
+            }
         }
         Ok(())
     }
@@ -98,15 +161,61 @@ mod tests {
                 })
             })
             .collect();
-        let updates = master.recv_updates().unwrap();
-        assert_eq!(updates.len(), 3);
-        for (i, u) in updates.iter().enumerate() {
-            assert_eq!(u.worker, i as u32);
-            assert_eq!(u.bytes, vec![i as u8]);
+        let mut seen = vec![false; 3];
+        for _ in 0..3 {
+            let (wid, frame) = master.recv_any().unwrap();
+            assert_eq!(frame.worker as usize, wid);
+            assert_eq!(frame.bytes, vec![wid as u8]);
+            assert!(!seen[wid], "duplicate worker {wid}");
+            seen[wid] = true;
         }
         master.broadcast(&Frame::broadcast(0, &[1.0, 2.0])).unwrap();
         for h in handles {
             assert_eq!(h.join().unwrap(), vec![1.0, 2.0]);
         }
+    }
+
+    #[test]
+    fn split_sender_delivers_with_worker_tag() {
+        let (mut master, mut workers) = channel_fabric(2);
+        let mut sender = workers[1].split_sender().unwrap();
+        sender.send(Frame::skip(1, 7)).unwrap();
+        let (wid, frame) = master.recv_any().unwrap();
+        assert_eq!(wid, 1);
+        assert_eq!(frame.kind, FrameKind::Skip);
+        assert_eq!(frame.round, 7);
+        assert_eq!(master.try_recv_any().unwrap().map(|x| x.0), None);
+    }
+
+    #[test]
+    fn worker_drop_without_done_marker_errors_out_the_master() {
+        let (mut master, workers) = channel_fabric(1);
+        drop(workers); // unwinding path: Drop sends the abort marker
+        let e = master.recv_any().unwrap_err();
+        assert!(format!("{e:#}").contains("hung up"), "{e:#}");
+    }
+
+    #[test]
+    fn done_marker_then_drop_is_a_clean_quiet_exit() {
+        let (mut master, mut workers) = channel_fabric(2);
+        workers[0].send_update(Frame::done(0)).unwrap();
+        drop(workers.remove(0)); // Drop's abort marker must be ignored
+        workers[0].send_update(Frame::skip(1, 0)).unwrap();
+        // both the done marker and the post-done abort are swallowed
+        let (wid, frame) = master.recv_any().unwrap();
+        assert_eq!(wid, 1);
+        assert_eq!(frame.kind, FrameKind::Skip);
+        // broadcasts skip the finished worker without erroring
+        master.broadcast(&Frame::broadcast(0, &[1.0])).unwrap();
+        let b = workers[0].recv_broadcast().unwrap();
+        assert_eq!(b.kind, FrameKind::Broadcast);
+    }
+
+    #[test]
+    fn hung_up_errors_name_the_condition() {
+        let (master, mut workers) = channel_fabric(1);
+        drop(master);
+        let e = workers[0].send_update(Frame::skip(0, 0)).unwrap_err();
+        assert!(format!("{e:#}").contains("hung up"), "{e:#}");
     }
 }

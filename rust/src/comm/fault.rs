@@ -1,0 +1,197 @@
+//! Deterministic fault/scenario injection for the worker side of the
+//! fabric: per-worker straggler delay and message drop-and-retransmit.
+//!
+//! The injector wraps any [`WorkerTransport`] (or its split-off
+//! [`FrameSender`]) and perturbs *when* frames go out, never *what* goes
+//! out — the wire content is untouched, so a faulted run still decodes
+//! exactly, it just arrives late and costs retransmissions. Randomness
+//! comes from a per-worker seeded [`Pcg64`], so a scenario replays
+//! identically for a given `[fabric]` seed. Worker churn (join/leave
+//! mid-run) is the third scenario axis and lives in the worker loop
+//! itself (absent rounds send [`Frame::skip`] markers); see
+//! `coordinator::worker`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::frame::Frame;
+use super::{FrameSender, WorkerTransport};
+use crate::util::Pcg64;
+
+/// Counters a fault policy accumulates; shared with the launcher, which
+/// folds them into [`crate::metrics::CommStats`] after the run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultStats {
+    /// simulated drop-and-retransmit events
+    pub retransmits: u64,
+    /// wall-clock the injector slept (straggler + retransmit timeouts)
+    pub injected_delay_secs: f64,
+}
+
+/// One worker's injection policy. Cloning shares the stats accumulator but
+/// forks the RNG state — clone only when handing the send path to a
+/// different owner (as `split_sender` does), never to run two copies on
+/// the same frames.
+#[derive(Clone)]
+pub struct FaultPolicy {
+    /// fixed extra delay before every send (straggler simulation)
+    straggler: Option<Duration>,
+    /// probability a sent frame is "lost" and must be retransmitted
+    drop_prob: f64,
+    /// simulated retransmission timeout per lost frame
+    retransmit: Duration,
+    rng: Pcg64,
+    stats: Arc<Mutex<FaultStats>>,
+}
+
+impl FaultPolicy {
+    pub fn new(
+        straggler_ms: f64,
+        drop_prob: f64,
+        retransmit_ms: f64,
+        seed: u64,
+        worker_id: u32,
+    ) -> Self {
+        Self {
+            straggler: (straggler_ms > 0.0)
+                .then(|| Duration::from_secs_f64(straggler_ms / 1e3)),
+            drop_prob: drop_prob.clamp(0.0, 0.999),
+            retransmit: Duration::from_secs_f64(retransmit_ms.max(0.0) / 1e3),
+            rng: Pcg64::new(seed, 0xFA17 + worker_id as u64),
+            stats: Arc::new(Mutex::new(FaultStats::default())),
+        }
+    }
+
+    /// Handle to the shared counters (read by the launcher post-run).
+    pub fn stats(&self) -> Arc<Mutex<FaultStats>> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Sleep/account for every injected event preceding one send. The
+    /// frame itself always goes out exactly once afterwards — TCP/channel
+    /// delivery is reliable, so a "drop" manifests purely as retransmit
+    /// latency and a counter, exactly what a NACK-based reliable link
+    /// would cost.
+    fn before_send(&mut self) {
+        let mut slept = 0.0f64;
+        let mut retransmits = 0u64;
+        if let Some(d) = self.straggler {
+            std::thread::sleep(d);
+            slept += d.as_secs_f64();
+        }
+        while self.drop_prob > 0.0 && self.rng.uniform() < self.drop_prob {
+            std::thread::sleep(self.retransmit);
+            slept += self.retransmit.as_secs_f64();
+            retransmits += 1;
+        }
+        if slept > 0.0 || retransmits > 0 {
+            let mut s = self.stats.lock().unwrap();
+            s.injected_delay_secs += slept;
+            s.retransmits += retransmits;
+        }
+    }
+}
+
+/// [`WorkerTransport`] wrapper applying a [`FaultPolicy`] to every update
+/// send. Broadcast receives pass through untouched (the paper's bottleneck
+/// — and therefore the interesting direction to degrade — is
+/// worker→master).
+pub struct FaultInjector<T: WorkerTransport> {
+    inner: T,
+    policy: FaultPolicy,
+}
+
+impl<T: WorkerTransport> FaultInjector<T> {
+    pub fn new(inner: T, policy: FaultPolicy) -> Self {
+        Self { inner, policy }
+    }
+}
+
+impl<T: WorkerTransport> WorkerTransport for FaultInjector<T> {
+    fn send_update(&mut self, frame: Frame) -> Result<()> {
+        self.policy.before_send();
+        self.inner.send_update(frame)
+    }
+
+    fn recv_broadcast(&mut self) -> Result<Frame> {
+        self.inner.recv_broadcast()
+    }
+
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        let inner = self.inner.split_sender()?;
+        // the split sender takes over the update path, so moving a clone of
+        // the policy (shared stats, forked RNG) keeps a single count stream
+        Ok(Box::new(FaultSender { inner, policy: self.policy.clone() }))
+    }
+}
+
+/// Split-off sender half with the same injection policy.
+pub struct FaultSender {
+    inner: Box<dyn FrameSender>,
+    policy: FaultPolicy,
+}
+
+impl FrameSender for FaultSender {
+    fn send(&mut self, frame: Frame) -> Result<()> {
+        self.policy.before_send();
+        self.inner.send(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::channel_fabric;
+    use crate::comm::MasterTransport;
+
+    #[test]
+    fn no_fault_policy_is_transparent() {
+        let (mut master, workers) = channel_fabric(1);
+        let policy = FaultPolicy::new(0.0, 0.0, 0.0, 7, 0);
+        let stats = policy.stats();
+        let mut w = FaultInjector::new(workers.into_iter().next().unwrap(), policy);
+        w.send_update(Frame::skip(0, 0)).unwrap();
+        let (wid, f) = master.recv_any().unwrap();
+        assert_eq!((wid, f.round), (0, 0));
+        assert_eq!(stats.lock().unwrap().retransmits, 0);
+        assert_eq!(stats.lock().unwrap().injected_delay_secs, 0.0);
+    }
+
+    #[test]
+    fn drops_are_counted_and_deterministic() {
+        let run = |seed: u64| {
+            let (mut master, workers) = channel_fabric(1);
+            let policy = FaultPolicy::new(0.0, 0.5, 0.0, seed, 0);
+            let stats = policy.stats();
+            let mut w = FaultInjector::new(workers.into_iter().next().unwrap(), policy);
+            for t in 0..50u64 {
+                w.send_update(Frame::skip(0, t)).unwrap();
+                master.recv_any().unwrap();
+            }
+            let got = stats.lock().unwrap().retransmits;
+            drop(w);
+            got
+        };
+        let a = run(3);
+        let b = run(3);
+        assert_eq!(a, b, "same seed must replay the same drops");
+        // p=0.5 over 50 sends: expected ~50 retransmits; zero would mean
+        // the drop path never fired
+        assert!(a > 5, "retransmits {a}");
+    }
+
+    #[test]
+    fn straggler_delay_is_injected_and_accounted() {
+        let (mut master, workers) = channel_fabric(1);
+        let policy = FaultPolicy::new(5.0, 0.0, 0.0, 1, 0);
+        let stats = policy.stats();
+        let mut w = FaultInjector::new(workers.into_iter().next().unwrap(), policy);
+        let t0 = std::time::Instant::now();
+        w.send_update(Frame::skip(0, 0)).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.004);
+        master.recv_any().unwrap();
+        assert!(stats.lock().unwrap().injected_delay_secs >= 0.004);
+    }
+}

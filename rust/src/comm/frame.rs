@@ -12,6 +12,11 @@ pub enum FrameKind {
     Broadcast = 2,
     /// orderly shutdown
     Shutdown = 3,
+    /// worker → master: "I sit out this round" — the fabric-churn injection
+    /// (worker temporarily out of the compute pool, still subscribed to
+    /// broadcasts). Carries no payload; the master aggregates without this
+    /// worker and does not advance its decode chain.
+    Skip = 4,
 }
 
 impl FrameKind {
@@ -20,6 +25,7 @@ impl FrameKind {
             1 => FrameKind::Update,
             2 => FrameKind::Broadcast,
             3 => FrameKind::Shutdown,
+            4 => FrameKind::Skip,
             _ => bail!("unknown frame kind {v}"),
         })
     }
@@ -69,11 +75,42 @@ impl Frame {
         }
     }
 
+    /// Zero-payload "absent this round" marker (fabric churn injection).
+    pub fn skip(worker: u32, round: u64) -> Self {
+        Self {
+            kind: FrameKind::Skip,
+            worker,
+            round,
+            payload_tag: 0,
+            bytes: Vec::new(),
+            payload_bits: 0,
+            loss: 0.0,
+        }
+    }
+
+    /// Clean end-of-run marker: the worker completed every round. The
+    /// `u64::MAX` round is the done/abort discriminator the transports'
+    /// liveness tracking keys on.
+    pub fn done(worker: u32) -> Self {
+        Self { worker, ..Frame::shutdown() }
+    }
+
+    /// Abnormal-termination marker: the worker is quitting mid-run (error
+    /// or unwinding). Masters treat this as that worker hanging up.
+    pub fn abort(worker: u32) -> Self {
+        Self { worker, round: 0, ..Frame::shutdown() }
+    }
+
+    /// Whether a Shutdown frame is the clean [`Frame::done`] marker.
+    pub fn is_done_marker(&self) -> bool {
+        self.kind == FrameKind::Shutdown && self.round == u64::MAX
+    }
+
     pub fn shutdown() -> Self {
         Self {
             kind: FrameKind::Shutdown,
             worker: u32::MAX,
-            round: 0,
+            round: u64::MAX,
             payload_tag: 0,
             bytes: Vec::new(),
             payload_bits: 0,
@@ -180,6 +217,17 @@ mod tests {
         let f = Frame::broadcast(7, &v);
         assert_eq!(f.broadcast_f32(3).unwrap(), v);
         assert!(f.broadcast_f32(4).is_err());
+    }
+
+    #[test]
+    fn skip_frame_roundtrip() {
+        let f = Frame::skip(2, 17);
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        assert_eq!(g.kind, FrameKind::Skip);
+        assert_eq!(g.worker, 2);
+        assert_eq!(g.round, 17);
+        assert!(g.bytes.is_empty());
+        assert_eq!(g.payload_bits, 0);
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Length-prefixed frame codec over any byte stream.
+//!
+//! One codec for every real transport: a `u64` little-endian total length,
+//! then `Frame::serialize` bytes. Generic over `io::Read`/`io::Write` so
+//! the same code drives TCP sockets, in-memory buffers, and the
+//! partial-read/split-write property tests — TCP delivers byte streams,
+//! not messages, and this module is where that mismatch is absorbed.
+
+use std::io::{Read, Write};
+
+use anyhow::{Context, Result};
+
+use super::frame::Frame;
+
+/// Hard ceiling on a single frame body (header + payload). Anything larger
+/// is rejected on both sides before allocation — a corrupted or hostile
+/// length prefix must not OOM the receiver.
+pub const MAX_FRAME_BYTES: u64 = 1 << 31;
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let body = frame.serialize();
+    anyhow::ensure!(
+        (body.len() as u64) <= MAX_FRAME_BYTES,
+        "refusing to send oversized frame: {} bytes",
+        body.len()
+    );
+    w.write_all(&(body.len() as u64).to_le_bytes()).context("write frame length")?;
+    w.write_all(&body).context("write frame body")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (blocking until complete or EOF).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut len_buf = [0u8; 8];
+    r.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u64::from_le_bytes(len_buf);
+    anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len} bytes");
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body).context("read frame body")?;
+    Frame::deserialize(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::frame::FrameKind;
+
+    /// Writer that accepts at most `chunk` bytes per `write` call —
+    /// exercises the short-write path of `write_all`.
+    struct ChunkWriter {
+        buf: Vec<u8>,
+        chunk: usize,
+    }
+
+    impl Write for ChunkWriter {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            let n = data.len().min(self.chunk.max(1));
+            self.buf.extend_from_slice(&data[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Reader that returns at most `chunk` bytes per `read` call —
+    /// exercises the partial-read path of `read_exact`.
+    struct ChunkReader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for ChunkReader<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let n = out
+                .len()
+                .min(self.chunk.max(1))
+                .min(self.buf.len() - self.pos);
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn sample_frame(nbytes: usize) -> Frame {
+        Frame {
+            kind: FrameKind::Update,
+            worker: 5,
+            round: 42,
+            payload_tag: 1,
+            bytes: (0..nbytes).map(|i| (i % 251) as u8).collect(),
+            payload_bits: (nbytes as u64) * 8,
+            loss: 0.75,
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_chunked_io() {
+        for &(nbytes, chunk) in &[(0usize, 1usize), (5, 1), (300, 7), (300, 1024)] {
+            let frame = sample_frame(nbytes);
+            let mut w = ChunkWriter { buf: Vec::new(), chunk };
+            write_frame(&mut w, &frame).unwrap();
+            let mut r = ChunkReader { buf: &w.buf, pos: 0, chunk };
+            let back = read_frame(&mut r).unwrap();
+            assert_eq!(back.round, frame.round);
+            assert_eq!(back.bytes, frame.bytes);
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_stream_is_an_error_not_a_hang() {
+        let frame = sample_frame(100);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // truncated inside the length prefix too
+        assert!(read_frame(&mut &buf[..4]).is_err());
+    }
+}

@@ -6,30 +6,118 @@
 //!
 //! * [`channel`] — in-process transport (std mpsc) for single-host
 //!   multi-worker runs (the default, like the paper's 4-GPU host);
-//! * [`tcp`] — length-prefixed TCP frames for real multi-process runs
-//!   (`tempo master-serve` / `tempo worker-connect`);
+//! * [`tcp`] — real sockets for multi-process runs (`tempo master-serve` /
+//!   `tempo worker-connect`), with worker reconnect-after-drop support;
+//! * [`framed`] — the one length-prefixed frame codec both byte-stream
+//!   transports share;
+//! * [`fault`] — deterministic scenario injection (stragglers,
+//!   drop-and-retransmit) wrapped around any worker transport;
+//! * [`sender`] — the double-buffered send stage that overlaps payload
+//!   shipping of round t with the data prefetch for round t+1;
 //! * exact per-message byte accounting feeding [`crate::metrics::CommStats`].
+//!
+//! Both fabrics implement the same two traits below, so `WorkerLoop` /
+//! `MasterLoop` are transport-agnostic: a run over TCP sockets is
+//! bit-identical to the same run over in-process channels (pinned by
+//! `tests/integration_tcp.rs`).
 
 pub mod channel;
+pub mod fault;
 pub mod frame;
+pub mod framed;
+pub mod sender;
 pub mod tcp;
 
 pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
+pub use fault::{FaultInjector, FaultPolicy, FaultStats};
 pub use frame::{Frame, FrameKind};
+pub use sender::PipelinedSender;
 
 use anyhow::Result;
+
+/// Master-side view of one worker endpoint's liveness. Workers announce a
+/// clean end of run with [`Frame::done`] and abnormal termination with
+/// [`Frame::abort`] (sent automatically by the worker loop and, for
+/// unwinding threads, the channel endpoint's Drop); a TCP connection
+/// closing without a done marker counts as lost until the worker
+/// reconnects. Masters bail — instead of blocking forever — when a worker
+/// they still need is lost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PeerState {
+    Alive,
+    /// Sent its done marker: expected to go quiet; not an error.
+    Done,
+    /// Went away mid-run without a done marker.
+    Lost,
+}
+
+/// Independently-owned update-sending half of a worker endpoint, split off
+/// for the pipelined (double-buffered) send stage.
+pub trait FrameSender: Send {
+    fn send(&mut self, frame: Frame) -> Result<()>;
+}
 
 /// Worker-side endpoint: send updates up, receive broadcasts down.
 pub trait WorkerTransport: Send {
     fn send_update(&mut self, frame: Frame) -> Result<()>;
+
     fn recv_broadcast(&mut self) -> Result<Frame>;
+
+    /// Split off an independently-owned sender so updates can be shipped
+    /// from a background thread while this endpoint keeps receiving
+    /// broadcasts. Transports that cannot split report an error and the
+    /// worker loop falls back to inline (non-pipelined) sends.
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        anyhow::bail!("transport does not support split senders")
+    }
+}
+
+impl WorkerTransport for Box<dyn WorkerTransport> {
+    fn send_update(&mut self, frame: Frame) -> Result<()> {
+        (**self).send_update(frame)
+    }
+
+    fn recv_broadcast(&mut self) -> Result<Frame> {
+        (**self).recv_broadcast()
+    }
+
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        (**self).split_sender()
+    }
 }
 
 /// Master-side endpoint over all workers.
+///
+/// Frames arrive as one merged stream tagged with the worker id: per-worker
+/// order is preserved (one FIFO per connection/channel), cross-worker
+/// arrival order is not — aggregation modes that need determinism must
+/// re-order by worker id themselves (the coordinator's round engine does).
 pub trait MasterTransport: Send {
     fn n_workers(&self) -> usize;
-    /// Receive one update from each worker (any arrival order); returns
-    /// frames indexed by worker id.
-    fn recv_updates(&mut self) -> Result<Vec<Frame>>;
+
+    /// Blocking: the next frame from any worker.
+    fn recv_any(&mut self) -> Result<(usize, Frame)>;
+
+    /// Non-blocking poll: `Ok(None)` when nothing is queued right now.
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>>;
+
     fn broadcast(&mut self, frame: &Frame) -> Result<()>;
+}
+
+impl MasterTransport for Box<dyn MasterTransport> {
+    fn n_workers(&self) -> usize {
+        (**self).n_workers()
+    }
+
+    fn recv_any(&mut self) -> Result<(usize, Frame)> {
+        (**self).recv_any()
+    }
+
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
+        (**self).try_recv_any()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        (**self).broadcast(frame)
+    }
 }

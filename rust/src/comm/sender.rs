@@ -1,0 +1,114 @@
+//! Double-buffered update sending: the worker's encode/send stage runs on
+//! a dedicated thread with a depth-1 queue, so shipping round t's payload
+//! overlaps the data prefetch (and, under bounded-staleness aggregation,
+//! the gradient compute) of round t+1.
+//!
+//! Queue depth 1 is deliberate: `enqueue` returns immediately while the
+//! previous frame is still in flight and blocks only when two sends back
+//! up — classic double buffering, bounding worker-side memory to one
+//! in-flight payload and keeping per-connection FIFO order (which the
+//! master's round engine and the deterministic-mode invariant rely on).
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::frame::Frame;
+use super::FrameSender;
+use crate::util::Timer;
+
+/// What the sender thread hands back at shutdown.
+pub struct SenderReport {
+    pub result: Result<()>,
+    /// wall-clock spent inside `FrameSender::send`
+    pub send_secs: f64,
+    pub frames: u64,
+}
+
+/// Background send stage over any split-off [`FrameSender`].
+pub struct PipelinedSender {
+    tx: Option<SyncSender<Frame>>,
+    handle: Option<JoinHandle<SenderReport>>,
+}
+
+impl PipelinedSender {
+    pub fn spawn(mut sender: Box<dyn FrameSender>) -> Self {
+        let (tx, rx) = sync_channel::<Frame>(1);
+        let handle = std::thread::spawn(move || {
+            let mut send_secs = 0.0f64;
+            let mut frames = 0u64;
+            while let Ok(frame) = rx.recv() {
+                let t = Timer::start();
+                if let Err(e) = sender.send(frame) {
+                    return SenderReport { result: Err(e), send_secs, frames };
+                }
+                send_secs += t.elapsed_secs();
+                frames += 1;
+            }
+            SenderReport { result: Ok(()), send_secs, frames }
+        });
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Hand a frame to the sender thread. Blocks only while a *previous*
+    /// frame is still being shipped (double buffer full). An error here
+    /// means the sender thread stopped — call [`Self::finish`] for the
+    /// root cause.
+    pub fn enqueue(&mut self, frame: Frame) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("enqueue after finish")
+            .send(frame)
+            .map_err(|_| anyhow!("sender thread stopped (master hung up?)"))
+    }
+
+    /// Close the queue, join the thread, and report totals.
+    pub fn finish(mut self) -> SenderReport {
+        drop(self.tx.take());
+        match self.handle.take().expect("finish called twice").join() {
+            Ok(report) => report,
+            Err(_) => SenderReport {
+                result: Err(anyhow!("sender thread panicked")),
+                send_secs: 0.0,
+                frames: 0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{channel_fabric, MasterTransport, WorkerTransport};
+
+    #[test]
+    fn frames_flow_in_order_and_send_time_is_accounted() {
+        let (mut master, mut workers) = channel_fabric(1);
+        let mut s = PipelinedSender::spawn(workers[0].split_sender().unwrap());
+        for t in 0..5u64 {
+            s.enqueue(Frame::skip(0, t)).unwrap();
+        }
+        for t in 0..5u64 {
+            let (_, f) = master.recv_any().unwrap();
+            assert_eq!(f.round, t, "FIFO order must be preserved");
+        }
+        let report = s.finish();
+        report.result.unwrap();
+        assert_eq!(report.frames, 5);
+        assert!(report.send_secs >= 0.0);
+    }
+
+    #[test]
+    fn finish_surfaces_the_send_error() {
+        let (master, mut workers) = channel_fabric(1);
+        let mut s = PipelinedSender::spawn(workers[0].split_sender().unwrap());
+        drop(master);
+        // the first enqueue may still be accepted (queued); the send error
+        // shows up by finish() at the latest
+        let _ = s.enqueue(Frame::skip(0, 0));
+        let _ = s.enqueue(Frame::skip(0, 1));
+        let report = s.finish();
+        assert!(report.result.is_err());
+    }
+}

@@ -1,35 +1,31 @@
-//! TCP transport: length-prefixed frames over std::net sockets.
+//! TCP transport: the shared length-prefixed frame codec ([`super::framed`])
+//! over std::net sockets.
 //!
-//! Enables real multi-process deployment: `tempo master-serve --listen
-//! 0.0.0.0:7700 --workers 4` accepts one connection per worker;
-//! `tempo worker-connect --connect host:7700 --worker-id i` dials in.
-//! Frame layout: u64 LE total length, then `Frame::serialize` bytes.
+//! Real multi-process deployment: `tempo master-serve --listen 0.0.0.0:7700
+//! --workers 4` accepts one connection per worker; `tempo worker-connect
+//! --connect host:7700 --worker-id i` dials in.
+//!
+//! Fault tolerance: the master keeps accepting for its whole lifetime, so a
+//! worker whose connection drops mid-run can [`TcpWorker::connect`] again
+//! with the same id — the new connection replaces the dead one and the
+//! worker retransmits whatever the master had not acknowledged (the
+//! coordinator's round engine tracks per-worker round progress, so a
+//! duplicate-free resume only needs per-connection FIFO order, which TCP
+//! gives us). Each accepted connection gets a reader thread that feeds one
+//! merged `(worker_id, Frame)` event queue; write halves are kept for
+//! broadcasts.
 
-use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use super::frame::Frame;
-use super::{MasterTransport, WorkerTransport};
-
-fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<()> {
-    let body = frame.serialize();
-    stream.write_all(&(body.len() as u64).to_le_bytes())?;
-    stream.write_all(&body)?;
-    stream.flush()?;
-    Ok(())
-}
-
-fn read_frame(stream: &mut TcpStream) -> Result<Frame> {
-    let mut len_buf = [0u8; 8];
-    stream.read_exact(&mut len_buf).context("read frame length")?;
-    let len = u64::from_le_bytes(len_buf) as usize;
-    anyhow::ensure!(len <= 1 << 31, "frame too large: {len}");
-    let mut body = vec![0u8; len];
-    stream.read_exact(&mut body).context("read frame body")?;
-    Frame::deserialize(&body)
-}
+use super::framed::{read_frame, write_frame};
+use super::{FrameSender, MasterTransport, PeerState, WorkerTransport};
 
 /// Worker endpoint over one TCP connection to the master.
 pub struct TcpWorker {
@@ -39,6 +35,8 @@ pub struct TcpWorker {
 
 impl TcpWorker {
     /// Dial the master and announce our worker id with a handshake frame.
+    /// Calling this again after a connection drop re-registers the same id
+    /// on a fresh socket (reconnect-after-drop).
     pub fn connect(addr: impl ToSocketAddrs, worker_id: u32) -> Result<Self> {
         let mut stream = TcpStream::connect(addr).context("connect to master")?;
         stream.set_nodelay(true).ok();
@@ -57,6 +55,17 @@ impl TcpWorker {
     }
 }
 
+/// Split-off update sender over a cloned socket handle.
+pub struct TcpSender {
+    stream: TcpStream,
+}
+
+impl FrameSender for TcpSender {
+    fn send(&mut self, frame: Frame) -> Result<()> {
+        write_frame(&mut self.stream, &frame)
+    }
+}
+
 impl WorkerTransport for TcpWorker {
     fn send_update(&mut self, frame: Frame) -> Result<()> {
         write_frame(&mut self.stream, &frame)
@@ -65,12 +74,43 @@ impl WorkerTransport for TcpWorker {
     fn recv_broadcast(&mut self) -> Result<Frame> {
         read_frame(&mut self.stream)
     }
+
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        let stream = self.stream.try_clone().context("clone worker socket")?;
+        Ok(Box::new(TcpSender { stream }))
+    }
 }
 
-/// Master endpoint: one accepted connection per worker, indexed by the
-/// worker id sent in the handshake.
+/// Internal event stream from the reader/accept threads to the master.
+/// Gone/Joined carry the per-id connection generation so a stale reader's
+/// EOF (arriving after a replacement connection registered) cannot demote
+/// a healthy reconnected worker.
+enum Event {
+    Frame(usize, Frame),
+    /// Connection generation `gen` for this worker id closed or errored.
+    Gone(usize, u64),
+    /// Connection generation `gen` completed its handshake.
+    Joined(usize, u64),
+}
+
+/// Shared write halves, one slot per worker id; replaced on reconnect,
+/// `None` while a worker is down.
+type Writers = Arc<Vec<Mutex<Option<TcpStream>>>>;
+
+/// Master endpoint: one accepted connection per worker id. The accept
+/// thread runs for the master's lifetime so dropped workers can reconnect.
 pub struct TcpMaster {
-    streams: Vec<TcpStream>,
+    n: usize,
+    local_addr: std::net::SocketAddr,
+    rx: Receiver<Event>,
+    writers: Writers,
+    state: Vec<PeerState>,
+    /// newest connection generation seen per worker id
+    latest_gen: Vec<u64>,
+    shutdown: Arc<AtomicBool>,
+    /// how long `recv_any` waits for a lost worker to reconnect before
+    /// declaring it hung up
+    pub dead_grace: Duration,
 }
 
 impl TcpMaster {
@@ -80,41 +120,227 @@ impl TcpMaster {
     }
 
     /// Accept workers on an already-bound listener (lets callers bind port 0
-    /// and learn the address before workers dial in).
+    /// and learn the address before workers dial in). Blocks until all
+    /// `n_workers` distinct ids have completed their handshake.
     pub fn from_listener(listener: TcpListener, n_workers: usize) -> Result<Self> {
-        let mut streams: Vec<Option<TcpStream>> = (0..n_workers).map(|_| None).collect();
-        let mut connected = 0;
-        while connected < n_workers {
-            let (mut stream, peer) = listener.accept().context("accept worker")?;
-            stream.set_nodelay(true).ok();
-            let hello = read_frame(&mut stream)?;
-            let id = hello.worker as usize;
-            anyhow::ensure!(id < n_workers, "worker id {id} out of range (peer {peer})");
-            anyhow::ensure!(streams[id].is_none(), "duplicate worker id {id}");
-            streams[id] = Some(stream);
-            connected += 1;
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        let local_addr = listener.local_addr().context("master local addr")?;
+        let (tx, rx) = mpsc::channel::<Event>();
+        let (reg_tx, reg_rx) = mpsc::channel::<usize>();
+        let writers: Writers = Arc::new((0..n_workers).map(|_| Mutex::new(None)).collect());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let accept_writers = Arc::clone(&writers);
+        let accept_shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || {
+            accept_loop(listener, n_workers, tx, reg_tx, accept_writers, accept_shutdown);
+        });
+
+        // wait for the initial full complement of workers
+        let mut registered = vec![false; n_workers];
+        let mut count = 0usize;
+        while count < n_workers {
+            let id = reg_rx.recv().ok().context("master accept thread died")?;
+            if !registered[id] {
+                registered[id] = true;
+                count += 1;
+            }
         }
-        Ok(Self { streams: streams.into_iter().map(Option::unwrap).collect() })
+        Ok(Self {
+            n: n_workers,
+            local_addr,
+            rx,
+            writers,
+            state: vec![PeerState::Alive; n_workers],
+            latest_gen: vec![0; n_workers],
+            shutdown,
+            dead_grace: Duration::from_secs(2),
+        })
+    }
+
+    /// A worker that vanished mid-run without its done marker, if any.
+    fn first_lost(&self) -> Option<usize> {
+        self.state.iter().position(|&s| s == PeerState::Lost)
+    }
+
+    /// Apply one event; `Ok(Some)` hands a frame to the engine, `Err` means
+    /// a worker aborted mid-run.
+    fn absorb(&mut self, ev: Event) -> Result<Option<(usize, Frame)>> {
+        match ev {
+            Event::Frame(id, frame) => {
+                if frame.kind == super::frame::FrameKind::Shutdown {
+                    if self.state[id] == PeerState::Done {
+                        return Ok(None);
+                    }
+                    if frame.is_done_marker() {
+                        self.state[id] = PeerState::Done;
+                        return Ok(None);
+                    }
+                    self.state[id] = PeerState::Lost;
+                    anyhow::bail!("worker {id} hung up (aborted mid-run)");
+                }
+                self.state[id] = PeerState::Alive;
+                Ok(Some((id, frame)))
+            }
+            Event::Gone(id, gen) => {
+                // EOF without a done marker: lost until it reconnects. A
+                // stale generation's EOF (already superseded by a newer
+                // connection) carries no liveness information.
+                if gen >= self.latest_gen[id] && self.state[id] != PeerState::Done {
+                    self.state[id] = PeerState::Lost;
+                }
+                Ok(None)
+            }
+            Event::Joined(id, gen) => {
+                self.latest_gen[id] = self.latest_gen[id].max(gen);
+                if self.state[id] == PeerState::Lost {
+                    self.state[id] = PeerState::Alive;
+                }
+                Ok(None)
+            }
+        }
+    }
+}
+
+impl Drop for TcpMaster {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // shut every connection down so blocked workers (and our reader
+        // threads) see EOF instead of waiting on a half-dead fabric — a
+        // clean run has already delivered everything the workers read
+        for w in self.writers.iter() {
+            if let Some(s) = w.lock().unwrap().as_ref() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        // wake the accept loop so it observes the flag and releases the port
+        let _ = TcpStream::connect(self.local_addr);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    n_workers: usize,
+    tx: Sender<Event>,
+    reg_tx: Sender<usize>,
+    writers: Writers,
+    shutdown: Arc<AtomicBool>,
+) {
+    let mut gens = vec![0u64; n_workers];
+    loop {
+        let (mut stream, _peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => return,
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        // handshake carries the worker id; junk connections are dropped,
+        // and a silent one cannot block the accept loop (and with it every
+        // future reconnect) — it gets a read deadline
+        stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+        let id = match read_frame(&mut stream) {
+            Ok(hello) if (hello.worker as usize) < n_workers => hello.worker as usize,
+            _ => continue,
+        };
+        stream.set_read_timeout(None).ok();
+        gens[id] += 1;
+        let gen = gens[id];
+        match stream.try_clone() {
+            Ok(write_half) => {
+                // fencing: the newest connection for an id wins; shutting
+                // the superseded socket makes its reader EOF promptly (a
+                // duplicate worker id thus kills the older stream instead
+                // of silently interleaving two update streams)
+                if let Some(old) = writers[id].lock().unwrap().replace(write_half) {
+                    let _ = old.shutdown(std::net::Shutdown::Both);
+                }
+            }
+            Err(_) => continue,
+        }
+        let _ = reg_tx.send(id);
+        let _ = tx.send(Event::Joined(id, gen));
+        let reader_tx = tx.clone();
+        std::thread::spawn(move || {
+            loop {
+                match read_frame(&mut stream) {
+                    Ok(frame) => {
+                        if reader_tx.send(Event::Frame(id, frame)).is_err() {
+                            return; // master gone
+                        }
+                    }
+                    Err(_) => {
+                        let _ = reader_tx.send(Event::Gone(id, gen));
+                        return;
+                    }
+                }
+            }
+        });
     }
 }
 
 impl MasterTransport for TcpMaster {
     fn n_workers(&self) -> usize {
-        self.streams.len()
+        self.n
     }
 
-    fn recv_updates(&mut self) -> Result<Vec<Frame>> {
-        let mut out = Vec::with_capacity(self.streams.len());
-        for (w, s) in self.streams.iter_mut().enumerate() {
-            out.push(read_frame(s).with_context(|| format!("recv from worker {w}"))?);
+    fn recv_any(&mut self) -> Result<(usize, Frame)> {
+        loop {
+            // while any connection is lost, give its reconnect a grace
+            // window instead of blocking forever (the error keeps the
+            // "hung up" marker the launch-time triage looks for)
+            let ev = if let Some(lost) = self.first_lost() {
+                match self.rx.recv_timeout(self.dead_grace) {
+                    Ok(ev) => ev,
+                    Err(RecvTimeoutError::Timeout) => {
+                        anyhow::bail!(
+                            "worker {lost} hung up (TCP connection closed, no reconnect)"
+                        )
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        anyhow::bail!("master accept thread died")
+                    }
+                }
+            } else {
+                self.rx.recv().ok().context("master accept thread died")?
+            };
+            if let Some(x) = self.absorb(ev)? {
+                return Ok(x);
+            }
         }
-        Ok(out)
+    }
+
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
+        loop {
+            let ev = match self.rx.try_recv() {
+                Ok(ev) => ev,
+                Err(TryRecvError::Empty) => return Ok(None),
+                Err(TryRecvError::Disconnected) => {
+                    anyhow::bail!("master accept thread died")
+                }
+            };
+            if let Some(x) = self.absorb(ev)? {
+                return Ok(Some(x));
+            }
+        }
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
-        for (w, s) in self.streams.iter_mut().enumerate() {
-            write_frame(s, frame).with_context(|| format!("broadcast to worker {w}"))?;
+        let mut sent = 0usize;
+        for w in 0..self.n {
+            let mut guard = self.writers[w].lock().unwrap();
+            if let Some(stream) = guard.as_mut() {
+                match write_frame(stream, frame) {
+                    Ok(()) => sent += 1,
+                    // dead connection: drop the write half; the worker may
+                    // reconnect, at which point the accept loop installs a
+                    // fresh one
+                    Err(_) => *guard = None,
+                }
+            }
         }
+        anyhow::ensure!(sent > 0, "broadcast reached no workers (all hung up)");
         Ok(())
     }
 }
@@ -129,15 +355,6 @@ mod tests {
     fn tcp_fabric_roundtrip() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        let master_thread = std::thread::spawn(move || {
-            let mut master = TcpMaster::from_listener(listener, 2).unwrap();
-            let ups = master.recv_updates().unwrap();
-            assert_eq!(ups.len(), 2);
-            assert_eq!(ups[0].worker, 0);
-            assert_eq!(ups[1].worker, 1);
-            master.broadcast(&Frame::broadcast(5, &[9.0, 8.0])).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
         let workers: Vec<_> = (0..2u32)
             .map(|id| {
                 std::thread::spawn(move || {
@@ -150,9 +367,86 @@ mod tests {
                 })
             })
             .collect();
-        master_thread.join().unwrap();
+        let mut master = TcpMaster::from_listener(listener, 2).unwrap();
+        let mut seen = vec![false; 2];
+        for _ in 0..2 {
+            let (wid, f) = master.recv_any().unwrap();
+            assert_eq!(f.worker as usize, wid);
+            assert_eq!(f.bytes, vec![wid as u8; 3]);
+            assert!(!seen[wid]);
+            seen[wid] = true;
+        }
+        master.broadcast(&Frame::broadcast(5, &[9.0, 8.0])).unwrap();
         for w in workers {
             w.join().unwrap();
         }
+    }
+
+    #[test]
+    fn worker_reconnect_after_drop_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let p = Payload { kind_tag: 1, bytes: vec![1], bits: 8 };
+            w.send_update(Frame::update(0, 0, p, 0.0)).unwrap();
+            // wait for the master's ack so round 0 is fully delivered
+            // before the connection drops (reconnect resumes from there)
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.broadcast_f32(1).unwrap(), vec![1.0]);
+            drop(w); // connection drops mid-run
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let p = Payload { kind_tag: 1, bytes: vec![2], bits: 8 };
+            w.send_update(Frame::update(0, 1, p, 0.0)).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.broadcast_f32(1).unwrap(), vec![3.0]);
+        });
+        let mut master = TcpMaster::from_listener(listener, 1).unwrap();
+        let (wid, f1) = master.recv_any().unwrap();
+        assert_eq!((wid, f1.round), (0, 0));
+        assert_eq!(f1.bytes, vec![1]);
+        master.broadcast(&Frame::broadcast(0, &[1.0])).unwrap();
+        // second frame arrives on the replacement connection
+        let (wid, f2) = master.recv_any().unwrap();
+        assert_eq!((wid, f2.round), (0, 1));
+        assert_eq!(f2.bytes, vec![2]);
+        // broadcast lands on the new write half
+        master.broadcast(&Frame::broadcast(1, &[3.0])).unwrap();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn split_sender_shares_the_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let mut s = w.split_sender().unwrap();
+            s.send(Frame::skip(0, 3)).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.kind, FrameKind::Broadcast);
+        });
+        let mut master = TcpMaster::from_listener(listener, 1).unwrap();
+        let (wid, f) = master.recv_any().unwrap();
+        assert_eq!(wid, 0);
+        assert_eq!(f.kind, FrameKind::Skip);
+        assert_eq!(f.round, 3);
+        master.broadcast(&Frame::broadcast(3, &[0.0])).unwrap();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn all_connections_closed_errors_after_grace() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let w = TcpWorker::connect(addr, 0).unwrap();
+            drop(w);
+        });
+        let mut master = TcpMaster::from_listener(listener, 1).unwrap();
+        master.dead_grace = Duration::from_millis(50);
+        worker.join().unwrap();
+        let e = master.recv_any().unwrap_err();
+        assert!(format!("{e:#}").contains("hung up"), "{e:#}");
     }
 }

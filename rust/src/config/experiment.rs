@@ -6,6 +6,7 @@ use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
 use crate::optim::LrSchedule;
 use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 
+use super::fabric::FabricSpec;
 use super::value::Value;
 
 /// Scheme spec as written in configs: either a registry spec *string*
@@ -160,6 +161,8 @@ pub struct ExperimentConfig {
     pub seed: u64,
     pub scheme: SchemeSpec,
     pub backend: Backend,
+    /// Transport, pipelining, aggregation mode and scenario injection.
+    pub fabric: FabricSpec,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -188,6 +191,7 @@ impl Default for ExperimentConfig {
             seed: 0,
             scheme: SchemeSpec::default(),
             backend: Backend::Rust,
+            fabric: FabricSpec::default(),
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -231,6 +235,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.opt("scheme") {
             c.scheme = SchemeSpec::from_value(x)?;
+        }
+        if let Some(x) = v.opt("fabric") {
+            c.fabric = FabricSpec::from_value(x)?;
         }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
@@ -279,6 +286,13 @@ impl ExperimentConfig {
         anyhow::ensure!(self.steps >= 1, "need at least one step");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
         self.scheme.to_scheme().context("invalid [scheme]")?;
+        self.fabric.validate().context("invalid [fabric]")?;
+        for &(w, _) in &self.fabric.straggler_ms {
+            anyhow::ensure!(w < self.workers, "fabric.straggler names worker {w} out of range");
+        }
+        for &(w, _, _) in &self.fabric.churn {
+            anyhow::ensure!(w < self.workers, "fabric.churn names worker {w} out of range");
+        }
         Ok(())
     }
 
@@ -360,6 +374,19 @@ noise = 0.8
         assert!(ExperimentConfig::from_toml_str("steps = 0").is_err());
         let bad_backend = "backend = \"qpu\"";
         assert!(ExperimentConfig::from_toml_str(bad_backend).is_err());
+    }
+
+    #[test]
+    fn fabric_table_rides_the_config() {
+        use crate::config::fabric::TransportKind;
+        let toml = "name = \"x\"\nworkers = 4\n\n[fabric]\ntransport = \"tcp\"\n\
+                    max_staleness = 1\nchurn = \"2:3..5\"\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(c.fabric.transport, TransportKind::Tcp);
+        assert_eq!(c.fabric.absent_for(2), vec![(3, 5)]);
+        // churn naming a worker outside the pool is a config error
+        let bad = "name = \"x\"\nworkers = 2\n\n[fabric]\nchurn = \"2:3..5\"\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! `[fabric]` configuration: which transport the round engine runs over,
+//! how aggressively it pipelines/relaxes synchrony, and which degraded-
+//! network scenarios to inject (per-worker stragglers, message
+//! drop-and-retransmit, worker churn).
+//!
+//! Two front doors map onto the same [`FabricSpec`]:
+//!
+//! ```toml
+//! [fabric]
+//! transport = "tcp"           # "channel" (default) | "tcp"
+//! pipelined = true            # double-buffered sends (default true)
+//! max_staleness = 2           # 0 = full-sync rounds (default)
+//! quorum = 2                  # min workers with a frame queued per round
+//! drop_prob = 0.01            # per-send drop-and-retransmit probability
+//! retransmit_ms = 2.0         # simulated retransmission timeout
+//! straggler = "1:5;3:2.5"     # worker:delay_ms per send
+//! churn = "2:10..20"          # worker absent for rounds [10, 20)
+//! seed = 7                    # fault RNG seed
+//! ```
+//!
+//! and the CLI override `--fabric tcp,staleness=2,quorum=2,drop=0.01,
+//! straggler=1:5,churn=2:10..20` (comma-separated tokens; unlisted fields
+//! keep their current values, so `--fabric tcp` alone just switches the
+//! transport).
+
+use anyhow::{Context, Result};
+
+use super::value::Value;
+use crate::coordinator::master::AggMode;
+
+/// Which fabric carries the frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process std::mpsc channels (single-host default).
+    Channel,
+    /// Real TCP sockets on 127.0.0.1 (one process, n+1 sockets) — the
+    /// deployment path exercised end-to-end without leaving the test box.
+    Tcp,
+}
+
+/// Fully-resolved fabric configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricSpec {
+    pub transport: TransportKind,
+    /// Overlap encode+send of round t with round t+1's prefetch.
+    pub pipelined: bool,
+    /// 0 = full-sync rounds; >0 enables bounded-staleness aggregation.
+    pub max_staleness: u64,
+    /// Minimum workers with a frame queued (update or skip marker) before
+    /// a bounded-staleness round proceeds — skip markers count so a fully
+    /// churned-out pool cannot deadlock the quorum wait. Clamped to
+    /// [1, workers] at run time.
+    pub quorum: usize,
+    /// (worker, delay_ms): fixed pre-send delay — straggler simulation.
+    pub straggler_ms: Vec<(usize, f64)>,
+    /// Per-send probability of a simulated drop (then retransmit).
+    pub drop_prob: f64,
+    /// Simulated retransmission timeout per dropped frame.
+    pub retransmit_ms: f64,
+    /// (worker, from, to): absent for rounds [from, to) — churn.
+    pub churn: Vec<(usize, u64, u64)>,
+    /// Seed for the per-worker fault RNGs.
+    pub seed: u64,
+}
+
+impl Default for FabricSpec {
+    fn default() -> Self {
+        Self {
+            transport: TransportKind::Channel,
+            pipelined: true,
+            max_staleness: 0,
+            quorum: 1,
+            straggler_ms: Vec::new(),
+            drop_prob: 0.0,
+            retransmit_ms: 1.0,
+            churn: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+impl FabricSpec {
+    /// The aggregation mode this fabric asks the master to run.
+    pub fn aggregation(&self) -> AggMode {
+        if self.max_staleness == 0 {
+            AggMode::FullSync
+        } else {
+            AggMode::BoundedStaleness { max_staleness: self.max_staleness, quorum: self.quorum }
+        }
+    }
+
+    /// Whether any send-path fault injection is configured.
+    pub fn has_faults(&self) -> bool {
+        self.drop_prob > 0.0 || !self.straggler_ms.is_empty()
+    }
+
+    /// Straggler delay for one worker (0 = none).
+    pub fn straggler_for(&self, worker: usize) -> f64 {
+        self.straggler_ms
+            .iter()
+            .find(|&&(w, _)| w == worker)
+            .map(|&(_, ms)| ms)
+            .unwrap_or(0.0)
+    }
+
+    /// Absent-round windows for one worker.
+    pub fn absent_for(&self, worker: usize) -> Vec<(u64, u64)> {
+        self.churn
+            .iter()
+            .filter(|&&(w, _, _)| w == worker)
+            .map(|&(_, a, b)| (a, b))
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.drop_prob),
+            "fabric.drop_prob must be in [0, 1), got {}",
+            self.drop_prob
+        );
+        anyhow::ensure!(self.retransmit_ms >= 0.0, "fabric.retransmit_ms must be >= 0");
+        anyhow::ensure!(self.quorum >= 1, "fabric.quorum must be >= 1");
+        for &(w, a, b) in &self.churn {
+            anyhow::ensure!(a < b, "fabric.churn range for worker {w} must satisfy from < to");
+        }
+        for &(_, ms) in &self.straggler_ms {
+            anyhow::ensure!(ms >= 0.0, "fabric.straggler delays must be >= 0");
+        }
+        Ok(())
+    }
+
+    /// Parse the `[fabric]` table of a config file.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut s = Self::default();
+        if let Some(x) = v.opt("transport") {
+            s.transport = parse_transport(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("pipelined") {
+            s.pipelined = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("max_staleness") {
+            s.max_staleness = x.as_int()? as u64;
+        }
+        if let Some(x) = v.opt("quorum") {
+            s.quorum = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("drop_prob") {
+            s.drop_prob = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("retransmit_ms") {
+            s.retransmit_ms = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("straggler") {
+            s.straggler_ms = parse_stragglers(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("churn") {
+            s.churn = parse_churn(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("seed") {
+            s.seed = x.as_int()? as u64;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Apply a CLI spec string (`--fabric tcp,staleness=2,drop=0.01,...`)
+    /// on top of the current values.
+    pub fn apply_str(&mut self, spec: &str) -> Result<()> {
+        for token in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match token.split_once('=') {
+                None => match token {
+                    "channel" | "tcp" => self.transport = parse_transport(token)?,
+                    "pipelined" => self.pipelined = true,
+                    "inline" | "sync" => self.pipelined = false,
+                    other => anyhow::bail!(
+                        "unknown fabric token {other:?} (expected channel|tcp|pipelined|inline \
+                         or key=value)"
+                    ),
+                },
+                Some((key, val)) => match key {
+                    "transport" => self.transport = parse_transport(val)?,
+                    "pipelined" => {
+                        self.pipelined = val
+                            .parse::<bool>()
+                            .ok()
+                            .with_context(|| format!("fabric pipelined={val:?} not a bool"))?
+                    }
+                    "staleness" | "max_staleness" => {
+                        self.max_staleness =
+                            val.parse().with_context(|| format!("fabric staleness={val:?}"))?
+                    }
+                    "quorum" => {
+                        self.quorum =
+                            val.parse().with_context(|| format!("fabric quorum={val:?}"))?
+                    }
+                    "drop" | "drop_prob" => {
+                        self.drop_prob =
+                            val.parse().with_context(|| format!("fabric drop={val:?}"))?
+                    }
+                    "retransmit_ms" => {
+                        self.retransmit_ms =
+                            val.parse().with_context(|| format!("fabric retransmit_ms={val:?}"))?
+                    }
+                    "straggler" => self.straggler_ms = parse_stragglers(val)?,
+                    "churn" => self.churn = parse_churn(val)?,
+                    "seed" => {
+                        self.seed = val.parse().with_context(|| format!("fabric seed={val:?}"))?
+                    }
+                    other => anyhow::bail!("unknown fabric key {other:?}"),
+                },
+            }
+        }
+        self.validate()
+    }
+}
+
+fn parse_transport(s: &str) -> Result<TransportKind> {
+    Ok(match s {
+        "channel" => TransportKind::Channel,
+        "tcp" => TransportKind::Tcp,
+        other => anyhow::bail!("unknown fabric transport {other:?} (channel|tcp)"),
+    })
+}
+
+/// `"1:5;3:2.5"` → [(1, 5.0), (3, 2.5)]
+fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
+    s.split(';')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let (w, ms) = t.split_once(':').context("straggler entries are worker:delay_ms")?;
+            Ok((
+                w.trim().parse().with_context(|| format!("straggler worker {w:?}"))?,
+                ms.trim().parse().with_context(|| format!("straggler delay {ms:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+/// `"2:10..20;0:5..6"` → [(2, 10, 20), (0, 5, 6)]
+fn parse_churn(s: &str) -> Result<Vec<(usize, u64, u64)>> {
+    s.split(';')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let (w, range) = t.split_once(':').context("churn entries are worker:from..to")?;
+            let (a, b) = range.split_once("..").context("churn range is from..to")?;
+            Ok((
+                w.trim().parse().with_context(|| format!("churn worker {w:?}"))?,
+                a.trim().parse().with_context(|| format!("churn from {a:?}"))?,
+                b.trim().parse().with_context(|| format!("churn to {b:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn defaults_are_a_clean_channel_fabric() {
+        let f = FabricSpec::default();
+        assert_eq!(f.transport, TransportKind::Channel);
+        assert!(f.pipelined);
+        assert_eq!(f.aggregation(), AggMode::FullSync);
+        assert!(!f.has_faults());
+        assert!(f.absent_for(0).is_empty());
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_table_parses_every_field() {
+        let v = toml::parse(
+            "[fabric]\ntransport = \"tcp\"\npipelined = false\nmax_staleness = 2\n\
+             quorum = 3\ndrop_prob = 0.25\nretransmit_ms = 2.5\n\
+             straggler = \"1:5;3:2.5\"\nchurn = \"2:10..20\"\nseed = 9\n",
+        )
+        .unwrap();
+        let f = FabricSpec::from_value(v.get("fabric").unwrap()).unwrap();
+        assert_eq!(f.transport, TransportKind::Tcp);
+        assert!(!f.pipelined);
+        assert_eq!(
+            f.aggregation(),
+            AggMode::BoundedStaleness { max_staleness: 2, quorum: 3 }
+        );
+        assert_eq!(f.straggler_ms, vec![(1, 5.0), (3, 2.5)]);
+        assert!((f.straggler_for(3) - 2.5).abs() < 1e-12);
+        assert_eq!(f.straggler_for(0), 0.0);
+        assert_eq!(f.churn, vec![(2, 10, 20)]);
+        assert_eq!(f.absent_for(2), vec![(10, 20)]);
+        assert_eq!(f.seed, 9);
+        assert!(f.has_faults());
+    }
+
+    #[test]
+    fn cli_spec_overrides_only_listed_fields() {
+        let mut f = FabricSpec::default();
+        f.apply_str("tcp,staleness=2,drop=0.1,straggler=0:3").unwrap();
+        assert_eq!(f.transport, TransportKind::Tcp);
+        assert_eq!(f.max_staleness, 2);
+        assert!((f.drop_prob - 0.1).abs() < 1e-12);
+        assert!(f.pipelined, "unlisted fields keep their values");
+        f.apply_str("inline").unwrap();
+        assert!(!f.pipelined);
+        assert_eq!(f.transport, TransportKind::Tcp, "still tcp");
+    }
+
+    #[test]
+    fn invalid_specs_are_rejected() {
+        let mut f = FabricSpec::default();
+        assert!(f.apply_str("warp").is_err());
+        assert!(f.apply_str("drop=1.5").is_err());
+        assert!(f.apply_str("churn=2:9..9").is_err());
+        assert!(f.apply_str("straggler=oops").is_err());
+        // a failed apply may leave partial edits; validate catches them
+        let mut g = FabricSpec { drop_prob: 2.0, ..Default::default() };
+        assert!(g.validate().is_err());
+        g.drop_prob = 0.0;
+        g.quorum = 0;
+        assert!(g.validate().is_err());
+    }
+}

@@ -6,9 +6,11 @@
 //! (see DESIGN.md "Offline-build note").
 
 pub mod experiment;
+pub mod fabric;
 pub mod json;
 pub mod toml;
 pub mod value;
 
 pub use experiment::{ExperimentConfig, SchemeSpec};
+pub use fabric::{FabricSpec, TransportKind};
 pub use value::Value;

@@ -1,15 +1,20 @@
-//! Single-process launcher: datasets + channel fabric + one thread per
-//! worker + the master inline. TCP deployments use the same Worker/Master
-//! loops over `comm::tcp` endpoints (see cli::master_serve / worker_connect).
+//! Single-process launcher: datasets + fabric + one thread per worker +
+//! the master inline. The `[fabric]` config picks the transport — the
+//! in-process channel fabric or real TCP sockets on 127.0.0.1 — plus
+//! pipelining, aggregation mode and fault injection; the Worker/Master
+//! loops are identical either way (multi-process deployments reuse them
+//! via cli::master_serve / worker_connect).
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::comm::channel_fabric;
-use crate::config::ExperimentConfig;
+use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats};
+use crate::comm::tcp::{TcpMaster, TcpWorker};
+use crate::comm::{channel_fabric, MasterTransport, WorkerTransport};
+use crate::config::{ExperimentConfig, FabricSpec, TransportKind};
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
-use crate::metrics::RunPoint;
+use crate::metrics::{CommStats, RunPoint};
 use crate::model::{Manifest, ModelKind};
 use crate::runtime::Runtime;
 use crate::util::timer::PhaseTimes;
@@ -35,12 +40,16 @@ pub struct TrainReport {
     /// per-round mean over workers of ‖u_t‖²
     pub u_norm_trace: Vec<f64>,
     pub workers: Vec<WorkerSummary>,
+    /// Full communication accounting (payload bits, per-block rates,
+    /// fabric-health counters, comm-phase timings).
+    pub comm: CommStats,
 }
 
 impl TrainReport {
-    /// Mean per-iteration worker compute time split by phase — Fig. 1's bars.
+    /// Mean per-iteration worker compute time split by phase — Fig. 1's
+    /// bars plus the fabric phases this engine adds (send/wait).
     pub fn phase_means(&self) -> Vec<(String, f64)> {
-        ["gradient", "compress", "encode", "apply"]
+        ["gradient", "compress", "encode", "send", "wait", "apply"]
             .iter()
             .map(|p| (p.to_string(), self.worker_phases.mean(p)))
             .collect()
@@ -70,8 +79,63 @@ pub fn build_dataset(
     }
 }
 
+/// What [`build_fabric`] hands back: the master endpoint, one endpoint per
+/// worker (fault injection already wrapped in), and the per-worker fault
+/// counters to harvest after the run.
+pub type Fabric =
+    (Box<dyn MasterTransport>, Vec<Box<dyn WorkerTransport>>, Vec<Arc<Mutex<FaultStats>>>);
+
+/// Per-worker endpoints plus the master endpoint for the configured
+/// transport. Boxed so the two fabrics share every downstream code path.
+pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
+    let mut workers: Vec<Box<dyn WorkerTransport>> = Vec::with_capacity(n);
+    let master: Box<dyn MasterTransport> = match fabric.transport {
+        TransportKind::Channel => {
+            let (m, ws) = channel_fabric(n);
+            for w in ws {
+                workers.push(Box::new(w));
+            }
+            Box::new(m)
+        }
+        TransportKind::Tcp => {
+            // bind port 0, dial every worker (handshakes queue in the
+            // backlog), then accept them all
+            let listener =
+                std::net::TcpListener::bind("127.0.0.1:0").context("bind fabric socket")?;
+            let addr = listener.local_addr()?;
+            for wid in 0..n {
+                workers.push(Box::new(
+                    TcpWorker::connect(addr, wid as u32)
+                        .with_context(|| format!("worker {wid}: dial fabric"))?,
+                ));
+            }
+            Box::new(TcpMaster::from_listener(listener, n)?)
+        }
+    };
+    let mut fault_stats = Vec::new();
+    if fabric.has_faults() {
+        workers = workers
+            .into_iter()
+            .enumerate()
+            .map(|(wid, transport)| {
+                let policy = FaultPolicy::new(
+                    fabric.straggler_for(wid),
+                    fabric.drop_prob,
+                    fabric.retransmit_ms,
+                    fabric.seed,
+                    wid as u32,
+                );
+                fault_stats.push(policy.stats());
+                Box::new(FaultInjector::new(transport, policy)) as Box<dyn WorkerTransport>
+            })
+            .collect();
+    }
+    Ok((master, workers, fault_stats))
+}
+
 /// Run a full experiment in-process: n worker threads + the master on the
-/// calling thread. Deterministic given cfg.seed.
+/// calling thread. Deterministic given cfg.seed (and, with faults off,
+/// bit-identical across transports).
 pub fn run_training(cfg: &ExperimentConfig) -> Result<TrainReport> {
     let manifest = Manifest::load_default()?;
     run_training_with_manifest(cfg, &manifest)
@@ -90,7 +154,7 @@ pub fn run_training_with_manifest(
     let dataset = build_dataset(entry.kind, &entry, cfg);
     let schedule = cfg.schedule();
 
-    let (master_tx, workers_tx) = channel_fabric(cfg.workers);
+    let (master_tx, workers_tx, fault_stats) = build_fabric(&cfg.fabric, cfg.workers)?;
 
     let mut handles = Vec::with_capacity(cfg.workers);
     for (wid, transport) in workers_tx.into_iter().enumerate() {
@@ -103,6 +167,8 @@ pub fn run_training_with_manifest(
             steps: cfg.steps,
             seed: cfg.seed,
             clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
+            pipelined: cfg.fabric.pipelined,
+            absent: cfg.fabric.absent_for(wid),
         };
         let shard = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
         let dataset = Arc::clone(&dataset);
@@ -125,6 +191,7 @@ pub fn run_training_with_manifest(
         samples_per_round: entry.batch * cfg.workers,
         train_len: cfg.train_len,
         data_noise: cfg.noise,
+        aggregation: cfg.fabric.aggregation(),
     };
     let master_runtime = Runtime::new(manifest.clone())?;
     let master_result = MasterLoop::new(master_spec, master_tx)
@@ -160,19 +227,27 @@ pub fn run_training_with_manifest(
         }
     };
 
-    // merge per-worker traces and phase times
+    // merge per-worker traces, phase times, and fabric-health counters
     let mut phases = PhaseTimes::new();
     let steps = cfg.steps as usize;
     let mut e_mse_trace = vec![0.0f64; steps];
     let mut u_norm_trace = vec![0.0f64; steps];
+    let mut comm = report.comm.clone();
     for s in &summaries {
         phases.merge(&s.phases);
+        for name in ["encode", "send", "wait"] {
+            comm.record_phase(name, s.phases.total(name), s.phases.count(name));
+        }
         for (t, &v) in s.e_mse_trace.iter().enumerate() {
             e_mse_trace[t] += v / cfg.workers as f64;
         }
         for (t, &v) in s.u_norm_trace.iter().enumerate() {
             u_norm_trace[t] += v / cfg.workers as f64;
         }
+    }
+    for stats in &fault_stats {
+        let s = stats.lock().unwrap();
+        comm.record_faults(s.retransmits, s.injected_delay_secs);
     }
     let mut points = report.points;
     for p in points.iter_mut() {
@@ -184,13 +259,14 @@ pub fn run_training_with_manifest(
         points,
         final_test_acc: report.final_test_acc,
         final_test_loss: report.final_test_loss,
-        bits_per_component: report.comm.bits_per_component(),
-        compression_ratio: report.comm.compression_ratio(),
-        simulated_comm_secs: report.comm.simulated_comm_secs(),
-        block_rates: report.comm.block_rates(),
+        bits_per_component: comm.bits_per_component(),
+        compression_ratio: comm.compression_ratio(),
+        simulated_comm_secs: comm.simulated_comm_secs(),
+        block_rates: comm.block_rates(),
         worker_phases: phases,
         e_mse_trace,
         u_norm_trace,
         workers: summaries,
+        comm,
     })
 }

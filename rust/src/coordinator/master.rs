@@ -1,4 +1,4 @@
-//! Master-side loop.
+//! Master-side round engine.
 //!
 //! Owns: the canonical parameter vector, one decode-and-predict
 //! [`MasterScheme`] per worker (paper Sec. IV-C: "the master operates a
@@ -6,13 +6,31 @@
 //! block"), the LR schedule, rate accounting (total and per block for
 //! blockwise schemes) and periodic evaluation.
 //!
+//! Two aggregation modes ([`AggMode`]):
+//!
+//! * **FullSync** — the paper's synchronous rounds: wait for one frame per
+//!   worker, decode and aggregate in worker-id order (arrival order over a
+//!   real fabric is nondeterministic; id order is what makes a TCP run
+//!   bit-identical to a channel run).
+//! * **BoundedStaleness** — proceed once `quorum` workers have a frame
+//!   queued; late updates are decoded (in their own worker-round order, so
+//!   every chain stays in sync) and folded into the round in which they
+//!   arrive; no worker is allowed to lag more than `max_staleness` rounds.
+//!   This is what keeps a straggler from serializing the whole fleet.
+//!
+//! Workers out of the pool send [`FrameKind::Skip`] markers (fabric churn);
+//! the master aggregates over contributors only and leaves the absent
+//! worker's chain untouched.
+//!
 //! Evaluation is injectable: [`MasterLoop::run`] wires the PJRT model, while
-//! [`MasterLoop::run_headless`] drives the identical round loop with no
+//! [`MasterLoop::run_headless`] drives the identical round engine with no
 //! model at all (test/synthetic path — eval columns become NaN).
+
+use std::collections::VecDeque;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Frame, MasterTransport};
+use crate::comm::{Frame, FrameKind, MasterTransport};
 use crate::data::{Batch, MarkovCorpus, SynthImages};
 use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
 use crate::model::ModelKind;
@@ -20,6 +38,19 @@ use crate::optim::LrSchedule;
 use crate::runtime::{ModelExec, Runtime};
 use crate::scheme::{MasterScheme, Scheme};
 use crate::util::Timer;
+
+/// How the master combines worker updates each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AggMode {
+    /// Wait for every worker every round (the paper's setting).
+    #[default]
+    FullSync,
+    /// Aggregate whatever has arrived once `quorum` workers have a frame
+    /// queued (update or skip marker — counting skips keeps a churned-out
+    /// pool from deadlocking the wait); bound any worker's lag by
+    /// `max_staleness` rounds.
+    BoundedStaleness { max_staleness: u64, quorum: usize },
+}
 
 /// Master configuration (plain data).
 #[derive(Clone, Debug)]
@@ -35,6 +66,7 @@ pub struct MasterSpec {
     pub samples_per_round: usize,
     pub train_len: usize,
     pub data_noise: f32,
+    pub aggregation: AggMode,
 }
 
 /// Held-out evaluation stream (kind matches the model).
@@ -94,12 +126,15 @@ pub struct MasterReport {
     pub final_test_acc: f64,
     pub final_test_loss: f64,
     pub final_w_norm: f64,
+    /// the canonical parameter vector at the end of the run — what the
+    /// deterministic-mode invariant compares bit-for-bit across fabrics
+    pub final_w: Vec<f32>,
 }
 
 /// (w, eval_batches, salt) → (test_loss, test_acc).
 type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
 
-/// Master loop: drives `steps` synchronous rounds over the transport.
+/// Master loop: drives `steps` rounds over the transport.
 pub struct MasterLoop<T: MasterTransport> {
     spec: MasterSpec,
     transport: T,
@@ -124,12 +159,47 @@ impl<T: MasterTransport> MasterLoop<T> {
     }
 
     /// Headless run at dimension d: no model, no evaluation (test metrics
-    /// are NaN/0); parameters start at zero. The round loop — decode,
+    /// are NaN/0); parameters start at zero. The round engine — decode,
     /// per-worker chains, aggregation, broadcast, rate accounting — is the
     /// exact same code as [`Self::run`].
     pub fn run_headless(self, d: usize) -> Result<MasterReport> {
         let MasterLoop { spec, transport } = self;
         run_rounds(&spec, transport, vec![0.0f32; d], None)
+    }
+}
+
+/// Per-worker frame queues between the transport and the round engine.
+struct Inbox {
+    /// frames received but not yet folded into an aggregate (FIFO/worker)
+    pending: Vec<VecDeque<Frame>>,
+    /// total frames received per worker == that worker's round progress
+    delivered: Vec<u64>,
+}
+
+impl Inbox {
+    fn new(n: usize) -> Self {
+        Self { pending: (0..n).map(|_| VecDeque::new()).collect(), delivered: vec![0; n] }
+    }
+
+    fn push(&mut self, wid: usize, frame: Frame) -> Result<()> {
+        anyhow::ensure!(wid < self.pending.len(), "bad worker id {wid}");
+        self.delivered[wid] += 1;
+        self.pending[wid].push_back(frame);
+        Ok(())
+    }
+
+    /// Pull everything the transport has queued right now.
+    fn drain<T: MasterTransport>(&mut self, transport: &mut T) -> Result<()> {
+        while let Some((wid, frame)) = transport.try_recv_any()? {
+            self.push(wid, frame)?;
+        }
+        Ok(())
+    }
+
+    /// Block for one more frame.
+    fn pump<T: MasterTransport>(&mut self, transport: &mut T) -> Result<()> {
+        let (wid, frame) = transport.recv_any()?;
+        self.push(wid, frame)
     }
 }
 
@@ -145,6 +215,7 @@ fn run_rounds<T: MasterTransport>(
     for _ in 0..n {
         chains.push(spec.scheme.master(d)?);
     }
+    let mut inbox = Inbox::new(n);
     let mut comm = CommStats::new(d);
     let mut train_loss = LossMeter::new();
     let mut points = Vec::new();
@@ -154,25 +225,82 @@ fn run_rounds<T: MasterTransport>(
     let mut agg = vec![0.0f32; d];
 
     for t in 0..spec.steps {
-        let frames = transport.recv_updates()?;
-        anyhow::ensure!(frames.len() == n, "round {t}: missing updates");
         agg.iter_mut().for_each(|x| *x = 0.0);
-        for frame in &frames {
-            anyhow::ensure!(frame.round == t, "round skew: {} vs {t}", frame.round);
-            let wid = frame.worker as usize;
-            anyhow::ensure!(wid < n, "bad worker id {wid}");
-            comm.record_message(frame.payload_bits);
-            train_loss.push(frame.loss as f64);
-            let payload = frame.as_payload();
-            chains[wid]
-                .receive(&payload, t, &mut rtilde)
-                .with_context(|| format!("round {t}: decode worker {wid}"))?;
-            for bb in chains[wid].last_block_bits() {
-                comm.record_block(&bb.name, bb.bits, bb.components);
+
+        match spec.aggregation {
+            AggMode::FullSync => {
+                // one frame per worker, then fold in worker-id order — the
+                // ordering that makes TCP and channel runs bit-identical
+                while inbox.pending.iter().any(|q| q.is_empty()) {
+                    inbox.pump(&mut transport)?;
+                }
+                let mut round_frames = Vec::with_capacity(n);
+                for wid in 0..n {
+                    let frame = inbox.pending[wid].pop_front().unwrap();
+                    anyhow::ensure!(
+                        frame.round == t,
+                        "round skew: worker {wid} sent {} during round {t}",
+                        frame.round
+                    );
+                    round_frames.push(frame);
+                }
+                let contributors =
+                    round_frames.iter().filter(|f| f.kind == FrameKind::Update).count();
+                let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
+                for frame in &round_frames {
+                    fold_frame(frame, t, &mut chains, &mut comm, &mut train_loss, &mut rtilde)?;
+                    if frame.kind == FrameKind::Update {
+                        for i in 0..d {
+                            agg[i] += scale * rtilde[i];
+                        }
+                    }
+                }
             }
-            let scale = 1.0 / n as f32;
-            for i in 0..d {
-                agg[i] += scale * rtilde[i];
+            AggMode::BoundedStaleness { max_staleness, quorum } => {
+                inbox.drain(&mut transport)?;
+                // staleness bound: worker w's latest delivered round is
+                // delivered[w]-1; it may not trail round t by more than S
+                for wid in 0..n {
+                    while inbox.delivered[wid] + max_staleness < t + 1 {
+                        inbox.pump(&mut transport)?;
+                    }
+                }
+                // quorum: enough workers must have at least one frame queued
+                let quorum = quorum.clamp(1, n);
+                while inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
+                    inbox.pump(&mut transport)?;
+                }
+                // fold EVERY queued frame, each exactly once, in worker-id
+                // order and per-worker FIFO (chains advance in the worker's
+                // own round order, so decode state stays in sync)
+                let mut contributions = 0u32;
+                for wid in 0..n {
+                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                        if frame.kind == FrameKind::Update {
+                            comm.record_staleness(t.saturating_sub(frame.round));
+                        }
+                        fold_frame(
+                            &frame,
+                            t,
+                            &mut chains,
+                            &mut comm,
+                            &mut train_loss,
+                            &mut rtilde,
+                        )?;
+                        if frame.kind == FrameKind::Update {
+                            contributions += 1;
+                            for i in 0..d {
+                                agg[i] += rtilde[i];
+                            }
+                        }
+                    }
+                }
+                if contributions > 0 {
+                    let scale = 1.0 / contributions as f32;
+                    for a in agg.iter_mut() {
+                        *a *= scale;
+                    }
+                }
             }
         }
 
@@ -202,6 +330,25 @@ fn run_rounds<T: MasterTransport>(
         }
     }
 
+    // bounded-staleness runs can end with late updates still in flight;
+    // drain them (every worker sends exactly `steps` frames) so worker
+    // threads never see a torn-down fabric mid-send, and account the
+    // updates the horizon cut off
+    if spec.aggregation != AggMode::FullSync {
+        for wid in 0..n {
+            while inbox.delivered[wid] < spec.steps {
+                inbox.pump(&mut transport)?;
+            }
+        }
+        let unconsumed = inbox
+            .pending
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|f| f.kind == FrameKind::Update)
+            .count();
+        comm.record_unconsumed(unconsumed as u64);
+    }
+
     let (final_test_loss, final_test_acc) = match eval.as_mut() {
         Some(f) => f(&w, (spec.eval_batches * 4).max(8), spec.steps)?,
         None => (f64::NAN, 0.0),
@@ -212,7 +359,40 @@ fn run_rounds<T: MasterTransport>(
         final_test_acc,
         final_test_loss,
         final_w_norm: crate::tensor::norm2(&w),
+        final_w: w,
     })
+}
+
+/// Decode one worker frame into its chain (updates) or account a skip.
+/// On return, `rtilde` holds the decoded r̃ for Update frames.
+fn fold_frame(
+    frame: &Frame,
+    round: u64,
+    chains: &mut [Box<dyn MasterScheme>],
+    comm: &mut CommStats,
+    train_loss: &mut LossMeter,
+    rtilde: &mut [f32],
+) -> Result<()> {
+    let wid = frame.worker as usize;
+    anyhow::ensure!(wid < chains.len(), "bad worker id {wid}");
+    match frame.kind {
+        FrameKind::Update => {
+            comm.record_message(frame.payload_bits);
+            train_loss.push(frame.loss as f64);
+            let payload = frame.as_payload();
+            // decode with the WORKER's round tag (shared-mask formats seed
+            // from it), which under staleness differs from the master round
+            chains[wid]
+                .receive(&payload, frame.round, rtilde)
+                .with_context(|| format!("round {round}: decode worker {wid}"))?;
+            for bb in chains[wid].last_block_bits() {
+                comm.record_block(&bb.name, bb.bits, bb.components);
+            }
+        }
+        FrameKind::Skip => comm.record_skip(),
+        other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
+    }
+    Ok(())
 }
 
 /// Mean loss / accuracy over `batches` held-out batches.

@@ -1,18 +1,28 @@
 //! The distributed training coordinator — the paper's system (Fig. 2) as a
-//! master + n-worker synchronous-round machine.
+//! master + n-worker round engine, pipelined and fault-tolerant.
 //!
 //! * [`worker`] — per-worker loop: shard → PJRT fwd/bwd → compression
-//!   pipeline (pure-Rust or HLO backend) → entropy encode → send; receive
-//!   broadcast → apply parameter update.
-//! * [`master`] — per-worker decode-and-predict chains, aggregation,
-//!   broadcast, LR schedule, evaluation, rate accounting.
-//! * [`launch`] — wires datasets, the channel fabric and threads together
-//!   for single-process runs; TCP deployment reuses the same loops.
+//!   pipeline (pure-Rust or HLO backend) → entropy encode → double-buffered
+//!   send (overlapping the next round's prefetch); receive broadcast →
+//!   apply parameter update. Churn injection sends skip markers for absent
+//!   rounds.
+//! * [`master`] — per-worker decode-and-predict chains, full-sync or
+//!   bounded-staleness aggregation, broadcast, LR schedule, evaluation,
+//!   rate + fabric-health accounting.
+//! * [`launch`] — wires datasets, the configured fabric (in-process
+//!   channels or real TCP sockets) and threads together for single-process
+//!   runs; multi-process TCP deployment reuses the same loops
+//!   (cli::master_serve / worker_connect).
+//!
+//! Deterministic-mode invariant (pinned by `tests/integration_tcp.rs`):
+//! with no faults injected, the same seeded run over the channel fabric
+//! and over TCP produces a bit-identical master parameter vector and
+//! identical per-worker step statistics.
 
 pub mod launch;
 pub mod master;
 pub mod worker;
 
 pub use launch::{run_training, TrainReport};
-pub use master::MasterLoop;
+pub use master::{AggMode, MasterLoop};
 pub use worker::{WorkerLoop, WorkerSummary};

@@ -4,10 +4,23 @@
 //!
 //! 1. pull (loss, gradient) from the [`GradSource`]          [phase "gradient"]
 //! 2. scheme pipeline step (momentum/EF/predict/quantize)    [phase "compress"]
-//! 3. entropy-encode ũ and send to the master                [phase "encode"]
-//! 4. receive the averaged r̃ broadcast, apply w-update       [phase "apply"]
+//! 3. entropy-encode ũ and send to the master                [phase "encode"/"send"]
+//! 4. receive the averaged r̃ broadcast, apply w-update       [phase "wait"/"apply"]
 //!
 //! Phases 1-3 are what the paper's Fig. 1 times per iteration.
+//!
+//! **Pipelined mode** (the default): step 3's send runs on a dedicated
+//! thread behind a depth-1 queue ([`crate::comm::PipelinedSender`]), and
+//! the data prefetch for round t+1 runs while round t's payload is still
+//! on the wire. Frame content and per-connection order are unchanged, so
+//! pipelined and inline runs are bit-identical — only the timing moves.
+//!
+//! **Churn injection**: rounds listed in `WorkerSpec::absent` simulate
+//! this worker leaving the compute pool — no gradient, no pipeline
+//! advance, a zero-byte [`Frame::skip`] marker upstream so the master
+//! aggregates without us — while staying subscribed to broadcasts (the
+//! parameter vector keeps tracking the master, which is what lets the
+//! worker rejoin with a chain still in sync).
 //!
 //! The gradient source is injectable: the production path wraps a
 //! thread-confined PJRT model (shard → fwd/bwd), while tests and synthetic
@@ -18,7 +31,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Frame, WorkerTransport};
+use crate::comm::{Frame, PipelinedSender, WorkerTransport};
 use crate::config::experiment::Backend;
 use crate::data::{Batch, Dataset, Shard};
 use crate::optim::LrSchedule;
@@ -37,6 +50,10 @@ pub struct WorkerSummary {
     pub e_mse_trace: Vec<f64>,
     /// trace of ‖u_t‖² (prediction-effect diagnostics)
     pub u_norm_trace: Vec<f64>,
+    /// rounds this worker sat out (fabric churn injection)
+    pub skipped_rounds: u64,
+    /// whether sends actually ran on the pipelined background stage
+    pub pipelined: bool,
 }
 
 /// Worker configuration (plain data; crosses the thread boundary).
@@ -51,6 +68,16 @@ pub struct WorkerSpec {
     pub seed: u64,
     /// Clip the gradient to this global l2 norm before Eq. (1a) (None = off).
     pub clip_norm: Option<f32>,
+    /// Overlap encode+send of round t with the prefetch of round t+1.
+    pub pipelined: bool,
+    /// Half-open round ranges [a, b) this worker sits out (churn injection).
+    pub absent: Vec<(u64, u64)>,
+}
+
+impl WorkerSpec {
+    pub fn is_absent(&self, t: u64) -> bool {
+        self.absent.iter().any(|&(a, b)| t >= a && t < b)
+    }
 }
 
 /// Produces (loss, gradient) at the current parameters for round t.
@@ -59,6 +86,8 @@ pub trait GradSource {
     /// Untimed data-pipeline work (shard indexing, batch materialization).
     /// Called before the round's "gradient" phase timer starts, so phase
     /// times measure compute only — matching the paper's Fig. 1 breakdown.
+    /// In pipelined mode this is also the work that overlaps the previous
+    /// round's in-flight send.
     fn prefetch(&mut self, _round: u64) {}
 
     fn next_grad(&mut self, w: &[f32], round: u64) -> Result<(f64, Vec<f32>)>;
@@ -179,9 +208,36 @@ impl<T: WorkerTransport> WorkerLoop<T> {
     }
 }
 
+/// Outgoing update path: inline on the loop thread, or double-buffered on
+/// the background sender stage.
+enum SendStage {
+    Inline,
+    Pipelined(PipelinedSender),
+}
+
 fn run_rounds<T: WorkerTransport>(
     spec: &WorkerSpec,
     mut transport: T,
+    source: &mut dyn GradSource,
+    w: Vec<f32>,
+    hlo: Option<CompressExec>,
+) -> Result<WorkerSummary> {
+    let result = run_rounds_inner(spec, &mut transport, source, w, hlo);
+    // liveness marker: a clean completion tells the master this endpoint
+    // goes quiet on purpose; an error turns into a prompt master-side
+    // "hung up" failure instead of a blocked round. Best-effort — the
+    // master may already be gone.
+    let marker = match &result {
+        Ok(_) => Frame::done(spec.worker_id),
+        Err(_) => Frame::abort(spec.worker_id),
+    };
+    let _ = transport.send_update(marker);
+    result
+}
+
+fn run_rounds_inner<T: WorkerTransport>(
+    spec: &WorkerSpec,
+    transport: &mut T,
     source: &mut dyn GradSource,
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
@@ -189,77 +245,181 @@ fn run_rounds<T: WorkerTransport>(
     let d = w.len();
     let mut wscheme = spec.scheme.worker(d)?;
 
+    // double-buffered send stage: fall back to inline sends when the
+    // transport cannot split (frame content is identical either way)
+    let mut stage = if spec.pipelined {
+        match transport.split_sender() {
+            Ok(sender) => SendStage::Pipelined(PipelinedSender::spawn(sender)),
+            Err(_) => SendStage::Inline,
+        }
+    } else {
+        SendStage::Inline
+    };
+    let pipelined = matches!(stage, SendStage::Pipelined(_));
+
     let mut phases = PhaseTimes::new();
     let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
     let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
     let mut losses = Vec::with_capacity(spec.steps as usize);
     let mut update = vec![0.0f32; d];
+    let mut skipped = 0u64;
 
-    for t in 0..spec.steps {
-        // 1. gradient (data prep untimed; the phase measures compute only)
-        source.prefetch(t);
-        let timer = Timer::start();
-        let (loss, mut g) = source.next_grad(&w, t)?;
-        phases.add("gradient", timer.elapsed_secs());
-        anyhow::ensure!(g.len() == d, "worker {}: gradient dim mismatch", spec.worker_id);
-        if let Some(max_norm) = spec.clip_norm {
-            let norm = crate::tensor::norm2(&g) as f32;
-            if norm > max_norm {
-                crate::tensor::scale(&mut g, max_norm / norm);
+    // the round loop runs in a closure so that EVERY exit path falls
+    // through to retiring the send stage below — the caller writes a
+    // liveness marker on this same connection afterwards, which must not
+    // interleave with an in-flight background send
+    #[allow(clippy::redundant_closure_call)]
+    let loop_result = (|| -> Result<()> {
+        source.prefetch(0);
+        for t in 0..spec.steps {
+            if spec.is_absent(t) {
+                // churn: out of the compute pool this round — announce
+                // with a skip marker, keep applying broadcasts so w stays
+                // in sync
+                skipped += 1;
+                e_mse_trace.push(0.0);
+                u_norm_trace.push(0.0);
+                let skip = Frame::skip(spec.worker_id, t);
+                send_frame(&mut stage, transport, &mut phases, skip)?;
+                if t + 1 < spec.steps {
+                    source.prefetch(t + 1);
+                }
+                recv_apply(spec, transport, &mut phases, &mut w, &mut update, t)?;
+                continue;
             }
-        }
-        anyhow::ensure!(
-            loss.is_finite(),
-            "worker {}: loss diverged (non-finite) at round {t} — lower the \
-             learning rate or add warmup",
-            spec.worker_id
-        );
-        losses.push(loss);
 
-        // 2. compression pipeline (Eq. (1))
-        let lr_ratio = lr_ratio(&spec.schedule, t);
-        let timer = Timer::start();
-        let stats = match &hlo {
-            Some(exec) => {
-                let pipe = wscheme
-                    .as_pipeline_mut()
-                    .context("HLO backend needs a single-scheme pipeline")?;
-                exec.step(pipe, &g, lr_ratio)?
+            // 1. gradient (data prep untimed; the phase measures compute)
+            let timer = Timer::start();
+            let (loss, mut g) = source.next_grad(&w, t)?;
+            phases.add("gradient", timer.elapsed_secs());
+            anyhow::ensure!(g.len() == d, "worker {}: gradient dim mismatch", spec.worker_id);
+            if let Some(max_norm) = spec.clip_norm {
+                let norm = crate::tensor::norm2(&g) as f32;
+                if norm > max_norm {
+                    crate::tensor::scale(&mut g, max_norm / norm);
+                }
             }
-            None => wscheme.step(&g, lr_ratio),
-        };
-        phases.add("compress", timer.elapsed_secs());
-        e_mse_trace.push(stats.e_mse);
-        u_norm_trace.push(stats.u_norm_sq);
+            anyhow::ensure!(
+                loss.is_finite(),
+                "worker {}: loss diverged (non-finite) at round {t} — lower the \
+                 learning rate or add warmup",
+                spec.worker_id
+            );
+            losses.push(loss);
 
-        // 3. encode + send
-        let timer = Timer::start();
-        let payload = wscheme.encode(t);
-        phases.add("encode", timer.elapsed_secs());
-        transport.send_update(Frame::update(spec.worker_id, t, payload, loss as f32))?;
+            // 2. compression pipeline (Eq. (1))
+            let lr_ratio = lr_ratio(&spec.schedule, t);
+            let timer = Timer::start();
+            let stats = match &hlo {
+                Some(exec) => {
+                    let pipe = wscheme
+                        .as_pipeline_mut()
+                        .context("HLO backend needs a single-scheme pipeline")?;
+                    exec.step(pipe, &g, lr_ratio)?
+                }
+                None => wscheme.step(&g, lr_ratio),
+            };
+            phases.add("compress", timer.elapsed_secs());
+            e_mse_trace.push(stats.e_mse);
+            u_norm_trace.push(stats.u_norm_sq);
 
-        // 4. receive averaged r̃, apply update
-        let frame = transport.recv_broadcast()?;
-        let timer = Timer::start();
-        let avg = frame.broadcast_f32(d)?;
-        let lr = spec.schedule.lr_at(t);
-        for i in 0..d {
-            update[i] = avg[i];
-            w[i] -= lr * update[i];
+            // 3. encode, then ship (inline, or handed to the sender thread)
+            let timer = Timer::start();
+            let payload = wscheme.encode(t);
+            phases.add("encode", timer.elapsed_secs());
+            send_frame(
+                &mut stage,
+                transport,
+                &mut phases,
+                Frame::update(spec.worker_id, t, payload, loss as f32),
+            )?;
+
+            // overlap window: while round t's payload is on the wire,
+            // stage the data for round t+1
+            if t + 1 < spec.steps {
+                source.prefetch(t + 1);
+            }
+
+            // 4. receive averaged r̃, apply update
+            recv_apply(spec, transport, &mut phases, &mut w, &mut update, t)?;
         }
-        phases.add("apply", timer.elapsed_secs());
-    }
+        Ok(())
+    })();
 
-    let q = (losses.len() / 4).max(1);
-    let tail = &losses[losses.len() - q..];
+    // retire the send stage on every path (success or error) BEFORE the
+    // caller touches the connection again; a send-path failure is the root
+    // cause of any enqueue error the loop saw, so it wins
+    let sender_result = match stage {
+        SendStage::Pipelined(sender) => {
+            let report = sender.finish();
+            phases.add_many("send", report.send_secs, report.frames);
+            report.result
+        }
+        SendStage::Inline => Ok(()),
+    };
+    // the "hung up" marker keeps launch-time triage preferring another
+    // worker's substantive error (a dead master is usually a symptom)
+    sender_result.with_context(|| {
+        format!("worker {}: pipelined send failed (master hung up?)", spec.worker_id)
+    })?;
+    loop_result?;
+
+    let mean_tail = if losses.is_empty() {
+        0.0
+    } else {
+        let q = (losses.len() / 4).max(1);
+        let tail = &losses[losses.len() - q..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
     Ok(WorkerSummary {
         worker_id: spec.worker_id,
         rounds: spec.steps,
         phases,
-        mean_loss_last_quarter: tail.iter().sum::<f64>() / tail.len() as f64,
+        mean_loss_last_quarter: mean_tail,
         e_mse_trace,
         u_norm_trace,
+        skipped_rounds: skipped,
+        pipelined,
     })
+}
+
+fn send_frame<T: WorkerTransport>(
+    stage: &mut SendStage,
+    transport: &mut T,
+    phases: &mut PhaseTimes,
+    frame: Frame,
+) -> Result<()> {
+    match stage {
+        SendStage::Inline => {
+            let timer = Timer::start();
+            transport.send_update(frame)?;
+            phases.add("send", timer.elapsed_secs());
+            Ok(())
+        }
+        SendStage::Pipelined(sender) => sender.enqueue(frame),
+    }
+}
+
+fn recv_apply<T: WorkerTransport>(
+    spec: &WorkerSpec,
+    transport: &mut T,
+    phases: &mut PhaseTimes,
+    w: &mut [f32],
+    update: &mut [f32],
+    t: u64,
+) -> Result<()> {
+    let timer = Timer::start();
+    let frame = transport.recv_broadcast()?;
+    phases.add("wait", timer.elapsed_secs());
+    let timer = Timer::start();
+    let avg = frame.broadcast_f32(w.len())?;
+    let lr = spec.schedule.lr_at(t);
+    for i in 0..w.len() {
+        update[i] = avg[i];
+        w[i] -= lr * update[i];
+    }
+    phases.add("apply", timer.elapsed_secs());
+    Ok(())
 }
 
 /// η_{t-1}/η_t with the paper's η_{-1} = 0 convention.
@@ -282,5 +442,23 @@ mod tests {
         assert_eq!(lr_ratio(&s, 5), 1.0);
         let dec = LrSchedule::step_decay(1.0, 0.1, 10);
         assert!((lr_ratio(&dec, 10) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn absent_windows_are_half_open() {
+        let spec = WorkerSpec {
+            worker_id: 0,
+            model: "synthetic".into(),
+            scheme: Scheme::parse("none").unwrap(),
+            backend: Backend::Rust,
+            schedule: LrSchedule::constant(0.1),
+            steps: 10,
+            seed: 0,
+            clip_norm: None,
+            pipelined: true,
+            absent: vec![(2, 4), (7, 8)],
+        };
+        let absent: Vec<u64> = (0..10).filter(|&t| spec.is_absent(t)).collect();
+        assert_eq!(absent, vec![2, 3, 7]);
     }
 }

@@ -75,21 +75,23 @@ pub struct NamedRun {
 
 /// Build a base training config for experiments (smoke-aware).
 pub fn base_config(opts: &ExpOptions, model: &str) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = model.to_string();
-    cfg.workers = if opts.smoke { 2 } else { 4 };
-    cfg.steps = if opts.smoke { 6 } else { 400 };
-    cfg.eval_every = if opts.smoke { 3 } else { 50 };
-    cfg.eval_batches = if opts.smoke { 1 } else { 4 };
-    cfg.seed = opts.seed;
-    cfg.train_len = if opts.smoke { 256 } else { 4096 };
-    cfg.test_len = if opts.smoke { 64 } else { 512 };
-    // noise=10 calibrated so the baseline reaches ~0.93 test acc in 300-400
-    // rounds while over-compressed schemes visibly lag (single-core CPU
-    // budget rules out the paper's 28-epoch ImageNet-32 runs)
-    cfg.noise = 10.0;
-    cfg.lr = 0.05;
-    cfg
+    ExperimentConfig {
+        model: model.to_string(),
+        workers: if opts.smoke { 2 } else { 4 },
+        steps: if opts.smoke { 6 } else { 400 },
+        eval_every: if opts.smoke { 3 } else { 50 },
+        eval_batches: if opts.smoke { 1 } else { 4 },
+        seed: opts.seed,
+        train_len: if opts.smoke { 256 } else { 4096 },
+        test_len: if opts.smoke { 64 } else { 512 },
+        // noise=10 calibrated so the baseline reaches ~0.93 test acc in
+        // 300-400 rounds while over-compressed schemes visibly lag
+        // (single-core CPU budget rules out the paper's 28-epoch
+        // ImageNet-32 runs)
+        noise: 10.0,
+        lr: 0.05,
+        ..ExperimentConfig::default()
+    }
 }
 
 /// Run one scheme and label it.

@@ -1,0 +1,165 @@
+//! Fabric scenario matrix — the paper's headline scheme (EF Top-K with
+//! Est-K prediction, Table I bottom section) driven through the round
+//! engine under a matrix of transport/degradation scenarios: clean channel
+//! vs clean TCP, a straggling worker (full-sync vs bounded-staleness
+//! aggregation), message drop-and-retransmit, and worker churn.
+//!
+//! Everything here uses synthetic gradient sources and the headless
+//! master, so the whole matrix runs offline (no artifacts, no PJRT) — it
+//! is the scenario-diversity companion to the accuracy experiments and
+//! doubles as the `tempo exp fabric` smoke coverage for the fabric layer.
+
+use anyhow::Result;
+
+use crate::config::FabricSpec;
+use crate::coordinator::launch::build_fabric;
+use crate::coordinator::master::{MasterLoop, MasterReport, MasterSpec};
+use crate::coordinator::worker::{WorkerLoop, WorkerSpec};
+use crate::metrics::CsvWriter;
+use crate::optim::LrSchedule;
+use crate::scheme::Scheme;
+use crate::util::{Pcg64, Timer};
+
+use super::ExpOptions;
+
+/// Run one scenario: n synthetic workers + headless master over the
+/// configured fabric. Returns the master report with fault counters
+/// merged in, plus wall seconds.
+fn run_scenario(
+    fabric: &FabricSpec,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+) -> Result<(MasterReport, f64)> {
+    let scheme = Scheme::parse("topk:k_frac=0.01/estk/ef/beta=0.9")?;
+    let schedule = LrSchedule::constant(0.05);
+    let (master_tx, workers_tx, fault_stats) = build_fabric(fabric, n)?;
+
+    let wall = Timer::start();
+    let mut handles = Vec::with_capacity(n);
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: crate::config::experiment::Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: fabric.pipelined,
+            absent: fabric.absent_for(wid),
+        };
+        let mut rng = Pcg64::new(seed, 0xFAB + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: fabric.aggregation(),
+    };
+    let mut report = MasterLoop::new(master_spec, master_tx).run_headless(d)?;
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("worker panicked"))?
+            .map_err(|e| e.context("worker failed"))?;
+    }
+    for stats in &fault_stats {
+        let s = stats.lock().unwrap();
+        report.comm.record_faults(s.retransmits, s.injected_delay_secs);
+    }
+    Ok((report, wall.elapsed_secs()))
+}
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let (d, n, steps) = if opts.smoke { (400, 2, 8u64) } else { (20_000, 4, 60u64) };
+    let half = steps / 2;
+
+    let clean = FabricSpec::default();
+    let tcp = FabricSpec { transport: crate::config::TransportKind::Tcp, ..clean.clone() };
+    let straggler = FabricSpec {
+        straggler_ms: vec![(n - 1, if opts.smoke { 2.0 } else { 5.0 })],
+        seed: opts.seed,
+        ..clean.clone()
+    };
+    let straggler_stale = FabricSpec {
+        max_staleness: 2,
+        quorum: n.saturating_sub(1).max(1),
+        ..straggler.clone()
+    };
+    let droppy = FabricSpec {
+        drop_prob: 0.2,
+        retransmit_ms: if opts.smoke { 0.5 } else { 2.0 },
+        seed: opts.seed,
+        ..clean.clone()
+    };
+    let churny = FabricSpec { churn: vec![(n - 1, half / 2, half)], ..clean.clone() };
+
+    let scenarios: Vec<(&str, FabricSpec)> = vec![
+        ("clean/channel", clean),
+        ("clean/tcp", tcp),
+        ("straggler/full-sync", straggler),
+        ("straggler/staleness=2", straggler_stale),
+        ("drop=0.2/retransmit", droppy),
+        ("churn/1-worker-out", churny),
+    ];
+
+    let path = format!("{}/fabric_matrix.csv", opts.out_dir);
+    let mut w = CsvWriter::create(
+        &path,
+        "scenario,bits_per_comp,messages,skips,retransmits,mean_staleness,\
+         unconsumed,injected_delay_s,wall_s",
+    )?;
+    println!("Fabric scenario matrix — EF Top-K + Est-K, d={d}, {n} workers, {steps} rounds");
+    println!(
+        "{:<24} {:>10} {:>6} {:>6} {:>8} {:>10} {:>8} {:>8}",
+        "scenario", "bits/comp", "msgs", "skips", "retrans", "staleness", "uncons", "wall_s"
+    );
+    for (label, fabric) in scenarios {
+        let (report, wall) = run_scenario(&fabric, d, n, steps, opts.seed)?;
+        let c = &report.comm;
+        println!(
+            "{:<24} {:>10.4} {:>6} {:>6} {:>8} {:>10.2} {:>8} {:>8.2}",
+            label,
+            c.bits_per_component(),
+            c.messages(),
+            c.skips(),
+            c.retransmits(),
+            c.mean_staleness(),
+            c.unconsumed_updates(),
+            wall
+        );
+        w.row(&format!(
+            "{label},{:.6},{},{},{},{:.4},{},{:.4},{:.3}",
+            c.bits_per_component(),
+            c.messages(),
+            c.skips(),
+            c.retransmits(),
+            c.mean_staleness(),
+            c.unconsumed_updates(),
+            c.injected_delay_secs(),
+            wall
+        ))?;
+    }
+    w.flush()?;
+    println!("  csv: {path}");
+    Ok(())
+}

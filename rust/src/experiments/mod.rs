@@ -6,6 +6,7 @@
 
 pub mod ablations;
 pub mod common;
+pub mod fabric_matrix;
 pub mod fig1_timing;
 pub mod fig3;
 pub mod fig5_divergence;
@@ -45,13 +46,14 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "fig7" => fig7::run(opts),
         "fig8" => fig8::run(opts),
         "theorem1" => theorem1::run(opts),
+        "fabric" => fabric_matrix::run(opts),
         "ablation-beta" => ablations::beta_sweep(opts),
         "ablation-block" => ablations::blockwise(opts),
         "ablation-master" => ablations::master_momentum(opts),
         "all" => {
             for id in [
-                "fig6", "fig5", "theorem1", "fig1", "fig3", "fig4", "fig7", "fig8", "table1",
-                "ablation-beta", "ablation-block", "ablation-master",
+                "fig6", "fig5", "theorem1", "fabric", "fig1", "fig3", "fig4", "fig7", "fig8",
+                "table1", "ablation-beta", "ablation-block", "ablation-master",
             ] {
                 println!("\n════════ experiment {id} ════════");
                 run(id, opts)?;

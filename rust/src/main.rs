@@ -73,6 +73,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // full registry spec string, e.g. --scheme topk:k_frac=0.01/estk/ef
         cfg.scheme = tempo::config::SchemeSpec::from_spec_str(v);
     }
+    if let Some(v) = args.flag("fabric")? {
+        // fabric override tokens, e.g. --fabric tcp,staleness=2,drop=0.01
+        cfg.fabric.apply_str(v).context("--fabric")?;
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -125,6 +129,19 @@ fn print_report(report: &launch::TrainReport) {
     println!("worker phase means (ms/iter):");
     for (name, secs) in report.phase_means() {
         println!("  {name:<10} {:>8.3}", secs * 1e3);
+    }
+    let c = &report.comm;
+    if c.skips() > 0 || c.retransmits() > 0 || c.stale_updates() > 0 {
+        println!(
+            "fabric health: skips={} retransmits={} injected_delay={:.3}s \
+             mean_staleness={:.2} (max {}) unconsumed={}",
+            c.skips(),
+            c.retransmits(),
+            c.injected_delay_secs(),
+            c.mean_staleness(),
+            c.max_staleness(),
+            c.unconsumed_updates()
+        );
     }
 }
 
@@ -182,13 +199,16 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         samples_per_round: entry.batch * cfg.workers,
         train_len: cfg.train_len,
         data_noise: cfg.noise,
+        aggregation: cfg.fabric.aggregation(),
     };
     let runtime = Runtime::new(manifest)?;
     let report = MasterLoop::new(spec, transport).run(&runtime)?;
     println!(
-        "master done: acc={:.4} bits/comp={:.4}",
+        "master done: acc={:.4} bits/comp={:.4} skips={} mean_staleness={:.2}",
         report.final_test_acc,
-        report.comm.bits_per_component()
+        report.comm.bits_per_component(),
+        report.comm.skips(),
+        report.comm.mean_staleness()
     );
     Ok(())
 }
@@ -201,7 +221,21 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
     let entry = manifest.model(&cfg.model)?.clone();
     let scheme = cfg.scheme.to_scheme()?;
     println!("worker {worker_id}: connecting to {connect}");
-    let transport = TcpWorker::connect(connect, worker_id)?;
+    let tcp = TcpWorker::connect(connect, worker_id)?;
+    // scenario injection applies to real deployments too: wrap the socket
+    // when the fabric configures stragglers or drops for this worker
+    let transport: Box<dyn tempo::comm::WorkerTransport> = if cfg.fabric.has_faults() {
+        let policy = tempo::comm::FaultPolicy::new(
+            cfg.fabric.straggler_for(worker_id as usize),
+            cfg.fabric.drop_prob,
+            cfg.fabric.retransmit_ms,
+            cfg.fabric.seed,
+            worker_id,
+        );
+        Box::new(tempo::comm::FaultInjector::new(tcp, policy))
+    } else {
+        Box::new(tcp)
+    };
     let spec = WorkerSpec {
         worker_id,
         model: cfg.model.clone(),
@@ -211,6 +245,8 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
         steps: cfg.steps,
         seed: cfg.seed,
         clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
+        pipelined: cfg.fabric.pipelined,
+        absent: cfg.fabric.absent_for(worker_id as usize),
     };
     let shard = Shard::new(worker_id as usize, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
     let dataset = launch::build_dataset(entry.kind, &entry, &cfg);

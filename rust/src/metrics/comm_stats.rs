@@ -24,7 +24,12 @@ impl BlockRate {
     }
 }
 
-/// Tracks worker→master payload sizes for one run.
+/// Tracks worker→master payload sizes for one run, plus the fabric-health
+/// counters the fault-injection and staleness machinery report: skip
+/// markers (churn), retransmits and injected delay (drop/straggler
+/// scenarios), update staleness under bounded-staleness aggregation, and
+/// per-phase worker wall-clock (encode/send/wait) merged in by the
+/// launcher.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     total_payload_bits: u64,
@@ -33,6 +38,20 @@ pub struct CommStats {
     d: usize,
     /// per-block accounting (blockwise schemes only)
     per_block: BTreeMap<String, BlockRate>,
+    /// skip markers received (worker absent — churn injection)
+    skips: u64,
+    /// simulated drop-and-retransmit events (fault injection)
+    retransmits: u64,
+    /// wall-clock the fault injectors slept across all workers
+    injected_delay_secs: f64,
+    /// staleness (master round − worker round) histogram moments
+    staleness_sum: u64,
+    staleness_max: u64,
+    stale_updates: u64,
+    /// updates still queued when a bounded-staleness run hit its horizon
+    unconsumed_updates: u64,
+    /// per-phase worker comm timing: name → (total secs, events)
+    phase_secs: BTreeMap<String, (f64, u64)>,
     /// simulated network parameters for comm-time estimates
     pub bandwidth_gbps: f64,
     pub latency_ms: f64,
@@ -59,6 +78,78 @@ impl CommStats {
         e.bits += bits;
         e.messages += 1;
         e.components = components as u64;
+    }
+
+    /// Account one skip marker (a worker sitting out a round).
+    pub fn record_skip(&mut self) {
+        self.skips += 1;
+    }
+
+    /// Account one consumed update's staleness in rounds (0 = fresh).
+    pub fn record_staleness(&mut self, lag: u64) {
+        self.staleness_sum += lag;
+        self.staleness_max = self.staleness_max.max(lag);
+        if lag > 0 {
+            self.stale_updates += 1;
+        }
+    }
+
+    /// Account updates never folded in (cut off by the run horizon).
+    pub fn record_unconsumed(&mut self, n: u64) {
+        self.unconsumed_updates += n;
+    }
+
+    /// Fold in fault-injector counters (launcher glue).
+    pub fn record_faults(&mut self, retransmits: u64, injected_delay_secs: f64) {
+        self.retransmits += retransmits;
+        self.injected_delay_secs += injected_delay_secs;
+    }
+
+    /// Fold in one worker's comm-phase wall clock (launcher glue).
+    pub fn record_phase(&mut self, name: &str, total_secs: f64, events: u64) {
+        if events == 0 {
+            return;
+        }
+        let e = self.phase_secs.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += total_secs;
+        e.1 += events;
+    }
+
+    pub fn skips(&self) -> u64 {
+        self.skips
+    }
+
+    pub fn retransmits(&self) -> u64 {
+        self.retransmits
+    }
+
+    pub fn injected_delay_secs(&self) -> f64 {
+        self.injected_delay_secs
+    }
+
+    /// Mean staleness (in rounds) over all consumed updates.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.total_messages == 0 {
+            return 0.0;
+        }
+        self.staleness_sum as f64 / self.total_messages as f64
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.staleness_max
+    }
+
+    pub fn stale_updates(&self) -> u64 {
+        self.stale_updates
+    }
+
+    pub fn unconsumed_updates(&self) -> u64 {
+        self.unconsumed_updates
+    }
+
+    /// Per-phase (name, total secs, events) comm timing, name-sorted.
+    pub fn phase_secs(&self) -> Vec<(String, f64, u64)> {
+        self.phase_secs.iter().map(|(k, &(s, n))| (k.clone(), s, n)).collect()
     }
 
     /// Per-block (name, mean bits/component) — empty for single schemes.
@@ -135,6 +226,29 @@ mod tests {
         assert_eq!(c.bits_per_component(), 0.0);
         assert_eq!(c.compression_ratio(), 0.0);
         assert!(c.block_rates().is_empty());
+    }
+
+    #[test]
+    fn fabric_health_counters() {
+        let mut c = CommStats::new(10);
+        c.record_message(100);
+        c.record_message(100);
+        c.record_skip();
+        c.record_staleness(0);
+        c.record_staleness(3);
+        c.record_unconsumed(2);
+        c.record_faults(4, 0.25);
+        c.record_phase("send", 1.0, 2);
+        c.record_phase("send", 0.5, 1);
+        c.record_phase("idle", 9.0, 0); // zero-event reports are dropped
+        assert_eq!(c.skips(), 1);
+        assert_eq!(c.retransmits(), 4);
+        assert!((c.injected_delay_secs() - 0.25).abs() < 1e-12);
+        assert!((c.mean_staleness() - 1.5).abs() < 1e-12);
+        assert_eq!(c.max_staleness(), 3);
+        assert_eq!(c.stale_updates(), 1);
+        assert_eq!(c.unconsumed_updates(), 2);
+        assert_eq!(c.phase_secs(), vec![("send".to_string(), 1.5, 3)]);
     }
 
     #[test]

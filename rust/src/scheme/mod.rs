@@ -82,6 +82,13 @@ pub trait MasterScheme: Send {
 
     /// Decode a worker payload and advance this worker's chain; writes r̃_t
     /// into `rtilde_out`.
+    ///
+    /// `round` must be the **worker's** round tag from the frame, not the
+    /// master's current round: shared-mask wire formats (Rand-K) seed the
+    /// mask from it, and under bounded-staleness aggregation the two can
+    /// differ. Calls must also arrive in the worker's own round order —
+    /// chains are stateful delay lines (the coordinator's per-worker FIFO
+    /// queues guarantee this).
     fn receive(&mut self, payload: &Payload, round: u64, rtilde_out: &mut [f32])
         -> anyhow::Result<()>;
 

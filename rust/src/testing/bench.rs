@@ -28,6 +28,20 @@ impl BenchResult {
         self.elements.map(|e| e as f64 / self.summary.mean / 1e6)
     }
 
+    /// One machine-readable JSON object (the bench-trajectory format
+    /// `scripts/ci.sh --bench` assembles into BENCH_N.json).
+    pub fn json(&self) -> String {
+        let melems = match self.throughput_melems() {
+            Some(t) => format!("{t:.3}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\": {:?}, \"iters\": {}, \"mean_secs\": {:.9e}, \"p50_secs\": {:.9e}, \
+             \"p99_secs\": {:.9e}, \"melem_per_s\": {melems}}}",
+            self.name, self.iters, self.summary.mean, self.summary.p50, self.summary.p99
+        )
+    }
+
     pub fn report_line(&self) -> String {
         let thr = match self.throughput_melems() {
             Some(t) => format!("  {:>10.1} Melem/s", t),
@@ -66,6 +80,21 @@ impl Bencher {
 
     pub fn quick() -> Self {
         Self { warmup_secs: 0.05, measure_secs: 0.2, max_iters: 100_000, ..Default::default() }
+    }
+
+    /// Smoke mode: minimal budgets for CI trajectory seeding — numbers are
+    /// noisy but the shape (which benches exist, rough magnitude) is pinned.
+    pub fn smoke() -> Self {
+        Self { warmup_secs: 0.01, measure_secs: 0.05, max_iters: 20_000, ..Default::default() }
+    }
+
+    /// Pick budgets from bench-binary CLI args (`-- --smoke`).
+    pub fn from_args(args: &crate::cli::Args) -> Self {
+        if args.has_switch("smoke") {
+            Self::smoke()
+        } else {
+            Self::new()
+        }
     }
 
     /// Benchmark `f`, which performs ONE iteration per call.
@@ -107,6 +136,32 @@ impl Bencher {
     }
 }
 
+/// Render results as a JSON array string.
+pub fn json_array(results: &[BenchResult]) -> String {
+    let items: Vec<String> = results.iter().map(|r| format!("  {}", r.json())).collect();
+    format!("[\n{}\n]\n", items.join(",\n"))
+}
+
+/// Honor `--json <path>` by writing a results array there — the single
+/// JSON-emission path every bench main (and `scripts/ci.sh --bench`) uses.
+pub fn write_json_results(results: &[BenchResult], args: &crate::cli::Args) -> anyhow::Result<()> {
+    if let Some(path) = args.flag("json")? {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, json_array(results))?;
+        println!("bench json: {path}");
+    }
+    Ok(())
+}
+
+/// Standard tail for a bench main over a [`Bencher`]'s collected results.
+pub fn maybe_write_json(b: &Bencher, args: &crate::cli::Args) -> anyhow::Result<()> {
+    write_json_results(b.results(), args)
+}
+
 /// Prevent the optimizer from eliding a value (std::hint::black_box is
 /// stable since 1.66 — thin wrapper so call sites read uniformly).
 #[inline]
@@ -127,5 +182,28 @@ mod tests {
         });
         assert!(r.summary.mean > 0.0);
         assert!(r.iters >= 10);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        let mut b = Bencher { warmup_secs: 0.005, measure_secs: 0.01, ..Default::default() };
+        let mut acc = 0u64;
+        b.bench("json/with-elements", Some(64), || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        b.bench("json/no-elements", None, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let s = json_array(b.results());
+        // shape checks (no JSON parser in the offline build): one object
+        // per bench, the expected keys, null throughput without elements
+        assert!(s.starts_with("[\n"), "{s}");
+        assert!(s.trim_end().ends_with(']'), "{s}");
+        assert_eq!(s.matches("\"name\"").count(), 2, "{s}");
+        assert_eq!(s.matches("\"mean_secs\"").count(), 2, "{s}");
+        assert_eq!(s.matches("\"p99_secs\"").count(), 2, "{s}");
+        assert_eq!(s.matches("\"melem_per_s\": null").count(), 1, "{s}");
+        // smoke budgets must stay far below the full ones
+        assert!(Bencher::smoke().measure_secs < Bencher::new().measure_secs);
     }
 }

@@ -49,6 +49,20 @@ impl PhaseTimes {
         }
     }
 
+    /// Record a pre-accumulated total of `count` events under `name`
+    /// (e.g. a background sender thread reporting once at shutdown).
+    pub fn add_many(&mut self, name: &str, total_secs: f64, count: u64) {
+        if count == 0 {
+            return;
+        }
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += total_secs;
+            e.2 += count;
+        } else {
+            self.entries.push((name.to_string(), total_secs, count));
+        }
+    }
+
     /// Time a closure and record it under `name`.
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t = Timer::start();
@@ -67,6 +81,10 @@ impl PhaseTimes {
             .find(|e| e.0 == name)
             .map(|e| if e.2 > 0 { e.1 / e.2 as f64 } else { 0.0 })
             .unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.entries.iter().find(|e| e.0 == name).map(|e| e.2).unwrap_or(0)
     }
 
     pub fn names(&self) -> impl Iterator<Item = &str> {
@@ -98,6 +116,18 @@ mod tests {
         assert_eq!(p.total("q"), 4.0);
         assert_eq!(p.mean("q"), 2.0);
         assert_eq!(p.total("missing"), 0.0);
+    }
+
+    #[test]
+    fn add_many_accumulates_counts() {
+        let mut p = PhaseTimes::new();
+        p.add("send", 1.0);
+        p.add_many("send", 3.0, 3);
+        p.add_many("noop", 1.0, 0); // zero-count reports are dropped
+        assert_eq!(p.total("send"), 4.0);
+        assert_eq!(p.count("send"), 4);
+        assert_eq!(p.mean("send"), 1.0);
+        assert_eq!(p.count("noop"), 0);
     }
 
     #[test]

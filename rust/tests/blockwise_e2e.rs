@@ -35,6 +35,8 @@ fn blockwise_scheme_end_to_end_over_channels() {
             steps,
             seed: 1,
             clip_norm: None,
+            pipelined: true,
+            absent: vec![],
         };
         handles.push(std::thread::spawn(move || {
             let mut rng = Pcg64::seeded(100 + wid as u64);
@@ -59,6 +61,7 @@ fn blockwise_scheme_end_to_end_over_channels() {
         samples_per_round: n_workers,
         train_len: 64,
         data_noise: 1.0,
+        aggregation: tempo::coordinator::AggMode::FullSync,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
 

@@ -23,7 +23,9 @@ macro_rules! require_runtime {
 #[test]
 fn smoke_pure_rust_experiments() {
     // no-PJRT drivers: fast
-    for id in ["fig5", "fig6", "theorem1", "ablation-beta", "ablation-block", "ablation-master"] {
+    for id in
+        ["fig5", "fig6", "theorem1", "fabric", "ablation-beta", "ablation-block", "ablation-master"]
+    {
         experiments::run(id, &opts(id)).unwrap_or_else(|e| panic!("{id}: {e:#}"));
     }
 }

@@ -1,41 +1,192 @@
-//! Multi-process-style deployment test: the same Worker/Master loops over
-//! the TCP transport (in-process threads, real sockets on 127.0.0.1).
-//! Skips unless `make artifacts` has been run and real PJRT is linked.
+//! TCP-fabric integration: the same Worker/Master loops over real sockets
+//! on 127.0.0.1, running fully offline with synthetic gradient sources and
+//! the headless master (no artifacts, no PJRT — tier-1).
+//!
+//! Pins the deterministic-mode invariant: with no faults injected, a
+//! seeded run over TCP is **bit-identical** to the same run over the
+//! in-process channel fabric — same master parameter vector (f32 bit
+//! patterns), same per-worker step statistics (f64 bit patterns), same
+//! payload accounting. Only the PJRT-model variant at the bottom still
+//! gates on `runtime_available()`, because only the model execution needs
+//! artifacts — the transport itself is exercised unconditionally.
 
-use std::net::TcpListener;
 use std::sync::Arc;
 
-use tempo::comm::tcp::{TcpMaster, TcpWorker};
-use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg};
-use tempo::coordinator::master::{MasterLoop, MasterSpec};
-use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
-use tempo::data::{Shard, SynthImages};
-use tempo::model::Manifest;
+use tempo::config::experiment::Backend;
+use tempo::config::{FabricSpec, TransportKind};
+use tempo::coordinator::launch::build_fabric;
+use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
 use tempo::optim::LrSchedule;
-use tempo::runtime::Runtime;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+const SPEC: &str = "topk:k=12/estk/ef/beta=0.9";
+
+/// Deterministic synthetic run over the given fabric; the gradient stream
+/// depends only on (seed, worker, round).
+fn run_synthetic(
+    fabric: &FabricSpec,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let (master_tx, workers_tx, _fault_stats) = build_fabric(fabric, n).unwrap();
+
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: fabric.pipelined,
+            absent: fabric.absent_for(wid),
+        };
+        let mut rng = Pcg64::new(seed, 1000 + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: fabric.aggregation(),
+    };
+    let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
+    let mut summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    (report, summaries)
+}
 
 #[test]
-fn tcp_training_round_trip() {
+fn tcp_four_worker_round_loop_runs_offline() {
+    let fabric = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    let (n, steps) = (4usize, 10u64);
+    let (report, summaries) = run_synthetic(&fabric, 600, n, steps, 7);
+    assert_eq!(report.comm.messages(), steps * n as u64);
+    assert!(report.comm.bits_per_component() > 0.0);
+    assert_eq!(report.comm.skips(), 0);
+    assert!(report.final_w_norm > 0.0);
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
+        assert!(s.pipelined, "TCP transport must support split senders");
+    }
+}
+
+#[test]
+fn no_fault_tcp_is_bit_identical_to_channel() {
+    let (d, n, steps, seed) = (500usize, 3usize, 12u64, 21u64);
+    let channel = FabricSpec::default();
+    let tcp = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    let (rep_a, sum_a) = run_synthetic(&channel, d, n, steps, seed);
+    let (rep_b, sum_b) = run_synthetic(&tcp, d, n, steps, seed);
+
+    // master model state: identical f32 bit patterns, component by component
+    assert_eq!(rep_a.final_w.len(), d);
+    let bits_a: Vec<u32> = rep_a.final_w.iter().map(|x| x.to_bits()).collect();
+    let bits_b: Vec<u32> = rep_b.final_w.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bits_a, bits_b, "master parameter vectors diverged across fabrics");
+
+    // payload accounting identical
+    assert_eq!(rep_a.comm.messages(), rep_b.comm.messages());
+    assert_eq!(rep_a.comm.total_bits(), rep_b.comm.total_bits());
+
+    // per-worker StepStats traces: identical f64 bit patterns
+    for (a, b) in sum_a.iter().zip(&sum_b) {
+        assert_eq!(a.worker_id, b.worker_id);
+        let ea: Vec<u64> = a.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        let eb: Vec<u64> = b.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ea, eb, "worker {} e_mse trace diverged", a.worker_id);
+        let ua: Vec<u64> = a.u_norm_trace.iter().map(|x| x.to_bits()).collect();
+        let ub: Vec<u64> = b.u_norm_trace.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ua, ub, "worker {} u_norm trace diverged", a.worker_id);
+    }
+}
+
+#[test]
+fn pipelined_and_inline_sends_are_bit_identical() {
+    let (d, n, steps, seed) = (300usize, 2usize, 10u64, 5u64);
+    let pipelined = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    let inline =
+        FabricSpec { transport: TransportKind::Tcp, pipelined: false, ..Default::default() };
+    let (rep_a, _) = run_synthetic(&pipelined, d, n, steps, seed);
+    let (rep_b, _) = run_synthetic(&inline, d, n, steps, seed);
+    let bits_a: Vec<u32> = rep_a.final_w.iter().map(|x| x.to_bits()).collect();
+    let bits_b: Vec<u32> = rep_b.final_w.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bits_a, bits_b, "double-buffered sends must not change results");
+}
+
+#[test]
+fn bounded_staleness_over_tcp_completes_with_a_straggler() {
+    let fabric = FabricSpec {
+        transport: TransportKind::Tcp,
+        max_staleness: 3,
+        quorum: 1,
+        straggler_ms: vec![(1, 3.0)],
+        seed: 11,
+        ..Default::default()
+    };
+    assert_eq!(
+        fabric.aggregation(),
+        AggMode::BoundedStaleness { max_staleness: 3, quorum: 1 }
+    );
+    let (n, steps) = (3usize, 8u64);
+    let (report, summaries) = run_synthetic(&fabric, 200, n, steps, 13);
+    // every update is either folded into some round or drained at the end
+    let folded = report.comm.messages() + report.comm.unconsumed_updates();
+    assert_eq!(folded, steps * n as u64);
+    assert!(report.comm.max_staleness() <= 3);
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
+    }
+}
+
+/// PJRT-model variant of the TCP round trip. Only the model execution
+/// gates on artifacts; everything above runs unconditionally.
+#[test]
+fn tcp_training_round_trip_with_pjrt_models() {
     if !tempo::testing::runtime_available() {
         eprintln!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
         return;
     }
+    use tempo::comm::tcp::{TcpMaster, TcpWorker};
+    use tempo::data::{Shard, SynthImages};
+    use tempo::model::Manifest;
+    use tempo::runtime::Runtime;
+
     let manifest = Manifest::load_default().unwrap();
     let entry = manifest.model("mlp_tiny").unwrap().clone();
-    let d = entry.d;
     let n_workers = 2usize;
     let steps = 6u64;
-    let scheme = SchemeCfg::new(
-        QuantizerKind::TopK { k: d / 100 },
-        PredictorKind::EstK,
-        true,
-        0.9,
-    )
-    .unwrap()
-    .to_scheme();
+    let scheme = Scheme::parse("topk:k_frac=0.01/estk/ef/beta=0.9").unwrap();
     let schedule = LrSchedule::constant(0.05);
 
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
 
     let mut worker_threads = Vec::new();
@@ -44,11 +195,13 @@ fn tcp_training_round_trip() {
             worker_id: wid as u32,
             model: "mlp_tiny".into(),
             scheme: scheme.clone(),
-            backend: tempo::config::experiment::Backend::Rust,
+            backend: Backend::Rust,
             schedule,
             steps,
             seed: 7,
             clip_norm: None,
+            pipelined: true,
+            absent: vec![],
         };
         let manifest = manifest.clone();
         let entry = entry.clone();
@@ -72,6 +225,7 @@ fn tcp_training_round_trip() {
         samples_per_round: entry.batch * n_workers,
         train_len: 512,
         data_noise: 4.0,
+        aggregation: AggMode::FullSync,
     };
     let transport = TcpMaster::from_listener(listener, n_workers).unwrap();
     let runtime = Runtime::new(manifest).unwrap();

@@ -16,17 +16,18 @@ macro_rules! require_runtime {
 }
 
 fn quick_cfg(model: &str) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.model = model.into();
-    cfg.workers = 2;
-    cfg.steps = 24;
-    cfg.eval_every = 12;
-    cfg.eval_batches = 2;
-    cfg.train_len = 512;
-    cfg.noise = 4.0; // easy setting: loss must fall fast
-    cfg.lr = 0.05;
-    cfg.seed = 42;
-    cfg
+    ExperimentConfig {
+        model: model.into(),
+        workers: 2,
+        steps: 24,
+        eval_every: 12,
+        eval_batches: 2,
+        train_len: 512,
+        noise: 4.0, // easy setting: loss must fall fast
+        lr: 0.05,
+        seed: 42,
+        ..ExperimentConfig::default()
+    }
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! Property tests over the length-prefixed frame codec (`comm::framed`) —
+//! the one wire format every byte-stream transport shares. TCP delivers
+//! arbitrary re-chunkings of the byte stream, so the codec must survive
+//! partial reads and split writes of ANY granularity, reject oversized
+//! length prefixes before allocating, and error (not hang, not
+//! mis-parse) on truncation.
+
+use std::io::{Read, Write};
+
+use tempo::comm::framed::{read_frame, write_frame, MAX_FRAME_BYTES};
+use tempo::comm::{Frame, FrameKind};
+use tempo::testing::prop::{check, Gen, PropConfig};
+
+fn cfgp(cases: u32) -> PropConfig {
+    PropConfig { cases, seed: 0xF4A3, max_size: 300 }
+}
+
+/// Writer that accepts at most `chunk` bytes per call.
+struct ChunkWriter {
+    buf: Vec<u8>,
+    chunk: usize,
+}
+
+impl Write for ChunkWriter {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        let n = data.len().min(self.chunk.max(1));
+        self.buf.extend_from_slice(&data[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Reader that returns at most `chunk` bytes per call.
+struct ChunkReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    chunk: usize,
+}
+
+impl Read for ChunkReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        let n = out.len().min(self.chunk.max(1)).min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn arbitrary_frame(g: &mut Gen) -> Frame {
+    let kind = *g.pick(&[FrameKind::Update, FrameKind::Broadcast, FrameKind::Skip]);
+    let nbytes = g.usize_in(0, 600);
+    Frame {
+        kind,
+        worker: (g.u64() & 0xFFFF) as u32,
+        round: g.u64(),
+        payload_tag: (g.u64() & 0x7) as u8,
+        bytes: (0..nbytes).map(|_| (g.u64() & 0xFF) as u8).collect(),
+        payload_bits: g.u64() & 0xFFFF_FFFF,
+        loss: g.gaussian_f32(),
+    }
+}
+
+#[test]
+fn prop_roundtrip_survives_any_chunking() {
+    check(cfgp(120), |g| {
+        let frame = arbitrary_frame(g);
+        let wchunk = g.usize_in(1, 64);
+        let rchunk = g.usize_in(1, 64);
+        let mut w = ChunkWriter { buf: Vec::new(), chunk: wchunk };
+        write_frame(&mut w, &frame).map_err(|e| format!("write: {e:#}"))?;
+        let mut r = ChunkReader { buf: &w.buf, pos: 0, chunk: rchunk };
+        let back = read_frame(&mut r).map_err(|e| format!("read: {e:#}"))?;
+        if back.kind != frame.kind
+            || back.worker != frame.worker
+            || back.round != frame.round
+            || back.payload_tag != frame.payload_tag
+            || back.payload_bits != frame.payload_bits
+            || back.bytes != frame.bytes
+            || back.loss.to_bits() != frame.loss.to_bits()
+        {
+            return Err(format!(
+                "roundtrip mismatch at write-chunk {wchunk}, read-chunk {rchunk}"
+            ));
+        }
+        if r.pos != w.buf.len() {
+            return Err("reader left trailing bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multiple_frames_stream_back_to_back() {
+    check(cfgp(60), |g| {
+        let frames: Vec<Frame> = (0..g.usize_in(1, 6)).map(|_| arbitrary_frame(g)).collect();
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).map_err(|e| format!("write: {e:#}"))?;
+        }
+        let mut r = ChunkReader { buf: &buf, pos: 0, chunk: g.usize_in(1, 16) };
+        for (i, f) in frames.iter().enumerate() {
+            let back = read_frame(&mut r).map_err(|e| format!("read {i}: {e:#}"))?;
+            if back.bytes != f.bytes || back.round != f.round {
+                return Err(format!("frame {i} corrupted in the stream"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncations_error_cleanly() {
+    check(cfgp(80), |g| {
+        let frame = arbitrary_frame(g);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).map_err(|e| format!("write: {e:#}"))?;
+        let cut = g.usize_in(0, buf.len().saturating_sub(1));
+        let mut r = ChunkReader { buf: &buf[..cut], pos: 0, chunk: 8 };
+        if read_frame(&mut r).is_ok() {
+            return Err(format!("truncation to {cut}/{} bytes parsed as a frame", buf.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_oversized_prefix_rejected_before_allocation() {
+    check(cfgp(40), |g| {
+        let over = MAX_FRAME_BYTES + 1 + (g.u64() & 0xFFFF);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&over.to_le_bytes());
+        buf.extend_from_slice(&vec![0u8; g.usize_in(0, 64)]);
+        let err = match read_frame(&mut buf.as_slice()) {
+            Ok(_) => return Err("oversized frame accepted".into()),
+            Err(e) => format!("{e:#}"),
+        };
+        if !err.contains("frame too large") {
+            return Err(format!("wrong rejection: {err}"));
+        }
+        Ok(())
+    });
+}

@@ -1,31 +1,86 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point (documented in ROADMAP.md / DESIGN.md).
 #
-#   scripts/ci.sh          # fmt + clippy + release build + tests
-#   scripts/ci.sh --fast   # skip fmt/clippy (build + tests only)
+#   scripts/ci.sh            # fmt + clippy + release build + tests
+#   scripts/ci.sh --fast     # skip fmt/clippy (build + tests only)
+#   scripts/ci.sh --bench    # run the [[bench]] targets in smoke mode and
+#                            # write machine-readable BENCH_<N>.json
 #
 # Everything runs offline: the workspace vendors `anyhow` and stubs the
-# `xla` PJRT bindings (rust/vendor/README.md); integration tests that need
-# real artifacts self-skip with a SKIP message.
+# `xla` PJRT bindings (rust/vendor/README.md); integration tests and the
+# PJRT benches self-skip with a SKIP message when artifacts are absent.
+#
+# Every phase is wall-clocked; the summary lines are grep-able as
+# `^ci-phase ` (CI surfaces them without parsing cargo output).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-FAST=0
-if [[ "${1:-}" == "--fast" ]]; then
-    FAST=1
+MODE="full"
+case "${1:-}" in
+    --fast)  MODE="fast" ;;
+    --bench) MODE="bench" ;;
+    "")      ;;
+    *) echo "usage: scripts/ci.sh [--fast|--bench]" >&2; exit 2 ;;
+esac
+
+PHASE_NAMES=()
+PHASE_SECS=()
+
+phase() {
+    local name="$1"
+    shift
+    echo "== $name: $* =="
+    local t0 t1
+    t0=$(date +%s.%N)
+    "$@"
+    t1=$(date +%s.%N)
+    PHASE_NAMES+=("$name")
+    PHASE_SECS+=("$(awk -v a="$t0" -v b="$t1" 'BEGIN { printf "%.1f", b - a }')")
+}
+
+summary() {
+    echo
+    for i in "${!PHASE_NAMES[@]}"; do
+        printf 'ci-phase %-12s %8ss\n' "${PHASE_NAMES[$i]}" "${PHASE_SECS[$i]}"
+    done
+}
+
+if [[ "$MODE" == "bench" ]]; then
+    # Bench trajectory: run every [[bench]] target in smoke mode, collect
+    # per-bench mean/p50/p99 + Melem/s, and assemble BENCH_<N>.json at the
+    # repo root (N = current PR sequence number; bump when seeding anew).
+    BENCH_OUT="BENCH_2.json"
+    JSON_DIR="target/bench-json"
+    mkdir -p "$JSON_DIR"
+    BENCHES=(coding pipeline runtime paper_tables)
+    for bench in "${BENCHES[@]}"; do
+        phase "bench-$bench" \
+            cargo bench --bench "$bench" -- --smoke --json="$JSON_DIR/$bench.json"
+    done
+    {
+        printf '{\n  "schema": "tempo-bench-v1",\n  "mode": "smoke",\n  "benches": {\n'
+        first=1
+        for bench in "${BENCHES[@]}"; do
+            [[ "$first" -eq 0 ]] && printf ',\n'
+            first=0
+            # each file already holds a JSON array; embed it verbatim
+            printf '    "%s": ' "$bench"
+            cat "$JSON_DIR/$bench.json"
+        done
+        printf '\n  }\n}\n'
+    } > "$BENCH_OUT"
+    summary
+    echo "ci.sh: bench trajectory written to $BENCH_OUT"
+    exit 0
 fi
 
-if [[ "$FAST" -eq 0 ]]; then
-    echo "== cargo fmt --check =="
-    cargo fmt --check
-    echo "== cargo clippy (deny warnings) =="
-    cargo clippy --workspace --all-targets -- -D warnings
+if [[ "$MODE" == "full" ]]; then
+    phase "fmt" cargo fmt --check
+    phase "clippy" cargo clippy --workspace --all-targets -- -D warnings
 fi
 
-echo "== cargo build --release =="
-cargo build --release
+phase "build" cargo build --release --workspace
+phase "test" cargo test -q --workspace
 
-echo "== cargo test -q =="
-cargo test -q
-
+summary
 echo "ci.sh: all green"
