@@ -1,8 +1,12 @@
 //! Coding-layer micro-benchmarks: bit I/O, Golomb index coding, payload
-//! encode/decode throughput at realistic (d, K).
+//! encode/decode throughput at realistic (d, K) — both the allocating
+//! paths and the reusable-buffer (`_into`/`_view`) hot paths.
 
 use tempo::cli::Args;
-use tempo::coding::{decode_payload, encode_payload, golomb, BitReader, BitWriter, PayloadKind};
+use tempo::coding::{
+    decode_payload, decode_payload_view, encode_payload, encode_sparse_payload_into, golomb,
+    BitReader, BitWriter, Payload, PayloadKind,
+};
 use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
 
@@ -22,7 +26,7 @@ fn sparse_vec(d: usize, k: usize, seed: u64) -> Vec<f32> {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let mut b = Bencher::from_args(&args);
+    let mut b = Bencher::from_args(&args)?;
     println!("== coding micro-benchmarks ==");
 
     // raw bit IO
@@ -75,6 +79,12 @@ fn main() -> anyhow::Result<()> {
             let mut r = BitReader::new(&enc);
             black_box(golomb::decode_indices(&mut r, k).unwrap());
         });
+        let mut idx_out = Vec::new();
+        b.bench(&format!("golomb/decode_into d={d} k={k}"), Some(k as u64), || {
+            let mut r = BitReader::new(&enc);
+            golomb::decode_indices_into(&mut r, k, &mut idx_out).unwrap();
+            black_box(&idx_out);
+        });
     }
 
     // full payload paths (the per-round wire cost at mlp_tiny scale)
@@ -84,10 +94,26 @@ fn main() -> anyhow::Result<()> {
     b.bench("payload/topk encode d=98666 k=197", Some(d as u64), || {
         black_box(encode_payload(PayloadKind::SparseValues, &utilde, 0));
     });
+    let support: Vec<u32> = (0..d as u32).filter(|&i| utilde[i as usize] != 0.0).collect();
+    let mut slot = Payload::empty();
+    b.bench("payload/topk encode_support d=98666 k=197", Some(d as u64), || {
+        black_box(encode_sparse_payload_into(
+            PayloadKind::SparseValues,
+            &utilde,
+            &support,
+            &mut slot,
+        ));
+    });
     let p = encode_payload(PayloadKind::SparseValues, &utilde, 0);
     let mut out = Vec::new();
     b.bench("payload/topk decode d=98666 k=197", Some(d as u64), || {
         decode_payload(PayloadKind::SparseValues, &p, d, 0, &mut out).unwrap();
+        black_box(&out);
+    });
+    let mut idx_scratch = Vec::new();
+    b.bench("payload/topk decode_view d=98666 k=197", Some(d as u64), || {
+        decode_payload_view(PayloadKind::SparseValues, p.view(), d, 0, &mut out, &mut idx_scratch)
+            .unwrap();
         black_box(&out);
     });
     let mut rng = Pcg64::seeded(4);

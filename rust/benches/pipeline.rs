@@ -1,15 +1,18 @@
 //! Compression-pipeline benchmarks: the L3 hot path per scheme at model
-//! scale (d = 98,666 — mlp_tiny; d = 864,512 — lm_small).
+//! scale (d = 98,666 — mlp_tiny; d = 864,512 — lm_small), including the
+//! zero-allocation encode/decode round path (`encode_into` / `receive`).
 
 use tempo::cli::Args;
+use tempo::coding::Payload;
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use tempo::scheme::{MasterScheme, WorkerScheme};
 use tempo::tensor::select_topk_indices;
 use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
-    let mut b = Bencher::from_args(&args);
+    let mut b = Bencher::from_args(&args)?;
     println!("== compression pipeline benchmarks ==");
 
     // smoke mode drops the large-model dimension: trajectory seeding only
@@ -50,6 +53,30 @@ fn main() -> anyhow::Result<()> {
                 t += 1;
             });
         }
+
+        // the wire hot path: encode after a step, allocating scan vs the
+        // reusable sparse-support fast path, plus the master-side fused
+        // decode-and-predict receive
+        let cfg =
+            SchemeCfg::new(QuantizerKind::TopK { k }, PredictorKind::EstK, true, 0.99).unwrap();
+        let scheme = cfg.to_scheme();
+        let mut worker = scheme.worker(d).unwrap();
+        worker.step(&g, 0.0);
+        b.bench(&format!("pipeline/encode topk alloc d={d} k={k}"), Some(d as u64), || {
+            black_box(worker.encode(0));
+        });
+        let mut slot = Payload::empty();
+        b.bench(&format!("pipeline/encode topk into d={d} k={k}"), Some(d as u64), || {
+            worker.encode_into(0, &mut slot);
+            black_box(&slot);
+        });
+        let mut master = scheme.master(d).unwrap();
+        let mut rtilde = vec![0.0f32; d];
+        let payload = worker.encode(0);
+        b.bench(&format!("pipeline/master receive topk d={d} k={k}"), Some(d as u64), || {
+            master.receive(&payload, 0, &mut rtilde).unwrap();
+            black_box(&rtilde);
+        });
     }
     maybe_write_json(&b, &args)
 }

@@ -17,12 +17,12 @@ fn main() -> anyhow::Result<()> {
         // report the skip and still emit a (empty) JSON array so the
         // trajectory file has a slot for this target
         println!("SKIP: PJRT artifacts unavailable (run `make artifacts`)");
-        let b = Bencher::from_args(&args);
+        let b = Bencher::from_args(&args)?;
         return maybe_write_json(&b, &args);
     }
     let manifest = Manifest::load_default()?;
     let runtime = Runtime::new(manifest.clone())?;
-    let mut b = Bencher::from_args(&args);
+    let mut b = Bencher::from_args(&args)?;
     if !args.has_switch("smoke") {
         b.measure_secs = 2.0;
     }

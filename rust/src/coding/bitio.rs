@@ -22,18 +22,29 @@ impl BitWriter {
         Self { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
     }
 
+    /// Writer over a recycled buffer: clears `buf` but keeps its capacity —
+    /// the steady-state zero-allocation encode path (buffers round-trip
+    /// through `finish` and back in here).
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf, acc: 0, nbits: 0 }
+    }
+
     /// Write the low `n` bits of `v` (n <= 57 per call to keep the
     /// accumulator spill simple; larger fields go through `put_u64`).
     #[inline]
     pub fn put_bits(&mut self, v: u64, n: u32) {
         debug_assert!(n <= 57, "put_bits supports up to 57 bits per call");
-        debug_assert!(n == 64 || v < (1u64 << n), "value {v} wider than {n} bits");
+        debug_assert!(v < (1u64 << n), "value {v} wider than {n} bits");
         self.acc |= v << self.nbits;
         self.nbits += n;
-        while self.nbits >= 8 {
-            self.buf.push(self.acc as u8);
-            self.acc >>= 8;
-            self.nbits -= 8;
+        if self.nbits >= 8 {
+            // spill every whole byte in one append: LSB-first accumulator
+            // order is exactly little-endian byte order
+            let nbytes = (self.nbits / 8) as usize;
+            self.buf.extend_from_slice(&self.acc.to_le_bytes()[..nbytes]);
+            self.nbits -= nbytes as u32 * 8;
+            self.acc = if nbytes == 8 { 0 } else { self.acc >> (nbytes * 8) };
         }
     }
 
@@ -98,6 +109,23 @@ impl<'a> BitReader<'a> {
 
     #[inline]
     fn refill(&mut self) {
+        if self.nbits > 56 {
+            return;
+        }
+        if self.buf.len() - self.byte_pos >= 8 {
+            // u64-peek fast path: one unaligned little-endian load instead
+            // of a byte loop; mask to the bytes actually consumed so the
+            // "bits above nbits are zero" accumulator invariant holds
+            let word = u64::from_le_bytes(
+                self.buf[self.byte_pos..self.byte_pos + 8].try_into().unwrap(),
+            );
+            let take = ((64 - self.nbits) / 8) as usize; // 1..=8
+            let w = if take == 8 { word } else { word & ((1u64 << (take * 8)) - 1) };
+            self.acc |= w << self.nbits;
+            self.byte_pos += take;
+            self.nbits += take as u32 * 8;
+            return;
+        }
         while self.nbits <= 56 && self.byte_pos < self.buf.len() {
             self.acc |= (self.buf[self.byte_pos] as u64) << self.nbits;
             self.byte_pos += 1;
@@ -142,14 +170,41 @@ impl<'a> BitReader<'a> {
             let tz = self.acc.trailing_zeros().min(self.nbits);
             if tz < self.nbits {
                 n += tz as u64;
-                self.acc >>= tz + 1;
-                self.nbits -= tz + 1;
+                // tz can be 63 with a full 64-bit accumulator (terminator
+                // on the top bit): guard the then-undefined 64-bit shift
+                let shift = tz + 1;
+                self.acc = if shift == 64 { 0 } else { self.acc >> shift };
+                self.nbits -= shift;
                 return Ok(n);
             }
             n += tz as u64;
             self.acc = 0;
             self.nbits = 0;
         }
+    }
+
+    /// Fused Rice read: unary quotient then `b` fixed remainder bits,
+    /// usually consumed from one accumulator refill (the batched decode
+    /// fast path for Golomb gap streams). Bit-identical to
+    /// `(get_unary()?, get_bits(b)?)`.
+    #[inline]
+    pub fn get_unary_then_bits(&mut self, b: u32) -> Result<(u64, u64)> {
+        debug_assert!(b <= 57);
+        self.refill();
+        if self.acc != 0 {
+            let tz = self.acc.trailing_zeros();
+            if tz < self.nbits && tz + 1 + b <= self.nbits {
+                // whole code visible in the accumulator: one-step consume
+                let rem = if b == 0 { 0 } else { (self.acc >> (tz + 1)) & ((1u64 << b) - 1) };
+                let shift = tz + 1 + b;
+                self.acc = if shift == 64 { 0 } else { self.acc >> shift };
+                self.nbits -= shift;
+                return Ok((tz as u64, rem));
+            }
+        }
+        let q = self.get_unary()?;
+        let rem = if b > 0 { self.get_bits(b)? } else { 0 };
+        Ok((q, rem))
     }
 
     pub fn get_u32(&mut self) -> Result<u32> {
@@ -195,6 +250,24 @@ mod tests {
     }
 
     #[test]
+    fn unary_terminator_on_accumulator_top_bit() {
+        // 63 zeros then the one, starting byte-aligned: the refill loads a
+        // full 64-bit accumulator (nbits = 64) whose only set bit is bit 63
+        // — the shift-by-64 guard in get_unary must handle it
+        let mut w = BitWriter::new();
+        w.put_unary(63);
+        w.put_bits(0b1011, 4); // trailing data must decode cleanly after
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_unary().unwrap(), 63);
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+        // same stream through the fused reader
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_unary_then_bits(0).unwrap(), (63, 0));
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+    }
+
+    #[test]
     fn roundtrip_unary() {
         for n in [0u64, 1, 7, 8, 31, 32, 33, 100, 1000] {
             let mut w = BitWriter::new();
@@ -225,6 +298,85 @@ mod tests {
             let mut r = BitReader::new(&bytes);
             for (v, n) in fields {
                 assert_eq!(r.get_bits(n).unwrap(), v);
+            }
+        }
+    }
+
+    #[test]
+    fn property_all_widths_roundtrip_boundary_values() {
+        // satellite of the put_bits contract: every legal width 1..=57 at
+        // its boundary values (0, 1, max, max-1, half) round-trips, in one
+        // mixed stream so accumulator spills cross every byte phase
+        let mut fields: Vec<(u64, u32)> = Vec::new();
+        for n in 1..=57u32 {
+            let max = (1u64 << n) - 1;
+            for v in [0u64, 1, max, max.saturating_sub(1), max >> 1] {
+                fields.push((v, n));
+            }
+        }
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.put_bits(v, n);
+        }
+        let expect_bits: u64 = fields.iter().map(|&(_, n)| n as u64).sum();
+        assert_eq!(w.bit_len(), expect_bits);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &fields {
+            assert_eq!(r.get_bits(n).unwrap(), v, "width {n} value {v}");
+        }
+        assert_eq!(r.bit_pos(), expect_bits);
+    }
+
+    #[test]
+    fn from_vec_recycles_capacity_and_matches_fresh_writer() {
+        let mut w = BitWriter::new();
+        w.put_u32(0xAABBCCDD);
+        w.put_bits(0x15, 5);
+        let first = w.finish();
+        let cap = first.capacity();
+        let ptr = first.as_ptr();
+        let mut w = BitWriter::from_vec(first);
+        w.put_u32(0xAABBCCDD);
+        w.put_bits(0x15, 5);
+        let second = w.finish();
+        let mut fresh = BitWriter::new();
+        fresh.put_u32(0xAABBCCDD);
+        fresh.put_bits(0x15, 5);
+        assert_eq!(second, fresh.finish());
+        assert_eq!(second.capacity(), cap, "recycled buffer must keep its capacity");
+        assert_eq!(second.as_ptr(), ptr, "recycled buffer must not reallocate");
+    }
+
+    #[test]
+    fn fused_unary_then_bits_matches_split_reads() {
+        let mut rng = Pcg64::seeded(14);
+        for trial in 0..40 {
+            let b = (trial % 9) as u32; // remainder widths 0..=8
+            let vals: Vec<(u64, u64)> = (0..300)
+                .map(|_| {
+                    // occasionally huge quotients to force the slow path
+                    let q = if rng.below(20) == 0 { 60 + rng.below(200) } else { rng.below(12) };
+                    let rem = if b == 0 { 0 } else { rng.next_u64() & ((1 << b) - 1) };
+                    (q, rem)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(q, rem) in &vals {
+                w.put_unary(q);
+                if b > 0 {
+                    w.put_bits(rem, b);
+                }
+            }
+            let bytes = w.finish();
+            let mut fused = BitReader::new(&bytes);
+            let mut split = BitReader::new(&bytes);
+            for &(q, rem) in &vals {
+                assert_eq!(fused.get_unary_then_bits(b).unwrap(), (q, rem), "b={b}");
+                let sq = split.get_unary().unwrap();
+                let srem = if b > 0 { split.get_bits(b).unwrap() } else { 0 };
+                assert_eq!((sq, srem), (q, rem));
+                assert_eq!(fused.bit_pos(), split.bit_pos());
             }
         }
     }

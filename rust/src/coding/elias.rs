@@ -8,10 +8,16 @@ use anyhow::Result;
 
 use super::bitio::{BitReader, BitWriter};
 
-/// Elias-γ encode of n >= 1.
+/// Elias-γ encode of n >= 1. Codes for n < 2^29 (every payload header in
+/// practice) are fused into a single accumulator append.
 pub fn gamma_encode(w: &mut BitWriter, n: u64) {
     assert!(n >= 1, "Elias gamma requires n >= 1");
     let nbits = 63 - n.leading_zeros(); // floor(log2 n)
+    if 2 * nbits + 1 <= 57 {
+        let low = n & ((1u64 << nbits) - 1);
+        w.put_bits((1u64 << nbits) | (low << (nbits + 1)), 2 * nbits + 1);
+        return;
+    }
     w.put_unary(nbits as u64);
     if nbits > 0 {
         w.put_bits(n & ((1u64 << nbits) - 1), nbits);

@@ -23,10 +23,18 @@ pub fn rice_param_for_density(k: usize, d: usize) -> u32 {
 }
 
 /// Encode one non-negative value with Rice parameter b: quotient in unary,
-/// remainder in b fixed bits.
+/// remainder in b fixed bits. Short codes (the common case: expected
+/// quotient ≈ 1) are fused into a single accumulator append.
 #[inline]
 pub fn rice_encode(w: &mut BitWriter, v: u64, b: u32) {
     let q = v >> b;
+    if q + 1 + b as u64 <= 57 {
+        // one put_bits call per gap: q zeros, the terminating one, then the
+        // remainder — LSB-first, so the unary part occupies the low bits
+        let rem = if b == 0 { 0 } else { v & ((1u64 << b) - 1) };
+        w.put_bits((1u64 << q) | (rem << (q + 1)), (q + 1) as u32 + b);
+        return;
+    }
     w.put_unary(q);
     if b > 0 {
         w.put_bits(v & ((1u64 << b) - 1), b);
@@ -35,8 +43,7 @@ pub fn rice_encode(w: &mut BitWriter, v: u64, b: u32) {
 
 #[inline]
 pub fn rice_decode(r: &mut BitReader, b: u32) -> Result<u64> {
-    let q = r.get_unary()?;
-    let rem = if b > 0 { r.get_bits(b)? } else { 0 };
+    let (q, rem) = r.get_unary_then_bits(b)?;
     Ok((q << b) | rem)
 }
 
@@ -61,8 +68,17 @@ pub fn encode_indices(w: &mut BitWriter, indices: &[u32], d: usize) -> u32 {
 
 /// Decode `count` indices written by [`encode_indices`].
 pub fn decode_indices(r: &mut BitReader, count: usize) -> Result<Vec<u32>> {
-    let b = r.get_bits(5)? as u32;
     let mut out = Vec::with_capacity(count);
+    decode_indices_into(r, count, &mut out)?;
+    Ok(out)
+}
+
+/// Decode into a caller-owned buffer (cleared first) — the zero-allocation
+/// decode path once the buffer has grown to its steady-state capacity.
+pub fn decode_indices_into(r: &mut BitReader, count: usize, out: &mut Vec<u32>) -> Result<()> {
+    out.clear();
+    out.reserve(count);
+    let b = r.get_bits(5)? as u32;
     let mut prev: i64 = -1;
     for _ in 0..count {
         let gap = rice_decode(r, b)? as i64;
@@ -71,7 +87,7 @@ pub fn decode_indices(r: &mut BitReader, count: usize) -> Result<Vec<u32>> {
         out.push(idx as u32);
         prev = idx;
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -152,6 +168,43 @@ mod tests {
                 bits < entropy * 1.15 + 64.0,
                 "p={p}: rate {bits:.0} vs entropy {entropy:.0}"
             );
+        }
+    }
+
+    #[test]
+    fn fused_encode_matches_split_encode_across_quotients() {
+        // values straddling the fused-path cutoff (q + 1 + b <= 57)
+        for b in [0u32, 3, 10, 30] {
+            let vals: Vec<u64> = (0..64u64)
+                .map(|q| (q << b) | (if b > 0 { q & ((1u64 << b) - 1) } else { 0 }))
+                .collect();
+            let mut fused = BitWriter::new();
+            for &v in &vals {
+                rice_encode(&mut fused, v, b);
+            }
+            let mut split = BitWriter::new();
+            for &v in &vals {
+                split.put_unary(v >> b);
+                if b > 0 {
+                    split.put_bits(v & ((1u64 << b) - 1), b);
+                }
+            }
+            assert_eq!(fused.bit_len(), split.bit_len(), "b={b}");
+            assert_eq!(fused.finish(), split.finish(), "b={b}");
+        }
+    }
+
+    #[test]
+    fn decode_into_matches_and_reuses_the_buffer() {
+        let idx: Vec<u32> = (0..500).map(|i| i * 7 + (i % 3)).collect();
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, &idx, 4000);
+        let bytes = w.finish();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let mut r = BitReader::new(&bytes);
+            decode_indices_into(&mut r, idx.len(), &mut out).unwrap();
+            assert_eq!(out, idx);
         }
     }
 

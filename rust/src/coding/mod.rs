@@ -17,4 +17,7 @@ pub mod golomb;
 pub mod payload;
 
 pub use bitio::{BitReader, BitWriter};
-pub use payload::{decode_payload, encode_payload, Payload, PayloadKind};
+pub use payload::{
+    decode_payload, decode_payload_view, encode_payload, encode_payload_into,
+    encode_sparse_payload_into, Payload, PayloadKind, PayloadRef,
+};

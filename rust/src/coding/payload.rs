@@ -42,6 +42,35 @@ pub struct Payload {
     pub bits: u64,
 }
 
+impl Payload {
+    /// Empty payload shell — the reusable slot `encode_payload_into` fills
+    /// (its byte buffer keeps whatever capacity it has accumulated).
+    pub fn empty() -> Self {
+        Payload { kind_tag: 0, bytes: Vec::new(), bits: 0 }
+    }
+
+    /// Borrowed view for the decode path.
+    pub fn view(&self) -> PayloadRef<'_> {
+        PayloadRef { kind_tag: self.kind_tag, bytes: &self.bytes, bits: self.bits }
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+/// Borrowed view of a payload (no byte ownership) — what the master-side
+/// decode chains consume, so the blockwise container can hand out
+/// sub-payload slices without copying them into fresh allocations.
+#[derive(Clone, Copy, Debug)]
+pub struct PayloadRef<'a> {
+    pub kind_tag: u8,
+    pub bytes: &'a [u8],
+    pub bits: u64,
+}
+
 const TAG_DENSE: u8 = 0;
 const TAG_SPARSE: u8 = 1;
 const TAG_TWOPOINT: u8 = 2;
@@ -62,55 +91,68 @@ fn tag_of(kind: PayloadKind) -> u8 {
 ///
 /// `round` is only used by `MaskedValues` (the shared selection seed).
 pub fn encode_payload(kind: PayloadKind, utilde: &[f32], round: u64) -> Payload {
-    let d = utilde.len();
+    let mut out = Payload::empty();
+    out.bytes = Vec::with_capacity(encode_capacity_hint(kind, utilde.len()));
+    let mut idx = Vec::new();
+    encode_payload_into(kind, utilde, round, &mut out, &mut idx);
+    out
+}
+
+fn encode_capacity_hint(kind: PayloadKind, d: usize) -> usize {
     match kind {
+        PayloadKind::Dense => 4 * d + 8,
+        PayloadKind::Sign => d / 8 + 8,
+        _ => d / 4 + 24,
+    }
+}
+
+/// Encode into a reusable payload slot (`out.bytes` keeps its capacity) and
+/// a reusable index scratch — the zero-allocation steady-state path.
+/// Byte-identical to [`encode_payload`].
+pub fn encode_payload_into(
+    kind: PayloadKind,
+    utilde: &[f32],
+    round: u64,
+    out: &mut Payload,
+    idx_scratch: &mut Vec<u32>,
+) {
+    let d = utilde.len();
+    let mut w = BitWriter::from_vec(std::mem::take(&mut out.bytes));
+    let tag = match kind {
         PayloadKind::Dense => {
-            let mut w = BitWriter::with_capacity(4 * d + 8);
             for &v in utilde {
                 w.put_f32(v);
             }
-            finishp(TAG_DENSE, w)
+            TAG_DENSE
         }
         PayloadKind::SparseValues => {
-            let indices: Vec<u32> =
-                (0..d).filter(|&i| utilde[i] != 0.0).map(|i| i as u32).collect();
-            let mut w = BitWriter::with_capacity(indices.len() * 5 + 16);
-            elias::gamma0_encode(&mut w, indices.len() as u64);
-            golomb::encode_indices(&mut w, &indices, d);
-            for &i in &indices {
+            idx_scratch.clear();
+            idx_scratch.extend((0..d as u32).filter(|&i| utilde[i as usize] != 0.0));
+            elias::gamma0_encode(&mut w, idx_scratch.len() as u64);
+            golomb::encode_indices(&mut w, idx_scratch, d);
+            for &i in idx_scratch.iter() {
                 w.put_f32(utilde[i as usize]);
             }
-            finishp(TAG_SPARSE, w)
+            TAG_SPARSE
         }
         PayloadKind::SparseTwoPoint => {
-            let indices: Vec<u32> =
-                (0..d).filter(|&i| utilde[i] != 0.0).map(|i| i as u32).collect();
+            idx_scratch.clear();
+            idx_scratch.extend((0..d as u32).filter(|&i| utilde[i as usize] != 0.0));
             // recover the two reconstruction points from the dense vector
-            let mut a_pos = 0.0f32;
-            let mut a_neg = 0.0f32;
-            for &i in &indices {
-                let v = utilde[i as usize];
-                if v > 0.0 {
-                    a_pos = v;
-                } else {
-                    a_neg = -v;
-                }
-            }
-            let mut w = BitWriter::with_capacity(indices.len() + 24);
-            elias::gamma0_encode(&mut w, indices.len() as u64);
+            let (a_pos, a_neg) = two_point_scales(utilde, idx_scratch);
+            elias::gamma0_encode(&mut w, idx_scratch.len() as u64);
             w.put_f32(a_pos);
             w.put_f32(a_neg);
-            golomb::encode_indices(&mut w, &indices, d);
-            for &i in &indices {
+            golomb::encode_indices(&mut w, idx_scratch, d);
+            for &i in idx_scratch.iter() {
                 w.put_bit(utilde[i as usize] > 0.0);
             }
-            finishp(TAG_TWOPOINT, w)
+            TAG_TWOPOINT
         }
         PayloadKind::Sign => {
             // scale = |utilde[i]| of any non-zero entry (all equal by
             // construction); 0 if the whole vector is zero.
             let a = utilde.iter().find(|&&v| v != 0.0).map(|v| v.abs()).unwrap_or(0.0);
-            let mut w = BitWriter::with_capacity(d / 8 + 8);
             w.put_f32(a);
             // word-packed: 32 signs per put_bits call (§Perf: ~4x over
             // bit-at-a-time on the d≈10^5 hot path)
@@ -125,32 +167,128 @@ pub fn encode_payload(kind: PayloadKind, utilde: &[f32], round: u64) -> Payload 
             for &v in chunks.remainder() {
                 w.put_bit(v >= 0.0);
             }
-            finishp(TAG_SIGN, w)
+            TAG_SIGN
         }
         PayloadKind::MaskedValues { prob } => {
-            let mask_idx = super::super::compress::randk::mask_indices(d, round, prob);
-            let mut w = BitWriter::with_capacity(mask_idx.len() * 4 + 8);
-            for &i in &mask_idx {
+            super::super::compress::randk::mask_indices_into(d, round, prob, idx_scratch);
+            for &i in idx_scratch.iter() {
                 w.put_f32(utilde[i as usize]);
             }
-            finishp(TAG_MASKED, w)
+            TAG_MASKED
+        }
+    };
+    finish_into(tag, w, out);
+}
+
+/// Sparse-support fast path: encode when the quantizer already knows the
+/// kept indices (ascending; entries whose `utilde` value is exactly zero
+/// are skipped, exactly like the dense scan in [`encode_payload_into`]
+/// would skip them). O(K) instead of O(d), byte-identical output. Returns
+/// false — leaving `out` untouched — for wire formats without a
+/// sparse-index fast path.
+pub fn encode_sparse_payload_into(
+    kind: PayloadKind,
+    utilde: &[f32],
+    support: &[u32],
+    out: &mut Payload,
+) -> bool {
+    let d = utilde.len();
+    let count = support.iter().filter(|&&i| utilde[i as usize] != 0.0).count();
+    match kind {
+        PayloadKind::SparseValues => {
+            let mut w = BitWriter::from_vec(std::mem::take(&mut out.bytes));
+            elias::gamma0_encode(&mut w, count as u64);
+            encode_support_gaps(&mut w, utilde, support, count, d);
+            for &i in support {
+                let v = utilde[i as usize];
+                if v != 0.0 {
+                    w.put_f32(v);
+                }
+            }
+            finish_into(TAG_SPARSE, w, out);
+            true
+        }
+        PayloadKind::SparseTwoPoint => {
+            let mut w = BitWriter::from_vec(std::mem::take(&mut out.bytes));
+            let (a_pos, a_neg) = two_point_scales(utilde, support);
+            elias::gamma0_encode(&mut w, count as u64);
+            w.put_f32(a_pos);
+            w.put_f32(a_neg);
+            encode_support_gaps(&mut w, utilde, support, count, d);
+            for &i in support {
+                let v = utilde[i as usize];
+                if v != 0.0 {
+                    w.put_bit(v > 0.0);
+                }
+            }
+            finish_into(TAG_TWOPOINT, w, out);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Last-one-wins reconstruction scales, visiting indices in ascending order
+/// (the same visit order as the dense scan, so the encoded scales are
+/// bit-identical between the two paths). Zero entries update neither scale.
+fn two_point_scales(utilde: &[f32], indices: &[u32]) -> (f32, f32) {
+    let mut a_pos = 0.0f32;
+    let mut a_neg = 0.0f32;
+    for &i in indices {
+        let v = utilde[i as usize];
+        if v > 0.0 {
+            a_pos = v;
+        } else if v < 0.0 {
+            a_neg = -v;
+        }
+    }
+    (a_pos, a_neg)
+}
+
+/// Mirror of `golomb::encode_indices` over the non-zero subsequence of
+/// `support` — same Rice parameter rule, same bit stream.
+fn encode_support_gaps(w: &mut BitWriter, utilde: &[f32], support: &[u32], count: usize, d: usize) {
+    let b = golomb::rice_param_for_density(count, d.max(1));
+    w.put_bits(b as u64, 5);
+    let mut prev: i64 = -1;
+    for &i in support {
+        if utilde[i as usize] != 0.0 {
+            let gap = (i as i64 - prev - 1) as u64;
+            golomb::rice_encode(w, gap, b);
+            prev = i as i64;
         }
     }
 }
 
-fn finishp(tag: u8, w: BitWriter) -> Payload {
-    let bits = w.bit_len();
-    Payload { kind_tag: tag, bytes: w.finish(), bits }
+fn finish_into(tag: u8, w: BitWriter, out: &mut Payload) {
+    out.kind_tag = tag;
+    out.bits = w.bit_len();
+    out.bytes = w.finish();
 }
 
 /// Decode a payload back to the dense d-vector.
 pub fn decode_payload(kind: PayloadKind, payload: &Payload, d: usize, round: u64, out: &mut Vec<f32>) -> Result<()> {
+    let mut idx = Vec::new();
+    decode_payload_view(kind, payload.view(), d, round, out, &mut idx)
+}
+
+/// Decode from a borrowed payload view with a reusable index scratch — the
+/// zero-allocation steady-state path (once `out` and `idx_scratch` have
+/// grown to their high-water capacities).
+pub fn decode_payload_view(
+    kind: PayloadKind,
+    payload: PayloadRef<'_>,
+    d: usize,
+    round: u64,
+    out: &mut Vec<f32>,
+    idx_scratch: &mut Vec<u32>,
+) -> Result<()> {
     if tag_of(kind) != payload.kind_tag {
         bail!("payload tag mismatch: expected {} got {}", tag_of(kind), payload.kind_tag);
     }
     out.clear();
     out.resize(d, 0.0);
-    let mut r = BitReader::new(&payload.bytes);
+    let mut r = BitReader::new(payload.bytes);
     match kind {
         PayloadKind::Dense => {
             for v in out.iter_mut() {
@@ -160,8 +298,8 @@ pub fn decode_payload(kind: PayloadKind, payload: &Payload, d: usize, round: u64
         PayloadKind::SparseValues => {
             let count = elias::gamma0_decode(&mut r)? as usize;
             anyhow::ensure!(count <= d, "sparse count {count} > d {d}");
-            let indices = golomb::decode_indices(&mut r, count)?;
-            for &i in &indices {
+            golomb::decode_indices_into(&mut r, count, idx_scratch)?;
+            for &i in idx_scratch.iter() {
                 anyhow::ensure!((i as usize) < d, "index {i} out of range");
                 out[i as usize] = r.get_f32()?;
             }
@@ -171,8 +309,8 @@ pub fn decode_payload(kind: PayloadKind, payload: &Payload, d: usize, round: u64
             anyhow::ensure!(count <= d, "sparse count {count} > d {d}");
             let a_pos = r.get_f32()?;
             let a_neg = r.get_f32()?;
-            let indices = golomb::decode_indices(&mut r, count)?;
-            for &i in &indices {
+            golomb::decode_indices_into(&mut r, count, idx_scratch)?;
+            for &i in idx_scratch.iter() {
                 anyhow::ensure!((i as usize) < d, "index {i} out of range");
                 out[i as usize] = if r.get_bit()? { a_pos } else { -a_neg };
             }
@@ -192,8 +330,8 @@ pub fn decode_payload(kind: PayloadKind, payload: &Payload, d: usize, round: u64
             }
         }
         PayloadKind::MaskedValues { prob } => {
-            let mask_idx = super::super::compress::randk::mask_indices(d, round, prob);
-            for &i in &mask_idx {
+            super::super::compress::randk::mask_indices_into(d, round, prob, idx_scratch);
+            for &i in idx_scratch.iter() {
                 out[i as usize] = r.get_f32()?;
             }
         }
@@ -299,6 +437,81 @@ mod tests {
         let mut out = Vec::new();
         decode_payload(kind, &p, d, round, &mut out).unwrap();
         assert_eq!(out, u);
+    }
+
+    #[test]
+    fn into_and_view_variants_are_byte_identical_for_every_kind() {
+        let mut rng = Pcg64::seeded(17);
+        let d = 701;
+        let mut u = sparse_vec(&mut rng, d, 80);
+        for kind in [
+            PayloadKind::Dense,
+            PayloadKind::SparseValues,
+            PayloadKind::SparseTwoPoint,
+            PayloadKind::Sign,
+            PayloadKind::MaskedValues { prob: 0.1 },
+        ] {
+            if kind == PayloadKind::SparseTwoPoint {
+                // two-point structure: constant magnitudes
+                for v in u.iter_mut() {
+                    if *v != 0.0 {
+                        *v = if *v > 0.0 { 1.25 } else { -0.75 };
+                    }
+                }
+            }
+            let round = 9;
+            let reference = encode_payload(kind, &u, round);
+            let mut out = Payload::empty();
+            let mut idx = Vec::new();
+            // reuse the same slot twice: recycled capacity must not change bytes
+            for pass in 0..2 {
+                encode_payload_into(kind, &u, round, &mut out, &mut idx);
+                assert_eq!(out.bytes, reference.bytes, "{kind:?} pass {pass}");
+                assert_eq!(out.bits, reference.bits, "{kind:?}");
+                assert_eq!(out.kind_tag, reference.kind_tag, "{kind:?}");
+            }
+            let mut dense_a = Vec::new();
+            let mut dense_b = Vec::new();
+            let mut dec_idx = Vec::new();
+            decode_payload(kind, &reference, d, round, &mut dense_a).unwrap();
+            decode_payload_view(kind, reference.view(), d, round, &mut dense_b, &mut dec_idx)
+                .unwrap();
+            assert_eq!(dense_a, dense_b, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_support_fast_path_matches_dense_scan() {
+        let mut rng = Pcg64::seeded(19);
+        let d = 1200;
+        for kind in [PayloadKind::SparseValues, PayloadKind::SparseTwoPoint] {
+            let mut u = sparse_vec(&mut rng, d, 60);
+            if kind == PayloadKind::SparseTwoPoint {
+                for v in u.iter_mut() {
+                    if *v != 0.0 {
+                        *v = if *v > 0.0 { 2.5 } else { -0.5 };
+                    }
+                }
+            }
+            // support = true nonzeros plus a few zero-valued entries, which
+            // the fast path must skip exactly like the dense scan does
+            let mut support: Vec<u32> =
+                (0..d as u32).filter(|&i| u[i as usize] != 0.0).collect();
+            support.push(0);
+            support.push((d - 1) as u32);
+            support.sort_unstable();
+            support.dedup();
+            let reference = encode_payload(kind, &u, 0);
+            let mut fast = Payload::empty();
+            assert!(encode_sparse_payload_into(kind, &u, &support, &mut fast));
+            assert_eq!(fast.bytes, reference.bytes, "{kind:?}");
+            assert_eq!(fast.bits, reference.bits, "{kind:?}");
+            assert_eq!(fast.kind_tag, reference.kind_tag, "{kind:?}");
+        }
+        // kinds without a sparse fast path decline and leave `out` untouched
+        let mut out = Payload::empty();
+        assert!(!encode_sparse_payload_into(PayloadKind::Sign, &[1.0, -1.0], &[0, 1], &mut out));
+        assert!(out.bytes.is_empty());
     }
 
     #[test]

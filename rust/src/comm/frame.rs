@@ -118,10 +118,14 @@ impl Frame {
         }
     }
 
-    pub fn as_payload(&self) -> crate::coding::Payload {
+    /// Move the payload body out, leaving the frame with empty bytes. The
+    /// master's decode path consumes each frame exactly once, so moving is
+    /// always right — a cloning accessor would put a per-message byte copy
+    /// back on the hot path.
+    pub fn take_payload(&mut self) -> crate::coding::Payload {
         crate::coding::Payload {
             kind_tag: self.payload_tag,
-            bytes: self.bytes.clone(),
+            bytes: std::mem::take(&mut self.bytes),
             bits: self.payload_bits,
         }
     }

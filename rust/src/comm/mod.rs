@@ -55,6 +55,15 @@ pub(crate) enum PeerState {
 /// for the pipelined (double-buffered) send stage.
 pub trait FrameSender: Send {
     fn send(&mut self, frame: Frame) -> Result<()>;
+
+    /// Send and, when the transport *serialized* (rather than moved) the
+    /// frame, hand its payload byte buffer back for reuse — the buffer-
+    /// recycling leg of the zero-allocation round path (the worker's next
+    /// `encode_into` fills the returned buffer again). Transports that move
+    /// frame bytes onward (the in-process channel fabric) return `None`.
+    fn send_reclaim(&mut self, frame: Frame) -> Result<Option<Vec<u8>>> {
+        self.send(frame).map(|()| None)
+    }
 }
 
 /// Worker-side endpoint: send updates up, receive broadcasts down.

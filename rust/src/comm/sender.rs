@@ -9,7 +9,7 @@
 //! in-flight payload and keeping per-connection FIFO order (which the
 //! master's round engine and the deterministic-mode invariant rely on).
 
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -29,26 +29,38 @@ pub struct SenderReport {
 /// Background send stage over any split-off [`FrameSender`].
 pub struct PipelinedSender {
     tx: Option<SyncSender<Frame>>,
+    /// spent payload byte buffers coming back from the transport
+    spare_rx: Receiver<Vec<u8>>,
     handle: Option<JoinHandle<SenderReport>>,
 }
 
 impl PipelinedSender {
     pub fn spawn(mut sender: Box<dyn FrameSender>) -> Self {
         let (tx, rx) = sync_channel::<Frame>(1);
+        // depth 2: one buffer in flight + one waiting for pickup; beyond
+        // that recycling degrades gracefully to dropping buffers
+        let (spare_tx, spare_rx) = sync_channel::<Vec<u8>>(2);
         let handle = std::thread::spawn(move || {
             let mut send_secs = 0.0f64;
             let mut frames = 0u64;
             while let Ok(frame) = rx.recv() {
                 let t = Timer::start();
-                if let Err(e) = sender.send(frame) {
-                    return SenderReport { result: Err(e), send_secs, frames };
+                match sender.send_reclaim(frame) {
+                    Ok(spare) => {
+                        send_secs += t.elapsed_secs();
+                        frames += 1;
+                        if let Some(buf) = spare {
+                            // best-effort: a full return queue just drops
+                            // the buffer (the worker allocates one then)
+                            let _ = spare_tx.try_send(buf);
+                        }
+                    }
+                    Err(e) => return SenderReport { result: Err(e), send_secs, frames },
                 }
-                send_secs += t.elapsed_secs();
-                frames += 1;
             }
             SenderReport { result: Ok(()), send_secs, frames }
         });
-        Self { tx: Some(tx), handle: Some(handle) }
+        Self { tx: Some(tx), spare_rx, handle: Some(handle) }
     }
 
     /// Hand a frame to the sender thread. Blocks only while a *previous*
@@ -61,6 +73,14 @@ impl PipelinedSender {
             .expect("enqueue after finish")
             .send(frame)
             .map_err(|_| anyhow!("sender thread stopped (master hung up?)"))
+    }
+
+    /// A spent payload byte buffer handed back by the transport after its
+    /// frame shipped (TCP serializes and returns the buffer; channel
+    /// fabrics move the bytes to the master, so nothing comes back).
+    /// Non-blocking; `None` when no buffer is waiting.
+    pub fn take_spare(&mut self) -> Option<Vec<u8>> {
+        self.spare_rx.try_recv().ok()
     }
 
     /// Close the queue, join the thread, and report totals.
@@ -97,6 +117,17 @@ mod tests {
         report.result.unwrap();
         assert_eq!(report.frames, 5);
         assert!(report.send_secs >= 0.0);
+    }
+
+    #[test]
+    fn channel_transport_returns_no_spares() {
+        let (mut master, mut workers) = channel_fabric(1);
+        let mut s = PipelinedSender::spawn(workers[0].split_sender().unwrap());
+        s.enqueue(Frame::skip(0, 0)).unwrap();
+        let _ = master.recv_any().unwrap();
+        // channel fabric moves bytes to the master — nothing to reclaim
+        assert!(s.take_spare().is_none());
+        s.finish().result.unwrap();
     }
 
     #[test]

@@ -64,6 +64,13 @@ impl FrameSender for TcpSender {
     fn send(&mut self, frame: Frame) -> Result<()> {
         write_frame(&mut self.stream, &frame)
     }
+
+    fn send_reclaim(&mut self, frame: Frame) -> Result<Option<Vec<u8>>> {
+        // the codec copies the bytes onto the socket; the payload buffer is
+        // spent and can go back to the worker's encode slot
+        write_frame(&mut self.stream, &frame)?;
+        Ok(Some(frame.bytes))
+    }
 }
 
 impl WorkerTransport for TcpWorker {
@@ -432,6 +439,23 @@ mod tests {
         assert_eq!(f.kind, FrameKind::Skip);
         assert_eq!(f.round, 3);
         master.broadcast(&Frame::broadcast(3, &[0.0])).unwrap();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn send_reclaim_returns_the_payload_buffer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let mut s = w.split_sender().unwrap();
+            let p = Payload { kind_tag: 1, bytes: vec![7, 8, 9], bits: 24 };
+            let buf = s.send_reclaim(Frame::update(0, 0, p, 0.0)).unwrap();
+            assert_eq!(buf, Some(vec![7, 8, 9]), "TCP serializes, so bytes come back");
+        });
+        let mut master = TcpMaster::from_listener(listener, 1).unwrap();
+        let (_, f) = master.recv_any().unwrap();
+        assert_eq!(f.bytes, vec![7, 8, 9]);
         worker.join().unwrap();
     }
 

@@ -18,7 +18,7 @@
 use std::sync::Arc;
 
 use crate::coding::PayloadKind;
-use crate::scheme::{Predict, Quantize};
+use crate::scheme::{Predict, Quantize, RoundScratch};
 
 use super::{Predictor, SchemeCfg};
 
@@ -48,6 +48,11 @@ pub struct WorkerPipeline {
     e: Vec<f32>,
     u: Vec<f32>,
     utilde: Vec<f32>,
+    /// reusable buffer arena (quantizer support etc.) — steady-state rounds
+    /// allocate nothing
+    scratch: RoundScratch,
+    /// whether `scratch.indices` holds the last step's ũ support
+    sparse_valid: bool,
 }
 
 impl WorkerPipeline {
@@ -78,6 +83,8 @@ impl WorkerPipeline {
             e: vec![0.0; d],
             u: vec![0.0; d],
             utilde: vec![0.0; d],
+            scratch: RoundScratch::default(),
+            sparse_valid: false,
         }
     }
 
@@ -135,27 +142,55 @@ impl WorkerPipeline {
         self.predictor.rhat()
     }
 
+    /// Support indices of the last step's ũ_t (ascending), when the
+    /// quantizer reported them — the exact-sparse encode fast path.
+    pub fn sparse_support(&self) -> Option<&[u32]> {
+        if self.sparse_valid {
+            Some(&self.scratch.indices)
+        } else {
+            None
+        }
+    }
+
     /// Run one full Eq. (1) iteration. `lr_ratio` = η_{t-1}/η_t (0 at t=0).
     pub fn step(&mut self, g: &[f32], lr_ratio: f32) -> StepStats {
         assert_eq!(g.len(), self.d, "gradient dim mismatch");
         let beta = self.beta;
         let one_minus = 1.0 - beta;
-        let ef = self.ef;
         let rhat = self.predictor.rhat();
 
-        // (1a)-(1c) fused: v, r, u in one pass (mirrors the Pallas kernel).
+        // (1a)-(1c) fused: v, r, u in one pass (mirrors the Pallas kernel),
+        // with the EF branch hoisted out of the element loop so the f32
+        // work auto-vectorizes. The f64 norm accumulation keeps its
+        // sequential order — StepStats are bit-pinned by the golden tests.
         let mut u_norm_sq = 0.0f64;
-        for i in 0..self.d {
-            let v = beta * self.v[i] + one_minus * g[i];
-            self.v[i] = v;
-            let r = if ef { v + lr_ratio * self.e[i] } else { v };
-            let u = r - rhat[i];
-            self.u[i] = u;
-            u_norm_sq += (u as f64) * (u as f64);
+        if self.ef {
+            for i in 0..self.d {
+                let v = beta * self.v[i] + one_minus * g[i];
+                self.v[i] = v;
+                let u = v + lr_ratio * self.e[i] - rhat[i];
+                self.u[i] = u;
+                u_norm_sq += (u as f64) * (u as f64);
+            }
+        } else {
+            for i in 0..self.d {
+                let v = beta * self.v[i] + one_minus * g[i];
+                self.v[i] = v;
+                let u = v - rhat[i];
+                self.u[i] = u;
+                u_norm_sq += (u as f64) * (u as f64);
+            }
         }
 
-        // (1d)
-        self.quantizer.quantize(&self.u, &mut self.utilde, self.round);
+        // (1d) — exact-sparse quantizers also report their support into the
+        // reusable scratch, which the encoder consumes (O(K) instead of an
+        // O(d) re-scan) and which costs zero allocation in steady state
+        self.sparse_valid = self.quantizer.quantize_sparse(
+            &self.u,
+            &mut self.utilde,
+            self.round,
+            &mut self.scratch.indices,
+        );
 
         // (1e) + stats
         let mut e_norm_sq = 0.0f64;
@@ -199,6 +234,8 @@ impl WorkerPipeline {
             self.u[i] = utilde[i] + e[i];
         }
         self.predictor.load_state(rhat, p, s, tau);
+        // the artifact hands back dense state only — no support list
+        self.sparse_valid = false;
         self.round += 1;
     }
 
@@ -237,11 +274,9 @@ impl MasterChain {
     pub fn receive(&mut self, utilde: &[f32], rtilde_out: &mut [f32]) {
         assert_eq!(utilde.len(), self.d);
         assert_eq!(rtilde_out.len(), self.d);
-        let rhat = self.predictor.rhat();
-        for i in 0..self.d {
-            rtilde_out[i] = utilde[i] + rhat[i];
-        }
-        self.predictor.update(utilde);
+        // fused r̃ = ũ + r̂ + predictor advance: one pass instead of two,
+        // bit-identical by the `Predict::update_into` contract
+        self.predictor.update_into(utilde, rtilde_out);
     }
 
     pub fn rhat(&self) -> &[f32] {

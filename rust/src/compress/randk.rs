@@ -37,9 +37,18 @@ pub fn keep(j: u32, seed: u32, thresh: u32) -> bool {
 
 /// All kept indices for a round, ascending.
 pub fn mask_indices(d: usize, round: u64, prob: f32) -> Vec<u32> {
+    let mut out = Vec::new();
+    mask_indices_into(d, round, prob, &mut out);
+    out
+}
+
+/// [`mask_indices`] into a caller-owned buffer (cleared first) — the
+/// zero-allocation path for the reusable encode/decode scratch.
+pub fn mask_indices_into(d: usize, round: u64, prob: f32, out: &mut Vec<u32>) {
+    out.clear();
     let seed = round as u32;
     let thresh = keep_threshold(prob);
-    (0..d as u32).filter(|&j| keep(j, seed, thresh)).collect()
+    out.extend((0..d as u32).filter(|&j| keep(j, seed, thresh)));
 }
 
 /// Apply the mask: out[j] = u[j] if kept else 0.

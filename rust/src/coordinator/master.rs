@@ -223,6 +223,12 @@ fn run_rounds<T: MasterTransport>(
 
     let mut rtilde = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
+    // per-worker r̃ buffers for the parallel FullSync decode (the
+    // bounded-staleness path folds frame-by-frame and reuses `rtilde`)
+    let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
+        AggMode::FullSync => (0..n).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
 
     for t in 0..spec.steps {
         agg.iter_mut().for_each(|x| *x = 0.0);
@@ -247,11 +253,17 @@ fn run_rounds<T: MasterTransport>(
                 let contributors =
                     round_frames.iter().filter(|f| f.kind == FrameKind::Update).count();
                 let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
-                for frame in &round_frames {
-                    fold_frame(frame, t, &mut chains, &mut comm, &mut train_loss, &mut rtilde)?;
+                // decode every worker's chain in parallel (chains are
+                // independent per worker); accounting and aggregation below
+                // stay in worker-id order, so the folded f32 bits are
+                // identical to the sequential path for any thread count
+                decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                for (wid, frame) in round_frames.iter().enumerate() {
+                    account_frame(frame, wid, &*chains[wid], &mut comm, &mut train_loss)?;
                     if frame.kind == FrameKind::Update {
+                        let rt = &rtilde_w[wid];
                         for i in 0..d {
-                            agg[i] += scale * rtilde[i];
+                            agg[i] += scale * rt[i];
                         }
                     }
                 }
@@ -275,12 +287,12 @@ fn run_rounds<T: MasterTransport>(
                 // own round order, so decode state stays in sync)
                 let mut contributions = 0u32;
                 for wid in 0..n {
-                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                    while let Some(mut frame) = inbox.pending[wid].pop_front() {
                         if frame.kind == FrameKind::Update {
                             comm.record_staleness(t.saturating_sub(frame.round));
                         }
                         fold_frame(
-                            &frame,
+                            &mut frame,
                             t,
                             &mut chains,
                             &mut comm,
@@ -363,10 +375,83 @@ fn run_rounds<T: MasterTransport>(
     })
 }
 
-/// Decode one worker frame into its chain (updates) or account a skip.
-/// On return, `rtilde` holds the decoded r̃ for Update frames.
-fn fold_frame(
+/// Decode one FullSync round's frames — one independent decode chain per
+/// worker — across scoped threads (serial below
+/// `util::parallel::PAR_MIN_DIM` or for one worker; outputs are
+/// bit-identical either way). Each worker's r̃ lands in its own `rtilde_w`
+/// slot; the caller folds those in worker-id order.
+/// Decode failures surface in worker-id order with the same context the
+/// sequential path attached.
+fn decode_round_parallel(
+    chains: &mut [Box<dyn MasterScheme>],
+    rtilde_w: &mut [Vec<f32>],
+    frames: &mut [Frame],
+    round: u64,
+    d: usize,
+) -> Result<()> {
+    let n = frames.len();
+    let mut results: Vec<Result<()>> = Vec::with_capacity(n);
+    results.resize_with(n, || Ok(()));
+    {
+        type Slot<'a> = (
+            &'a mut Box<dyn MasterScheme>,
+            &'a mut Vec<f32>,
+            &'a mut Frame,
+            &'a mut Result<()>,
+        );
+        let mut slots: Vec<Slot<'_>> = chains
+            .iter_mut()
+            .zip(rtilde_w.iter_mut())
+            .zip(frames.iter_mut())
+            .zip(results.iter_mut())
+            .map(|(((chain, buf), frame), res)| (chain, buf, frame, res))
+            .collect();
+        let min_items = crate::util::parallel::gate_by_dim(d);
+        crate::util::parallel::par_for_each_indexed(&mut slots, min_items, |_wid, slot| {
+            let (chain, buf, frame, res) = slot;
+            if frame.kind == FrameKind::Update {
+                // decode with the WORKER's round tag (shared-mask formats
+                // seed from it); moving the payload out skips a byte copy
+                let payload = frame.take_payload();
+                **res = chain.receive(&payload, frame.round, buf.as_mut_slice());
+            }
+        });
+    }
+    for (wid, res) in results.into_iter().enumerate() {
+        res.with_context(|| format!("round {round}: decode worker {wid}"))?;
+    }
+    Ok(())
+}
+
+/// The single frame-accounting policy, shared by both aggregation modes:
+/// book an Update's rate/loss/per-block bits (the chain must already have
+/// decoded it), count a Skip, reject anything else.
+fn account_frame(
     frame: &Frame,
+    wid: usize,
+    chain: &dyn MasterScheme,
+    comm: &mut CommStats,
+    train_loss: &mut LossMeter,
+) -> Result<()> {
+    match frame.kind {
+        FrameKind::Update => {
+            comm.record_message(frame.payload_bits);
+            train_loss.push(frame.loss as f64);
+            for bb in chain.last_block_bits() {
+                comm.record_block(&bb.name, bb.bits, bb.components);
+            }
+        }
+        FrameKind::Skip => comm.record_skip(),
+        other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
+    }
+    Ok(())
+}
+
+/// Decode one worker frame into its chain (updates), then account it via
+/// [`account_frame`]. On return, `rtilde` holds the decoded r̃ for Update
+/// frames.
+fn fold_frame(
+    frame: &mut Frame,
     round: u64,
     chains: &mut [Box<dyn MasterScheme>],
     comm: &mut CommStats,
@@ -375,24 +460,16 @@ fn fold_frame(
 ) -> Result<()> {
     let wid = frame.worker as usize;
     anyhow::ensure!(wid < chains.len(), "bad worker id {wid}");
-    match frame.kind {
-        FrameKind::Update => {
-            comm.record_message(frame.payload_bits);
-            train_loss.push(frame.loss as f64);
-            let payload = frame.as_payload();
-            // decode with the WORKER's round tag (shared-mask formats seed
-            // from it), which under staleness differs from the master round
-            chains[wid]
-                .receive(&payload, frame.round, rtilde)
-                .with_context(|| format!("round {round}: decode worker {wid}"))?;
-            for bb in chains[wid].last_block_bits() {
-                comm.record_block(&bb.name, bb.bits, bb.components);
-            }
-        }
-        FrameKind::Skip => comm.record_skip(),
-        other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
+    if frame.kind == FrameKind::Update {
+        // decode with the WORKER's round tag (shared-mask formats seed
+        // from it), which under staleness differs from the master round;
+        // the payload moves out of the frame (no byte copy)
+        let payload = frame.take_payload();
+        chains[wid]
+            .receive(&payload, frame.round, rtilde)
+            .with_context(|| format!("round {round}: decode worker {wid}"))?;
     }
-    Ok(())
+    account_frame(frame, wid, &*chains[wid], comm, train_loss)
 }
 
 /// Mean loss / accuracy over `batches` held-out batches.

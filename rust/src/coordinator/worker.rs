@@ -31,6 +31,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::coding::Payload;
 use crate::comm::{Frame, PipelinedSender, WorkerTransport};
 use crate::config::experiment::Backend;
 use crate::data::{Batch, Dataset, Shard};
@@ -270,6 +271,10 @@ fn run_rounds_inner<T: WorkerTransport>(
     // interleave with an in-flight background send
     #[allow(clippy::redundant_closure_call)]
     let loop_result = (|| -> Result<()> {
+        // payload buffers ping-pong through the send stage: encode fills a
+        // recycled buffer, the transport hands it back after the frame
+        // ships, so steady-state rounds allocate nothing on this path
+        let mut spare: Option<Vec<u8>> = None;
         source.prefetch(0);
         for t in 0..spec.steps {
             if spec.is_absent(t) {
@@ -323,9 +328,14 @@ fn run_rounds_inner<T: WorkerTransport>(
             e_mse_trace.push(stats.e_mse);
             u_norm_trace.push(stats.u_norm_sq);
 
-            // 3. encode, then ship (inline, or handed to the sender thread)
+            // 3. encode into a recycled buffer, then ship (inline, or
+            // handed to the sender thread)
             let timer = Timer::start();
-            let payload = wscheme.encode(t);
+            let mut payload = Payload::empty();
+            if let Some(buf) = spare.take() {
+                payload.bytes = buf;
+            }
+            wscheme.encode_into(t, &mut payload);
             phases.add("encode", timer.elapsed_secs());
             send_frame(
                 &mut stage,
@@ -333,6 +343,12 @@ fn run_rounds_inner<T: WorkerTransport>(
                 &mut phases,
                 Frame::update(spec.worker_id, t, payload, loss as f32),
             )?;
+            // pick up a spent buffer the transport handed back
+            if let SendStage::Pipelined(sender) = &mut stage {
+                if spare.is_none() {
+                    spare = sender.take_spare();
+                }
+            }
 
             // overlap window: while round t's payload is on the wire,
             // stage the data for round t+1

@@ -23,8 +23,9 @@ use std::ops::Range;
 
 use anyhow::{Context, Result};
 
-use crate::coding::Payload;
+use crate::coding::{Payload, PayloadRef};
 use crate::compress::StepStats;
+use crate::util::parallel;
 
 use super::{BlockBits, MasterScheme, SingleMaster, SingleWorker, WorkerScheme};
 
@@ -37,15 +38,32 @@ const BLOCK_HEADER_BITS: u64 = 8 + 64 + 32;
 const CONTAINER_HEADER_BITS: u64 = 16;
 
 /// [`WorkerScheme`] running one [`SingleWorker`] per named block.
+///
+/// Blocks are independent Eq.-(1) pipelines over disjoint slices, so
+/// `step`/`encode_into` fan them out over scoped threads; per-block outputs
+/// land in per-block buffers and every cross-block reduction (stats totals,
+/// container packing) stays sequential in block order — payload bytes and
+/// `StepStats` are bit-identical to the serial path for any thread count.
 pub struct BlockwiseWorker {
     d: usize,
     blocks: Vec<(String, Range<usize>, SingleWorker)>,
     utilde: Vec<f32>,
+    /// reusable per-block payload slots for the parallel encode
+    enc: Vec<Payload>,
+    /// reusable per-block step stats for the parallel step
+    stats: Vec<StepStats>,
 }
 
 impl BlockwiseWorker {
     pub(crate) fn new(d: usize, blocks: Vec<(String, Range<usize>, SingleWorker)>) -> Self {
-        Self { utilde: vec![0.0; d], d, blocks }
+        let n = blocks.len();
+        Self {
+            utilde: vec![0.0; d],
+            d,
+            blocks,
+            enc: vec![Payload::empty(); n],
+            stats: vec![StepStats::default(); n],
+        }
     }
 }
 
@@ -56,13 +74,29 @@ impl WorkerScheme for BlockwiseWorker {
 
     fn step(&mut self, g: &[f32], lr_ratio: f32) -> StepStats {
         assert_eq!(g.len(), self.d, "gradient dim mismatch");
+        // disjoint per-block work items: (worker, g slice, ũ slice, stats)
+        type Item<'a> = (&'a mut SingleWorker, &'a [f32], &'a mut [f32], &'a mut StepStats);
+        let mut items: Vec<Item<'_>> = Vec::with_capacity(self.blocks.len());
+        let mut rest: &mut [f32] = &mut self.utilde;
+        for ((_, range, worker), st) in self.blocks.iter_mut().zip(self.stats.iter_mut()) {
+            let tmp = std::mem::take(&mut rest);
+            let (ut, tail) = tmp.split_at_mut(range.len());
+            rest = tail;
+            items.push((worker, &g[range.clone()], ut, st));
+        }
+        parallel::par_for_each_indexed(&mut items, parallel::gate_by_dim(self.d), |_i, item| {
+            let (worker, gs, ut, st) = item;
+            **st = worker.step(*gs, lr_ratio);
+            ut.copy_from_slice(worker.utilde());
+        });
+        drop(items);
+        // cross-block reduction stays sequential in block order (f64 sums
+        // are order-sensitive; this is the exact serial-path order)
         let mut total = StepStats::default();
-        for (_, range, worker) in self.blocks.iter_mut() {
-            let stats = worker.step(&g[range.clone()], lr_ratio);
+        for stats in &self.stats {
             total.e_norm_sq += stats.e_norm_sq;
             total.u_norm_sq += stats.u_norm_sq;
             total.nnz += stats.nnz;
-            self.utilde[range.clone()].copy_from_slice(worker.utilde());
         }
         total.e_mse = total.e_norm_sq / self.d as f64;
         total
@@ -81,6 +115,37 @@ impl WorkerScheme for BlockwiseWorker {
             bits += BLOCK_HEADER_BITS + sub.bits;
         }
         Payload { kind_tag: TAG_BLOCKWISE, bytes, bits }
+    }
+
+    fn encode_into(&mut self, round: u64, out: &mut Payload) {
+        // 1) every block encodes into its own reusable slot, in parallel
+        let mut items: Vec<(&mut SingleWorker, &mut Payload)> = self
+            .blocks
+            .iter_mut()
+            .map(|(_, _, w)| w)
+            .zip(self.enc.iter_mut())
+            .collect();
+        parallel::par_for_each_indexed(&mut items, parallel::gate_by_dim(self.d), |_i, item| {
+            let (worker, slot) = item;
+            worker.encode_into(round, &mut **slot);
+        });
+        drop(items);
+        // 2) container packing is sequential in block order — byte-identical
+        // to the serial `encode`
+        let mut bytes = std::mem::take(&mut out.bytes);
+        bytes.clear();
+        bytes.extend_from_slice(&(self.blocks.len() as u16).to_le_bytes());
+        let mut bits = CONTAINER_HEADER_BITS;
+        for sub in &self.enc {
+            bytes.push(sub.kind_tag);
+            bytes.extend_from_slice(&sub.bits.to_le_bytes());
+            bytes.extend_from_slice(&(sub.bytes.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(&sub.bytes);
+            bits += BLOCK_HEADER_BITS + sub.bits;
+        }
+        out.kind_tag = TAG_BLOCKWISE;
+        out.bytes = bytes;
+        out.bits = bits;
     }
 
     fn utilde(&self) -> &[f32] {
@@ -134,23 +199,48 @@ impl MasterScheme for BlockwiseMaster {
             "container has {nblocks} blocks, scheme expects {}",
             self.blocks.len()
         );
+        // 1) sequential structural parse: borrow each block's sub-payload
+        // slice out of the container (zero copies)
+        let mut subs: Vec<PayloadRef<'_>> = Vec::with_capacity(nblocks);
         let mut off = 2usize;
-        for i in 0..self.blocks.len() {
+        for i in 0..nblocks {
             anyhow::ensure!(buf.len() >= off + 13, "container truncated at block {i} header");
             let tag = buf[off];
             let bits = u64::from_le_bytes(buf[off + 1..off + 9].try_into().unwrap());
             let len = u32::from_le_bytes(buf[off + 9..off + 13].try_into().unwrap()) as usize;
             off += 13;
             anyhow::ensure!(buf.len() >= off + len, "container truncated at block {i} body");
-            let sub = Payload { kind_tag: tag, bytes: buf[off..off + len].to_vec(), bits };
+            subs.push(PayloadRef { kind_tag: tag, bytes: &buf[off..off + len], bits });
             off += len;
-            let (name, range, master) = &mut self.blocks[i];
-            master
-                .receive(&sub, round, &mut rtilde_out[range.clone()])
-                .with_context(|| format!("decode block {name:?}"))?;
-            self.last_bits[i].bits = bits;
         }
         anyhow::ensure!(off == buf.len(), "trailing bytes in blockwise container");
+
+        // 2) parallel per-block decode into disjoint r̃ slices; each chain
+        // advances independently, so outputs are bit-identical to serial
+        let mut results: Vec<Result<()>> = Vec::with_capacity(nblocks);
+        results.resize_with(nblocks, || Ok(()));
+        type Item<'a> = (&'a mut SingleMaster, PayloadRef<'a>, &'a mut [f32], &'a mut Result<()>);
+        let mut items: Vec<Item<'_>> = Vec::with_capacity(nblocks);
+        let mut rest: &mut [f32] = rtilde_out;
+        for (((_, range, master), sub), res) in
+            self.blocks.iter_mut().zip(subs.iter()).zip(results.iter_mut())
+        {
+            let tmp = std::mem::take(&mut rest);
+            let (rt, tail) = tmp.split_at_mut(range.len());
+            rest = tail;
+            items.push((master, *sub, rt, res));
+        }
+        parallel::par_for_each_indexed(&mut items, parallel::gate_by_dim(self.d), |_i, item| {
+            let (master, sub, rt, res) = item;
+            **res = master.receive_view(*sub, round, &mut **rt);
+        });
+        drop(items);
+
+        // 3) surface the first failure in block order; book per-block bits
+        for (i, res) in results.into_iter().enumerate() {
+            res.with_context(|| format!("decode block {:?}", self.blocks[i].0))?;
+            self.last_bits[i].bits = subs[i].bits;
+        }
         Ok(())
     }
 
@@ -220,6 +310,51 @@ mod tests {
             // sign block: 1 bit/comp + 32-bit scale
             assert_eq!(bb[1].bits, 32 + db as u64);
         }
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_parallelism_is_bit_stable() {
+        // d above PAR_MIN_DIM so the scoped-thread path actually engages
+        let d = 8192;
+        let spec = format!("blocks(a=0.25:{SUB_A};b=0.75:{SUB_B})");
+        let reference = run_blockwise(&spec, d, 1);
+        for threads in [2usize, 8] {
+            let got = run_blockwise(&spec, d, threads);
+            assert_eq!(got.0.len(), reference.0.len());
+            for (t, (p_ref, p_got)) in reference.0.iter().zip(got.0.iter()).enumerate() {
+                assert_eq!(p_got.bytes, p_ref.bytes, "threads={threads} t={t}: bytes");
+                assert_eq!(p_got.bits, p_ref.bits, "threads={threads} t={t}: bits");
+            }
+            assert_eq!(got.1, reference.1, "threads={threads}: final rtilde");
+            assert_eq!(got.2, reference.2, "threads={threads}: final utilde");
+        }
+    }
+
+    /// Run `steps` rounds at a pinned thread count; returns (payloads per
+    /// round via encode_into, final r̃, final ũ).
+    fn run_blockwise(spec: &str, d: usize, threads: usize) -> (Vec<Payload>, Vec<f32>, Vec<f32>) {
+        let _g = crate::util::parallel::override_threads(threads);
+        let scheme = Scheme::parse(spec).unwrap();
+        let mut worker = scheme.worker(d).unwrap();
+        let mut master = scheme.master(d).unwrap();
+        let mut rng = Pcg64::seeded(0xB10C);
+        let mut g = vec![0.0f32; d];
+        let mut rtilde = vec![0.0f32; d];
+        let mut payloads = Vec::new();
+        let mut slot = Payload::empty();
+        for t in 0..6u64 {
+            rng.fill_gaussian(&mut g, 1.0);
+            worker.step(&g, if t == 0 { 0.0 } else { 1.0 });
+            worker.encode_into(t, &mut slot);
+            // the serial `encode` path must agree with the parallel slot
+            let alloc = worker.encode(t);
+            assert_eq!(slot.bytes, alloc.bytes, "t={t}: encode vs encode_into");
+            assert_eq!(slot.bits, alloc.bits, "t={t}");
+            assert_eq!(slot.kind_tag, alloc.kind_tag, "t={t}");
+            master.receive(&slot, t, &mut rtilde).unwrap();
+            payloads.push(slot.clone());
+        }
+        (payloads, rtilde, worker.utilde().to_vec())
     }
 
     #[test]

@@ -10,9 +10,20 @@
 use std::fmt::Debug;
 use std::sync::Arc;
 
-use crate::coding::{decode_payload, encode_payload, Payload, PayloadKind};
+use crate::coding::{
+    decode_payload, decode_payload_view, encode_payload, encode_payload_into,
+    encode_sparse_payload_into, Payload, PayloadKind, PayloadRef,
+};
+
+use super::RoundScratch;
 
 /// Encoder/decoder pair for one wire format.
+///
+/// The `*_into`/`*_view` variants are the zero-allocation hot path: byte-
+/// identical to `encode`/`decode`, but every temporary lands in the
+/// caller's reusable [`RoundScratch`] arena and payload byte buffers are
+/// recycled. Default implementations fall back to the allocating methods,
+/// so external codecs stay source-compatible.
 pub trait PayloadCodec: Send + Sync + Debug {
     /// Wire-format tag byte this codec produces/accepts.
     fn kind_tag(&self) -> u8;
@@ -23,6 +34,50 @@ pub trait PayloadCodec: Send + Sync + Debug {
     /// Decode a payload back to the dense d-vector.
     fn decode(&self, payload: &Payload, d: usize, round: u64, out: &mut Vec<f32>)
         -> anyhow::Result<()>;
+
+    /// Encode into a reusable payload slot. Byte-identical to `encode`.
+    fn encode_into(
+        &self,
+        utilde: &[f32],
+        round: u64,
+        out: &mut Payload,
+        scratch: &mut RoundScratch,
+    ) {
+        let _ = scratch;
+        *out = self.encode(utilde, round);
+    }
+
+    /// Sparse-support fast path: encode when the caller already knows the
+    /// kept indices (ascending superset of the non-zeros). Returns false —
+    /// leaving `out` untouched — when this wire format has no such path.
+    fn encode_sparse_into(
+        &self,
+        utilde: &[f32],
+        support: &[u32],
+        round: u64,
+        out: &mut Payload,
+    ) -> bool {
+        let _ = (utilde, support, round, out);
+        false
+    }
+
+    /// Decode from a borrowed payload view. Byte-identical to `decode`.
+    fn decode_view(
+        &self,
+        payload: PayloadRef<'_>,
+        d: usize,
+        round: u64,
+        out: &mut Vec<f32>,
+        scratch: &mut RoundScratch,
+    ) -> anyhow::Result<()> {
+        let _ = scratch;
+        let owned = Payload {
+            kind_tag: payload.kind_tag,
+            bytes: payload.bytes.to_vec(),
+            bits: payload.bits,
+        };
+        self.decode(&owned, d, round, out)
+    }
 }
 
 /// Codec for one of the five built-in [`PayloadKind`] wire formats.
@@ -53,6 +108,37 @@ impl PayloadCodec for KindCodec {
         out: &mut Vec<f32>,
     ) -> anyhow::Result<()> {
         decode_payload(self.0, payload, d, round, out)
+    }
+
+    fn encode_into(
+        &self,
+        utilde: &[f32],
+        round: u64,
+        out: &mut Payload,
+        scratch: &mut RoundScratch,
+    ) {
+        encode_payload_into(self.0, utilde, round, out, &mut scratch.indices);
+    }
+
+    fn encode_sparse_into(
+        &self,
+        utilde: &[f32],
+        support: &[u32],
+        _round: u64,
+        out: &mut Payload,
+    ) -> bool {
+        encode_sparse_payload_into(self.0, utilde, support, out)
+    }
+
+    fn decode_view(
+        &self,
+        payload: PayloadRef<'_>,
+        d: usize,
+        round: u64,
+        out: &mut Vec<f32>,
+        scratch: &mut RoundScratch,
+    ) -> anyhow::Result<()> {
+        decode_payload_view(self.0, payload, d, round, out, &mut scratch.indices)
     }
 }
 

@@ -41,8 +41,25 @@ pub use registry::{BlockSpec, QuantParams, Scheme, SchemeRegistry, SingleScheme}
 
 use std::sync::Arc;
 
-use crate::coding::Payload;
+use crate::coding::{Payload, PayloadRef};
 use crate::compress::{MasterChain, StepStats, WorkerPipeline};
+
+/// Per-pipeline reusable buffer arena for the per-round hot path. Every
+/// buffer grows to its steady-state high-water capacity and is then
+/// recycled, so warm rounds perform zero heap allocation. Ownership
+/// contract (DESIGN.md §3): the arena belongs to exactly one pipeline-side
+/// object (worker scheme, master scheme, or codec call site) and is only
+/// borrowed for the duration of one encode/decode call — contents are
+/// unspecified between calls.
+#[derive(Clone, Debug, Default)]
+pub struct RoundScratch {
+    /// ascending u32 index scratch (quantizer support, wire indices,
+    /// shared-seed masks)
+    pub indices: Vec<u32>,
+    /// dense f32 scratch (decoded ũ staging where no dedicated buffer
+    /// exists)
+    pub dense: Vec<f32>,
+}
 
 /// Worker-side bound pipeline: one full Eq. (1) step plus wire encoding.
 pub trait WorkerScheme: Send {
@@ -53,6 +70,14 @@ pub trait WorkerScheme: Send {
 
     /// Encode the current quantized update (the last `step`'s ũ_t).
     fn encode(&self, round: u64) -> Payload;
+
+    /// Encode into a reusable payload slot — byte-identical to
+    /// [`Self::encode`], but `out.bytes` is recycled and the scheme's own
+    /// scratch arena absorbs all temporaries, so steady-state rounds
+    /// allocate nothing. The default falls back to the allocating path.
+    fn encode_into(&mut self, round: u64, out: &mut Payload) {
+        *out = self.encode(round);
+    }
 
     /// Dense quantized update ũ_t of the last step.
     fn utilde(&self) -> &[f32];
@@ -103,11 +128,12 @@ pub trait MasterScheme: Send {
 pub struct SingleWorker {
     pipeline: WorkerPipeline,
     codec: Arc<dyn PayloadCodec>,
+    scratch: RoundScratch,
 }
 
 impl SingleWorker {
     pub fn new(pipeline: WorkerPipeline, codec: Arc<dyn PayloadCodec>) -> Self {
-        Self { pipeline, codec }
+        Self { pipeline, codec, scratch: RoundScratch::default() }
     }
 
     pub fn pipeline(&self) -> &WorkerPipeline {
@@ -128,6 +154,18 @@ impl WorkerScheme for SingleWorker {
         self.codec.encode(self.pipeline.utilde(), round)
     }
 
+    fn encode_into(&mut self, round: u64, out: &mut Payload) {
+        let Self { pipeline, codec, scratch } = self;
+        // exact-sparse fast path: the step already knows the support, so
+        // the encoder skips its O(d) non-zero re-scan entirely
+        if let Some(support) = pipeline.sparse_support() {
+            if codec.encode_sparse_into(pipeline.utilde(), support, round, out) {
+                return;
+            }
+        }
+        codec.encode_into(pipeline.utilde(), round, out, scratch);
+    }
+
     fn utilde(&self) -> &[f32] {
         self.pipeline.utilde()
     }
@@ -146,16 +184,31 @@ pub struct SingleMaster {
     chain: MasterChain,
     codec: Arc<dyn PayloadCodec>,
     buf: Vec<f32>,
+    scratch: RoundScratch,
     d: usize,
 }
 
 impl SingleMaster {
     pub fn new(chain: MasterChain, codec: Arc<dyn PayloadCodec>, d: usize) -> Self {
-        Self { chain, codec, buf: Vec::with_capacity(d), d }
+        Self { chain, codec, buf: Vec::with_capacity(d), scratch: RoundScratch::default(), d }
     }
 
     pub fn rhat(&self) -> &[f32] {
         self.chain.rhat()
+    }
+
+    /// Decode from a borrowed payload view and advance the chain — the
+    /// zero-copy path the blockwise container uses to hand out sub-payload
+    /// slices, and the zero-allocation steady-state single path.
+    pub fn receive_view(
+        &mut self,
+        payload: PayloadRef<'_>,
+        round: u64,
+        rtilde_out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        self.codec.decode_view(payload, self.d, round, &mut self.buf, &mut self.scratch)?;
+        self.chain.receive(&self.buf, rtilde_out);
+        Ok(())
     }
 }
 
@@ -170,9 +223,7 @@ impl MasterScheme for SingleMaster {
         round: u64,
         rtilde_out: &mut [f32],
     ) -> anyhow::Result<()> {
-        self.codec.decode(payload, self.d, round, &mut self.buf)?;
-        self.chain.receive(&self.buf, rtilde_out);
-        Ok(())
+        self.receive_view(payload.view(), round, rtilde_out)
     }
 }
 

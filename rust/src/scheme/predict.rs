@@ -28,6 +28,21 @@ pub trait Predict: Send + Debug {
     /// Advance the state given the received quantized update ũ_t.
     fn update(&mut self, utilde: &[f32]);
 
+    /// Fused master-side advance: write r̃_t = ũ_t + r̂_t into `rtilde_out`
+    /// and advance to r̂_{t+1}, in one pass over the state. Bit-identical to
+    /// `rtilde_out[i] = ũ[i] + r̂[i]` followed by `update(ũ)` — the same f32
+    /// ops in the same order — which the built-ins exploit to drop the
+    /// second d-length pass (DESIGN.md §3).
+    fn update_into(&mut self, utilde: &[f32], rtilde_out: &mut [f32]) {
+        debug_assert_eq!(utilde.len(), rtilde_out.len());
+        let rhat = self.rhat();
+        debug_assert_eq!(utilde.len(), rhat.len());
+        for i in 0..utilde.len() {
+            rtilde_out[i] = utilde[i] + rhat[i];
+        }
+        self.update(utilde);
+    }
+
     /// Borrowed state vectors for the HLO-backend bridge.
     fn state_view(&self) -> PredictorState<'_>;
 
@@ -122,6 +137,18 @@ impl Predict for PLinPredictor {
         }
     }
 
+    fn update_into(&mut self, utilde: &[f32], rtilde_out: &mut [f32]) {
+        debug_assert_eq!(self.rhat.len(), utilde.len());
+        debug_assert_eq!(utilde.len(), rtilde_out.len());
+        let b = self.beta;
+        for i in 0..utilde.len() {
+            // the r̃ sum is exactly the sum `update` would recompute
+            let rt = utilde[i] + self.rhat[i];
+            rtilde_out[i] = rt;
+            self.rhat[i] = b * rt;
+        }
+    }
+
     fn state_view(&self) -> PredictorState<'_> {
         PredictorState { rhat: &self.rhat, p: None, s: None, tau: None }
     }
@@ -197,6 +224,30 @@ impl Predict for EstKPredictor {
                 self.tau[i] = 0.0;
             } else {
                 // miss: decay the chain, accumulate the prediction
+                let rh = b * self.rhat[i];
+                self.rhat[i] = rh;
+                self.s[i] += rh;
+                self.tau[i] += 1.0;
+            }
+        }
+    }
+
+    fn update_into(&mut self, utilde: &[f32], rtilde_out: &mut [f32]) {
+        debug_assert_eq!(self.rhat.len(), utilde.len());
+        debug_assert_eq!(utilde.len(), rtilde_out.len());
+        let b = self.beta;
+        for i in 0..utilde.len() {
+            let ut = utilde[i];
+            // r̃ reads r̂_t before this component's state advances
+            rtilde_out[i] = ut + self.rhat[i];
+            if ut != 0.0 {
+                let p_new = (self.s[i] + ut) / (self.tau[i] + 1.0);
+                let rh = b * p_new;
+                self.p[i] = p_new;
+                self.rhat[i] = rh;
+                self.s[i] = rh;
+                self.tau[i] = 0.0;
+            } else {
                 let rh = b * self.rhat[i];
                 self.rhat[i] = rh;
                 self.s[i] += rh;
@@ -281,6 +332,41 @@ mod tests {
         let p6 = (s6 + u6) / 3.0;
         assert!((rhats[6] - beta * p6).abs() < 1e-5);
         assert_eq!(taus, vec![1.0, 2.0, 3.0, 0.0, 1.0, 2.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn fused_update_into_matches_two_pass_for_all_predictors() {
+        let d = 64;
+        let mk: Vec<(Box<dyn Predict>, Box<dyn Predict>)> = vec![
+            (Box::new(ZeroPredictor::new(d)), Box::new(ZeroPredictor::new(d))),
+            (Box::new(PLinPredictor::new(0.9, d)), Box::new(PLinPredictor::new(0.9, d))),
+            (Box::new(EstKPredictor::new(0.95, d)), Box::new(EstKPredictor::new(0.95, d))),
+        ];
+        for (mut fused, mut split) in mk {
+            let name = fused.name();
+            let mut rt_fused = vec![0.0f32; d];
+            let mut rt_split = vec![0.0f32; d];
+            for t in 0..40u64 {
+                // sparse-ish stream with sign changes and exact zeros
+                let ut: Vec<f32> = (0..d)
+                    .map(|i| {
+                        if (i as u64 + t) % 5 == 0 {
+                            ((i as f32) - 31.5) * if t % 2 == 0 { 0.5 } else { -0.25 }
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect();
+                fused.update_into(&ut, &mut rt_fused);
+                let rhat = split.rhat();
+                for i in 0..d {
+                    rt_split[i] = ut[i] + rhat[i];
+                }
+                split.update(&ut);
+                assert_eq!(rt_fused, rt_split, "{name} t={t}: rtilde");
+                assert_eq!(fused.rhat(), split.rhat(), "{name} t={t}: rhat");
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,19 @@ pub trait Quantize: Send + Sync + Debug {
     /// Quantize `u` into `out` (same length). `round` seeds Rand-K.
     fn quantize(&self, u: &[f32], out: &mut [f32], round: u64);
 
+    /// Sparse fast path: quantize exactly like [`Self::quantize`] AND
+    /// report the selected support into `idx` (ascending; `out` is zero
+    /// outside it, though `idx` entries may map to zero values). Returns
+    /// true when `idx` is valid. The default performs the plain dense
+    /// quantize and returns false — only exact-sparse quantizers override
+    /// this, which is what lets the pipeline skip O(d) support re-scans in
+    /// the encoder (DESIGN.md §3) and reuse the index buffer across rounds.
+    fn quantize_sparse(&self, u: &[f32], out: &mut [f32], round: u64, idx: &mut Vec<u32>) -> bool {
+        let _ = idx;
+        self.quantize(u, out, round);
+        false
+    }
+
     /// Wire format for this quantizer's messages.
     fn payload_kind(&self) -> PayloadKind;
 
@@ -149,6 +162,16 @@ impl Quantize for TopKQuantizer {
         }
     }
 
+    fn quantize_sparse(&self, u: &[f32], out: &mut [f32], _round: u64, idx: &mut Vec<u32>) -> bool {
+        debug_assert_eq!(u.len(), out.len());
+        crate::tensor::select_topk_into(u, self.k, idx);
+        out.fill(0.0);
+        for &i in idx.iter() {
+            out[i as usize] = u[i as usize];
+        }
+        true
+    }
+
     fn payload_kind(&self) -> PayloadKind {
         PayloadKind::SparseValues
     }
@@ -186,13 +209,18 @@ impl Quantize for TopKQQuantizer {
         Ok(())
     }
 
-    fn quantize(&self, u: &[f32], out: &mut [f32], _round: u64) {
+    fn quantize(&self, u: &[f32], out: &mut [f32], round: u64) {
+        let mut idx = Vec::new();
+        self.quantize_sparse(u, out, round, &mut idx);
+    }
+
+    fn quantize_sparse(&self, u: &[f32], out: &mut [f32], _round: u64, idx: &mut Vec<u32>) -> bool {
         debug_assert_eq!(u.len(), out.len());
         out.fill(0.0);
-        let idx = select_topk_indices(u, self.k);
+        crate::tensor::select_topk_into(u, self.k, idx);
         let (mut pos_sum, mut npos) = (0.0f64, 0u32);
         let (mut neg_sum, mut nneg) = (0.0f64, 0u32);
-        for &i in &idx {
+        for &i in idx.iter() {
             let v = u[i as usize];
             if v > 0.0 {
                 pos_sum += v as f64;
@@ -206,7 +234,7 @@ impl Quantize for TopKQQuantizer {
         // closely enough (values only, no index-dependent ops)
         let a_pos = if npos > 0 { (pos_sum / npos as f64) as f32 } else { 0.0 };
         let a_neg = if nneg > 0 { (neg_sum / nneg as f64) as f32 } else { 0.0 };
-        for &i in &idx {
+        for &i in idx.iter() {
             let v = u[i as usize];
             if v > 0.0 {
                 out[i as usize] = a_pos;
@@ -214,6 +242,7 @@ impl Quantize for TopKQQuantizer {
                 out[i as usize] = -a_neg;
             }
         }
+        true
     }
 
     fn payload_kind(&self) -> PayloadKind {
@@ -312,6 +341,41 @@ mod tests {
             assert_eq!(a, b, "{}", obj.name());
             assert_eq!(obj.payload_kind(), kind.payload_kind());
             assert_eq!(obj.tag(), kind.tag());
+        }
+    }
+
+    #[test]
+    fn quantize_sparse_matches_quantize_and_reports_support() {
+        let u = randu(600, 23);
+        let cases: Vec<Box<dyn Quantize>> = vec![
+            Box::new(NoneQuantizer),
+            Box::new(SignQuantizer),
+            Box::new(TopKQuantizer { k: 31 }),
+            Box::new(TopKQQuantizer { k: 31 }),
+            Box::new(RandKQuantizer { prob: 0.2 }),
+        ];
+        for q in cases {
+            let mut dense = vec![0.0f32; 600];
+            let mut sparse = vec![0.0f32; 600];
+            let mut idx = vec![99u32]; // stale content must not leak through
+            q.quantize(&u, &mut dense, 5);
+            let has_support = q.quantize_sparse(&u, &mut sparse, 5, &mut idx);
+            assert_eq!(dense, sparse, "{}", q.name());
+            if has_support {
+                // ascending, in range, and covering every non-zero output
+                assert!(idx.windows(2).all(|w| w[0] < w[1]), "{}", q.name());
+                for (i, &v) in sparse.iter().enumerate() {
+                    if v != 0.0 {
+                        assert!(idx.contains(&(i as u32)), "{} missing {i}", q.name());
+                    }
+                }
+            }
+            assert_eq!(
+                has_support,
+                matches!(q.name(), "topk" | "topkq"),
+                "{} support flag",
+                q.name()
+            );
         }
     }
 

@@ -6,7 +6,7 @@
 
 pub mod topk;
 
-pub use topk::{select_topk_indices, topk_threshold};
+pub use topk::{select_topk_indices, select_topk_into, topk_threshold};
 
 /// y += a * x
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {

@@ -7,60 +7,86 @@
 //! sort of only the selected K indices.
 
 /// Returns the indices of the K largest-|.| components, in ascending index
-/// order (the order the sparse payload encoder wants).
-///
-/// Hot path (K ≪ d): a sampled magnitude threshold prunes the candidate set
-/// to ~1.5K before the exact quickselect, and the index scratch is reused
-/// thread-locally — together ~10× over the naive full-range quickselect at
-/// d≈10⁵ (EXPERIMENTS.md §Perf). Falls back to the full quickselect when
-/// the sample under-estimates the threshold, so the result is always exact.
+/// order (the order the sparse payload encoder wants). Allocating wrapper
+/// over [`select_topk_into`].
 pub fn select_topk_indices(u: &[f32], k: usize) -> Vec<u32> {
-    let d = u.len();
-    if k == 0 || d == 0 {
-        return Vec::new();
-    }
-    if k >= d {
-        return (0..d as u32).collect();
-    }
-    SCRATCH.with(|cell| {
-        let mut idx = cell.borrow_mut();
-        if let Some(out) = select_via_sampled_threshold(u, k, &mut idx) {
-            return out;
-        }
-        select_full(u, k, &mut idx)
-    })
-}
-
-std::thread_local! {
-    static SCRATCH: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
-}
-
-/// Exact selection over the full index range (always correct).
-fn select_full(u: &[f32], k: usize, idx: &mut Vec<u32>) -> Vec<u32> {
-    idx.clear();
-    idx.extend(0..u.len() as u32);
-    quickselect(idx, u, k - 1);
-    let mut out: Vec<u32> = idx[..k].to_vec();
-    out.sort_unstable();
+    let mut out = Vec::new();
+    select_topk_into(u, k, &mut out);
     out
 }
 
-/// Candidate-pruned selection. Returns None when the sampled threshold was
+/// Select into a caller-owned buffer — the zero-allocation hot path
+/// (`out` is cleared first; candidate/sample scratch is thread-local, so
+/// steady-state calls perform no heap allocation at all).
+///
+/// Hot path (K ≪ d): a sampled magnitude threshold prunes the candidate set
+/// to ~1.5K before the exact quickselect — ~10× over the naive full-range
+/// quickselect at d≈10⁵ (EXPERIMENTS.md §Perf). Falls back to the full
+/// quickselect when the sample under-estimates the threshold, so the result
+/// is always exact.
+pub fn select_topk_into(u: &[f32], k: usize, out: &mut Vec<u32>) {
+    out.clear();
+    let d = u.len();
+    if k == 0 || d == 0 {
+        return;
+    }
+    if k >= d {
+        out.extend(0..d as u32);
+        return;
+    }
+    SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        if select_via_sampled_threshold(u, k, scratch, out) {
+            return;
+        }
+        select_full(u, k, &mut scratch.idx, out);
+    });
+}
+
+/// Reusable candidate-index and magnitude-sample buffers.
+#[derive(Default)]
+struct Scratch {
+    idx: Vec<u32>,
+    sample: Vec<f32>,
+}
+
+std::thread_local! {
+    static SCRATCH: std::cell::RefCell<Scratch> = std::cell::RefCell::new(Scratch::default());
+}
+
+/// Exact selection over the full index range (always correct).
+fn select_full(u: &[f32], k: usize, idx: &mut Vec<u32>, out: &mut Vec<u32>) {
+    idx.clear();
+    idx.extend(0..u.len() as u32);
+    quickselect(idx, u, k - 1);
+    out.extend_from_slice(&idx[..k]);
+    out.sort_unstable();
+}
+
+/// Candidate-pruned selection. Returns false when the sampled threshold was
 /// too aggressive (fewer than k candidates survive) — caller falls back.
-fn select_via_sampled_threshold(u: &[f32], k: usize, idx: &mut Vec<u32>) -> Option<Vec<u32>> {
+fn select_via_sampled_threshold(
+    u: &[f32],
+    k: usize,
+    scratch: &mut Scratch,
+    out: &mut Vec<u32>,
+) -> bool {
     let d = u.len();
     const SAMPLE: usize = 512;
     if d < 4 * SAMPLE || k * 8 >= d {
-        return None; // pruning not worth it / sample too coarse
+        return false; // pruning not worth it / sample too coarse
     }
     // deterministic strided sample of magnitudes, sorted descending
     let stride = d / SAMPLE;
-    let mut sample: Vec<f32> = (0..SAMPLE).map(|i| u[i * stride].abs()).collect();
+    let sample = &mut scratch.sample;
+    sample.clear();
+    sample.extend((0..SAMPLE).map(|i| u[i * stride].abs()));
     sample.sort_unstable_by(|a, b| b.total_cmp(a));
     // threshold at ~1.5x the target quantile plus slack: low enough that
     // >= k candidates survive with high probability, high enough to prune
     let q = ((SAMPLE * k) / d) * 3 / 2 + 8;
     let t = sample[q.min(SAMPLE - 1)];
+    let idx = &mut scratch.idx;
     idx.clear();
     for (i, &v) in u.iter().enumerate() {
         // total_cmp keeps NaN (ranked above all magnitudes by `better`)
@@ -70,14 +96,14 @@ fn select_via_sampled_threshold(u: &[f32], k: usize, idx: &mut Vec<u32>) -> Opti
         }
     }
     if idx.len() < k {
-        return None;
+        return false;
     }
     if idx.len() > k {
         quickselect(idx, u, k - 1);
     }
-    let mut out: Vec<u32> = idx[..k].to_vec();
+    out.extend_from_slice(&idx[..k]);
     out.sort_unstable();
-    Some(out)
+    true
 }
 
 /// The |.| threshold that Top-K implies: |u[i]| of the K-th kept component.
@@ -237,5 +263,22 @@ mod tests {
     fn all_zeros_keeps_lowest_indices() {
         let u = [0.0f32; 10];
         assert_eq!(select_topk_indices(&u, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn into_variant_matches_and_reuses_the_buffer() {
+        let mut rng = Pcg64::seeded(33);
+        let mut out = Vec::new();
+        for trial in 0..20 {
+            let d = if trial % 2 == 0 { 25_000 } else { 1 + rng.below(500) as usize };
+            let k = 1 + rng.below(d as u64) as usize;
+            let mut u = vec![0.0f32; d];
+            rng.fill_gaussian(&mut u, 1.0);
+            select_topk_into(&u, k, &mut out);
+            assert_eq!(out, select_topk_indices(&u, k), "trial={trial} d={d} k={k}");
+        }
+        // cleared on every call, including the degenerate ones
+        select_topk_into(&[1.0, 2.0], 0, &mut out);
+        assert!(out.is_empty());
     }
 }

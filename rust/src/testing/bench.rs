@@ -64,12 +64,21 @@ pub struct Bencher {
     pub warmup_secs: f64,
     pub measure_secs: f64,
     pub max_iters: u64,
+    /// substring filter (`-- --filter=<s>`): benches whose name does not
+    /// contain it are skipped, so hot-path microbenches can run alone
+    pub filter: Option<String>,
     results: Vec<BenchResult>,
 }
 
 impl Default for Bencher {
     fn default() -> Self {
-        Self { warmup_secs: 0.3, measure_secs: 1.0, max_iters: 1_000_000, results: Vec::new() }
+        Self {
+            warmup_secs: 0.3,
+            measure_secs: 1.0,
+            max_iters: 1_000_000,
+            filter: None,
+            results: Vec::new(),
+        }
     }
 }
 
@@ -88,17 +97,28 @@ impl Bencher {
         Self { warmup_secs: 0.01, measure_secs: 0.05, max_iters: 20_000, ..Default::default() }
     }
 
-    /// Pick budgets from bench-binary CLI args (`-- --smoke`).
-    pub fn from_args(args: &crate::cli::Args) -> Self {
-        if args.has_switch("smoke") {
-            Self::smoke()
-        } else {
-            Self::new()
-        }
+    /// Pick budgets from bench-binary CLI args (`-- --smoke`,
+    /// `-- --filter=<substring>`). A malformed `--filter` is an error, not
+    /// a silently-dropped filter (the PR-1 typed-getter contract).
+    pub fn from_args(args: &crate::cli::Args) -> anyhow::Result<Self> {
+        let mut b = if args.has_switch("smoke") { Self::smoke() } else { Self::new() };
+        b.filter = args.flag("filter")?.map(|s| s.to_string());
+        Ok(b)
     }
 
-    /// Benchmark `f`, which performs ONE iteration per call.
-    pub fn bench(&mut self, name: &str, elements: Option<u64>, mut f: impl FnMut()) -> &BenchResult {
+    /// Benchmark `f`, which performs ONE iteration per call. Returns `None`
+    /// when the bench was skipped by the `--filter` substring.
+    pub fn bench(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> Option<&BenchResult> {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return None;
+            }
+        }
         // warmup + calibration
         let t0 = Instant::now();
         let mut warm_iters = 0u64;
@@ -128,7 +148,7 @@ impl Bencher {
         };
         println!("{}", result.report_line());
         self.results.push(result);
-        self.results.last().unwrap()
+        self.results.last()
     }
 
     pub fn results(&self) -> &[BenchResult] {
@@ -177,11 +197,28 @@ mod tests {
     fn bench_produces_sane_numbers() {
         let mut b = Bencher { warmup_secs: 0.01, measure_secs: 0.02, ..Default::default() };
         let mut acc = 0u64;
-        let r = b.bench("noop-ish", Some(1), || {
-            acc = black_box(acc.wrapping_add(1));
-        });
+        let r = b
+            .bench("noop-ish", Some(1), || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .expect("no filter set");
         assert!(r.summary.mean > 0.0);
         assert!(r.iters >= 10);
+    }
+
+    #[test]
+    fn filter_skips_non_matching_benches() {
+        let mut b = Bencher {
+            warmup_secs: 0.005,
+            measure_secs: 0.01,
+            filter: Some("keep".to_string()),
+            ..Default::default()
+        };
+        let mut acc = 0u64;
+        assert!(b.bench("drop/this-one", Some(1), || acc += 1).is_none());
+        assert!(b.bench("keep/this-one", Some(1), || acc = black_box(acc + 1)).is_some());
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].name, "keep/this-one");
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Low-level utilities: deterministic RNG, statistics, timing.
+//! Low-level utilities: deterministic RNG, statistics, timing, and the
+//! scoped data-parallel helper for the block/worker-parallel hot paths.
 
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod timer;

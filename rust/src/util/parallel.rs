@@ -1,0 +1,181 @@
+//! Minimal scoped data-parallel helper for the block/worker-parallel hot
+//! paths (`scheme::blockwise`, `coordinator::master`).
+//!
+//! Design constraints (DESIGN.md §3):
+//!
+//! * **Determinism** — work items are independent and every output lands in
+//!   the item itself, so results are bit-identical for any thread count
+//!   (pinned by `tests/hotpath_parallel.rs` at 1/2/8 threads).
+//! * **No dependencies** — plain `std::thread::scope`, no rayon.
+//! * **Bounded** — at most [`max_threads`] scoped threads per call, and the
+//!   serial loop is used whenever one thread suffices (small item counts
+//!   must not pay a spawn).
+//!
+//! Thread sizing: `TEMPO_THREADS` overrides the default
+//! (`available_parallelism`, capped at 16 — beyond that the per-round spawn
+//! cost dominates for the d ≈ 10^5..10^6 regime these paths serve). Tests
+//! pin an exact count with [`override_threads`], which is thread-local so
+//! concurrent tests cannot race each other's overrides.
+
+use std::cell::Cell;
+use std::num::NonZeroUsize;
+use std::sync::OnceLock;
+
+std::thread_local! {
+    static OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Total components below which a block/worker-parallel stage should run
+/// serially — a per-round scoped spawn costs more than the work it hides
+/// (the DESIGN.md §3 thread-scope sizing rule, shared by every caller).
+pub const PAR_MIN_DIM: usize = 4096;
+
+/// `min_items_per_thread` for [`par_for_each_indexed`] that serialises the
+/// region when the total dimension is too small to amortise thread spawns.
+/// Results are bit-identical either way.
+pub fn gate_by_dim(d: usize) -> usize {
+    if d >= PAR_MIN_DIM {
+        1
+    } else {
+        usize::MAX
+    }
+}
+
+/// Upper bound on worker threads for a parallel region started from the
+/// current thread. 0 is never returned.
+pub fn max_threads() -> usize {
+    let o = OVERRIDE.with(|c| c.get());
+    if o > 0 {
+        return o;
+    }
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("TEMPO_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+            })
+            .min(16)
+    })
+}
+
+/// Scoped thread-count override (tests pin 1/2/8). Restores the previous
+/// value on drop.
+pub struct ThreadOverride {
+    prev: usize,
+}
+
+pub fn override_threads(n: usize) -> ThreadOverride {
+    let prev = OVERRIDE.with(|c| c.replace(n));
+    ThreadOverride { prev }
+}
+
+impl Drop for ThreadOverride {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        OVERRIDE.with(|c| c.set(prev));
+    }
+}
+
+/// Run `f(index, &mut item)` for every item, splitting the slice into at
+/// most [`max_threads`] contiguous chunks on scoped threads. `index` is the
+/// item's position in `items`. Falls back to the serial loop when a single
+/// thread suffices (or `min_items_per_thread` leaves no parallel work).
+pub fn par_for_each_indexed<T, F>(items: &mut [T], min_items_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let threads = max_threads().min(n / min_items_per_thread.max(1)).min(n);
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, chunk_items) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                // nested parallel regions (e.g. the master's per-worker
+                // decode fanning into a blockwise per-block decode) run
+                // serially: the outer region already owns the cores, and
+                // n_outer x n_inner scoped spawns would oversubscribe
+                let _nested = override_threads(1);
+                for (j, item) in chunk_items.iter_mut().enumerate() {
+                    f(ci * chunk + j, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_is_scoped_and_restored() {
+        let base = max_threads();
+        {
+            let _g = override_threads(3);
+            assert_eq!(max_threads(), 3);
+            {
+                let _g2 = override_threads(7);
+                assert_eq!(max_threads(), 7);
+            }
+            assert_eq!(max_threads(), 3);
+        }
+        assert_eq!(max_threads(), base);
+    }
+
+    #[test]
+    fn par_for_each_visits_every_item_once_with_its_index() {
+        for threads in [1usize, 2, 8] {
+            let _g = override_threads(threads);
+            let mut items: Vec<(usize, u64)> = (0..37).map(|i| (i, 0u64)).collect();
+            par_for_each_indexed(&mut items, 1, |idx, item| {
+                assert_eq!(idx, item.0);
+                item.1 += 1 + idx as u64;
+            });
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(item.1, 1 + i as u64, "threads={threads} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_items_per_thread_forces_serial() {
+        let _g = override_threads(8);
+        let mut items = vec![0u8; 3];
+        // 3 items / min 4 per thread => serial path
+        par_for_each_indexed(&mut items, 4, |_i, x| *x += 1);
+        assert_eq!(items, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn nested_regions_run_serially() {
+        let _g = override_threads(4);
+        let mut outer = vec![0usize; 8];
+        par_for_each_indexed(&mut outer, 1, |_i, x| {
+            // inside a spawned worker the override pins nesting to serial
+            *x = max_threads();
+        });
+        assert!(outer.iter().all(|&t| t == 1), "{outer:?}");
+        // and the calling thread's own setting is untouched
+        assert_eq!(max_threads(), 4);
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_for_each_indexed(&mut empty, 1, |_i, _x: &mut u8| unreachable!());
+        let mut one = vec![5u64];
+        par_for_each_indexed(&mut one, 1, |i, x| *x += i as u64 + 1);
+        assert_eq!(one, vec![6]);
+    }
+}

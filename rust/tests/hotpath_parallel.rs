@@ -1,0 +1,125 @@
+//! Determinism of the block/worker-parallel hot paths (DESIGN.md §3):
+//!
+//! * `encode_into` (the reusable-buffer / sparse-support fast path) must be
+//!   byte-identical to the allocating `encode` for every scheme kind, and
+//!   the master must reconstruct identically from either payload.
+//! * A multi-worker FullSync run — blockwise worker pipelines plus the
+//!   master's parallel per-worker decode — must produce bit-identical
+//!   `final_w` for thread counts 1, 2 and 8.
+
+use tempo::coding::Payload;
+use tempo::comm::channel_fabric;
+use tempo::config::experiment::Backend;
+use tempo::coordinator::master::{AggMode, MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::optim::LrSchedule;
+use tempo::scheme::{MasterScheme, Scheme, WorkerScheme};
+use tempo::util::parallel::override_threads;
+use tempo::util::Pcg64;
+
+const SPEC_BLOCKWISE: &str =
+    "blocks(head=0.3:topk:k=64/estk/ef/beta=0.9;tail=0.7:sign/plin/noef/beta=0.8)";
+
+#[test]
+fn encode_into_matches_encode_for_all_scheme_kinds() {
+    for spec in [
+        "topk:k=32/estk/ef/beta=0.95",
+        "topkq:k=32/plin/noef/beta=0.9",
+        "sign/plin/beta=0.99",
+        "none",
+        "randk:p=0.05",
+        SPEC_BLOCKWISE,
+    ] {
+        let d = 512;
+        let scheme = Scheme::parse(spec).unwrap();
+        let mut worker = scheme.worker(d).unwrap();
+        let mut master_a = scheme.master(d).unwrap();
+        let mut master_b = scheme.master(d).unwrap();
+        let mut rng = Pcg64::seeded(0xE0C0);
+        let mut g = vec![0.0f32; d];
+        let mut slot = Payload::empty();
+        let mut ra = vec![0.0f32; d];
+        let mut rb = vec![0.0f32; d];
+        for t in 0..20u64 {
+            rng.fill_gaussian(&mut g, 1.0);
+            worker.step(&g, if t == 0 { 0.0 } else { 1.0 });
+            let alloc = worker.encode(t);
+            worker.encode_into(t, &mut slot);
+            assert_eq!(slot.bytes, alloc.bytes, "{spec} t={t}: bytes");
+            assert_eq!(slot.bits, alloc.bits, "{spec} t={t}: bits");
+            assert_eq!(slot.kind_tag, alloc.kind_tag, "{spec} t={t}: tag");
+            // two independent masters fed the two payload variants must
+            // reconstruct identically, bit for bit
+            master_a.receive(&alloc, t, &mut ra).unwrap();
+            master_b.receive(&slot, t, &mut rb).unwrap();
+            let bits_a: Vec<u32> = ra.iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u32> = rb.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{spec} t={t}: rtilde");
+        }
+    }
+}
+
+/// Full multi-worker round loop over the channel fabric at a pinned master
+/// thread count; returns the bit pattern of final_w.
+fn run_master_fleet(d: usize, n: usize, steps: u64, threads: usize) -> Vec<u32> {
+    let _guard = override_threads(threads);
+    let scheme = Scheme::parse(SPEC_BLOCKWISE).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let (master_tx, workers_tx) = channel_fabric(n);
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed: 11,
+            clip_norm: None,
+            pipelined: true,
+            absent: Vec::new(),
+        };
+        let mut rng = Pcg64::new(11, 100 + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed: 11,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: AggMode::FullSync,
+    };
+    let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    report.final_w.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn master_aggregation_is_bit_identical_across_thread_counts() {
+    // d above the engine's parallel-decode gate so scoped threads engage
+    let (d, n, steps) = (6000usize, 3usize, 6u64);
+    let reference = run_master_fleet(d, n, steps, 1);
+    assert!(reference.iter().any(|&b| b != 0), "run must make progress");
+    for threads in [2usize, 8] {
+        let got = run_master_fleet(d, n, steps, threads);
+        assert_eq!(got, reference, "threads={threads}: final_w must be bit-identical");
+    }
+}

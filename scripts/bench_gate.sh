@@ -1,0 +1,103 @@
+#!/usr/bin/env bash
+# Bench-trajectory regression gate (documented in DESIGN.md §3/§8).
+#
+#   scripts/bench_gate.sh [--tolerance FRAC]
+#
+# Compares the newest BENCH_<N>.json at the repo root against the previous
+# comparable point, per bench name, on mean seconds/iteration. A bench
+# regresses when it got slower by more than FRAC (default 0.50 — smoke-mode
+# numbers on shared CI runners are noisy; tighten as the trajectory grows).
+#
+# Gating policy: WARN-ONLY until at least 3 comparable points exist, then
+# regressions fail the script (exit 1). Points are comparable when they use
+# schema tempo-bench-v1 in smoke mode with a non-empty bench set —
+# placeholder points (empty "benches") are skipped entirely, so a toolchain-
+# less authoring environment cannot poison the trajectory.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+TOLERANCE="${BENCH_GATE_TOLERANCE:-0.50}"
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --tolerance)
+            shift
+            TOLERANCE="${1:-}"
+            [[ -n "$TOLERANCE" ]] || { echo "--tolerance needs a value" >&2; exit 2; }
+            ;;
+        *) echo "usage: scripts/bench_gate.sh [--tolerance FRAC]" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+TOLERANCE="$TOLERANCE" python3 - <<'PY'
+import glob
+import json
+import os
+import re
+import sys
+
+tolerance = float(os.environ["TOLERANCE"])
+
+def point_number(path):
+    m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(path))
+    return int(m.group(1)) if m else None
+
+points = []
+numbered = [p for p in glob.glob("BENCH_*.json") if point_number(p) is not None]
+for path in sorted(numbered, key=point_number):
+    n = point_number(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-gate: skipping {path}: unreadable ({e})")
+        continue
+    if data.get("schema") != "tempo-bench-v1" or data.get("mode") != "smoke":
+        print(f"bench-gate: skipping {path}: not a comparable smoke point")
+        continue
+    benches = data.get("benches") or {}
+    flat = {}
+    for target, rows in benches.items():
+        for row in rows or []:
+            # malformed rows (schema drift, hand edits) are skipped, never
+            # crash the gate — the warn-only promise must hold
+            if not isinstance(row, dict) or "name" not in row:
+                print(f"bench-gate: {path}: skipping malformed row in {target}")
+                continue
+            flat[f"{target}::{row['name']}"] = row
+    if not flat:
+        print(f"bench-gate: skipping {path}: empty bench set (placeholder)")
+        continue
+    points.append((n, path, flat))
+
+if len(points) < 2:
+    print(f"bench-gate: {len(points)} comparable point(s) — nothing to compare, OK")
+    sys.exit(0)
+
+(prev_n, prev_path, prev), (cur_n, cur_path, cur) = points[-2], points[-1]
+warn_only = len(points) < 3
+mode = "warn-only" if warn_only else "enforcing"
+print(f"bench-gate: {cur_path} vs {prev_path} (tolerance {tolerance:.0%}, {mode})")
+
+regressions = []
+for name in sorted(set(prev) & set(cur)):
+    a = prev[name].get("mean_secs")
+    b = cur[name].get("mean_secs")
+    if not isinstance(a, (int, float)) or not isinstance(b, (int, float)) or a <= 0:
+        continue
+    delta = (b - a) / a
+    marker = ""
+    if delta > tolerance:
+        regressions.append((name, delta))
+        marker = "  <-- REGRESSION"
+    if abs(delta) > tolerance / 2 or marker:
+        print(f"  {name:<60} {a:.3e}s -> {b:.3e}s  ({delta:+.0%}){marker}")
+for name in sorted(set(cur) - set(prev)):
+    print(f"  {name:<60} new bench (no baseline)")
+
+if not regressions:
+    print("bench-gate: no regressions beyond tolerance, OK")
+    sys.exit(0)
+print(f"bench-gate: {len(regressions)} bench(es) regressed beyond {tolerance:.0%}")
+sys.exit(1 if not warn_only else 0)
+PY

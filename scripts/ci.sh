@@ -1,27 +1,49 @@
 #!/usr/bin/env bash
 # Tier-1 verification entry point (documented in ROADMAP.md / DESIGN.md).
 #
-#   scripts/ci.sh            # fmt + clippy + release build + tests
-#   scripts/ci.sh --fast     # skip fmt/clippy (build + tests only)
-#   scripts/ci.sh --bench    # run the [[bench]] targets in smoke mode and
-#                            # write machine-readable BENCH_<N>.json
+#   scripts/ci.sh                      # fmt + clippy + release build + tests
+#   scripts/ci.sh --fast               # skip fmt/clippy (build + tests only)
+#   scripts/ci.sh --bench              # run the [[bench]] targets in smoke
+#                                      # mode and write BENCH_<N>.json
+#   scripts/ci.sh --bench --bench-filter <s>
+#                                      # run only benches matching <s>: if a
+#                                      # bench *target* name matches, run
+#                                      # just those targets; otherwise pass
+#                                      # the substring down as a per-bench
+#                                      # name filter. No trajectory point is
+#                                      # written for filtered runs.
 #
 # Everything runs offline: the workspace vendors `anyhow` and stubs the
 # `xla` PJRT bindings (rust/vendor/README.md); integration tests and the
 # PJRT benches self-skip with a SKIP message when artifacts are absent.
 #
 # Every phase is wall-clocked; the summary lines are grep-able as
-# `^ci-phase ` (CI surfaces them without parsing cargo output).
+# `^ci-phase ` (CI surfaces them without parsing cargo output). Bench mode
+# additionally emits an aggregate `ci-phase bench` line covering the whole
+# bench stage.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 MODE="full"
-case "${1:-}" in
-    --fast)  MODE="fast" ;;
-    --bench) MODE="bench" ;;
-    "")      ;;
-    *) echo "usage: scripts/ci.sh [--fast|--bench]" >&2; exit 2 ;;
-esac
+BENCH_FILTER=""
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --fast)  MODE="fast" ;;
+        --bench) MODE="bench" ;;
+        --bench-filter)
+            shift
+            BENCH_FILTER="${1:-}"
+            [[ -n "$BENCH_FILTER" ]] || { echo "--bench-filter needs a value" >&2; exit 2; }
+            ;;
+        *) echo "usage: scripts/ci.sh [--fast|--bench] [--bench-filter <substr>]" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+if [[ -n "$BENCH_FILTER" && "$MODE" != "bench" ]]; then
+    echo "--bench-filter only makes sense with --bench" >&2
+    exit 2
+fi
 
 PHASE_NAMES=()
 PHASE_SECS=()
@@ -49,14 +71,48 @@ if [[ "$MODE" == "bench" ]]; then
     # Bench trajectory: run every [[bench]] target in smoke mode, collect
     # per-bench mean/p50/p99 + Melem/s, and assemble BENCH_<N>.json at the
     # repo root (N = current PR sequence number; bump when seeding anew).
-    BENCH_OUT="BENCH_2.json"
+    BENCH_OUT="BENCH_3.json"
     JSON_DIR="target/bench-json"
     mkdir -p "$JSON_DIR"
     BENCHES=(coding pipeline runtime paper_tables)
-    for bench in "${BENCHES[@]}"; do
-        phase "bench-$bench" \
-            cargo bench --bench "$bench" -- --smoke --json="$JSON_DIR/$bench.json"
+    BENCH_T0=$(date +%s.%N)
+
+    # --bench-filter: a target-name match narrows the target list; anything
+    # else is forwarded to the bench binaries as a per-name --filter
+    RUN_BENCHES=()
+    NAME_FILTER=""
+    if [[ -n "$BENCH_FILTER" ]]; then
+        for t in "${BENCHES[@]}"; do
+            [[ "$t" == *"$BENCH_FILTER"* ]] && RUN_BENCHES+=("$t")
+        done
+        if [[ ${#RUN_BENCHES[@]} -eq 0 ]]; then
+            RUN_BENCHES=("${BENCHES[@]}")
+            NAME_FILTER="$BENCH_FILTER"
+        fi
+    else
+        RUN_BENCHES=("${BENCHES[@]}")
+    fi
+
+    for bench in "${RUN_BENCHES[@]}"; do
+        if [[ -n "$NAME_FILTER" ]]; then
+            phase "bench-$bench" \
+                cargo bench --bench "$bench" -- --smoke \
+                --json="$JSON_DIR/$bench.json" --filter="$NAME_FILTER"
+        else
+            phase "bench-$bench" \
+                cargo bench --bench "$bench" -- --smoke --json="$JSON_DIR/$bench.json"
+        fi
     done
+    BENCH_T1=$(date +%s.%N)
+    PHASE_NAMES+=("bench")
+    PHASE_SECS+=("$(awk -v a="$BENCH_T0" -v b="$BENCH_T1" 'BEGIN { printf "%.1f", b - a }')")
+
+    if [[ -n "$BENCH_FILTER" ]]; then
+        summary
+        echo "ci.sh: filtered bench run ($BENCH_FILTER) — no trajectory point written"
+        exit 0
+    fi
+
     {
         printf '{\n  "schema": "tempo-bench-v1",\n  "mode": "smoke",\n  "benches": {\n'
         first=1
