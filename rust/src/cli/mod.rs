@@ -129,7 +129,7 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
-              [--scheme <spec>] [--fabric <spec>] [--csv out.csv]
+              [--scheme <spec>] [--fabric <spec>] [--shards N] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
@@ -137,6 +137,12 @@ USAGE:
   tempo master-serve --listen <addr:port> --workers N --config <file.toml>
   tempo worker-connect --connect <addr:port> --worker-id I --config <file.toml>
   tempo help
+
+Master sharding (--shards N or the [shards] config table; DESIGN.md §4):
+  the master splits by the scheme's blocks(...) partition — shard s owns a
+  subset of blocks and aggregates its slice of w. Over TCP, shard s serves
+  on listen-port + s and workers dial every shard; shards=1 is bit-identical
+  to the unsharded master. [shards] assign = "emb:0;rest:1" pins blocks.
 
 Scheme spec strings (see DESIGN.md for the grammar → paper Eq. (1) mapping):
   topk:k_frac=0.0024/estk/ef/beta=0.99        Table I bottom row

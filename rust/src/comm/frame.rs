@@ -36,6 +36,11 @@ impl FrameKind {
 pub struct Frame {
     pub kind: FrameKind,
     pub worker: u32,
+    /// Owning master shard of this frame's blocks (0 on unsharded fabrics).
+    /// Worker→shard routing itself is by connection; the header id is what
+    /// lets the scatter/gather layer validate that a payload landed on the
+    /// shard that owns its blocks.
+    pub shard: u16,
     pub round: u64,
     /// payload body (entropy-coded update or raw f32 broadcast)
     pub payload_tag: u8,
@@ -51,6 +56,7 @@ impl Frame {
         Self {
             kind: FrameKind::Update,
             worker,
+            shard: 0,
             round,
             payload_tag: payload.kind_tag,
             payload_bits: payload.bits,
@@ -60,19 +66,36 @@ impl Frame {
     }
 
     pub fn broadcast(round: u64, dense: &[f32]) -> Self {
-        let mut bytes = Vec::with_capacity(dense.len() * 4);
+        Self::broadcast_from(round, dense, Vec::with_capacity(dense.len() * 4))
+    }
+
+    /// [`Self::broadcast`] into a recycled byte buffer: `buf` is cleared and
+    /// refilled, so once it has grown to `4·d` capacity the per-round
+    /// broadcast staging allocates nothing (the same ping-pong reclaim the
+    /// update path uses — the round engine takes `frame.bytes` back after
+    /// the transport is done with the frame).
+    pub fn broadcast_from(round: u64, dense: &[f32], mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        buf.reserve(dense.len() * 4);
         for v in dense {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
         }
         Self {
             kind: FrameKind::Broadcast,
             worker: u32::MAX,
+            shard: 0,
             round,
             payload_tag: 0,
-            payload_bits: bytes.len() as u64 * 8,
-            bytes,
+            payload_bits: buf.len() as u64 * 8,
+            bytes: buf,
             loss: 0.0,
         }
+    }
+
+    /// Tag this frame with its owning master shard.
+    pub fn with_shard(mut self, shard: u16) -> Self {
+        self.shard = shard;
+        self
     }
 
     /// Zero-payload "absent this round" marker (fabric churn injection).
@@ -80,6 +103,7 @@ impl Frame {
         Self {
             kind: FrameKind::Skip,
             worker,
+            shard: 0,
             round,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -110,6 +134,7 @@ impl Frame {
         Self {
             kind: FrameKind::Shutdown,
             worker: u32::MAX,
+            shard: 0,
             round: u64::MAX,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -132,13 +157,21 @@ impl Frame {
 
     /// Decode a broadcast frame body into f32s.
     pub fn broadcast_f32(&self, d: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; d];
+        self.broadcast_f32_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// Decode a broadcast frame body into an existing buffer — the
+    /// zero-allocation leg of the worker's apply path (the caller's dense
+    /// update buffer is recycled every round).
+    pub fn broadcast_f32_into(&self, out: &mut [f32]) -> Result<()> {
         anyhow::ensure!(self.kind == FrameKind::Broadcast, "not a broadcast frame");
-        anyhow::ensure!(self.bytes.len() == d * 4, "broadcast size mismatch");
-        Ok(self
-            .bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        anyhow::ensure!(self.bytes.len() == out.len() * 4, "broadcast size mismatch");
+        for (o, c) in out.iter_mut().zip(self.bytes.chunks_exact(4)) {
+            *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
     }
 
     /// Total bytes on the wire (header + body) — what TCP actually moves.
@@ -153,6 +186,7 @@ impl Frame {
         out.push(self.kind as u8);
         out.push(self.payload_tag);
         out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.shard.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.payload_bits.to_le_bytes());
         out.extend_from_slice(&self.loss.to_le_bytes());
@@ -168,16 +202,18 @@ impl Frame {
         let kind = FrameKind::from_u8(buf[0])?;
         let payload_tag = buf[1];
         let worker = u32::from_le_bytes(buf[2..6].try_into().unwrap());
-        let round = u64::from_le_bytes(buf[6..14].try_into().unwrap());
-        let payload_bits = u64::from_le_bytes(buf[14..22].try_into().unwrap());
-        let loss = f32::from_le_bytes(buf[22..26].try_into().unwrap());
-        let body_len = u64::from_le_bytes(buf[26..34].try_into().unwrap()) as usize;
+        let shard = u16::from_le_bytes(buf[6..8].try_into().unwrap());
+        let round = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+        let payload_bits = u64::from_le_bytes(buf[16..24].try_into().unwrap());
+        let loss = f32::from_le_bytes(buf[24..28].try_into().unwrap());
+        let body_len = u64::from_le_bytes(buf[28..36].try_into().unwrap()) as usize;
         if buf.len() != HEADER_LEN + body_len {
             bail!("frame body length mismatch: {} vs {}", buf.len() - HEADER_LEN, body_len);
         }
         Ok(Self {
             kind,
             worker,
+            shard,
             round,
             payload_tag,
             payload_bits,
@@ -187,7 +223,7 @@ impl Frame {
     }
 }
 
-pub const HEADER_LEN: usize = 1 + 1 + 4 + 8 + 8 + 4 + 8;
+pub const HEADER_LEN: usize = 1 + 1 + 4 + 2 + 8 + 8 + 4 + 8;
 
 #[cfg(test)]
 mod tests {
@@ -198,6 +234,7 @@ mod tests {
         let f = Frame {
             kind: FrameKind::Update,
             worker: 3,
+            shard: 9,
             round: 99,
             payload_tag: 1,
             bytes: vec![1, 2, 3, 4, 5],
@@ -209,6 +246,7 @@ mod tests {
         let g = Frame::deserialize(&buf).unwrap();
         assert_eq!(g.kind, FrameKind::Update);
         assert_eq!(g.worker, 3);
+        assert_eq!(g.shard, 9);
         assert_eq!(g.round, 99);
         assert_eq!(g.payload_bits, 37);
         assert_eq!(g.loss, 1.25);
@@ -221,6 +259,37 @@ mod tests {
         let f = Frame::broadcast(7, &v);
         assert_eq!(f.broadcast_f32(3).unwrap(), v);
         assert!(f.broadcast_f32(4).is_err());
+        let mut out = vec![0.0f32; 3];
+        f.broadcast_f32_into(&mut out).unwrap();
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn broadcast_from_recycles_the_buffer() {
+        let v = vec![4.0f32, 5.0];
+        // a recycled buffer with stale content and excess capacity
+        let mut buf = Vec::with_capacity(64);
+        buf.extend_from_slice(&[0xFF; 24]);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        let f = Frame::broadcast_from(11, &v, buf);
+        assert_eq!(f.kind, FrameKind::Broadcast);
+        assert_eq!(f.round, 11);
+        assert_eq!(f.payload_bits, 64);
+        assert_eq!(f.broadcast_f32(2).unwrap(), v);
+        // same allocation came through: no per-round buffer churn
+        assert_eq!(f.bytes.capacity(), cap);
+        assert_eq!(f.bytes.as_ptr(), ptr);
+        // and the bytes match the allocating constructor exactly
+        assert_eq!(f.bytes, Frame::broadcast(11, &v).bytes);
+    }
+
+    #[test]
+    fn with_shard_tags_and_roundtrips() {
+        let f = Frame::skip(2, 17).with_shard(3);
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        assert_eq!(g.shard, 3);
+        assert_eq!(Frame::skip(2, 17).shard, 0, "constructors default to shard 0");
     }
 
     #[test]

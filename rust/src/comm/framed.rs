@@ -90,6 +90,7 @@ mod tests {
         Frame {
             kind: FrameKind::Update,
             worker: 5,
+            shard: 2,
             round: 42,
             payload_tag: 1,
             bytes: (0..nbytes).map(|i| (i % 251) as u8).collect(),

@@ -14,6 +14,10 @@
 //!   drop-and-retransmit) wrapped around any worker transport;
 //! * [`sender`] — the double-buffered send stage that overlaps payload
 //!   shipping of round t with the data prefetch for round t+1;
+//! * [`shard`] — the scatter/gather layer of the block-sharded master:
+//!   block→shard maps plus a worker endpoint that routes per-block
+//!   sub-payloads to their owning shard and reassembles sharded
+//!   broadcasts (works over either fabric below);
 //! * exact per-message byte accounting feeding [`crate::metrics::CommStats`].
 //!
 //! Both fabrics implement the same two traits below, so `WorkerLoop` /
@@ -26,12 +30,14 @@ pub mod fault;
 pub mod frame;
 pub mod framed;
 pub mod sender;
+pub mod shard;
 pub mod tcp;
 
 pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
 pub use fault::{FaultInjector, FaultPolicy, FaultStats};
 pub use frame::{Frame, FrameKind};
 pub use sender::PipelinedSender;
+pub use shard::{ShardMap, ShardedWorkerEndpoint};
 
 use anyhow::Result;
 

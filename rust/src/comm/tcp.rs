@@ -44,6 +44,7 @@ impl TcpWorker {
         let hello = Frame {
             kind: super::frame::FrameKind::Update,
             worker: worker_id,
+            shard: 0,
             round: u64::MAX,
             payload_tag: 0,
             bytes: Vec::new(),

@@ -7,6 +7,7 @@ use crate::optim::LrSchedule;
 use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 
 use super::fabric::FabricSpec;
+use super::shards::ShardsSpec;
 use super::value::Value;
 
 /// Scheme spec as written in configs: either a registry spec *string*
@@ -163,6 +164,8 @@ pub struct ExperimentConfig {
     pub backend: Backend,
     /// Transport, pipelining, aggregation mode and scenario injection.
     pub fabric: FabricSpec,
+    /// Master sharding: shard count and block→shard assignment.
+    pub shards: ShardsSpec,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -192,6 +195,7 @@ impl Default for ExperimentConfig {
             scheme: SchemeSpec::default(),
             backend: Backend::Rust,
             fabric: FabricSpec::default(),
+            shards: ShardsSpec::default(),
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -239,6 +243,9 @@ impl ExperimentConfig {
         if let Some(x) = v.opt("fabric") {
             c.fabric = FabricSpec::from_value(x)?;
         }
+        if let Some(x) = v.opt("shards") {
+            c.shards = ShardsSpec::from_value(x)?;
+        }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
                 c.lr = x.as_f32()?;
@@ -285,8 +292,16 @@ impl ExperimentConfig {
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
         anyhow::ensure!(self.steps >= 1, "need at least one step");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
-        self.scheme.to_scheme().context("invalid [scheme]")?;
+        let scheme = self.scheme.to_scheme().context("invalid [scheme]")?;
         self.fabric.validate().context("invalid [fabric]")?;
+        self.shards.validate().context("invalid [shards]")?;
+        if self.shards.is_sharded() {
+            anyhow::ensure!(
+                scheme.is_blockwise(),
+                "shards.count = {} needs a blocks(...) scheme (the master shards by block)",
+                self.shards.count
+            );
+        }
         for &(w, _) in &self.fabric.straggler_ms {
             anyhow::ensure!(w < self.workers, "fabric.straggler names worker {w} out of range");
         }
@@ -387,6 +402,21 @@ noise = 0.8
         // churn naming a worker outside the pool is a config error
         let bad = "name = \"x\"\nworkers = 2\n\n[fabric]\nchurn = \"2:3..5\"\n";
         assert!(ExperimentConfig::from_toml_str(bad).is_err());
+    }
+
+    #[test]
+    fn shards_table_rides_the_config() {
+        let toml = "name = \"x\"\n\n[scheme]\nspec = \"blocks(a=0.5:sign;b=0.5:none)\"\n\n\
+                    [shards]\ncount = 2\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        assert_eq!(c.shards.count, 2);
+        assert!(c.shards.is_sharded());
+        // sharding a single (non-blockwise) scheme is a config error
+        let bad = "name = \"x\"\n\n[shards]\ncount = 2\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // shards = 1 is always fine (the unsharded master)
+        let one = "name = \"x\"\n\n[shards]\ncount = 1\n";
+        assert!(!ExperimentConfig::from_toml_str(one).unwrap().shards.is_sharded());
     }
 
     #[test]

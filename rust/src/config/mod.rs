@@ -8,9 +8,11 @@
 pub mod experiment;
 pub mod fabric;
 pub mod json;
+pub mod shards;
 pub mod toml;
 pub mod value;
 
 pub use experiment::{ExperimentConfig, SchemeSpec};
 pub use fabric::{FabricSpec, TransportKind};
+pub use shards::ShardsSpec;
 pub use value::Value;

@@ -1,0 +1,144 @@
+//! `[shards]` configuration: how many master shards the coordinator runs
+//! and which blocks land on which shard.
+//!
+//! ```toml
+//! [shards]
+//! count = 4                  # 1 (default) = the plain unsharded master
+//! assign = "emb:0;rest:1"    # explicit block:shard pairs; round-robin by
+//!                            # block order when omitted
+//! ```
+//!
+//! CLI override: `--shards N` (count only; explicit assignment stays a
+//! config-file concern). `count > 1` requires a `blocks(...)` scheme with
+//! at least `count` blocks — the block partition is what the master shards
+//! by, and `shards = 1` is guaranteed bit-identical to the unsharded
+//! master (the launcher bypasses the sharding machinery entirely).
+
+use std::ops::Range;
+
+use anyhow::{Context, Result};
+
+use super::value::Value;
+use crate::comm::ShardMap;
+
+/// Fully-resolved `[shards]` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardsSpec {
+    /// Number of master shards (1 = unsharded).
+    pub count: usize,
+    /// Explicit `block → shard` pairs; empty = round-robin by block order.
+    pub assign: Vec<(String, usize)>,
+}
+
+impl Default for ShardsSpec {
+    fn default() -> Self {
+        Self { count: 1, assign: Vec::new() }
+    }
+}
+
+impl ShardsSpec {
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut s = Self::default();
+        if let Some(x) = v.opt("count") {
+            s.count = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("assign") {
+            s.assign = parse_assign(x.as_str()?)?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.count >= 1, "shards.count must be >= 1");
+        for (name, shard) in &self.assign {
+            anyhow::ensure!(
+                *shard < self.count,
+                "shards.assign puts block {name:?} on shard {shard}, count is {}",
+                self.count
+            );
+        }
+        Ok(())
+    }
+
+    /// Whether the sharded master path is requested at all.
+    pub fn is_sharded(&self) -> bool {
+        self.count > 1
+    }
+
+    /// Resolve against a scheme's block layout into the shared
+    /// [`ShardMap`] both sides of the fabric build their view from.
+    pub fn build_map(&self, layout: &[(String, Range<usize>)]) -> Result<ShardMap> {
+        if self.assign.is_empty() {
+            ShardMap::round_robin(layout, self.count)
+        } else {
+            ShardMap::explicit(layout, self.count, &self.assign)
+        }
+    }
+}
+
+/// `"emb:0;rest:1"` → [("emb", 0), ("rest", 1)]
+fn parse_assign(s: &str) -> Result<Vec<(String, usize)>> {
+    s.split(';')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let (name, shard) =
+                t.split_once(':').context("shard assignments are block:shard")?;
+            let name = name.trim();
+            anyhow::ensure!(!name.is_empty(), "empty block name in shard assignment");
+            Ok((
+                name.to_string(),
+                shard
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("shard id {shard:?} for block {name:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn defaults_are_unsharded() {
+        let s = ShardsSpec::default();
+        assert_eq!(s.count, 1);
+        assert!(!s.is_sharded());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_table_parses() {
+        let v = toml::parse("[shards]\ncount = 2\nassign = \"a:0; b:1\"\n").unwrap();
+        let s = ShardsSpec::from_value(v.get("shards").unwrap()).unwrap();
+        assert_eq!(s.count, 2);
+        assert!(s.is_sharded());
+        assert_eq!(s.assign, vec![("a".to_string(), 0), ("b".to_string(), 1)]);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let parse = |t: &str| {
+            toml::parse(t).and_then(|v| ShardsSpec::from_value(v.get("shards").unwrap()))
+        };
+        assert!(parse("[shards]\ncount = 0\n").is_err());
+        assert!(parse("[shards]\ncount = 2\nassign = \"a:2\"\n").is_err(), "shard id range");
+        assert!(parse("[shards]\ncount = 2\nassign = \"a-0\"\n").is_err(), "separator");
+        assert!(parse("[shards]\ncount = 2\nassign = \":1\"\n").is_err(), "empty name");
+    }
+
+    #[test]
+    fn build_map_picks_round_robin_or_explicit() {
+        let layout = vec![("a".to_string(), 0..10), ("b".to_string(), 10..30)];
+        let rr = ShardsSpec { count: 2, assign: Vec::new() };
+        let m = rr.build_map(&layout).unwrap();
+        assert_eq!(m.shard_of_blocks(), &[0, 1]);
+        let ex = ShardsSpec { count: 2, assign: vec![("a".into(), 1), ("b".into(), 0)] };
+        let m = ex.build_map(&layout).unwrap();
+        assert_eq!(m.shard_of_blocks(), &[1, 0]);
+    }
+}

@@ -11,15 +11,19 @@ use anyhow::{Context, Result};
 
 use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats};
 use crate::comm::tcp::{TcpMaster, TcpWorker};
-use crate::comm::{channel_fabric, MasterTransport, WorkerTransport};
-use crate::config::{ExperimentConfig, FabricSpec, TransportKind};
+use crate::comm::{
+    channel_fabric, MasterTransport, ShardMap, ShardedWorkerEndpoint, WorkerTransport,
+};
+use crate::config::{ExperimentConfig, FabricSpec, ShardsSpec, TransportKind};
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
 use crate::metrics::{CommStats, RunPoint};
 use crate::model::{Manifest, ModelKind};
-use crate::runtime::Runtime;
+use crate::runtime::{ModelExec, Runtime};
+use crate::scheme::Scheme;
 use crate::util::timer::PhaseTimes;
 
-use super::master::{MasterLoop, MasterSpec};
+use super::master::{evaluate, MasterLoop, MasterReport, MasterSpec, TestStream};
+use super::shard::ShardedMasterLoop;
 use super::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
 
 /// Aggregated result of a training run.
@@ -114,23 +118,136 @@ pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
     };
     let mut fault_stats = Vec::new();
     if fabric.has_faults() {
-        workers = workers
-            .into_iter()
-            .enumerate()
-            .map(|(wid, transport)| {
-                let policy = FaultPolicy::new(
-                    fabric.straggler_for(wid),
-                    fabric.drop_prob,
-                    fabric.retransmit_ms,
-                    fabric.seed,
-                    wid as u32,
-                );
-                fault_stats.push(policy.stats());
-                Box::new(FaultInjector::new(transport, policy)) as Box<dyn WorkerTransport>
-            })
-            .collect();
+        workers = wrap_faults(fabric, workers, &mut fault_stats);
     }
     Ok((master, workers, fault_stats))
+}
+
+fn wrap_faults(
+    fabric: &FabricSpec,
+    workers: Vec<Box<dyn WorkerTransport>>,
+    fault_stats: &mut Vec<Arc<Mutex<FaultStats>>>,
+) -> Vec<Box<dyn WorkerTransport>> {
+    workers
+        .into_iter()
+        .enumerate()
+        .map(|(wid, transport)| {
+            let policy = FaultPolicy::new(
+                fabric.straggler_for(wid),
+                fabric.drop_prob,
+                fabric.retransmit_ms,
+                fabric.seed,
+                wid as u32,
+            );
+            fault_stats.push(policy.stats());
+            Box::new(FaultInjector::new(transport, policy)) as Box<dyn WorkerTransport>
+        })
+        .collect()
+}
+
+/// What [`build_sharded_fabric`] hands back: one master endpoint per
+/// shard, one [`ShardedWorkerEndpoint`] per worker, and the fault counters.
+pub type ShardedFabric =
+    (Vec<Box<dyn MasterTransport>>, Vec<Box<dyn WorkerTransport>>, Vec<Arc<Mutex<FaultStats>>>);
+
+/// Sharded fabric: one plain fabric per shard (channel or TCP, same as
+/// [`build_fabric`]), transposed into per-worker [`ShardedWorkerEndpoint`]s
+/// that scatter updates by block and gather the per-shard broadcasts.
+/// Fault injection wraps the *sharded* endpoint, so a straggler/drop
+/// scenario delays each logical update once — every shard sees the same
+/// degraded schedule, exactly like the unsharded run.
+pub fn build_sharded_fabric(
+    fabric: &FabricSpec,
+    n: usize,
+    map: &Arc<ShardMap>,
+) -> Result<ShardedFabric> {
+    let n_shards = map.n_shards();
+    // inner fabrics carry no fault injection of their own
+    let clean = FabricSpec { straggler_ms: Vec::new(), drop_prob: 0.0, ..fabric.clone() };
+    let mut masters = Vec::with_capacity(n_shards);
+    let mut per_worker: Vec<Vec<Box<dyn WorkerTransport>>> =
+        (0..n).map(|_| Vec::with_capacity(n_shards)).collect();
+    for shard in 0..n_shards {
+        let (master, workers, _) = build_fabric(&clean, n)
+            .with_context(|| format!("shard {shard} fabric"))?;
+        masters.push(master);
+        for (w, t) in workers.into_iter().enumerate() {
+            per_worker[w].push(t);
+        }
+    }
+    let mut workers_out: Vec<Box<dyn WorkerTransport>> = Vec::with_capacity(n);
+    for parts in per_worker {
+        workers_out.push(Box::new(ShardedWorkerEndpoint::new(Arc::clone(map), parts)?));
+    }
+    let mut fault_stats = Vec::new();
+    if fabric.has_faults() {
+        workers_out = wrap_faults(fabric, workers_out, &mut fault_stats);
+    }
+    Ok((masters, workers_out, fault_stats))
+}
+
+/// Master-side endpoints for a run: the plain single master, or one
+/// endpoint per shard.
+pub enum MasterEndpoints {
+    Plain(Box<dyn MasterTransport>),
+    Sharded(Arc<ShardMap>, Vec<Box<dyn MasterTransport>>),
+}
+
+impl MasterEndpoints {
+    /// Drive the headless round loop on whichever side this is.
+    pub fn run_headless(self, spec: MasterSpec, d: usize) -> Result<MasterReport> {
+        match self {
+            MasterEndpoints::Plain(t) => MasterLoop::new(spec, t).run_headless(d),
+            MasterEndpoints::Sharded(map, t) => {
+                ShardedMasterLoop::new(spec, map, t)?.run_headless(d)
+            }
+        }
+    }
+}
+
+/// What [`build_run_fabric`] hands back.
+pub type RunFabric = (MasterEndpoints, Vec<Box<dyn WorkerTransport>>, Vec<Arc<Mutex<FaultStats>>>);
+
+/// Build the fabric for a run with the configured master shard count
+/// (`count = 1` = the plain unsharded fabric) — the one front door the
+/// launcher, the experiment drivers and the integration tests share, so
+/// sharded and plain construction cannot drift apart.
+pub fn build_run_fabric(
+    fabric: &FabricSpec,
+    n: usize,
+    shards: &ShardsSpec,
+    scheme: &Scheme,
+    d: usize,
+) -> Result<RunFabric> {
+    if shards.is_sharded() {
+        let layout = scheme.block_layout(d)?;
+        let map = shards.build_map(&layout).context("invalid [shards] for this scheme")?;
+        let map = Arc::new(map);
+        let (masters, workers, stats) = build_sharded_fabric(fabric, n, &map)?;
+        Ok((MasterEndpoints::Sharded(map, masters), workers, stats))
+    } else {
+        let (master, workers, stats) = build_fabric(fabric, n)?;
+        Ok((MasterEndpoints::Plain(master), workers, stats))
+    }
+}
+
+/// Model-backed sharded master run: the per-shard engines run headless
+/// (evaluation needs the assembled vector), and the gathered final `w` is
+/// scored once against the PJRT model — the sharded counterpart of
+/// [`MasterLoop::run`].
+pub fn run_sharded_master(
+    spec: MasterSpec,
+    map: Arc<ShardMap>,
+    transports: Vec<Box<dyn MasterTransport>>,
+    runtime: &Runtime,
+) -> Result<MasterReport> {
+    let model = ModelExec::load(runtime, &spec.model).context("sharded master: load model")?;
+    let w0 = runtime.manifest.load_init(&model.entry)?;
+    let test = TestStream::for_model(&model.entry, &spec);
+    let mut eval = |w: &[f32], batches: usize, salt: u64| -> Result<(f64, f64)> {
+        evaluate(&model, w, &test, batches, salt)
+    };
+    ShardedMasterLoop::new(spec, map, transports)?.run_with_w(w0, Some(&mut eval))
 }
 
 /// Run a full experiment in-process: n worker threads + the master on the
@@ -154,7 +271,8 @@ pub fn run_training_with_manifest(
     let dataset = build_dataset(entry.kind, &entry, cfg);
     let schedule = cfg.schedule();
 
-    let (master_tx, workers_tx, fault_stats) = build_fabric(&cfg.fabric, cfg.workers)?;
+    let (master_side, workers_tx, fault_stats) =
+        build_run_fabric(&cfg.fabric, cfg.workers, &cfg.shards, &scheme, d)?;
 
     let mut handles = Vec::with_capacity(cfg.workers);
     for (wid, transport) in workers_tx.into_iter().enumerate() {
@@ -194,9 +312,15 @@ pub fn run_training_with_manifest(
         aggregation: cfg.fabric.aggregation(),
     };
     let master_runtime = Runtime::new(manifest.clone())?;
-    let master_result = MasterLoop::new(master_spec, master_tx)
-        .run(&master_runtime)
-        .context("master loop");
+    let master_result = match master_side {
+        MasterEndpoints::Plain(master_tx) => {
+            MasterLoop::new(master_spec, master_tx).run(&master_runtime).context("master loop")
+        }
+        MasterEndpoints::Sharded(map, masters) => {
+            run_sharded_master(master_spec, map, masters, &master_runtime)
+                .context("sharded master loop")
+        }
+    };
 
     // Join workers FIRST: if one of them failed, its error (e.g. "loss
     // diverged") is the root cause — the master only sees a hung channel.

@@ -132,7 +132,7 @@ pub struct MasterReport {
 }
 
 /// (w, eval_batches, salt) → (test_loss, test_acc).
-type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
+pub(crate) type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
 
 /// Master loop: drives `steps` rounds over the transport.
 pub struct MasterLoop<T: MasterTransport> {
@@ -174,15 +174,30 @@ struct Inbox {
     pending: Vec<VecDeque<Frame>>,
     /// total frames received per worker == that worker's round progress
     delivered: Vec<u64>,
+    /// this engine's shard id — every arriving frame must carry it (0 on
+    /// unsharded fabrics, where every constructor stamps 0)
+    shard: u16,
 }
 
 impl Inbox {
-    fn new(n: usize) -> Self {
-        Self { pending: (0..n).map(|_| VecDeque::new()).collect(), delivered: vec![0; n] }
+    fn new(n: usize, shard: u16) -> Self {
+        Self {
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            delivered: vec![0; n],
+            shard,
+        }
     }
 
     fn push(&mut self, wid: usize, frame: Frame) -> Result<()> {
         anyhow::ensure!(wid < self.pending.len(), "bad worker id {wid}");
+        // crossed shard wiring must fail loudly, not decode wrong blocks
+        // into wrong chains: same-shaped sub-containers would parse
+        anyhow::ensure!(
+            frame.shard == self.shard,
+            "worker {wid} sent a frame for shard {} to shard {}",
+            frame.shard,
+            self.shard
+        );
         self.delivered[wid] += 1;
         self.pending[wid].push_back(frame);
         Ok(())
@@ -205,9 +220,9 @@ impl Inbox {
 
 fn run_rounds<T: MasterTransport>(
     spec: &MasterSpec,
-    mut transport: T,
-    mut w: Vec<f32>,
-    mut eval: Option<&mut EvalFn<'_>>,
+    transport: T,
+    w: Vec<f32>,
+    eval: Option<&mut EvalFn<'_>>,
 ) -> Result<MasterReport> {
     let d = w.len();
     let n = transport.n_workers();
@@ -215,7 +230,31 @@ fn run_rounds<T: MasterTransport>(
     for _ in 0..n {
         chains.push(spec.scheme.master(d)?);
     }
-    let mut inbox = Inbox::new(n);
+    run_engine(spec, 0, chains, transport, w, eval)
+}
+
+/// The reusable round engine: decode chains + aggregation + broadcast + LR
+/// updates over an injected set of per-worker chains. [`run_rounds`] (the
+/// whole-vector master) builds one chain per worker from `spec.scheme`; the
+/// block-sharded master ([`super::shard::ShardedMasterLoop`]) runs one
+/// engine per shard, each with chains over that shard's blocks and `w`
+/// being the shard-local parameter slice. Broadcast frames are stamped with
+/// `shard` so the worker-side gather can validate routing.
+pub(crate) fn run_engine<T: MasterTransport>(
+    spec: &MasterSpec,
+    shard: u16,
+    mut chains: Vec<Box<dyn MasterScheme>>,
+    mut transport: T,
+    mut w: Vec<f32>,
+    mut eval: Option<&mut EvalFn<'_>>,
+) -> Result<MasterReport> {
+    let d = w.len();
+    let n = transport.n_workers();
+    anyhow::ensure!(chains.len() == n, "need one chain per worker");
+    for chain in &chains {
+        anyhow::ensure!(chain.dim() == d, "chain dimension mismatch");
+    }
+    let mut inbox = Inbox::new(n, shard);
     let mut comm = CommStats::new(d);
     let mut train_loss = LossMeter::new();
     let mut points = Vec::new();
@@ -223,6 +262,10 @@ fn run_rounds<T: MasterTransport>(
 
     let mut rtilde = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
+    // the broadcast staging buffer ping-pongs through the transport: we
+    // take the bytes back after each broadcast, so warm rounds stage the
+    // dense r̃ with zero heap allocation (ROADMAP "broadcast path reuse")
+    let mut bcast_buf: Vec<u8> = Vec::new();
     // per-worker r̃ buffers for the parallel FullSync decode (the
     // bounded-staleness path folds frame-by-frame and reuses `rtilde`)
     let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
@@ -317,7 +360,10 @@ fn run_rounds<T: MasterTransport>(
         }
 
         // broadcast the averaged r̃; workers (and we) apply w -= η·agg
-        transport.broadcast(&Frame::broadcast(t, &agg))?;
+        let mut frame = Frame::broadcast_from(t, &agg, std::mem::take(&mut bcast_buf));
+        frame.shard = shard;
+        transport.broadcast(&frame)?;
+        bcast_buf = frame.bytes;
         let lr = spec.schedule.lr_at(t);
         for i in 0..d {
             w[i] -= lr * agg[i];

@@ -9,10 +9,15 @@
 //! * [`master`] — per-worker decode-and-predict chains, full-sync or
 //!   bounded-staleness aggregation, broadcast, LR schedule, evaluation,
 //!   rate + fabric-health accounting.
+//! * [`shard`] — the block-sharded master: one independent round engine
+//!   per shard, each owning a subset of the scheme's blocks (its slice of
+//!   `w` + its per-worker chains), with single-shard runs bit-identical to
+//!   the plain master and multi-shard FullSync bit-identical to
+//!   single-shard on the same blockwise spec.
 //! * [`launch`] — wires datasets, the configured fabric (in-process
-//!   channels or real TCP sockets) and threads together for single-process
-//!   runs; multi-process TCP deployment reuses the same loops
-//!   (cli::master_serve / worker_connect).
+//!   channels or real TCP sockets, optionally sharded) and threads
+//!   together for single-process runs; multi-process TCP deployment reuses
+//!   the same loops (cli::master_serve / worker_connect).
 //!
 //! Deterministic-mode invariant (pinned by `tests/integration_tcp.rs`):
 //! with no faults injected, the same seeded run over the channel fabric
@@ -21,8 +26,10 @@
 
 pub mod launch;
 pub mod master;
+pub mod shard;
 pub mod worker;
 
 pub use launch::{run_training, TrainReport};
 pub use master::{AggMode, MasterLoop};
+pub use shard::ShardedMasterLoop;
 pub use worker::{WorkerLoop, WorkerSummary};

@@ -1,0 +1,176 @@
+//! Block-sharded master: N independent round engines, each owning a subset
+//! of the scheme's blocks (its slice of `w`, its per-worker decode chains,
+//! its aggregation and its broadcast), scaled out over separate transports.
+//!
+//! Blocks are independent Eq.-(1) pipelines over disjoint parameter
+//! slices, so sharding the master by block changes **nothing** about the
+//! numbers: every shard decodes exactly the sub-payloads the unsharded
+//! master would decode for the same blocks, folds them in the same worker-
+//! id order, and applies the same per-component `w -= η·agg` — a
+//! multi-shard FullSync run is bit-identical to the single-master run on
+//! the same blockwise spec (pinned by `tests/shard_identity.rs`), and
+//! `shards = 1` bypasses this module entirely in the launcher.
+//!
+//! Per-shard engines run in lockstep only through the workers: a worker's
+//! round t sends one sub-frame to every shard and waits for every shard's
+//! round-t broadcast. Under bounded staleness each shard applies its
+//! quorum and staleness bound independently, so a straggler lagging on one
+//! shard stalls only that shard's fold, never the whole master (pinned by
+//! `tests/fault_scenarios.rs`).
+//!
+//! Evaluation needs the assembled parameter vector, which only exists
+//! after the run — per-round points therefore carry NaN test metrics in
+//! sharded mode, and `final_eval` (when provided) scores the gathered
+//! final `w` once at the end.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::comm::{MasterTransport, ShardMap};
+use crate::metrics::{CommStats, RunPoint};
+use crate::scheme::MasterScheme;
+
+use super::master::{run_engine, EvalFn, MasterReport, MasterSpec};
+
+/// Sharded master loop: drives one [`run_engine`] per shard over its own
+/// transport, then reassembles a single [`MasterReport`].
+pub struct ShardedMasterLoop {
+    spec: MasterSpec,
+    map: Arc<ShardMap>,
+    transports: Vec<Box<dyn MasterTransport>>,
+}
+
+impl ShardedMasterLoop {
+    pub fn new(
+        spec: MasterSpec,
+        map: Arc<ShardMap>,
+        transports: Vec<Box<dyn MasterTransport>>,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            map.n_shards() == transports.len(),
+            "shard map has {} shards, got {} master transports",
+            map.n_shards(),
+            transports.len()
+        );
+        Ok(Self { spec, map, transports })
+    }
+
+    /// Headless sharded run at global dimension d (parameters start at
+    /// zero, no evaluation) — the sharded analogue of
+    /// [`super::master::MasterLoop::run_headless`].
+    pub fn run_headless(self, d: usize) -> Result<MasterReport> {
+        self.run_with_w(vec![0.0f32; d], None)
+    }
+
+    /// Run from explicit initial parameters. `final_eval`, when given, is
+    /// applied once to the assembled final parameter vector.
+    pub fn run_with_w(
+        self,
+        w: Vec<f32>,
+        mut final_eval: Option<&mut EvalFn<'_>>,
+    ) -> Result<MasterReport> {
+        let Self { spec, map, transports } = self;
+        let d = w.len();
+        anyhow::ensure!(
+            d == map.dim(),
+            "parameter dimension {d} != shard map dimension {}",
+            map.dim()
+        );
+        // build every shard's chains and local slice up front so bind
+        // errors surface in shard order before any fabric I/O starts
+        let mut shard_runs = Vec::with_capacity(transports.len());
+        for (s, transport) in transports.into_iter().enumerate() {
+            let n = transport.n_workers();
+            let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                chains.push(
+                    spec.scheme
+                        .master_for_blocks(d, map.blocks_of(s))
+                        .with_context(|| format!("shard {s} chains"))?,
+                );
+            }
+            let mut local = Vec::with_capacity(map.local_dim(s));
+            map.gather_local(s, &w, &mut local);
+            shard_runs.push((s, chains, local, transport));
+        }
+
+        // one engine per shard, each on its own thread; a failing shard
+        // tears its transport down, which errors the workers, whose abort
+        // markers (replicated to every shard) unblock the survivors.
+        // Each shard engine gets an equal slice of the spawning thread's
+        // parallelism budget — N shards each fanning out max_threads()
+        // decode threads would oversubscribe the cores the same way nested
+        // parallel regions would (util::parallel serializes those)
+        let n_shards = shard_runs.len();
+        let thread_budget = (crate::util::parallel::max_threads() / n_shards.max(1)).max(1);
+        let mut handles = Vec::with_capacity(n_shards);
+        for (s, chains, local, transport) in shard_runs {
+            let spec = spec.clone();
+            handles.push(std::thread::spawn(move || -> Result<MasterReport> {
+                let _threads = crate::util::parallel::override_threads(thread_budget);
+                run_engine(&spec, s as u16, chains, transport, local, None)
+                    .with_context(|| format!("master shard {s}"))
+            }));
+        }
+        let mut reports = Vec::with_capacity(handles.len());
+        let mut errors = Vec::new();
+        for (s, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Err(_) => errors.push(anyhow::anyhow!("master shard {s} panicked")),
+                Ok(Err(e)) => errors.push(e),
+                Ok(Ok(r)) => reports.push(r),
+            }
+        }
+        if let Some(e) = errors.into_iter().next() {
+            return Err(e);
+        }
+
+        // gather: shard slices back into the global vector, accounting
+        // folded per merge_shard's logical-schedule rules
+        let mut final_w = w;
+        let mut comm = CommStats::new(d);
+        for (s, r) in reports.iter().enumerate() {
+            map.scatter_global(s, &r.final_w, &mut final_w);
+            comm.merge_shard(&r.comm);
+        }
+        let points = merge_points(&map, &reports, d);
+        let (final_test_loss, final_test_acc) = match final_eval.as_mut() {
+            Some(f) => f(&final_w, (spec.eval_batches * 4).max(8), spec.steps)?,
+            None => (f64::NAN, 0.0),
+        };
+        Ok(MasterReport {
+            points,
+            comm,
+            final_test_acc,
+            final_test_loss,
+            final_w_norm: crate::tensor::norm2(&final_w),
+            final_w,
+        })
+    }
+}
+
+/// Merge per-shard eval points. The round schedule is shared, so shard 0's
+/// points carry the step/epoch/train-loss columns (every shard books the
+/// same per-frame worker losses); bits/component re-weights each shard's
+/// local metric onto the global dimension (Σ_s bpc_s · d_s / d); wall time
+/// is the slowest shard; test metrics stay NaN (see module docs).
+fn merge_points(map: &ShardMap, reports: &[MasterReport], d: usize) -> Vec<RunPoint> {
+    let Some(first) = reports.first() else {
+        return Vec::new();
+    };
+    let mut out = first.points.clone();
+    for p in out.iter_mut() {
+        p.bits_per_component = 0.0;
+        p.test_loss = f64::NAN;
+        p.test_acc = 0.0;
+    }
+    for (s, r) in reports.iter().enumerate() {
+        let weight = map.local_dim(s) as f64 / d.max(1) as f64;
+        for (o, p) in out.iter_mut().zip(r.points.iter()) {
+            o.bits_per_component += p.bits_per_component * weight;
+            o.wall_secs = o.wall_secs.max(p.wall_secs);
+        }
+    }
+    out
+}

@@ -428,10 +428,12 @@ fn recv_apply<T: WorkerTransport>(
     let frame = transport.recv_broadcast()?;
     phases.add("wait", timer.elapsed_secs());
     let timer = Timer::start();
-    let avg = frame.broadcast_f32(w.len())?;
+    // decode straight into the recycled dense update buffer — together
+    // with the master's broadcast_from staging this closes the broadcast
+    // side of the round loop's allocation story (ROADMAP)
+    frame.broadcast_f32_into(update)?;
     let lr = spec.schedule.lr_at(t);
     for i in 0..w.len() {
-        update[i] = avg[i];
         w[i] -= lr * update[i];
     }
     phases.add("apply", timer.elapsed_secs());

@@ -1,4 +1,4 @@
-//! Datasets: the paper's ImageNet-32 is substituted (see DESIGN.md §4) by a
+//! Datasets: the paper's ImageNet-32 is substituted (see DESIGN.md §5) by a
 //! deterministic synthetic 32×32×3 classification set with Gaussian class
 //! prototypes, and the LM example trains on a seeded Markov-chain corpus.
 //! Both are index-addressable (sample i is a pure function of (seed, i)), so

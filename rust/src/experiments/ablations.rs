@@ -1,4 +1,4 @@
-//! Design-choice ablations called out in DESIGN.md §4 (A1–A3).
+//! Design-choice ablations called out in DESIGN.md §5 (A1–A3).
 
 use anyhow::Result;
 

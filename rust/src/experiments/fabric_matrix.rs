@@ -2,7 +2,9 @@
 //! Est-K prediction, Table I bottom section) driven through the round
 //! engine under a matrix of transport/degradation scenarios: clean channel
 //! vs clean TCP, a straggling worker (full-sync vs bounded-staleness
-//! aggregation), message drop-and-retransmit, and worker churn.
+//! aggregation), message drop-and-retransmit, worker churn, and the
+//! block-sharded master (a blockwise scheme scattered over 2/4 master
+//! shards, on both fabrics).
 //!
 //! Everything here uses synthetic gradient sources and the headless
 //! master, so the whole matrix runs offline (no artifacts, no PJRT) — it
@@ -11,9 +13,9 @@
 
 use anyhow::Result;
 
-use crate::config::FabricSpec;
-use crate::coordinator::launch::build_fabric;
-use crate::coordinator::master::{MasterLoop, MasterReport, MasterSpec};
+use crate::config::{FabricSpec, ShardsSpec};
+use crate::coordinator::launch::build_run_fabric;
+use crate::coordinator::master::{MasterReport, MasterSpec};
 use crate::coordinator::worker::{WorkerLoop, WorkerSpec};
 use crate::metrics::CsvWriter;
 use crate::optim::LrSchedule;
@@ -22,19 +24,31 @@ use crate::util::{Pcg64, Timer};
 
 use super::ExpOptions;
 
-/// Run one scenario: n synthetic workers + headless master over the
-/// configured fabric. Returns the master report with fault counters
-/// merged in, plus wall seconds.
+/// Table I's headline single scheme.
+const SPEC_SINGLE: &str = "topk:k_frac=0.01/estk/ef/beta=0.9";
+/// A 4-block composite for the sharded rows (≥ 4 blocks so up to 4 shards).
+const SPEC_BLOCKWISE: &str = "blocks(emb=0.25:topk:k_frac=0.01/estk/ef/beta=0.9;\
+                              attn=0.25:sign/plin/noef/beta=0.8;\
+                              mlp=0.25:topk:k_frac=0.02/estk/ef/beta=0.9;\
+                              head=0.25:sign)";
+
+/// Run one scenario: n synthetic workers + master (sharded when
+/// `shards > 1`) over the configured fabric. Returns the master report
+/// with fault counters merged in, plus wall seconds.
 fn run_scenario(
     fabric: &FabricSpec,
+    spec: &str,
+    shards: usize,
     d: usize,
     n: usize,
     steps: u64,
     seed: u64,
 ) -> Result<(MasterReport, f64)> {
-    let scheme = Scheme::parse("topk:k_frac=0.01/estk/ef/beta=0.9")?;
+    let scheme = Scheme::parse(spec)?;
     let schedule = LrSchedule::constant(0.05);
-    let (master_tx, workers_tx, fault_stats) = build_fabric(fabric, n)?;
+    let shards_spec = ShardsSpec { count: shards, assign: Vec::new() };
+    let (master_side, workers_tx, fault_stats) =
+        build_run_fabric(fabric, n, &shards_spec, &scheme, d)?;
 
     let wall = Timer::start();
     let mut handles = Vec::with_capacity(n);
@@ -76,7 +90,7 @@ fn run_scenario(
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
     };
-    let mut report = MasterLoop::new(master_spec, master_tx).run_headless(d)?;
+    let mut report = master_side.run_headless(master_spec, d)?;
     for h in handles {
         h.join()
             .map_err(|_| anyhow::anyhow!("worker panicked"))?
@@ -113,13 +127,18 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     };
     let churny = FabricSpec { churn: vec![(n - 1, half / 2, half)], ..clean.clone() };
 
-    let scenarios: Vec<(&str, FabricSpec)> = vec![
-        ("clean/channel", clean),
-        ("clean/tcp", tcp),
-        ("straggler/full-sync", straggler),
-        ("straggler/staleness=2", straggler_stale),
-        ("drop=0.2/retransmit", droppy),
-        ("churn/1-worker-out", churny),
+    let scenarios: Vec<(&str, FabricSpec, &str, usize)> = vec![
+        ("clean/channel", clean.clone(), SPEC_SINGLE, 1),
+        ("clean/tcp", tcp.clone(), SPEC_SINGLE, 1),
+        ("straggler/full-sync", straggler, SPEC_SINGLE, 1),
+        ("straggler/staleness=2", straggler_stale, SPEC_SINGLE, 1),
+        ("drop=0.2/retransmit", droppy, SPEC_SINGLE, 1),
+        ("churn/1-worker-out", churny, SPEC_SINGLE, 1),
+        // block-sharded master: the same blockwise run over 1 shard is the
+        // bit-identity baseline for the 2/4-shard rows
+        ("blockwise/1-shard", clean.clone(), SPEC_BLOCKWISE, 1),
+        ("sharded/channel/shards=2", clean, SPEC_BLOCKWISE, 2),
+        ("sharded/tcp/shards=4", tcp, SPEC_BLOCKWISE, 4),
     ];
 
     let path = format!("{}/fabric_matrix.csv", opts.out_dir);
@@ -133,8 +152,8 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         "{:<24} {:>10} {:>6} {:>6} {:>8} {:>10} {:>8} {:>8}",
         "scenario", "bits/comp", "msgs", "skips", "retrans", "staleness", "uncons", "wall_s"
     );
-    for (label, fabric) in scenarios {
-        let (report, wall) = run_scenario(&fabric, d, n, steps, opts.seed)?;
+    for (label, fabric, spec, shards) in scenarios {
+        let (report, wall) = run_scenario(&fabric, spec, shards, d, n, steps, opts.seed)?;
         let c = &report.comm;
         println!(
             "{:<24} {:>10.4} {:>6} {:>6} {:>8} {:>10.2} {:>8} {:>8.2}",

@@ -3,7 +3,7 @@
 //! Est-K needs ~20-45% smaller K / ~40% fewer bits for the same accuracy).
 //!
 //! K fractions are scaled up from the paper's 1e-4-range because our
-//! substitute model has d≈11.6k instead of 1.6M (see DESIGN.md §4).
+//! substitute model has d≈11.6k instead of 1.6M (see DESIGN.md §5).
 
 use anyhow::Result;
 

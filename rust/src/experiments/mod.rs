@@ -1,4 +1,4 @@
-//! Experiment drivers — one per paper table/figure (DESIGN.md §4).
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
 //!
 //! Every driver supports a `smoke` mode (tiny steps/dims, used by tests)
 //! and a full mode whose output is recorded in EXPERIMENTS.md. Drivers

@@ -30,7 +30,7 @@
 //! * [`coordinator`] — master/worker round loop (the paper's system) with
 //!   injectable gradient sources and a headless master for model-free runs.
 //! * [`metrics`] — meters, CSV/JSONL run logs, per-block comm accounting.
-//! * [`experiments`] — one driver per paper table/figure (see DESIGN.md §4).
+//! * [`experiments`] — one driver per paper table/figure (see DESIGN.md §5).
 //! * [`testing`] — in-repo property-testing + bench harness (offline build)
 //!   and the artifact/PJRT availability gates for integration tests.
 

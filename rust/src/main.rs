@@ -77,6 +77,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // fabric override tokens, e.g. --fabric tcp,staleness=2,drop=0.01
         cfg.fabric.apply_str(v).context("--fabric")?;
     }
+    if let Some(v) = args.flag("shards")? {
+        // master shard count (block→shard assignment stays in [shards])
+        cfg.shards.count = v.parse().context("--shards")?;
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -180,17 +184,31 @@ fn cmd_inspect() -> Result<()> {
     Ok(())
 }
 
+/// `host:port` split for the shard port fan-out (shard s listens/dials on
+/// port + s).
+fn split_host_port(addr: &str) -> Result<(String, u16)> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .with_context(|| format!("address {addr:?} must be host:port"))?;
+    Ok((host.to_string(), port.parse().with_context(|| format!("port in {addr:?}"))?))
+}
+
+fn shard_addr(host: &str, base: u16, shard: usize) -> Result<String> {
+    let port = base
+        .checked_add(u16::try_from(shard).ok().context("shard count exceeds u16")?)
+        .context("shard port overflows u16")?;
+    Ok(format!("{host}:{port}"))
+}
+
 fn cmd_master_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let listen = args.flag("listen")?.context("--listen addr:port required")?;
     let manifest = Manifest::load_default()?;
     let entry = manifest.model(&cfg.model)?.clone();
     let scheme = cfg.scheme.to_scheme()?;
-    println!("master: listening on {listen} for {} workers", cfg.workers);
-    let transport = TcpMaster::listen(listen, cfg.workers)?;
     let spec = MasterSpec {
         model: cfg.model.clone(),
-        scheme,
+        scheme: scheme.clone(),
         schedule: cfg.schedule(),
         steps: cfg.steps,
         eval_every: cfg.eval_every,
@@ -202,7 +220,33 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         aggregation: cfg.fabric.aggregation(),
     };
     let runtime = Runtime::new(manifest)?;
-    let report = MasterLoop::new(spec, transport).run(&runtime)?;
+    let report = if cfg.shards.is_sharded() {
+        // shard s listens on port + s; bind every port up front so workers
+        // can dial the whole fan before any shard finishes its handshakes
+        let map = std::sync::Arc::new(cfg.shards.build_map(&scheme.block_layout(entry.d)?)?);
+        let (host, base) = split_host_port(listen)?;
+        let mut listeners = Vec::with_capacity(cfg.shards.count);
+        for s in 0..cfg.shards.count {
+            let addr = shard_addr(&host, base, s)?;
+            println!("master shard {s}: listening on {addr} for {} workers", cfg.workers);
+            listeners.push(
+                std::net::TcpListener::bind(&addr)
+                    .with_context(|| format!("bind shard {s} on {addr}"))?,
+            );
+        }
+        let mut transports: Vec<Box<dyn tempo::comm::MasterTransport>> = Vec::new();
+        for (s, listener) in listeners.into_iter().enumerate() {
+            transports.push(Box::new(
+                TcpMaster::from_listener(listener, cfg.workers)
+                    .with_context(|| format!("shard {s} accept"))?,
+            ));
+        }
+        launch::run_sharded_master(spec, map, transports, &runtime)?
+    } else {
+        println!("master: listening on {listen} for {} workers", cfg.workers);
+        let transport = TcpMaster::listen(listen, cfg.workers)?;
+        MasterLoop::new(spec, transport).run(&runtime)?
+    };
     println!(
         "master done: acc={:.4} bits/comp={:.4} skips={} mean_staleness={:.2}",
         report.final_test_acc,
@@ -221,8 +265,24 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
     let entry = manifest.model(&cfg.model)?.clone();
     let scheme = cfg.scheme.to_scheme()?;
     println!("worker {worker_id}: connecting to {connect}");
-    let tcp = TcpWorker::connect(connect, worker_id)?;
-    // scenario injection applies to real deployments too: wrap the socket
+    // one connection per master shard (shard s on port + s), presented to
+    // the worker loop as a single endpoint
+    let endpoint: Box<dyn tempo::comm::WorkerTransport> = if cfg.shards.is_sharded() {
+        let map = std::sync::Arc::new(cfg.shards.build_map(&scheme.block_layout(entry.d)?)?);
+        let (host, base) = split_host_port(connect)?;
+        let mut parts: Vec<Box<dyn tempo::comm::WorkerTransport>> = Vec::new();
+        for s in 0..cfg.shards.count {
+            let addr = shard_addr(&host, base, s)?;
+            parts.push(Box::new(
+                TcpWorker::connect(&addr, worker_id)
+                    .with_context(|| format!("dial shard {s} at {addr}"))?,
+            ));
+        }
+        Box::new(tempo::comm::ShardedWorkerEndpoint::new(map, parts)?)
+    } else {
+        Box::new(TcpWorker::connect(connect, worker_id)?)
+    };
+    // scenario injection applies to real deployments too: wrap the endpoint
     // when the fabric configures stragglers or drops for this worker
     let transport: Box<dyn tempo::comm::WorkerTransport> = if cfg.fabric.has_faults() {
         let policy = tempo::comm::FaultPolicy::new(
@@ -232,9 +292,9 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
             cfg.fabric.seed,
             worker_id,
         );
-        Box::new(tempo::comm::FaultInjector::new(tcp, policy))
+        Box::new(tempo::comm::FaultInjector::new(endpoint, policy))
     } else {
-        Box::new(tcp)
+        endpoint
     };
     let spec = WorkerSpec {
         worker_id,

@@ -115,6 +115,38 @@ impl CommStats {
         e.1 += events;
     }
 
+    /// Fold one master shard's accounting into a global view (block-sharded
+    /// master). Payload bits, per-block accounting (blocks are disjoint
+    /// across shards), fault counters and phase timings add up; the
+    /// logical-schedule counters (messages, skips) and the staleness/horizon
+    /// counters describe the *same* worker round schedule seen from every
+    /// shard, so the merge keeps the per-shard maximum instead of
+    /// overcounting them n_shards times — bits/component then stays the
+    /// paper's per-logical-message metric (plus the real per-shard container
+    /// header overhead the split adds).
+    pub fn merge_shard(&mut self, shard: &CommStats) {
+        self.total_payload_bits += shard.total_payload_bits;
+        for (name, r) in &shard.per_block {
+            let e = self.per_block.entry(name.clone()).or_default();
+            e.bits += r.bits;
+            e.messages += r.messages;
+            e.components = r.components;
+        }
+        self.total_messages = self.total_messages.max(shard.total_messages);
+        self.skips = self.skips.max(shard.skips);
+        self.staleness_sum = self.staleness_sum.max(shard.staleness_sum);
+        self.staleness_max = self.staleness_max.max(shard.staleness_max);
+        self.stale_updates = self.stale_updates.max(shard.stale_updates);
+        self.unconsumed_updates = self.unconsumed_updates.max(shard.unconsumed_updates);
+        self.retransmits += shard.retransmits;
+        self.injected_delay_secs += shard.injected_delay_secs;
+        for (name, &(secs, events)) in &shard.phase_secs {
+            let e = self.phase_secs.entry(name.clone()).or_insert((0.0, 0));
+            e.0 += secs;
+            e.1 += events;
+        }
+    }
+
     pub fn skips(&self) -> u64 {
         self.skips
     }
@@ -249,6 +281,37 @@ mod tests {
         assert_eq!(c.stale_updates(), 1);
         assert_eq!(c.unconsumed_updates(), 2);
         assert_eq!(c.phase_secs(), vec![("send".to_string(), 1.5, 3)]);
+    }
+
+    #[test]
+    fn merge_shard_sums_bits_but_not_the_schedule() {
+        // two shards of a d=100 model: 40 + 60 components, same 2-round
+        // schedule seen from both
+        let mut global = CommStats::new(100);
+        let mut s0 = CommStats::new(40);
+        let mut s1 = CommStats::new(60);
+        for _ in 0..2 {
+            s0.record_message(400);
+            s0.record_block("a", 400, 40);
+            s1.record_message(600);
+            s1.record_block("b", 600, 60);
+        }
+        s0.record_skip();
+        s1.record_skip();
+        s0.record_staleness(2);
+        global.merge_shard(&s0);
+        global.merge_shard(&s1);
+        assert_eq!(global.total_bits(), 2000);
+        assert_eq!(global.messages(), 2, "logical messages, not per-shard sums");
+        assert_eq!(global.skips(), 1);
+        assert_eq!(global.max_staleness(), 2);
+        // 2000 bits / (2 messages * 100 comps) = 10 bits/comp
+        assert!((global.bits_per_component() - 10.0).abs() < 1e-12);
+        let rates = global.block_rates();
+        assert_eq!(rates.len(), 2);
+        // block a: 800 bits / (2 messages * 40 comps) = 10 bits/comp
+        assert!((rates[0].1 - 10.0).abs() < 1e-12, "{rates:?}");
+        assert!((rates[1].1 - 10.0).abs() < 1e-12, "{rates:?}");
     }
 
     #[test]

@@ -153,6 +153,57 @@ impl WorkerScheme for BlockwiseWorker {
     }
 }
 
+/// Split one blockwise container into per-shard sub-containers — the
+/// worker-side scatter of the block-sharded master. `block_shard[i]` names
+/// the owning shard of global block `i`; `outs[s]` is a reusable payload
+/// slot per shard whose byte buffer is recycled between rounds (the same
+/// high-water-capacity contract as `encode_into`, so warm rounds allocate
+/// nothing). Each sub-container keeps its blocks in ascending global block
+/// order — exactly the order `Scheme::master_for_blocks` builds the shard's
+/// chains in — so per-shard decode is bit-identical to the unsharded decode
+/// of the same blocks.
+pub fn split_container(
+    payload: &Payload,
+    block_shard: &[usize],
+    outs: &mut [Payload],
+) -> Result<()> {
+    anyhow::ensure!(
+        payload.kind_tag == TAG_BLOCKWISE,
+        "payload tag {} is not a blockwise container",
+        payload.kind_tag
+    );
+    let buf = &payload.bytes;
+    anyhow::ensure!(buf.len() >= 2, "blockwise container truncated");
+    let nblocks = u16::from_le_bytes([buf[0], buf[1]]) as usize;
+    anyhow::ensure!(
+        nblocks == block_shard.len(),
+        "container has {nblocks} blocks, shard map expects {}",
+        block_shard.len()
+    );
+    let n_shards = outs.len();
+    for (s, out) in outs.iter_mut().enumerate() {
+        let count = block_shard.iter().filter(|&&b| b == s).count() as u16;
+        out.kind_tag = TAG_BLOCKWISE;
+        out.bits = CONTAINER_HEADER_BITS;
+        out.bytes.clear();
+        out.bytes.extend_from_slice(&count.to_le_bytes());
+    }
+    let mut off = 2usize;
+    for (i, &s) in block_shard.iter().enumerate() {
+        anyhow::ensure!(s < n_shards, "block {i} assigned to shard {s}, only {n_shards} shards");
+        anyhow::ensure!(buf.len() >= off + 13, "container truncated at block {i} header");
+        let bits = u64::from_le_bytes(buf[off + 1..off + 9].try_into().unwrap());
+        let len = u32::from_le_bytes(buf[off + 9..off + 13].try_into().unwrap()) as usize;
+        anyhow::ensure!(buf.len() >= off + 13 + len, "container truncated at block {i} body");
+        let out = &mut outs[s];
+        out.bytes.extend_from_slice(&buf[off..off + 13 + len]);
+        out.bits += BLOCK_HEADER_BITS + bits;
+        off += 13 + len;
+    }
+    anyhow::ensure!(off == buf.len(), "trailing bytes in blockwise container");
+    Ok(())
+}
+
 /// [`MasterScheme`] running one [`SingleMaster`] chain per named block.
 pub struct BlockwiseMaster {
     d: usize,
@@ -355,6 +406,64 @@ mod tests {
             payloads.push(slot.clone());
         }
         (payloads, rtilde, worker.utilde().to_vec())
+    }
+
+    #[test]
+    fn split_container_shards_decode_bit_identically() {
+        // 3 blocks over 2 shards: shard 0 owns {a, c}, shard 1 owns {b} —
+        // the split sub-containers fed to subset chains must reconstruct
+        // exactly what the full chain reconstructs, slice for slice
+        let d = 300;
+        let spec = format!("blocks(a=0.3:{SUB_A};b=0.4:{SUB_B};c=0.3:{SUB_A})");
+        let scheme = Scheme::parse(&spec).unwrap();
+        let layout = scheme.block_layout(d).unwrap();
+        let (la, lb) = (layout[0].1.len(), layout[1].1.len());
+        let lc = layout[2].1.len();
+        let assignment = [0usize, 1, 0];
+
+        let mut worker = scheme.worker(d).unwrap();
+        let mut full = scheme.master(d).unwrap();
+        let mut s0 = scheme.master_for_blocks(d, &[0, 2]).unwrap();
+        let mut s1 = scheme.master_for_blocks(d, &[1]).unwrap();
+        assert_eq!(s0.dim(), la + lc);
+        assert_eq!(s1.dim(), lb);
+
+        let mut rng = Pcg64::seeded(0x51A2);
+        let mut g = vec![0.0f32; d];
+        let mut rt_full = vec![0.0f32; d];
+        let mut rt0 = vec![0.0f32; la + lc];
+        let mut rt1 = vec![0.0f32; lb];
+        let mut subs = vec![Payload::empty(), Payload::empty()];
+        let mut p = Payload::empty();
+        for t in 0..12u64 {
+            rng.fill_gaussian(&mut g, 1.0);
+            worker.step(&g, if t == 0 { 0.0 } else { 1.0 });
+            worker.encode_into(t, &mut p);
+            split_container(&p, &assignment, &mut subs).unwrap();
+            // accounting: the split re-charges one container header per shard
+            assert_eq!(subs[0].bits + subs[1].bits, p.bits + CONTAINER_HEADER_BITS);
+            full.receive(&p, t, &mut rt_full).unwrap();
+            s0.receive(&subs[0], t, &mut rt0).unwrap();
+            s1.receive(&subs[1], t, &mut rt1).unwrap();
+            let cat: Vec<u32> = rt0[..la]
+                .iter()
+                .chain(rt1.iter())
+                .chain(rt0[la..].iter())
+                .map(|x| x.to_bits())
+                .collect();
+            let full_bits: Vec<u32> = rt_full.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(cat, full_bits, "t={t}: sharded decode diverged");
+            // block names survive the split for per-block rate accounting
+            assert_eq!(s0.last_block_bits()[0].name, "a");
+            assert_eq!(s0.last_block_bits()[1].name, "c");
+            assert_eq!(s1.last_block_bits()[0].name, "b");
+        }
+        // malformed inputs are rejected, not mis-split
+        assert!(split_container(&p, &[0, 1], &mut subs).is_err(), "block count mismatch");
+        assert!(split_container(&p, &[0, 2, 0], &mut subs).is_err(), "shard out of range");
+        let mut wrong = p.clone();
+        wrong.kind_tag = 0;
+        assert!(split_container(&wrong, &assignment, &mut subs).is_err(), "not a container");
     }
 
     #[test]

@@ -534,6 +534,55 @@ impl Scheme {
         }
     }
 
+    /// Bind the selected blocks of this scheme into one master-side chain
+    /// over **shard-local** coordinates `0..Σ len(block)` — the per-shard
+    /// split of the per-block decode chains the block-sharded master runs.
+    /// `block_indices` are strictly-ascending indices into
+    /// [`Self::block_layout`] at dimension `d`; the chain decodes the
+    /// sub-containers `scheme::blockwise::split_container` emits for the
+    /// same assignment, bit-identically to the unsharded chain on those
+    /// blocks. Single schemes have exactly one block, so only `[0]` (the
+    /// whole vector, the plain [`Self::master`]) is valid.
+    pub fn master_for_blocks(
+        &self,
+        d: usize,
+        block_indices: &[usize],
+    ) -> Result<Box<dyn MasterScheme>> {
+        anyhow::ensure!(!block_indices.is_empty(), "shard owns no blocks");
+        anyhow::ensure!(
+            block_indices.windows(2).all(|w| w[0] < w[1]),
+            "shard block indices must be strictly ascending"
+        );
+        match &*self.kind {
+            SchemeKind::Single(s) => {
+                anyhow::ensure!(
+                    block_indices.len() == 1 && block_indices[0] == 0,
+                    "single schemes have exactly one block (index 0)"
+                );
+                Ok(Box::new(s.master(d)?))
+            }
+            SchemeKind::Blockwise(blocks) => {
+                let layout = blockwise_layout(blocks, d)?;
+                let mut parts = Vec::with_capacity(block_indices.len());
+                let mut start = 0usize;
+                for &i in block_indices {
+                    let (name, range) = layout
+                        .get(i)
+                        .cloned()
+                        .with_context(|| format!("block index {i} out of range"))?;
+                    let len = range.len();
+                    let master = blocks[i]
+                        .scheme
+                        .master(len)
+                        .with_context(|| format!("block {name:?}"))?;
+                    parts.push((name, start..start + len, master));
+                    start += len;
+                }
+                Ok(Box::new(BlockwiseMaster::new(start, parts)))
+            }
+        }
+    }
+
     /// Bind at dimension d into one master-side chain (call once per worker).
     pub fn master(&self, d: usize) -> Result<Box<dyn MasterScheme>> {
         match &*self.kind {
@@ -660,6 +709,19 @@ mod tests {
         assert!(Scheme::parse("blocks(a=0.5:sign;a=0.5:none)").is_err(), "dup name");
         assert!(Scheme::parse("blocks(a=0.6:sign;b=0.6:none)").is_err(), "fractions");
         assert!(Scheme::parse("blocks(a=0.5:sign;b=0.5:warp9)").is_err());
+    }
+
+    #[test]
+    fn master_for_blocks_validates_selection() {
+        let s = Scheme::parse("topk:k=4/estk/ef/beta=0.9").unwrap();
+        assert_eq!(s.master_for_blocks(64, &[0]).unwrap().dim(), 64);
+        assert!(s.master_for_blocks(64, &[1]).is_err(), "single scheme has one block");
+        assert!(s.master_for_blocks(64, &[]).is_err(), "empty shard");
+        let b = Scheme::parse("blocks(a=0.5:sign;b=0.5:none)").unwrap();
+        assert_eq!(b.master_for_blocks(100, &[0]).unwrap().dim(), 50);
+        assert_eq!(b.master_for_blocks(100, &[0, 1]).unwrap().dim(), 100);
+        assert!(b.master_for_blocks(100, &[1, 0]).is_err(), "must be ascending");
+        assert!(b.master_for_blocks(100, &[0, 2]).is_err(), "out of range");
     }
 
     #[test]

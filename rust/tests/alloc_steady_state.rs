@@ -2,6 +2,10 @@
 //! path (DESIGN.md §3): after warm-up, `step → encode_into → receive` must
 //! perform ZERO heap allocations — every buffer lives in a reusable arena
 //! (`RoundScratch`, recycled payload slots, thread-local top-k scratch).
+//! The broadcast side rides the same loop: the master's dense staging
+//! (`Frame::broadcast_from` over a reclaimed byte buffer) and the worker's
+//! apply decode (`broadcast_f32_into` into the recycled update buffer)
+//! must also allocate nothing once warm.
 //!
 //! This file holds exactly one test on purpose: the counting allocator is
 //! process-global, and a sibling test allocating concurrently would make
@@ -11,6 +15,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use tempo::coding::Payload;
+use tempo::comm::Frame;
 use tempo::scheme::{MasterScheme, Scheme, WorkerScheme};
 use tempo::util::Pcg64;
 
@@ -57,9 +62,12 @@ fn warm_compression_rounds_allocate_nothing() {
     let mut g = vec![0.0f32; d];
     rng.fill_gaussian(&mut g, 1.0);
     let mut rtilde = vec![0.0f32; d];
+    let mut update = vec![0.0f32; d];
     // two payload slots ping-pong, exactly like the worker loop recycling
-    // buffers through the pipelined sender
+    // buffers through the pipelined sender; the broadcast staging buffer
+    // ping-pongs the same way through Frame::broadcast_from
     let mut slots = [Payload::empty(), Payload::empty()];
+    let mut bcast: Vec<u8> = Vec::new();
 
     // warm-up: every arena buffer grows to its high-water capacity
     for t in 0..50u64 {
@@ -67,6 +75,9 @@ fn warm_compression_rounds_allocate_nothing() {
         worker.step(&g, if t == 0 { 0.0 } else { 1.0 });
         worker.encode_into(t, slot);
         master.receive(slot, t, &mut rtilde).unwrap();
+        let frame = Frame::broadcast_from(t, &rtilde, bcast);
+        frame.broadcast_f32_into(&mut update).unwrap();
+        bcast = frame.bytes;
     }
     // payload bit counts wobble slightly between rounds; pinning the slot
     // capacity at the dense worst case is allowed by the RoundScratch
@@ -82,6 +93,11 @@ fn warm_compression_rounds_allocate_nothing() {
         worker.step(&g, 1.0);
         worker.encode_into(t, slot);
         master.receive(slot, t, &mut rtilde).unwrap();
+        // broadcast side: master stages r̃ into the reclaimed byte buffer,
+        // the worker decodes it into the recycled update buffer
+        let frame = Frame::broadcast_from(t, &rtilde, bcast);
+        frame.broadcast_f32_into(&mut update).unwrap();
+        bcast = frame.bytes;
     }
     COUNTING.store(false, Ordering::SeqCst);
     let n = ALLOCS.load(Ordering::SeqCst);

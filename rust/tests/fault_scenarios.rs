@@ -149,6 +149,100 @@ fn drop_retransmit_is_deterministic_and_counted() {
 }
 
 #[test]
+fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
+    // Block-sharded master under bounded staleness: worker 0's connection
+    // to shard 1 (and only shard 1) straggles. Shard 0 must keep taking
+    // full-speed quorum rounds while shard 1 folds worker 0's updates late
+    // within its own staleness bound — per-shard quorums, no cross-shard
+    // deadlock, every worker finishing all rounds.
+    use std::sync::Arc;
+    use tempo::comm::{
+        channel_fabric, FaultInjector, FaultPolicy, MasterTransport, ShardMap,
+        ShardedWorkerEndpoint, WorkerTransport,
+    };
+    use tempo::coordinator::shard::ShardedMasterLoop;
+
+    let (d, n, steps, seed) = (240usize, 3usize, 10u64, 19u64);
+    let spec = "blocks(a=0.5:topk:k=8/estk/ef/beta=0.9;b=0.5:sign/plin/noef/beta=0.8)";
+    let scheme = Scheme::parse(spec).unwrap();
+    let map = Arc::new(ShardMap::round_robin(&scheme.block_layout(d).unwrap(), 2).unwrap());
+
+    let (m0, w0) = channel_fabric(n);
+    let (m1, w1) = channel_fabric(n);
+    let mut endpoints = Vec::new();
+    for (wid, (t0, t1)) in w0.into_iter().zip(w1).enumerate() {
+        // the straggler policy wraps ONE per-shard sub-transport of ONE
+        // worker — the delay applies to that shard's sub-frames only
+        let t1: Box<dyn WorkerTransport> = if wid == 0 {
+            let policy = FaultPolicy::new(3.0, 0.0, 0.0, seed, wid as u32);
+            Box::new(FaultInjector::new(t1, policy))
+        } else {
+            Box::new(t1)
+        };
+        let parts: Vec<Box<dyn WorkerTransport>> = vec![Box::new(t0), t1];
+        endpoints.push(ShardedWorkerEndpoint::new(Arc::clone(&map), parts).unwrap());
+    }
+
+    let schedule = LrSchedule::constant(0.05);
+    let mut handles = Vec::new();
+    for (wid, transport) in endpoints.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: true,
+            absent: Vec::new(),
+        };
+        let mut rng = Pcg64::new(seed, 40 + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: tempo::coordinator::master::AggMode::BoundedStaleness {
+            max_staleness: 3,
+            quorum: 2,
+        },
+    };
+    let transports: Vec<Box<dyn MasterTransport>> = vec![Box::new(m0), Box::new(m1)];
+    let report = ShardedMasterLoop::new(master_spec, map, transports)
+        .unwrap()
+        .run_headless(d)
+        .unwrap();
+
+    assert!(report.comm.max_staleness() <= 3, "per-shard staleness bound violated");
+    assert!(report.comm.messages() > 0);
+    assert!(report.final_w_norm > 0.0, "the fleet must make progress");
+    for h in handles {
+        let s = h.join().unwrap();
+        assert_eq!(s.rounds, steps, "worker {} did not finish", s.worker_id);
+    }
+}
+
+#[test]
 fn all_workers_absent_round_broadcasts_zeros() {
     let (d, n, steps) = (50usize, 2usize, 6u64);
     let fabric = FabricSpec { churn: vec![(0, 2, 3), (1, 2, 3)], ..Default::default() };

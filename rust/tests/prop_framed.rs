@@ -55,6 +55,7 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
     Frame {
         kind,
         worker: (g.u64() & 0xFFFF) as u32,
+        shard: (g.u64() & 0xFFFF) as u16,
         round: g.u64(),
         payload_tag: (g.u64() & 0x7) as u8,
         bytes: (0..nbytes).map(|_| (g.u64() & 0xFF) as u8).collect(),
@@ -75,6 +76,7 @@ fn prop_roundtrip_survives_any_chunking() {
         let back = read_frame(&mut r).map_err(|e| format!("read: {e:#}"))?;
         if back.kind != frame.kind
             || back.worker != frame.worker
+            || back.shard != frame.shard
             || back.round != frame.round
             || back.payload_tag != frame.payload_tag
             || back.payload_bits != frame.payload_bits

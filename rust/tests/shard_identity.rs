@@ -1,0 +1,172 @@
+//! Bit-identity of the block-sharded master (DESIGN.md §4):
+//!
+//! * a multi-shard FullSync run must produce `final_w` **bit-identical** to
+//!   the single-master run on the same blockwise spec — blocks are
+//!   independent, so scattering them over shards may not change one bit of
+//!   the reconstruction, the aggregation order, or the applied updates;
+//! * the 4-worker / 4-shard TCP configuration (each shard a real socket
+//!   endpoint) matches the 1-shard run the same way;
+//! * sharded accounting: per-block bits identical, and the only extra wire
+//!   cost is one container header per additional shard per update.
+//!
+//! Runs fully offline: synthetic gradient sources + headless masters.
+
+use tempo::config::experiment::Backend;
+use tempo::config::{FabricSpec, ShardsSpec, TransportKind};
+use tempo::coordinator::launch::build_run_fabric;
+use tempo::coordinator::master::{MasterReport, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
+use tempo::optim::LrSchedule;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+/// Four differently-coded blocks so every shard decodes a different
+/// sub-scheme mix (round-robin over 2 shards pairs {emb, mlp} / {attn, head}).
+const SPEC: &str = "blocks(emb=0.25:topk:k=8/estk/ef/beta=0.9;\
+                    attn=0.25:sign/plin/noef/beta=0.8;\
+                    mlp=0.3:topk:k=12/estk/ef/beta=0.95;\
+                    head=0.2:sign)";
+
+/// Deterministic synthetic fleet over the given fabric with `shards` master
+/// shards (1 = the plain unsharded master path).
+fn run_fleet(
+    fabric: &FabricSpec,
+    shards: usize,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let shards_spec = ShardsSpec { count: shards, assign: Vec::new() };
+    let (master_side, workers_tx, _stats) =
+        build_run_fabric(fabric, n, &shards_spec, &scheme, d).unwrap();
+
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: fabric.pipelined,
+            absent: fabric.absent_for(wid),
+        };
+        let mut rng = Pcg64::new(seed, 500 + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: fabric.aggregation(),
+    };
+    let report = master_side.run_headless(master_spec, d).unwrap();
+    let mut summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    (report, summaries)
+}
+
+fn w_bits(report: &MasterReport) -> Vec<u32> {
+    report.final_w.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Extra wire bits a sharded run adds: one blockwise container header per
+/// additional shard per update message.
+const CONTAINER_HEADER_BITS: u64 = 16;
+
+#[test]
+fn sharded_channel_runs_are_bit_identical_to_single() {
+    let (d, n, steps, seed) = (600usize, 3usize, 10u64, 23u64);
+    let fabric = FabricSpec::default();
+    let (single, sum_single) = run_fleet(&fabric, 1, d, n, steps, seed);
+    let reference = w_bits(&single);
+    assert!(reference.iter().any(|&b| b != 0), "run must make progress");
+    for shards in [2usize, 4] {
+        let (sharded, sum_sharded) = run_fleet(&fabric, shards, d, n, steps, seed);
+        assert_eq!(
+            w_bits(&sharded),
+            reference,
+            "{shards}-shard final_w diverged from the single master"
+        );
+        // workers compute the exact same trajectory either way
+        for (a, b) in sum_single.iter().zip(&sum_sharded) {
+            let ea: Vec<u64> = a.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+            let eb: Vec<u64> = b.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ea, eb, "worker {} e_mse diverged at {shards} shards", a.worker_id);
+        }
+        // accounting: same logical schedule, same per-block bits, and
+        // exactly one extra container header per extra shard per update
+        assert_eq!(sharded.comm.messages(), single.comm.messages());
+        assert_eq!(
+            sharded.comm.total_bits(),
+            single.comm.total_bits()
+                + (shards as u64 - 1) * CONTAINER_HEADER_BITS * steps * n as u64,
+            "{shards}-shard wire-bit overhead should be container headers only"
+        );
+        let a: Vec<(String, f64)> = single.comm.block_rates();
+        let b: Vec<(String, f64)> = sharded.comm.block_rates();
+        assert_eq!(a, b, "{shards}-shard per-block rates diverged");
+    }
+}
+
+#[test]
+fn four_worker_four_shard_tcp_matches_one_shard() {
+    // the acceptance configuration: 4 workers, 4 shards, FullSync, real
+    // sockets per shard — final_w bit-identical to the 1-shard TCP run
+    let (d, n, steps, seed) = (600usize, 4usize, 8u64, 31u64);
+    let tcp = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    let (single, _) = run_fleet(&tcp, 1, d, n, steps, seed);
+    let (sharded, summaries) = run_fleet(&tcp, 4, d, n, steps, seed);
+    assert_eq!(w_bits(&sharded), w_bits(&single), "4-shard TCP diverged from 1-shard");
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
+        assert!(s.pipelined, "sharded TCP endpoints must support split senders");
+    }
+    // and TCP sharding equals channel sharding (transport invariance holds
+    // under sharding too)
+    let channel = FabricSpec::default();
+    let (chan, _) = run_fleet(&channel, 4, d, n, steps, seed);
+    assert_eq!(w_bits(&chan), w_bits(&sharded), "sharded channel vs TCP diverged");
+}
+
+#[test]
+fn sharded_bounded_staleness_completes_and_stays_bounded() {
+    // per-shard quorums under bounded staleness: every shard applies its
+    // own quorum/staleness bound; the run completes and every update is
+    // folded or drained on every shard
+    let (d, n, steps, seed) = (400usize, 3usize, 10u64, 5u64);
+    let fabric = FabricSpec { max_staleness: 2, quorum: 2, ..Default::default() };
+    let (report, summaries) = run_fleet(&fabric, 2, d, n, steps, seed);
+    assert!(report.comm.max_staleness() <= 2, "staleness bound violated");
+    let folded = report.comm.messages() + report.comm.unconsumed_updates();
+    assert!(folded <= steps * n as u64, "merged counters are per-shard maxima");
+    assert!(report.comm.messages() > 0);
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
+    }
+    assert!(report.final_w_norm > 0.0);
+}
