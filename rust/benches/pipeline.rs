@@ -5,10 +5,66 @@
 use tempo::cli::Args;
 use tempo::coding::Payload;
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
+use tempo::comm::tcp::TcpWorker;
+use tempo::comm::{Frame, FrameKind, MasterTransport, WorkerTransport};
+use tempo::coordinator::launch::master_from_listener;
+use tempo::config::FabricSpec;
 use tempo::scheme::{MasterScheme, WorkerScheme};
 use tempo::tensor::select_topk_indices;
 use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
+
+/// One master round over a live loopback-TCP fabric: collect one update
+/// per worker, broadcast the dense reply — the master-side I/O cost the
+/// `io = threads|reactor` backends compete on. Worker threads run a
+/// mirror loop until the master drops.
+fn bench_fabric_backend(b: &mut Bencher, io: &str, n_workers: usize, d: usize) {
+    let mut fabric = FabricSpec::default();
+    fabric.apply_str(&format!("tcp,io={io}")).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handles: Vec<_> = (0..n_workers as u32)
+        .map(|wid| {
+            std::thread::spawn(move || {
+                let mut w = TcpWorker::connect(addr, wid).unwrap();
+                let mut bframe = Frame::shutdown();
+                let mut t = 0u64;
+                loop {
+                    let p = Payload { kind_tag: 1, bytes: vec![0u8; d], bits: 8 * d as u64 };
+                    if w.send_update(Frame::update(wid, t, p, 0.0)).is_err() {
+                        return;
+                    }
+                    match w.recv_broadcast_into(&mut bframe) {
+                        Ok(()) => assert_eq!(bframe.kind, FrameKind::Broadcast),
+                        Err(_) => return, // master done: benchmark over
+                    }
+                    t += 1;
+                }
+            })
+        })
+        .collect();
+    let mut master = master_from_listener(&fabric, listener, n_workers).unwrap();
+    let dense = vec![0.5f32; d / 4];
+    let mut round = 0u64;
+    b.bench(
+        &format!("fabric/tcp io={io} {n_workers}w roundtrip d={d}B"),
+        Some((n_workers * d) as u64),
+        || {
+            let mut got = 0usize;
+            while got < n_workers {
+                let (_wid, f) = master.recv_any().unwrap();
+                black_box(&f);
+                got += 1;
+            }
+            master.broadcast(&Frame::broadcast(round, &dense)).unwrap();
+            round += 1;
+        },
+    );
+    drop(master); // workers see EOF/error and exit
+    for h in handles {
+        let _ = h.join();
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
@@ -77,6 +133,12 @@ fn main() -> anyhow::Result<()> {
             master.receive(&payload, 0, &mut rtilde).unwrap();
             black_box(&rtilde);
         });
+    }
+
+    // master-side I/O engines head to head (ISSUE 5): the same 4-worker
+    // loopback round loop over the threads backend and the reactor
+    for io in ["threads", "reactor"] {
+        bench_fabric_backend(&mut b, io, 4, 4096);
     }
     maybe_write_json(&b, &args)
 }

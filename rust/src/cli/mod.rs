@@ -129,7 +129,8 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
-              [--scheme <spec>] [--fabric <spec>] [--shards N] [--csv out.csv]
+              [--scheme <spec>] [--fabric <spec>] [--io threads|reactor]
+              [--shards N] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
@@ -149,8 +150,12 @@ Scheme spec strings (see DESIGN.md for the grammar → paper Eq. (1) mapping):
   sign/plin/beta=0.99                         scaled-sign with prediction
   blocks(emb=0.25:topk:k=64/estk/ef;rest=0.75:sign/plin)   blockwise composite
 
-Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2):
+Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2/§6):
   channel | tcp                 transport (default channel; tcp = real sockets)
+  threads | reactor             master I/O over tcp (default threads; reactor =
+                                single-threaded epoll loop, O(1) master threads,
+                                bounded broadcast write queues; --io is sugar)
+  io_queue=N                    reactor per-connection write-queue bound (frames)
   pipelined | inline            double-buffered vs blocking sends (default pipelined)
   staleness=S,quorum=Q          bounded-staleness aggregation (S=0 ⇒ full sync)
   straggler=W:MS[;W:MS]         per-worker pre-send delay in ms

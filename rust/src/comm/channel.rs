@@ -8,24 +8,36 @@
 //! multi-worker runs — the paper's 4-workers-on-one-machine Horovod
 //! topology with the master simulated explicitly.
 //!
+//! Broadcast buffers ping-pong: the master must hand each worker its own
+//! copy of the broadcast frame, and that per-worker payload clone used to
+//! be the channel fabric's last per-round allocation. Workers now return
+//! their spent broadcast buffers over a bounded spare channel
+//! ([`WorkerTransport::recv_broadcast_into`]), and the master's
+//! `broadcast` refills those buffers ([`Frame::clone_with_buf`]) instead
+//! of allocating — the downlink mirror of the update path's
+//! `send_reclaim` recycling (pinned by `tests/alloc_steady_state.rs`).
+//!
 //! Liveness: the worker loop sends [`Frame::done`] after its last round
 //! and [`Frame::abort`] on an error; the endpoint's Drop also sends an
 //! abort (covering panicking worker threads), which the master ignores
 //! for workers already marked done. An abort surfaces as a "hung up"
-//! error on the master instead of a blocked `recv_any`.
+//! error on the master instead of a blocked `recv_any`. The policy is the
+//! shared [`PeerTracker`] — the same code the TCP and reactor masters run.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 
 use anyhow::{Context, Result};
 
-use super::frame::{Frame, FrameKind};
-use super::{FrameSender, MasterTransport, PeerState, WorkerTransport};
+use super::frame::Frame;
+use super::{FrameSender, MasterTransport, PeerState, PeerTracker, WorkerTransport};
 
 /// Worker endpoint.
 pub struct ChannelWorker {
     pub worker_id: u32,
     up: Sender<(usize, Frame)>,
     down: Receiver<Frame>,
+    /// spent broadcast payload buffers flowing back to the master
+    spare_tx: SyncSender<Vec<u8>>,
 }
 
 impl Drop for ChannelWorker {
@@ -46,20 +58,34 @@ pub struct ChannelSender {
 pub struct ChannelMaster {
     up: Receiver<(usize, Frame)>,
     downs: Vec<Sender<Frame>>,
-    state: Vec<PeerState>,
+    tracker: PeerTracker,
+    /// recycled broadcast buffers returned by the workers
+    spares: Receiver<Vec<u8>>,
 }
 
 /// Build a fabric for n workers. Returns (master, workers).
 pub fn channel_fabric(n: usize) -> (ChannelMaster, Vec<ChannelWorker>) {
     let (up_tx, up_rx) = channel();
+    // bounded spare-return pool: 2 buffers per worker covers the one the
+    // master is refilling plus the one still in flight; overflow just
+    // drops the buffer (recycling is best-effort, never a dependency)
+    let (spare_tx, spare_rx) = sync_channel::<Vec<u8>>(2 * n.max(1));
     let mut downs = Vec::with_capacity(n);
     let mut workers = Vec::with_capacity(n);
     for w in 0..n {
         let (down_tx, down_rx) = channel();
         downs.push(down_tx);
-        workers.push(ChannelWorker { worker_id: w as u32, up: up_tx.clone(), down: down_rx });
+        workers.push(ChannelWorker {
+            worker_id: w as u32,
+            up: up_tx.clone(),
+            down: down_rx,
+            spare_tx: spare_tx.clone(),
+        });
     }
-    (ChannelMaster { up: up_rx, downs, state: vec![PeerState::Alive; n] }, workers)
+    (
+        ChannelMaster { up: up_rx, downs, tracker: PeerTracker::new(n), spares: spare_rx },
+        workers,
+    )
 }
 
 impl WorkerTransport for ChannelWorker {
@@ -69,6 +95,18 @@ impl WorkerTransport for ChannelWorker {
 
     fn recv_broadcast(&mut self) -> Result<Frame> {
         self.down.recv().context("master hung up")
+    }
+
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        let mut next = self.down.recv().context("master hung up")?;
+        std::mem::swap(frame, &mut next);
+        // the previous round's payload buffer goes back to the master's
+        // broadcast staging pool (best-effort: a full pool drops it)
+        let buf = std::mem::take(&mut next.bytes);
+        if buf.capacity() > 0 {
+            let _ = self.spare_tx.try_send(buf);
+        }
+        Ok(())
     }
 
     fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
@@ -86,25 +124,13 @@ impl ChannelMaster {
     /// Apply liveness bookkeeping; `Some` when the frame is for the engine,
     /// `Err` when the worker aborted mid-run.
     fn absorb(&mut self, wid: usize, frame: Frame) -> Result<Option<(usize, Frame)>> {
-        anyhow::ensure!(wid < self.state.len(), "bad worker id {wid}");
-        if frame.kind == FrameKind::Shutdown {
-            if self.state[wid] == PeerState::Done {
-                return Ok(None); // post-done Drop marker: expected
-            }
-            if frame.is_done_marker() {
-                self.state[wid] = PeerState::Done;
-                return Ok(None);
-            }
-            self.state[wid] = PeerState::Lost;
-            anyhow::bail!("worker {wid} hung up (aborted mid-run)");
-        }
-        Ok(Some((wid, frame)))
+        self.tracker.on_frame(wid, frame)
     }
 }
 
 impl MasterTransport for ChannelMaster {
     fn n_workers(&self) -> usize {
-        self.state.len()
+        self.downs.len()
     }
 
     fn recv_any(&mut self) -> Result<(usize, Frame)> {
@@ -133,8 +159,12 @@ impl MasterTransport for ChannelMaster {
         for (w, tx) in self.downs.iter().enumerate() {
             // a done/lost worker no longer listens; skipping it keeps late
             // broadcasts from erroring after a clean early exit
-            if self.state[w] == PeerState::Alive {
-                tx.send(frame.clone()).ok().with_context(|| format!("worker {w} hung up"))?;
+            if self.tracker.state(w) == PeerState::Alive {
+                // clone into a recycled buffer when a worker returned one
+                let buf = self.spares.try_recv().unwrap_or_default();
+                tx.send(frame.clone_with_buf(buf))
+                    .ok()
+                    .with_context(|| format!("worker {w} hung up"))?;
             }
         }
         Ok(())
@@ -145,6 +175,7 @@ impl MasterTransport for ChannelMaster {
 mod tests {
     use super::*;
     use crate::coding::Payload;
+    use crate::comm::FrameKind;
 
     #[test]
     fn fabric_roundtrip() {
@@ -173,6 +204,25 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), vec![1.0, 2.0]);
         }
+    }
+
+    #[test]
+    fn recv_broadcast_into_returns_spares_for_the_next_round() {
+        let (mut master, mut workers) = channel_fabric(1);
+        let mut frame = Frame::shutdown();
+        // round 0: no spares yet — the master allocates
+        master.broadcast(&Frame::broadcast(0, &[1.0, 2.0])).unwrap();
+        workers[0].recv_broadcast_into(&mut frame).unwrap();
+        assert_eq!(frame.round, 0);
+        assert_eq!(frame.broadcast_f32(2).unwrap(), vec![1.0, 2.0]);
+        // round 1: the worker's receive returned round 0's buffer; the
+        // master's next clone must reuse that exact allocation
+        master.broadcast(&Frame::broadcast(1, &[3.0, 4.0])).unwrap();
+        let prev_ptr = frame.bytes.as_ptr();
+        workers[0].recv_broadcast_into(&mut frame).unwrap();
+        assert_eq!(frame.round, 1);
+        assert_eq!(frame.broadcast_f32(2).unwrap(), vec![3.0, 4.0]);
+        assert_eq!(frame.bytes.as_ptr(), prev_ptr, "spare buffer must ping-pong back");
     }
 
     #[test]

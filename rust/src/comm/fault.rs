@@ -119,6 +119,12 @@ impl<T: WorkerTransport> WorkerTransport for FaultInjector<T> {
         self.inner.recv_broadcast()
     }
 
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        // pass-through (receives are never degraded) — forwarded so the
+        // inner transport's buffer recycling survives fault injection
+        self.inner.recv_broadcast_into(frame)
+    }
+
     fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
         let inner = self.inner.split_sender()?;
         // the split sender takes over the update path, so moving a clone of

@@ -143,6 +143,26 @@ impl Frame {
         }
     }
 
+    /// Clone this frame's header plus payload into a recycled byte buffer:
+    /// `buf` is cleared and refilled, so a transport that must hand one
+    /// copy to each receiver (the channel fabric's per-worker broadcast)
+    /// can ping-pong spent buffers instead of allocating a fresh payload
+    /// clone per worker per round.
+    pub fn clone_with_buf(&self, mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        buf.extend_from_slice(&self.bytes);
+        Self {
+            kind: self.kind,
+            worker: self.worker,
+            shard: self.shard,
+            round: self.round,
+            payload_tag: self.payload_tag,
+            payload_bits: self.payload_bits,
+            bytes: buf,
+            loss: self.loss,
+        }
+    }
+
     /// Move the payload body out, leaving the frame with empty bytes. The
     /// master's decode path consumes each frame exactly once, so moving is
     /// always right — a cloning accessor would put a per-message byte copy
@@ -183,6 +203,15 @@ impl Frame {
 
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bytes());
+        self.serialize_into(&mut out);
+        out
+    }
+
+    /// Append the wire bytes (header + payload) to `out` — the
+    /// allocation-free counterpart of [`Self::serialize`] that lets the
+    /// send paths stage frames through recycled buffers.
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        out.reserve(self.wire_bytes());
         out.push(self.kind as u8);
         out.push(self.payload_tag);
         out.extend_from_slice(&self.worker.to_le_bytes());
@@ -192,34 +221,35 @@ impl Frame {
         out.extend_from_slice(&self.loss.to_le_bytes());
         out.extend_from_slice(&(self.bytes.len() as u64).to_le_bytes());
         out.extend_from_slice(&self.bytes);
-        out
+    }
+
+    /// Parse the fixed-size header into this frame's fields (payload bytes
+    /// untouched) and return the payload length the header declares — the
+    /// one header-decoding path [`Self::deserialize`] and the incremental/
+    /// into-buffer readers in [`super::framed`] share.
+    pub(crate) fn apply_header(&mut self, head: &[u8; HEADER_LEN]) -> Result<usize> {
+        self.kind = FrameKind::from_u8(head[0])?;
+        self.payload_tag = head[1];
+        self.worker = u32::from_le_bytes(head[2..6].try_into().unwrap());
+        self.shard = u16::from_le_bytes(head[6..8].try_into().unwrap());
+        self.round = u64::from_le_bytes(head[8..16].try_into().unwrap());
+        self.payload_bits = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        self.loss = f32::from_le_bytes(head[24..28].try_into().unwrap());
+        Ok(u64::from_le_bytes(head[28..36].try_into().unwrap()) as usize)
     }
 
     pub fn deserialize(buf: &[u8]) -> Result<Self> {
         if buf.len() < HEADER_LEN {
             bail!("frame too short: {} bytes", buf.len());
         }
-        let kind = FrameKind::from_u8(buf[0])?;
-        let payload_tag = buf[1];
-        let worker = u32::from_le_bytes(buf[2..6].try_into().unwrap());
-        let shard = u16::from_le_bytes(buf[6..8].try_into().unwrap());
-        let round = u64::from_le_bytes(buf[8..16].try_into().unwrap());
-        let payload_bits = u64::from_le_bytes(buf[16..24].try_into().unwrap());
-        let loss = f32::from_le_bytes(buf[24..28].try_into().unwrap());
-        let body_len = u64::from_le_bytes(buf[28..36].try_into().unwrap()) as usize;
+        let mut f = Frame::shutdown();
+        let head: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+        let body_len = f.apply_header(head)?;
         if buf.len() != HEADER_LEN + body_len {
             bail!("frame body length mismatch: {} vs {}", buf.len() - HEADER_LEN, body_len);
         }
-        Ok(Self {
-            kind,
-            worker,
-            shard,
-            round,
-            payload_tag,
-            payload_bits,
-            bytes: buf[HEADER_LEN..].to_vec(),
-            loss,
-        })
+        f.bytes = buf[HEADER_LEN..].to_vec();
+        Ok(f)
     }
 }
 
@@ -282,6 +312,28 @@ mod tests {
         assert_eq!(f.bytes.as_ptr(), ptr);
         // and the bytes match the allocating constructor exactly
         assert_eq!(f.bytes, Frame::broadcast(11, &v).bytes);
+    }
+
+    #[test]
+    fn clone_with_buf_recycles_and_matches_clone() {
+        let f = Frame {
+            kind: FrameKind::Broadcast,
+            worker: u32::MAX,
+            shard: 3,
+            round: 12,
+            payload_tag: 0,
+            bytes: vec![1, 2, 3, 4],
+            payload_bits: 32,
+            loss: 0.5,
+        };
+        let mut buf = Vec::with_capacity(32);
+        buf.extend_from_slice(&[0xAA; 9]); // stale recycled content
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        let g = f.clone_with_buf(buf);
+        assert_eq!(g.serialize(), f.serialize(), "header + payload must match clone exactly");
+        assert_eq!(g.bytes.capacity(), cap);
+        assert_eq!(g.bytes.as_ptr(), ptr, "the recycled allocation must come through");
     }
 
     #[test]

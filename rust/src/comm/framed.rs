@@ -5,12 +5,25 @@
 //! the same code drives TCP sockets, in-memory buffers, and the
 //! partial-read/split-write property tests — TCP delivers byte streams,
 //! not messages, and this module is where that mismatch is absorbed.
+//!
+//! Three entry tiers share one wire format:
+//!
+//! * blocking — [`write_frame`] / [`read_frame`] (allocating; tests and
+//!   cold paths);
+//! * blocking, buffer-recycling — [`write_frame_into`] /
+//!   [`read_frame_into`] (the hot per-round paths: staging scratch and the
+//!   receiving frame's payload buffer are reused across rounds);
+//! * non-blocking, incremental — [`FrameAccumulator`], which absorbs
+//!   whatever byte chunks a readiness loop produced and yields complete
+//!   frames; byte-for-byte equivalent to `read_frame` on any chunking
+//!   (pinned by `tests/prop_framed.rs`). This is what the reactor backend
+//!   (`comm::reactor`) parses connections with.
 
 use std::io::{Read, Write};
 
 use anyhow::{Context, Result};
 
-use super::frame::Frame;
+use super::frame::{Frame, HEADER_LEN};
 
 /// Hard ceiling on a single frame body (header + payload). Anything larger
 /// is rejected on both sides before allocation — a corrupted or hostile
@@ -31,6 +44,33 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
     Ok(())
 }
 
+/// Encode one length-prefixed frame into a recycled staging buffer (`out`
+/// is cleared and refilled) — the single wire-encoding path the buffered
+/// writer, the TCP broadcast scratch, and the reactor's write queues share.
+/// The staged bytes are exactly what [`write_frame`] puts on the stream.
+pub fn encode_frame(frame: &Frame, out: &mut Vec<u8>) -> Result<()> {
+    let body_len = frame.wire_bytes();
+    anyhow::ensure!(
+        (body_len as u64) <= MAX_FRAME_BYTES,
+        "refusing to send oversized frame: {body_len} bytes"
+    );
+    out.clear();
+    out.reserve(8 + body_len);
+    out.extend_from_slice(&(body_len as u64).to_le_bytes());
+    frame.serialize_into(out);
+    Ok(())
+}
+
+/// [`write_frame`] through a reusable staging buffer: byte-identical
+/// stream, zero allocation once `scratch` reached its high-water capacity,
+/// and one `write_all` instead of two.
+pub fn write_frame_into<W: Write>(w: &mut W, frame: &Frame, scratch: &mut Vec<u8>) -> Result<()> {
+    encode_frame(frame, scratch)?;
+    w.write_all(scratch).context("write frame")?;
+    w.flush().context("flush frame")?;
+    Ok(())
+}
+
 /// Read one length-prefixed frame (blocking until complete or EOF).
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut len_buf = [0u8; 8];
@@ -40,6 +80,123 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut body = vec![0u8; len as usize];
     r.read_exact(&mut body).context("read frame body")?;
     Frame::deserialize(&body)
+}
+
+/// [`read_frame`] into a recycled frame: the payload lands in the caller's
+/// existing byte buffer (cleared and refilled), so warm receive loops —
+/// the worker's broadcast wait, the sharded gather — allocate nothing.
+/// Accepts exactly the streams `read_frame` accepts.
+pub fn read_frame_into<R: Read>(r: &mut R, frame: &mut Frame) -> Result<()> {
+    let mut len_buf = [0u8; 8];
+    r.read_exact(&mut len_buf).context("read frame length")?;
+    let len = u64::from_le_bytes(len_buf);
+    anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len} bytes");
+    anyhow::ensure!(len as usize >= HEADER_LEN, "frame too short: {len} bytes");
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head).context("read frame header")?;
+    let body_len = frame.apply_header(&head)?;
+    anyhow::ensure!(
+        HEADER_LEN + body_len == len as usize,
+        "frame body length mismatch: {} vs {}",
+        len as usize - HEADER_LEN,
+        body_len
+    );
+    // no clear(): resize only zero-fills the growth delta (a warm
+    // same-size receive is a no-op) and read_exact overwrites every byte
+    frame.bytes.resize(body_len, 0);
+    r.read_exact(&mut frame.bytes).context("read frame body")?;
+    Ok(())
+}
+
+/// Incremental frame parser for non-blocking byte streams: feed whatever
+/// the socket produced ([`Self::fill_from`] / [`Self::extend`]), take
+/// complete frames out ([`Self::next_frame`]). Per-connection state of the
+/// reactor backend.
+///
+/// Contract (property-pinned against the blocking codec in
+/// `tests/prop_framed.rs`): for ANY re-chunking of a valid stream, the
+/// yielded frame sequence is identical to repeated [`read_frame`] calls;
+/// an oversized length prefix errors as soon as it is visible, before any
+/// payload buffering — the same pre-allocation rejection the blocking
+/// reader applies.
+#[derive(Default)]
+pub struct FrameAccumulator {
+    buf: Vec<u8>,
+    /// parse cursor: `buf[pos..]` is unconsumed stream
+    pos: usize,
+    /// reusable read staging for [`Self::fill_from`] — zeroed once at its
+    /// high-water size, so per-event reads pay a copy of the bytes
+    /// actually received instead of a `max`-sized memset
+    scratch: Vec<u8>,
+}
+
+impl FrameAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes received but not yet yielded as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Append freshly received bytes.
+    pub fn extend(&mut self, data: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(data);
+    }
+
+    /// One `read` from `r` appended to the buffered stream (at most `max`
+    /// bytes). Returns what `read` returned: `Ok(0)` is EOF, `WouldBlock`
+    /// surfaces as the io error for the readiness loop to catch. The read
+    /// lands in a reusable staging buffer first, so each call costs one
+    /// copy of the bytes actually received — not a `max`-sized zeroing of
+    /// the tail.
+    pub fn fill_from<R: Read>(&mut self, r: &mut R, max: usize) -> std::io::Result<usize> {
+        if self.scratch.len() < max {
+            self.scratch.resize(max, 0);
+        }
+        let n = r.read(&mut self.scratch[..max])?;
+        self.compact();
+        self.buf.extend_from_slice(&self.scratch[..n]);
+        Ok(n)
+    }
+
+    /// The next complete frame, if one is fully buffered. `Err` mirrors
+    /// the blocking reader's rejections (oversized prefix, malformed
+    /// header/body) — the connection is poisoned and must be dropped.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>> {
+        if self.pending() < 8 {
+            return Ok(None);
+        }
+        let len_bytes: [u8; 8] = self.buf[self.pos..self.pos + 8].try_into().unwrap();
+        let len = u64::from_le_bytes(len_bytes);
+        anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len} bytes");
+        let len = len as usize;
+        if self.pending() < 8 + len {
+            return Ok(None);
+        }
+        let frame = Frame::deserialize(&self.buf[self.pos + 8..self.pos + 8 + len])?;
+        self.pos += 8 + len;
+        Ok(Some(frame))
+    }
+
+    /// Reclaim consumed prefix space — amortized O(1): only slides bytes
+    /// when the consumed prefix dominates the buffer.
+    fn compact(&mut self) {
+        if self.pos == 0 {
+            return;
+        }
+        if self.pos >= self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 4096 && self.pos * 2 >= self.buf.len() {
+            self.buf.copy_within(self.pos.., 0);
+            let left = self.buf.len() - self.pos;
+            self.buf.truncate(left);
+            self.pos = 0;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -110,6 +267,61 @@ mod tests {
             assert_eq!(back.round, frame.round);
             assert_eq!(back.bytes, frame.bytes);
         }
+    }
+
+    #[test]
+    fn buffered_writer_and_into_reader_match_the_allocating_pair() {
+        let frame = sample_frame(123);
+        let mut plain = Vec::new();
+        write_frame(&mut plain, &frame).unwrap();
+        let mut buffered = Vec::new();
+        let mut scratch = Vec::new();
+        write_frame_into(&mut buffered, &frame, &mut scratch).unwrap();
+        assert_eq!(plain, buffered, "staged write must be byte-identical");
+
+        // read into a recycled frame (stale content, live capacity)
+        let mut recycled = sample_frame(400);
+        let cap = recycled.bytes.capacity();
+        let ptr = recycled.bytes.as_ptr();
+        read_frame_into(&mut plain.as_slice(), &mut recycled).unwrap();
+        assert_eq!(recycled.bytes, frame.bytes);
+        assert_eq!(recycled.round, frame.round);
+        assert_eq!(recycled.loss.to_bits(), frame.loss.to_bits());
+        assert_eq!(recycled.bytes.capacity(), cap, "payload buffer must be reused");
+        assert_eq!(recycled.bytes.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn accumulator_yields_frames_across_arbitrary_chunks() {
+        let frames: Vec<Frame> = (0..4).map(|i| sample_frame(i * 37)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            write_frame(&mut stream, f).unwrap();
+        }
+        for chunk in [1usize, 3, 8, 1024] {
+            let mut acc = FrameAccumulator::new();
+            let mut got = Vec::new();
+            for piece in stream.chunks(chunk) {
+                acc.extend(piece);
+                while let Some(f) = acc.next_frame().unwrap() {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got.len(), frames.len(), "chunk {chunk}");
+            for (a, b) in got.iter().zip(&frames) {
+                assert_eq!(a.bytes, b.bytes);
+                assert_eq!(a.round, b.round);
+            }
+            assert_eq!(acc.pending(), 0, "no trailing bytes");
+        }
+    }
+
+    #[test]
+    fn accumulator_rejects_oversized_prefix_before_buffering_payload() {
+        let mut acc = FrameAccumulator::new();
+        acc.extend(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        let err = acc.next_frame().unwrap_err();
+        assert!(format!("{err:#}").contains("frame too large"), "{err:#}");
     }
 
     #[test]

@@ -8,6 +8,11 @@
 //!   multi-worker runs (the default, like the paper's 4-GPU host);
 //! * [`tcp`] — real sockets for multi-process runs (`tempo master-serve` /
 //!   `tempo worker-connect`), with worker reconnect-after-drop support;
+//! * [`reactor`] — the alternative master-side I/O engine for the TCP
+//!   fabric (`[fabric] io = "reactor"`): a single-threaded epoll-style
+//!   readiness loop replacing the accept thread + one-reader-thread-per-
+//!   connection of [`tcp`], with bounded per-connection broadcast write
+//!   queues (flow control instead of OS socket-buffer pile-up);
 //! * [`framed`] — the one length-prefixed frame codec both byte-stream
 //!   transports share;
 //! * [`fault`] — deterministic scenario injection (stragglers,
@@ -29,6 +34,7 @@ pub mod channel;
 pub mod fault;
 pub mod frame;
 pub mod framed;
+pub mod reactor;
 pub mod sender;
 pub mod shard;
 pub mod tcp;
@@ -36,6 +42,7 @@ pub mod tcp;
 pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
 pub use fault::{FaultInjector, FaultPolicy, FaultStats};
 pub use frame::{Frame, FrameKind};
+pub use reactor::ReactorMaster;
 pub use sender::PipelinedSender;
 pub use shard::{ShardMap, ShardedWorkerEndpoint};
 
@@ -55,6 +62,74 @@ pub(crate) enum PeerState {
     Done,
     /// Went away mid-run without a done marker.
     Lost,
+}
+
+/// The one liveness policy every master endpoint applies to its merged
+/// event stream — factored out so the thread-per-connection TCP master,
+/// the channel fabric, and the reactor backend cannot drift apart on
+/// done/abort/reconnect semantics (the threads/reactor equivalence
+/// guarantee of DESIGN.md §6 leans on this being shared code).
+///
+/// Connection *generations* (per worker id, bumped on every accepted
+/// handshake) fence stale disconnect notices: an EOF from a connection
+/// that a reconnect already superseded carries no liveness information.
+/// Fabrics without reconnect (the channel transport) simply never report
+/// gone/joined.
+pub(crate) struct PeerTracker {
+    state: Vec<PeerState>,
+    /// newest connection generation seen per worker id
+    latest_gen: Vec<u64>,
+}
+
+impl PeerTracker {
+    pub(crate) fn new(n: usize) -> Self {
+        Self { state: vec![PeerState::Alive; n], latest_gen: vec![0; n] }
+    }
+
+    /// A worker that vanished mid-run without its done marker, if any.
+    pub(crate) fn first_lost(&self) -> Option<usize> {
+        self.state.iter().position(|&s| s == PeerState::Lost)
+    }
+
+    pub(crate) fn state(&self, wid: usize) -> PeerState {
+        self.state[wid]
+    }
+
+    /// Apply one arriving frame; `Ok(Some)` hands it to the engine, `Err`
+    /// means the worker aborted mid-run.
+    pub(crate) fn on_frame(&mut self, wid: usize, frame: Frame) -> Result<Option<(usize, Frame)>> {
+        anyhow::ensure!(wid < self.state.len(), "bad worker id {wid}");
+        if frame.kind == FrameKind::Shutdown {
+            if self.state[wid] == PeerState::Done {
+                return Ok(None); // post-done Drop marker: expected
+            }
+            if frame.is_done_marker() {
+                self.state[wid] = PeerState::Done;
+                return Ok(None);
+            }
+            self.state[wid] = PeerState::Lost;
+            anyhow::bail!("worker {wid} hung up (aborted mid-run)");
+        }
+        self.state[wid] = PeerState::Alive;
+        Ok(Some((wid, frame)))
+    }
+
+    /// Connection generation `gen` for `wid` closed or errored. EOF
+    /// without a done marker means lost-until-reconnect; a stale
+    /// generation's EOF (already superseded) is ignored.
+    pub(crate) fn on_gone(&mut self, wid: usize, gen: u64) {
+        if gen >= self.latest_gen[wid] && self.state[wid] != PeerState::Done {
+            self.state[wid] = PeerState::Lost;
+        }
+    }
+
+    /// Connection generation `gen` for `wid` completed its handshake.
+    pub(crate) fn on_joined(&mut self, wid: usize, gen: u64) {
+        self.latest_gen[wid] = self.latest_gen[wid].max(gen);
+        if self.state[wid] == PeerState::Lost {
+            self.state[wid] = PeerState::Alive;
+        }
+    }
 }
 
 /// Independently-owned update-sending half of a worker endpoint, split off
@@ -78,6 +153,18 @@ pub trait WorkerTransport: Send {
 
     fn recv_broadcast(&mut self) -> Result<Frame>;
 
+    /// Receive the next broadcast into a recycled frame: the caller keeps
+    /// one frame alive across rounds and its payload buffer is reused —
+    /// the receive-side leg of the zero-allocation round path (mirror of
+    /// [`FrameSender::send_reclaim`]). Transports override this to recycle
+    /// for real (TCP reads into the existing buffer; the channel fabric
+    /// additionally ships the spent buffer back to the master's broadcast
+    /// staging); the default just falls back to the allocating receive.
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        *frame = self.recv_broadcast()?;
+        Ok(())
+    }
+
     /// Split off an independently-owned sender so updates can be shipped
     /// from a background thread while this endpoint keeps receiving
     /// broadcasts. Transports that cannot split report an error and the
@@ -94,6 +181,10 @@ impl WorkerTransport for Box<dyn WorkerTransport> {
 
     fn recv_broadcast(&mut self) -> Result<Frame> {
         (**self).recv_broadcast()
+    }
+
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        (**self).recv_broadcast_into(frame)
     }
 
     fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {

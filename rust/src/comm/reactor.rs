@@ -1,0 +1,1038 @@
+//! Reactor I/O backend for the TCP fabric: one single-threaded epoll-style
+//! readiness loop replaces the accept thread plus the one-blocking-reader-
+//! thread-per-connection of [`super::tcp::TcpMaster`].
+//!
+//! Why: the thread-per-worker master puts a hard O(workers) floor under
+//! thread count and stack memory — the fabric's scaling ceiling since PR 2
+//! (ROADMAP "Async I/O backend"). The reactor spawns **zero** threads: the
+//! round engine's own calls (`recv_any` / `try_recv_any` / `broadcast`)
+//! drive the event loop, so the master's thread count is O(1) at any
+//! worker count (pinned by `tests/reactor_soak.rs` at 64 workers).
+//!
+//! Per connection: a non-blocking read state machine over the shared
+//! length-prefixed codec (incremental parsing across partial reads via
+//! [`FrameAccumulator`]) and a **bounded write queue** with staged writes
+//! for broadcasts. The write bound is the flow control the ROADMAP's
+//! "broadcast backpressure" item asked for: a lagging worker's unread
+//! broadcasts queue here — bounded — instead of piling into OS socket
+//! buffers; a consumer that falls further behind than the bound is
+//! disconnected (it may reconnect, exactly like a worker whose socket
+//! died under the threads backend). Under bounded-staleness aggregation
+//! the engine already refuses to run more than `max_staleness` rounds
+//! ahead of any worker, so a bound above `max_staleness + 2` can only
+//! fire for a genuinely wedged peer.
+//!
+//! Drop-in contract (DESIGN.md §6): same handshake, reconnect-after-drop,
+//! done/abort liveness (shared [`PeerTracker`] policy), per-connection
+//! FIFO order and wire bytes as the threads backend — a FullSync run over
+//! `io = "reactor"` is bit-identical to `io = "threads"` (pinned by
+//! `tests/integration_tcp.rs`).
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::frame::Frame;
+use super::framed::{encode_frame, FrameAccumulator};
+use super::{MasterTransport, PeerTracker};
+
+/// Default per-connection broadcast write-queue bound (frames). Sized far
+/// above what a healthy run can queue (FullSync keeps ≤ 2 in flight;
+/// bounded staleness ≤ `max_staleness + 2`) — see
+/// `FabricSpec::reactor_queue_bound` for the config-driven derivation.
+pub const DEFAULT_QUEUE_BOUND: usize = 16;
+
+/// How long an accepted connection may sit without completing its
+/// id handshake before it is dropped (mirrors the threads backend's
+/// 5-second handshake read deadline).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Per-`read` ceiling when filling a connection's accumulator.
+const READ_CHUNK: usize = 64 * 1024;
+
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        // round sub-millisecond remainders up so a nearly-expired grace
+        // window cannot degrade into a hot spin
+        Some(d) => d.as_millis().clamp(1, i32::MAX as u128) as i32,
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Thin epoll(7) bindings. The offline build has no `libc` crate, but
+    //! std already links the platform libc — declaring the three syscall
+    //! wrappers here keeps the reactor dependency-free.
+
+    use std::io;
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+    use std::time::Duration;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLLIN: u32 = 0x1;
+    const EPOLLOUT: u32 = 0x4;
+    const EPOLLERR: u32 = 0x8;
+    const EPOLLHUP: u32 = 0x10;
+
+    /// `struct epoll_event` — packed on x86_64 only (see epoll_ctl(2)).
+    #[cfg(target_arch = "x86_64")]
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    struct RawEvent {
+        events: u32,
+        token: u64,
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct RawEvent {
+        events: u32,
+        token: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut RawEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut RawEvent, maxevents: i32, timeout: i32) -> i32;
+    }
+
+    /// Level-triggered readiness poller over one epoll instance.
+    pub(super) struct Poller {
+        ep: OwnedFd,
+        buf: Vec<RawEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self {
+                ep: unsafe { OwnedFd::from_raw_fd(fd) },
+                buf: vec![RawEvent { events: 0, token: 0 }; 128],
+            })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = RawEvent { events, token };
+            let rc = unsafe { epoll_ctl(self.ep.as_raw_fd(), op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        fn mask(want_write: bool) -> u32 {
+            EPOLLIN | (if want_write { EPOLLOUT } else { 0 })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, want_write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, Self::mask(want_write), token)
+        }
+
+        pub fn rearm(&mut self, fd: RawFd, token: u64, want_write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, Self::mask(want_write), token)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Wait for readiness; results land in `out` as
+        /// `(token, readable, writable)`. EINTR reports as an empty batch.
+        pub fn wait(
+            &mut self,
+            timeout: Option<Duration>,
+            out: &mut Vec<(u64, bool, bool)>,
+        ) -> io::Result<()> {
+            out.clear();
+            let ms = super::timeout_ms(timeout);
+            let n = unsafe {
+                epoll_wait(self.ep.as_raw_fd(), self.buf.as_mut_ptr(), self.buf.len() as i32, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for i in 0..n as usize {
+                let ev = self.buf[i];
+                let bits = ev.events;
+                out.push((
+                    ev.token,
+                    bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                ));
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! Portable poll(2) fallback for non-Linux hosts (macOS dev boxes):
+    //! the same readiness interface with an O(connections) scan per wake —
+    //! fine at laptop scale; the Linux CI/production path uses epoll.
+
+    use std::io;
+    use std::os::fd::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: i16 = 0x1;
+    const POLLOUT: i16 = 0x4;
+    const POLLERR: i16 = 0x8;
+    const POLLHUP: i16 = 0x10;
+    const POLLNVAL: i16 = 0x20;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    pub(super) struct Poller {
+        fds: Vec<PollFd>,
+        tokens: Vec<u64>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Self> {
+            Ok(Self { fds: Vec::new(), tokens: Vec::new() })
+        }
+
+        fn mask(want_write: bool) -> i16 {
+            POLLIN | (if want_write { POLLOUT } else { 0 })
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, want_write: bool) -> io::Result<()> {
+            self.fds.push(PollFd { fd, events: Self::mask(want_write), revents: 0 });
+            self.tokens.push(token);
+            Ok(())
+        }
+
+        pub fn rearm(&mut self, fd: RawFd, token: u64, want_write: bool) -> io::Result<()> {
+            for (i, p) in self.fds.iter_mut().enumerate() {
+                if p.fd == fd {
+                    p.events = Self::mask(want_write);
+                    self.tokens[i] = token;
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            if let Some(i) = self.fds.iter().position(|p| p.fd == fd) {
+                self.fds.swap_remove(i);
+                self.tokens.swap_remove(i);
+            }
+            Ok(())
+        }
+
+        pub fn wait(
+            &mut self,
+            timeout: Option<Duration>,
+            out: &mut Vec<(u64, bool, bool)>,
+        ) -> io::Result<()> {
+            out.clear();
+            let ms = super::timeout_ms(timeout);
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as u32, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (p, &tok) in self.fds.iter().zip(&self.tokens) {
+                let r = p.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push((
+                    tok,
+                    r & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    r & (POLLOUT | POLLERR | POLLHUP | POLLNVAL) != 0,
+                ));
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Bounded per-connection staged-write queue: whole wire-encoded frames
+/// (shared `Arc`s — a broadcast serializes once for the whole fleet, not
+/// once per worker) drained by non-blocking writes that resume mid-frame
+/// after `WouldBlock`. The byte stream produced is exactly the
+/// concatenation `write_frame` would have produced.
+struct WriteQueue {
+    queue: VecDeque<Arc<Vec<u8>>>,
+    /// bytes of the front frame already written
+    head_off: usize,
+    bound: usize,
+}
+
+impl WriteQueue {
+    fn new(bound: usize) -> Self {
+        Self { queue: VecDeque::new(), head_off: 0, bound: bound.max(1) }
+    }
+
+    fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Queue one encoded frame; `false` when the queue is at its bound
+    /// (the caller applies the slow-consumer policy).
+    fn push(&mut self, bytes: Arc<Vec<u8>>) -> bool {
+        if self.queue.len() >= self.bound {
+            return false;
+        }
+        self.queue.push_back(bytes);
+        true
+    }
+
+    /// Write until the sink would block or the queue drains. `Ok` with a
+    /// non-empty queue means "socket full, resume on writability".
+    fn flush<W: Write>(&mut self, w: &mut W) -> io::Result<()> {
+        while let Some(head) = self.queue.front() {
+            match w.write(&head[self.head_off..]) {
+                Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+                Ok(n) => {
+                    self.head_off += n;
+                    if self.head_off == head.len() {
+                        self.queue.pop_front();
+                        self.head_off = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One accepted connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    /// `None` until the id handshake frame arrived
+    worker: Option<usize>,
+    /// connection generation for this worker id (reconnect fencing)
+    gen: u64,
+    acc: FrameAccumulator,
+    wq: WriteQueue,
+    /// whether the poller is currently armed for writability
+    want_write: bool,
+    handshake_deadline: Instant,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, queue_bound: usize) -> Self {
+        Self {
+            stream,
+            worker: None,
+            gen: 0,
+            acc: FrameAccumulator::new(),
+            wq: WriteQueue::new(queue_bound),
+            want_write: false,
+            handshake_deadline: Instant::now() + HANDSHAKE_TIMEOUT,
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        let Conn { wq, stream, .. } = self;
+        wq.flush(stream)
+    }
+
+    /// Keep the poller's write interest in sync with queue emptiness.
+    fn sync_interest(&mut self, poller: &mut sys::Poller, token: u64) {
+        let want = !self.wq.is_empty();
+        if want != self.want_write && poller.rearm(self.stream.as_raw_fd(), token, want).is_ok() {
+            self.want_write = want;
+        }
+    }
+}
+
+/// Liveness/protocol events, decoupled from I/O servicing exactly like the
+/// threads backend's reader-thread event channel: `turn` only queues them;
+/// `recv_any`/`try_recv_any` interpret them through the shared
+/// [`PeerTracker`] policy.
+enum Ev {
+    Frame(usize, Frame),
+    Gone(usize, u64),
+    Joined(usize, u64),
+}
+
+/// What became of a connection after servicing its readable edge.
+enum ConnFate {
+    Keep,
+    Dead,
+}
+
+/// Master endpoint over a single-threaded readiness reactor — the
+/// `io = "reactor"` counterpart of [`super::tcp::TcpMaster`]. The worker
+/// side is unchanged ([`super::tcp::TcpWorker`] dials in either way).
+pub struct ReactorMaster {
+    n: usize,
+    poller: sys::Poller,
+    listener: TcpListener,
+    /// slot-indexed connections; poller token = slot + 1 (token 0 = listener)
+    conns: Vec<Option<Conn>>,
+    /// worker id → live connection slot
+    worker_conn: Vec<Option<usize>>,
+    /// per-worker handshake counter (connection generations)
+    gens: Vec<u64>,
+    /// whether each id has ever completed a handshake (startup barrier)
+    ever_joined: Vec<bool>,
+    tracker: PeerTracker,
+    events_q: VecDeque<Ev>,
+    /// poller output scratch
+    poll_events: Vec<(u64, bool, bool)>,
+    /// last round's staged broadcast bytes — reclaimed for the next
+    /// round's serialization once every write queue has released it
+    /// (the broadcast-side `send_reclaim` analogue)
+    staged_spare: Option<Arc<Vec<u8>>>,
+    queue_bound: usize,
+    /// how long `recv_any` waits for a lost worker to reconnect before
+    /// declaring it hung up (same default as the threads backend)
+    pub dead_grace: Duration,
+}
+
+impl ReactorMaster {
+    pub fn listen(addr: impl ToSocketAddrs, n_workers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("bind master socket")?;
+        Self::from_listener(listener, n_workers, DEFAULT_QUEUE_BOUND)
+    }
+
+    /// Accept workers on an already-bound listener. Blocks (driving the
+    /// reactor) until all `n_workers` distinct ids have completed their
+    /// handshake — the same startup barrier as the threads backend.
+    pub fn from_listener(
+        listener: TcpListener,
+        n_workers: usize,
+        queue_bound: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        anyhow::ensure!(queue_bound >= 2, "reactor write-queue bound must be >= 2");
+        listener.set_nonblocking(true).context("master listener nonblocking")?;
+        let mut poller = sys::Poller::new().context("create reactor poller")?;
+        poller.register(listener.as_raw_fd(), 0, false).context("register master listener")?;
+        let mut m = Self {
+            n: n_workers,
+            poller,
+            listener,
+            conns: Vec::new(),
+            worker_conn: vec![None; n_workers],
+            gens: vec![0; n_workers],
+            ever_joined: vec![false; n_workers],
+            tracker: PeerTracker::new(n_workers),
+            events_q: VecDeque::new(),
+            poll_events: Vec::new(),
+            staged_spare: None,
+            queue_bound,
+            dead_grace: Duration::from_secs(2),
+        };
+        while !m.ever_joined.iter().all(|&j| j) {
+            m.turn(None)?;
+        }
+        Ok(m)
+    }
+
+    /// Broadcast frames currently queued for one worker (0 when it has no
+    /// live connection) — the flow-control introspection the backpressure
+    /// test and the scale soak read.
+    pub fn queued_frames(&self, worker: usize) -> usize {
+        self.worker_conn
+            .get(worker)
+            .and_then(|s| *s)
+            .and_then(|slot| self.conns[slot].as_ref())
+            .map_or(0, |c| c.wq.len())
+    }
+
+    /// One reactor cycle: wait for readiness (bounded by `timeout` and the
+    /// nearest handshake deadline), service every ready fd, expire stale
+    /// handshakes. Returns whether any protocol events were queued — the
+    /// "made progress" signal the blocking receive paths key on.
+    fn turn(&mut self, timeout: Option<Duration>) -> Result<bool> {
+        let before = self.events_q.len();
+        let mut eff = timeout;
+        if let Some(deadline) = self.nearest_handshake_deadline() {
+            let until = deadline.saturating_duration_since(Instant::now());
+            eff = Some(eff.map_or(until, |t| t.min(until)));
+        }
+        let mut events = std::mem::take(&mut self.poll_events);
+        self.poller.wait(eff, &mut events).context("reactor poll")?;
+        for &(token, readable, writable) in &events {
+            if token == 0 {
+                self.accept_ready();
+                continue;
+            }
+            let slot = (token - 1) as usize;
+            if slot >= self.conns.len() {
+                continue;
+            }
+            if readable {
+                self.read_ready(slot);
+            }
+            if writable {
+                self.write_ready(slot);
+            }
+        }
+        self.poll_events = events;
+        self.expire_handshakes();
+        Ok(self.events_q.len() > before)
+    }
+
+    fn nearest_handshake_deadline(&self) -> Option<Instant> {
+        self.conns
+            .iter()
+            .flatten()
+            .filter(|c| c.worker.is_none())
+            .map(|c| c.handshake_deadline)
+            .min()
+    }
+
+    fn expire_handshakes(&mut self) {
+        let now = Instant::now();
+        for slot in 0..self.conns.len() {
+            let expired = matches!(
+                &self.conns[slot],
+                Some(c) if c.worker.is_none() && now >= c.handshake_deadline
+            );
+            if expired {
+                // junk/silent connection: drop it; with the reactor this
+                // never blocked anyone else's accept or reconnect
+                self.kill_slot(slot);
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let slot = self.free_slot();
+                    let token = slot as u64 + 1;
+                    if self.poller.register(stream.as_raw_fd(), token, false).is_err() {
+                        continue; // connection dropped
+                    }
+                    self.conns[slot] = Some(Conn::new(stream, self.queue_bound));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn free_slot(&mut self) -> usize {
+        match self.conns.iter().position(Option::is_none) {
+            Some(i) => i,
+            None => {
+                self.conns.push(None);
+                self.conns.len() - 1
+            }
+        }
+    }
+
+    fn read_ready(&mut self, slot: usize) {
+        let Some(mut conn) = self.conns[slot].take() else { return };
+        match self.drive_read(&mut conn, slot) {
+            ConnFate::Keep => self.conns[slot] = Some(conn),
+            ConnFate::Dead => self.kill_taken(conn, slot),
+        }
+    }
+
+    /// Service one connection's readable edge: read until the socket would
+    /// block, parsing every complete frame out of the accumulator as it
+    /// fills (per-connection FIFO order — the order the threads backend's
+    /// blocking reader produced).
+    fn drive_read(&mut self, conn: &mut Conn, slot: usize) -> ConnFate {
+        loop {
+            match conn.acc.fill_from(&mut conn.stream, READ_CHUNK) {
+                Ok(0) => {
+                    // EOF: deliver frames already buffered, then report the
+                    // hangup (exactly what the blocking reader saw)
+                    let _ = self.drain_frames(conn, slot);
+                    return ConnFate::Dead;
+                }
+                Ok(_) => {
+                    if let ConnFate::Dead = self.drain_frames(conn, slot) {
+                        return ConnFate::Dead;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return ConnFate::Keep,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    let _ = self.drain_frames(conn, slot);
+                    return ConnFate::Dead;
+                }
+            }
+        }
+    }
+
+    /// Parse every complete frame buffered on `conn`. The first frame on a
+    /// connection is the id handshake (consumed here, never delivered to
+    /// the engine — same as the threads backend's accept loop).
+    fn drain_frames(&mut self, conn: &mut Conn, slot: usize) -> ConnFate {
+        loop {
+            match conn.acc.next_frame() {
+                Ok(None) => return ConnFate::Keep,
+                Ok(Some(frame)) => match conn.worker {
+                    Some(w) => self.events_q.push_back(Ev::Frame(w, frame)),
+                    None => {
+                        let id = frame.worker as usize;
+                        if id >= self.n {
+                            // junk handshake: drop the connection quietly
+                            return ConnFate::Dead;
+                        }
+                        self.gens[id] += 1;
+                        conn.worker = Some(id);
+                        conn.gen = self.gens[id];
+                        self.ever_joined[id] = true;
+                        // Joined (bumping latest_gen) is queued before the
+                        // superseded connection's Gone, so a reconnect can
+                        // never be demoted by its predecessor's EOF —
+                        // the same fencing the threads backend gets from
+                        // shutting the old socket after registering the new
+                        self.events_q.push_back(Ev::Joined(id, conn.gen));
+                        if let Some(old) = self.worker_conn[id].replace(slot) {
+                            self.kill_slot(old);
+                        }
+                    }
+                },
+                // malformed/oversized stream: poison — drop the connection
+                // (the blocking reader errored out the same way)
+                Err(_) => return ConnFate::Dead,
+            }
+        }
+    }
+
+    fn write_ready(&mut self, slot: usize) {
+        let ok = match self.conns[slot].as_mut() {
+            None => return,
+            Some(conn) => conn.flush().is_ok(),
+        };
+        if !ok {
+            self.kill_slot(slot);
+            return;
+        }
+        if let Some(conn) = self.conns[slot].as_mut() {
+            conn.sync_interest(&mut self.poller, slot as u64 + 1);
+        }
+    }
+
+    fn kill_slot(&mut self, slot: usize) {
+        if let Some(conn) = self.conns[slot].take() {
+            self.kill_taken(conn, slot);
+        }
+    }
+
+    fn kill_taken(&mut self, conn: Conn, slot: usize) {
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        if let Some(w) = conn.worker {
+            if self.worker_conn[w] == Some(slot) {
+                self.worker_conn[w] = None;
+            }
+            self.events_q.push_back(Ev::Gone(w, conn.gen));
+        }
+    }
+
+    /// Interpret one queued event through the shared liveness policy.
+    fn apply(&mut self, ev: Ev) -> Result<Option<(usize, Frame)>> {
+        match ev {
+            Ev::Frame(id, frame) => self.tracker.on_frame(id, frame),
+            Ev::Gone(id, gen) => {
+                self.tracker.on_gone(id, gen);
+                Ok(None)
+            }
+            Ev::Joined(id, gen) => {
+                self.tracker.on_joined(id, gen);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Best-effort drain of all pending write queues within `deadline` —
+    /// the shutdown path: the final round's broadcast may still sit in our
+    /// queues when the engine returns (the threads backend had already
+    /// pushed it into OS buffers synchronously).
+    fn drain_writes(&mut self, deadline: Instant) {
+        while self.conns.iter().flatten().any(|c| !c.wq.is_empty()) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() || self.turn(Some(left)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for ReactorMaster {
+    fn drop(&mut self) {
+        // flush queued broadcasts, then shut every connection down so
+        // blocked workers see EOF instead of waiting on a half-dead fabric
+        let deadline = Instant::now() + self.dead_grace;
+        self.drain_writes(deadline);
+        for conn in self.conns.iter().flatten() {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+        // no accept thread to wake: the listener closes with this struct
+    }
+}
+
+impl MasterTransport for ReactorMaster {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn recv_any(&mut self) -> Result<(usize, Frame)> {
+        loop {
+            while let Some(ev) = self.events_q.pop_front() {
+                if let Some(x) = self.apply(ev)? {
+                    return Ok(x);
+                }
+            }
+            match self.tracker.first_lost() {
+                // while any connection is lost, give its reconnect a grace
+                // window instead of blocking forever
+                Some(lost) => {
+                    let deadline = Instant::now() + self.dead_grace;
+                    loop {
+                        let left = deadline.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            anyhow::bail!(
+                                "worker {lost} hung up (TCP connection closed, no reconnect)"
+                            );
+                        }
+                        if self.turn(Some(left))? {
+                            break;
+                        }
+                    }
+                }
+                None => {
+                    self.turn(None)?;
+                }
+            }
+        }
+    }
+
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
+        loop {
+            while let Some(ev) = self.events_q.pop_front() {
+                if let Some(x) = self.apply(ev)? {
+                    return Ok(Some(x));
+                }
+            }
+            if !self.turn(Some(Duration::ZERO))? {
+                return Ok(None);
+            }
+        }
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        // service pending I/O first so fresh reconnects are included and
+        // drained queues have made room (parity with the threads backend,
+        // where accept + readers run concurrently with the engine)
+        self.turn(Some(Duration::ZERO))?;
+        // serialize once for the whole fleet; every queue shares the bytes.
+        // The staging buffer recycles: once the previous round's Arc is
+        // back to a single owner (all queues flushed — the common case by
+        // the time the engine broadcasts again), its allocation is reused.
+        let mut staged_buf = match self.staged_spare.take() {
+            Some(arc) => Arc::try_unwrap(arc).unwrap_or_default(),
+            None => Vec::new(),
+        };
+        encode_frame(frame, &mut staged_buf)?;
+        let staged = Arc::new(staged_buf);
+        let mut sent = 0usize;
+        for w in 0..self.n {
+            let Some(slot) = self.worker_conn[w] else { continue };
+            let outcome = {
+                let Some(conn) = self.conns[slot].as_mut() else { continue };
+                if conn.wq.push(Arc::clone(&staged)) {
+                    // eager flush: the common case completes inline with no
+                    // writability round trip
+                    Some(conn.flush().is_ok())
+                } else if conn.flush().is_err() {
+                    Some(false)
+                } else if conn.wq.push(Arc::clone(&staged)) {
+                    // the bound had room once the socket took some bytes
+                    Some(conn.flush().is_ok())
+                } else {
+                    None
+                }
+            };
+            match outcome {
+                Some(true) => {
+                    sent += 1;
+                    if let Some(conn) = self.conns[slot].as_mut() {
+                        conn.sync_interest(&mut self.poller, slot as u64 + 1);
+                    }
+                }
+                // write error: dead connection — drop it, the worker may
+                // reconnect (threads backend: writer slot cleared)
+                Some(false) => self.kill_slot(slot),
+                // still full after flushing: slow consumer beyond the flow-
+                // control bound — disconnect rather than queue without bound
+                None => self.kill_slot(slot),
+            }
+        }
+        anyhow::ensure!(sent > 0, "broadcast reached no workers (all hung up)");
+        self.staged_spare = Some(staged);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::Payload;
+    use crate::comm::frame::FrameKind;
+    use crate::comm::tcp::TcpWorker;
+    use crate::comm::{PeerState, WorkerTransport};
+
+    #[test]
+    fn reactor_fabric_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let workers: Vec<_> = (0..2u32)
+            .map(|id| {
+                std::thread::spawn(move || {
+                    let mut w = TcpWorker::connect(addr, id).unwrap();
+                    let p = Payload { kind_tag: 1, bytes: vec![id as u8; 3], bits: 24 };
+                    w.send_update(Frame::update(id, 1, p, 0.0)).unwrap();
+                    let b = w.recv_broadcast().unwrap();
+                    assert_eq!(b.kind, FrameKind::Broadcast);
+                    assert_eq!(b.broadcast_f32(2).unwrap(), vec![9.0, 8.0]);
+                })
+            })
+            .collect();
+        let mut master = ReactorMaster::from_listener(listener, 2, 4).unwrap();
+        let mut seen = vec![false; 2];
+        for _ in 0..2 {
+            let (wid, f) = master.recv_any().unwrap();
+            assert_eq!(f.worker as usize, wid);
+            assert_eq!(f.bytes, vec![wid as u8; 3]);
+            assert!(!seen[wid]);
+            seen[wid] = true;
+        }
+        master.broadcast(&Frame::broadcast(5, &[9.0, 8.0])).unwrap();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn reconnect_after_drop_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let p = Payload { kind_tag: 1, bytes: vec![1], bits: 8 };
+            w.send_update(Frame::update(0, 0, p, 0.0)).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.broadcast_f32(1).unwrap(), vec![1.0]);
+            drop(w); // connection drops mid-run
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let p = Payload { kind_tag: 1, bytes: vec![2], bits: 8 };
+            w.send_update(Frame::update(0, 1, p, 0.0)).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.broadcast_f32(1).unwrap(), vec![3.0]);
+        });
+        let mut master = ReactorMaster::from_listener(listener, 1, 4).unwrap();
+        let (wid, f1) = master.recv_any().unwrap();
+        assert_eq!((wid, f1.round), (0, 0));
+        assert_eq!(f1.bytes, vec![1]);
+        master.broadcast(&Frame::broadcast(0, &[1.0])).unwrap();
+        // second frame arrives on the replacement connection
+        let (wid, f2) = master.recv_any().unwrap();
+        assert_eq!((wid, f2.round), (0, 1));
+        assert_eq!(f2.bytes, vec![2]);
+        master.broadcast(&Frame::broadcast(1, &[3.0])).unwrap();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn all_connections_closed_errors_after_grace() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let w = TcpWorker::connect(addr, 0).unwrap();
+            drop(w);
+        });
+        let mut master = ReactorMaster::from_listener(listener, 1, 4).unwrap();
+        master.dead_grace = Duration::from_millis(50);
+        worker.join().unwrap();
+        let e = master.recv_any().unwrap_err();
+        assert!(format!("{e:#}").contains("hung up"), "{e:#}");
+    }
+
+    #[test]
+    fn done_marker_then_eof_is_a_clean_exit() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            w.send_update(Frame::skip(0, 0)).unwrap();
+            w.send_update(Frame::done(0)).unwrap();
+            // connection drops after the done marker
+        });
+        let mut master = ReactorMaster::from_listener(listener, 1, 4).unwrap();
+        master.dead_grace = Duration::from_millis(100);
+        let (wid, f) = master.recv_any().unwrap();
+        assert_eq!((wid, f.kind), (0, FrameKind::Skip));
+        worker.join().unwrap();
+        // the done marker and the EOF behind it must not surface as frames
+        // or errors; the transport just reports nothing left
+        assert!(master.try_recv_any().unwrap().is_none());
+        assert_eq!(master.tracker.state(0), PeerState::Done);
+    }
+
+    /// The backpressure contract: a stalled worker's broadcasts queue only
+    /// on its own connection, bounded by the write-queue bound, while the
+    /// rest of the fleet keeps receiving — and once the stalled worker
+    /// falls beyond the bound it is disconnected, not buffered forever.
+    #[test]
+    fn stalled_worker_blocks_only_its_own_bounded_queue() {
+        let bound = 4usize;
+        let rounds = 300u64;
+        let d = 32 * 1024; // 128 KiB broadcasts: overwhelm any socket buffer
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        // worker 0: completes its handshake, then never reads
+        let (stall_tx, stall_rx) = std::sync::mpsc::channel::<()>();
+        let stalled = std::thread::spawn(move || {
+            let w = TcpWorker::connect(addr, 0).unwrap();
+            let _ = stall_rx.recv(); // hold the socket open, read nothing
+            drop(w);
+        });
+        // worker 1: healthy — reads every broadcast, answers with a skip
+        let healthy = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 1).unwrap();
+            w.send_update(Frame::skip(1, 0)).unwrap();
+            let mut got = 0u64;
+            while got < rounds {
+                let b = w.recv_broadcast().unwrap();
+                assert_eq!(b.kind, FrameKind::Broadcast);
+                assert_eq!(b.round, got);
+                got += 1;
+                if got < rounds {
+                    w.send_update(Frame::skip(1, got)).unwrap();
+                }
+            }
+            got
+        });
+
+        let mut master = ReactorMaster::from_listener(listener, 2, bound).unwrap();
+        let dense = vec![0.5f32; d];
+        for t in 0..rounds {
+            // the healthy worker's reply paces the loop (protocol flow
+            // control), so only worker 0's queue can ever grow
+            let (wid, f) = master.recv_any().unwrap();
+            assert_eq!((wid, f.kind), (1, FrameKind::Skip));
+            master.broadcast(&Frame::broadcast(t, &dense)).unwrap();
+            let queued = master.queued_frames(0);
+            assert!(
+                queued <= bound,
+                "round {t}: stalled worker queued {queued} frames (bound {bound})"
+            );
+            assert!(master.queued_frames(1) <= bound);
+        }
+        // the stalled worker must have been disconnected by the flow
+        // control (its connection gone, its frames no longer queued), and
+        // the fleet progressed to the last round regardless
+        assert!(master.worker_conn[0].is_none(), "slow consumer must be disconnected");
+        assert_eq!(master.queued_frames(0), 0);
+        assert_eq!(master.tracker.state(0), PeerState::Lost);
+        stall_tx.send(()).unwrap();
+        stalled.join().unwrap();
+        assert_eq!(healthy.join().unwrap(), rounds);
+    }
+
+    /// Staged writes must reproduce the blocking writer's byte stream
+    /// exactly, across partial writes that stop mid-frame.
+    #[test]
+    fn write_queue_staged_writes_match_the_blocking_stream() {
+        struct Sink {
+            buf: Vec<u8>,
+            chunk: usize,
+            block_next: bool,
+        }
+        impl Write for Sink {
+            fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+                if self.block_next {
+                    self.block_next = false;
+                    return Err(io::ErrorKind::WouldBlock.into());
+                }
+                self.block_next = true;
+                let n = data.len().min(self.chunk.max(1));
+                self.buf.extend_from_slice(&data[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let frames: Vec<Frame> =
+            (0..3u64).map(|t| Frame::broadcast(t, &[t as f32, -1.5, 0.25])).collect();
+        let mut expect = Vec::new();
+        for f in &frames {
+            crate::comm::framed::write_frame(&mut expect, f).unwrap();
+        }
+        for chunk in [1usize, 7, 64] {
+            let mut wq = WriteQueue::new(8);
+            for f in &frames {
+                let mut staged = Vec::new();
+                encode_frame(f, &mut staged).unwrap();
+                assert!(wq.push(Arc::new(staged)));
+            }
+            let mut sink = Sink { buf: Vec::new(), chunk, block_next: false };
+            while !wq.is_empty() {
+                wq.flush(&mut sink).unwrap();
+            }
+            assert_eq!(sink.buf, expect, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn write_queue_bound_is_enforced() {
+        let mut wq = WriteQueue::new(2);
+        assert!(wq.push(Arc::new(vec![1])));
+        assert!(wq.push(Arc::new(vec![2])));
+        assert!(!wq.push(Arc::new(vec![3])), "third frame must be refused");
+        assert_eq!(wq.len(), 2);
+    }
+}

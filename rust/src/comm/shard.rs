@@ -26,11 +26,13 @@
 //! loop's default) ping-pongs both the original container buffer (returned
 //! to the worker's encode slot) and the per-shard sub-buffers (reclaimed
 //! from serializing transports), so warm sharded sends allocate nothing
-//! over TCP. The inline fallback path cannot reclaim through
-//! `WorkerTransport::send_update`, so its slots refill by allocation each
-//! round, and the broadcast gather assembles one fresh dense frame per
-//! round (the worker loop owns and drops it); single-shard runs bypass
-//! this module entirely and stay zero-alloc.
+//! over TCP. The broadcast gather receives each shard's downlink into a
+//! persistent per-shard frame and assembles into the caller's recycled
+//! output frame (`recv_broadcast_into`), so warm gathers allocate nothing
+//! either (pinned by `tests/alloc_steady_state.rs`). The inline send
+//! fallback cannot reclaim through `WorkerTransport::send_update`, so its
+//! slots refill by allocation each round; single-shard runs bypass this
+//! module entirely.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -231,6 +233,11 @@ pub struct ShardedWorkerEndpoint {
     /// buffers move into the sent frames and refill by allocation next
     /// round (only [`ShardedSender`]'s reclaim path keeps buffers alive)
     slots: Vec<Payload>,
+    /// persistent per-shard broadcast frames: each shard's downlink
+    /// receives into its own recycled frame round after round, so the
+    /// gather path stops allocating once warm (the inner transports'
+    /// `recv_broadcast_into` recycling composes through here)
+    shard_frames: Vec<Frame>,
 }
 
 impl ShardedWorkerEndpoint {
@@ -242,7 +249,12 @@ impl ShardedWorkerEndpoint {
             shards.len()
         );
         let n = shards.len();
-        Ok(Self { map, shards, slots: vec![Payload::empty(); n] })
+        Ok(Self {
+            map,
+            shards,
+            slots: vec![Payload::empty(); n],
+            shard_frames: (0..n).map(|_| Frame::shutdown()).collect(),
+        })
     }
 }
 
@@ -272,10 +284,20 @@ impl WorkerTransport for ShardedWorkerEndpoint {
     }
 
     fn recv_broadcast(&mut self) -> Result<Frame> {
-        let mut bytes = vec![0u8; self.map.dim() * 4];
+        let mut frame = Frame::shutdown();
+        self.recv_broadcast_into(&mut frame)?;
+        Ok(frame)
+    }
+
+    fn recv_broadcast_into(&mut self, out: &mut Frame) -> Result<()> {
+        // assemble straight into the recycled output frame's payload; no
+        // clear() — the shards partition the full dimension, so the
+        // scatters below overwrite every byte (warm resize is a no-op)
+        out.bytes.resize(self.map.dim() * 4, 0);
         let mut round: Option<u64> = None;
-        for (s, shard) in self.shards.iter_mut().enumerate() {
-            let f = shard.recv_broadcast().with_context(|| format!("shard {s}"))?;
+        for s in 0..self.shards.len() {
+            let f = &mut self.shard_frames[s];
+            self.shards[s].recv_broadcast_into(f).with_context(|| format!("shard {s}"))?;
             anyhow::ensure!(
                 f.kind == FrameKind::Broadcast,
                 "expected a broadcast from shard {s}, got {:?}",
@@ -296,19 +318,16 @@ impl WorkerTransport for ShardedWorkerEndpoint {
                     );
                 }
             }
-            self.map.scatter_bytes(s, &f.bytes, &mut bytes)?;
+            self.map.scatter_bytes(s, &f.bytes, &mut out.bytes)?;
         }
-        let round = round.context("no shards")?;
-        Ok(Frame {
-            kind: FrameKind::Broadcast,
-            worker: u32::MAX,
-            shard: 0,
-            round,
-            payload_tag: 0,
-            payload_bits: bytes.len() as u64 * 8,
-            bytes,
-            loss: 0.0,
-        })
+        out.kind = FrameKind::Broadcast;
+        out.worker = u32::MAX;
+        out.shard = 0;
+        out.round = round.context("no shards")?;
+        out.payload_tag = 0;
+        out.payload_bits = out.bytes.len() as u64 * 8;
+        out.loss = 0.0;
+        Ok(())
     }
 
     fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {

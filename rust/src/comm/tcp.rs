@@ -15,6 +15,7 @@
 //! merged `(worker_id, Frame)` event queue; write halves are kept for
 //! broadcasts.
 
+use std::io::Write;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
@@ -24,13 +25,15 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::frame::Frame;
-use super::framed::{read_frame, write_frame};
-use super::{FrameSender, MasterTransport, PeerState, WorkerTransport};
+use super::framed::{encode_frame, read_frame, read_frame_into, write_frame, write_frame_into};
+use super::{FrameSender, MasterTransport, PeerTracker, WorkerTransport};
 
 /// Worker endpoint over one TCP connection to the master.
 pub struct TcpWorker {
     pub worker_id: u32,
     stream: TcpStream,
+    /// reusable wire-staging buffer for sends (see `framed::write_frame_into`)
+    scratch: Vec<u8>,
 }
 
 impl TcpWorker {
@@ -52,40 +55,46 @@ impl TcpWorker {
             loss: 0.0,
         };
         write_frame(&mut stream, &hello)?;
-        Ok(Self { worker_id, stream })
+        Ok(Self { worker_id, stream, scratch: Vec::new() })
     }
 }
 
 /// Split-off update sender over a cloned socket handle.
 pub struct TcpSender {
     stream: TcpStream,
+    scratch: Vec<u8>,
 }
 
 impl FrameSender for TcpSender {
     fn send(&mut self, frame: Frame) -> Result<()> {
-        write_frame(&mut self.stream, &frame)
+        write_frame_into(&mut self.stream, &frame, &mut self.scratch)
     }
 
     fn send_reclaim(&mut self, frame: Frame) -> Result<Option<Vec<u8>>> {
         // the codec copies the bytes onto the socket; the payload buffer is
         // spent and can go back to the worker's encode slot
-        write_frame(&mut self.stream, &frame)?;
+        write_frame_into(&mut self.stream, &frame, &mut self.scratch)?;
         Ok(Some(frame.bytes))
     }
 }
 
 impl WorkerTransport for TcpWorker {
     fn send_update(&mut self, frame: Frame) -> Result<()> {
-        write_frame(&mut self.stream, &frame)
+        write_frame_into(&mut self.stream, &frame, &mut self.scratch)
     }
 
     fn recv_broadcast(&mut self) -> Result<Frame> {
         read_frame(&mut self.stream)
     }
 
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        // the broadcast body lands in the recycled frame's payload buffer
+        read_frame_into(&mut self.stream, frame)
+    }
+
     fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
         let stream = self.stream.try_clone().context("clone worker socket")?;
-        Ok(Box::new(TcpSender { stream }))
+        Ok(Box::new(TcpSender { stream, scratch: Vec::new() }))
     }
 }
 
@@ -112,9 +121,9 @@ pub struct TcpMaster {
     local_addr: std::net::SocketAddr,
     rx: Receiver<Event>,
     writers: Writers,
-    state: Vec<PeerState>,
-    /// newest connection generation seen per worker id
-    latest_gen: Vec<u64>,
+    tracker: PeerTracker,
+    /// reusable wire-staging buffer: broadcasts serialize once, not per worker
+    bcast_scratch: Vec<u8>,
     shutdown: Arc<AtomicBool>,
     /// how long `recv_any` waits for a lost worker to reconnect before
     /// declaring it hung up
@@ -159,8 +168,8 @@ impl TcpMaster {
             local_addr,
             rx,
             writers,
-            state: vec![PeerState::Alive; n_workers],
-            latest_gen: vec![0; n_workers],
+            tracker: PeerTracker::new(n_workers),
+            bcast_scratch: Vec::new(),
             shutdown,
             dead_grace: Duration::from_secs(2),
         })
@@ -168,42 +177,20 @@ impl TcpMaster {
 
     /// A worker that vanished mid-run without its done marker, if any.
     fn first_lost(&self) -> Option<usize> {
-        self.state.iter().position(|&s| s == PeerState::Lost)
+        self.tracker.first_lost()
     }
 
-    /// Apply one event; `Ok(Some)` hands a frame to the engine, `Err` means
-    /// a worker aborted mid-run.
+    /// Apply one event through the shared liveness policy; `Ok(Some)` hands
+    /// a frame to the engine, `Err` means a worker aborted mid-run.
     fn absorb(&mut self, ev: Event) -> Result<Option<(usize, Frame)>> {
         match ev {
-            Event::Frame(id, frame) => {
-                if frame.kind == super::frame::FrameKind::Shutdown {
-                    if self.state[id] == PeerState::Done {
-                        return Ok(None);
-                    }
-                    if frame.is_done_marker() {
-                        self.state[id] = PeerState::Done;
-                        return Ok(None);
-                    }
-                    self.state[id] = PeerState::Lost;
-                    anyhow::bail!("worker {id} hung up (aborted mid-run)");
-                }
-                self.state[id] = PeerState::Alive;
-                Ok(Some((id, frame)))
-            }
+            Event::Frame(id, frame) => self.tracker.on_frame(id, frame),
             Event::Gone(id, gen) => {
-                // EOF without a done marker: lost until it reconnects. A
-                // stale generation's EOF (already superseded by a newer
-                // connection) carries no liveness information.
-                if gen >= self.latest_gen[id] && self.state[id] != PeerState::Done {
-                    self.state[id] = PeerState::Lost;
-                }
+                self.tracker.on_gone(id, gen);
                 Ok(None)
             }
             Event::Joined(id, gen) => {
-                self.latest_gen[id] = self.latest_gen[id].max(gen);
-                if self.state[id] == PeerState::Lost {
-                    self.state[id] = PeerState::Alive;
-                }
+                self.tracker.on_joined(id, gen);
                 Ok(None)
             }
         }
@@ -335,11 +322,15 @@ impl MasterTransport for TcpMaster {
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        // serialize once into the recycled scratch; the per-worker writes
+        // then move the same staged bytes (byte-identical stream to
+        // write_frame, one serialization instead of n)
+        encode_frame(frame, &mut self.bcast_scratch)?;
         let mut sent = 0usize;
         for w in 0..self.n {
             let mut guard = self.writers[w].lock().unwrap();
             if let Some(stream) = guard.as_mut() {
-                match write_frame(stream, frame) {
+                match stream.write_all(&self.bcast_scratch).and_then(|()| stream.flush()) {
                     Ok(()) => sent += 1,
                     // dead connection: drop the write half; the worker may
                     // reconnect, at which point the accept loop installs a

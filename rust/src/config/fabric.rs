@@ -8,6 +8,10 @@
 //! ```toml
 //! [fabric]
 //! transport = "tcp"           # "channel" (default) | "tcp"
+//! io = "reactor"              # master I/O engine over tcp:
+//!                             # "threads" (default) | "reactor"
+//! io_queue = 16               # reactor: per-connection broadcast write-
+//!                             # queue bound (frames)
 //! pipelined = true            # double-buffered sends (default true)
 //! max_staleness = 2           # 0 = full-sync rounds (default)
 //! quorum = 2                  # min workers with a frame queued per round
@@ -18,10 +22,11 @@
 //! seed = 7                    # fault RNG seed
 //! ```
 //!
-//! and the CLI override `--fabric tcp,staleness=2,quorum=2,drop=0.01,
-//! straggler=1:5,churn=2:10..20` (comma-separated tokens; unlisted fields
-//! keep their current values, so `--fabric tcp` alone just switches the
-//! transport).
+//! and the CLI override `--fabric tcp,io=reactor,staleness=2,quorum=2,
+//! drop=0.01,straggler=1:5,churn=2:10..20` (comma-separated tokens;
+//! unlisted fields keep their current values, so `--fabric tcp` alone just
+//! switches the transport). `--io reactor|threads` is sugar for the `io=`
+//! token.
 
 use anyhow::{Context, Result};
 
@@ -38,10 +43,31 @@ pub enum TransportKind {
     Tcp,
 }
 
+/// Master-side I/O engine for the byte-stream (TCP) fabric — ignored by
+/// the in-process channel transport.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum IoBackend {
+    /// Lifetime accept thread + one blocking reader thread per connection
+    /// (the PR-2 engine; O(workers) master threads).
+    #[default]
+    Threads,
+    /// Single-threaded epoll-style readiness reactor (`comm::reactor`):
+    /// zero master threads at any worker count, bounded per-connection
+    /// broadcast write queues (flow control). Bit-identical results on
+    /// deterministic runs (DESIGN.md §6).
+    Reactor,
+}
+
 /// Fully-resolved fabric configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FabricSpec {
     pub transport: TransportKind,
+    /// Master-side I/O engine when `transport = "tcp"`.
+    pub io: IoBackend,
+    /// Reactor backend: per-connection broadcast write-queue bound
+    /// (frames). The effective bound is raised to cover the staleness
+    /// window — see [`Self::reactor_queue_bound`].
+    pub io_queue: usize,
     /// Overlap encode+send of round t with round t+1's prefetch.
     pub pipelined: bool,
     /// 0 = full-sync rounds; >0 enables bounded-staleness aggregation.
@@ -67,6 +93,8 @@ impl Default for FabricSpec {
     fn default() -> Self {
         Self {
             transport: TransportKind::Channel,
+            io: IoBackend::Threads,
+            io_queue: crate::comm::reactor::DEFAULT_QUEUE_BOUND,
             pipelined: true,
             max_staleness: 0,
             quorum: 1,
@@ -94,6 +122,14 @@ impl FabricSpec {
         self.drop_prob > 0.0 || !self.straggler_ms.is_empty()
     }
 
+    /// Effective reactor write-queue bound: the configured `io_queue`,
+    /// raised to clear the bounded-staleness window (`max_staleness + 4`)
+    /// so flow control can only disconnect a worker that lags further than
+    /// the aggregation mode allows a healthy worker to lag.
+    pub fn reactor_queue_bound(&self) -> usize {
+        self.io_queue.max(self.max_staleness as usize + 4)
+    }
+
     /// Straggler delay for one worker (0 = none).
     pub fn straggler_for(&self, worker: usize) -> f64 {
         self.straggler_ms
@@ -113,6 +149,8 @@ impl FabricSpec {
     }
 
     pub fn validate(&self) -> Result<()> {
+        let q = self.io_queue;
+        anyhow::ensure!(q >= 2, "fabric.io_queue must be >= 2, got {q}");
         anyhow::ensure!(
             (0.0..1.0).contains(&self.drop_prob),
             "fabric.drop_prob must be in [0, 1), got {}",
@@ -134,6 +172,12 @@ impl FabricSpec {
         let mut s = Self::default();
         if let Some(x) = v.opt("transport") {
             s.transport = parse_transport(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("io") {
+            s.io = parse_io(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("io_queue") {
+            s.io_queue = x.as_usize()?;
         }
         if let Some(x) = v.opt("pipelined") {
             s.pipelined = x.as_bool()?;
@@ -170,15 +214,21 @@ impl FabricSpec {
             match token.split_once('=') {
                 None => match token {
                     "channel" | "tcp" => self.transport = parse_transport(token)?,
+                    "threads" | "reactor" => self.io = parse_io(token)?,
                     "pipelined" => self.pipelined = true,
                     "inline" | "sync" => self.pipelined = false,
                     other => anyhow::bail!(
-                        "unknown fabric token {other:?} (expected channel|tcp|pipelined|inline \
-                         or key=value)"
+                        "unknown fabric token {other:?} (expected channel|tcp|threads|reactor|\
+                         pipelined|inline or key=value)"
                     ),
                 },
                 Some((key, val)) => match key {
                     "transport" => self.transport = parse_transport(val)?,
+                    "io" => self.io = parse_io(val)?,
+                    "io_queue" => {
+                        self.io_queue =
+                            val.parse().with_context(|| format!("fabric io_queue={val:?}"))?
+                    }
                     "pipelined" => {
                         self.pipelined = val
                             .parse::<bool>()
@@ -219,6 +269,14 @@ fn parse_transport(s: &str) -> Result<TransportKind> {
         "channel" => TransportKind::Channel,
         "tcp" => TransportKind::Tcp,
         other => anyhow::bail!("unknown fabric transport {other:?} (channel|tcp)"),
+    })
+}
+
+fn parse_io(s: &str) -> Result<IoBackend> {
+    Ok(match s {
+        "threads" => IoBackend::Threads,
+        "reactor" => IoBackend::Reactor,
+        other => anyhow::bail!("unknown fabric io backend {other:?} (threads|reactor)"),
     })
 }
 
@@ -263,6 +321,8 @@ mod tests {
     fn defaults_are_a_clean_channel_fabric() {
         let f = FabricSpec::default();
         assert_eq!(f.transport, TransportKind::Channel);
+        assert_eq!(f.io, IoBackend::Threads, "threads stays the default io backend");
+        assert_eq!(f.io_queue, crate::comm::reactor::DEFAULT_QUEUE_BOUND);
         assert!(f.pipelined);
         assert_eq!(f.aggregation(), AggMode::FullSync);
         assert!(!f.has_faults());
@@ -302,9 +362,43 @@ mod tests {
         assert_eq!(f.max_staleness, 2);
         assert!((f.drop_prob - 0.1).abs() < 1e-12);
         assert!(f.pipelined, "unlisted fields keep their values");
+        assert_eq!(f.io, IoBackend::Threads, "io untouched by unrelated tokens");
         f.apply_str("inline").unwrap();
         assert!(!f.pipelined);
         assert_eq!(f.transport, TransportKind::Tcp, "still tcp");
+    }
+
+    #[test]
+    fn io_backend_tokens_parse_both_forms() {
+        let mut f = FabricSpec::default();
+        f.apply_str("tcp,reactor").unwrap();
+        assert_eq!(f.io, IoBackend::Reactor, "bare token");
+        f.apply_str("io=threads").unwrap();
+        assert_eq!(f.io, IoBackend::Threads, "keyed token");
+        f.apply_str("io=reactor,io_queue=8").unwrap();
+        assert_eq!(f.io, IoBackend::Reactor);
+        assert_eq!(f.io_queue, 8);
+        assert!(f.apply_str("io=warp").is_err());
+        assert!(f.apply_str("io_queue=1").is_err(), "bound below 2 rejected by validate");
+
+        let text = "[fabric]\ntransport = \"tcp\"\nio = \"reactor\"\nio_queue = 6\n";
+        let v = toml::parse(text).unwrap();
+        let g = FabricSpec::from_value(v.get("fabric").unwrap()).unwrap();
+        assert_eq!(g.io, IoBackend::Reactor);
+        assert_eq!(g.io_queue, 6);
+    }
+
+    #[test]
+    fn reactor_queue_bound_clears_the_staleness_window() {
+        let mut f = FabricSpec { io_queue: 4, ..Default::default() };
+        assert_eq!(f.reactor_queue_bound(), 4, "full-sync: configured bound wins");
+        f.max_staleness = 10;
+        assert_eq!(
+            f.reactor_queue_bound(),
+            14,
+            "a healthy bounded-staleness worker may lag max_staleness rounds; the \
+             flow-control bound must sit above that"
+        );
     }
 
     #[test]
@@ -319,6 +413,9 @@ mod tests {
         assert!(g.validate().is_err());
         g.drop_prob = 0.0;
         g.quorum = 0;
+        assert!(g.validate().is_err());
+        g.quorum = 1;
+        g.io_queue = 0;
         assert!(g.validate().is_err());
     }
 }

@@ -13,6 +13,6 @@ pub mod toml;
 pub mod value;
 
 pub use experiment::{ExperimentConfig, SchemeSpec};
-pub use fabric::{FabricSpec, TransportKind};
+pub use fabric::{FabricSpec, IoBackend, TransportKind};
 pub use shards::ShardsSpec;
 pub use value::Value;

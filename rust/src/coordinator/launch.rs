@@ -12,9 +12,10 @@ use anyhow::{Context, Result};
 use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats};
 use crate::comm::tcp::{TcpMaster, TcpWorker};
 use crate::comm::{
-    channel_fabric, MasterTransport, ShardMap, ShardedWorkerEndpoint, WorkerTransport,
+    channel_fabric, MasterTransport, ReactorMaster, ShardMap, ShardedWorkerEndpoint,
+    WorkerTransport,
 };
-use crate::config::{ExperimentConfig, FabricSpec, ShardsSpec, TransportKind};
+use crate::config::{ExperimentConfig, FabricSpec, IoBackend, ShardsSpec, TransportKind};
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
 use crate::metrics::{CommStats, RunPoint};
 use crate::model::{Manifest, ModelKind};
@@ -113,7 +114,7 @@ pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
                         .with_context(|| format!("worker {wid}: dial fabric"))?,
                 ));
             }
-            Box::new(TcpMaster::from_listener(listener, n)?)
+            master_from_listener(fabric, listener, n)?
         }
     };
     let mut fault_stats = Vec::new();
@@ -121,6 +122,23 @@ pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
         workers = wrap_faults(fabric, workers, &mut fault_stats);
     }
     Ok((master, workers, fault_stats))
+}
+
+/// Accept `n` workers on a bound listener with the configured master-side
+/// I/O engine — the one TCP-master construction path the in-process
+/// launcher and `tempo master-serve` (per shard) share, so backend
+/// selection cannot drift between deployments.
+pub fn master_from_listener(
+    fabric: &FabricSpec,
+    listener: std::net::TcpListener,
+    n: usize,
+) -> Result<Box<dyn MasterTransport>> {
+    Ok(match fabric.io {
+        IoBackend::Threads => Box::new(TcpMaster::from_listener(listener, n)?),
+        IoBackend::Reactor => {
+            Box::new(ReactorMaster::from_listener(listener, n, fabric.reactor_queue_bound())?)
+        }
+    })
 }
 
 fn wrap_faults(

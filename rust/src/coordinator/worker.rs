@@ -263,6 +263,10 @@ fn run_rounds_inner<T: WorkerTransport>(
     let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
     let mut losses = Vec::with_capacity(spec.steps as usize);
     let mut update = vec![0.0f32; d];
+    // one broadcast frame recycled across rounds: the transport receives
+    // into its payload buffer (recv_broadcast_into), closing the last
+    // receive-side allocation of the round loop
+    let mut bframe = Frame::shutdown();
     let mut skipped = 0u64;
 
     // the round loop runs in a closure so that EVERY exit path falls
@@ -289,7 +293,7 @@ fn run_rounds_inner<T: WorkerTransport>(
                 if t + 1 < spec.steps {
                     source.prefetch(t + 1);
                 }
-                recv_apply(spec, transport, &mut phases, &mut w, &mut update, t)?;
+                recv_apply(spec, transport, &mut phases, &mut w, &mut update, &mut bframe, t)?;
                 continue;
             }
 
@@ -357,7 +361,7 @@ fn run_rounds_inner<T: WorkerTransport>(
             }
 
             // 4. receive averaged r̃, apply update
-            recv_apply(spec, transport, &mut phases, &mut w, &mut update, t)?;
+            recv_apply(spec, transport, &mut phases, &mut w, &mut update, &mut bframe, t)?;
         }
         Ok(())
     })();
@@ -422,16 +426,20 @@ fn recv_apply<T: WorkerTransport>(
     phases: &mut PhaseTimes,
     w: &mut [f32],
     update: &mut [f32],
+    bframe: &mut Frame,
     t: u64,
 ) -> Result<()> {
     let timer = Timer::start();
-    let frame = transport.recv_broadcast()?;
+    // receive into the recycled frame: TCP reads the body into the frame's
+    // existing buffer, the channel fabric ships the spent buffer back to
+    // the master's broadcast staging (see comm module docs)
+    transport.recv_broadcast_into(bframe)?;
     phases.add("wait", timer.elapsed_secs());
     let timer = Timer::start();
     // decode straight into the recycled dense update buffer — together
     // with the master's broadcast_from staging this closes the broadcast
     // side of the round loop's allocation story (ROADMAP)
-    frame.broadcast_f32_into(update)?;
+    bframe.broadcast_f32_into(update)?;
     let lr = spec.schedule.lr_at(t);
     for i in 0..w.len() {
         w[i] -= lr * update[i];

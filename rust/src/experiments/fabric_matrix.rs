@@ -1,10 +1,11 @@
 //! Fabric scenario matrix — the paper's headline scheme (EF Top-K with
 //! Est-K prediction, Table I bottom section) driven through the round
 //! engine under a matrix of transport/degradation scenarios: clean channel
-//! vs clean TCP, a straggling worker (full-sync vs bounded-staleness
+//! vs clean TCP (under both master I/O engines — threads and the §6
+//! reactor), a straggling worker (full-sync vs bounded-staleness
 //! aggregation), message drop-and-retransmit, worker churn, and the
 //! block-sharded master (a blockwise scheme scattered over 2/4 master
-//! shards, on both fabrics).
+//! shards, on both fabrics and both I/O engines).
 //!
 //! Everything here uses synthetic gradient sources and the headless
 //! master, so the whole matrix runs offline (no artifacts, no PJRT) — it
@@ -109,6 +110,8 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
 
     let clean = FabricSpec::default();
     let tcp = FabricSpec { transport: crate::config::TransportKind::Tcp, ..clean.clone() };
+    // same TCP scenarios under the reactor master I/O engine (DESIGN.md §6)
+    let tcp_reactor = FabricSpec { io: crate::config::IoBackend::Reactor, ..tcp.clone() };
     let straggler = FabricSpec {
         straggler_ms: vec![(n - 1, if opts.smoke { 2.0 } else { 5.0 })],
         seed: opts.seed,
@@ -130,6 +133,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     let scenarios: Vec<(&str, FabricSpec, &str, usize)> = vec![
         ("clean/channel", clean.clone(), SPEC_SINGLE, 1),
         ("clean/tcp", tcp.clone(), SPEC_SINGLE, 1),
+        ("clean/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1),
         ("straggler/full-sync", straggler, SPEC_SINGLE, 1),
         ("straggler/staleness=2", straggler_stale, SPEC_SINGLE, 1),
         ("drop=0.2/retransmit", droppy, SPEC_SINGLE, 1),
@@ -139,6 +143,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         ("blockwise/1-shard", clean.clone(), SPEC_BLOCKWISE, 1),
         ("sharded/channel/shards=2", clean, SPEC_BLOCKWISE, 2),
         ("sharded/tcp/shards=4", tcp, SPEC_BLOCKWISE, 4),
+        ("sharded/tcp-reactor/shards=4", tcp_reactor, SPEC_BLOCKWISE, 4),
     ];
 
     let path = format!("{}/fabric_matrix.csv", opts.out_dir);

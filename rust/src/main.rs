@@ -5,7 +5,7 @@
 use anyhow::{Context, Result};
 
 use tempo::cli::{Args, USAGE};
-use tempo::comm::tcp::{TcpMaster, TcpWorker};
+use tempo::comm::tcp::TcpWorker;
 use tempo::config::{toml, ExperimentConfig};
 use tempo::coordinator::master::{MasterLoop, MasterSpec};
 use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
@@ -76,6 +76,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.flag("fabric")? {
         // fabric override tokens, e.g. --fabric tcp,staleness=2,drop=0.01
         cfg.fabric.apply_str(v).context("--fabric")?;
+    }
+    if let Some(v) = args.flag("io")? {
+        // master-side I/O engine for the TCP fabric: threads | reactor
+        // (sugar for the `io=` fabric token, applied after --fabric)
+        cfg.fabric.apply_str(&format!("io={v}")).context("--io")?;
     }
     if let Some(v) = args.flag("shards")? {
         // master shard count (block→shard assignment stays in [shards])
@@ -236,15 +241,20 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         }
         let mut transports: Vec<Box<dyn tempo::comm::MasterTransport>> = Vec::new();
         for (s, listener) in listeners.into_iter().enumerate() {
-            transports.push(Box::new(
-                TcpMaster::from_listener(listener, cfg.workers)
+            transports.push(
+                launch::master_from_listener(&cfg.fabric, listener, cfg.workers)
                     .with_context(|| format!("shard {s} accept"))?,
-            ));
+            );
         }
         launch::run_sharded_master(spec, map, transports, &runtime)?
     } else {
-        println!("master: listening on {listen} for {} workers", cfg.workers);
-        let transport = TcpMaster::listen(listen, cfg.workers)?;
+        println!(
+            "master: listening on {listen} for {} workers (io={:?})",
+            cfg.workers, cfg.fabric.io
+        );
+        let listener =
+            std::net::TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let transport = launch::master_from_listener(&cfg.fabric, listener, cfg.workers)?;
         MasterLoop::new(spec, transport).run(&runtime)?
     };
     println!(

@@ -7,15 +7,29 @@
 //! apply decode (`broadcast_f32_into` into the recycled update buffer)
 //! must also allocate nothing once warm.
 //!
+//! PR 5 extends the pin to the remaining per-round comm allocations
+//! (ROADMAP "Broadcast path reuse" leftovers): the framed wire codec's
+//! write staging + read body (`write_frame_into` / `read_frame_into`),
+//! the sharded gather's assembled broadcast
+//! (`ShardedWorkerEndpoint::recv_broadcast_into` over persistent per-shard
+//! frames), and the channel fabric's per-worker broadcast clone (now
+//! refilled from worker-returned spare buffers — only the mpsc channel's
+//! amortized segment allocation remains, which is bounded and payload-
+//! size-independent).
+//!
 //! This file holds exactly one test on purpose: the counting allocator is
 //! process-global, and a sibling test allocating concurrently would make
-//! the count meaningless.
+//! the count meaningless. The later phases run single-threaded and toggle
+//! the counter around exactly the code under pin.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 use tempo::coding::Payload;
-use tempo::comm::Frame;
+use tempo::comm::framed::{read_frame_into, write_frame_into};
+use tempo::comm::{channel_fabric, Frame, MasterTransport, ShardMap, ShardedWorkerEndpoint};
+use tempo::comm::{FrameKind, WorkerTransport};
 use tempo::scheme::{MasterScheme, Scheme, WorkerScheme};
 use tempo::util::Pcg64;
 
@@ -68,6 +82,13 @@ fn warm_compression_rounds_allocate_nothing() {
     // ping-pongs the same way through Frame::broadcast_from
     let mut slots = [Payload::empty(), Payload::empty()];
     let mut bcast: Vec<u8> = Vec::new();
+    // framed wire ping-pong buffers: staging scratch, the in-memory
+    // "socket", and the recycled receive frame (the worker loop keeps one
+    // frame alive across rounds and receives into it)
+    let mut wire: Vec<u8> = Vec::new();
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut rframe = Frame::shutdown();
+    let mut update2 = vec![0.0f32; d];
 
     // warm-up: every arena buffer grows to its high-water capacity
     for t in 0..50u64 {
@@ -77,6 +98,10 @@ fn warm_compression_rounds_allocate_nothing() {
         master.receive(slot, t, &mut rtilde).unwrap();
         let frame = Frame::broadcast_from(t, &rtilde, bcast);
         frame.broadcast_f32_into(&mut update).unwrap();
+        wire.clear();
+        write_frame_into(&mut wire, &frame, &mut scratch).unwrap();
+        read_frame_into(&mut wire.as_slice(), &mut rframe).unwrap();
+        rframe.broadcast_f32_into(&mut update2).unwrap();
         bcast = frame.bytes;
     }
     // payload bit counts wobble slightly between rounds; pinning the slot
@@ -97,9 +122,108 @@ fn warm_compression_rounds_allocate_nothing() {
         // the worker decodes it into the recycled update buffer
         let frame = Frame::broadcast_from(t, &rtilde, bcast);
         frame.broadcast_f32_into(&mut update).unwrap();
+        // wire side: the staged write and the read-into-recycled-frame
+        // round trip (what the TCP fabric does per broadcast) must also be
+        // allocation-free once warm
+        wire.clear();
+        write_frame_into(&mut wire, &frame, &mut scratch).unwrap();
+        read_frame_into(&mut wire.as_slice(), &mut rframe).unwrap();
+        rframe.broadcast_f32_into(&mut update2).unwrap();
         bcast = frame.bytes;
     }
     COUNTING.store(false, Ordering::SeqCst);
     let n = ALLOCS.load(Ordering::SeqCst);
     assert_eq!(n, 0, "steady-state hot path must not allocate (saw {n} allocations in 100 rounds)");
+
+    sharded_gather_is_zero_alloc_once_warm();
+    channel_broadcast_clone_is_gone();
+}
+
+/// The sharded gather: per-shard downlinks receive into persistent frames
+/// and assemble into the caller's recycled output frame — zero allocations
+/// on the worker side once warm. Runs single-threaded over two channel
+/// fabrics; the counter brackets exactly the gather call (master-side
+/// staging is pinned separately below).
+fn sharded_gather_is_zero_alloc_once_warm() {
+    let d = 256usize;
+    let layout = vec![("lo".to_string(), 0..d / 2), ("hi".to_string(), d / 2..d)];
+    let map = Arc::new(ShardMap::round_robin(&layout, 2).unwrap());
+    let (mut m0, w0) = channel_fabric(1);
+    let (mut m1, w1) = channel_fabric(1);
+    let shards: Vec<Box<dyn WorkerTransport>> = w0
+        .into_iter()
+        .map(|w| Box::new(w) as Box<dyn WorkerTransport>)
+        .chain(w1.into_iter().map(|w| Box::new(w) as Box<dyn WorkerTransport>))
+        .collect();
+    let mut ep = ShardedWorkerEndpoint::new(Arc::clone(&map), shards).unwrap();
+    let lo: Vec<f32> = (0..d / 2).map(|i| i as f32).collect();
+    let hi: Vec<f32> = (0..d / 2).map(|i| -(i as f32)).collect();
+    let mut gframe = Frame::shutdown();
+
+    let mut gather_allocs = 0u64;
+    for t in 0..40u64 {
+        m0.broadcast(&Frame::broadcast(t, &lo).with_shard(0)).unwrap();
+        m1.broadcast(&Frame::broadcast(t, &hi).with_shard(1)).unwrap();
+        let warm = t >= 20;
+        if warm {
+            ALLOCS.store(0, Ordering::SeqCst);
+            COUNTING.store(true, Ordering::SeqCst);
+        }
+        ep.recv_broadcast_into(&mut gframe).unwrap();
+        if warm {
+            COUNTING.store(false, Ordering::SeqCst);
+            gather_allocs += ALLOCS.load(Ordering::SeqCst);
+        }
+        assert_eq!(gframe.kind, FrameKind::Broadcast);
+        assert_eq!(gframe.round, t);
+    }
+    assert_eq!(
+        gather_allocs,
+        0,
+        "warm sharded gather must not allocate (saw {gather_allocs} in 20 rounds)"
+    );
+}
+
+/// The channel fabric's broadcast used to clone the payload per worker per
+/// round (an O(d) allocation each). With the spare-buffer ping-pong the
+/// payload clones refill recycled buffers; the only allocations left are
+/// the mpsc channel's amortized segment blocks — bounded and independent
+/// of the payload size.
+fn channel_broadcast_clone_is_gone() {
+    let n = 2usize;
+    let d = 4096usize; // large payloads: a surviving clone would dominate
+    let (mut master, mut workers) = channel_fabric(n);
+    let dense = vec![1.5f32; d];
+    let mut frames: Vec<Frame> = (0..n).map(|_| Frame::shutdown()).collect();
+
+    // warm-up: first clones allocate, workers start returning spares
+    for t in 0..10u64 {
+        master.broadcast(&Frame::broadcast(t, &dense)).unwrap();
+        for (w, f) in frames.iter_mut().enumerate() {
+            workers[w].recv_broadcast_into(f).unwrap();
+        }
+    }
+    let rounds = 100u64;
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for t in 10..10 + rounds {
+        master.broadcast(&Frame::broadcast(t, &dense)).unwrap();
+        for (w, f) in frames.iter_mut().enumerate() {
+            workers[w].recv_broadcast_into(f).unwrap();
+        }
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let got = ALLOCS.load(Ordering::SeqCst);
+    // budget: the old path allocated >= rounds * n payload clones (200+);
+    // mpsc segment blocks amortize to one per ~31 sends per downlink.
+    // NOTE Frame::broadcast itself allocates the staging buffer each round
+    // here (the master round engine recycles it via broadcast_from; this
+    // transport-level test pays it on purpose) — so the budget is
+    // rounds (staging) + segments, still far below 2 * rounds clones.
+    let budget = rounds + 64;
+    assert!(
+        got <= budget,
+        "channel broadcast allocated {got} times in {rounds} rounds (budget {budget}): \
+         the per-worker payload clone is back"
+    );
 }

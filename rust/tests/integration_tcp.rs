@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use tempo::config::experiment::Backend;
-use tempo::config::{FabricSpec, TransportKind};
+use tempo::config::{FabricSpec, IoBackend, TransportKind};
 use tempo::coordinator::launch::build_fabric;
 use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
 use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
@@ -125,6 +125,66 @@ fn no_fault_tcp_is_bit_identical_to_channel() {
         let ua: Vec<u64> = a.u_norm_trace.iter().map(|x| x.to_bits()).collect();
         let ub: Vec<u64> = b.u_norm_trace.iter().map(|x| x.to_bits()).collect();
         assert_eq!(ua, ub, "worker {} u_norm trace diverged", a.worker_id);
+    }
+}
+
+/// The ISSUE-5 acceptance pin: the reactor I/O backend must be a drop-in
+/// for the thread-per-connection backend — the 4-worker TCP run produces a
+/// bit-identical master parameter vector, identical payload accounting and
+/// bit-identical per-worker StepStats traces.
+#[test]
+fn reactor_io_backend_is_bit_identical_to_threads() {
+    let (d, n, steps, seed) = (600usize, 4usize, 10u64, 7u64);
+    let threads = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    let reactor = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Reactor,
+        ..Default::default()
+    };
+    let (rep_a, sum_a) = run_synthetic(&threads, d, n, steps, seed);
+    let (rep_b, sum_b) = run_synthetic(&reactor, d, n, steps, seed);
+
+    let bits_a: Vec<u32> = rep_a.final_w.iter().map(|x| x.to_bits()).collect();
+    let bits_b: Vec<u32> = rep_b.final_w.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bits_a, bits_b, "master parameter vectors diverged across io backends");
+
+    assert_eq!(rep_a.comm.messages(), rep_b.comm.messages());
+    assert_eq!(rep_a.comm.total_bits(), rep_b.comm.total_bits());
+    assert_eq!(rep_a.comm.skips(), rep_b.comm.skips());
+
+    for (a, b) in sum_a.iter().zip(&sum_b) {
+        assert_eq!(a.worker_id, b.worker_id);
+        assert!(b.pipelined, "the worker side still splits senders under the reactor");
+        let ea: Vec<u64> = a.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        let eb: Vec<u64> = b.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ea, eb, "worker {} e_mse trace diverged", a.worker_id);
+        let ua: Vec<u64> = a.u_norm_trace.iter().map(|x| x.to_bits()).collect();
+        let ub: Vec<u64> = b.u_norm_trace.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ua, ub, "worker {} u_norm trace diverged", a.worker_id);
+    }
+}
+
+/// The reactor under relaxed synchrony + a straggler: same liveness
+/// contract as the threads backend (every update folds into some round or
+/// drains at the end; the staleness bound holds).
+#[test]
+fn reactor_bounded_staleness_completes_with_a_straggler() {
+    let fabric = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Reactor,
+        max_staleness: 3,
+        quorum: 1,
+        straggler_ms: vec![(1, 3.0)],
+        seed: 11,
+        ..Default::default()
+    };
+    let (n, steps) = (3usize, 8u64);
+    let (report, summaries) = run_synthetic(&fabric, 200, n, steps, 13);
+    let folded = report.comm.messages() + report.comm.unconsumed_updates();
+    assert_eq!(folded, steps * n as u64);
+    assert!(report.comm.max_staleness() <= 3);
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
     }
 }
 

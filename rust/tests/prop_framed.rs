@@ -7,7 +7,9 @@
 
 use std::io::{Read, Write};
 
-use tempo::comm::framed::{read_frame, write_frame, MAX_FRAME_BYTES};
+use tempo::comm::framed::{
+    read_frame, read_frame_into, write_frame, write_frame_into, FrameAccumulator, MAX_FRAME_BYTES,
+};
 use tempo::comm::{Frame, FrameKind};
 use tempo::testing::prop::{check, Gen, PropConfig};
 
@@ -123,6 +125,125 @@ fn prop_truncations_error_cleanly() {
         let mut r = ChunkReader { buf: &buf[..cut], pos: 0, chunk: 8 };
         if read_frame(&mut r).is_ok() {
             return Err(format!("truncation to {cut}/{} bytes parsed as a frame", buf.len()));
+        }
+        Ok(())
+    });
+}
+
+fn frames_equal(a: &Frame, b: &Frame) -> bool {
+    a.kind == b.kind
+        && a.worker == b.worker
+        && a.shard == b.shard
+        && a.round == b.round
+        && a.payload_tag == b.payload_tag
+        && a.payload_bits == b.payload_bits
+        && a.bytes == b.bytes
+        && a.loss.to_bits() == b.loss.to_bits()
+}
+
+/// The reactor's incremental parser must be byte-for-byte equivalent to
+/// the blocking codec on ANY re-chunking of a multi-frame stream: same
+/// frames, same order, same field bits, no trailing bytes.
+#[test]
+fn prop_accumulator_matches_blocking_codec_on_any_chunking() {
+    check(cfgp(100), |g| {
+        let frames: Vec<Frame> = (0..g.usize_in(1, 6)).map(|_| arbitrary_frame(g)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            write_frame(&mut stream, f).map_err(|e| format!("write: {e:#}"))?;
+        }
+        // reference decode: the blocking reader over the whole stream
+        let mut r = ChunkReader { buf: &stream, pos: 0, chunk: 16 };
+        let blocking: Vec<Frame> = (0..frames.len())
+            .map(|i| read_frame(&mut r).map_err(|e| format!("blocking read {i}: {e:#}")))
+            .collect::<Result<_, _>>()?;
+        // incremental decode: random chunk sizes, draining after each feed
+        let mut acc = FrameAccumulator::new();
+        let mut incremental = Vec::new();
+        let mut pos = 0usize;
+        while pos < stream.len() {
+            let step = g.usize_in(1, 64).min(stream.len() - pos);
+            acc.extend(&stream[pos..pos + step]);
+            pos += step;
+            while let Some(f) = acc.next_frame().map_err(|e| format!("incremental: {e:#}"))? {
+                incremental.push(f);
+            }
+        }
+        let (ni, nb) = (incremental.len(), blocking.len());
+        if ni != nb {
+            return Err(format!("frame count mismatch: incremental {ni} vs blocking {nb}"));
+        }
+        for (i, (a, b)) in incremental.iter().zip(&blocking).enumerate() {
+            if !frames_equal(a, b) {
+                return Err(format!("frame {i} diverged from the blocking codec"));
+            }
+        }
+        if acc.pending() != 0 {
+            return Err(format!("{} trailing bytes left in the accumulator", acc.pending()));
+        }
+        Ok(())
+    });
+}
+
+/// A truncated stream must leave the accumulator waiting (no frame, no
+/// error) exactly where the blocking reader would have blocked — and an
+/// oversized prefix must be rejected as soon as it is visible.
+#[test]
+fn prop_accumulator_truncation_waits_and_oversize_rejects() {
+    check(cfgp(80), |g| {
+        let frame = arbitrary_frame(g);
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &frame).map_err(|e| format!("write: {e:#}"))?;
+        let cut = g.usize_in(0, stream.len() - 1);
+        let mut acc = FrameAccumulator::new();
+        acc.extend(&stream[..cut]);
+        match acc.next_frame() {
+            Ok(Some(_)) => return Err(format!("truncation to {cut} bytes yielded a frame")),
+            Ok(None) => {}
+            Err(e) => return Err(format!("truncation to {cut} bytes errored: {e:#}")),
+        }
+        // feeding the rest completes the frame
+        acc.extend(&stream[cut..]);
+        match acc.next_frame() {
+            Ok(Some(f)) if frames_equal(&f, &frame) => {}
+            other => return Err(format!("resumed parse failed: {other:?}")),
+        }
+        // oversized prefix: error as soon as the length word is visible
+        let mut acc = FrameAccumulator::new();
+        acc.extend(&(MAX_FRAME_BYTES + 1 + (g.u64() & 0xFFFF)).to_le_bytes());
+        match acc.next_frame() {
+            Err(e) if format!("{e:#}").contains("frame too large") => Ok(()),
+            other => Err(format!("oversized prefix not rejected: {other:?}")),
+        }
+    });
+}
+
+/// The buffered writer and the recycling reader must be drop-in for the
+/// allocating pair: identical bytes out, identical frames in, with the
+/// receive frame's buffer genuinely reused across iterations.
+#[test]
+fn prop_buffered_write_and_recycled_read_match_the_allocating_pair() {
+    check(cfgp(80), |g| {
+        let frames: Vec<Frame> = (0..g.usize_in(1, 4)).map(|_| arbitrary_frame(g)).collect();
+        let mut plain = Vec::new();
+        let mut buffered = Vec::new();
+        let mut scratch = Vec::new();
+        for f in &frames {
+            write_frame(&mut plain, f).map_err(|e| format!("write: {e:#}"))?;
+            let mut w = ChunkWriter { buf: Vec::new(), chunk: g.usize_in(1, 32) };
+            write_frame_into(&mut w, f, &mut scratch).map_err(|e| format!("into: {e:#}"))?;
+            buffered.extend_from_slice(&w.buf);
+        }
+        if plain != buffered {
+            return Err("write_frame_into produced a different byte stream".into());
+        }
+        let mut r = ChunkReader { buf: &plain, pos: 0, chunk: g.usize_in(1, 32) };
+        let mut recycled = Frame::shutdown();
+        for (i, f) in frames.iter().enumerate() {
+            read_frame_into(&mut r, &mut recycled).map_err(|e| format!("read {i}: {e:#}"))?;
+            if !frames_equal(&recycled, f) {
+                return Err(format!("frame {i} diverged through read_frame_into"));
+            }
         }
         Ok(())
     });

@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Commit the CI-produced bench-trajectory point back to the repo when the
+# committed copy is still a placeholder.
+#
+# Why this exists: PR authoring containers have repeatedly had no Rust
+# toolchain (see ROADMAP "Bench trajectory"), so BENCH_<N>.json lands as an
+# explicitly-marked placeholder and the real numbers only ever existed as a
+# CI artifact nobody committed. This script runs in CI on pushes to main,
+# right after `scripts/ci.sh --bench` regenerated the file in the worktree:
+#
+#   * committed copy is a placeholder AND the regenerated file is a real
+#     smoke point  ->  commit + push the real point ([skip ci])
+#   * committed copy is already real  ->  do nothing (one point per PR;
+#     runner noise must not rewrite the trajectory on every push)
+#
+# Usage: scripts/commit_bench.sh [BENCH_N.json]   (default: BENCH_5.json)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-BENCH_5.json}"
+
+# exit 0 when $1 is a real (comparable) smoke point, 1 otherwise
+is_real() {
+    python3 - "$1" <<'PY'
+import json
+import sys
+
+try:
+    with open(sys.argv[1]) as f:
+        d = json.load(f)
+except Exception:
+    sys.exit(1)
+benches = d.get("benches") or {}
+real = (
+    d.get("schema") == "tempo-bench-v1"
+    and d.get("mode") == "smoke"
+    and any(rows for rows in benches.values())
+)
+sys.exit(0 if real else 1)
+PY
+}
+
+if [[ ! -f "$OUT" ]]; then
+    echo "commit_bench: $OUT not found (run scripts/ci.sh --bench first)"
+    exit 0
+fi
+
+HEAD_COPY="$(mktemp)"
+trap 'rm -f "$HEAD_COPY"' EXIT
+if ! git show "HEAD:$OUT" > "$HEAD_COPY" 2>/dev/null; then
+    echo '{}' > "$HEAD_COPY"
+fi
+
+if is_real "$HEAD_COPY"; then
+    echo "commit_bench: committed $OUT is already a real point; leaving the trajectory alone"
+    exit 0
+fi
+if ! is_real "$OUT"; then
+    echo "commit_bench: regenerated $OUT is not a comparable smoke point; nothing to commit"
+    exit 0
+fi
+
+git config user.name "tempo-ci"
+git config user.email "tempo-ci@users.noreply.github.com"
+git add "$OUT"
+git commit -m "Record first real $OUT bench point from CI [skip ci]"
+# tolerate a non-fast-forward race (another merge landed mid-run): the
+# committed copy is still a placeholder, so the next main run retries
+if git push; then
+    echo "commit_bench: pushed real $OUT"
+else
+    echo "commit_bench: push raced with another merge; the next main run retries"
+fi
