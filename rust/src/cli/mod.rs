@@ -130,7 +130,7 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
               [--scheme <spec>] [--fabric <spec>] [--io threads|reactor]
-              [--shards N] [--csv out.csv]
+              [--shards N] [--membership <spec>] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
@@ -152,9 +152,10 @@ Scheme spec strings (see DESIGN.md for the grammar → paper Eq. (1) mapping):
 
 Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2/§6):
   channel | tcp                 transport (default channel; tcp = real sockets)
-  threads | reactor             master I/O over tcp (default threads; reactor =
-                                single-threaded epoll loop, O(1) master threads,
-                                bounded broadcast write queues; --io is sugar)
+  threads | reactor             master I/O over tcp (default reactor = single-
+                                threaded epoll loop, O(1) master threads, bounded
+                                broadcast write queues; threads = one blocking
+                                reader thread per connection; --io is sugar)
   io_queue=N                    reactor per-connection write-queue bound (frames)
   pipelined | inline            double-buffered vs blocking sends (default pipelined)
   staleness=S,quorum=Q          bounded-staleness aggregation (S=0 ⇒ full sync)
@@ -162,6 +163,13 @@ Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2/§6):
   drop=P,retransmit_ms=T        drop-and-retransmit injection
   churn=W:A..B[;...]            worker W absent for rounds [A, B)
   e.g.  --fabric tcp,staleness=2,quorum=2,straggler=1:5,drop=0.01,churn=3:10..20
+
+Elastic membership (--membership or the [membership] table; DESIGN.md §7):
+  min=N,max=N,admit=R           epoch-phased coordinator: workers join/leave at
+                                fleet-epoch boundaries (every R rounds); joins
+                                park as pending until the boundary, admissions
+                                get fresh prediction chains + re-keyed shards
+  e.g.  --membership min=2,max=4,admit=8
 
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.

@@ -17,6 +17,15 @@ pub enum FrameKind {
     /// broadcasts). Carries no payload; the master aggregates without this
     /// worker and does not advance its decode chain.
     Skip = 4,
+    /// worker → master: request admission at the next fleet-epoch boundary
+    /// (elastic membership). Zero payload; sent in place of an Update by a
+    /// connected non-member seeking membership, so round lockstep holds.
+    Join = 5,
+    /// worker → master: announce planned departure — evicted at the next
+    /// fleet-epoch boundary. Sent at the final round of the worker's last
+    /// member epoch *in place of* that round's Update (the contribution
+    /// is forfeited).
+    Leave = 6,
 }
 
 impl FrameKind {
@@ -26,10 +35,21 @@ impl FrameKind {
             2 => FrameKind::Broadcast,
             3 => FrameKind::Shutdown,
             4 => FrameKind::Skip,
+            5 => FrameKind::Join,
+            6 => FrameKind::Leave,
             _ => bail!("unknown frame kind {v}"),
         })
     }
 }
+
+/// The reserved round number of connection handshakes and of the elastic
+/// prologue beacon — never a real training round.
+pub const SYNC_ROUND: u64 = u64::MAX;
+
+/// `payload_tag` of membership-sync broadcasts ([`Frame::sync_w`]): the
+/// body is the **absolute** parameter vector (adopt, don't apply as a
+/// delta). Plain delta broadcasts keep tag 0.
+pub const SYNC_TAG: u8 = 1;
 
 /// One message on the fabric.
 #[derive(Clone, Debug)]
@@ -110,6 +130,54 @@ impl Frame {
             payload_bits: 0,
             loss: 0.0,
         }
+    }
+
+    /// Zero-payload admission request (elastic membership): sent by a
+    /// connected non-member in place of its round-`round` Update.
+    pub fn join(worker: u32, round: u64) -> Self {
+        Self { kind: FrameKind::Join, ..Frame::skip(worker, round) }
+    }
+
+    /// Zero-payload departure announcement: the sender leaves the member
+    /// set at the boundary after round `round`.
+    pub fn leave(worker: u32, round: u64) -> Self {
+        Self { kind: FrameKind::Leave, ..Frame::skip(worker, round) }
+    }
+
+    /// Connection handshake (worker → master, first frame on every TCP /
+    /// reactor connection): an Update with the reserved [`SYNC_ROUND`]
+    /// round. `epoch` rides in the otherwise-unused `payload_bits` field —
+    /// the fleet epoch the worker believes is current (0 at launch), which
+    /// elastic masters use to sanity-log reconnects across boundaries.
+    pub fn handshake(worker: u32, epoch: u64) -> Self {
+        Self {
+            kind: FrameKind::Update,
+            worker,
+            shard: 0,
+            round: SYNC_ROUND,
+            payload_tag: 0,
+            bytes: Vec::new(),
+            payload_bits: epoch,
+            loss: 0.0,
+        }
+    }
+
+    /// Whether this frame is a connection handshake.
+    pub fn is_handshake(&self) -> bool {
+        self.kind == FrameKind::Update && self.round == SYNC_ROUND
+    }
+
+    /// Membership-sync broadcast: the **absolute** parameter vector plus
+    /// the member bitmap (in `payload_bits`, which plain broadcasts use
+    /// for the body bit count — receivers key on [`SYNC_TAG`], not size).
+    /// Sent at every fleet-epoch boundary and once as the pre-round-0
+    /// beacon (`round == SYNC_ROUND`), so parked and newly admitted
+    /// workers re-enter bit-exactly in sync.
+    pub fn sync_w(round: u64, dense: &[f32], bitmap: u64, buf: Vec<u8>) -> Self {
+        let mut f = Self::broadcast_from(round, dense, buf);
+        f.payload_tag = SYNC_TAG;
+        f.payload_bits = bitmap;
+        f
     }
 
     /// Clean end-of-run marker: the worker completed every round. The
@@ -353,6 +421,43 @@ mod tests {
         assert_eq!(g.round, 17);
         assert!(g.bytes.is_empty());
         assert_eq!(g.payload_bits, 0);
+    }
+
+    #[test]
+    fn membership_frames_roundtrip() {
+        let j = Frame::deserialize(&Frame::join(5, 23).serialize()).unwrap();
+        assert_eq!(j.kind, FrameKind::Join);
+        assert_eq!((j.worker, j.round), (5, 23));
+        assert!(j.bytes.is_empty());
+        let l = Frame::deserialize(&Frame::leave(6, 31).serialize()).unwrap();
+        assert_eq!(l.kind, FrameKind::Leave);
+        assert_eq!((l.worker, l.round), (6, 31));
+    }
+
+    #[test]
+    fn handshake_carries_the_epoch() {
+        let h = Frame::handshake(3, 7);
+        assert!(h.is_handshake());
+        let g = Frame::deserialize(&h.serialize()).unwrap();
+        assert!(g.is_handshake());
+        assert_eq!(g.worker, 3);
+        assert_eq!(g.payload_bits, 7, "epoch rides in payload_bits");
+        assert!(!Frame::update(3, 9, crate::coding::Payload::default(), 0.0).is_handshake());
+    }
+
+    #[test]
+    fn sync_w_is_an_adoptable_broadcast_with_bitmap() {
+        let w = vec![1.5f32, -2.0, 0.25];
+        let f = Frame::sync_w(8, &w, 0b1011, Vec::new());
+        assert_eq!(f.kind, FrameKind::Broadcast);
+        assert_eq!(f.payload_tag, SYNC_TAG);
+        assert_eq!(f.payload_bits, 0b1011, "bitmap rides in payload_bits");
+        assert_eq!(f.broadcast_f32(3).unwrap(), w, "body is the absolute w");
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        assert_eq!(g.payload_tag, SYNC_TAG);
+        assert_eq!(g.payload_bits, 0b1011);
+        // plain broadcasts stay tag 0 so static receivers are unaffected
+        assert_eq!(Frame::broadcast(8, &w).payload_tag, 0);
     }
 
     #[test]

@@ -41,7 +41,7 @@ pub mod tcp;
 
 pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
 pub use fault::{FaultInjector, FaultPolicy, FaultStats};
-pub use frame::{Frame, FrameKind};
+pub use frame::{Frame, FrameKind, SYNC_ROUND, SYNC_TAG};
 pub use reactor::ReactorMaster;
 pub use sender::PipelinedSender;
 pub use shard::{ShardMap, ShardedWorkerEndpoint};
@@ -208,6 +208,22 @@ pub trait MasterTransport: Send {
     fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>>;
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()>;
+
+    /// Broadcast and report the exact recipient roster: `roster[wid]` is
+    /// true iff this broadcast was staged to a live connection for worker
+    /// `wid`. The elastic round engine adopts the roster as the set of
+    /// slots that owe it a frame next round — workers only start sending
+    /// after they have received a broadcast, so "expected = who the last
+    /// broadcast reached" is the invariant that keeps mid-run connection
+    /// races from deadlocking the wait loop (DESIGN.md §7).
+    ///
+    /// The default covers fabrics with a fixed recipient set (the channel
+    /// transport delivers to every worker endpoint unconditionally);
+    /// late-join transports override with the actual staged-to mask.
+    fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
+        self.broadcast(frame)?;
+        Ok(vec![true; self.n_workers()])
+    }
 }
 
 impl MasterTransport for Box<dyn MasterTransport> {
@@ -225,5 +241,9 @@ impl MasterTransport for Box<dyn MasterTransport> {
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
         (**self).broadcast(frame)
+    }
+
+    fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
+        (**self).broadcast_roster(frame)
     }
 }

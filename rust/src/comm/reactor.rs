@@ -386,7 +386,8 @@ impl Conn {
 enum Ev {
     Frame(usize, Frame),
     Gone(usize, u64),
-    Joined(usize, u64),
+    /// id, connection generation, fleet epoch announced by the handshake
+    Joined(usize, u64, u64),
 }
 
 /// What became of a connection after servicing its readable edge.
@@ -410,10 +411,15 @@ pub struct ReactorMaster {
     gens: Vec<u64>,
     /// whether each id has ever completed a handshake (startup barrier)
     ever_joined: Vec<bool>,
+    /// fleet epoch each worker slot announced in its latest handshake
+    peer_epoch: Vec<u64>,
     tracker: PeerTracker,
     events_q: VecDeque<Ev>,
     /// poller output scratch
     poll_events: Vec<(u64, bool, bool)>,
+    /// staged-to mask scratch reused across broadcasts (plain `broadcast`
+    /// stays allocation-free; `broadcast_roster` clones it out once)
+    roster_scratch: Vec<bool>,
     /// last round's staged broadcast bytes — reclaimed for the next
     /// round's serialization once every write queue has released it
     /// (the broadcast-side `send_reclaim` analogue)
@@ -438,7 +444,26 @@ impl ReactorMaster {
         n_workers: usize,
         queue_bound: usize,
     ) -> Result<Self> {
+        Self::from_listener_partial(listener, n_workers, n_workers, queue_bound)
+    }
+
+    /// Partial rendezvous for elastic fleets: drive the reactor only until
+    /// `initial` distinct worker ids have handshaken. The remaining slots
+    /// stay open for mid-run dial-in — the readiness loop accepts them on
+    /// the engine's own `recv`/`broadcast` calls, with **zero** extra
+    /// threads regardless of how many workers join late (pinned by the
+    /// elastic scenario in `tests/reactor_soak.rs`).
+    pub fn from_listener_partial(
+        listener: TcpListener,
+        n_workers: usize,
+        initial: usize,
+        queue_bound: usize,
+    ) -> Result<Self> {
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        anyhow::ensure!(
+            (1..=n_workers).contains(&initial),
+            "initial rendezvous {initial} outside 1..={n_workers}"
+        );
         anyhow::ensure!(queue_bound >= 2, "reactor write-queue bound must be >= 2");
         listener.set_nonblocking(true).context("master listener nonblocking")?;
         let mut poller = sys::Poller::new().context("create reactor poller")?;
@@ -451,17 +476,32 @@ impl ReactorMaster {
             worker_conn: vec![None; n_workers],
             gens: vec![0; n_workers],
             ever_joined: vec![false; n_workers],
+            peer_epoch: vec![0; n_workers],
             tracker: PeerTracker::new(n_workers),
             events_q: VecDeque::new(),
             poll_events: Vec::new(),
+            roster_scratch: Vec::new(),
             staged_spare: None,
             queue_bound,
             dead_grace: Duration::from_secs(2),
         };
-        while !m.ever_joined.iter().all(|&j| j) {
+        while m.ever_joined.iter().filter(|&&j| j).count() < initial {
             m.turn(None)?;
         }
         Ok(m)
+    }
+
+    /// Fleet epoch worker `wid` announced in its most recent handshake
+    /// (0 before any connection).
+    pub fn peer_epoch(&self, wid: usize) -> u64 {
+        self.peer_epoch[wid]
+    }
+
+    /// Whether worker `wid` has ever completed a handshake on this master
+    /// (it may have hung up since). Lets elastic harnesses wait for late
+    /// dialers deterministically before entering the round loop.
+    pub fn has_joined(&self, wid: usize) -> bool {
+        self.ever_joined.get(wid).copied().unwrap_or(false)
     }
 
     /// Broadcast frames currently queued for one worker (0 when it has no
@@ -625,7 +665,7 @@ impl ReactorMaster {
                         // never be demoted by its predecessor's EOF —
                         // the same fencing the threads backend gets from
                         // shutting the old socket after registering the new
-                        self.events_q.push_back(Ev::Joined(id, conn.gen));
+                        self.events_q.push_back(Ev::Joined(id, conn.gen, frame.payload_bits));
                         if let Some(old) = self.worker_conn[id].replace(slot) {
                             self.kill_slot(old);
                         }
@@ -677,8 +717,9 @@ impl ReactorMaster {
                 self.tracker.on_gone(id, gen);
                 Ok(None)
             }
-            Ev::Joined(id, gen) => {
+            Ev::Joined(id, gen, epoch) => {
                 self.tracker.on_joined(id, gen);
+                self.peer_epoch[id] = epoch;
                 Ok(None)
             }
         }
@@ -761,6 +802,23 @@ impl MasterTransport for ReactorMaster {
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        self.stage_broadcast(frame)?;
+        Ok(())
+    }
+
+    fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
+        let sent = self.stage_broadcast(frame)?;
+        debug_assert!(sent > 0);
+        Ok(self.roster_scratch.clone())
+    }
+}
+
+impl ReactorMaster {
+    /// Stage one broadcast on every live connection, filling
+    /// `roster_scratch` with the exact staged-to mask; returns how many
+    /// workers it reached. Shared body of `broadcast` (which discards the
+    /// mask, keeping the plain path allocation-free) and `broadcast_roster`.
+    fn stage_broadcast(&mut self, frame: &Frame) -> Result<usize> {
         // service pending I/O first so fresh reconnects are included and
         // drained queues have made room (parity with the threads backend,
         // where accept + readers run concurrently with the engine)
@@ -775,6 +833,8 @@ impl MasterTransport for ReactorMaster {
         };
         encode_frame(frame, &mut staged_buf)?;
         let staged = Arc::new(staged_buf);
+        self.roster_scratch.clear();
+        self.roster_scratch.resize(self.n, false);
         let mut sent = 0usize;
         for w in 0..self.n {
             let Some(slot) = self.worker_conn[w] else { continue };
@@ -796,6 +856,7 @@ impl MasterTransport for ReactorMaster {
             match outcome {
                 Some(true) => {
                     sent += 1;
+                    self.roster_scratch[w] = true;
                     if let Some(conn) = self.conns[slot].as_mut() {
                         conn.sync_interest(&mut self.poller, slot as u64 + 1);
                     }
@@ -810,7 +871,7 @@ impl MasterTransport for ReactorMaster {
         }
         anyhow::ensure!(sent > 0, "broadcast reached no workers (all hung up)");
         self.staged_spare = Some(staged);
-        Ok(())
+        Ok(sent)
     }
 }
 
@@ -896,6 +957,38 @@ mod tests {
         worker.join().unwrap();
         let e = master.recv_any().unwrap_err();
         assert!(format!("{e:#}").contains("hung up"), "{e:#}");
+    }
+
+    #[test]
+    fn partial_rendezvous_admits_a_late_dialer_into_the_roster() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let early = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 7);
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 8);
+        });
+        // rendezvous completes with only worker 0 of 2 connected
+        let mut master = ReactorMaster::from_listener_partial(listener, 2, 1, 4).unwrap();
+        let roster = master.broadcast_roster(&Frame::broadcast(7, &[1.0])).unwrap();
+        assert_eq!(roster, vec![true, false]);
+        // worker 1 dials in mid-run announcing fleet epoch 3; the engine's
+        // own polling (not an accept thread) registers the connection
+        let late = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect_with_epoch(addr, 1, 3).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 8);
+        });
+        while master.peer_epoch(1) != 3 {
+            assert!(master.try_recv_any().unwrap().is_none());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let roster = master.broadcast_roster(&Frame::broadcast(8, &[2.0])).unwrap();
+        assert_eq!(roster, vec![true, true]);
+        early.join().unwrap();
+        late.join().unwrap();
     }
 
     #[test]

@@ -41,20 +41,22 @@ impl TcpWorker {
     /// Calling this again after a connection drop re-registers the same id
     /// on a fresh socket (reconnect-after-drop).
     pub fn connect(addr: impl ToSocketAddrs, worker_id: u32) -> Result<Self> {
+        Self::connect_with_epoch(addr, worker_id, 0)
+    }
+
+    /// Dial the master announcing the fleet epoch this worker believes it
+    /// is joining at ([`Frame::handshake`] carries it in `payload_bits`).
+    /// Launch-time workers use epoch 0; a mid-run joiner passes the epoch
+    /// it wants admission into, which the master records per peer
+    /// ([`TcpMaster::peer_epoch`]) for membership diagnostics.
+    pub fn connect_with_epoch(
+        addr: impl ToSocketAddrs,
+        worker_id: u32,
+        epoch: u64,
+    ) -> Result<Self> {
         let mut stream = TcpStream::connect(addr).context("connect to master")?;
         stream.set_nodelay(true).ok();
-        // handshake: a zero-round Update frame carrying just the id
-        let hello = Frame {
-            kind: super::frame::FrameKind::Update,
-            worker: worker_id,
-            shard: 0,
-            round: u64::MAX,
-            payload_tag: 0,
-            bytes: Vec::new(),
-            payload_bits: 0,
-            loss: 0.0,
-        };
-        write_frame(&mut stream, &hello)?;
+        write_frame(&mut stream, &Frame::handshake(worker_id, epoch))?;
         Ok(Self { worker_id, stream, scratch: Vec::new() })
     }
 }
@@ -106,8 +108,9 @@ enum Event {
     Frame(usize, Frame),
     /// Connection generation `gen` for this worker id closed or errored.
     Gone(usize, u64),
-    /// Connection generation `gen` completed its handshake.
-    Joined(usize, u64),
+    /// Connection generation `gen` completed its handshake announcing the
+    /// given fleet epoch.
+    Joined(usize, u64, u64),
 }
 
 /// Shared write halves, one slot per worker id; replaced on reconnect,
@@ -122,6 +125,9 @@ pub struct TcpMaster {
     rx: Receiver<Event>,
     writers: Writers,
     tracker: PeerTracker,
+    /// fleet epoch each worker slot announced in its latest handshake
+    /// (0 until a first connection registers)
+    peer_epoch: Vec<u64>,
     /// reusable wire-staging buffer: broadcasts serialize once, not per worker
     bcast_scratch: Vec<u8>,
     shutdown: Arc<AtomicBool>,
@@ -140,7 +146,24 @@ impl TcpMaster {
     /// and learn the address before workers dial in). Blocks until all
     /// `n_workers` distinct ids have completed their handshake.
     pub fn from_listener(listener: TcpListener, n_workers: usize) -> Result<Self> {
+        Self::from_listener_partial(listener, n_workers, n_workers)
+    }
+
+    /// Partial rendezvous for elastic fleets: block until only `initial`
+    /// distinct worker ids have handshaken, leaving the remaining slots to
+    /// dial in mid-run (the accept loop registers them whenever they
+    /// arrive, and the next [`MasterTransport::broadcast_roster`] reports
+    /// them as reached).
+    pub fn from_listener_partial(
+        listener: TcpListener,
+        n_workers: usize,
+        initial: usize,
+    ) -> Result<Self> {
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        anyhow::ensure!(
+            (1..=n_workers).contains(&initial),
+            "initial rendezvous {initial} outside 1..={n_workers}"
+        );
         let local_addr = listener.local_addr().context("master local addr")?;
         let (tx, rx) = mpsc::channel::<Event>();
         let (reg_tx, reg_rx) = mpsc::channel::<usize>();
@@ -153,10 +176,10 @@ impl TcpMaster {
             accept_loop(listener, n_workers, tx, reg_tx, accept_writers, accept_shutdown);
         });
 
-        // wait for the initial full complement of workers
+        // wait for the initial rendezvous complement of workers
         let mut registered = vec![false; n_workers];
         let mut count = 0usize;
-        while count < n_workers {
+        while count < initial {
             let id = reg_rx.recv().ok().context("master accept thread died")?;
             if !registered[id] {
                 registered[id] = true;
@@ -169,10 +192,17 @@ impl TcpMaster {
             rx,
             writers,
             tracker: PeerTracker::new(n_workers),
+            peer_epoch: vec![0; n_workers],
             bcast_scratch: Vec::new(),
             shutdown,
             dead_grace: Duration::from_secs(2),
         })
+    }
+
+    /// Fleet epoch worker `wid` announced in its most recent handshake
+    /// (0 before any connection).
+    pub fn peer_epoch(&self, wid: usize) -> u64 {
+        self.peer_epoch[wid]
     }
 
     /// A worker that vanished mid-run without its done marker, if any.
@@ -189,8 +219,9 @@ impl TcpMaster {
                 self.tracker.on_gone(id, gen);
                 Ok(None)
             }
-            Event::Joined(id, gen) => {
+            Event::Joined(id, gen, epoch) => {
                 self.tracker.on_joined(id, gen);
+                self.peer_epoch[id] = epoch;
                 Ok(None)
             }
         }
@@ -235,8 +266,10 @@ fn accept_loop(
         // and a silent one cannot block the accept loop (and with it every
         // future reconnect) — it gets a read deadline
         stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
-        let id = match read_frame(&mut stream) {
-            Ok(hello) if (hello.worker as usize) < n_workers => hello.worker as usize,
+        let (id, epoch) = match read_frame(&mut stream) {
+            Ok(hello) if (hello.worker as usize) < n_workers => {
+                (hello.worker as usize, hello.payload_bits)
+            }
             _ => continue,
         };
         stream.set_read_timeout(None).ok();
@@ -255,7 +288,7 @@ fn accept_loop(
             Err(_) => continue,
         }
         let _ = reg_tx.send(id);
-        let _ = tx.send(Event::Joined(id, gen));
+        let _ = tx.send(Event::Joined(id, gen, epoch));
         let reader_tx = tx.clone();
         std::thread::spawn(move || {
             loop {
@@ -341,6 +374,29 @@ impl MasterTransport for TcpMaster {
         }
         anyhow::ensure!(sent > 0, "broadcast reached no workers (all hung up)");
         Ok(())
+    }
+
+    fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
+        // same staged-once write path as broadcast, but reporting exactly
+        // which worker slots the frame reached — a connection that appeared
+        // since the last round is included (and thus owes the elastic
+        // engine a frame next round), a write half that died here is not
+        encode_frame(frame, &mut self.bcast_scratch)?;
+        let mut roster = vec![false; self.n];
+        for (w, slot) in roster.iter_mut().enumerate() {
+            let mut guard = self.writers[w].lock().unwrap();
+            if let Some(stream) = guard.as_mut() {
+                match stream.write_all(&self.bcast_scratch).and_then(|()| stream.flush()) {
+                    Ok(()) => *slot = true,
+                    Err(_) => *guard = None,
+                }
+            }
+        }
+        anyhow::ensure!(
+            roster.iter().any(|&r| r),
+            "broadcast reached no workers (all hung up)"
+        );
+        Ok(roster)
     }
 }
 
@@ -449,6 +505,41 @@ mod tests {
         let (_, f) = master.recv_any().unwrap();
         assert_eq!(f.bytes, vec![7, 8, 9]);
         worker.join().unwrap();
+    }
+
+    #[test]
+    fn partial_rendezvous_admits_a_late_dialer_into_the_roster() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let early = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 7);
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 8);
+        });
+        // rendezvous completes with only worker 0 of 2 connected
+        let mut master =
+            TcpMaster::from_listener_partial(listener, 2, 1).unwrap();
+        let roster = master.broadcast_roster(&Frame::broadcast(7, &[1.0])).unwrap();
+        assert_eq!(roster, vec![true, false]);
+        // worker 1 dials in mid-run announcing fleet epoch 3
+        let late = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect_with_epoch(addr, 1, 3).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!(b.round, 8);
+        });
+        // drain events until the join registers, then the roster flips
+        while master.peer_epoch(1) != 3 {
+            match master.try_recv_any() {
+                Ok(_) => std::thread::sleep(Duration::from_millis(1)),
+                Err(e) => panic!("{e:#}"),
+            }
+        }
+        let roster = master.broadcast_roster(&Frame::broadcast(8, &[2.0])).unwrap();
+        assert_eq!(roster, vec![true, true]);
+        early.join().unwrap();
+        late.join().unwrap();
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::optim::LrSchedule;
 use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 
 use super::fabric::FabricSpec;
+use super::membership::MembershipCfg;
 use super::shards::ShardsSpec;
 use super::value::Value;
 
@@ -166,6 +167,9 @@ pub struct ExperimentConfig {
     pub fabric: FabricSpec,
     /// Master sharding: shard count and block→shard assignment.
     pub shards: ShardsSpec,
+    /// Elastic fleet membership (`[membership]`); `None` = the static
+    /// fixed-fleet round engine.
+    pub membership: Option<MembershipCfg>,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -196,6 +200,7 @@ impl Default for ExperimentConfig {
             backend: Backend::Rust,
             fabric: FabricSpec::default(),
             shards: ShardsSpec::default(),
+            membership: None,
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -245,6 +250,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.opt("shards") {
             c.shards = ShardsSpec::from_value(x)?;
+        }
+        if let Some(x) = v.opt("membership") {
+            c.membership = Some(MembershipCfg::from_value(x)?);
         }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
@@ -307,6 +315,26 @@ impl ExperimentConfig {
         }
         for &(w, _, _) in &self.fabric.churn {
             anyhow::ensure!(w < self.workers, "fabric.churn names worker {w} out of range");
+        }
+        if let Some(m) = &self.membership {
+            m.validate().context("invalid [membership]")?;
+            m.spec(self.workers).context("invalid [membership] for this fleet")?;
+            anyhow::ensure!(
+                !self.shards.is_sharded(),
+                "[membership] is not supported with a sharded master yet"
+            );
+            anyhow::ensure!(
+                self.fabric.churn.is_empty(),
+                "[membership] replaces fabric.churn (joins/leaves happen at epoch \
+                 boundaries, not arbitrary round windows)"
+            );
+            anyhow::ensure!(
+                m.admit_at > self.fabric.max_staleness,
+                "membership.admit_at ({}) must exceed fabric.max_staleness ({}) so every \
+                 pre-eviction update folds into its old chain before the boundary reset",
+                m.admit_at,
+                self.fabric.max_staleness
+            );
         }
         Ok(())
     }
@@ -417,6 +445,27 @@ noise = 0.8
         // shards = 1 is always fine (the unsharded master)
         let one = "name = \"x\"\n\n[shards]\ncount = 1\n";
         assert!(!ExperimentConfig::from_toml_str(one).unwrap().shards.is_sharded());
+    }
+
+    #[test]
+    fn membership_table_rides_the_config() {
+        let toml = "name = \"x\"\nworkers = 4\n\n[membership]\nmin_workers = 2\nadmit_at = 8\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        let m = c.membership.as_ref().unwrap();
+        assert_eq!((m.min_workers, m.max_workers, m.admit_at), (2, 0, 8));
+        assert_eq!(m.spec(c.workers).unwrap().max_workers, 4, "0 resolves to the fleet");
+        // membership + churn windows is a config error (one churn model)
+        let bad = "name = \"x\"\nworkers = 4\n\n[fabric]\nchurn = \"1:2..4\"\n\n\
+                   [membership]\nadmit_at = 8\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // admit_at must clear the staleness window
+        let bad = "name = \"x\"\nworkers = 4\n\n[fabric]\nmax_staleness = 8\n\n\
+                   [membership]\nadmit_at = 8\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // and the sharded master does not do elastic fleets yet
+        let bad = "name = \"x\"\n\n[scheme]\nspec = \"blocks(a=0.5:sign;b=0.5:none)\"\n\n\
+                   [shards]\ncount = 2\n\n[membership]\nadmit_at = 8\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
     }
 
     #[test]

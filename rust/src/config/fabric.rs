@@ -8,8 +8,8 @@
 //! ```toml
 //! [fabric]
 //! transport = "tcp"           # "channel" (default) | "tcp"
-//! io = "reactor"              # master I/O engine over tcp:
-//!                             # "threads" (default) | "reactor"
+//! io = "threads"              # master I/O engine over tcp:
+//!                             # "reactor" (default) | "threads"
 //! io_queue = 16               # reactor: per-connection broadcast write-
 //!                             # queue bound (frames)
 //! pipelined = true            # double-buffered sends (default true)
@@ -48,13 +48,16 @@ pub enum TransportKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum IoBackend {
     /// Lifetime accept thread + one blocking reader thread per connection
-    /// (the PR-2 engine; O(workers) master threads).
-    #[default]
+    /// (the PR-2 engine; O(workers) master threads). Kept selectable as
+    /// the simpler reference implementation.
     Threads,
     /// Single-threaded epoll-style readiness reactor (`comm::reactor`):
     /// zero master threads at any worker count, bounded per-connection
     /// broadcast write queues (flow control). Bit-identical results on
-    /// deterministic runs (DESIGN.md §6).
+    /// deterministic runs (DESIGN.md §6) — the default since the elastic-
+    /// membership PR (both backends stay pinned bit-identical by
+    /// `tests/integration_tcp.rs`).
+    #[default]
     Reactor,
 }
 
@@ -321,7 +324,7 @@ mod tests {
     fn defaults_are_a_clean_channel_fabric() {
         let f = FabricSpec::default();
         assert_eq!(f.transport, TransportKind::Channel);
-        assert_eq!(f.io, IoBackend::Threads, "threads stays the default io backend");
+        assert_eq!(f.io, IoBackend::Reactor, "reactor is the default io backend");
         assert_eq!(f.io_queue, crate::comm::reactor::DEFAULT_QUEUE_BOUND);
         assert!(f.pipelined);
         assert_eq!(f.aggregation(), AggMode::FullSync);
@@ -362,7 +365,7 @@ mod tests {
         assert_eq!(f.max_staleness, 2);
         assert!((f.drop_prob - 0.1).abs() < 1e-12);
         assert!(f.pipelined, "unlisted fields keep their values");
-        assert_eq!(f.io, IoBackend::Threads, "io untouched by unrelated tokens");
+        assert_eq!(f.io, IoBackend::Reactor, "io untouched by unrelated tokens");
         f.apply_str("inline").unwrap();
         assert!(!f.pipelined);
         assert_eq!(f.transport, TransportKind::Tcp, "still tcp");

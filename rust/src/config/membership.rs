@@ -1,0 +1,176 @@
+//! `[membership]` configuration: elastic fleet membership for the
+//! epoch-phased coordinator ([`crate::coordinator::membership`]).
+//!
+//! ```toml
+//! [membership]
+//! min_workers = 2    # quorum floor: below this the fleet cools down
+//! max_workers = 4    # admission cap (0 / omitted = the launched fleet)
+//! admit_at = 8       # fleet-epoch length in rounds; admissions and
+//!                    # evictions happen only at multiples of this
+//! ```
+//!
+//! and the CLI override `--membership min=2,max=4,admit=8` (comma-separated
+//! `key=value` tokens; unlisted keys keep their current values). Setting
+//! the table at all routes the run through the elastic round engine —
+//! which, absent churn, is pinned bit-identical to the static engine
+//! (`tests/membership_e2e.rs`).
+
+use anyhow::{Context, Result};
+
+use super::value::Value;
+use crate::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership, MAX_FLEET};
+
+/// Parsed `[membership]` table. `max_workers == 0` means "the launched
+/// fleet size", resolved when the plan is built.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MembershipCfg {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    pub admit_at: u64,
+}
+
+impl Default for MembershipCfg {
+    fn default() -> Self {
+        Self { min_workers: 1, max_workers: 0, admit_at: 1 }
+    }
+}
+
+impl MembershipCfg {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.min_workers >= 1, "membership.min_workers must be >= 1");
+        anyhow::ensure!(self.admit_at >= 1, "membership.admit_at must be >= 1");
+        if self.max_workers != 0 {
+            anyhow::ensure!(
+                self.min_workers <= self.max_workers,
+                "membership.min_workers {} > max_workers {}",
+                self.min_workers,
+                self.max_workers
+            );
+            anyhow::ensure!(
+                self.max_workers <= MAX_FLEET,
+                "membership.max_workers {} exceeds the fleet ceiling {MAX_FLEET}",
+                self.max_workers
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve against the launched fleet size (`max_workers = 0` → the
+    /// whole fleet; an explicit cap is clamped to the slots that exist).
+    pub fn spec(&self, fleet: usize) -> Result<MembershipSpec> {
+        let max = if self.max_workers == 0 { fleet } else { self.max_workers.min(fleet) };
+        let spec = MembershipSpec {
+            min_workers: self.min_workers,
+            max_workers: max,
+            admit_at: self.admit_at,
+        };
+        spec.validate(fleet)?;
+        Ok(spec)
+    }
+
+    /// Master-side plan: the lowest-id workers up to the admission cap are
+    /// the launch members; any slots beyond the cap park as pending and
+    /// are admitted at epoch boundaries if seats free up.
+    pub fn master_plan(&self, fleet: usize) -> Result<MembershipPlan> {
+        let spec = self.spec(fleet)?;
+        let initial = (0..fleet.min(spec.max_workers)).collect();
+        Ok(MembershipPlan { spec, initial })
+    }
+
+    /// Worker-side plan for config-driven runs: every launched worker
+    /// wants membership in every epoch (mid-run joins/leaves are driven by
+    /// explicit [`WorkerMembership`] spans, built by tests and deployment
+    /// harnesses rather than the static config file).
+    pub fn worker_plan(&self) -> WorkerMembership {
+        WorkerMembership::always(self.admit_at)
+    }
+
+    /// Parse the `[membership]` table of a config file.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut m = Self::default();
+        if let Some(x) = v.opt("min_workers") {
+            m.min_workers = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("max_workers") {
+            m.max_workers = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("admit_at") {
+            m.admit_at = x.as_int()? as u64;
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Apply a CLI spec string (`--membership min=2,max=4,admit=8`) on top
+    /// of the current values.
+    pub fn apply_str(&mut self, spec: &str) -> Result<()> {
+        for token in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = token
+                .split_once('=')
+                .with_context(|| format!("membership token {token:?} must be key=value"))?;
+            match key {
+                "min" | "min_workers" => {
+                    self.min_workers =
+                        val.parse().with_context(|| format!("membership min={val:?}"))?
+                }
+                "max" | "max_workers" => {
+                    self.max_workers =
+                        val.parse().with_context(|| format!("membership max={val:?}"))?
+                }
+                "admit" | "admit_at" => {
+                    self.admit_at =
+                        val.parse().with_context(|| format!("membership admit={val:?}"))?
+                }
+                other => anyhow::bail!("unknown membership key {other:?} (min|max|admit)"),
+            }
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn toml_table_parses_and_resolves() {
+        let v = toml::parse("[membership]\nmin_workers = 2\nmax_workers = 4\nadmit_at = 8\n")
+            .unwrap();
+        let m = MembershipCfg::from_value(v.get("membership").unwrap()).unwrap();
+        assert_eq!(m, MembershipCfg { min_workers: 2, max_workers: 4, admit_at: 8 });
+        let spec = m.spec(4).unwrap();
+        assert_eq!((spec.min_workers, spec.max_workers, spec.admit_at), (2, 4, 8));
+        let plan = m.master_plan(4).unwrap();
+        assert_eq!(plan.initial, vec![0, 1, 2, 3]);
+        assert!(m.worker_plan().wants(0) && m.worker_plan().wants(1_000_000));
+    }
+
+    #[test]
+    fn zero_max_means_the_whole_fleet_and_caps_clamp() {
+        let m = MembershipCfg { min_workers: 1, max_workers: 0, admit_at: 4 };
+        assert_eq!(m.spec(6).unwrap().max_workers, 6);
+        // an explicit cap below the fleet parks the tail slots as pending
+        let m = MembershipCfg { min_workers: 1, max_workers: 3, admit_at: 4 };
+        let plan = m.master_plan(5).unwrap();
+        assert_eq!(plan.initial, vec![0, 1, 2]);
+        // and a cap above the fleet clamps to the slots that exist
+        let m = MembershipCfg { min_workers: 1, max_workers: 64, admit_at: 4 };
+        assert_eq!(m.spec(5).unwrap().max_workers, 5);
+    }
+
+    #[test]
+    fn cli_tokens_apply_and_invalids_reject() {
+        let mut m = MembershipCfg::default();
+        m.apply_str("min=2,max=4,admit=8").unwrap();
+        assert_eq!(m, MembershipCfg { min_workers: 2, max_workers: 4, admit_at: 8 });
+        m.apply_str("admit_at=16").unwrap();
+        assert_eq!(m.admit_at, 16, "unlisted keys keep their values");
+        assert!(m.apply_str("warp=1").is_err());
+        assert!(m.apply_str("min=0").is_err());
+        assert!(m.apply_str("min=5,max=2").is_err());
+        assert!(MembershipCfg { min_workers: 1, max_workers: 65, admit_at: 1 }
+            .validate()
+            .is_err());
+    }
+}

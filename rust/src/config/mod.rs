@@ -8,11 +8,13 @@
 pub mod experiment;
 pub mod fabric;
 pub mod json;
+pub mod membership;
 pub mod shards;
 pub mod toml;
 pub mod value;
 
 pub use experiment::{ExperimentConfig, SchemeSpec};
 pub use fabric::{FabricSpec, IoBackend, TransportKind};
+pub use membership::MembershipCfg;
 pub use shards::ShardsSpec;
 pub use value::Value;

@@ -305,6 +305,7 @@ pub fn run_training_with_manifest(
             clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
             pipelined: cfg.fabric.pipelined,
             absent: cfg.fabric.absent_for(wid),
+            membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
         };
         let shard = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
         let dataset = Arc::clone(&dataset);
@@ -328,6 +329,7 @@ pub fn run_training_with_manifest(
         train_len: cfg.train_len,
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
+        membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
     };
     let master_runtime = Runtime::new(manifest.clone())?;
     let master_result = match master_side {

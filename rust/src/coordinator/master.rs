@@ -30,7 +30,8 @@ use std::collections::VecDeque;
 
 use anyhow::{Context, Result};
 
-use crate::comm::{Frame, FrameKind, MasterTransport};
+use crate::comm::{Frame, FrameKind, MasterTransport, SYNC_ROUND};
+use crate::coordinator::membership::{ElasticFleet, MembershipPlan};
 use crate::data::{Batch, MarkovCorpus, SynthImages};
 use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
 use crate::model::ModelKind;
@@ -67,6 +68,12 @@ pub struct MasterSpec {
     pub train_len: usize,
     pub data_noise: f32,
     pub aggregation: AggMode,
+    /// Elastic fleet membership (`[membership]` config): when set, the run
+    /// goes through the epoch-phased elastic engine — workers join and
+    /// leave the member set at fleet-epoch boundaries (every `admit_at`
+    /// rounds) with freshly rebuilt decode chains on admission. `None`
+    /// keeps the fixed-fleet engine untouched.
+    pub membership: Option<MembershipPlan>,
 }
 
 /// Held-out evaluation stream (kind matches the model).
@@ -224,6 +231,9 @@ fn run_rounds<T: MasterTransport>(
     w: Vec<f32>,
     eval: Option<&mut EvalFn<'_>>,
 ) -> Result<MasterReport> {
+    if let Some(plan) = spec.membership.clone() {
+        return run_engine_elastic(spec, &plan, transport, w, eval);
+    }
     let d = w.len();
     let n = transport.n_workers();
     let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(n);
@@ -260,18 +270,28 @@ pub(crate) fn run_engine<T: MasterTransport>(
     let mut points = Vec::new();
     let wall = Timer::start();
 
-    let mut rtilde = vec![0.0f32; d];
     let mut agg = vec![0.0f32; d];
     // the broadcast staging buffer ping-pongs through the transport: we
     // take the bytes back after each broadcast, so warm rounds stage the
     // dense r̃ with zero heap allocation (ROADMAP "broadcast path reuse")
     let mut bcast_buf: Vec<u8> = Vec::new();
-    // per-worker r̃ buffers for the parallel FullSync decode (the
-    // bounded-staleness path folds frame-by-frame and reuses `rtilde`)
+    // per-worker r̃ buffers for the parallel FullSync decode
     let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
         AggMode::FullSync => (0..n).map(|_| vec![0.0f32; d]).collect(),
         _ => Vec::new(),
     };
+    // bounded-staleness pools, reused across rounds: per-worker FIFO
+    // batches plus per-frame r̃ scratch and block-bits snapshots for the
+    // parallel batch decode (buffers grow to the high-water frame count
+    // and then stop allocating)
+    let mut batches: Vec<Vec<Frame>> = Vec::new();
+    let mut stale_scratch: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut stale_snaps: Vec<Vec<Vec<(u64, usize)>>> = Vec::new();
+    if spec.aggregation != AggMode::FullSync {
+        batches = (0..n).map(|_| Vec::new()).collect();
+        stale_scratch = (0..n).map(|_| Vec::new()).collect();
+        stale_snaps = (0..n).map(|_| Vec::new()).collect();
+    }
 
     for t in 0..spec.steps {
         agg.iter_mut().for_each(|x| *x = 0.0);
@@ -325,27 +345,52 @@ pub(crate) fn run_engine<T: MasterTransport>(
                 while inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
                     inbox.pump(&mut transport)?;
                 }
-                // fold EVERY queued frame, each exactly once, in worker-id
-                // order and per-worker FIFO (chains advance in the worker's
-                // own round order, so decode state stays in sync)
+                // take EVERY queued frame, each exactly once, per-worker
+                // FIFO, then decode the batches in parallel across workers
+                // (sequential within a worker: chains advance in the
+                // worker's own round order). Accounting and aggregation
+                // below replay in worker-id order from per-frame snapshots,
+                // so the folded f32 bits and CommStats are identical to the
+                // decode-as-you-fold path at any thread count (pinned by
+                // tests/hotpath_parallel.rs).
+                for wid in 0..n {
+                    batches[wid].clear();
+                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                        anyhow::ensure!(
+                            frame.worker as usize == wid,
+                            "worker id mismatch: frame from {} on queue {wid}",
+                            frame.worker
+                        );
+                        batches[wid].push(frame);
+                    }
+                }
+                decode_batches_parallel(
+                    &mut chains,
+                    &mut batches,
+                    &mut stale_scratch,
+                    &mut stale_snaps,
+                    t,
+                    d,
+                )?;
                 let mut contributions = 0u32;
                 for wid in 0..n {
-                    while let Some(mut frame) = inbox.pending[wid].pop_front() {
+                    for (k, frame) in batches[wid].iter().enumerate() {
                         if frame.kind == FrameKind::Update {
                             comm.record_staleness(t.saturating_sub(frame.round));
                         }
-                        fold_frame(
-                            &mut frame,
-                            t,
-                            &mut chains,
+                        account_decoded(
+                            frame,
+                            wid,
+                            &*chains[wid],
+                            &stale_snaps[wid][k],
                             &mut comm,
                             &mut train_loss,
-                            &mut rtilde,
                         )?;
                         if frame.kind == FrameKind::Update {
                             contributions += 1;
+                            let rt = &stale_scratch[wid][k];
                             for i in 0..d {
-                                agg[i] += rtilde[i];
+                                agg[i] += rt[i];
                             }
                         }
                     }
@@ -395,6 +440,314 @@ pub(crate) fn run_engine<T: MasterTransport>(
     if spec.aggregation != AggMode::FullSync {
         for wid in 0..n {
             while inbox.delivered[wid] < spec.steps {
+                inbox.pump(&mut transport)?;
+            }
+        }
+        let unconsumed = inbox
+            .pending
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|f| f.kind == FrameKind::Update)
+            .count();
+        comm.record_unconsumed(unconsumed as u64);
+    }
+
+    let (final_test_loss, final_test_acc) = match eval.as_mut() {
+        Some(f) => f(&w, (spec.eval_batches * 4).max(8), spec.steps)?,
+        None => (f64::NAN, 0.0),
+    };
+    Ok(MasterReport {
+        points,
+        comm,
+        final_test_acc,
+        final_test_loss,
+        final_w_norm: crate::tensor::norm2(&w),
+        final_w: w,
+    })
+}
+
+/// The elastic round engine (`[membership]` configured): the fixed-fleet
+/// engine promoted to the epoch-phased coordinator state machine of
+/// [`crate::coordinator::membership`] (DESIGN.md §7).
+///
+/// Protocol invariants (shared by every fabric backend — the admission
+/// path is this engine, not the transport):
+///
+/// * **Lockstep holds.** Every *expected* slot (a connected worker the
+///   previous broadcast reached) sends exactly one frame per round:
+///   members send Update, a member announcing departure sends Leave (its
+///   contribution for that round is forfeited), connected non-members
+///   send Join (seeking next-epoch admission) or Skip. Join/Leave only
+///   *stage* changes; the member set mutates exclusively at boundaries.
+/// * **Boundaries.** After folding round `t` with `(t+1) % admit_at == 0`
+///   the machine ticks: leavers evicted, parked joiners admitted (fresh
+///   master chain via `scheme.master(d)` — the chain-reset contract), and
+///   the broadcast becomes a [`Frame::sync_w`] carrying the new member
+///   bitmap plus the **absolute** post-round parameters, so admitted
+///   workers re-enter bit-exactly in sync.
+/// * **Expected = last broadcast's roster.** A worker only sends after
+///   receiving a broadcast, and [`MasterTransport::broadcast_roster`]
+///   reports exactly who a broadcast was staged to — so a connection that
+///   completes mid-round is picked up at the next broadcast and can never
+///   deadlock the wait loop.
+/// * **Bounded staleness** re-times its bounds by each slot's first
+///   expected round; `admit_at > max_staleness` (validated here) plus
+///   per-connection FIFO guarantee every pre-eviction Update folds into
+///   the old chain before any boundary can rebuild it.
+///
+/// With `min_workers == max_workers == fleet` and every worker seeking
+/// every epoch, no Join/Leave frames exist and no rekeys fire: the run is
+/// bit-identical (final_w bits, CommStats, StepStats) to the fixed-fleet
+/// engine (pinned by `tests/membership_e2e.rs`).
+pub(crate) fn run_engine_elastic<T: MasterTransport>(
+    spec: &MasterSpec,
+    plan: &MembershipPlan,
+    mut transport: T,
+    mut w: Vec<f32>,
+    mut eval: Option<&mut EvalFn<'_>>,
+) -> Result<MasterReport> {
+    let d = w.len();
+    let n = transport.n_workers();
+    if let AggMode::BoundedStaleness { max_staleness, .. } = spec.aggregation {
+        anyhow::ensure!(
+            plan.spec.admit_at > max_staleness,
+            "[membership] admit_at ({}) must exceed max_staleness ({max_staleness}): in-flight \
+             stale updates must drain before a boundary may rebuild a chain",
+            plan.spec.admit_at
+        );
+    }
+    let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        chains.push(spec.scheme.master(d)?);
+    }
+    let mut fleet = ElasticFleet::new(plan, n)?;
+    let mut inbox = Inbox::new(n, 0);
+    let mut comm = CommStats::new(d);
+    let mut train_loss = LossMeter::new();
+    let mut points = Vec::new();
+    let wall = Timer::start();
+
+    let mut agg = vec![0.0f32; d];
+    let mut bcast_buf: Vec<u8> = Vec::new();
+    let mut round_frames: Vec<Frame> = Vec::with_capacity(n);
+    let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
+        AggMode::FullSync => (0..n).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
+    let mut batches: Vec<Vec<Frame>> = Vec::new();
+    let mut stale_scratch: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut stale_snaps: Vec<Vec<Vec<(u64, usize)>>> = Vec::new();
+    if spec.aggregation != AggMode::FullSync {
+        batches = (0..n).map(|_| Vec::new()).collect();
+        stale_scratch = (0..n).map(|_| Vec::new()).collect();
+        stale_snaps = (0..n).map(|_| Vec::new()).collect();
+    }
+
+    // pre-round-0 beacon: hands every connected worker the member bitmap
+    // and the initial parameters; its recipient roster seeds the expected
+    // set for round 0
+    let frame =
+        Frame::sync_w(SYNC_ROUND, &w, fleet.membership.bitmap(), std::mem::take(&mut bcast_buf));
+    let roster = transport.broadcast_roster(&frame)?;
+    bcast_buf = frame.bytes;
+    fleet.set_expected(roster, 0);
+
+    for t in 0..spec.steps {
+        agg.iter_mut().for_each(|x| *x = 0.0);
+
+        match spec.aggregation {
+            AggMode::FullSync => {
+                // one frame per EXPECTED slot, then fold in worker-id order
+                while (0..n).any(|wid| fleet.expected[wid] && inbox.pending[wid].is_empty()) {
+                    inbox.pump(&mut transport)?;
+                }
+                round_frames.clear();
+                for wid in 0..n {
+                    if fleet.expected[wid] {
+                        let frame = inbox.pending[wid].pop_front().unwrap();
+                        anyhow::ensure!(
+                            frame.round == t,
+                            "round skew: worker {wid} sent {} during round {t}",
+                            frame.round
+                        );
+                        anyhow::ensure!(
+                            frame.worker as usize == wid,
+                            "worker id mismatch: frame from {} on queue {wid}",
+                            frame.worker
+                        );
+                        fleet.observe(wid, &frame);
+                        round_frames.push(frame);
+                    } else {
+                        // placeholder keeps the decode slot zip dense; it
+                        // is never accounted (the slot owes us nothing)
+                        round_frames.push(Frame::skip(wid as u32, t));
+                    }
+                }
+                let contributors = (0..n)
+                    .filter(|&wid| {
+                        fleet.expected[wid] && round_frames[wid].kind == FrameKind::Update
+                    })
+                    .count();
+                let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
+                decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                for wid in 0..n {
+                    if !fleet.expected[wid] {
+                        continue;
+                    }
+                    let frame = &round_frames[wid];
+                    match frame.kind {
+                        FrameKind::Update => {
+                            anyhow::ensure!(
+                                fleet.membership.is_member(wid),
+                                "round {t}: update from non-member worker {wid}"
+                            );
+                            account_frame(frame, wid, &*chains[wid], &mut comm, &mut train_loss)?;
+                            let rt = &rtilde_w[wid];
+                            for i in 0..d {
+                                agg[i] += scale * rt[i];
+                            }
+                        }
+                        // control frames and sit-outs: staged above via
+                        // observe(); all count as a skipped round
+                        FrameKind::Skip | FrameKind::Join | FrameKind::Leave => comm.record_skip(),
+                        other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
+                    }
+                }
+            }
+            AggMode::BoundedStaleness { max_staleness, quorum } => {
+                inbox.drain(&mut transport)?;
+                // staleness bound, re-timed by each slot's first expected
+                // round: a worker first expected at round s has sent
+                // delivered frames covering rounds s..s+delivered
+                for wid in 0..n {
+                    while fleet.expected[wid]
+                        && fleet.start_round[wid] + inbox.delivered[wid] + max_staleness < t + 1
+                    {
+                        inbox.pump(&mut transport)?;
+                    }
+                }
+                let expected_now = fleet.expected_count();
+                if expected_now > 0 {
+                    let quorum = quorum.clamp(1, expected_now);
+                    while (0..n)
+                        .filter(|&wid| fleet.expected[wid] && !inbox.pending[wid].is_empty())
+                        .count()
+                        < quorum
+                    {
+                        inbox.pump(&mut transport)?;
+                    }
+                }
+                for wid in 0..n {
+                    batches[wid].clear();
+                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                        anyhow::ensure!(
+                            frame.worker as usize == wid,
+                            "worker id mismatch: frame from {} on queue {wid}",
+                            frame.worker
+                        );
+                        fleet.observe(wid, &frame);
+                        batches[wid].push(frame);
+                    }
+                }
+                decode_batches_parallel(
+                    &mut chains,
+                    &mut batches,
+                    &mut stale_scratch,
+                    &mut stale_snaps,
+                    t,
+                    d,
+                )?;
+                let mut contributions = 0u32;
+                for wid in 0..n {
+                    for (k, frame) in batches[wid].iter().enumerate() {
+                        match frame.kind {
+                            FrameKind::Join | FrameKind::Leave => comm.record_skip(),
+                            _ => {
+                                if frame.kind == FrameKind::Update {
+                                    comm.record_staleness(t.saturating_sub(frame.round));
+                                }
+                                account_decoded(
+                                    frame,
+                                    wid,
+                                    &*chains[wid],
+                                    &stale_snaps[wid][k],
+                                    &mut comm,
+                                    &mut train_loss,
+                                )?;
+                                if frame.kind == FrameKind::Update {
+                                    contributions += 1;
+                                    let rt = &stale_scratch[wid][k];
+                                    for i in 0..d {
+                                        agg[i] += rt[i];
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                if contributions > 0 {
+                    let scale = 1.0 / contributions as f32;
+                    for a in agg.iter_mut() {
+                        *a *= scale;
+                    }
+                }
+            }
+        }
+
+        // the master applies its own delta BEFORE broadcasting, so a
+        // boundary sync ships the post-round-t parameters (identical f32
+        // bits to every member applying the delta itself)
+        let lr = spec.schedule.lr_at(t);
+        for i in 0..d {
+            w[i] -= lr * agg[i];
+        }
+        let boundary = (t + 1) % fleet.admit_at == 0;
+        let frame = if boundary {
+            let diff = fleet.membership.tick();
+            for &wid in &diff.admitted {
+                // chain-reset contract: admission rebuilds the worker's
+                // decode chain from scratch (evicted chains are left
+                // behind and replaced here if the worker ever returns)
+                chains[wid] = spec.scheme.master(d)?;
+            }
+            Frame::sync_w(t, &w, fleet.membership.bitmap(), std::mem::take(&mut bcast_buf))
+        } else {
+            // plain delta broadcast, bitmap riding in payload_bits so a
+            // freshly connected worker learns the current member set
+            let mut f = Frame::broadcast_from(t, &agg, std::mem::take(&mut bcast_buf));
+            f.payload_bits = fleet.membership.bitmap();
+            f
+        };
+        let roster = transport.broadcast_roster(&frame)?;
+        bcast_buf = frame.bytes;
+        fleet.set_expected(roster, t + 1);
+
+        if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
+            let (test_loss, test_acc) = match eval.as_mut() {
+                Some(f) => f(&w, spec.eval_batches, t)?,
+                None => (f64::NAN, 0.0),
+            };
+            points.push(RunPoint {
+                step: t + 1,
+                epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
+                    / spec.train_len.max(1) as f64,
+                train_loss: train_loss.smoothed(),
+                test_loss,
+                test_acc,
+                bits_per_component: comm.bits_per_component(),
+                e_mse: 0.0,
+                wall_secs: wall.elapsed_secs(),
+            });
+        }
+    }
+
+    // bounded-staleness runs can end with late frames still in flight: a
+    // slot first expected at round s sends exactly steps - s frames
+    if spec.aggregation != AggMode::FullSync {
+        for wid in 0..n {
+            while fleet.expected[wid]
+                && fleet.start_round[wid] + inbox.delivered[wid] < spec.steps
+            {
                 inbox.pump(&mut transport)?;
             }
         }
@@ -493,29 +846,104 @@ fn account_frame(
     Ok(())
 }
 
-/// Decode one worker frame into its chain (updates), then account it via
-/// [`account_frame`]. On return, `rtilde` holds the decoded r̃ for Update
-/// frames.
-fn fold_frame(
-    frame: &mut Frame,
-    round: u64,
+/// Decode each worker's queued FIFO batch for this round — sequential
+/// within a worker (the chain is a stateful delay line), parallel across
+/// workers — into pooled per-frame r̃ scratch (`scratch[wid][k]` holds the
+/// decoded r̃ of `batches[wid][k]`). Each Update's per-block `(bits,
+/// components)` are snapshotted into `snaps[wid][k]` at decode time: the
+/// chain's live `last_block_bits` only reflects its *final* frame of the
+/// round, but accounting must replay per frame. Pools grow to the
+/// high-water frame count and are reused across rounds. Decode failures
+/// surface in worker-id order with the same context the sequential path
+/// attached.
+fn decode_batches_parallel(
     chains: &mut [Box<dyn MasterScheme>],
+    batches: &mut [Vec<Frame>],
+    scratch: &mut [Vec<Vec<f32>>],
+    snaps: &mut [Vec<Vec<(u64, usize)>>],
+    round: u64,
+    d: usize,
+) -> Result<()> {
+    let n = batches.len();
+    let mut results: Vec<Result<()>> = Vec::with_capacity(n);
+    results.resize_with(n, || Ok(()));
+    {
+        type Slot<'a> = (
+            &'a mut Box<dyn MasterScheme>,
+            &'a mut Vec<Frame>,
+            &'a mut Vec<Vec<f32>>,
+            &'a mut Vec<Vec<(u64, usize)>>,
+            &'a mut Result<()>,
+        );
+        let mut slots: Vec<Slot<'_>> = chains
+            .iter_mut()
+            .zip(batches.iter_mut())
+            .zip(scratch.iter_mut())
+            .zip(snaps.iter_mut())
+            .zip(results.iter_mut())
+            .map(|((((chain, batch), bufs), snap), res)| (chain, batch, bufs, snap, res))
+            .collect();
+        let min_items = crate::util::parallel::gate_by_dim(d);
+        crate::util::parallel::par_for_each_indexed(&mut slots, min_items, |_wid, slot| {
+            let (chain, batch, bufs, snap, res) = slot;
+            for (k, frame) in batch.iter_mut().enumerate() {
+                if bufs.len() <= k {
+                    bufs.push(vec![0.0f32; d]);
+                }
+                if snap.len() <= k {
+                    snap.push(Vec::new());
+                }
+                snap[k].clear();
+                if frame.kind != FrameKind::Update {
+                    continue;
+                }
+                // decode with the WORKER's round tag (shared-mask formats
+                // seed from it), which under staleness differs from the
+                // master round; the payload moves out (no byte copy)
+                let payload = frame.take_payload();
+                if let Err(e) = chain.receive(&payload, frame.round, bufs[k].as_mut_slice()) {
+                    **res = Err(e);
+                    break;
+                }
+                snap[k].extend(chain.last_block_bits().iter().map(|bb| (bb.bits, bb.components)));
+            }
+        });
+    }
+    for (wid, res) in results.into_iter().enumerate() {
+        res.with_context(|| format!("round {round}: decode worker {wid}"))?;
+    }
+    Ok(())
+}
+
+/// [`account_frame`] for a batch-decoded frame: per-block bits/components
+/// come from the decode-time snapshot, names from the chain (block
+/// structure is fixed at scheme construction, so the chain's final-frame
+/// names apply to every frame of the batch).
+fn account_decoded(
+    frame: &Frame,
+    wid: usize,
+    chain: &dyn MasterScheme,
+    snap: &[(u64, usize)],
     comm: &mut CommStats,
     train_loss: &mut LossMeter,
-    rtilde: &mut [f32],
 ) -> Result<()> {
-    let wid = frame.worker as usize;
-    anyhow::ensure!(wid < chains.len(), "bad worker id {wid}");
-    if frame.kind == FrameKind::Update {
-        // decode with the WORKER's round tag (shared-mask formats seed
-        // from it), which under staleness differs from the master round;
-        // the payload moves out of the frame (no byte copy)
-        let payload = frame.take_payload();
-        chains[wid]
-            .receive(&payload, frame.round, rtilde)
-            .with_context(|| format!("round {round}: decode worker {wid}"))?;
+    match frame.kind {
+        FrameKind::Update => {
+            comm.record_message(frame.payload_bits);
+            train_loss.push(frame.loss as f64);
+            let blocks = chain.last_block_bits();
+            anyhow::ensure!(
+                blocks.len() == snap.len(),
+                "per-block accounting drift for worker {wid}"
+            );
+            for (bb, &(bits, components)) in blocks.iter().zip(snap.iter()) {
+                comm.record_block(&bb.name, bits, components);
+            }
+        }
+        FrameKind::Skip => comm.record_skip(),
+        other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
     }
-    account_frame(frame, wid, &*chains[wid], comm, train_loss)
+    Ok(())
 }
 
 /// Mean loss / accuracy over `batches` held-out batches.

@@ -1,0 +1,460 @@
+//! Elastic fleet membership: the epoch-phased coordinator state machine.
+//!
+//! The paper's per-worker decode-and-prediction chains assume predictor
+//! state that lives as long as the worker — but at production scale churn
+//! is the steady state, not a fault. This module promotes the master from
+//! a fixed-fleet round loop to an explicit phase machine (the Psyche
+//! coordinator design): the run is divided into *fleet epochs* of
+//! `admit_at` rounds, and the member set only changes at epoch boundaries:
+//!
+//! ```text
+//!   WaitingForMembers(min) ──(≥ min joined)──▶ Warmup (epoch 0)
+//!        Warmup ──(first boundary)──▶ Training
+//!        Training ──(members < min after a tick)──▶ Cooldown
+//!        Cooldown ──(re-grown to ≥ min)──▶ Training
+//! ```
+//!
+//! * A worker that asks to join mid-epoch **parks in a pending set** and is
+//!   admitted at the next boundary (never mid-epoch — chains are stateful
+//!   delay lines, so admission must align with a chain-reset point).
+//! * Admission rebuilds the worker's decode chain from scratch on *both*
+//!   sides (the chain-reset contract, DESIGN.md §7): momentum-EF state
+//!   tolerates the perturbation (arXiv 2305.15155), and per-block chains of
+//!   blockwise schemes reset together (arXiv 1905.10936).
+//! * Data assignments are re-derived per epoch from `(epoch, worker_id)`
+//!   and the member set ([`bitmap_rank`] + [`assignment_seed`]), so the
+//!   partition re-balances as the fleet grows or shrinks.
+//! * The member set rides the broadcast header ([`Frame::sync_w`]): every
+//!   elastic broadcast carries the membership bitmap in `payload_bits`, and
+//!   boundary broadcasts ship the **absolute** parameter vector so parked
+//!   and late-joining workers re-enter bit-exactly in sync.
+//!
+//! The machine itself is pure (no I/O, no clocks): transports feed it
+//! Join/Leave/Timeout events and the round engine ticks it at boundaries,
+//! which is what makes it property-testable over arbitrary event sequences
+//! (`tests/prop_coordinator.rs`).
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::comm::{Frame, FrameKind};
+
+/// Elastic fleets are capped at 64 workers: the member set travels in the
+/// `u64 payload_bits` header field of every elastic broadcast. Larger
+/// fleets need a side-channel membership payload (ROADMAP).
+pub const MAX_FLEET: usize = 64;
+
+/// `[membership]` configuration: the fleet may shrink to `min_workers` and
+/// grow to `max_workers`; admission/eviction happen every `admit_at`
+/// rounds (the fleet-epoch length).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MembershipSpec {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Rounds per fleet epoch; boundaries at `t % admit_at == 0`.
+    pub admit_at: u64,
+}
+
+impl MembershipSpec {
+    /// Validate against the fabric's provisioned slot count.
+    pub fn validate(&self, slots: usize) -> Result<()> {
+        anyhow::ensure!(self.min_workers >= 1, "[membership] min_workers must be >= 1");
+        anyhow::ensure!(
+            self.min_workers <= self.max_workers,
+            "[membership] min_workers {} > max_workers {}",
+            self.min_workers,
+            self.max_workers
+        );
+        anyhow::ensure!(
+            self.max_workers <= slots,
+            "[membership] max_workers {} exceeds the fabric's {slots} worker slots",
+            self.max_workers
+        );
+        anyhow::ensure!(
+            slots <= MAX_FLEET,
+            "elastic membership supports at most {MAX_FLEET} worker slots (bitmap header), got {slots}"
+        );
+        anyhow::ensure!(self.admit_at >= 1, "[membership] admit_at must be >= 1");
+        Ok(())
+    }
+}
+
+/// Coordinator phase (the Psyche tick states).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Not enough members to start; the run rendezvous holds here.
+    WaitingForMembers,
+    /// Epoch 0: the initial fleet's first epoch.
+    Warmup,
+    /// Steady state: boundaries admit/evict between epochs.
+    Training,
+    /// Below `min_workers` after a boundary: rounds proceed with the
+    /// remaining members while the machine waits to re-grow (it returns to
+    /// Training at the first boundary with ≥ min members).
+    Cooldown,
+}
+
+/// What changed at one epoch boundary.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BoundaryDiff {
+    /// The epoch just entered.
+    pub epoch: u64,
+    /// Workers admitted at this boundary (fresh chains on both sides).
+    pub admitted: Vec<usize>,
+    /// Workers evicted at this boundary (chains dropped; rebuilt fresh if
+    /// they are ever re-admitted).
+    pub evicted: Vec<usize>,
+}
+
+/// The pure membership state machine. Events ([`Membership::on_join`] /
+/// [`Membership::on_leave`] / [`Membership::on_timeout`]) only stage
+/// changes; the member set itself mutates exclusively in
+/// [`Membership::tick`] — the never-admits-mid-epoch invariant.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    spec: MembershipSpec,
+    slots: usize,
+    phase: Phase,
+    epoch: u64,
+    members: BTreeSet<usize>,
+    /// joined mid-epoch; admitted (oldest wid first) at the next boundary
+    pending: BTreeSet<usize>,
+    /// announced departure (or timed out) mid-epoch; evicted at the boundary
+    leaving: BTreeSet<usize>,
+}
+
+impl Membership {
+    pub fn new(spec: MembershipSpec, slots: usize, initial: &[usize]) -> Result<Self> {
+        spec.validate(slots)?;
+        let members: BTreeSet<usize> = initial.iter().copied().collect();
+        anyhow::ensure!(
+            members.len() == initial.len(),
+            "duplicate worker id in the initial member set"
+        );
+        for &w in &members {
+            anyhow::ensure!(w < slots, "initial member {w} out of range (slots = {slots})");
+        }
+        anyhow::ensure!(
+            members.len() <= spec.max_workers,
+            "{} initial members exceed max_workers {}",
+            members.len(),
+            spec.max_workers
+        );
+        let phase = if members.len() >= spec.min_workers {
+            Phase::Warmup
+        } else {
+            Phase::WaitingForMembers
+        };
+        Ok(Self { spec, slots, phase, epoch: 0, members, pending: BTreeSet::new(), leaving: BTreeSet::new() })
+    }
+
+    pub fn spec(&self) -> &MembershipSpec {
+        &self.spec
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// The current fleet epoch (0 until the first tick).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn is_member(&self, wid: usize) -> bool {
+        self.members.contains(&wid)
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Current members in ascending worker-id order.
+    pub fn members(&self) -> Vec<usize> {
+        self.members.iter().copied().collect()
+    }
+
+    /// Member set as the broadcast-header bitmap (bit w = worker w).
+    pub fn bitmap(&self) -> u64 {
+        let mut b = 0u64;
+        for &w in &self.members {
+            b |= 1u64 << w;
+        }
+        b
+    }
+
+    /// Worker `wid` asks to join: park it until the next boundary.
+    /// Idempotent; a current member's join request is ignored.
+    pub fn on_join(&mut self, wid: usize) {
+        if wid < self.slots && !self.members.contains(&wid) {
+            self.pending.insert(wid);
+        }
+    }
+
+    /// Worker `wid` announced departure: evicted at the next boundary.
+    pub fn on_leave(&mut self, wid: usize) {
+        if self.members.contains(&wid) {
+            self.leaving.insert(wid);
+        }
+        self.pending.remove(&wid);
+    }
+
+    /// Transport-level loss of `wid` (no clean leave): same staging as a
+    /// leave, and any pending join is cancelled.
+    pub fn on_timeout(&mut self, wid: usize) {
+        self.on_leave(wid);
+    }
+
+    /// Cross an epoch boundary: evict leavers, admit pending joins (oldest
+    /// worker id first) up to `max_workers`, advance the phase. The only
+    /// place the member set changes.
+    pub fn tick(&mut self) -> BoundaryDiff {
+        let evicted: Vec<usize> = self.leaving.iter().copied().collect();
+        for w in &evicted {
+            self.members.remove(w);
+        }
+        self.leaving.clear();
+        let mut admitted = Vec::new();
+        while self.members.len() < self.spec.max_workers {
+            match self.pending.iter().next().copied() {
+                Some(w) => {
+                    self.pending.remove(&w);
+                    self.members.insert(w);
+                    admitted.push(w);
+                }
+                None => break,
+            }
+        }
+        self.epoch += 1;
+        self.phase = if self.members.len() < self.spec.min_workers {
+            Phase::Cooldown
+        } else {
+            Phase::Training
+        };
+        BoundaryDiff { epoch: self.epoch, admitted, evicted }
+    }
+}
+
+/// Partition position of `wid` within a member bitmap: `(rank, n_members)`
+/// with rank = number of set bits below `wid`. `None` for non-members.
+/// This is what re-keys the data partition when the fleet changes: the
+/// strided shard owner becomes the member *rank*, not the worker id.
+pub fn bitmap_rank(bitmap: u64, wid: usize) -> Option<(usize, usize)> {
+    if wid >= MAX_FLEET || bitmap & (1u64 << wid) == 0 {
+        return None;
+    }
+    let below = bitmap & ((1u64 << wid) - 1);
+    Some((below.count_ones() as usize, bitmap.count_ones() as usize))
+}
+
+/// Visit-order seed for worker `wid`'s shard in fleet epoch `fleet_epoch`:
+/// identical `(seed, epoch, worker_id)` inputs re-derive identical
+/// assignments on every replica (the determinism the property tests pin).
+/// Epoch 0 maps to the static-fleet seed so an unchurned run stays
+/// bit-identical to a run without membership at all.
+pub fn assignment_seed(seed: u64, fleet_epoch: u64, wid: usize) -> u64 {
+    if fleet_epoch == 0 {
+        return seed;
+    }
+    seed ^ fleet_epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (wid as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// Master-side membership plan, carried in `MasterSpec`.
+#[derive(Clone, Debug)]
+pub struct MembershipPlan {
+    pub spec: MembershipSpec,
+    /// Worker ids admitted for epoch 0 (the launch rendezvous set).
+    pub initial: Vec<usize>,
+}
+
+/// Worker-side membership plan, carried in `WorkerSpec`: which fleet
+/// epochs this worker *seeks* membership in. Admission is still the
+/// master's call — the broadcast bitmap is authoritative; the plan only
+/// drives when the worker sends Join/Leave control frames.
+#[derive(Clone, Debug)]
+pub struct WorkerMembership {
+    /// Rounds per fleet epoch (must match the master's `admit_at`).
+    pub admit_at: u64,
+    /// Half-open fleet-epoch spans `[a, b)` of sought membership.
+    pub epochs: Vec<(u64, u64)>,
+}
+
+impl WorkerMembership {
+    /// Seek membership in every epoch (the static-capable default).
+    pub fn always(admit_at: u64) -> Self {
+        Self { admit_at, epochs: vec![(0, u64::MAX)] }
+    }
+
+    pub fn wants(&self, epoch: u64) -> bool {
+        self.epochs.iter().any(|&(a, b)| epoch >= a && epoch < b)
+    }
+
+    pub fn epoch_of(&self, round: u64) -> u64 {
+        round / self.admit_at.max(1)
+    }
+}
+
+/// Engine-side fleet bookkeeping: the state machine plus the per-round
+/// *expected set* — which slots owe the master a frame this round. The
+/// expected set is exactly the roster the previous broadcast reached
+/// ([`crate::comm::MasterTransport::broadcast_roster`]): a worker only
+/// starts sending after it has seen a broadcast, so roster-lag can never
+/// deadlock the wait loop.
+pub(crate) struct ElasticFleet {
+    pub(crate) membership: Membership,
+    pub(crate) admit_at: u64,
+    pub(crate) expected: Vec<bool>,
+    /// First round each slot was expected to send (staleness accounting
+    /// for late joiners).
+    pub(crate) start_round: Vec<u64>,
+}
+
+impl ElasticFleet {
+    pub(crate) fn new(plan: &MembershipPlan, slots: usize) -> Result<Self> {
+        let membership = Membership::new(plan.spec, slots, &plan.initial)?;
+        Ok(Self {
+            membership,
+            admit_at: plan.spec.admit_at,
+            expected: vec![false; slots],
+            start_round: vec![0; slots],
+        })
+    }
+
+    /// Route one arriving control frame into the state machine — the one
+    /// admission path every fabric backend shares.
+    pub(crate) fn observe(&mut self, wid: usize, frame: &Frame) {
+        match frame.kind {
+            FrameKind::Join => self.membership.on_join(wid),
+            FrameKind::Leave => self.membership.on_leave(wid),
+            _ => {}
+        }
+    }
+
+    /// Adopt the roster a broadcast reached as the expected set for
+    /// `next_round`, recording first-expected rounds for new slots.
+    pub(crate) fn set_expected(&mut self, roster: Vec<bool>, next_round: u64) {
+        for (wid, &now) in roster.iter().enumerate() {
+            if now && !self.expected[wid] {
+                self.start_round[wid] = next_round;
+            }
+        }
+        self.expected = roster;
+    }
+
+    pub(crate) fn expected_count(&self) -> usize {
+        self.expected.iter().filter(|&&e| e).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(min: usize, max: usize, admit_at: u64) -> MembershipSpec {
+        MembershipSpec { min_workers: min, max_workers: max, admit_at }
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(spec(1, 4, 8).validate(4).is_ok());
+        assert!(spec(0, 4, 8).validate(4).is_err(), "min 0");
+        assert!(spec(5, 4, 8).validate(8).is_err(), "min > max");
+        assert!(spec(1, 9, 8).validate(8).is_err(), "max > slots");
+        assert!(spec(1, 4, 0).validate(4).is_err(), "admit_at 0");
+        assert!(spec(1, 65, 8).validate(65).is_err(), "beyond bitmap");
+    }
+
+    #[test]
+    fn phases_walk_the_psyche_diagram() {
+        let mut m = Membership::new(spec(2, 4, 8), 4, &[0]).unwrap();
+        assert_eq!(m.phase(), Phase::WaitingForMembers);
+        let mut m = Membership::new(spec(2, 4, 8), 4, &[0, 1]).unwrap();
+        assert_eq!(m.phase(), Phase::Warmup);
+        assert_eq!(m.epoch(), 0);
+        // steady boundary: no changes, Warmup -> Training
+        let d = m.tick();
+        assert_eq!(d, BoundaryDiff { epoch: 1, admitted: vec![], evicted: vec![] });
+        assert_eq!(m.phase(), Phase::Training);
+        // shrink below min: Cooldown, then re-grow back to Training
+        m.on_leave(1);
+        assert_eq!(m.n_members(), 2, "leave stages; eviction waits for the tick");
+        let d = m.tick();
+        assert_eq!(d.evicted, vec![1]);
+        assert_eq!(m.phase(), Phase::Cooldown);
+        m.on_join(1);
+        assert_eq!(m.n_members(), 1, "join parks; admission waits for the tick");
+        let d = m.tick();
+        assert_eq!(d.admitted, vec![1]);
+        assert_eq!(m.phase(), Phase::Training);
+    }
+
+    #[test]
+    fn admission_is_capped_and_ordered_by_worker_id() {
+        let mut m = Membership::new(spec(1, 3, 4), 8, &[0, 1]).unwrap();
+        m.on_join(7);
+        m.on_join(4);
+        m.on_join(2);
+        let d = m.tick();
+        // one free slot (max 3): lowest pending wid wins; others stay parked
+        assert_eq!(d.admitted, vec![2]);
+        assert_eq!(m.members(), vec![0, 1, 2]);
+        m.on_leave(0);
+        let d = m.tick();
+        assert_eq!(d.evicted, vec![0]);
+        assert_eq!(d.admitted, vec![4]);
+        assert_eq!(m.members(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn events_are_idempotent_and_member_aware() {
+        let mut m = Membership::new(spec(1, 4, 4), 4, &[0, 1]).unwrap();
+        m.on_join(0); // already a member: ignored
+        m.on_leave(3); // not a member: ignored
+        m.on_join(2);
+        m.on_join(2);
+        m.on_timeout(2); // cancels the pending join
+        let d = m.tick();
+        assert!(d.admitted.is_empty());
+        assert!(d.evicted.is_empty());
+        assert_eq!(m.members(), vec![0, 1]);
+    }
+
+    #[test]
+    fn bitmap_and_ranks() {
+        let mut m = Membership::new(spec(1, 4, 4), 8, &[1, 3, 6]).unwrap();
+        assert_eq!(m.bitmap(), 0b0100_1010);
+        assert_eq!(bitmap_rank(m.bitmap(), 1), Some((0, 3)));
+        assert_eq!(bitmap_rank(m.bitmap(), 3), Some((1, 3)));
+        assert_eq!(bitmap_rank(m.bitmap(), 6), Some((2, 3)));
+        assert_eq!(bitmap_rank(m.bitmap(), 0), None);
+        assert_eq!(bitmap_rank(0, 70), None);
+        m.on_join(0);
+        m.tick();
+        assert_eq!(bitmap_rank(m.bitmap(), 1), Some((1, 4)), "ranks shift on growth");
+    }
+
+    #[test]
+    fn assignment_seed_is_static_at_epoch_zero_and_keyed_after() {
+        assert_eq!(assignment_seed(42, 0, 3), 42);
+        assert_ne!(assignment_seed(42, 1, 3), 42);
+        assert_eq!(assignment_seed(42, 5, 3), assignment_seed(42, 5, 3));
+        assert_ne!(assignment_seed(42, 5, 3), assignment_seed(42, 5, 4));
+        assert_ne!(assignment_seed(42, 5, 3), assignment_seed(42, 6, 3));
+    }
+
+    #[test]
+    fn worker_plan_spans_are_half_open() {
+        let p = WorkerMembership { admit_at: 4, epochs: vec![(0, 1), (3, u64::MAX)] };
+        assert!(p.wants(0));
+        assert!(!p.wants(1));
+        assert!(!p.wants(2));
+        assert!(p.wants(3));
+        assert!(p.wants(100));
+        assert_eq!(p.epoch_of(0), 0);
+        assert_eq!(p.epoch_of(3), 0);
+        assert_eq!(p.epoch_of(4), 1);
+        assert!(WorkerMembership::always(4).wants(7));
+    }
+}

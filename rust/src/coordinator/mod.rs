@@ -18,6 +18,11 @@
 //!   channels or real TCP sockets, optionally sharded) and threads
 //!   together for single-process runs; multi-process TCP deployment reuses
 //!   the same loops (cli::master_serve / worker_connect).
+//! * [`membership`] — elastic fleet membership: the epoch-phased
+//!   coordinator state machine (`WaitingForMembers → Warmup → Training →
+//!   Cooldown`) that admits and evicts workers at fleet-epoch boundaries,
+//!   with fresh per-worker chains and `(epoch, worker_id)`-keyed data
+//!   assignments on every admission (DESIGN.md §7).
 //!
 //! Deterministic-mode invariant (pinned by `tests/integration_tcp.rs`):
 //! with no faults injected, the same seeded run over the channel fabric
@@ -26,10 +31,14 @@
 
 pub mod launch;
 pub mod master;
+pub mod membership;
 pub mod shard;
 pub mod worker;
 
 pub use launch::{run_training, TrainReport};
 pub use master::{AggMode, MasterLoop};
+pub use membership::{
+    bitmap_rank, Membership, MembershipPlan, MembershipSpec, Phase, WorkerMembership,
+};
 pub use shard::ShardedMasterLoop;
 pub use worker::{WorkerLoop, WorkerSummary};

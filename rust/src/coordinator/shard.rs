@@ -53,6 +53,13 @@ impl ShardedMasterLoop {
             map.n_shards(),
             transports.len()
         );
+        // the per-shard engines below drive `run_engine` directly, which
+        // would silently ignore an elastic plan — refuse instead (also
+        // rejected earlier at config validation)
+        anyhow::ensure!(
+            spec.membership.is_none(),
+            "elastic membership is not supported with a sharded master"
+        );
         Ok(Self { spec, map, transports })
     }
 

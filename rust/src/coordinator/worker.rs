@@ -32,8 +32,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coding::Payload;
-use crate::comm::{Frame, PipelinedSender, WorkerTransport};
+use crate::comm::{Frame, PipelinedSender, WorkerTransport, SYNC_ROUND, SYNC_TAG};
 use crate::config::experiment::Backend;
+use crate::coordinator::membership::{bitmap_rank, WorkerMembership, MAX_FLEET};
 use crate::data::{Batch, Dataset, Shard};
 use crate::optim::LrSchedule;
 use crate::runtime::{CompressExec, ModelExec, Runtime};
@@ -73,6 +74,12 @@ pub struct WorkerSpec {
     pub pipelined: bool,
     /// Half-open round ranges [a, b) this worker sits out (churn injection).
     pub absent: Vec<(u64, u64)>,
+    /// Elastic fleet membership (`[membership]` config): which fleet epochs
+    /// this worker *seeks*. When set, the worker runs the elastic round
+    /// loop — the master's broadcast bitmap is authoritative for actual
+    /// membership; the plan only drives Join/Leave control frames. `None`
+    /// keeps the fixed-fleet loop untouched.
+    pub membership: Option<WorkerMembership>,
 }
 
 impl WorkerSpec {
@@ -92,6 +99,13 @@ pub trait GradSource {
     fn prefetch(&mut self, _round: u64) {}
 
     fn next_grad(&mut self, w: &[f32], round: u64) -> Result<(f64, Vec<f32>)>;
+
+    /// Elastic membership: re-key the data partition for a changed fleet —
+    /// this worker now holds partition position `rank` of `n_members`, as
+    /// of fleet epoch `fleet_epoch` (DESIGN.md §7). Sources without a
+    /// partition (injected closures) ignore it; [`Shard`]-backed sources
+    /// re-derive their `(epoch, worker_id)`-keyed assignment.
+    fn rekey(&mut self, _rank: usize, _n_members: usize, _fleet_epoch: u64) {}
 }
 
 impl<F> GradSource for F
@@ -121,6 +135,11 @@ impl GradSource for ModelSource {
     fn next_grad(&mut self, w: &[f32], _round: u64) -> Result<(f64, Vec<f32>)> {
         let batch = self.batch.take().context("model source: prefetch not called")?;
         self.model.fwdbwd(w, &batch)
+    }
+
+    fn rekey(&mut self, rank: usize, n_members: usize, fleet_epoch: u64) {
+        self.shard.rekey(rank, n_members, fleet_epoch);
+        self.batch = None; // any staged batch belongs to the old partition
     }
 }
 
@@ -243,6 +262,9 @@ fn run_rounds_inner<T: WorkerTransport>(
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
 ) -> Result<WorkerSummary> {
+    if spec.membership.is_some() {
+        return run_rounds_elastic(spec, transport, source, w, hlo);
+    }
     let d = w.len();
     let mut wscheme = spec.scheme.worker(d)?;
 
@@ -403,6 +425,227 @@ fn run_rounds_inner<T: WorkerTransport>(
     })
 }
 
+/// The elastic worker loop (`spec.membership` set): the fixed-fleet loop
+/// promoted to epoch-phased membership (DESIGN.md §7). Sends are inline
+/// only — membership transitions must observe broadcasts in lockstep with
+/// sends, and the double-buffered stage would let a round-t+1 frame ship
+/// before round t's sync broadcast has been folded into local state.
+///
+/// Per round `t` (from `start`, the round after this worker's first
+/// received broadcast):
+///
+/// * **member** — the normal paper round (gradient → pipeline → encode →
+///   send Update), except at the final round of the last sought epoch,
+///   where a zero-payload Leave replaces the Update (that round's
+///   contribution is forfeited; the master evicts at the boundary).
+/// * **non-member** — no gradient, no pipeline: send Join when the plan
+///   seeks the next epoch (the master parks us until its boundary tick),
+///   else Skip. The parameter vector is only tracked once a membership
+///   sync has been adopted (`w_valid`): delta broadcasts against an
+///   unknown base are ignored, which is safe precisely because
+///   non-members contribute nothing.
+/// * **broadcast handling** — [`SYNC_TAG`] broadcasts carry the absolute
+///   post-round parameters plus the member bitmap: adopt both. Plain
+///   broadcasts apply the usual `w -= η·r̃` delta. On a bitmap change the
+///   worker re-keys its data partition to its new `(rank, n_members)`
+///   position; on its own admission it additionally rebuilds the scheme
+///   chain from scratch — the worker half of the chain-reset contract
+///   (the master rebuilt its decode chain at the same tick).
+fn run_rounds_elastic<T: WorkerTransport>(
+    spec: &WorkerSpec,
+    transport: &mut T,
+    source: &mut dyn GradSource,
+    mut w: Vec<f32>,
+    hlo: Option<CompressExec>,
+) -> Result<WorkerSummary> {
+    let plan = spec.membership.as_ref().expect("dispatched on membership");
+    let wid = spec.worker_id;
+    anyhow::ensure!(
+        spec.absent.is_empty(),
+        "worker {wid}: elastic membership and churn injection are mutually exclusive"
+    );
+    anyhow::ensure!(plan.admit_at >= 1, "worker {wid}: [membership] admit_at must be >= 1");
+    anyhow::ensure!(
+        (wid as usize) < MAX_FLEET,
+        "worker {wid}: elastic membership supports worker ids below {MAX_FLEET}"
+    );
+    let bit = 1u64 << wid;
+    let d = w.len();
+    let mut wscheme = spec.scheme.worker(d)?;
+    let mut stage = SendStage::Inline;
+
+    let mut phases = PhaseTimes::new();
+    let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
+    let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    let mut update = vec![0.0f32; d];
+    let mut bframe = Frame::shutdown();
+    let mut skipped = 0u64;
+
+    // prologue: every elastic worker receives one broadcast before its
+    // first send — the pre-round-0 beacon at launch, or (for a connection
+    // joining mid-run) whatever broadcast first reaches it. That is what
+    // tells us the current member bitmap and our first round, and is the
+    // master's half of the no-deadlock roster contract.
+    let timer = Timer::start();
+    transport.recv_broadcast_into(&mut bframe)?;
+    phases.add("wait", timer.elapsed_secs());
+    let mut bitmap = bframe.payload_bits;
+    let mut member = bitmap & bit != 0;
+    let mut w_valid = false;
+    if bframe.payload_tag == SYNC_TAG {
+        bframe.broadcast_f32_into(&mut w)?;
+        w_valid = true;
+    }
+    let start = if bframe.round == SYNC_ROUND { 0 } else { bframe.round + 1 };
+    anyhow::ensure!(
+        !member || w_valid,
+        "worker {wid}: member per bitmap but first broadcast was not a membership sync"
+    );
+    if member {
+        if let Some((rank, n_members)) = bitmap_rank(bitmap, wid as usize) {
+            // no-op when (rank, n_members, epoch key) match the shard's
+            // static launch values — the static-fleet bypass path
+            source.rekey(rank, n_members, start / plan.admit_at);
+        }
+        if start < spec.steps {
+            source.prefetch(start);
+        }
+    }
+
+    for t in start..spec.steps {
+        let epoch = t / plan.admit_at;
+        let boundary = (t + 1) % plan.admit_at == 0;
+        let leaving = member && boundary && !plan.wants(epoch + 1);
+        if member && !leaving {
+            // 1. gradient (data prep untimed; the phase measures compute)
+            let timer = Timer::start();
+            let (loss, mut g) = source.next_grad(&w, t)?;
+            phases.add("gradient", timer.elapsed_secs());
+            anyhow::ensure!(g.len() == d, "worker {wid}: gradient dim mismatch");
+            if let Some(max_norm) = spec.clip_norm {
+                let norm = crate::tensor::norm2(&g) as f32;
+                if norm > max_norm {
+                    crate::tensor::scale(&mut g, max_norm / norm);
+                }
+            }
+            anyhow::ensure!(
+                loss.is_finite(),
+                "worker {wid}: loss diverged (non-finite) at round {t} — lower the \
+                 learning rate or add warmup"
+            );
+            losses.push(loss);
+
+            // 2. compression pipeline (Eq. (1))
+            let lr_ratio = lr_ratio(&spec.schedule, t);
+            let timer = Timer::start();
+            let stats = match &hlo {
+                Some(exec) => {
+                    let pipe = wscheme
+                        .as_pipeline_mut()
+                        .context("HLO backend needs a single-scheme pipeline")?;
+                    exec.step(pipe, &g, lr_ratio)?
+                }
+                None => wscheme.step(&g, lr_ratio),
+            };
+            phases.add("compress", timer.elapsed_secs());
+            e_mse_trace.push(stats.e_mse);
+            u_norm_trace.push(stats.u_norm_sq);
+
+            // 3. encode and ship
+            let timer = Timer::start();
+            let mut payload = Payload::empty();
+            wscheme.encode_into(t, &mut payload);
+            phases.add("encode", timer.elapsed_secs());
+            send_frame(
+                &mut stage,
+                transport,
+                &mut phases,
+                Frame::update(wid, t, payload, loss as f32),
+            )?;
+        } else {
+            // sitting this round out: a member announcing departure
+            // forfeits its final round's contribution; a non-member sends
+            // Join while it seeks the next epoch (the master parks the
+            // request until its boundary tick), else Skip
+            skipped += 1;
+            e_mse_trace.push(0.0);
+            u_norm_trace.push(0.0);
+            let frame = if member {
+                Frame::leave(wid, t)
+            } else if plan.wants(epoch + 1) {
+                Frame::join(wid, t)
+            } else {
+                Frame::skip(wid, t)
+            };
+            send_frame(&mut stage, transport, &mut phases, frame)?;
+        }
+
+        // 4. receive broadcast t: adopt a sync, apply a delta
+        let timer = Timer::start();
+        transport.recv_broadcast_into(&mut bframe)?;
+        phases.add("wait", timer.elapsed_secs());
+        anyhow::ensure!(
+            bframe.round == t,
+            "worker {wid}: broadcast skew: got {} during round {t}",
+            bframe.round
+        );
+        let timer = Timer::start();
+        let new_bitmap = bframe.payload_bits;
+        if bframe.payload_tag == SYNC_TAG {
+            bframe.broadcast_f32_into(&mut w)?;
+            w_valid = true;
+        } else if w_valid {
+            bframe.broadcast_f32_into(&mut update)?;
+            let lr = spec.schedule.lr_at(t);
+            for i in 0..d {
+                w[i] -= lr * update[i];
+            }
+        }
+        phases.add("apply", timer.elapsed_secs());
+
+        // membership transition (bitmap only changes at boundary syncs)
+        let was_member = member;
+        member = new_bitmap & bit != 0;
+        if member && !was_member {
+            anyhow::ensure!(
+                bframe.payload_tag == SYNC_TAG,
+                "worker {wid}: admitted outside a membership sync broadcast"
+            );
+            // chain-reset contract: our freshly built chain mirrors the
+            // master's rebuilt decode chain for us at this same boundary
+            wscheme = spec.scheme.worker(d)?;
+        }
+        if member && (new_bitmap != bitmap || !was_member) {
+            let (rank, n_members) = bitmap_rank(new_bitmap, wid as usize)
+                .expect("member bit verified above");
+            source.rekey(rank, n_members, (t + 1) / plan.admit_at);
+        }
+        bitmap = new_bitmap;
+        if member && t + 1 < spec.steps {
+            source.prefetch(t + 1);
+        }
+    }
+
+    let mean_tail = if losses.is_empty() {
+        0.0
+    } else {
+        let q = (losses.len() / 4).max(1);
+        let tail = &losses[losses.len() - q..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    Ok(WorkerSummary {
+        worker_id: wid,
+        rounds: spec.steps,
+        phases,
+        mean_loss_last_quarter: mean_tail,
+        e_mse_trace,
+        u_norm_trace,
+        skipped_rounds: skipped,
+        pipelined: false,
+    })
+}
+
 fn send_frame<T: WorkerTransport>(
     stage: &mut SendStage,
     transport: &mut T,
@@ -483,6 +726,7 @@ mod tests {
             clip_norm: None,
             pipelined: true,
             absent: vec![(2, 4), (7, 8)],
+            membership: None,
         };
         let absent: Vec<u64> = (0..10).filter(|&t| spec.is_absent(t)).collect();
         assert_eq!(absent, vec![2, 3, 7]);

@@ -5,7 +5,18 @@
 //! and each epoch reshuffles the *visit order* of the shard deterministically
 //! from (seed, epoch) — every worker sees only its shard, every sample is
 //! visited once per epoch.
+//!
+//! **Elastic membership** ([`crate::coordinator::membership`]): when the
+//! fleet grows or shrinks at a fleet-epoch boundary, [`Shard::rekey`]
+//! re-derives the partition from the worker's *member rank* — position
+//! among the current members — instead of its launch-time worker id, with
+//! the visit order re-keyed by `(seed, fleet_epoch, worker_id)` via
+//! [`assignment_seed`]. Identical `(epoch, seed, member-set)` inputs
+//! re-derive identical assignments on every replica (property-tested in
+//! `tests/prop_coordinator.rs`), and a rekey to the launch values is a
+//! no-op — the static-fleet bypass stays bit-identical.
 
+use crate::coordinator::membership::assignment_seed;
 use crate::util::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -16,6 +27,12 @@ pub struct Shard {
     pub batch: usize,
     seed: u64,
     epoch: u64,
+    /// Partition position: rank within the current member set. Launch
+    /// default `(worker, n_workers)`; moved by [`Self::rekey`].
+    rank: usize,
+    n_ranks: usize,
+    /// Fleet epoch of the last rekey (0 = the static launch partition).
+    fleet_epoch: u64,
     order: Vec<usize>,
     cursor: usize,
 }
@@ -31,6 +48,9 @@ impl Shard {
             batch,
             seed,
             epoch: 0,
+            rank: worker,
+            n_ranks: n_workers,
+            fleet_epoch: 0,
             order: Vec::new(),
             cursor: 0,
         };
@@ -38,14 +58,14 @@ impl Shard {
         s
     }
 
-    /// Samples owned by this worker.
+    /// Samples owned by this worker (its current partition position).
     pub fn shard_len(&self) -> usize {
         let d = self.dataset_len;
-        let (n, w) = (self.n_workers, self.worker);
+        let (n, r) = (self.n_ranks, self.rank);
         if d == 0 {
             0
         } else {
-            (d - w + n - 1) / n
+            (d - r + n - 1) / n
         }
     }
 
@@ -59,11 +79,32 @@ impl Shard {
         self.epoch
     }
 
+    /// Re-key the partition for a changed fleet: this worker now holds
+    /// position `rank` of `n_ranks` among the members, as of fleet epoch
+    /// `fleet_epoch`. The data epoch restarts and the visit order is
+    /// re-derived from `(seed, fleet_epoch, worker)` — deterministic given
+    /// identical inputs on every replica. Re-keying to the current values
+    /// (in particular the launch `(worker, n_workers, 0)`) is a no-op, so
+    /// an unchurned elastic run consumes the exact same sample sequence as
+    /// a static one.
+    pub fn rekey(&mut self, rank: usize, n_ranks: usize, fleet_epoch: u64) {
+        assert!(rank < n_ranks, "rank {rank} >= n_ranks {n_ranks}");
+        if rank == self.rank && n_ranks == self.n_ranks && fleet_epoch == self.fleet_epoch {
+            return;
+        }
+        self.rank = rank;
+        self.n_ranks = n_ranks;
+        self.fleet_epoch = fleet_epoch;
+        self.epoch = 0;
+        self.reshuffle();
+    }
+
     fn reshuffle(&mut self) {
         self.order = (0..self.shard_len())
-            .map(|j| self.worker + j * self.n_workers)
+            .map(|j| self.rank + j * self.n_ranks)
             .collect();
-        let mut rng = Pcg64::new(self.seed ^ (self.epoch.wrapping_mul(0x9E37)), self.worker as u64);
+        let base = assignment_seed(self.seed, self.fleet_epoch, self.worker);
+        let mut rng = Pcg64::new(base ^ (self.epoch.wrapping_mul(0x9E37)), self.worker as u64);
         rng.shuffle(&mut self.order);
         self.cursor = 0;
     }
@@ -140,5 +181,54 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(a.next_indices(), b.next_indices());
         }
+    }
+
+    #[test]
+    fn rekey_to_launch_values_is_a_noop() {
+        let mut a = Shard::new(2, 4, 100, 8, 11);
+        let mut b = Shard::new(2, 4, 100, 8, 11);
+        a.next_indices();
+        b.next_indices();
+        a.rekey(2, 4, 0); // launch values: the static-fleet bypass
+        for _ in 0..10 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
+    }
+
+    #[test]
+    fn rekeyed_ranks_partition_the_dataset() {
+        // fleet of 4 shrinks to members {1, 3}: ranks 0 and 1 of 2
+        let len = 57;
+        let mut seen = HashSet::new();
+        let mut total = 0;
+        for (rank, w) in [(0usize, 1usize), (1, 3)] {
+            let mut s = Shard::new(w, 4, len, 1, 9);
+            s.rekey(rank, 2, 1);
+            total += s.shard_len();
+            for j in 0..s.shard_len() {
+                assert!(seen.insert(rank + j * 2), "rank {rank} re-owns an index");
+            }
+        }
+        assert_eq!(total, len);
+        assert_eq!(seen.len(), len);
+    }
+
+    #[test]
+    fn rekey_is_deterministic_and_epoch_keyed() {
+        let mut a = Shard::new(1, 4, 80, 4, 5);
+        let mut b = Shard::new(1, 4, 80, 4, 5);
+        a.next_indices();
+        b.next_indices();
+        b.next_indices(); // replicas may be at different cursors
+        a.rekey(0, 2, 3);
+        b.rekey(0, 2, 3);
+        for _ in 0..8 {
+            assert_eq!(a.next_indices(), b.next_indices(), "identical (epoch, seed, member-set)");
+        }
+        // a different fleet epoch re-derives a different visit order
+        let mut c = Shard::new(1, 4, 80, 4, 5);
+        c.rekey(0, 2, 4);
+        a.rekey(0, 2, 3); // no-op: same key
+        assert_ne!(a.next_indices(), c.next_indices());
     }
 }

@@ -17,6 +17,7 @@ use anyhow::Result;
 use crate::config::{FabricSpec, ShardsSpec};
 use crate::coordinator::launch::build_run_fabric;
 use crate::coordinator::master::{MasterReport, MasterSpec};
+use crate::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
 use crate::coordinator::worker::{WorkerLoop, WorkerSpec};
 use crate::metrics::CsvWriter;
 use crate::optim::LrSchedule;
@@ -33,6 +34,37 @@ const SPEC_BLOCKWISE: &str = "blocks(emb=0.25:topk:k_frac=0.01/estk/ef/beta=0.9;
                               mlp=0.25:topk:k_frac=0.02/estk/ef/beta=0.9;\
                               head=0.25:sign)";
 
+/// Elastic-fleet scenario: the master's admission plan plus one
+/// membership-span plan per worker (see [`grow_scenario`] /
+/// [`shrink_scenario`]).
+#[derive(Clone)]
+struct ElasticScenario {
+    plan: MembershipPlan,
+    worker_plans: Vec<WorkerMembership>,
+}
+
+/// Fleet grows mid-run: the last worker starts outside the member set and
+/// is admitted at the epoch-1 boundary (fresh chains + re-keyed shard).
+fn grow_scenario(n: usize, admit_at: u64) -> ElasticScenario {
+    let spec = MembershipSpec { min_workers: 1, max_workers: n, admit_at };
+    let plan = MembershipPlan { spec, initial: (0..n - 1).collect() };
+    let mut worker_plans: Vec<WorkerMembership> =
+        (0..n).map(|_| WorkerMembership::always(admit_at)).collect();
+    worker_plans[n - 1] = WorkerMembership { admit_at, epochs: vec![(1, u64::MAX)] };
+    ElasticScenario { plan, worker_plans }
+}
+
+/// Fleet shrinks mid-run: the last worker leaves at the end of epoch 1
+/// (Leave frame replaces its final Update; evicted at the boundary).
+fn shrink_scenario(n: usize, admit_at: u64) -> ElasticScenario {
+    let spec = MembershipSpec { min_workers: 1, max_workers: n, admit_at };
+    let plan = MembershipPlan { spec, initial: (0..n).collect() };
+    let mut worker_plans: Vec<WorkerMembership> =
+        (0..n).map(|_| WorkerMembership::always(admit_at)).collect();
+    worker_plans[n - 1] = WorkerMembership { admit_at, epochs: vec![(0, 2)] };
+    ElasticScenario { plan, worker_plans }
+}
+
 /// Run one scenario: n synthetic workers + master (sharded when
 /// `shards > 1`) over the configured fabric. Returns the master report
 /// with fault counters merged in, plus wall seconds.
@@ -44,6 +76,7 @@ fn run_scenario(
     n: usize,
     steps: u64,
     seed: u64,
+    elastic: Option<&ElasticScenario>,
 ) -> Result<(MasterReport, f64)> {
     let scheme = Scheme::parse(spec)?;
     let schedule = LrSchedule::constant(0.05);
@@ -65,6 +98,7 @@ fn run_scenario(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            membership: elastic.map(|e| e.worker_plans[wid].clone()),
         };
         let mut rng = Pcg64::new(seed, 0xFAB + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> Result<(f64, Vec<f32>)> {
@@ -90,6 +124,7 @@ fn run_scenario(
         train_len: 64,
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
+        membership: elastic.map(|e| e.plan.clone()),
     };
     let mut report = master_side.run_headless(master_spec, d)?;
     for h in handles {
@@ -109,7 +144,13 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     let half = steps / 2;
 
     let clean = FabricSpec::default();
-    let tcp = FabricSpec { transport: crate::config::TransportKind::Tcp, ..clean.clone() };
+    // pin the threads engine explicitly: the fabric default flipped to the
+    // reactor, and this row is the matrix's threads-backend coverage
+    let tcp = FabricSpec {
+        transport: crate::config::TransportKind::Tcp,
+        io: crate::config::IoBackend::Threads,
+        ..clean.clone()
+    };
     // same TCP scenarios under the reactor master I/O engine (DESIGN.md §6)
     let tcp_reactor = FabricSpec { io: crate::config::IoBackend::Reactor, ..tcp.clone() };
     let straggler = FabricSpec {
@@ -129,21 +170,34 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         ..clean.clone()
     };
     let churny = FabricSpec { churn: vec![(n - 1, half / 2, half)], ..clean.clone() };
+    // elastic rows: fleet-epoch boundary every admit rounds (≥ 3 epochs in
+    // both smoke and full geometry)
+    let admit = (half / 2).max(1);
+    let grow = grow_scenario(n, admit);
+    let shrink = shrink_scenario(n, admit);
 
-    let scenarios: Vec<(&str, FabricSpec, &str, usize)> = vec![
-        ("clean/channel", clean.clone(), SPEC_SINGLE, 1),
-        ("clean/tcp", tcp.clone(), SPEC_SINGLE, 1),
-        ("clean/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1),
-        ("straggler/full-sync", straggler, SPEC_SINGLE, 1),
-        ("straggler/staleness=2", straggler_stale, SPEC_SINGLE, 1),
-        ("drop=0.2/retransmit", droppy, SPEC_SINGLE, 1),
-        ("churn/1-worker-out", churny, SPEC_SINGLE, 1),
+    type Row = (&'static str, FabricSpec, &'static str, usize, Option<ElasticScenario>);
+    let scenarios: Vec<Row> = vec![
+        ("clean/channel", clean.clone(), SPEC_SINGLE, 1, None),
+        ("clean/tcp", tcp.clone(), SPEC_SINGLE, 1, None),
+        ("clean/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1, None),
+        ("straggler/full-sync", straggler, SPEC_SINGLE, 1, None),
+        ("straggler/staleness=2", straggler_stale, SPEC_SINGLE, 1, None),
+        ("drop=0.2/retransmit", droppy, SPEC_SINGLE, 1, None),
+        ("churn/1-worker-out", churny, SPEC_SINGLE, 1, None),
+        // elastic membership (DESIGN.md §7): a worker admitted at the
+        // epoch-1 boundary / a worker leaving at the end of epoch 1, on
+        // both the channel fabric and the reactor TCP fabric
+        ("grow/+1@epoch1/channel", clean.clone(), SPEC_SINGLE, 1, Some(grow.clone())),
+        ("grow/+1@epoch1/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1, Some(grow)),
+        ("shrink/-1@epoch2/channel", clean.clone(), SPEC_SINGLE, 1, Some(shrink.clone())),
+        ("shrink/-1@epoch2/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1, Some(shrink)),
         // block-sharded master: the same blockwise run over 1 shard is the
         // bit-identity baseline for the 2/4-shard rows
-        ("blockwise/1-shard", clean.clone(), SPEC_BLOCKWISE, 1),
-        ("sharded/channel/shards=2", clean, SPEC_BLOCKWISE, 2),
-        ("sharded/tcp/shards=4", tcp, SPEC_BLOCKWISE, 4),
-        ("sharded/tcp-reactor/shards=4", tcp_reactor, SPEC_BLOCKWISE, 4),
+        ("blockwise/1-shard", clean.clone(), SPEC_BLOCKWISE, 1, None),
+        ("sharded/channel/shards=2", clean, SPEC_BLOCKWISE, 2, None),
+        ("sharded/tcp/shards=4", tcp, SPEC_BLOCKWISE, 4, None),
+        ("sharded/tcp-reactor/shards=4", tcp_reactor, SPEC_BLOCKWISE, 4, None),
     ];
 
     let path = format!("{}/fabric_matrix.csv", opts.out_dir);
@@ -157,8 +211,9 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         "{:<24} {:>10} {:>6} {:>6} {:>8} {:>10} {:>8} {:>8}",
         "scenario", "bits/comp", "msgs", "skips", "retrans", "staleness", "uncons", "wall_s"
     );
-    for (label, fabric, spec, shards) in scenarios {
-        let (report, wall) = run_scenario(&fabric, spec, shards, d, n, steps, opts.seed)?;
+    for (label, fabric, spec, shards, elastic) in scenarios {
+        let (report, wall) =
+            run_scenario(&fabric, spec, shards, d, n, steps, opts.seed, elastic.as_ref())?;
         let c = &report.comm;
         println!(
             "{:<24} {:>10.4} {:>6} {:>6} {:>8} {:>10.2} {:>8} {:>8.2}",

@@ -86,6 +86,13 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // master shard count (block→shard assignment stays in [shards])
         cfg.shards.count = v.parse().context("--shards")?;
     }
+    if let Some(v) = args.flag("membership")? {
+        // elastic fleet tokens, e.g. --membership min=2,max=4,admit=8
+        // (applied on top of any [membership] table in the config file)
+        let mut m = cfg.membership.take().unwrap_or_default();
+        m.apply_str(v).context("--membership")?;
+        cfg.membership = Some(m);
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -223,6 +230,7 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         train_len: cfg.train_len,
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
+        membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
     };
     let runtime = Runtime::new(manifest)?;
     let report = if cfg.shards.is_sharded() {
@@ -317,6 +325,7 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
         clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
         pipelined: cfg.fabric.pipelined,
         absent: cfg.fabric.absent_for(worker_id as usize),
+        membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
     };
     let shard = Shard::new(worker_id as usize, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
     let dataset = launch::build_dataset(entry.kind, &entry, &cfg);

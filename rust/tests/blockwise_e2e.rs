@@ -37,6 +37,7 @@ fn blockwise_scheme_end_to_end_over_channels() {
             clip_norm: None,
             pipelined: true,
             absent: vec![],
+            membership: None,
         };
         handles.push(std::thread::spawn(move || {
             let mut rng = Pcg64::seeded(100 + wid as u64);
@@ -62,6 +63,7 @@ fn blockwise_scheme_end_to_end_over_channels() {
         train_len: 64,
         data_noise: 1.0,
         aggregation: tempo::coordinator::AggMode::FullSync,
+        membership: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
 

@@ -35,6 +35,7 @@ fn run_fabric(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            membership: None,
         };
         let mut rng = Pcg64::new(seed, 7 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -60,6 +61,7 @@ fn run_fabric(
         train_len: 64,
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
+        membership: None,
     };
     let mut report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
@@ -197,6 +199,7 @@ fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
             clip_norm: None,
             pipelined: true,
             absent: Vec::new(),
+            membership: None,
         };
         let mut rng = Pcg64::new(seed, 40 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -226,6 +229,7 @@ fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
             max_staleness: 3,
             quorum: 2,
         },
+        membership: None,
     };
     let transports: Vec<Box<dyn MasterTransport>> = vec![Box::new(m0), Box::new(m1)];
     let report = ShardedMasterLoop::new(master_spec, map, transports)

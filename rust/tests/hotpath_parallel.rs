@@ -62,6 +62,10 @@ fn encode_into_matches_encode_for_all_scheme_kinds() {
 /// Full multi-worker round loop over the channel fabric at a pinned master
 /// thread count; returns the bit pattern of final_w.
 fn run_master_fleet(d: usize, n: usize, steps: u64, threads: usize) -> Vec<u32> {
+    run_master_fleet_agg(d, n, steps, threads, AggMode::FullSync)
+}
+
+fn run_master_fleet_agg(d: usize, n: usize, steps: u64, threads: usize, agg: AggMode) -> Vec<u32> {
     let _guard = override_threads(threads);
     let scheme = Scheme::parse(SPEC_BLOCKWISE).unwrap();
     let schedule = LrSchedule::constant(0.05);
@@ -79,6 +83,7 @@ fn run_master_fleet(d: usize, n: usize, steps: u64, threads: usize) -> Vec<u32> 
             clip_norm: None,
             pipelined: true,
             absent: Vec::new(),
+            membership: None,
         };
         let mut rng = Pcg64::new(11, 100 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -103,7 +108,8 @@ fn run_master_fleet(d: usize, n: usize, steps: u64, threads: usize) -> Vec<u32> 
         samples_per_round: n,
         train_len: 64,
         data_noise: 1.0,
-        aggregation: AggMode::FullSync,
+        aggregation: agg,
+        membership: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     for h in handles {
@@ -121,5 +127,22 @@ fn master_aggregation_is_bit_identical_across_thread_counts() {
     for threads in [2usize, 8] {
         let got = run_master_fleet(d, n, steps, threads);
         assert_eq!(got, reference, "threads={threads}: final_w must be bit-identical");
+    }
+}
+
+#[test]
+fn staleness_path_decode_is_bit_identical_across_thread_counts() {
+    // the bounded-staleness batch decode (per-worker FIFO batches decoded
+    // in parallel, folded sequentially in worker-id order). quorum = n over
+    // the lockstep channel fabric makes the fold set deterministic — each
+    // round batches exactly one update per worker — so the pin isolates the
+    // parallel decode itself
+    let (d, n, steps) = (6000usize, 3usize, 6u64);
+    let agg = AggMode::BoundedStaleness { max_staleness: 2, quorum: n };
+    let reference = run_master_fleet_agg(d, n, steps, 1, agg);
+    assert!(reference.iter().any(|&b| b != 0), "run must make progress");
+    for threads in [2usize, 8] {
+        let got = run_master_fleet_agg(d, n, steps, threads, agg);
+        assert_eq!(got, reference, "threads={threads}: staleness final_w must be bit-identical");
     }
 }

@@ -49,6 +49,7 @@ fn run_synthetic(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            membership: None,
         };
         let mut rng = Pcg64::new(seed, 1000 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -75,6 +76,7 @@ fn run_synthetic(
         train_len: 64,
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
+        membership: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
@@ -135,7 +137,13 @@ fn no_fault_tcp_is_bit_identical_to_channel() {
 #[test]
 fn reactor_io_backend_is_bit_identical_to_threads() {
     let (d, n, steps, seed) = (600usize, 4usize, 10u64, 7u64);
-    let threads = FabricSpec { transport: TransportKind::Tcp, ..Default::default() };
+    // the default io flipped to the reactor — pin threads explicitly so
+    // this stays a cross-backend comparison
+    let threads = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Threads,
+        ..Default::default()
+    };
     let reactor = FabricSpec {
         transport: TransportKind::Tcp,
         io: IoBackend::Reactor,
@@ -203,8 +211,10 @@ fn pipelined_and_inline_sends_are_bit_identical() {
 
 #[test]
 fn bounded_staleness_over_tcp_completes_with_a_straggler() {
+    // threads-backend variant (the reactor one is pinned above)
     let fabric = FabricSpec {
         transport: TransportKind::Tcp,
+        io: IoBackend::Threads,
         max_staleness: 3,
         quorum: 1,
         straggler_ms: vec![(1, 3.0)],
@@ -262,6 +272,7 @@ fn tcp_training_round_trip_with_pjrt_models() {
             clip_norm: None,
             pipelined: true,
             absent: vec![],
+            membership: None,
         };
         let manifest = manifest.clone();
         let entry = entry.clone();
@@ -286,6 +297,7 @@ fn tcp_training_round_trip_with_pjrt_models() {
         train_len: 512,
         data_noise: 4.0,
         aggregation: AggMode::FullSync,
+        membership: None,
     };
     let transport = TcpMaster::from_listener(listener, n_workers).unwrap();
     let runtime = Runtime::new(manifest).unwrap();

@@ -1,0 +1,371 @@
+//! Elastic fleet membership end-to-end (ISSUE 6 acceptance, DESIGN.md §7).
+//!
+//! * **Static-fleet bypass** — a `[membership]` block with
+//!   `min == max == fleet` and every worker seeking every epoch must be
+//!   bit-identical to the same run with membership unset: final_w f32 bit
+//!   patterns, CommStats (messages / total_bits / skips) and per-worker
+//!   StepStats traces (f64 bit patterns). Pinned over the channel fabric
+//!   and over 4-worker TCP under BOTH I/O backends.
+//! * **Elasticity** — a churn schedule (one worker joins at an epoch
+//!   boundary, one leaves and returns) completes on the channel fabric and
+//!   over TCP/reactor, is bit-identical across those fabrics, and replaying
+//!   the identical schedule is bit-identical.
+//! * **Chain reset** — a white-box replay of the whole run at the scheme
+//!   level proves the admitted worker's chains were rebuilt on BOTH sides:
+//!   the engine's final_w matches the replay with fresh
+//!   `scheme.worker(d)`/`scheme.master(d)` chains at the admission
+//!   boundary, the readmitted worker's decoded r̃ differs bitwise from a
+//!   continuation of the pre-leave chain, and a continued-chain replay does
+//!   NOT match the engine.
+//!
+//! Gradient streams are pure in `(seed, worker, round)` — independent of
+//! how many times the source was called — which is what lets the replay
+//! reproduce a worker's post-admission gradients exactly.
+
+use tempo::config::experiment::Backend;
+use tempo::config::{FabricSpec, IoBackend, TransportKind};
+use tempo::coordinator::launch::build_fabric;
+use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
+use tempo::coordinator::worker::{lr_ratio, WorkerLoop, WorkerSpec, WorkerSummary};
+use tempo::optim::LrSchedule;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+const SPEC: &str = "topk:k=12/estk/ef/beta=0.9";
+
+/// Gradient for (seed, worker, round) — a pure function of its arguments,
+/// so an in-test replay sees the exact stream the live worker saw.
+fn grad_at(seed: u64, wid: usize, t: u64, d: usize) -> Vec<f32> {
+    let mut g = vec![0.0f32; d];
+    let mut rng = Pcg64::new(seed ^ (0xA5A5 + wid as u64), 7700 + t);
+    rng.fill_gaussian(&mut g, 1.0);
+    g
+}
+
+/// One elastic scenario: the master's plan plus one membership plan per
+/// worker slot.
+struct ElasticPlan {
+    plan: MembershipPlan,
+    workers: Vec<WorkerMembership>,
+}
+
+/// `min == max == fleet`, everyone seeks every epoch: the bypass case.
+fn static_plan(n: usize, admit_at: u64) -> ElasticPlan {
+    ElasticPlan {
+        plan: MembershipPlan {
+            spec: MembershipSpec { min_workers: n, max_workers: n, admit_at },
+            initial: (0..n).collect(),
+        },
+        workers: (0..n).map(|_| WorkerMembership::always(admit_at)).collect(),
+    }
+}
+
+/// 4 slots: workers 0/1 always members, worker 2 leaves at the end of
+/// epoch 1 and returns for epoch 3, worker 3 joins at the epoch-1 boundary.
+fn churn_plan(admit_at: u64) -> ElasticPlan {
+    ElasticPlan {
+        plan: MembershipPlan {
+            spec: MembershipSpec { min_workers: 2, max_workers: 4, admit_at },
+            initial: vec![0, 1, 2],
+        },
+        workers: vec![
+            WorkerMembership::always(admit_at),
+            WorkerMembership::always(admit_at),
+            WorkerMembership { admit_at, epochs: vec![(0, 2), (3, u64::MAX)] },
+            WorkerMembership { admit_at, epochs: vec![(1, u64::MAX)] },
+        ],
+    }
+}
+
+/// Deterministic synthetic run over the given fabric, optionally through
+/// the elastic membership engine.
+fn run_synthetic(
+    fabric: &FabricSpec,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+    elastic: Option<&ElasticPlan>,
+) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let (master_tx, workers_tx, _fault_stats) = build_fabric(fabric, n).unwrap();
+
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: fabric.pipelined,
+            absent: vec![],
+            membership: elastic.map(|e| e.workers[wid].clone()),
+        };
+        let source = move |_w: &[f32], t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            Ok((1.0, grad_at(seed, wid, t, d)))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: AggMode::FullSync,
+        membership: elastic.map(|e| e.plan.clone()),
+    };
+    let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
+    let mut summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    (report, summaries)
+}
+
+fn w_bits(report: &MasterReport) -> Vec<u32> {
+    report.final_w.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bit-level equality of everything the acceptance criteria name: final_w
+/// f32 bits, CommStats counters, per-worker StepStats traces.
+fn assert_bit_identical(
+    a: &(MasterReport, Vec<WorkerSummary>),
+    b: &(MasterReport, Vec<WorkerSummary>),
+    label: &str,
+) {
+    assert_eq!(w_bits(&a.0), w_bits(&b.0), "{label}: final_w bits diverged");
+    assert_eq!(a.0.comm.messages(), b.0.comm.messages(), "{label}: messages");
+    assert_eq!(a.0.comm.total_bits(), b.0.comm.total_bits(), "{label}: total_bits");
+    assert_eq!(a.0.comm.skips(), b.0.comm.skips(), "{label}: skips");
+    for (x, y) in a.1.iter().zip(&b.1) {
+        assert_eq!(x.worker_id, y.worker_id);
+        assert_eq!(x.skipped_rounds, y.skipped_rounds, "{label}: worker {}", x.worker_id);
+        let ex: Vec<u64> = x.e_mse_trace.iter().map(|v| v.to_bits()).collect();
+        let ey: Vec<u64> = y.e_mse_trace.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ex, ey, "{label}: worker {} e_mse trace diverged", x.worker_id);
+        let ux: Vec<u64> = x.u_norm_trace.iter().map(|v| v.to_bits()).collect();
+        let uy: Vec<u64> = y.u_norm_trace.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ux, uy, "{label}: worker {} u_norm trace diverged", x.worker_id);
+    }
+}
+
+#[test]
+fn static_fleet_bypass_is_bit_identical_on_channel() {
+    let (d, n, steps, seed) = (400usize, 3usize, 12u64, 21u64);
+    let fabric = FabricSpec::default();
+    let fixed = run_synthetic(&fabric, d, n, steps, seed, None);
+    let plan = static_plan(n, 4);
+    let elastic = run_synthetic(&fabric, d, n, steps, seed, Some(&plan));
+    assert_eq!(elastic.0.comm.skips(), 0, "static elastic fleet must emit no control frames");
+    assert_bit_identical(&fixed, &elastic, "channel static bypass");
+}
+
+#[test]
+fn static_fleet_bypass_is_bit_identical_over_tcp_on_both_io_backends() {
+    let (d, n, steps, seed) = (400usize, 4usize, 8u64, 7u64);
+    for io in [IoBackend::Threads, IoBackend::Reactor] {
+        let fabric = FabricSpec { transport: TransportKind::Tcp, io, ..Default::default() };
+        let fixed = run_synthetic(&fabric, d, n, steps, seed, None);
+        let plan = static_plan(n, 4);
+        let elastic = run_synthetic(&fabric, d, n, steps, seed, Some(&plan));
+        assert_eq!(elastic.0.comm.skips(), 0, "{io:?}: static fleet emitted control frames");
+        assert_bit_identical(&fixed, &elastic, &format!("tcp/{io:?} static bypass"));
+    }
+}
+
+/// Churn e2e: one late joiner (admitted at the epoch-1 boundary) and one
+/// leave-and-return, over the channel fabric, TCP/threads and TCP/reactor.
+/// All three fabrics are bit-identical, and replaying the identical
+/// schedule on the reactor is bit-identical.
+#[test]
+fn elastic_churn_completes_and_replays_bit_identically_across_fabrics() {
+    let (d, n, steps, admit_at, seed) = (300usize, 4usize, 15u64, 3u64, 9u64);
+    let plan = churn_plan(admit_at);
+
+    let channel = run_synthetic(&FabricSpec::default(), d, n, steps, seed, Some(&plan));
+    let tcp_threads = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Threads,
+        ..Default::default()
+    };
+    let threads = run_synthetic(&tcp_threads, d, n, steps, seed, Some(&plan));
+    let tcp_reactor = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Reactor,
+        ..Default::default()
+    };
+    let reactor = run_synthetic(&tcp_reactor, d, n, steps, seed, Some(&plan));
+
+    // every worker runs the full round count; sit-outs are exactly the
+    // schedule: worker 3 sits out epoch 0 (3 Joins), worker 2 forfeits its
+    // Leave round and sits out epoch 2 (1 + 3)
+    for (report, summaries) in [&channel, &threads, &reactor] {
+        for s in summaries.iter() {
+            assert_eq!(s.rounds, steps, "worker {} did not complete", s.worker_id);
+        }
+        assert_eq!(summaries[0].skipped_rounds, 0);
+        assert_eq!(summaries[1].skipped_rounds, 0);
+        assert_eq!(summaries[2].skipped_rounds, 1 + admit_at);
+        assert_eq!(summaries[3].skipped_rounds, admit_at);
+        let expected_skips = (1 + admit_at) + admit_at;
+        assert_eq!(report.comm.skips(), expected_skips);
+        assert_eq!(report.comm.messages(), steps * n as u64 - expected_skips);
+        assert!(report.final_w_norm > 0.0);
+    }
+
+    assert_bit_identical(&channel, &threads, "churn channel vs tcp/threads");
+    assert_bit_identical(&channel, &reactor, "churn channel vs tcp/reactor");
+    let replay = run_synthetic(&tcp_reactor, d, n, steps, seed, Some(&plan));
+    assert_bit_identical(&reactor, &replay, "churn replay on tcp/reactor");
+}
+
+/// What the white-box replay of the 2-worker leave-and-return run produces:
+/// the master parameter bits, worker 1's full e_mse trace, and worker 1's
+/// decoded r̃ bits at its first readmitted round.
+struct Replay {
+    final_w_bits: Vec<u32>,
+    w1_e_mse: Vec<f64>,
+    w1_readmit_rtilde_bits: Vec<u32>,
+}
+
+/// Scheme-level replay of the elastic FullSync engine for the 2-worker
+/// leave-and-return schedule (worker 1 seeks epochs [0,2) and [3,∞),
+/// admit_at = 3): identical fold order, scale and LR application. With
+/// `reset_on_admission` the chains for worker 1 are rebuilt at the
+/// admission boundary exactly as the engine and the worker loop do; without
+/// it the pre-leave chains continue — the behavior the chain-reset contract
+/// rules out.
+fn replay_leave_and_return(
+    d: usize,
+    steps: u64,
+    admit_at: u64,
+    seed: u64,
+    reset_on_admission: bool,
+) -> Replay {
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let leave_round = 2 * admit_at - 1;
+    let readmit_round = 3 * admit_at;
+    // worker 1 computes while a member (its Leave round is forfeited)
+    let computes = |wid: usize, t: u64| -> bool {
+        wid == 0 || t < leave_round || t >= readmit_round
+    };
+
+    let mut w = vec![0.0f32; d];
+    let mut workers = vec![scheme.worker(d).unwrap(), scheme.worker(d).unwrap()];
+    let mut masters = vec![scheme.master(d).unwrap(), scheme.master(d).unwrap()];
+    let mut rtilde = vec![vec![0.0f32; d], vec![0.0f32; d]];
+    let mut agg = vec![0.0f32; d];
+    let mut w1_e_mse = Vec::with_capacity(steps as usize);
+    let mut w1_readmit_rtilde_bits = Vec::new();
+
+    for t in 0..steps {
+        agg.iter_mut().for_each(|x| *x = 0.0);
+        let contributors = (0..2).filter(|&wid| computes(wid, t)).count();
+        let scale = 1.0 / contributors as f32;
+        for wid in 0..2usize {
+            if !computes(wid, t) {
+                if wid == 1 {
+                    w1_e_mse.push(0.0);
+                }
+                continue;
+            }
+            let g = grad_at(seed, wid, t, d);
+            let stats = workers[wid].step(&g, lr_ratio(&schedule, t));
+            if wid == 1 {
+                w1_e_mse.push(stats.e_mse);
+            }
+            let payload = workers[wid].encode(t);
+            masters[wid].receive(&payload, t, &mut rtilde[wid]).unwrap();
+            if wid == 1 && t == readmit_round {
+                w1_readmit_rtilde_bits = rtilde[1].iter().map(|x| x.to_bits()).collect();
+            }
+            let rt = &rtilde[wid];
+            for i in 0..d {
+                agg[i] += scale * rt[i];
+            }
+        }
+        let lr = schedule.lr_at(t);
+        for i in 0..d {
+            w[i] -= lr * agg[i];
+        }
+        // the boundary tick after round 3·admit_at − 1 readmits worker 1:
+        // the engine rebuilds its decode chain, the worker its encode chain
+        if reset_on_admission && t + 1 == readmit_round {
+            workers[1] = scheme.worker(d).unwrap();
+            masters[1] = scheme.master(d).unwrap();
+        }
+    }
+
+    Replay {
+        final_w_bits: w.iter().map(|x| x.to_bits()).collect(),
+        w1_e_mse,
+        w1_readmit_rtilde_bits,
+    }
+}
+
+/// The chain-reset contract, asserted on r̃ (DESIGN.md §7): after its
+/// leave-and-return, worker 1's first decoded r̃ — and everything
+/// downstream of it — matches freshly built worker/master chains fed the
+/// same gradient stream, and does NOT match a continuation of the
+/// pre-leave chains.
+#[test]
+fn admitted_chains_are_reset_on_both_sides() {
+    let (d, steps, admit_at, seed) = (300usize, 12u64, 3u64, 33u64);
+    let plan = ElasticPlan {
+        plan: MembershipPlan {
+            spec: MembershipSpec { min_workers: 1, max_workers: 2, admit_at },
+            initial: vec![0, 1],
+        },
+        workers: vec![
+            WorkerMembership::always(admit_at),
+            WorkerMembership { admit_at, epochs: vec![(0, 2), (3, u64::MAX)] },
+        ],
+    };
+    let fabric = FabricSpec::default();
+    let (report, summaries) = run_synthetic(&fabric, d, 2, steps, seed, Some(&plan));
+    // 1 forfeited Leave round + admit_at Join rounds
+    assert_eq!(summaries[1].skipped_rounds, 1 + admit_at);
+    assert_eq!(report.comm.skips(), 1 + admit_at);
+
+    let fresh = replay_leave_and_return(d, steps, admit_at, seed, true);
+    let continued = replay_leave_and_return(d, steps, admit_at, seed, false);
+
+    // the engine matches the fresh-chain replay bit for bit — on the
+    // master parameters (which fold the master-side r̃ of every round) and
+    // on the worker's own compression-error trace
+    assert_eq!(w_bits(&report), fresh.final_w_bits, "engine != fresh-chain replay");
+    let trace_bits: Vec<u64> = summaries[1].e_mse_trace.iter().map(|v| v.to_bits()).collect();
+    let fresh_bits: Vec<u64> = fresh.w1_e_mse.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(trace_bits, fresh_bits, "worker 1 e_mse trace != fresh-chain replay");
+
+    // and the distinction is observable: continuing the pre-leave chains
+    // yields a DIFFERENT r̃ at the readmission round and different final
+    // parameters — so the equalities above really do pin the reset
+    assert_ne!(
+        fresh.w1_readmit_rtilde_bits,
+        continued.w1_readmit_rtilde_bits,
+        "readmitted r̃ should differ between fresh and continued chains"
+    );
+    assert_ne!(
+        w_bits(&report),
+        continued.final_w_bits,
+        "engine matched the continued-chain replay — chains were not reset"
+    );
+}

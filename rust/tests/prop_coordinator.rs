@@ -1,12 +1,15 @@
 //! Property tests over the coordinator-side invariants (no PJRT needed):
 //! payload round trips, aggregation algebra, predictor sync, EF accounting,
-//! frame wire format. Uses the in-repo prop framework (testing::prop).
+//! frame wire format, and the elastic-membership state machine (DESIGN.md
+//! §7). Uses the in-repo prop framework (testing::prop).
 
 use tempo::coding::{decode_payload, encode_payload};
 use tempo::comm::Frame;
 use tempo::compress::{
     MasterChain, Predictor, PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline,
 };
+use tempo::coordinator::membership::{bitmap_rank, Membership, MembershipSpec, Phase};
+use tempo::data::Shard;
 use tempo::testing::prop::{check, PropConfig};
 
 fn cfgp(cases: u32) -> PropConfig {
@@ -180,6 +183,153 @@ fn prop_frame_wire_roundtrip() {
             || back.loss.to_bits() != f.loss.to_bits()
         {
             return Err("frame roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_membership_mutates_only_at_ticks_and_stays_bounded() {
+    // arbitrary join/leave/timeout sequences (including ids outside the
+    // fabric): the member set never changes mid-epoch, every tick advances
+    // exactly one epoch with a consistent diff, the fleet never exceeds
+    // max_workers, and the phase always reflects the min-quorum
+    check(cfgp(60), |g| {
+        let slots = g.usize_in(1, 16);
+        let max = g.usize_in(1, slots);
+        let min = g.usize_in(1, max);
+        let admit_at = g.usize_in(1, 8) as u64;
+        let spec = MembershipSpec { min_workers: min, max_workers: max, admit_at };
+        let initial: Vec<usize> = (0..g.usize_in(0, max)).collect();
+        let mut m = Membership::new(spec, slots, &initial).map_err(|e| e.to_string())?;
+        for _boundary in 0..g.usize_in(1, 12) {
+            let before = m.members();
+            for _ in 0..g.usize_in(0, 6) {
+                let wid = g.usize_in(0, slots + 2);
+                match g.usize_in(0, 2) {
+                    0 => m.on_join(wid),
+                    1 => m.on_leave(wid),
+                    _ => m.on_timeout(wid),
+                }
+            }
+            if m.members() != before {
+                return Err("member set mutated outside tick()".into());
+            }
+            let epoch_before = m.epoch();
+            let diff = m.tick();
+            if diff.epoch != epoch_before + 1 || m.epoch() != diff.epoch {
+                return Err("tick must advance exactly one epoch".into());
+            }
+            if m.n_members() > max {
+                return Err(format!("{} members exceeds max_workers {max}", m.n_members()));
+            }
+            for w in &diff.admitted {
+                if !m.is_member(*w) || before.contains(w) {
+                    return Err(format!("admitted {w} inconsistent with the member set"));
+                }
+            }
+            for w in &diff.evicted {
+                if m.is_member(*w) || !before.contains(w) {
+                    return Err(format!("evicted {w} inconsistent with the member set"));
+                }
+            }
+            let phase_ok = match m.phase() {
+                Phase::Cooldown => m.n_members() < min,
+                Phase::Training => m.n_members() >= min,
+                _ => false,
+            };
+            if !phase_ok {
+                return Err(format!(
+                    "phase {:?} with {}/{min} members after a tick",
+                    m.phase(),
+                    m.n_members()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_membership_regrows_to_training_after_total_eviction() {
+    // liveness: losing the whole fleet parks the machine in Cooldown, and
+    // re-joining a min-quorum returns it to Training at the next boundary —
+    // no event order can wedge it
+    check(cfgp(40), |g| {
+        let slots = g.usize_in(2, 16);
+        let max = g.usize_in(2, slots);
+        let min = g.usize_in(1, max);
+        let admit_at = g.usize_in(1, 4) as u64;
+        let spec = MembershipSpec { min_workers: min, max_workers: max, admit_at };
+        let initial: Vec<usize> = (0..min).collect();
+        let mut m = Membership::new(spec, slots, &initial).map_err(|e| e.to_string())?;
+        for w in m.members() {
+            m.on_timeout(w);
+        }
+        m.tick();
+        if m.n_members() != 0 || m.phase() != Phase::Cooldown {
+            return Err("total eviction must leave an empty Cooldown fleet".into());
+        }
+        for w in 0..min {
+            m.on_join(w);
+        }
+        let d = m.tick();
+        if d.admitted.len() != min || m.phase() != Phase::Training {
+            return Err(format!("re-grown fleet stuck in {:?}", m.phase()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rekeyed_assignments_are_deterministic_and_partition_the_data() {
+    // data-assignment determinism across replicas: identical
+    // (epoch, seed, member-set) inputs re-derive identical shard visit
+    // orders regardless of replica history, and the member ranks still
+    // partition the dataset disjointly and completely
+    check(cfgp(40), |g| {
+        let slots = g.usize_in(1, 12);
+        let len = g.usize_in(slots, 200);
+        let fleet_epoch = 1 + g.u64() % 50;
+        let seed = g.u64();
+        let mut bitmap = 0u64;
+        for w in 0..slots {
+            if g.bool() {
+                bitmap |= 1 << w;
+            }
+        }
+        if bitmap == 0 {
+            bitmap = 1;
+        }
+        let n_members = bitmap.count_ones() as usize;
+        let mut seen = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for w in 0..slots {
+            let Some((rank, n)) = bitmap_rank(bitmap, w) else { continue };
+            if n != n_members {
+                return Err("bitmap_rank member count mismatch".into());
+            }
+            let mut a = Shard::new(w, slots, len, 1, seed);
+            let mut b = Shard::new(w, slots, len, 1, seed);
+            b.next_indices(); // replicas may sit at different cursors
+            a.rekey(rank, n, fleet_epoch);
+            b.rekey(rank, n, fleet_epoch);
+            for _ in 0..4 {
+                if a.next_indices() != b.next_indices() {
+                    return Err(format!(
+                        "worker {w}: identical (epoch, seed, member-set) diverged"
+                    ));
+                }
+            }
+            total += a.shard_len();
+            for j in 0..a.shard_len() {
+                if !seen.insert(rank + j * n) {
+                    return Err(format!("rank {rank} re-owns index {}", rank + j * n));
+                }
+            }
+        }
+        if total != len || seen.len() != len {
+            return Err(format!("rekeyed ranks cover {total}/{len} samples"));
         }
         Ok(())
     });

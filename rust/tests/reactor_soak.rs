@@ -11,6 +11,12 @@
 //!   level, and to baseline after teardown;
 //! * **bounded broadcast queues** throughout.
 //!
+//! The elastic soak below (ISSUE 6, DESIGN.md §7) drives the same 64-slot
+//! reactor through the epoch-phased membership engine: a 48-worker partial
+//! rendezvous, 16 late dialers admitted at epoch boundaries 2/3, a shrink
+//! below the min-quorum (Cooldown) and a re-grow — still zero added master
+//! threads and no FD leak.
+//!
 //! Thread/FD introspection reads /proc and is skipped (functional soak
 //! still runs) on non-Linux hosts.
 
@@ -131,6 +137,176 @@ fn sixty_four_worker_soak_has_o1_master_threads_and_no_fd_leak() {
         assert!(
             end <= base + 4,
             "FDs leaked across the whole soak: baseline {base}, after teardown {end}"
+        );
+    }
+}
+
+#[test]
+fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
+    use tempo::config::experiment::Backend;
+    use tempo::coordinator::master::{AggMode, MasterLoop, MasterSpec};
+    use tempo::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
+    use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+    use tempo::optim::LrSchedule;
+    use tempo::scheme::Scheme;
+    use tempo::util::Pcg64;
+
+    const N: usize = 64;
+    const INITIAL: usize = 48;
+    const LEAVERS: usize = 24;
+    const MIN: usize = 44; // 64 - 24 = 40 < 44: the shrink dips below quorum
+    const ADMIT: u64 = 4;
+    const STEPS: u64 = 7 * ADMIT; // epochs 0..=6
+    const QUEUE_BOUND: usize = 16;
+    let d = 256usize;
+    let seed = 17u64;
+
+    let scheme = Scheme::parse("topk:k=8/estk/ef/beta=0.9").unwrap();
+    let schedule = LrSchedule::constant(0.05);
+
+    let fd_base = fd_count();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // per-worker membership plans:
+    //   0..24   leave at the end of epoch 4, re-join for epoch 6
+    //   24..48  members throughout
+    //   48..64  dial in after the rendezvous, seeking epochs 2.. / 3..
+    let worker_plan = |wid: usize| -> WorkerMembership {
+        if wid < LEAVERS {
+            WorkerMembership { admit_at: ADMIT, epochs: vec![(0, 5), (6, u64::MAX)] }
+        } else if wid < INITIAL {
+            WorkerMembership::always(ADMIT)
+        } else if wid < INITIAL + 8 {
+            WorkerMembership { admit_at: ADMIT, epochs: vec![(2, u64::MAX)] }
+        } else {
+            WorkerMembership { admit_at: ADMIT, epochs: vec![(3, u64::MAX)] }
+        }
+    };
+    let spawn_worker = |wid: usize, scheme: Scheme| {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme,
+            backend: Backend::Rust,
+            schedule,
+            steps: STEPS,
+            seed,
+            clip_norm: None,
+            pipelined: false,
+            absent: vec![],
+            membership: Some(worker_plan(wid)),
+        };
+        let mut rng = Pcg64::new(seed, 0x50A4 + wid as u64);
+        let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        std::thread::spawn(move || {
+            let transport = TcpWorker::connect(addr, wid as u32).unwrap();
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        })
+    };
+
+    // the epoch-0 fleet dials first; the partial rendezvous waits for
+    // exactly these 48, so every initial member is connected before the
+    // pre-round-0 sync beacon (late joiners enter via later broadcasts)
+    let mut handles: Vec<_> = (0..INITIAL).map(|wid| spawn_worker(wid, scheme.clone())).collect();
+
+    let threads_before = thread_count();
+    let mut master =
+        tempo::comm::ReactorMaster::from_listener_partial(listener, N, INITIAL, QUEUE_BOUND)
+            .unwrap();
+    let threads_with = thread_count();
+    if let (Some(before), Some(with)) = (threads_before, threads_with) {
+        assert!(
+            with <= before + 1,
+            "elastic reactor master grew the thread count {before} -> {with} (must be O(1))"
+        );
+    }
+
+    // the remaining 16 dial in now — outside the rendezvous. Pump the
+    // reactor (no worker sends before its first broadcast, so nothing can
+    // be consumed here) until all 64 handshakes are registered: admission
+    // timing stays deterministic without a wall-clock race on the run
+    for wid in INITIAL..N {
+        handles.push(spawn_worker(wid, scheme.clone()));
+    }
+    for wid in INITIAL..N {
+        while !master.has_joined(wid) {
+            assert!(master.try_recv_any().unwrap().is_none(), "worker sent before a broadcast");
+        }
+    }
+
+    let plan = MembershipPlan {
+        spec: MembershipSpec { min_workers: MIN, max_workers: N, admit_at: ADMIT },
+        initial: (0..INITIAL).collect(),
+    };
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps: STEPS,
+        eval_every: STEPS,
+        eval_batches: 1,
+        seed,
+        samples_per_round: N,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: AggMode::FullSync,
+        membership: Some(plan),
+    };
+    let report = MasterLoop::new(master_spec, master).run_headless(d).unwrap();
+
+    let mut summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    assert_eq!(summaries.len(), N);
+    for s in &summaries {
+        assert_eq!(s.rounds, STEPS, "worker {} did not complete the run", s.worker_id);
+    }
+    // leaver-returners: one Leave round + four epoch-5 Join rounds
+    for s in &summaries[..LEAVERS] {
+        assert_eq!(
+            s.skipped_rounds,
+            1 + ADMIT,
+            "leaver-returner {} skipped {} rounds",
+            s.worker_id,
+            s.skipped_rounds
+        );
+    }
+    // the core fleet never sat out
+    for s in &summaries[LEAVERS..INITIAL] {
+        assert_eq!(s.skipped_rounds, 0, "core worker {} sat a round out", s.worker_id);
+    }
+    // late joiners: everything before their admission epoch is a sit-out
+    for s in &summaries[INITIAL..] {
+        let admit_epoch = if (s.worker_id as usize) < INITIAL + 8 { 2u64 } else { 3 };
+        assert_eq!(
+            s.skipped_rounds,
+            admit_epoch * ADMIT,
+            "late joiner {} skipped {} rounds",
+            s.worker_id,
+            s.skipped_rounds
+        );
+    }
+    assert!(report.comm.messages() > 0);
+    assert!(report.comm.skips() > 0, "Join/Leave/Skip control frames must be accounted");
+    assert!(report.final_w_norm > 0.0, "the elastic fleet must make progress");
+
+    if let (Some(base), Some(end)) = (fd_base, fd_count()) {
+        assert!(
+            end <= base + 4,
+            "FDs leaked across the elastic soak: baseline {base}, after teardown {end}"
+        );
+    }
+    if let (Some(before), Some(end)) = (threads_before, thread_count()) {
+        // the 64 worker threads are joined; only the spawning thread is left
+        assert!(
+            end <= before,
+            "threads leaked across the elastic soak: {before} before the master, {end} after"
         );
     }
 }

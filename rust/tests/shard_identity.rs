@@ -56,6 +56,7 @@ fn run_fleet(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            membership: None,
         };
         let mut rng = Pcg64::new(seed, 500 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -82,6 +83,7 @@ fn run_fleet(
         train_len: 64,
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
+        membership: None,
     };
     let report = master_side.run_headless(master_spec, d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
