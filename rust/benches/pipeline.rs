@@ -6,10 +6,15 @@ use tempo::cli::Args;
 use tempo::coding::Payload;
 use tempo::compress::{PredictorKind, QuantizerKind, SchemeCfg, WorkerPipeline};
 use tempo::comm::tcp::TcpWorker;
-use tempo::comm::{Frame, FrameKind, MasterTransport, WorkerTransport};
-use tempo::coordinator::launch::master_from_listener;
+use tempo::comm::{channel_fabric, Frame, FrameKind, MasterTransport, WorkerTransport};
+use tempo::config::experiment::Backend;
 use tempo::config::FabricSpec;
-use tempo::scheme::{MasterScheme, WorkerScheme};
+use tempo::coordinator::launch::master_from_listener;
+use tempo::coordinator::master::{MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::coordinator::AggMode;
+use tempo::optim::LrSchedule;
+use tempo::scheme::{AdaptivePlan, MasterScheme, Scheme, WorkerScheme};
 use tempo::tensor::select_topk_indices;
 use tempo::testing::bench::{black_box, maybe_write_json, Bencher};
 use tempo::util::Pcg64;
@@ -63,6 +68,68 @@ fn bench_fabric_backend(b: &mut Bencher, io: &str, n_workers: usize, d: usize) {
     drop(master); // workers see EOF/error and exit
     for h in handles {
         let _ = h.join();
+    }
+}
+
+/// One whole synthetic fleet run (channel fabric, headless master)
+/// through the real round engines — the unit the static-vs-adaptive rows
+/// compare. With `adaptive` set, the tiny target forces a scheme-epoch
+/// switch at every window boundary, so the row prices the controller,
+/// the epoch-stamped frames and the fleet-wide chain rebuilds
+/// (DESIGN.md §8) on top of the identical compute.
+fn run_fleet_once(adaptive: Option<AdaptivePlan>, d: usize, n: usize, steps: u64) {
+    let spec_str = "blocks(a=0.5:topk:k_frac=0.02/estk/ef/beta=0.9;\
+                    b=0.5:topk:k_frac=0.005/estk/ef/beta=0.9)";
+    let scheme = Scheme::parse(spec_str).unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let (master_tx, workers_tx) = channel_fabric(n);
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let wspec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed: 1,
+            clip_norm: None,
+            pipelined: true,
+            absent: vec![],
+            membership: None,
+            adaptive: adaptive.is_some(),
+        };
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::seeded(900 + wid as u64);
+            let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+                let mut g = vec![0.0f32; d];
+                rng.fill_gaussian(&mut g, 1.0);
+                Ok((1.0, g))
+            };
+            WorkerLoop::with_source(wspec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+    let mspec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed: 1,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: AggMode::FullSync,
+        membership: None,
+        adaptive,
+    };
+    let report = MasterLoop::new(mspec, master_tx).run_headless(d).unwrap();
+    black_box(report.final_w_norm);
+    for h in handles {
+        let _ = h.join().unwrap();
     }
 }
 
@@ -140,5 +207,19 @@ fn main() -> anyhow::Result<()> {
     for io in ["threads", "reactor"] {
         bench_fabric_backend(&mut b, io, 4, 4096);
     }
+
+    // adaptive vs static 4w roundtrip (ISSUE 7): identical fleets except
+    // for the rate controller, which the tiny target forces to switch
+    // specs at every window boundary — the delta is the controller's
+    // whole overhead (observation, sync_scheme broadcasts, chain rebuilds)
+    let (n, d, steps) = (4usize, 16_384usize, 6u64);
+    let elems = (n * d) as u64 * steps;
+    b.bench(&format!("fabric/static {n}w roundtrip d={d} steps={steps}"), Some(elems), || {
+        run_fleet_once(None, d, n, steps);
+    });
+    let plan = AdaptivePlan { target_bits: 0.25, window: 3, hysteresis: 0.1 };
+    b.bench(&format!("fabric/adaptive {n}w roundtrip d={d} steps={steps}"), Some(elems), || {
+        run_fleet_once(Some(plan), d, n, steps);
+    });
     maybe_write_json(&b, &args)
 }

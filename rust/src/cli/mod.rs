@@ -130,7 +130,7 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
               [--scheme <spec>] [--fabric <spec>] [--io threads|reactor]
-              [--shards N] [--membership <spec>] [--csv out.csv]
+              [--shards N] [--membership <spec>] [--adaptive <spec>] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
@@ -170,6 +170,17 @@ Elastic membership (--membership or the [membership] table; DESIGN.md §7):
                                 park as pending until the boundary, admissions
                                 get fresh prediction chains + re-keyed shards
   e.g.  --membership min=2,max=4,admit=8
+
+Adaptive rate control (--adaptive or the [adaptive] table; DESIGN.md §8):
+  target=B,window=R,hysteresis=H
+                                online per-block rate controller: every R
+                                rounds the master re-rates the scheme's
+                                blocks toward B payload bits/component and
+                                announces the next scheme epoch (absolute w
+                                + new spec) in a boundary broadcast; H is
+                                the no-flap deadband. Rust backend only;
+                                not composable with --shards/--membership
+  e.g.  --adaptive target=2.5,window=8,hysteresis=0.1
 
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.

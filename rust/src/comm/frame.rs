@@ -51,6 +51,13 @@ pub const SYNC_ROUND: u64 = u64::MAX;
 /// delta). Plain delta broadcasts keep tag 0.
 pub const SYNC_TAG: u8 = 1;
 
+/// `payload_tag` of scheme-epoch-switch broadcasts ([`Frame::sync_scheme`]):
+/// the body is the **absolute** parameter vector followed by the next
+/// epoch's UTF-8 spec string, and the header's `scheme_epoch` carries the
+/// NEW epoch number. Both sides rebuild their compression chains against
+/// the announced spec before the next round (DESIGN.md §8).
+pub const ADAPT_TAG: u8 = 2;
+
 /// One message on the fabric.
 #[derive(Clone, Debug)]
 pub struct Frame {
@@ -61,6 +68,11 @@ pub struct Frame {
     /// lets the scatter/gather layer validate that a payload landed on the
     /// shard that owns its blocks.
     pub shard: u16,
+    /// Negotiated scheme epoch (adaptive rate control, DESIGN.md §8): which
+    /// per-block spec this frame's payload was coded under. 0 for the whole
+    /// run with the controller off. On a [`Self::sync_scheme`] broadcast it
+    /// is the NEW epoch both sides switch to.
+    pub scheme_epoch: u16,
     pub round: u64,
     /// payload body (entropy-coded update or raw f32 broadcast)
     pub payload_tag: u8,
@@ -77,6 +89,7 @@ impl Frame {
             kind: FrameKind::Update,
             worker,
             shard: 0,
+            scheme_epoch: 0,
             round,
             payload_tag: payload.kind_tag,
             payload_bits: payload.bits,
@@ -104,6 +117,7 @@ impl Frame {
             kind: FrameKind::Broadcast,
             worker: u32::MAX,
             shard: 0,
+            scheme_epoch: 0,
             round,
             payload_tag: 0,
             payload_bits: buf.len() as u64 * 8,
@@ -118,12 +132,19 @@ impl Frame {
         self
     }
 
+    /// Tag this frame with the scheme epoch its payload was coded under.
+    pub fn with_scheme_epoch(mut self, epoch: u16) -> Self {
+        self.scheme_epoch = epoch;
+        self
+    }
+
     /// Zero-payload "absent this round" marker (fabric churn injection).
     pub fn skip(worker: u32, round: u64) -> Self {
         Self {
             kind: FrameKind::Skip,
             worker,
             shard: 0,
+            scheme_epoch: 0,
             round,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -154,6 +175,7 @@ impl Frame {
             kind: FrameKind::Update,
             worker,
             shard: 0,
+            scheme_epoch: 0,
             round: SYNC_ROUND,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -180,6 +202,43 @@ impl Frame {
         f
     }
 
+    /// Scheme-epoch-switch broadcast (adaptive rate control, DESIGN.md §8):
+    /// the **absolute** post-round parameters followed by the next epoch's
+    /// UTF-8 spec string, with the header's `scheme_epoch` set to the NEW
+    /// epoch. The receiver adopts `w`, rebuilds its compression chains from
+    /// the announced spec, and stamps subsequent Updates with the new epoch
+    /// — so master and worker can never code the same round under
+    /// different specs. `payload_bits` keeps the plain-broadcast meaning
+    /// (body bit count); receivers key on [`ADAPT_TAG`].
+    pub fn sync_scheme(round: u64, dense: &[f32], spec: &str, epoch: u16, buf: Vec<u8>) -> Self {
+        let mut f = Self::broadcast_from(round, dense, buf);
+        f.bytes.extend_from_slice(spec.as_bytes());
+        f.payload_tag = ADAPT_TAG;
+        f.payload_bits = f.bytes.len() as u64 * 8;
+        f.scheme_epoch = epoch;
+        f
+    }
+
+    /// Decode a [`Self::sync_scheme`] broadcast: fill `w_out` with the
+    /// absolute parameters and return the announced spec string (borrowed
+    /// from the frame body).
+    pub fn sync_scheme_parts(&self, w_out: &mut [f32]) -> Result<&str> {
+        anyhow::ensure!(self.kind == FrameKind::Broadcast, "not a broadcast frame");
+        anyhow::ensure!(self.payload_tag == ADAPT_TAG, "not a scheme-switch broadcast");
+        let w_bytes = w_out.len() * 4;
+        anyhow::ensure!(
+            self.bytes.len() >= w_bytes,
+            "scheme-switch body too short: {} bytes for d={}",
+            self.bytes.len(),
+            w_out.len()
+        );
+        for (o, c) in w_out.iter_mut().zip(self.bytes[..w_bytes].chunks_exact(4)) {
+            *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        std::str::from_utf8(&self.bytes[w_bytes..])
+            .map_err(|e| anyhow::anyhow!("scheme-switch spec is not UTF-8: {e}"))
+    }
+
     /// Clean end-of-run marker: the worker completed every round. The
     /// `u64::MAX` round is the done/abort discriminator the transports'
     /// liveness tracking keys on.
@@ -203,6 +262,7 @@ impl Frame {
             kind: FrameKind::Shutdown,
             worker: u32::MAX,
             shard: 0,
+            scheme_epoch: 0,
             round: u64::MAX,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -223,6 +283,7 @@ impl Frame {
             kind: self.kind,
             worker: self.worker,
             shard: self.shard,
+            scheme_epoch: self.scheme_epoch,
             round: self.round,
             payload_tag: self.payload_tag,
             payload_bits: self.payload_bits,
@@ -284,6 +345,7 @@ impl Frame {
         out.push(self.payload_tag);
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.shard.to_le_bytes());
+        out.extend_from_slice(&self.scheme_epoch.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.payload_bits.to_le_bytes());
         out.extend_from_slice(&self.loss.to_le_bytes());
@@ -300,10 +362,11 @@ impl Frame {
         self.payload_tag = head[1];
         self.worker = u32::from_le_bytes(head[2..6].try_into().unwrap());
         self.shard = u16::from_le_bytes(head[6..8].try_into().unwrap());
-        self.round = u64::from_le_bytes(head[8..16].try_into().unwrap());
-        self.payload_bits = u64::from_le_bytes(head[16..24].try_into().unwrap());
-        self.loss = f32::from_le_bytes(head[24..28].try_into().unwrap());
-        Ok(u64::from_le_bytes(head[28..36].try_into().unwrap()) as usize)
+        self.scheme_epoch = u16::from_le_bytes(head[8..10].try_into().unwrap());
+        self.round = u64::from_le_bytes(head[10..18].try_into().unwrap());
+        self.payload_bits = u64::from_le_bytes(head[18..26].try_into().unwrap());
+        self.loss = f32::from_le_bytes(head[26..30].try_into().unwrap());
+        Ok(u64::from_le_bytes(head[30..38].try_into().unwrap()) as usize)
     }
 
     pub fn deserialize(buf: &[u8]) -> Result<Self> {
@@ -321,7 +384,7 @@ impl Frame {
     }
 }
 
-pub const HEADER_LEN: usize = 1 + 1 + 4 + 2 + 8 + 8 + 4 + 8;
+pub const HEADER_LEN: usize = 1 + 1 + 4 + 2 + 2 + 8 + 8 + 4 + 8;
 
 #[cfg(test)]
 mod tests {
@@ -333,6 +396,7 @@ mod tests {
             kind: FrameKind::Update,
             worker: 3,
             shard: 9,
+            scheme_epoch: 4,
             round: 99,
             payload_tag: 1,
             bytes: vec![1, 2, 3, 4, 5],
@@ -345,6 +409,7 @@ mod tests {
         assert_eq!(g.kind, FrameKind::Update);
         assert_eq!(g.worker, 3);
         assert_eq!(g.shard, 9);
+        assert_eq!(g.scheme_epoch, 4);
         assert_eq!(g.round, 99);
         assert_eq!(g.payload_bits, 37);
         assert_eq!(g.loss, 1.25);
@@ -388,6 +453,7 @@ mod tests {
             kind: FrameKind::Broadcast,
             worker: u32::MAX,
             shard: 3,
+            scheme_epoch: 2,
             round: 12,
             payload_tag: 0,
             bytes: vec![1, 2, 3, 4],
@@ -410,6 +476,36 @@ mod tests {
         let g = Frame::deserialize(&f.serialize()).unwrap();
         assert_eq!(g.shard, 3);
         assert_eq!(Frame::skip(2, 17).shard, 0, "constructors default to shard 0");
+    }
+
+    #[test]
+    fn with_scheme_epoch_tags_and_roundtrips() {
+        let f = Frame::skip(2, 17).with_scheme_epoch(5);
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        assert_eq!(g.scheme_epoch, 5);
+        assert_eq!(Frame::skip(2, 17).scheme_epoch, 0, "constructors default to epoch 0");
+        assert_eq!(Frame::broadcast(8, &[1.0]).scheme_epoch, 0);
+    }
+
+    #[test]
+    fn sync_scheme_carries_w_plus_spec_and_the_new_epoch() {
+        let w = vec![1.5f32, -2.0, 0.25];
+        let spec = "topk:k=7/estk/ef";
+        let f = Frame::sync_scheme(9, &w, spec, 3, Vec::new());
+        assert_eq!(f.kind, FrameKind::Broadcast);
+        assert_eq!(f.payload_tag, ADAPT_TAG);
+        assert_eq!(f.scheme_epoch, 3, "header carries the NEW epoch");
+        assert_eq!(f.payload_bits, (w.len() * 4 + spec.len()) as u64 * 8);
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        let mut w_back = vec![0.0f32; 3];
+        let spec_back = g.sync_scheme_parts(&mut w_back).unwrap();
+        assert_eq!(w_back, w, "body leads with the absolute w");
+        assert_eq!(spec_back, spec);
+        // the plain-broadcast decoder must reject the oversized body
+        assert!(g.broadcast_f32_into(&mut w_back).is_err());
+        // and a short body is rejected, not sliced out of bounds
+        let short = Frame::sync_scheme(9, &w[..1], spec, 3, Vec::new());
+        assert!(short.sync_scheme_parts(&mut vec![0.0f32; 64]).is_err());
     }
 
     #[test]

@@ -248,6 +248,7 @@ mod tests {
             kind: FrameKind::Update,
             worker: 5,
             shard: 2,
+            scheme_epoch: 1,
             round: 42,
             payload_tag: 1,
             bytes: (0..nbytes).map(|i| (i % 251) as u8).collect(),

@@ -41,7 +41,7 @@ pub mod tcp;
 
 pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
 pub use fault::{FaultInjector, FaultPolicy, FaultStats};
-pub use frame::{Frame, FrameKind, SYNC_ROUND, SYNC_TAG};
+pub use frame::{Frame, FrameKind, ADAPT_TAG, SYNC_ROUND, SYNC_TAG};
 pub use reactor::ReactorMaster;
 pub use sender::PipelinedSender;
 pub use shard::{ShardMap, ShardedWorkerEndpoint};

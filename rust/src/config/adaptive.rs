@@ -1,0 +1,122 @@
+//! `[adaptive]` configuration: online per-block rate control for the
+//! scheme-epoch engine ([`crate::scheme::adaptive`], DESIGN.md §8).
+//!
+//! ```toml
+//! [adaptive]
+//! target_bits = 2.5   # target realized payload bits per component
+//! window = 8          # decision window in rounds (>= 1 switch spacing)
+//! hysteresis = 0.1    # relative deadband, in (0, 1)
+//! ```
+//!
+//! and the CLI override `--adaptive target=2.5,window=8,hysteresis=0.1`
+//! (comma-separated `key=value` tokens; unlisted keys keep their current
+//! values). Setting the table at all routes the run through the adaptive
+//! round engine; leaving it out keeps the static engines bit-identically
+//! untouched (pinned by `tests/prop_adaptive.rs`).
+
+use anyhow::{Context, Result};
+
+use super::value::Value;
+use crate::scheme::AdaptivePlan;
+
+/// Parsed `[adaptive]` table. Thin config-file/CLI shell over
+/// [`AdaptivePlan`] (which owns the validation rules).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveCfg {
+    pub target_bits: f64,
+    pub window: u64,
+    pub hysteresis: f64,
+}
+
+impl Default for AdaptiveCfg {
+    fn default() -> Self {
+        let p = AdaptivePlan::default();
+        Self { target_bits: p.target_bits, window: p.window, hysteresis: p.hysteresis }
+    }
+}
+
+impl AdaptiveCfg {
+    pub fn plan(&self) -> AdaptivePlan {
+        AdaptivePlan {
+            target_bits: self.target_bits,
+            window: self.window,
+            hysteresis: self.hysteresis,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.plan().validate()
+    }
+
+    /// Parse the `[adaptive]` table of a config file.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut a = Self::default();
+        if let Some(x) = v.opt("target_bits") {
+            a.target_bits = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("window") {
+            a.window = x.as_int()? as u64;
+        }
+        if let Some(x) = v.opt("hysteresis") {
+            a.hysteresis = x.as_f64()?;
+        }
+        a.validate()?;
+        Ok(a)
+    }
+
+    /// Apply a CLI spec string (`--adaptive target=2.5,window=8,
+    /// hysteresis=0.1`) on top of the current values.
+    pub fn apply_str(&mut self, spec: &str) -> Result<()> {
+        for token in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = token
+                .split_once('=')
+                .with_context(|| format!("adaptive token {token:?} must be key=value"))?;
+            match key {
+                "target" | "target_bits" => {
+                    self.target_bits =
+                        val.parse().with_context(|| format!("adaptive target={val:?}"))?
+                }
+                "window" => {
+                    self.window = val.parse().with_context(|| format!("adaptive window={val:?}"))?
+                }
+                "hysteresis" | "hyst" => {
+                    self.hysteresis =
+                        val.parse().with_context(|| format!("adaptive hysteresis={val:?}"))?
+                }
+                other => anyhow::bail!("unknown adaptive key {other:?} (target|window|hysteresis)"),
+            }
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn toml_table_parses_and_validates() {
+        let v =
+            toml::parse("[adaptive]\ntarget_bits = 2.5\nwindow = 8\nhysteresis = 0.1\n").unwrap();
+        let a = AdaptiveCfg::from_value(v.get("adaptive").unwrap()).unwrap();
+        assert_eq!(a, AdaptiveCfg { target_bits: 2.5, window: 8, hysteresis: 0.1 });
+        assert_eq!(a.plan().window, 8);
+        // target_bits is required in practice: the default (0) never validates
+        let v = toml::parse("[adaptive]\nwindow = 4\n").unwrap();
+        assert!(AdaptiveCfg::from_value(v.get("adaptive").unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_tokens_apply_and_invalids_reject() {
+        let mut a = AdaptiveCfg::default();
+        a.apply_str("target=2.5,window=8,hysteresis=0.2").unwrap();
+        assert_eq!(a, AdaptiveCfg { target_bits: 2.5, window: 8, hysteresis: 0.2 });
+        a.apply_str("window=16").unwrap();
+        assert_eq!(a.window, 16, "unlisted keys keep their values");
+        assert!(a.apply_str("warp=1").is_err());
+        assert!(a.apply_str("target=0").is_err());
+        assert!(a.apply_str("hysteresis=1.5").is_err());
+        assert!(a.apply_str("window=0").is_err());
+    }
+}

@@ -6,6 +6,7 @@ use crate::compress::{PredictorKind, QuantizerKind, SchemeCfg};
 use crate::optim::LrSchedule;
 use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 
+use super::adaptive::AdaptiveCfg;
 use super::fabric::FabricSpec;
 use super::membership::MembershipCfg;
 use super::shards::ShardsSpec;
@@ -170,6 +171,9 @@ pub struct ExperimentConfig {
     /// Elastic fleet membership (`[membership]`); `None` = the static
     /// fixed-fleet round engine.
     pub membership: Option<MembershipCfg>,
+    /// Adaptive per-block rate control (`[adaptive]`); `None` = the static
+    /// fixed-scheme engines, bit-identically untouched.
+    pub adaptive: Option<AdaptiveCfg>,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -201,6 +205,7 @@ impl Default for ExperimentConfig {
             fabric: FabricSpec::default(),
             shards: ShardsSpec::default(),
             membership: None,
+            adaptive: None,
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -253,6 +258,9 @@ impl ExperimentConfig {
         }
         if let Some(x) = v.opt("membership") {
             c.membership = Some(MembershipCfg::from_value(x)?);
+        }
+        if let Some(x) = v.opt("adaptive") {
+            c.adaptive = Some(AdaptiveCfg::from_value(x)?);
         }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
@@ -334,6 +342,36 @@ impl ExperimentConfig {
                  pre-eviction update folds into its old chain before the boundary reset",
                 m.admit_at,
                 self.fabric.max_staleness
+            );
+        }
+        if let Some(a) = &self.adaptive {
+            a.validate().context("invalid [adaptive]")?;
+            anyhow::ensure!(
+                !self.shards.is_sharded(),
+                "[adaptive] is not supported with a sharded master yet (a scheme switch \
+                 would have to rendezvous across shard engines)"
+            );
+            anyhow::ensure!(
+                self.membership.is_none(),
+                "[adaptive] does not compose with [membership]: a fleet boundary and a \
+                 scheme epoch would race on chain rebuilds"
+            );
+            anyhow::ensure!(
+                self.backend == Backend::Rust,
+                "[adaptive] needs backend = \"rust\" (the HLO artifact cannot rebuild its \
+                 compiled pipeline at a scheme-epoch switch)"
+            );
+            anyhow::ensure!(
+                a.window > self.fabric.max_staleness,
+                "adaptive.window ({}) must exceed fabric.max_staleness ({}) so a scheme \
+                 switch (a drain barrier) does not re-serialize every round",
+                a.window,
+                self.fabric.max_staleness
+            );
+            anyhow::ensure!(
+                scheme.block_scalability().iter().any(|&s| s),
+                "[adaptive] needs a scheme with at least one rate parameter (k/k_frac/p) \
+                 to control"
             );
         }
         Ok(())
@@ -465,6 +503,34 @@ noise = 0.8
         // and the sharded master does not do elastic fleets yet
         let bad = "name = \"x\"\n\n[scheme]\nspec = \"blocks(a=0.5:sign;b=0.5:none)\"\n\n\
                    [shards]\ncount = 2\n\n[membership]\nadmit_at = 8\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+    }
+
+    #[test]
+    fn adaptive_table_rides_the_config() {
+        let toml = "name = \"x\"\nworkers = 4\n\n[scheme]\n\
+                    spec = \"topk:k_frac=0.01/estk/ef\"\n\n\
+                    [adaptive]\ntarget_bits = 2.5\nwindow = 8\n";
+        let c = ExperimentConfig::from_toml_str(toml).unwrap();
+        let a = c.adaptive.as_ref().unwrap();
+        assert_eq!((a.target_bits, a.window, a.hysteresis), (2.5, 8, 0.1));
+        // a controller over a scheme with no rate parameter is a config error
+        let bad = "name = \"x\"\n\n[scheme]\nspec = \"sign/plin\"\n\n\
+                   [adaptive]\ntarget_bits = 2.5\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // adaptive + membership is a config error (chain rebuilds would race)
+        let bad = "name = \"x\"\nworkers = 4\n\n[scheme]\n\
+                   spec = \"topk:k_frac=0.01/estk/ef\"\n\n[membership]\nadmit_at = 8\n\n\
+                   [adaptive]\ntarget_bits = 2.5\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // adaptive + sharded master is a config error
+        let bad = "name = \"x\"\n\n[scheme]\n\
+                   spec = \"blocks(a=0.5:topk:k=8/estk/ef;b=0.5:sign)\"\n\n\
+                   [shards]\ncount = 2\n\n[adaptive]\ntarget_bits = 2.5\n";
+        assert!(ExperimentConfig::from_toml_str(bad).is_err());
+        // the window must clear the staleness bound (switches drain-barrier)
+        let bad = "name = \"x\"\n\n[scheme]\nspec = \"topk:k_frac=0.01/estk/ef\"\n\n\
+                   [fabric]\nmax_staleness = 8\n\n[adaptive]\ntarget_bits = 2.5\nwindow = 8\n";
         assert!(ExperimentConfig::from_toml_str(bad).is_err());
     }
 

@@ -5,6 +5,7 @@
 //! The offline build has no serde/toml crates, so both parsers are in-repo
 //! (see DESIGN.md "Offline-build note").
 
+pub mod adaptive;
 pub mod experiment;
 pub mod fabric;
 pub mod json;
@@ -13,6 +14,7 @@ pub mod shards;
 pub mod toml;
 pub mod value;
 
+pub use adaptive::AdaptiveCfg;
 pub use experiment::{ExperimentConfig, SchemeSpec};
 pub use fabric::{FabricSpec, IoBackend, TransportKind};
 pub use membership::MembershipCfg;

@@ -306,6 +306,7 @@ pub fn run_training_with_manifest(
             pipelined: cfg.fabric.pipelined,
             absent: cfg.fabric.absent_for(wid),
             membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
+            adaptive: cfg.adaptive.is_some(),
         };
         let shard = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
         let dataset = Arc::clone(&dataset);
@@ -330,6 +331,7 @@ pub fn run_training_with_manifest(
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
         membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
+        adaptive: cfg.adaptive.as_ref().map(|a| a.plan()),
     };
     let master_runtime = Runtime::new(manifest.clone())?;
     let master_result = match master_side {

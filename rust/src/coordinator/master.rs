@@ -37,7 +37,7 @@ use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
 use crate::model::ModelKind;
 use crate::optim::LrSchedule;
 use crate::runtime::{ModelExec, Runtime};
-use crate::scheme::{MasterScheme, Scheme};
+use crate::scheme::{AdaptivePlan, MasterScheme, RateController, Scheme};
 use crate::util::Timer;
 
 /// How the master combines worker updates each round.
@@ -74,6 +74,11 @@ pub struct MasterSpec {
     /// rounds) with freshly rebuilt decode chains on admission. `None`
     /// keeps the fixed-fleet engine untouched.
     pub membership: Option<MembershipPlan>,
+    /// Adaptive per-block rate control (`[adaptive]` config): when set, the
+    /// run goes through the scheme-epoch engine — a [`RateController`]
+    /// re-rates the spec's blocks between negotiated epochs (DESIGN.md §8).
+    /// `None` keeps the static engines bit-identically untouched.
+    pub adaptive: Option<AdaptivePlan>,
 }
 
 /// Held-out evaluation stream (kind matches the model).
@@ -170,8 +175,15 @@ impl<T: MasterTransport> MasterLoop<T> {
     /// per-worker chains, aggregation, broadcast, rate accounting — is the
     /// exact same code as [`Self::run`].
     pub fn run_headless(self, d: usize) -> Result<MasterReport> {
+        self.run_headless_from(vec![0.0f32; d])
+    }
+
+    /// [`Self::run_headless`] starting from an explicit parameter vector —
+    /// what the epoch-switch identity test uses to restart a run from the
+    /// absolute `w` a scheme-epoch sync shipped.
+    pub fn run_headless_from(self, w: Vec<f32>) -> Result<MasterReport> {
         let MasterLoop { spec, transport } = self;
-        run_rounds(&spec, transport, vec![0.0f32; d], None)
+        run_rounds(&spec, transport, w, None)
     }
 }
 
@@ -231,6 +243,14 @@ fn run_rounds<T: MasterTransport>(
     w: Vec<f32>,
     eval: Option<&mut EvalFn<'_>>,
 ) -> Result<MasterReport> {
+    if let Some(plan) = spec.adaptive {
+        anyhow::ensure!(
+            spec.membership.is_none(),
+            "[adaptive] does not compose with [membership]: a fleet boundary and a scheme \
+             epoch would race on chain rebuilds"
+        );
+        return run_engine_adaptive(spec, plan, transport, w, eval);
+    }
     if let Some(plan) = spec.membership.clone() {
         return run_engine_elastic(spec, &plan, transport, w, eval);
     }
@@ -748,6 +768,273 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
             while fleet.expected[wid]
                 && fleet.start_round[wid] + inbox.delivered[wid] < spec.steps
             {
+                inbox.pump(&mut transport)?;
+            }
+        }
+        let unconsumed = inbox
+            .pending
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|f| f.kind == FrameKind::Update)
+            .count();
+        comm.record_unconsumed(unconsumed as u64);
+    }
+
+    let (final_test_loss, final_test_acc) = match eval.as_mut() {
+        Some(f) => f(&w, (spec.eval_batches * 4).max(8), spec.steps)?,
+        None => (f64::NAN, 0.0),
+    };
+    Ok(MasterReport {
+        points,
+        comm,
+        final_test_acc,
+        final_test_loss,
+        final_w_norm: crate::tensor::norm2(&w),
+        final_w: w,
+    })
+}
+
+/// The adaptive round engine (`[adaptive]` configured): the fixed-fleet
+/// engine promoted to the negotiated scheme-epoch state machine of
+/// [`crate::scheme::adaptive`] (DESIGN.md §8).
+///
+/// Protocol invariants (the negotiation is this engine, not the transport):
+///
+/// * **Epochs are master-declared.** The [`RateController`] decides at
+///   window boundaries only; a switch after folding round `t` makes the
+///   broadcast a [`Frame::sync_scheme`] carrying the **absolute**
+///   post-round parameters plus the next epoch's spec string, stamped with
+///   the NEW epoch number. Plain broadcasts carry the delta and the
+///   CURRENT epoch.
+/// * **Both sides rebuild whole.** On a switch the master rebuilds every
+///   worker's decode chain from the new spec; the worker rebuilds its
+///   whole pipeline and adopts the broadcast `w` — the same chain-reset
+///   contract as elastic admission, applied fleet-wide, which is what
+///   makes the epoch-switch identity hold (a switched run continues
+///   bit-identically to a fresh run started from the synced `w`).
+/// * **Epoch tags close the loop.** Workers stamp every update with the
+///   epoch they coded under; the master rejects a mismatched tag instead
+///   of decoding bytes with the wrong codec.
+/// * **Boundaries are drain barriers.** Under bounded staleness the master
+///   pumps until every worker's frames through round `t` have arrived
+///   (and folds them) before it may decide — no in-flight update can
+///   straddle a chain rebuild. `window > max_staleness` (validated here)
+///   keeps the barrier from re-serializing every round.
+pub(crate) fn run_engine_adaptive<T: MasterTransport>(
+    spec: &MasterSpec,
+    plan: AdaptivePlan,
+    mut transport: T,
+    mut w: Vec<f32>,
+    mut eval: Option<&mut EvalFn<'_>>,
+) -> Result<MasterReport> {
+    let d = w.len();
+    let n = transport.n_workers();
+    if let AggMode::BoundedStaleness { max_staleness, .. } = spec.aggregation {
+        anyhow::ensure!(
+            plan.window > max_staleness,
+            "[adaptive] window ({}) must exceed max_staleness ({max_staleness}): a scheme \
+             switch is a drain barrier and must not re-serialize every round",
+            plan.window
+        );
+    }
+    let mut ctrl = RateController::new(plan, spec.scheme.clone(), d)?;
+    let mut epoch: u16 = 0;
+    let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        chains.push(spec.scheme.master(d)?);
+    }
+    let mut inbox = Inbox::new(n, 0);
+    let mut comm = CommStats::new(d);
+    comm.begin_scheme_epoch(0, &spec.scheme.spec());
+    let mut train_loss = LossMeter::new();
+    let mut points = Vec::new();
+    let wall = Timer::start();
+
+    let mut agg = vec![0.0f32; d];
+    let mut bcast_buf: Vec<u8> = Vec::new();
+    let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
+        AggMode::FullSync => (0..n).map(|_| vec![0.0f32; d]).collect(),
+        _ => Vec::new(),
+    };
+    let mut batches: Vec<Vec<Frame>> = Vec::new();
+    let mut stale_scratch: Vec<Vec<Vec<f32>>> = Vec::new();
+    let mut stale_snaps: Vec<Vec<Vec<(u64, usize)>>> = Vec::new();
+    if spec.aggregation != AggMode::FullSync {
+        batches = (0..n).map(|_| Vec::new()).collect();
+        stale_scratch = (0..n).map(|_| Vec::new()).collect();
+        stale_snaps = (0..n).map(|_| Vec::new()).collect();
+    }
+
+    for t in 0..spec.steps {
+        agg.iter_mut().for_each(|x| *x = 0.0);
+        let boundary = (t + 1) % ctrl.plan().window == 0;
+
+        match spec.aggregation {
+            AggMode::FullSync => {
+                while inbox.pending.iter().any(|q| q.is_empty()) {
+                    inbox.pump(&mut transport)?;
+                }
+                let mut round_frames = Vec::with_capacity(n);
+                for wid in 0..n {
+                    let frame = inbox.pending[wid].pop_front().unwrap();
+                    anyhow::ensure!(
+                        frame.round == t,
+                        "round skew: worker {wid} sent {} during round {t}",
+                        frame.round
+                    );
+                    if frame.kind == FrameKind::Update {
+                        anyhow::ensure!(
+                            frame.scheme_epoch == epoch,
+                            "scheme-epoch skew: worker {wid} coded round {t} under epoch {} \
+                             during epoch {epoch}",
+                            frame.scheme_epoch
+                        );
+                    }
+                    round_frames.push(frame);
+                }
+                let contributors =
+                    round_frames.iter().filter(|f| f.kind == FrameKind::Update).count();
+                let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
+                decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                for (wid, frame) in round_frames.iter().enumerate() {
+                    account_frame(frame, wid, &*chains[wid], &mut comm, &mut train_loss)?;
+                    if frame.kind == FrameKind::Update {
+                        ctrl.observe_message(frame.payload_bits);
+                        let rt = &rtilde_w[wid];
+                        for i in 0..d {
+                            agg[i] += scale * rt[i];
+                        }
+                    }
+                }
+            }
+            AggMode::BoundedStaleness { max_staleness, quorum } => {
+                inbox.drain(&mut transport)?;
+                // the boundary drain barrier: every frame through round t
+                // must fold before the controller may rebuild chains
+                let caught_up =
+                    if boundary { t + 1 } else { (t + 1).saturating_sub(max_staleness) };
+                for wid in 0..n {
+                    while inbox.delivered[wid] < caught_up {
+                        inbox.pump(&mut transport)?;
+                    }
+                }
+                let quorum = quorum.clamp(1, n);
+                while inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
+                    inbox.pump(&mut transport)?;
+                }
+                for wid in 0..n {
+                    batches[wid].clear();
+                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                        anyhow::ensure!(
+                            frame.worker as usize == wid,
+                            "worker id mismatch: frame from {} on queue {wid}",
+                            frame.worker
+                        );
+                        if frame.kind == FrameKind::Update {
+                            anyhow::ensure!(
+                                frame.scheme_epoch == epoch,
+                                "scheme-epoch skew: worker {wid} coded round {} under epoch {} \
+                                 during epoch {epoch}",
+                                frame.round,
+                                frame.scheme_epoch
+                            );
+                        }
+                        batches[wid].push(frame);
+                    }
+                }
+                decode_batches_parallel(
+                    &mut chains,
+                    &mut batches,
+                    &mut stale_scratch,
+                    &mut stale_snaps,
+                    t,
+                    d,
+                )?;
+                let mut contributions = 0u32;
+                for wid in 0..n {
+                    for (k, frame) in batches[wid].iter().enumerate() {
+                        if frame.kind == FrameKind::Update {
+                            comm.record_staleness(t.saturating_sub(frame.round));
+                        }
+                        account_decoded(
+                            frame,
+                            wid,
+                            &*chains[wid],
+                            &stale_snaps[wid][k],
+                            &mut comm,
+                            &mut train_loss,
+                        )?;
+                        if frame.kind == FrameKind::Update {
+                            ctrl.observe_message(frame.payload_bits);
+                            contributions += 1;
+                            let rt = &stale_scratch[wid][k];
+                            for i in 0..d {
+                                agg[i] += rt[i];
+                            }
+                        }
+                    }
+                }
+                if contributions > 0 {
+                    let scale = 1.0 / contributions as f32;
+                    for a in agg.iter_mut() {
+                        *a *= scale;
+                    }
+                }
+            }
+        }
+        ctrl.observe_round(&agg);
+
+        // the master applies its own delta BEFORE broadcasting, so a switch
+        // ships the post-round-t parameters (identical f32 bits to every
+        // worker applying the delta itself)
+        let lr = spec.schedule.lr_at(t);
+        for i in 0..d {
+            w[i] -= lr * agg[i];
+        }
+        let frame = match ctrl.end_of_round(t)? {
+            Some(sw) => {
+                // whole-fleet chain-reset contract: every decode chain is
+                // rebuilt from the new spec, exactly as a fresh run would
+                // build it (the epoch-switch identity leans on this)
+                for chain in chains.iter_mut() {
+                    *chain = sw.scheme.master(d)?;
+                }
+                epoch = sw.epoch;
+                let spec_str = sw.scheme.spec();
+                comm.begin_scheme_epoch(epoch, &spec_str);
+                Frame::sync_scheme(t, &w, &spec_str, epoch, std::mem::take(&mut bcast_buf))
+            }
+            None => Frame::broadcast_from(t, &agg, std::mem::take(&mut bcast_buf))
+                .with_scheme_epoch(epoch),
+        };
+        transport.broadcast(&frame)?;
+        bcast_buf = frame.bytes;
+
+        if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
+            let (test_loss, test_acc) = match eval.as_mut() {
+                Some(f) => f(&w, spec.eval_batches, t)?,
+                None => (f64::NAN, 0.0),
+            };
+            points.push(RunPoint {
+                step: t + 1,
+                epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
+                    / spec.train_len.max(1) as f64,
+                train_loss: train_loss.smoothed(),
+                test_loss,
+                test_acc,
+                bits_per_component: comm.bits_per_component(),
+                e_mse: 0.0,
+                wall_secs: wall.elapsed_secs(),
+            });
+        }
+    }
+
+    // bounded-staleness teardown: every worker sends exactly `steps`
+    // frames; with `steps` a window multiple the final boundary barrier
+    // already drained them, but partial trailing windows can leave frames
+    if spec.aggregation != AggMode::FullSync {
+        for wid in 0..n {
+            while inbox.delivered[wid] < spec.steps {
                 inbox.pump(&mut transport)?;
             }
         }

@@ -23,6 +23,12 @@
 //!   Cooldown`) that admits and evicts workers at fleet-epoch boundaries,
 //!   with fresh per-worker chains and `(epoch, worker_id)`-keyed data
 //!   assignments on every admission (DESIGN.md §7).
+//! * Adaptive rate control (DESIGN.md §8) lives in the [`master`] /
+//!   [`worker`] engines: with `[adaptive]` set, the master's
+//!   `RateController` re-rates the scheme's blocks between negotiated
+//!   **scheme epochs** — a boundary broadcast ships absolute `w` + the
+//!   next spec, both sides rebuild their chains on the same round, and
+//!   every update is epoch-stamped so codec skew fails loudly.
 //!
 //! Deterministic-mode invariant (pinned by `tests/integration_tcp.rs`):
 //! with no faults injected, the same seeded run over the channel fabric

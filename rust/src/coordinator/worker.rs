@@ -32,7 +32,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::coding::Payload;
-use crate::comm::{Frame, PipelinedSender, WorkerTransport, SYNC_ROUND, SYNC_TAG};
+use crate::comm::{Frame, PipelinedSender, WorkerTransport, ADAPT_TAG, SYNC_ROUND, SYNC_TAG};
 use crate::config::experiment::Backend;
 use crate::coordinator::membership::{bitmap_rank, WorkerMembership, MAX_FLEET};
 use crate::data::{Batch, Dataset, Shard};
@@ -80,6 +80,13 @@ pub struct WorkerSpec {
     /// membership; the plan only drives Join/Leave control frames. `None`
     /// keeps the fixed-fleet loop untouched.
     pub membership: Option<WorkerMembership>,
+    /// Adaptive per-block rate control (`[adaptive]` config): when true,
+    /// the worker runs the scheme-epoch loop — it adopts the master's
+    /// [`ADAPT_TAG`] boundary broadcasts (absolute `w` plus the next
+    /// epoch's spec), rebuilds its whole pipeline, and stamps every update
+    /// with the epoch it coded under (DESIGN.md §8). `false` keeps the
+    /// fixed-scheme loops untouched.
+    pub adaptive: bool,
 }
 
 impl WorkerSpec {
@@ -262,6 +269,14 @@ fn run_rounds_inner<T: WorkerTransport>(
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
 ) -> Result<WorkerSummary> {
+    if spec.adaptive {
+        anyhow::ensure!(
+            spec.membership.is_none(),
+            "worker {}: [adaptive] does not compose with [membership]",
+            spec.worker_id
+        );
+        return run_rounds_adaptive(spec, transport, source, w, hlo);
+    }
     if spec.membership.is_some() {
         return run_rounds_elastic(spec, transport, source, w, hlo);
     }
@@ -646,6 +661,148 @@ fn run_rounds_elastic<T: WorkerTransport>(
     })
 }
 
+/// The adaptive worker loop (`spec.adaptive` set): the fixed-fleet loop
+/// promoted to negotiated scheme epochs (DESIGN.md §8). Sends are inline
+/// only — the epoch a round-t+1 update must be stamped with is decided by
+/// the round-t broadcast, so the double-buffered send stage (which lets a
+/// round-t+1 frame ship before round t's broadcast is folded into local
+/// state) cannot be used; `spec.pipelined` is ignored here.
+///
+/// Broadcast handling: an [`ADAPT_TAG`] broadcast is a scheme-epoch switch
+/// — adopt the absolute post-round parameters, parse the carried spec,
+/// rebuild the whole pipeline from it, and stamp all further updates with
+/// the frame's (new) epoch. This is the worker half of the fleet-wide
+/// chain-reset contract (the master rebuilt every decode chain at the same
+/// boundary), and it is what makes the epoch-switch identity hold: from
+/// the switch on, the run is bit-identical to a fresh run started from the
+/// synced `w` with the new spec. Plain broadcasts apply the usual
+/// `w -= η·r̃` delta.
+fn run_rounds_adaptive<T: WorkerTransport>(
+    spec: &WorkerSpec,
+    transport: &mut T,
+    source: &mut dyn GradSource,
+    mut w: Vec<f32>,
+    hlo: Option<CompressExec>,
+) -> Result<WorkerSummary> {
+    let wid = spec.worker_id;
+    anyhow::ensure!(
+        hlo.is_none(),
+        "worker {wid}: the HLO compress backend cannot rebuild its compiled pipeline at a \
+         scheme-epoch switch — use the rust backend with [adaptive]"
+    );
+    let d = w.len();
+    let mut wscheme = spec.scheme.worker(d)?;
+    let mut epoch: u16 = 0;
+    let mut stage = SendStage::Inline;
+
+    let mut phases = PhaseTimes::new();
+    let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
+    let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    let mut update = vec![0.0f32; d];
+    let mut bframe = Frame::shutdown();
+    let mut skipped = 0u64;
+
+    source.prefetch(0);
+    for t in 0..spec.steps {
+        if spec.is_absent(t) {
+            // churn: out of the compute pool this round, but broadcasts —
+            // including scheme switches — are still adopted below
+            skipped += 1;
+            e_mse_trace.push(0.0);
+            u_norm_trace.push(0.0);
+            let skip = Frame::skip(wid, t).with_scheme_epoch(epoch);
+            send_frame(&mut stage, transport, &mut phases, skip)?;
+        } else {
+            // 1. gradient (data prep untimed; the phase measures compute)
+            let timer = Timer::start();
+            let (loss, mut g) = source.next_grad(&w, t)?;
+            phases.add("gradient", timer.elapsed_secs());
+            anyhow::ensure!(g.len() == d, "worker {wid}: gradient dim mismatch");
+            if let Some(max_norm) = spec.clip_norm {
+                let norm = crate::tensor::norm2(&g) as f32;
+                if norm > max_norm {
+                    crate::tensor::scale(&mut g, max_norm / norm);
+                }
+            }
+            anyhow::ensure!(
+                loss.is_finite(),
+                "worker {wid}: loss diverged (non-finite) at round {t} — lower the \
+                 learning rate or add warmup"
+            );
+            losses.push(loss);
+
+            // 2. compression pipeline (Eq. (1))
+            let lr_ratio = lr_ratio(&spec.schedule, t);
+            let timer = Timer::start();
+            let stats = wscheme.step(&g, lr_ratio);
+            phases.add("compress", timer.elapsed_secs());
+            e_mse_trace.push(stats.e_mse);
+            u_norm_trace.push(stats.u_norm_sq);
+
+            // 3. encode and ship, tagged with the epoch we coded under —
+            // the master rejects a mismatch instead of mis-decoding
+            let timer = Timer::start();
+            let mut payload = Payload::empty();
+            wscheme.encode_into(t, &mut payload);
+            phases.add("encode", timer.elapsed_secs());
+            let frame = Frame::update(wid, t, payload, loss as f32).with_scheme_epoch(epoch);
+            send_frame(&mut stage, transport, &mut phases, frame)?;
+        }
+
+        if t + 1 < spec.steps {
+            source.prefetch(t + 1);
+        }
+
+        // 4. receive broadcast t: adopt a scheme switch, or apply a delta
+        let timer = Timer::start();
+        transport.recv_broadcast_into(&mut bframe)?;
+        phases.add("wait", timer.elapsed_secs());
+        anyhow::ensure!(
+            bframe.round == t,
+            "worker {wid}: broadcast skew: got {} during round {t}",
+            bframe.round
+        );
+        let timer = Timer::start();
+        if bframe.payload_tag == ADAPT_TAG {
+            let next = {
+                let spec_str = bframe.sync_scheme_parts(&mut w)?;
+                Scheme::parse(spec_str)
+                    .with_context(|| format!("worker {wid}: scheme-epoch switch at round {t}"))?
+            };
+            // whole-pipeline rebuild: momentum, EF and predictor state
+            // restart from zero, exactly as a fresh run would start
+            wscheme = next.worker(d)?;
+            epoch = bframe.scheme_epoch;
+        } else {
+            bframe.broadcast_f32_into(&mut update)?;
+            let lr = spec.schedule.lr_at(t);
+            for i in 0..d {
+                w[i] -= lr * update[i];
+            }
+        }
+        phases.add("apply", timer.elapsed_secs());
+    }
+
+    let mean_tail = if losses.is_empty() {
+        0.0
+    } else {
+        let q = (losses.len() / 4).max(1);
+        let tail = &losses[losses.len() - q..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    };
+    Ok(WorkerSummary {
+        worker_id: wid,
+        rounds: spec.steps,
+        phases,
+        mean_loss_last_quarter: mean_tail,
+        e_mse_trace,
+        u_norm_trace,
+        skipped_rounds: skipped,
+        pipelined: false,
+    })
+}
+
 fn send_frame<T: WorkerTransport>(
     stage: &mut SendStage,
     transport: &mut T,
@@ -727,6 +884,7 @@ mod tests {
             pipelined: true,
             absent: vec![(2, 4), (7, 8)],
             membership: None,
+            adaptive: false,
         };
         let absent: Vec<u64> = (0..10).filter(|&t| spec.is_absent(t)).collect();
         assert_eq!(absent, vec![2, 3, 7]);

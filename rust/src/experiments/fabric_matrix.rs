@@ -3,9 +3,12 @@
 //! engine under a matrix of transport/degradation scenarios: clean channel
 //! vs clean TCP (under both master I/O engines — threads and the §6
 //! reactor), a straggling worker (full-sync vs bounded-staleness
-//! aggregation), message drop-and-retransmit, worker churn, and the
+//! aggregation), message drop-and-retransmit, worker churn, the
 //! block-sharded master (a blockwise scheme scattered over 2/4 master
-//! shards, on both fabrics and both I/O engines).
+//! shards, on both fabrics and both I/O engines), and the adaptive rate
+//! controller (DESIGN.md §8) steering an over-spending blockwise base
+//! back to the static row's measured rate — an equal-average-rate
+//! static-vs-adaptive comparison.
 //!
 //! Everything here uses synthetic gradient sources and the headless
 //! master, so the whole matrix runs offline (no artifacts, no PJRT) — it
@@ -21,7 +24,7 @@ use crate::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembe
 use crate::coordinator::worker::{WorkerLoop, WorkerSpec};
 use crate::metrics::CsvWriter;
 use crate::optim::LrSchedule;
-use crate::scheme::Scheme;
+use crate::scheme::{AdaptivePlan, Scheme};
 use crate::util::{Pcg64, Timer};
 
 use super::ExpOptions;
@@ -33,6 +36,13 @@ const SPEC_BLOCKWISE: &str = "blocks(emb=0.25:topk:k_frac=0.01/estk/ef/beta=0.9;
                               attn=0.25:sign/plin/noef/beta=0.8;\
                               mlp=0.25:topk:k_frac=0.02/estk/ef/beta=0.9;\
                               head=0.25:sign)";
+/// [`SPEC_BLOCKWISE`] with every top-k block budgeted at twice the rate —
+/// the adaptive row's deliberately over-spending base; the controller has
+/// to coarsen it back toward the static row's realized bits/component.
+const SPEC_ADAPT_BASE: &str = "blocks(emb=0.25:topk:k_frac=0.02/estk/ef/beta=0.9;\
+                               attn=0.25:sign/plin/noef/beta=0.8;\
+                               mlp=0.25:topk:k_frac=0.04/estk/ef/beta=0.9;\
+                               head=0.25:sign)";
 
 /// Elastic-fleet scenario: the master's admission plan plus one
 /// membership-span plan per worker (see [`grow_scenario`] /
@@ -77,6 +87,7 @@ fn run_scenario(
     steps: u64,
     seed: u64,
     elastic: Option<&ElasticScenario>,
+    adaptive: Option<AdaptivePlan>,
 ) -> Result<(MasterReport, f64)> {
     let scheme = Scheme::parse(spec)?;
     let schedule = LrSchedule::constant(0.05);
@@ -99,6 +110,7 @@ fn run_scenario(
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
             membership: elastic.map(|e| e.worker_plans[wid].clone()),
+            adaptive: adaptive.is_some(),
         };
         let mut rng = Pcg64::new(seed, 0xFAB + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> Result<(f64, Vec<f32>)> {
@@ -125,6 +137,7 @@ fn run_scenario(
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
         membership: elastic.map(|e| e.plan.clone()),
+        adaptive,
     };
     let mut report = master_side.run_headless(master_spec, d)?;
     for h in handles {
@@ -211,10 +224,14 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         "{:<24} {:>10} {:>6} {:>6} {:>8} {:>10} {:>8} {:>8}",
         "scenario", "bits/comp", "msgs", "skips", "retrans", "staleness", "uncons", "wall_s"
     );
+    let mut static_blockwise_bits = None;
     for (label, fabric, spec, shards, elastic) in scenarios {
         let (report, wall) =
-            run_scenario(&fabric, spec, shards, d, n, steps, opts.seed, elastic.as_ref())?;
+            run_scenario(&fabric, spec, shards, d, n, steps, opts.seed, elastic.as_ref(), None)?;
         let c = &report.comm;
+        if label == "blockwise/1-shard" {
+            static_blockwise_bits = Some(c.bits_per_component());
+        }
         println!(
             "{:<24} {:>10.4} {:>6} {:>6} {:>8} {:>10.2} {:>8} {:>8.2}",
             label,
@@ -237,6 +254,64 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
             c.injected_delay_secs(),
             wall
         ))?;
+    }
+
+    // Static-vs-adaptive at equal average rate (DESIGN.md §8): the adaptive
+    // row starts from SPEC_ADAPT_BASE (every top-k block at 2x the rate) and
+    // targets the blockwise/1-shard row's *measured* bits/component, so the
+    // controller has to coarsen mid-run and the two rows meter the same
+    // average budget by construction.
+    let target = static_blockwise_bits
+        .ok_or_else(|| anyhow::anyhow!("blockwise/1-shard row did not run"))?;
+    let plan = AdaptivePlan {
+        target_bits: target,
+        window: if opts.smoke { 2 } else { 4 },
+        hysteresis: 0.1,
+    };
+    let (report, wall) = run_scenario(
+        &FabricSpec::default(),
+        SPEC_ADAPT_BASE,
+        1,
+        d,
+        n,
+        steps,
+        opts.seed,
+        None,
+        Some(plan),
+    )?;
+    let c = &report.comm;
+    let label = "adaptive/rate-controlled";
+    println!(
+        "{:<24} {:>10.4} {:>6} {:>6} {:>8} {:>10.2} {:>8} {:>8.2}",
+        label,
+        c.bits_per_component(),
+        c.messages(),
+        c.skips(),
+        c.retransmits(),
+        c.mean_staleness(),
+        c.unconsumed_updates(),
+        wall
+    );
+    w.row(&format!(
+        "{label},{:.6},{},{},{},{:.4},{},{:.4},{:.3}",
+        c.bits_per_component(),
+        c.messages(),
+        c.skips(),
+        c.retransmits(),
+        c.mean_staleness(),
+        c.unconsumed_updates(),
+        c.injected_delay_secs(),
+        wall
+    ))?;
+    println!("  scheme epochs (static target {target:.4} bits/comp):");
+    for e in c.scheme_epochs() {
+        println!(
+            "    epoch {:>2}: {:>8.4} bits/comp over {:>4} msgs  {}",
+            e.epoch,
+            e.bits_per_component(d),
+            e.messages,
+            e.spec
+        );
     }
     w.flush()?;
     println!("  csv: {path}");

@@ -93,6 +93,13 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         m.apply_str(v).context("--membership")?;
         cfg.membership = Some(m);
     }
+    if let Some(v) = args.flag("adaptive")? {
+        // rate-controller tokens, e.g. --adaptive target=2.5,window=8
+        // (applied on top of any [adaptive] table in the config file)
+        let mut a = cfg.adaptive.take().unwrap_or_default();
+        a.apply_str(v).context("--adaptive")?;
+        cfg.adaptive = Some(a);
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -231,6 +238,7 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
         membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
+        adaptive: cfg.adaptive.as_ref().map(|a| a.plan()),
     };
     let runtime = Runtime::new(manifest)?;
     let report = if cfg.shards.is_sharded() {
@@ -326,6 +334,7 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
         pipelined: cfg.fabric.pipelined,
         absent: cfg.fabric.absent_for(worker_id as usize),
         membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
+        adaptive: cfg.adaptive.is_some(),
     };
     let shard = Shard::new(worker_id as usize, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
     let dataset = launch::build_dataset(entry.kind, &entry, &cfg);

@@ -24,6 +24,28 @@ impl BlockRate {
     }
 }
 
+/// Accounting for one scheme epoch of an adaptive-rate run (DESIGN.md §8):
+/// the spec the fleet coded with and the payload it realized while that
+/// epoch was live. Static runs have exactly one (or zero) of these.
+#[derive(Clone, Debug)]
+pub struct SchemeEpoch {
+    pub epoch: u16,
+    /// registry spec string the whole fleet coded with during this epoch
+    pub spec: String,
+    pub bits: u64,
+    pub messages: u64,
+}
+
+impl SchemeEpoch {
+    /// Mean bits per gradient component per message within this epoch.
+    pub fn bits_per_component(&self, d: usize) -> f64 {
+        if self.messages == 0 || d == 0 {
+            return 0.0;
+        }
+        self.bits as f64 / (self.messages as f64 * d as f64)
+    }
+}
+
 /// Tracks worker→master payload sizes for one run, plus the fabric-health
 /// counters the fault-injection and staleness machinery report: skip
 /// markers (churn), retransmits and injected delay (drop/straggler
@@ -52,6 +74,9 @@ pub struct CommStats {
     unconsumed_updates: u64,
     /// per-phase worker comm timing: name → (total secs, events)
     phase_secs: BTreeMap<String, (f64, u64)>,
+    /// scheme-epoch timeline (adaptive runs; empty when the controller is
+    /// off — the static engines never call [`Self::begin_scheme_epoch`])
+    scheme_epochs: Vec<SchemeEpoch>,
     /// simulated network parameters for comm-time estimates
     pub bandwidth_gbps: f64,
     pub latency_ms: f64,
@@ -70,6 +95,28 @@ impl CommStats {
     pub fn record_message(&mut self, payload_bits: u64) {
         self.total_payload_bits += payload_bits;
         self.total_messages += 1;
+        if let Some(e) = self.scheme_epochs.last_mut() {
+            e.bits += payload_bits;
+            e.messages += 1;
+        }
+    }
+
+    /// Open a scheme-epoch record (adaptive rate control, DESIGN.md §8).
+    /// Subsequent [`Self::record_message`] calls credit this epoch until the
+    /// next `begin_scheme_epoch`. Static runs never call this, so the
+    /// timeline stays empty and nothing else changes.
+    pub fn begin_scheme_epoch(&mut self, epoch: u16, spec: &str) {
+        self.scheme_epochs.push(SchemeEpoch {
+            epoch,
+            spec: spec.to_string(),
+            bits: 0,
+            messages: 0,
+        });
+    }
+
+    /// Scheme-epoch timeline, in announcement order (empty for static runs).
+    pub fn scheme_epochs(&self) -> &[SchemeEpoch] {
+        &self.scheme_epochs
     }
 
     /// Record one block's share of a message (blockwise schemes).
@@ -312,6 +359,28 @@ mod tests {
         // block a: 800 bits / (2 messages * 40 comps) = 10 bits/comp
         assert!((rates[0].1 - 10.0).abs() < 1e-12, "{rates:?}");
         assert!((rates[1].1 - 10.0).abs() < 1e-12, "{rates:?}");
+    }
+
+    #[test]
+    fn scheme_epoch_timeline_credits_the_open_epoch() {
+        let mut c = CommStats::new(100);
+        // messages before any epoch opens (static runs) touch no timeline
+        c.record_message(100);
+        assert!(c.scheme_epochs().is_empty());
+        c.begin_scheme_epoch(0, "topk:k=8");
+        c.record_message(3200);
+        c.record_message(3200);
+        c.begin_scheme_epoch(1, "topk:k=4");
+        c.record_message(1600);
+        let eps = c.scheme_epochs();
+        assert_eq!(eps.len(), 2);
+        assert_eq!((eps[0].epoch, eps[0].messages, eps[0].bits), (0, 2, 6400));
+        assert_eq!(eps[0].spec, "topk:k=8");
+        assert!((eps[0].bits_per_component(100) - 32.0).abs() < 1e-12);
+        assert_eq!((eps[1].epoch, eps[1].messages, eps[1].bits), (1, 1, 1600));
+        assert!((eps[1].bits_per_component(100) - 16.0).abs() < 1e-12);
+        // the global metric still counts everything
+        assert_eq!(c.total_bits(), 100 + 6400 + 1600);
     }
 
     #[test]

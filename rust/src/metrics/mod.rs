@@ -4,7 +4,7 @@ pub mod comm_stats;
 pub mod csv;
 pub mod meters;
 
-pub use comm_stats::CommStats;
+pub use comm_stats::{CommStats, SchemeEpoch};
 pub use csv::CsvWriter;
 pub use meters::{AccuracyMeter, LossMeter};
 

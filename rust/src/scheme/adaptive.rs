@@ -1,0 +1,468 @@
+//! Adaptive per-block rate control (DESIGN.md §8).
+//!
+//! The paper's premise is that temporal correlation makes momentum-filtered
+//! updates cheap to code — but correlation varies by block (layer) and by
+//! training phase, while a `blocks(...)` spec is frozen for the run. The
+//! [`RateController`] closes that loop online: it watches the realized
+//! bits/component and the per-block energy of the folded residual r̃ (the
+//! momentum-filtered signal Eq. (1) actually ships), and between **scheme
+//! epochs** rewrites each block's rate parameter through
+//! [`Scheme::with_block_scales`] — coarser quantization where residuals
+//! shrink, bits re-spent where a block goes unpredictable.
+//!
+//! The controller runs on the master only. Decisions are taken at most
+//! once per `window` rounds, inside a symmetric hysteresis deadband so the
+//! spec never flaps; every decision is a pure function of the window's
+//! accumulated statistics ([`decide`]), which makes replay deterministic
+//! and property-testable without a fabric. The negotiated switch itself —
+//! the `scheme_epoch` frame-header field and the [`ADAPT_TAG`] boundary
+//! broadcast carrying absolute `w` + the next spec — lives in
+//! `comm::frame`; the round-engine plumbing lives in `coordinator`.
+//!
+//! [`ADAPT_TAG`]: crate::comm::ADAPT_TAG
+
+use anyhow::Result;
+
+use super::Scheme;
+
+/// Controller gain clamp per decision: one window can at most double or
+/// halve a block's rate, so a noisy window cannot slam the spec.
+const MAX_STEP: f64 = 2.0;
+/// Absolute clamp on the cumulative per-block scale vs the base spec.
+const SCALE_MIN: f64 = 1.0 / 8.0;
+const SCALE_MAX: f64 = 8.0;
+/// Two scale vectors closer than this (per block) are "the same": the
+/// controller skips the no-op epoch instead of re-announcing it.
+const SCALE_EPS: f64 = 1e-9;
+
+/// `[adaptive]` knobs (config table / `--adaptive` tokens).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptivePlan {
+    /// Target realized rate in payload bits per component per update.
+    pub target_bits: f64,
+    /// Decision window in rounds: statistics accumulate over `window`
+    /// rounds and the controller decides at the boundary — so the spec
+    /// switches at most once per window by construction.
+    pub window: u64,
+    /// Relative hysteresis deadband: no switch while the realized rate is
+    /// within `hysteresis * target_bits` of the target AND no block's
+    /// residual-energy share moved by more than `hysteresis`.
+    pub hysteresis: f64,
+}
+
+impl Default for AdaptivePlan {
+    fn default() -> Self {
+        Self { target_bits: 0.0, window: 8, hysteresis: 0.1 }
+    }
+}
+
+impl AdaptivePlan {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.target_bits.is_finite() && self.target_bits > 0.0,
+            "[adaptive] target_bits must be > 0 (bits per component), got {}",
+            self.target_bits
+        );
+        anyhow::ensure!(self.window >= 1, "[adaptive] window must be >= 1 round");
+        anyhow::ensure!(
+            self.hysteresis.is_finite() && self.hysteresis > 0.0 && self.hysteresis < 1.0,
+            "[adaptive] hysteresis must be in (0,1), got {}",
+            self.hysteresis
+        );
+        Ok(())
+    }
+}
+
+/// One decision window's accumulated signals, in block-layout order.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    /// Payload bits of every update folded this window.
+    pub bits: u64,
+    /// Number of updates folded this window.
+    pub messages: u64,
+    /// Per-block Σ agg[i]² over the window's folded aggregates — the
+    /// residual energy of the momentum-filtered signal the fleet shipped.
+    pub block_energy: Vec<f64>,
+}
+
+impl WindowStats {
+    fn new(n_blocks: usize) -> Self {
+        Self { bits: 0, messages: 0, block_energy: vec![0.0; n_blocks] }
+    }
+
+    fn reset(&mut self) {
+        self.bits = 0;
+        self.messages = 0;
+        self.block_energy.iter_mut().for_each(|e| *e = 0.0);
+    }
+}
+
+/// Pure decision rule — the whole controller policy in one deterministic
+/// function, so property tests can replay it without a fabric.
+///
+/// Inputs: the plan, the window's stats, per-block component counts and
+/// scalability, the current scale vector (cumulative, vs the base spec)
+/// and the residual-energy shares at the last switch. Returns the new
+/// scale vector, or `None` inside the deadband.
+///
+/// Policy: let `B = bits / (messages · d)` be the window's realized rate.
+/// Outside the rate deadband the global gain `g = clamp(target/B,
+/// 1/MAX_STEP, MAX_STEP)` multiplies every scalable block's scale. On top
+/// of that, blocks whose residual energy per component sits at or above
+/// the component-weighted mean get a `(1 + hysteresis)` protection tilt
+/// (they are the unpredictable ones — keep their bits), below-mean blocks
+/// get the reciprocal — this is what re-spends bits across blocks. A
+/// shift in residual shares alone (rate on target) triggers a
+/// redistribution-only switch with `g = 1`.
+pub fn decide(
+    plan: &AdaptivePlan,
+    stats: &WindowStats,
+    block_components: &[usize],
+    scalable: &[bool],
+    scales: &[f64],
+    last_shares: &[f64],
+) -> Option<Vec<f64>> {
+    let n = block_components.len();
+    debug_assert_eq!(stats.block_energy.len(), n);
+    debug_assert_eq!(scalable.len(), n);
+    debug_assert_eq!(scales.len(), n);
+    debug_assert_eq!(last_shares.len(), n);
+    if stats.messages == 0 {
+        return None;
+    }
+    let d: usize = block_components.iter().sum();
+    let realized = stats.bits as f64 / (stats.messages as f64 * d as f64);
+    let rate_off = (realized - plan.target_bits).abs() > plan.hysteresis * plan.target_bits;
+
+    let total_energy: f64 = stats.block_energy.iter().sum();
+    let shares: Vec<f64> = if total_energy > 0.0 {
+        stats.block_energy.iter().map(|e| e / total_energy).collect()
+    } else {
+        // a silent window carries no tilt information: keep the old shares
+        last_shares.to_vec()
+    };
+    let share_shift = shares
+        .iter()
+        .zip(last_shares)
+        .map(|(s, l)| (s - l).abs())
+        .fold(0.0f64, f64::max);
+    let shares_off = share_shift > plan.hysteresis;
+    if !rate_off && !shares_off {
+        return None;
+    }
+
+    let gain = if rate_off {
+        (plan.target_bits / realized).clamp(1.0 / MAX_STEP, MAX_STEP)
+    } else {
+        1.0
+    };
+    let mean_energy_per_comp = total_energy / d as f64;
+    let mut out = scales.to_vec();
+    let mut changed = false;
+    for b in 0..n {
+        if !scalable[b] {
+            continue;
+        }
+        let energy_per_comp = if block_components[b] > 0 {
+            stats.block_energy[b] / block_components[b] as f64
+        } else {
+            0.0
+        };
+        let tilt = if total_energy > 0.0 {
+            if energy_per_comp >= mean_energy_per_comp {
+                1.0 + plan.hysteresis
+            } else {
+                1.0 / (1.0 + plan.hysteresis)
+            }
+        } else {
+            1.0
+        };
+        let next = (scales[b] * gain * tilt).clamp(SCALE_MIN, SCALE_MAX);
+        if (next - out[b]).abs() > SCALE_EPS {
+            out[b] = next;
+            changed = true;
+        }
+    }
+    changed.then_some(out)
+}
+
+/// A committed scheme-epoch switch: the new epoch number and the spec both
+/// sides rebuild their chains against.
+#[derive(Clone, Debug)]
+pub struct SchemeSwitch {
+    pub epoch: u16,
+    pub scheme: Scheme,
+}
+
+/// Master-side online rate controller (see module docs). Drive it with
+/// [`Self::observe_message`] per folded update, [`Self::observe_round`]
+/// per folded aggregate, and [`Self::end_of_round`] after every round —
+/// the latter returns the [`SchemeSwitch`] to announce when a window
+/// boundary decides to move.
+pub struct RateController {
+    plan: AdaptivePlan,
+    /// The base spec every epoch's scales are applied to (never mutated).
+    base: Scheme,
+    /// Block ranges of the base spec at dimension d (layout-stable across
+    /// epochs: [`Scheme::with_block_scales`] keeps names and fractions).
+    block_ranges: Vec<std::ops::Range<usize>>,
+    block_components: Vec<usize>,
+    scalable: Vec<bool>,
+    scales: Vec<f64>,
+    last_shares: Vec<f64>,
+    stats: WindowStats,
+    epoch: u16,
+}
+
+impl RateController {
+    /// Build a controller for `base` bound at dimension `d`. Fails when
+    /// the plan is invalid or no block has a tunable rate parameter (an
+    /// all-`sign` spec cannot be rate-controlled — configuring the
+    /// controller on it would silently do nothing).
+    pub fn new(plan: AdaptivePlan, base: Scheme, d: usize) -> Result<Self> {
+        plan.validate()?;
+        let layout = base.block_layout(d)?;
+        let scalable = base.block_scalability();
+        anyhow::ensure!(
+            scalable.iter().any(|&s| s),
+            "[adaptive] needs at least one block with a rate parameter \
+             (k/k_frac/p) — {:?} has none",
+            base.spec()
+        );
+        let n = layout.len();
+        let block_components: Vec<usize> = layout.iter().map(|(_, r)| r.len()).collect();
+        Ok(Self {
+            plan,
+            base,
+            block_ranges: layout.into_iter().map(|(_, r)| r).collect(),
+            block_components: block_components.clone(),
+            scalable,
+            scales: vec![1.0; n],
+            // uniform-by-components prior: the first window's shift is
+            // measured against "every component equally unpredictable"
+            last_shares: block_components.iter().map(|&c| c as f64 / d as f64).collect(),
+            stats: WindowStats::new(n),
+            epoch: 0,
+        })
+    }
+
+    pub fn plan(&self) -> &AdaptivePlan {
+        &self.plan
+    }
+
+    /// Current scheme epoch (0 until the first switch).
+    pub fn epoch(&self) -> u16 {
+        self.epoch
+    }
+
+    /// The spec currently in force (base spec under the cumulative scales).
+    pub fn current_scheme(&self) -> Result<Scheme> {
+        self.base.with_block_scales(&self.scales)
+    }
+
+    /// Account one folded update's payload bits.
+    pub fn observe_message(&mut self, payload_bits: u64) {
+        self.stats.bits += payload_bits;
+        self.stats.messages += 1;
+    }
+
+    /// Account one round's folded aggregate (the averaged r̃ the master
+    /// broadcasts): per-block residual energy Σ agg[i]².
+    pub fn observe_round(&mut self, agg: &[f32]) {
+        for (b, range) in self.block_ranges.iter().enumerate() {
+            let mut e = 0.0f64;
+            for &v in &agg[range.clone()] {
+                e += v as f64 * v as f64;
+            }
+            self.stats.block_energy[b] += e;
+        }
+    }
+
+    /// Called after every round `t`. On a window boundary, runs [`decide`]
+    /// over the window's stats and resets them; returns the switch to
+    /// announce when the controller moves. At most one switch per window
+    /// by construction, and none once the epoch counter would overflow
+    /// the wire's u16.
+    pub fn end_of_round(&mut self, t: u64) -> Result<Option<SchemeSwitch>> {
+        if (t + 1) % self.plan.window != 0 {
+            return Ok(None);
+        }
+        let decision = if self.epoch == u16::MAX {
+            None
+        } else {
+            decide(
+                &self.plan,
+                &self.stats,
+                &self.block_components,
+                &self.scalable,
+                &self.scales,
+                &self.last_shares,
+            )
+        };
+        let total: f64 = self.stats.block_energy.iter().sum();
+        if total > 0.0 {
+            for (l, e) in self.last_shares.iter_mut().zip(&self.stats.block_energy) {
+                *l = e / total;
+            }
+        }
+        self.stats.reset();
+        match decision {
+            None => Ok(None),
+            Some(scales) => {
+                self.scales = scales;
+                self.epoch += 1;
+                Ok(Some(SchemeSwitch { epoch: self.epoch, scheme: self.current_scheme()? }))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(target: f64) -> AdaptivePlan {
+        AdaptivePlan { target_bits: target, window: 4, hysteresis: 0.1 }
+    }
+
+    fn controller(spec: &str, target: f64, d: usize) -> RateController {
+        RateController::new(plan(target), Scheme::parse(spec).unwrap(), d).unwrap()
+    }
+
+    #[test]
+    fn plan_validation() {
+        assert!(plan(4.0).validate().is_ok());
+        assert!(plan(0.0).validate().is_err());
+        assert!(plan(-1.0).validate().is_err());
+        assert!(AdaptivePlan { window: 0, ..plan(4.0) }.validate().is_err());
+        assert!(AdaptivePlan { hysteresis: 0.0, ..plan(4.0) }.validate().is_err());
+        assert!(AdaptivePlan { hysteresis: 1.0, ..plan(4.0) }.validate().is_err());
+    }
+
+    #[test]
+    fn refuses_specs_without_a_rate_parameter() {
+        let s = Scheme::parse("sign/plin/beta=0.9").unwrap();
+        assert!(RateController::new(plan(4.0), s, 100).is_err());
+        // one tunable block is enough
+        controller("blocks(a=0.5:topk:k=8/estk/ef;b=0.5:sign)", 4.0, 100);
+    }
+
+    #[test]
+    fn on_target_stable_shares_never_switch() {
+        let mut c = controller("topk:k=100/estk/ef/beta=0.9", 4.0, 1000);
+        let agg = vec![0.5f32; 1000];
+        for t in 0..32u64 {
+            // exactly on target: 4 bits/comp * 1000 comps per message
+            c.observe_message(4_000);
+            c.observe_round(&agg);
+            assert!(c.end_of_round(t).unwrap().is_none(), "flapped at round {t}");
+        }
+        assert_eq!(c.epoch(), 0);
+        assert_eq!(c.current_scheme().unwrap().spec(), "topk:k=100/estk/ef/beta=0.9");
+    }
+
+    #[test]
+    fn overspending_coarsens_toward_target() {
+        // base spends 16 bits/comp against a 4-bit target: the controller
+        // must walk k down across epochs (gain clamped at 1/2 per window)
+        let d = 1000usize;
+        let mut c = controller("topk:k=200/estk/ef/beta=0.9", 4.0, d);
+        let agg = vec![0.5f32; d];
+        let mut epochs = Vec::new();
+        let mut k_scale = 1.0f64;
+        for t in 0..24u64 {
+            // realized bits track the current scale (bits ∝ k)
+            c.observe_message((16_000.0 * k_scale) as u64);
+            c.observe_round(&agg);
+            if let Some(sw) = c.end_of_round(t).unwrap() {
+                k_scale = c.scales[0];
+                epochs.push((sw.epoch, sw.scheme.spec()));
+            }
+        }
+        assert!(epochs.len() >= 2, "over-spending base must force switches: {epochs:?}");
+        // epochs number consecutively from 1
+        for (i, (e, _)) in epochs.iter().enumerate() {
+            assert_eq!(*e as usize, i + 1);
+        }
+        // the final realized rate lands inside the deadband of the target
+        let realized = 16.0 * k_scale;
+        assert!(
+            (realized - 4.0).abs() <= 0.1 * 4.0 * 1.5,
+            "did not converge: realized {realized} bits/comp vs target 4"
+        );
+        // and per-block specs demonstrably changed across epochs
+        let specs: std::collections::BTreeSet<&String> =
+            epochs.iter().map(|(_, s)| s).collect();
+        assert!(specs.len() >= 2);
+    }
+
+    #[test]
+    fn residual_shift_respends_bits_across_blocks() {
+        let d = 1000usize;
+        let spec = "blocks(a=0.5:topk:k=50/estk/ef;b=0.5:topk:k=50/estk/ef)";
+        let mut c = controller(spec, 4.0, d);
+        // window 1: energy concentrated in block a, rate on target
+        let mut agg = vec![0.0f32; d];
+        agg[..500].iter_mut().for_each(|v| *v = 1.0);
+        let mut switched = None;
+        for t in 0..4u64 {
+            c.observe_message(4_000);
+            c.observe_round(&agg);
+            if let Some(sw) = c.end_of_round(t).unwrap() {
+                switched = Some(sw);
+            }
+        }
+        let sw = switched.expect("share shift must trigger a redistribution switch");
+        assert_eq!(sw.epoch, 1);
+        // block a (all the residual energy) gained rate, block b lost it
+        assert!(c.scales[0] > 1.0 && c.scales[1] < 1.0, "scales: {:?}", c.scales);
+        assert_ne!(sw.scheme.spec(), Scheme::parse(spec).unwrap().spec());
+    }
+
+    #[test]
+    fn decisions_replay_deterministically() {
+        let run = || {
+            let d = 800usize;
+            let mut c = controller(
+                "blocks(a=0.25:topk:k=20/estk/ef;b=0.75:topk:k_frac=0.05/estk/ef)",
+                3.0,
+                d,
+            );
+            let mut log = Vec::new();
+            for t in 0..40u64 {
+                // synthetic but fully deterministic signals
+                let bits = 3_000 + (t % 7) * 400;
+                c.observe_message(bits);
+                c.observe_message(bits / 2);
+                let agg: Vec<f32> =
+                    (0..d).map(|i| ((i as u64 * 31 + t * 17) % 13) as f32 / 13.0).collect();
+                c.observe_round(&agg);
+                if let Some(sw) = c.end_of_round(t).unwrap() {
+                    log.push((t, sw.epoch, sw.scheme.spec()));
+                }
+            }
+            log
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "controller must replay bit-identically");
+        // switches only ever land on window boundaries: ≤ 1 per window
+        for (t, _, _) in &a {
+            assert_eq!((t + 1) % 4, 0, "switch off the window boundary at t={t}");
+        }
+    }
+
+    #[test]
+    fn empty_window_and_epoch_cap_are_inert() {
+        let mut c = controller("topk:k=10/estk/ef", 4.0, 100);
+        for t in 0..8u64 {
+            assert!(c.end_of_round(t).unwrap().is_none(), "no traffic, no switch");
+        }
+        c.epoch = u16::MAX;
+        c.observe_message(1_000_000);
+        c.observe_round(&vec![1.0f32; 100]);
+        for t in 0..4u64 {
+            assert!(c.end_of_round(t).unwrap().is_none(), "epoch counter must not wrap");
+        }
+    }
+}

@@ -19,18 +19,23 @@
 //!   vector into named blocks, each compressed by an independent sub-scheme
 //!   (Zheng et al., blockwise momentum SGD with error-feedback), with
 //!   per-block rate accounting.
+//! * [`adaptive`] — the online per-block rate controller: measures realized
+//!   bits/component and per-block residual energy, and rewrites block rate
+//!   parameters between negotiated scheme epochs (DESIGN.md §8).
 //!
 //! Adding a new scheme is a one-file change: implement [`Quantize`] (and/or
 //! [`Predict`]), register it on a [`SchemeRegistry`], and every spec string,
 //! config file, and coordinator path can use it — no enum match arms to
 //! extend.
 
+pub mod adaptive;
 pub mod blockwise;
 pub mod codec;
 pub mod predict;
 pub mod quantize;
 pub mod registry;
 
+pub use adaptive::{AdaptivePlan, RateController, SchemeSwitch};
 pub use codec::{codec_for, KindCodec, PayloadCodec};
 pub use predict::{EstKPredictor, PLinPredictor, Predict, PredictorState, ZeroPredictor};
 pub use quantize::{

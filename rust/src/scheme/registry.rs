@@ -386,6 +386,39 @@ impl SingleScheme {
         .replace('-', "m")
     }
 
+    /// Whether this scheme has a tunable rate parameter (`k`, `k_frac`,
+    /// `p`/`prob`) the adaptive controller can scale. Fixed-rate quantizers
+    /// (sign, none) report `false` and keep their spec across scheme epochs.
+    pub fn has_rate_param(&self) -> bool {
+        ["k", "k_frac", "p", "prob"].iter().any(|key| self.quant_params.contains_key(*key))
+    }
+
+    /// A copy of this scheme with its rate parameters multiplied by
+    /// `scale` (k rounded and floored at 1; fractional parameters clamped
+    /// into (0, 1]). Returns `None` when the scheme has no rate parameter
+    /// or `scale` is not a positive finite number — the adaptive
+    /// controller leaves such blocks untouched. Scales are always applied
+    /// to the *base* spec, never compounded, so repeated re-scaling cannot
+    /// accumulate rounding drift.
+    pub fn with_rate_scale(&self, scale: f64) -> Option<SingleScheme> {
+        if !scale.is_finite() || scale <= 0.0 {
+            return None;
+        }
+        let mut params = self.quant_params.clone();
+        let mut scaled = false;
+        if let Some(k) = params.get_mut("k") {
+            *k = (*k * scale).round().max(1.0);
+            scaled = true;
+        }
+        for key in ["k_frac", "p", "prob"] {
+            if let Some(v) = params.get_mut(key) {
+                *v = (*v * scale).clamp(1e-9, 1.0);
+                scaled = true;
+            }
+        }
+        scaled.then(|| SingleScheme { quant_params: params, ..self.clone() })
+    }
+
     fn build_quantizer(&self, d: usize) -> Result<Arc<dyn Quantize>> {
         let q = (self.quant.build)(&self.quant_params, d)
             .with_context(|| format!("build quantizer {:?}", self.quant_name))?;
@@ -583,6 +616,53 @@ impl Scheme {
         }
     }
 
+    /// Per-block scalability mask (single schemes: one entry): whether the
+    /// adaptive controller can re-rate each block via
+    /// [`SingleScheme::with_rate_scale`].
+    pub fn block_scalability(&self) -> Vec<bool> {
+        match &*self.kind {
+            SchemeKind::Single(s) => vec![s.has_rate_param()],
+            SchemeKind::Blockwise(blocks) => {
+                blocks.iter().map(|b| b.scheme.has_rate_param()).collect()
+            }
+        }
+    }
+
+    /// A copy of this scheme with per-block rate scales applied (one scale
+    /// per block, in [`Self::block_layout`] order; single schemes take one
+    /// scale). Blocks without a rate parameter keep their spec verbatim —
+    /// the adaptive controller only tilts what is tunable. Block names and
+    /// fractions (and therefore the layout and the wire container shape)
+    /// are unchanged, so a re-scaled scheme stays compatible with the same
+    /// `[shards]`-free fabric the base spec ran on.
+    pub fn with_block_scales(&self, scales: &[f64]) -> Result<Scheme> {
+        match &*self.kind {
+            SchemeKind::Single(s) => {
+                anyhow::ensure!(scales.len() == 1, "single scheme takes exactly one scale");
+                let single = s.with_rate_scale(scales[0]).unwrap_or_else(|| s.clone());
+                Ok(Scheme { kind: Arc::new(SchemeKind::Single(single)) })
+            }
+            SchemeKind::Blockwise(blocks) => {
+                anyhow::ensure!(
+                    scales.len() == blocks.len(),
+                    "{} scales for {} blocks",
+                    scales.len(),
+                    blocks.len()
+                );
+                let scaled: Vec<BlockSpec> = blocks
+                    .iter()
+                    .zip(scales)
+                    .map(|(b, &scale)| BlockSpec {
+                        name: b.name.clone(),
+                        frac: b.frac,
+                        scheme: b.scheme.with_rate_scale(scale).unwrap_or_else(|| b.scheme.clone()),
+                    })
+                    .collect();
+                Ok(Scheme { kind: Arc::new(SchemeKind::Blockwise(scaled)) })
+            }
+        }
+    }
+
     /// Bind at dimension d into one master-side chain (call once per worker).
     pub fn master(&self, d: usize) -> Result<Box<dyn MasterScheme>> {
         match &*self.kind {
@@ -755,6 +835,40 @@ mod tests {
         assert_eq!(stats.nnz, 8);
         // and the global registry does not know it
         assert!(Scheme::parse("ident2:gain=2").is_err());
+    }
+
+    #[test]
+    fn rate_scaling_rewrites_tunable_blocks_only() {
+        let s = Scheme::parse("topk:k=100/estk/ef/beta=0.9").unwrap();
+        assert_eq!(s.block_scalability(), vec![true]);
+        let half = s.with_block_scales(&[0.5]).unwrap();
+        assert_eq!(half.spec(), "topk:k=50/estk/ef/beta=0.9");
+        // scales always apply to the base spec: no cumulative drift
+        let again = s.with_block_scales(&[0.5]).unwrap();
+        assert_eq!(again.spec(), half.spec());
+        // k floors at 1, fractions clamp into (0,1]
+        let tiny = Scheme::parse("topk:k=3").unwrap().with_block_scales(&[0.01]).unwrap();
+        assert!(tiny.spec().starts_with("topk:k=1/"));
+        let frac = Scheme::parse("randk:p=0.6").unwrap().with_block_scales(&[4.0]).unwrap();
+        assert!(frac.spec().starts_with("randk:p=1/"));
+        // sign has no rate parameter: untouched, and the mask says so
+        let sign = Scheme::parse("sign/plin/beta=0.8").unwrap();
+        assert_eq!(sign.block_scalability(), vec![false]);
+        assert_eq!(sign.with_block_scales(&[0.25]).unwrap().spec(), sign.spec());
+        // blockwise: per-block scales, untunable blocks verbatim, layout kept
+        let b = Scheme::parse("blocks(a=0.5:topk:k_frac=0.02/estk/ef;b=0.5:sign)").unwrap();
+        assert_eq!(b.block_scalability(), vec![true, false]);
+        let scaled = b.with_block_scales(&[0.5, 3.0]).unwrap();
+        assert_eq!(
+            scaled.spec(),
+            "blocks(a=0.5:topk:k_frac=0.01/estk/ef/beta=0.99;b=0.5:sign/zero/noef/beta=0.99)"
+        );
+        assert_eq!(scaled.block_layout(1000).unwrap(), b.block_layout(1000).unwrap());
+        // the rewritten spec round-trips through the registry
+        assert_eq!(Scheme::parse(&scaled.spec()).unwrap().spec(), scaled.spec());
+        // scale-count mismatch and bad scales are rejected / ignored
+        assert!(b.with_block_scales(&[1.0]).is_err());
+        assert_eq!(s.with_block_scales(&[f64::NAN]).unwrap().spec(), s.spec());
     }
 
     #[test]

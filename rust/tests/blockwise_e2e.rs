@@ -38,6 +38,7 @@ fn blockwise_scheme_end_to_end_over_channels() {
             pipelined: true,
             absent: vec![],
             membership: None,
+            adaptive: false,
         };
         handles.push(std::thread::spawn(move || {
             let mut rng = Pcg64::seeded(100 + wid as u64);
@@ -64,6 +65,7 @@ fn blockwise_scheme_end_to_end_over_channels() {
         data_noise: 1.0,
         aggregation: tempo::coordinator::AggMode::FullSync,
         membership: None,
+        adaptive: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
 

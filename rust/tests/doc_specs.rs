@@ -1,0 +1,104 @@
+//! Doc-spec gate: every scheme spec string quoted in `README.md` and
+//! `docs/SPEC.md` must resolve through the live registry and bind at a
+//! real model dimension — the documented grammar cannot drift from the
+//! implementation (DESIGN.md §1, docs/SPEC.md).
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use tempo::scheme::Scheme;
+
+fn repo_root() -> PathBuf {
+    // integration tests run from the crate dir (rust/); the docs live in
+    // the workspace root one level up
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// A quoted span is a *complete* spec when it names a registered
+/// quantizer (or a block list) and carries parameters, pipeline parts or
+/// blocks. Bare rate-quantizer names in reference tables (`topk`,
+/// `randk`, ...) are vocabulary, not specs; `none`/`sign` alone are
+/// valid complete specs.
+fn is_spec_candidate(s: &str) -> bool {
+    if s.is_empty() || s.contains(char::is_whitespace) || s.ends_with('(') {
+        return false;
+    }
+    if s == "none" || s == "sign" {
+        return true;
+    }
+    let starts = ["none:", "none/", "sign/", "topk", "topkq", "randk", "blocks("];
+    starts.iter().any(|p| s.starts_with(p)) && (s.contains(':') || s.contains('/'))
+}
+
+/// Extract candidate spans from markdown: inline `code`, "quoted"
+/// strings, and whole lines of fenced code blocks.
+fn candidates(text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut in_fence = false;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.starts_with("```") {
+            in_fence = !in_fence;
+            continue;
+        }
+        if in_fence && is_spec_candidate(trimmed) {
+            out.insert(trimmed.to_string());
+        }
+        for delim in ['`', '"'] {
+            for (i, span) in line.split(delim).enumerate() {
+                if i % 2 == 1 && is_spec_candidate(span) {
+                    out.insert(span.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_documented_spec_resolves_and_binds() {
+    let d = 8192usize;
+    let mut total = 0usize;
+    for doc in ["README.md", "docs/SPEC.md"] {
+        let path = repo_root().join(doc);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let specs = candidates(&text);
+        assert!(
+            !specs.is_empty(),
+            "{doc}: no spec strings found — extraction or docs broke"
+        );
+        for s in &specs {
+            let scheme = Scheme::parse(s)
+                .unwrap_or_else(|e| panic!("{doc}: quoted spec {s:?} does not parse: {e:#}"));
+            scheme
+                .worker(d)
+                .unwrap_or_else(|e| panic!("{doc}: quoted spec {s:?} does not bind: {e:#}"));
+            // the canonical form must round-trip (adaptive switches ship
+            // Scheme::spec() strings over the wire)
+            let canon = scheme.spec();
+            Scheme::parse(&canon).unwrap_or_else(|e| {
+                panic!("{doc}: canonical form {canon:?} of {s:?} does not re-parse: {e:#}")
+            });
+            total += 1;
+        }
+    }
+    assert!(total >= 8, "suspiciously few documented specs extracted: {total}");
+}
+
+#[test]
+fn extraction_rules_are_stable() {
+    // complete specs are kept
+    assert!(is_spec_candidate("topk:k_frac=0.0024/estk/ef/beta=0.99"));
+    assert!(is_spec_candidate("sign/plin/beta=0.99"));
+    assert!(is_spec_candidate("randk:p=0.01"));
+    assert!(is_spec_candidate("blocks(emb=0.25:topk:k=64/estk/ef;rest=0.75:sign/plin)"));
+    assert!(is_spec_candidate("none"));
+    assert!(is_spec_candidate("sign"));
+    // vocabulary, grammar fragments and prose are not
+    assert!(!is_spec_candidate("topk"));
+    assert!(!is_spec_candidate("randk"));
+    assert!(!is_spec_candidate("blocks("));
+    assert!(!is_spec_candidate("topk:k=64 keeps K components"));
+    assert!(!is_spec_candidate(""));
+}

@@ -36,6 +36,7 @@ fn run_fabric(
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
             membership: None,
+            adaptive: false,
         };
         let mut rng = Pcg64::new(seed, 7 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -62,6 +63,7 @@ fn run_fabric(
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
         membership: None,
+        adaptive: None,
     };
     let mut report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
@@ -200,6 +202,7 @@ fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
             pipelined: true,
             absent: Vec::new(),
             membership: None,
+            adaptive: false,
         };
         let mut rng = Pcg64::new(seed, 40 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -230,6 +233,7 @@ fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
             quorum: 2,
         },
         membership: None,
+        adaptive: None,
     };
     let transports: Vec<Box<dyn MasterTransport>> = vec![Box::new(m0), Box::new(m1)];
     let report = ShardedMasterLoop::new(master_spec, map, transports)

@@ -84,6 +84,7 @@ fn run_master_fleet_agg(d: usize, n: usize, steps: u64, threads: usize, agg: Agg
             pipelined: true,
             absent: Vec::new(),
             membership: None,
+            adaptive: false,
         };
         let mut rng = Pcg64::new(11, 100 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -110,6 +111,7 @@ fn run_master_fleet_agg(d: usize, n: usize, steps: u64, threads: usize, agg: Agg
         data_noise: 1.0,
         aggregation: agg,
         membership: None,
+        adaptive: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     for h in handles {

@@ -50,6 +50,7 @@ fn run_synthetic(
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
             membership: None,
+            adaptive: false,
         };
         let mut rng = Pcg64::new(seed, 1000 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -77,6 +78,7 @@ fn run_synthetic(
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
         membership: None,
+        adaptive: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
@@ -273,6 +275,7 @@ fn tcp_training_round_trip_with_pjrt_models() {
             pipelined: true,
             absent: vec![],
             membership: None,
+            adaptive: false,
         };
         let manifest = manifest.clone();
         let entry = entry.clone();
@@ -298,6 +301,7 @@ fn tcp_training_round_trip_with_pjrt_models() {
         data_noise: 4.0,
         aggregation: AggMode::FullSync,
         membership: None,
+        adaptive: None,
     };
     let transport = TcpMaster::from_listener(listener, n_workers).unwrap();
     let runtime = Runtime::new(manifest).unwrap();

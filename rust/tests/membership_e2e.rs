@@ -106,6 +106,7 @@ fn run_synthetic(
             pipelined: fabric.pipelined,
             absent: vec![],
             membership: elastic.map(|e| e.workers[wid].clone()),
+            adaptive: false,
         };
         let source = move |_w: &[f32], t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
             Ok((1.0, grad_at(seed, wid, t, d)))
@@ -130,6 +131,7 @@ fn run_synthetic(
         data_noise: 1.0,
         aggregation: AggMode::FullSync,
         membership: elastic.map(|e| e.plan.clone()),
+        adaptive: None,
     };
     let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =

@@ -1,0 +1,316 @@
+//! Adaptive rate control end-to-end (DESIGN.md §8): the negotiated
+//! scheme-epoch protocol through the real round engines.
+//!
+//! * **Deadband hold ≡ static.** A controller that never leaves its
+//!   hysteresis deadband must leave the run bit-identical to the static
+//!   engine — on the channel fabric and on 4-worker TCP under both master
+//!   I/O engines.
+//! * **Determinism.** Switch decisions replay bit-identically, land only
+//!   on window boundaries (≤ 1 switch per window), and the epoch timeline
+//!   shows the spec demonstrably changing.
+//! * **Epoch-switch identity.** After a switch, the run continues
+//!   bit-identically to a *fresh* run started from the synced `w` with the
+//!   new spec — the fleet-wide chain-reset contract.
+//! * **Drain barriers.** Under bounded staleness every update is folded by
+//!   the final window boundary; the switch never strands in-flight frames.
+//!
+//! Runs fully offline: synthetic gradient sources + headless masters.
+
+use tempo::comm::channel_fabric;
+use tempo::config::experiment::Backend;
+use tempo::config::{FabricSpec, IoBackend, ShardsSpec, TransportKind};
+use tempo::coordinator::launch::build_run_fabric;
+use tempo::coordinator::master::{MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
+use tempo::coordinator::AggMode;
+use tempo::optim::LrSchedule;
+use tempo::scheme::{AdaptivePlan, Scheme};
+use tempo::util::Pcg64;
+
+/// Fixed-k top-k blocks: payload bits are a deterministic function of the
+/// spec, so the realized rate sits exactly on any target measured from a
+/// static run (the deadband-hold fixture).
+const SPEC_HOLD: &str = "blocks(a=0.5:topk:k=16/estk/ef/beta=0.9;\
+                         b=0.5:topk:k=8/estk/ef/beta=0.9)";
+/// Over-spending base for the switching fixtures: against a tiny target
+/// the controller must coarsen at the very first window boundary.
+const SPEC_OVERSPEND: &str = "blocks(a=0.5:topk:k_frac=0.08/estk/ef/beta=0.9;\
+                              b=0.5:topk:k_frac=0.02/estk/ef/beta=0.9)";
+
+/// Gradient as a pure function of (seed, worker, absolute round): a fresh
+/// generator per draw, so a continuation run can replay rounds `t0..` of a
+/// longer run by offsetting `t` (the epoch-switch identity test).
+fn keyed_grad(seed: u64, wid: usize, t: u64, d: usize) -> Vec<f32> {
+    let mut rng = Pcg64::new(seed ^ t.wrapping_mul(0x9E37_79B9_7F4A_7C15), 1000 + wid as u64);
+    let mut g = vec![0.0f32; d];
+    rng.fill_gaussian(&mut g, 1.0);
+    g
+}
+
+fn worker_spec(wid: usize, scheme: &Scheme, steps: u64, seed: u64, adaptive: bool) -> WorkerSpec {
+    WorkerSpec {
+        worker_id: wid as u32,
+        model: "synthetic".into(),
+        scheme: scheme.clone(),
+        backend: Backend::Rust,
+        schedule: LrSchedule::constant(0.05),
+        steps,
+        seed,
+        clip_norm: None,
+        pipelined: true,
+        absent: vec![],
+        membership: None,
+        adaptive,
+    }
+}
+
+fn master_spec(
+    scheme: Scheme,
+    steps: u64,
+    seed: u64,
+    n: usize,
+    aggregation: AggMode,
+    adaptive: Option<AdaptivePlan>,
+) -> MasterSpec {
+    MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule: LrSchedule::constant(0.05),
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation,
+        membership: None,
+        adaptive,
+    }
+}
+
+/// Fleet over an arbitrary fabric (TCP / reactor / bounded staleness),
+/// parameters starting at zero.
+fn run_fabric_fleet(
+    fabric: &FabricSpec,
+    spec_str: &str,
+    adaptive: Option<AdaptivePlan>,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(spec_str).unwrap();
+    let shards = ShardsSpec { count: 1, assign: Vec::new() };
+    let (master_side, workers_tx, _stats) =
+        build_run_fabric(fabric, n, &shards, &scheme, d).unwrap();
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = worker_spec(wid, &scheme, steps, seed, adaptive.is_some());
+        let source = move |_w: &[f32], t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            Ok((1.0, keyed_grad(seed, wid, t, d)))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+    let mspec = master_spec(scheme, steps, seed, n, fabric.aggregation(), adaptive);
+    let report = master_side.run_headless(mspec, d).unwrap();
+    let mut summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    (report, summaries)
+}
+
+/// FullSync channel fleet starting from an explicit `w0`, with worker
+/// gradients keyed at absolute round `t0 + t` — the continuation harness.
+fn run_channel_fleet_from(
+    spec_str: &str,
+    adaptive: Option<AdaptivePlan>,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+    t0: u64,
+    w0: Vec<f32>,
+) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(spec_str).unwrap();
+    let (master_tx, workers_tx) = channel_fabric(n);
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = worker_spec(wid, &scheme, steps, seed, adaptive.is_some());
+        let w_init = w0.clone();
+        let source = move |_w: &[f32], t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            Ok((1.0, keyed_grad(seed, wid, t0 + t, d)))
+        };
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), w_init)
+                .run_local()
+                .unwrap()
+        }));
+    }
+    let mspec = master_spec(scheme, steps, seed, n, AggMode::FullSync, adaptive);
+    let report = MasterLoop::new(mspec, master_tx).run_headless_from(w0).unwrap();
+    let mut summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    summaries.sort_by_key(|s| s.worker_id);
+    (report, summaries)
+}
+
+fn w_bits(report: &MasterReport) -> Vec<u32> {
+    report.final_w.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn deadband_hold_is_bit_identical_to_the_static_engine() {
+    let (d, n, steps, seed) = (400usize, 4usize, 8u64, 11u64);
+    let channel = FabricSpec::default();
+    let tcp_threads = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Threads,
+        ..Default::default()
+    };
+    let tcp_reactor = FabricSpec {
+        transport: TransportKind::Tcp,
+        io: IoBackend::Reactor,
+        ..Default::default()
+    };
+    for (label, fabric) in
+        [("channel", channel), ("tcp/threads", tcp_threads), ("tcp/reactor", tcp_reactor)]
+    {
+        let (stat, stat_sum) = run_fabric_fleet(&fabric, SPEC_HOLD, None, d, n, steps, seed);
+        // fixed-k payloads: the static run's realized rate IS the target,
+        // so a wide deadband pins the controller in its hold state
+        let plan = AdaptivePlan {
+            target_bits: stat.comm.bits_per_component(),
+            window: 4,
+            hysteresis: 0.5,
+        };
+        let (adpt, adpt_sum) =
+            run_fabric_fleet(&fabric, SPEC_HOLD, Some(plan), d, n, steps, seed);
+        assert_eq!(w_bits(&adpt), w_bits(&stat), "{label}: deadband hold changed final_w");
+        assert_eq!(adpt.comm.messages(), stat.comm.messages(), "{label}");
+        assert_eq!(adpt.comm.total_bits(), stat.comm.total_bits(), "{label}");
+        // the whole run stays in epoch 0 on the base spec
+        let eps = adpt.comm.scheme_epochs();
+        assert_eq!(eps.len(), 1, "{label}: controller flapped: {eps:?}");
+        assert_eq!(eps[0].epoch, 0);
+        assert_eq!(eps[0].spec, Scheme::parse(SPEC_HOLD).unwrap().spec());
+        // workers computed the same trajectory (inline sends, same math)
+        for (a, s) in adpt_sum.iter().zip(&stat_sum) {
+            let ab: Vec<u64> = a.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+            let sb: Vec<u64> = s.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, sb, "{label}: worker {} e_mse diverged", a.worker_id);
+            assert!(!a.pipelined, "adaptive workers must send inline");
+        }
+        // static runs never open a scheme-epoch timeline
+        assert!(stat.comm.scheme_epochs().is_empty());
+    }
+}
+
+#[test]
+fn switches_replay_deterministically_and_respect_the_window() {
+    let (d, n, steps, seed) = (400usize, 2usize, 8u64, 29u64);
+    let plan = AdaptivePlan { target_bits: 0.05, window: 4, hysteresis: 0.1 };
+    let run = || {
+        run_channel_fleet_from(SPEC_OVERSPEND, Some(plan), d, n, steps, seed, 0, vec![0.0f32; d])
+    };
+    let (a, _) = run();
+    let (b, _) = run();
+    assert_eq!(w_bits(&a), w_bits(&b), "adaptive run must replay bit-identically");
+    let tl_a: Vec<(u16, String, u64, u64)> = a
+        .comm
+        .scheme_epochs()
+        .iter()
+        .map(|e| (e.epoch, e.spec.clone(), e.bits, e.messages))
+        .collect();
+    let tl_b: Vec<(u16, String, u64, u64)> = b
+        .comm
+        .scheme_epochs()
+        .iter()
+        .map(|e| (e.epoch, e.spec.clone(), e.bits, e.messages))
+        .collect();
+    assert_eq!(tl_a, tl_b, "epoch timelines must replay bit-identically");
+
+    // the tiny target forces a coarsening switch at the first boundary,
+    // and decisions are capped at one per window
+    assert!(tl_a.len() >= 2, "over-spending base never switched: {tl_a:?}");
+    assert!(tl_a.len() as u64 <= 1 + steps / plan.window, "too many switches: {tl_a:?}");
+    for (i, (epoch, _, _, _)) in tl_a.iter().enumerate() {
+        assert_eq!(*epoch as usize, i, "epochs must number consecutively");
+    }
+    // the spec demonstrably changed, and the realized rate moved toward
+    // the target (coarser than the base epoch)
+    assert_ne!(tl_a[0].1, tl_a[1].1, "switch must rewrite the spec");
+    let eps = a.comm.scheme_epochs();
+    assert!(
+        eps[1].bits_per_component(d) < eps[0].bits_per_component(d),
+        "switch must coarsen toward the target: {tl_a:?}"
+    );
+}
+
+#[test]
+fn epoch_switch_continues_bit_identically_to_a_fresh_run() {
+    let (d, n, steps, seed) = (400usize, 2usize, 8u64, 43u64);
+    let plan = AdaptivePlan { target_bits: 0.05, window: 4, hysteresis: 0.1 };
+    let zero = vec![0.0f32; d];
+
+    // full adaptive run: switches at the t=3 boundary, runs through t=7
+    let (full, _) =
+        run_channel_fleet_from(SPEC_OVERSPEND, Some(plan), d, n, steps, seed, 0, zero.clone());
+    let eps = full.comm.scheme_epochs();
+    assert!(eps.len() >= 2, "fixture must switch at the first boundary: {eps:?}");
+    let switched_spec = eps[1].spec.clone();
+
+    // prefix run, stopped at the switch round: its final_w is exactly the
+    // absolute w the sync_scheme broadcast shipped
+    let (prefix, _) =
+        run_channel_fleet_from(SPEC_OVERSPEND, Some(plan), d, n, plan.window, seed, 0, zero);
+    let peps = prefix.comm.scheme_epochs();
+    assert_eq!(peps.len(), 2, "prefix must end right at the switch: {peps:?}");
+    assert_eq!(peps[1].spec, switched_spec, "prefix and full run must agree on the switch");
+    assert_eq!(peps[1].messages, 0, "no update is coded under the new epoch yet");
+
+    // fresh static run: new spec, synced w, gradients keyed at the absolute
+    // rounds the full run saw — must land on the full run's final_w exactly
+    let (cont, _) = run_channel_fleet_from(
+        &switched_spec,
+        None,
+        d,
+        n,
+        steps - plan.window,
+        seed,
+        plan.window,
+        prefix.final_w.clone(),
+    );
+    assert_eq!(
+        w_bits(&cont),
+        w_bits(&full),
+        "switched run diverged from a fresh run off the synced w + new spec"
+    );
+}
+
+#[test]
+fn bounded_staleness_boundaries_drain_every_update() {
+    let (d, n, steps, seed) = (400usize, 3usize, 12u64, 7u64);
+    let fabric = FabricSpec { max_staleness: 2, quorum: 2, ..Default::default() };
+    let plan = AdaptivePlan { target_bits: 0.05, window: 4, hysteresis: 0.1 };
+    let (report, summaries) =
+        run_fabric_fleet(&fabric, SPEC_OVERSPEND, Some(plan), d, n, steps, seed);
+    // steps is a window multiple: the final boundary is a drain barrier,
+    // so every update folds and none strand in the inbox
+    assert_eq!(report.comm.messages(), steps * n as u64);
+    assert_eq!(report.comm.unconsumed_updates(), 0);
+    assert!(report.comm.max_staleness() <= 2, "staleness bound violated");
+    // the controller still converges down from the over-spending base
+    let eps = report.comm.scheme_epochs();
+    assert!(eps.len() >= 2, "no switch under bounded staleness: {eps:?}");
+    let folded: u64 = eps.iter().map(|e| e.messages).sum();
+    assert_eq!(folded, report.comm.messages(), "every update credits exactly one epoch");
+    for s in &summaries {
+        assert_eq!(s.rounds, steps);
+    }
+    assert!(report.final_w_norm > 0.0);
+}

@@ -168,6 +168,7 @@ fn prop_frame_wire_roundtrip() {
             kind: tempo::comm::FrameKind::Update,
             worker: (g.u64() & 0xFFFF) as u32,
             shard: (g.u64() & 0xFFFF) as u16,
+            scheme_epoch: (g.u64() & 0xFFFF) as u16,
             round: g.u64(),
             payload_tag: (g.u64() & 0x7) as u8,
             payload_bits: g.u64() & 0xFFFF_FFFF,
@@ -177,6 +178,7 @@ fn prop_frame_wire_roundtrip() {
         let back = Frame::deserialize(&f.serialize()).map_err(|e| e.to_string())?;
         if back.worker != f.worker
             || back.shard != f.shard
+            || back.scheme_epoch != f.scheme_epoch
             || back.round != f.round
             || back.payload_bits != f.payload_bits
             || back.bytes != f.bytes

@@ -58,6 +58,7 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
         kind,
         worker: (g.u64() & 0xFFFF) as u32,
         shard: (g.u64() & 0xFFFF) as u16,
+        scheme_epoch: (g.u64() & 0xFFFF) as u16,
         round: g.u64(),
         payload_tag: (g.u64() & 0x7) as u8,
         bytes: (0..nbytes).map(|_| (g.u64() & 0xFF) as u8).collect(),
@@ -79,6 +80,7 @@ fn prop_roundtrip_survives_any_chunking() {
         if back.kind != frame.kind
             || back.worker != frame.worker
             || back.shard != frame.shard
+            || back.scheme_epoch != frame.scheme_epoch
             || back.round != frame.round
             || back.payload_tag != frame.payload_tag
             || back.payload_bits != frame.payload_bits
@@ -134,6 +136,7 @@ fn frames_equal(a: &Frame, b: &Frame) -> bool {
     a.kind == b.kind
         && a.worker == b.worker
         && a.shard == b.shard
+        && a.scheme_epoch == b.scheme_epoch
         && a.round == b.round
         && a.payload_tag == b.payload_tag
         && a.payload_bits == b.payload_bits

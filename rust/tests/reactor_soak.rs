@@ -196,6 +196,7 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
             pipelined: false,
             absent: vec![],
             membership: Some(worker_plan(wid)),
+            adaptive: false,
         };
         let mut rng = Pcg64::new(seed, 0x50A4 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -258,6 +259,7 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
         data_noise: 1.0,
         aggregation: AggMode::FullSync,
         membership: Some(plan),
+        adaptive: None,
     };
     let report = MasterLoop::new(master_spec, master).run_headless(d).unwrap();
 

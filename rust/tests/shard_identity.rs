@@ -57,6 +57,7 @@ fn run_fleet(
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
             membership: None,
+            adaptive: false,
         };
         let mut rng = Pcg64::new(seed, 500 + wid as u64);
         let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
@@ -84,6 +85,7 @@ fn run_fleet(
         data_noise: 1.0,
         aggregation: fabric.aggregation(),
         membership: None,
+        adaptive: None,
     };
     let report = master_side.run_headless(master_spec, d).unwrap();
     let mut summaries: Vec<WorkerSummary> =

@@ -71,7 +71,7 @@ if [[ "$MODE" == "bench" ]]; then
     # Bench trajectory: run every [[bench]] target in smoke mode, collect
     # per-bench mean/p50/p99 + Melem/s, and assemble BENCH_<N>.json at the
     # repo root (N = current PR sequence number; bump when seeding anew).
-    BENCH_OUT="BENCH_6.json"
+    BENCH_OUT="BENCH_7.json"
     JSON_DIR="target/bench-json"
     mkdir -p "$JSON_DIR"
     BENCHES=(coding pipeline runtime paper_tables)
@@ -133,6 +133,7 @@ fi
 if [[ "$MODE" == "full" ]]; then
     phase "fmt" cargo fmt --check
     phase "clippy" cargo clippy --workspace --all-targets -- -D warnings
+    phase "doc" env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
 fi
 
 phase "build" cargo build --release --workspace

@@ -13,11 +13,11 @@
 #   * committed copy is already real  ->  do nothing (one point per PR;
 #     runner noise must not rewrite the trajectory on every push)
 #
-# Usage: scripts/commit_bench.sh [BENCH_N.json]   (default: BENCH_6.json)
+# Usage: scripts/commit_bench.sh [BENCH_N.json]   (default: BENCH_7.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_6.json}"
+OUT="${1:-BENCH_7.json}"
 
 # exit 0 when $1 is a real (comparable) smoke point, 1 otherwise
 is_real() {
