@@ -96,6 +96,8 @@ fn run_fleet_once(adaptive: Option<AdaptivePlan>, d: usize, n: usize, steps: u64
             clip_norm: None,
             pipelined: true,
             absent: vec![],
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: adaptive.is_some(),
         };

@@ -162,13 +162,23 @@ Fabric spec tokens (--fabric, comma-separated; see DESIGN.md §2/§6):
   straggler=W:MS[;W:MS]         per-worker pre-send delay in ms
   drop=P,retransmit_ms=T        drop-and-retransmit injection
   churn=W:A..B[;...]            worker W absent for rounds [A, B)
+  dead_grace=S                  liveness deadline in seconds (default 2): a member
+                                silent this long is staged for eviction at the
+                                next fleet-epoch boundary (DESIGN.md §10)
+  chaos=W:KIND:A..B[;...]       injected fault for worker W over rounds [A, B):
+                                wedge (alive but silent), crash (abrupt close +
+                                backoff re-join), halfopen (crash behind a held-
+                                open socket); crash/halfopen need tcp
   e.g.  --fabric tcp,staleness=2,quorum=2,straggler=1:5,drop=0.01,churn=3:10..20
+  e.g.  --fabric tcp,dead_grace=0.5,chaos=1:wedge:4..999
 
 Elastic membership (--membership or the [membership] table; DESIGN.md §7):
   min=N,max=N,admit=R           epoch-phased coordinator: workers join/leave at
                                 fleet-epoch boundaries (every R rounds); joins
                                 park as pending until the boundary, admissions
-                                get fresh prediction chains + re-keyed shards
+                                get fresh prediction chains + re-keyed shards;
+                                a fleet dipping below min parks in the Holding
+                                phase until quorum returns (DESIGN.md §10)
   e.g.  --membership min=2,max=4,admit=8
 
 Adaptive rate control (--adaptive or the [adaptive] table; DESIGN.md §8):

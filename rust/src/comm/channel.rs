@@ -24,7 +24,10 @@
 //! error on the master instead of a blocked `recv_any`. The policy is the
 //! shared [`PeerTracker`] — the same code the TCP and reactor masters run.
 
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -153,6 +156,25 @@ impl MasterTransport for ChannelMaster {
                 return Ok(Some(x));
             }
         }
+    }
+
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let (wid, frame) = match self.up.recv_timeout(left) {
+                Ok(x) => x,
+                Err(RecvTimeoutError::Timeout) => return Ok(None),
+                Err(RecvTimeoutError::Disconnected) => anyhow::bail!("all workers hung up"),
+            };
+            if let Some(x) = self.absorb(wid, frame)? {
+                return Ok(Some(x));
+            }
+        }
+    }
+
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        self.tracker.expired(grace)
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {

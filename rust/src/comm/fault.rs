@@ -1,22 +1,30 @@
 //! Deterministic fault/scenario injection for the worker side of the
-//! fabric: per-worker straggler delay and message drop-and-retransmit.
+//! fabric: per-worker straggler delay, message drop-and-retransmit, and
+//! chaos wedges (a live connection that silently stops delivering frames).
 //!
 //! The injector wraps any [`WorkerTransport`] (or its split-off
 //! [`FrameSender`]) and perturbs *when* frames go out, never *what* goes
 //! out — the wire content is untouched, so a faulted run still decodes
-//! exactly, it just arrives late and costs retransmissions. Randomness
+//! exactly, it just arrives late and costs retransmissions. A wedge window
+//! is the one exception: frames whose round falls inside it are swallowed
+//! whole (counted, never delivered), which is precisely the failure the
+//! master's liveness deadline exists to evict (DESIGN.md §10). Randomness
 //! comes from a per-worker seeded [`Pcg64`], so a scenario replays
 //! identically for a given `[fabric]` seed. Worker churn (join/leave
 //! mid-run) is the third scenario axis and lives in the worker loop
 //! itself (absent rounds send [`Frame::skip`] markers); see
 //! `coordinator::worker`.
+//!
+//! [`ReconnectBackoff`] is the worker-side recovery half: a seeded
+//! exponential backoff with deterministic jitter that paces reconnect
+//! attempts after a drop, replacing immediate re-dials.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use super::frame::Frame;
+use super::frame::{Frame, FrameKind};
 use super::{FrameSender, WorkerTransport};
 use crate::util::Pcg64;
 
@@ -28,6 +36,8 @@ pub struct FaultStats {
     pub retransmits: u64,
     /// wall-clock the injector slept (straggler + retransmit timeouts)
     pub injected_delay_secs: f64,
+    /// frames swallowed by wedge chaos windows (never delivered)
+    pub wedged_frames: u64,
 }
 
 /// One worker's injection policy. Cloning shares the stats accumulator but
@@ -42,6 +52,9 @@ pub struct FaultPolicy {
     drop_prob: f64,
     /// simulated retransmission timeout per lost frame
     retransmit: Duration,
+    /// chaos wedge windows: frames with `round` in `[from, to)` are
+    /// swallowed (the socket stays alive and silent)
+    wedge: Vec<(u64, u64)>,
     rng: Pcg64,
     stats: Arc<Mutex<FaultStats>>,
 }
@@ -59,14 +72,36 @@ impl FaultPolicy {
                 .then(|| Duration::from_secs_f64(straggler_ms / 1e3)),
             drop_prob: drop_prob.clamp(0.0, 0.999),
             retransmit: Duration::from_secs_f64(retransmit_ms.max(0.0) / 1e3),
+            wedge: Vec::new(),
             rng: Pcg64::new(seed, 0xFA17 + worker_id as u64),
             stats: Arc::new(Mutex::new(FaultStats::default())),
         }
     }
 
+    /// Add chaos wedge windows (builder style, used by the launcher glue).
+    pub fn with_wedge_windows(mut self, windows: Vec<(u64, u64)>) -> Self {
+        self.wedge = windows;
+        self
+    }
+
     /// Handle to the shared counters (read by the launcher post-run).
     pub fn stats(&self) -> Arc<Mutex<FaultStats>> {
         Arc::clone(&self.stats)
+    }
+
+    /// Whether a frame falls inside a wedge window and must be swallowed.
+    /// Shutdown frames (done/abort markers) always pass: a wedged worker
+    /// that survives to the end of the run still announces a clean exit,
+    /// and the wedge is a *frame* fault, not a process death.
+    fn swallows(&mut self, frame: &Frame) -> bool {
+        if frame.kind == FrameKind::Shutdown {
+            return false;
+        }
+        let wedged = self.wedge.iter().any(|&(a, b)| (a..b).contains(&frame.round));
+        if wedged {
+            self.stats.lock().unwrap().wedged_frames += 1;
+        }
+        wedged
     }
 
     /// Sleep/account for every injected event preceding one send. The
@@ -111,6 +146,9 @@ impl<T: WorkerTransport> FaultInjector<T> {
 
 impl<T: WorkerTransport> WorkerTransport for FaultInjector<T> {
     fn send_update(&mut self, frame: Frame) -> Result<()> {
+        if self.policy.swallows(&frame) {
+            return Ok(());
+        }
         self.policy.before_send();
         self.inner.send_update(frame)
     }
@@ -141,8 +179,60 @@ pub struct FaultSender {
 
 impl FrameSender for FaultSender {
     fn send(&mut self, frame: Frame) -> Result<()> {
+        if self.policy.swallows(&frame) {
+            return Ok(());
+        }
         self.policy.before_send();
         self.inner.send(frame)
+    }
+}
+
+/// Seeded exponential backoff with deterministic jitter for reconnect
+/// attempts after a connection drop. The delay for attempt `k` is
+/// `base · 2^k`, capped at `cap`, scaled by a jitter factor in [0.5, 1.0)
+/// drawn from a per-worker [`Pcg64`] stream — so a churn scenario replays
+/// its exact reconnect cadence for a given `[fabric]` seed, while distinct
+/// workers never thundering-herd the master on the same schedule.
+pub struct ReconnectBackoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: Pcg64,
+}
+
+impl ReconnectBackoff {
+    /// Default pacing: 50 ms doubling up to 2 s.
+    pub fn new(seed: u64, worker_id: u32) -> Self {
+        Self::with_pacing(seed, worker_id, Duration::from_millis(50), Duration::from_secs(2))
+    }
+
+    /// Custom pacing (tests use millisecond-scale windows).
+    pub fn with_pacing(seed: u64, worker_id: u32, base: Duration, cap: Duration) -> Self {
+        Self {
+            base,
+            cap,
+            attempt: 0,
+            rng: Pcg64::new(seed, 0xBAC0FF ^ (worker_id as u64)),
+        }
+    }
+
+    /// The next delay in the schedule (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.base.as_secs_f64() * 2f64.powi(self.attempt.min(16) as i32);
+        let capped = exp.min(self.cap.as_secs_f64());
+        self.attempt = self.attempt.saturating_add(1);
+        Duration::from_secs_f64(capped * (0.5 + 0.5 * self.rng.uniform()))
+    }
+
+    /// Number of delays handed out so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Reset after a successful reconnect, so the next drop starts the
+    /// schedule from `base` again.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
     }
 }
 
@@ -186,6 +276,56 @@ mod tests {
         // p=0.5 over 50 sends: expected ~50 retransmits; zero would mean
         // the drop path never fired
         assert!(a > 5, "retransmits {a}");
+    }
+
+    #[test]
+    fn wedge_window_swallows_frames_but_not_shutdown_markers() {
+        let (mut master, workers) = channel_fabric(1);
+        let policy =
+            FaultPolicy::new(0.0, 0.0, 0.0, 7, 0).with_wedge_windows(vec![(2, 4)]);
+        let stats = policy.stats();
+        let mut w = FaultInjector::new(workers.into_iter().next().unwrap(), policy);
+        for t in 0..6u64 {
+            w.send_update(Frame::skip(0, t)).unwrap();
+        }
+        // the done marker goes out even though its round field is in-window
+        let mut done = Frame::done(0);
+        done.round = 3;
+        w.send_update(done).unwrap();
+        let mut rounds = Vec::new();
+        while let Some((_, f)) = master.try_recv_any().unwrap() {
+            rounds.push(f.round);
+        }
+        assert_eq!(rounds, vec![0, 1, 4, 5], "rounds 2 and 3 swallowed");
+        assert_eq!(stats.lock().unwrap().wedged_frames, 2);
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_seed_deterministic() {
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut b = ReconnectBackoff::with_pacing(
+                seed,
+                3,
+                Duration::from_millis(10),
+                Duration::from_millis(80),
+            );
+            (0..6).map(|_| b.next_delay()).collect()
+        };
+        let a = schedule(5);
+        let b = schedule(5);
+        assert_eq!(a, b, "same seed, same reconnect cadence");
+        let c = schedule(6);
+        assert_ne!(a, c, "different seed jitters differently");
+        for (k, d) in a.iter().enumerate() {
+            let raw = (10.0 * 2f64.powi(k as i32)).min(80.0) / 1e3;
+            let s = d.as_secs_f64();
+            assert!(s >= raw * 0.5 - 1e-9 && s < raw + 1e-9, "attempt {k}: {s} vs {raw}");
+        }
+        let mut r = ReconnectBackoff::new(0, 0);
+        r.next_delay();
+        assert_eq!(r.attempts(), 1);
+        r.reset();
+        assert_eq!(r.attempts(), 0);
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub use sender::PipelinedSender;
 pub use shard::{ShardMap, ShardedWorkerEndpoint};
 
 use anyhow::Result;
+use std::time::{Duration, Instant};
 
 /// Master-side view of one worker endpoint's liveness. Workers announce a
 /// clean end of run with [`Frame::done`] and abnormal termination with
@@ -79,11 +80,20 @@ pub(crate) struct PeerTracker {
     state: Vec<PeerState>,
     /// newest connection generation seen per worker id
     latest_gen: Vec<u64>,
+    /// liveness-deadline clock: when each peer last produced evidence of
+    /// life (any frame, or a completed handshake). The elastic engine
+    /// treats `last_heard` older than `dead_grace` as a wedge — socket
+    /// alive, worker silent — and stages the peer for boundary eviction.
+    last_heard: Vec<Instant>,
 }
 
 impl PeerTracker {
     pub(crate) fn new(n: usize) -> Self {
-        Self { state: vec![PeerState::Alive; n], latest_gen: vec![0; n] }
+        Self {
+            state: vec![PeerState::Alive; n],
+            latest_gen: vec![0; n],
+            last_heard: vec![Instant::now(); n],
+        }
     }
 
     /// A worker that vanished mid-run without its done marker, if any.
@@ -95,10 +105,26 @@ impl PeerTracker {
         self.state[wid]
     }
 
+    /// Peers past their liveness deadline: every `Lost` peer (the
+    /// connection itself is gone — no grace needed) plus every `Alive`
+    /// peer that has been silent for at least `grace`. `Done` peers are
+    /// *expected* to be quiet and never expire.
+    pub(crate) fn expired(&self, grace: Duration) -> Vec<usize> {
+        let now = Instant::now();
+        (0..self.state.len())
+            .filter(|&wid| match self.state[wid] {
+                PeerState::Lost => true,
+                PeerState::Alive => now.duration_since(self.last_heard[wid]) >= grace,
+                PeerState::Done => false,
+            })
+            .collect()
+    }
+
     /// Apply one arriving frame; `Ok(Some)` hands it to the engine, `Err`
     /// means the worker aborted mid-run.
     pub(crate) fn on_frame(&mut self, wid: usize, frame: Frame) -> Result<Option<(usize, Frame)>> {
         anyhow::ensure!(wid < self.state.len(), "bad worker id {wid}");
+        self.last_heard[wid] = Instant::now();
         if frame.kind == FrameKind::Shutdown {
             if self.state[wid] == PeerState::Done {
                 return Ok(None); // post-done Drop marker: expected
@@ -126,6 +152,7 @@ impl PeerTracker {
     /// Connection generation `gen` for `wid` completed its handshake.
     pub(crate) fn on_joined(&mut self, wid: usize, gen: u64) {
         self.latest_gen[wid] = self.latest_gen[wid].max(gen);
+        self.last_heard[wid] = Instant::now();
         if self.state[wid] == PeerState::Lost {
             self.state[wid] = PeerState::Alive;
         }
@@ -207,6 +234,31 @@ pub trait MasterTransport: Send {
     /// Non-blocking poll: `Ok(None)` when nothing is queued right now.
     fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>>;
 
+    /// Bounded-blocking receive: the next frame from any worker, or
+    /// `Ok(None)` if no frame arrives within `timeout`. Unlike
+    /// [`MasterTransport::recv_any`] — which bails after `dead_grace`
+    /// when a still-needed worker is lost (the fixed-fleet contract) —
+    /// this method reports silence instead of erroring, because under
+    /// elastic membership silence is *information*: the engine answers
+    /// it with [`MasterTransport::expired_peers`] and a staged eviction
+    /// rather than a crash.
+    ///
+    /// The default (for transports without liveness deadlines, e.g. test
+    /// doubles) degrades to a plain blocking receive.
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        let _ = timeout;
+        self.recv_any().map(Some)
+    }
+
+    /// Worker ids past their liveness deadline: lost connections, plus
+    /// connected-but-silent peers whose last frame is at least `grace`
+    /// old (the wedge case: socket alive, no frames). Transports without
+    /// per-peer clocks report none.
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        let _ = grace;
+        Vec::new()
+    }
+
     fn broadcast(&mut self, frame: &Frame) -> Result<()>;
 
     /// Broadcast and report the exact recipient roster: `roster[wid]` is
@@ -237,6 +289,14 @@ impl MasterTransport for Box<dyn MasterTransport> {
 
     fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
         (**self).try_recv_any()
+    }
+
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        (**self).recv_any_timeout(timeout)
+    }
+
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        (**self).expired_peers(grace)
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {

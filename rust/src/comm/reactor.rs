@@ -39,6 +39,7 @@ use anyhow::{Context, Result};
 
 use super::frame::Frame;
 use super::framed::{encode_frame, FrameAccumulator};
+use super::tcp::{DEFAULT_DEAD_GRACE, HANDSHAKE_GRACE_FACTOR};
 use super::{MasterTransport, PeerTracker};
 
 /// Default per-connection broadcast write-queue bound (frames). Sized far
@@ -46,11 +47,6 @@ use super::{MasterTransport, PeerTracker};
 /// bounded staleness ≤ `max_staleness + 2`) — see
 /// `FabricSpec::reactor_queue_bound` for the config-driven derivation.
 pub const DEFAULT_QUEUE_BOUND: usize = 16;
-
-/// How long an accepted connection may sit without completing its
-/// id handshake before it is dropped (mirrors the threads backend's
-/// 5-second handshake read deadline).
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Per-`read` ceiling when filling a connection's accumulator.
 const READ_CHUNK: usize = 64 * 1024;
@@ -353,7 +349,7 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream, queue_bound: usize) -> Self {
+    fn new(stream: TcpStream, queue_bound: usize, handshake_timeout: Duration) -> Self {
         Self {
             stream,
             worker: None,
@@ -361,7 +357,7 @@ impl Conn {
             acc: FrameAccumulator::new(),
             wq: WriteQueue::new(queue_bound),
             want_write: false,
-            handshake_deadline: Instant::now() + HANDSHAKE_TIMEOUT,
+            handshake_deadline: Instant::now() + handshake_timeout,
         }
     }
 
@@ -428,6 +424,10 @@ pub struct ReactorMaster {
     /// how long `recv_any` waits for a lost worker to reconnect before
     /// declaring it hung up (same default as the threads backend)
     pub dead_grace: Duration,
+    /// how long an accepted connection may sit without completing its id
+    /// handshake before it is dropped (HANDSHAKE_GRACE_FACTOR × dead_grace,
+    /// mirroring the threads backend's derived read deadline)
+    handshake_timeout: Duration,
 }
 
 impl ReactorMaster {
@@ -459,6 +459,19 @@ impl ReactorMaster {
         initial: usize,
         queue_bound: usize,
     ) -> Result<Self> {
+        Self::from_listener_graced(listener, n_workers, initial, queue_bound, DEFAULT_DEAD_GRACE)
+    }
+
+    /// Full-control constructor: partial rendezvous plus a configured
+    /// liveness deadline (`[fabric] dead_grace`), from which the handshake
+    /// expiry is derived — one liveness clock, same as the threads backend.
+    pub fn from_listener_graced(
+        listener: TcpListener,
+        n_workers: usize,
+        initial: usize,
+        queue_bound: usize,
+        dead_grace: Duration,
+    ) -> Result<Self> {
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
         anyhow::ensure!(
             (1..=n_workers).contains(&initial),
@@ -483,7 +496,8 @@ impl ReactorMaster {
             roster_scratch: Vec::new(),
             staged_spare: None,
             queue_bound,
-            dead_grace: Duration::from_secs(2),
+            dead_grace,
+            handshake_timeout: dead_grace.mul_f64(HANDSHAKE_GRACE_FACTOR),
         };
         while m.ever_joined.iter().filter(|&&j| j).count() < initial {
             m.turn(None)?;
@@ -586,7 +600,8 @@ impl ReactorMaster {
                     if self.poller.register(stream.as_raw_fd(), token, false).is_err() {
                         continue; // connection dropped
                     }
-                    self.conns[slot] = Some(Conn::new(stream, self.queue_bound));
+                    self.conns[slot] =
+                        Some(Conn::new(stream, self.queue_bound, self.handshake_timeout));
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
@@ -799,6 +814,29 @@ impl MasterTransport for ReactorMaster {
                 return Ok(None);
             }
         }
+    }
+
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        // no lost-worker bail (contrast recv_any): under elastic
+        // membership the engine reads silence through expired_peers and
+        // stages a boundary eviction instead of erroring the run
+        let deadline = Instant::now() + timeout;
+        loop {
+            while let Some(ev) = self.events_q.pop_front() {
+                if let Some(x) = self.apply(ev)? {
+                    return Ok(Some(x));
+                }
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            self.turn(Some(left))?;
+        }
+    }
+
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        self.tracker.expired(grace)
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {

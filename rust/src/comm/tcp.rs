@@ -20,7 +20,7 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -117,6 +117,15 @@ enum Event {
 /// `None` while a worker is down.
 type Writers = Arc<Vec<Mutex<Option<TcpStream>>>>;
 
+/// Default liveness deadline when `[fabric] dead_grace` is not set.
+pub(crate) const DEFAULT_DEAD_GRACE: Duration = Duration::from_secs(2);
+
+/// The handshake read deadline is this multiple of `dead_grace`: a dialer
+/// gets strictly longer than one liveness window to say who it is, so a
+/// loaded-but-honest worker is never cut off by the same clock that evicts
+/// wedged members (2.5 × the 2 s default preserves the historical 5 s).
+pub(crate) const HANDSHAKE_GRACE_FACTOR: f64 = 2.5;
+
 /// Master endpoint: one accepted connection per worker id. The accept
 /// thread runs for the master's lifetime so dropped workers can reconnect.
 pub struct TcpMaster {
@@ -159,6 +168,20 @@ impl TcpMaster {
         n_workers: usize,
         initial: usize,
     ) -> Result<Self> {
+        Self::from_listener_graced(listener, n_workers, initial, DEFAULT_DEAD_GRACE)
+    }
+
+    /// Full-control constructor: partial rendezvous plus a configured
+    /// liveness deadline (`[fabric] dead_grace`). The handshake read
+    /// deadline in the accept loop is derived from the same knob
+    /// ([`HANDSHAKE_GRACE_FACTOR`] × `dead_grace`) so there is exactly one
+    /// liveness clock to tune.
+    pub fn from_listener_graced(
+        listener: TcpListener,
+        n_workers: usize,
+        initial: usize,
+        dead_grace: Duration,
+    ) -> Result<Self> {
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
         anyhow::ensure!(
             (1..=n_workers).contains(&initial),
@@ -172,8 +195,17 @@ impl TcpMaster {
 
         let accept_writers = Arc::clone(&writers);
         let accept_shutdown = Arc::clone(&shutdown);
+        let handshake_timeout = dead_grace.mul_f64(HANDSHAKE_GRACE_FACTOR);
         std::thread::spawn(move || {
-            accept_loop(listener, n_workers, tx, reg_tx, accept_writers, accept_shutdown);
+            accept_loop(
+                listener,
+                n_workers,
+                handshake_timeout,
+                tx,
+                reg_tx,
+                accept_writers,
+                accept_shutdown,
+            );
         });
 
         // wait for the initial rendezvous complement of workers
@@ -195,7 +227,7 @@ impl TcpMaster {
             peer_epoch: vec![0; n_workers],
             bcast_scratch: Vec::new(),
             shutdown,
-            dead_grace: Duration::from_secs(2),
+            dead_grace,
         })
     }
 
@@ -247,6 +279,7 @@ impl Drop for TcpMaster {
 fn accept_loop(
     listener: TcpListener,
     n_workers: usize,
+    handshake_timeout: Duration,
     tx: Sender<Event>,
     reg_tx: Sender<usize>,
     writers: Writers,
@@ -264,8 +297,9 @@ fn accept_loop(
         stream.set_nodelay(true).ok();
         // handshake carries the worker id; junk connections are dropped,
         // and a silent one cannot block the accept loop (and with it every
-        // future reconnect) — it gets a read deadline
-        stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+        // future reconnect) — it gets a read deadline derived from the
+        // configured dead_grace (HANDSHAKE_GRACE_FACTOR × dead_grace)
+        stream.set_read_timeout(Some(handshake_timeout)).ok();
         let (id, epoch) = match read_frame(&mut stream) {
             Ok(hello) if (hello.worker as usize) < n_workers => {
                 (hello.worker as usize, hello.payload_bits)
@@ -352,6 +386,30 @@ impl MasterTransport for TcpMaster {
                 return Ok(Some(x));
             }
         }
+    }
+
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        // unlike recv_any there is no lost-worker bail here: the elastic
+        // engine interprets silence via expired_peers and stages an
+        // eviction instead of crashing the run
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            let ev = match self.rx.recv_timeout(left) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => return Ok(None),
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("master accept thread died")
+                }
+            };
+            if let Some(x) = self.absorb(ev)? {
+                return Ok(Some(x));
+            }
+        }
+    }
+
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        self.tracker.expired(grace)
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {

@@ -1,7 +1,8 @@
 //! `[fabric]` configuration: which transport the round engine runs over,
 //! how aggressively it pipelines/relaxes synchrony, and which degraded-
 //! network scenarios to inject (per-worker stragglers, message
-//! drop-and-retransmit, worker churn).
+//! drop-and-retransmit, worker churn, and chaos faults — wedges, crashes,
+//! half-open drops).
 //!
 //! Two front doors map onto the same [`FabricSpec`]:
 //!
@@ -19,14 +20,30 @@
 //! retransmit_ms = 2.0         # simulated retransmission timeout
 //! straggler = "1:5;3:2.5"     # worker:delay_ms per send
 //! churn = "2:10..20"          # worker absent for rounds [10, 20)
+//! dead_grace = 2.0            # liveness deadline (seconds): how long the
+//!                             # master waits on a silent peer before
+//!                             # staging its eviction
+//! chaos = "1:wedge:4..999"    # worker:kind:from..to fault schedule
+//!                             # (kinds: wedge | crash | halfopen)
 //! seed = 7                    # fault RNG seed
 //! ```
 //!
 //! and the CLI override `--fabric tcp,io=reactor,staleness=2,quorum=2,
-//! drop=0.01,straggler=1:5,churn=2:10..20` (comma-separated tokens;
-//! unlisted fields keep their current values, so `--fabric tcp` alone just
-//! switches the transport). `--io reactor|threads` is sugar for the `io=`
-//! token.
+//! drop=0.01,straggler=1:5,churn=2:10..20,dead_grace=0.5,chaos=1:wedge:4..999`
+//! (comma-separated tokens; unlisted fields keep their current values, so
+//! `--fabric tcp` alone just switches the transport). `--io
+//! reactor|threads` is sugar for the `io=` token.
+//!
+//! Chaos kinds (DESIGN.md §10):
+//! * `wedge` — the worker's connection stays alive but every non-shutdown
+//!   frame whose round falls in `[from, to)` is silently swallowed; the
+//!   master's liveness deadline evicts the member at the next boundary.
+//! * `crash` — the worker abruptly closes its socket before sending round
+//!   `from` (no done marker), waits out a seeded exponential backoff, and
+//!   re-joins through the handshake as a fresh admission. TCP only.
+//! * `halfopen` — like `crash`, but the dead socket is held open (silent)
+//!   for the whole backoff, so the master sees a wedge, not an EOF. TCP
+//!   only.
 
 use anyhow::{Context, Result};
 
@@ -61,6 +78,17 @@ pub enum IoBackend {
     Reactor,
 }
 
+/// One kind of injected chaos fault (see the module doc for semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Connection stays alive; frames in the round window are swallowed.
+    Wedge,
+    /// Abrupt socket close without a done marker, then backoff + re-join.
+    Crash,
+    /// Like `Crash`, but the dead socket is held open during the backoff.
+    HalfOpen,
+}
+
 /// Fully-resolved fabric configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FabricSpec {
@@ -88,6 +116,12 @@ pub struct FabricSpec {
     pub retransmit_ms: f64,
     /// (worker, from, to): absent for rounds [from, to) — churn.
     pub churn: Vec<(usize, u64, u64)>,
+    /// Liveness deadline in seconds: how long the master tolerates a
+    /// silent peer before staging its timeout eviction (also sizes the
+    /// handshake read deadline at 2.5×).
+    pub dead_grace: f64,
+    /// (worker, kind, from, to): chaos fault schedule.
+    pub chaos: Vec<(usize, ChaosKind, u64, u64)>,
     /// Seed for the per-worker fault RNGs.
     pub seed: u64,
 }
@@ -96,7 +130,7 @@ impl Default for FabricSpec {
     fn default() -> Self {
         Self {
             transport: TransportKind::Channel,
-            io: IoBackend::Threads,
+            io: IoBackend::Reactor,
             io_queue: crate::comm::reactor::DEFAULT_QUEUE_BOUND,
             pipelined: true,
             max_staleness: 0,
@@ -105,6 +139,8 @@ impl Default for FabricSpec {
             drop_prob: 0.0,
             retransmit_ms: 1.0,
             churn: Vec::new(),
+            dead_grace: 2.0,
+            chaos: Vec::new(),
             seed: 0,
         }
     }
@@ -120,9 +156,36 @@ impl FabricSpec {
         }
     }
 
-    /// Whether any send-path fault injection is configured.
+    /// Whether any send-path fault injection is configured (wedge chaos
+    /// rides the same injector; crash/halfopen are driven by the launcher).
     pub fn has_faults(&self) -> bool {
-        self.drop_prob > 0.0 || !self.straggler_ms.is_empty()
+        self.drop_prob > 0.0
+            || !self.straggler_ms.is_empty()
+            || self.chaos.iter().any(|&(_, k, _, _)| k == ChaosKind::Wedge)
+    }
+
+    /// The liveness deadline as a [`std::time::Duration`].
+    pub fn dead_grace_duration(&self) -> std::time::Duration {
+        std::time::Duration::from_secs_f64(self.dead_grace)
+    }
+
+    /// Chaos entries scheduled for one worker.
+    pub fn chaos_for(&self, worker: usize) -> Vec<(ChaosKind, u64, u64)> {
+        self.chaos
+            .iter()
+            .filter(|&&(w, _, _, _)| w == worker)
+            .map(|&(_, k, a, b)| (k, a, b))
+            .collect()
+    }
+
+    /// Wedge windows for one worker (what the send-path fault injector
+    /// swallows frames inside of).
+    pub fn wedge_windows_for(&self, worker: usize) -> Vec<(u64, u64)> {
+        self.chaos
+            .iter()
+            .filter(|&&(w, k, _, _)| w == worker && k == ChaosKind::Wedge)
+            .map(|&(_, _, a, b)| (a, b))
+            .collect()
     }
 
     /// Effective reactor write-queue bound: the configured `io_queue`,
@@ -167,6 +230,25 @@ impl FabricSpec {
         for &(_, ms) in &self.straggler_ms {
             anyhow::ensure!(ms >= 0.0, "fabric.straggler delays must be >= 0");
         }
+        anyhow::ensure!(
+            self.dead_grace > 0.0,
+            "fabric.dead_grace must be > 0 seconds, got {}",
+            self.dead_grace
+        );
+        for &(w, kind, a, b) in &self.chaos {
+            anyhow::ensure!(a < b, "fabric.chaos range for worker {w} must satisfy from < to");
+            anyhow::ensure!(
+                kind == ChaosKind::Wedge || self.transport == TransportKind::Tcp,
+                "fabric.chaos {kind:?} for worker {w} needs transport = \"tcp\" (a channel \
+                 worker cannot close and re-dial its socket)"
+            );
+        }
+        for w in self.chaos.iter().map(|&(w, ..)| w) {
+            anyhow::ensure!(
+                self.chaos.iter().filter(|&&(x, ..)| x == w).count() == 1,
+                "fabric.chaos allows one entry per worker, worker {w} has several"
+            );
+        }
         Ok(())
     }
 
@@ -202,6 +284,12 @@ impl FabricSpec {
         }
         if let Some(x) = v.opt("churn") {
             s.churn = parse_churn(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("dead_grace") {
+            s.dead_grace = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("chaos") {
+            s.chaos = parse_chaos(x.as_str()?)?;
         }
         if let Some(x) = v.opt("seed") {
             s.seed = x.as_int()? as u64;
@@ -256,6 +344,11 @@ impl FabricSpec {
                     }
                     "straggler" => self.straggler_ms = parse_stragglers(val)?,
                     "churn" => self.churn = parse_churn(val)?,
+                    "dead_grace" => {
+                        self.dead_grace =
+                            val.parse().with_context(|| format!("fabric dead_grace={val:?}"))?
+                    }
+                    "chaos" => self.chaos = parse_chaos(val)?,
                     "seed" => {
                         self.seed = val.parse().with_context(|| format!("fabric seed={val:?}"))?
                     }
@@ -293,6 +386,35 @@ fn parse_stragglers(s: &str) -> Result<Vec<(usize, f64)>> {
             Ok((
                 w.trim().parse().with_context(|| format!("straggler worker {w:?}"))?,
                 ms.trim().parse().with_context(|| format!("straggler delay {ms:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+/// `"1:wedge:4..8;2:crash:6..9"` → [(1, Wedge, 4, 8), (2, Crash, 6, 9)]
+fn parse_chaos(s: &str) -> Result<Vec<(usize, ChaosKind, u64, u64)>> {
+    s.split(';')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let mut parts = t.splitn(3, ':');
+            let (w, kind, range) = (
+                parts.next().context("chaos entries are worker:kind:from..to")?,
+                parts.next().context("chaos entries are worker:kind:from..to")?,
+                parts.next().context("chaos entries are worker:kind:from..to")?,
+            );
+            let kind = match kind.trim() {
+                "wedge" => ChaosKind::Wedge,
+                "crash" => ChaosKind::Crash,
+                "halfopen" => ChaosKind::HalfOpen,
+                other => anyhow::bail!("unknown chaos kind {other:?} (wedge|crash|halfopen)"),
+            };
+            let (a, b) = range.split_once("..").context("chaos range is from..to")?;
+            Ok((
+                w.trim().parse().with_context(|| format!("chaos worker {w:?}"))?,
+                kind,
+                a.trim().parse().with_context(|| format!("chaos from {a:?}"))?,
+                b.trim().parse().with_context(|| format!("chaos to {b:?}"))?,
             ))
         })
         .collect()
@@ -402,6 +524,48 @@ mod tests {
             "a healthy bounded-staleness worker may lag max_staleness rounds; the \
              flow-control bound must sit above that"
         );
+    }
+
+    #[test]
+    fn chaos_and_dead_grace_parse_from_both_front_doors() {
+        let mut f = FabricSpec::default();
+        f.apply_str("tcp,dead_grace=0.25,chaos=1:wedge:4..8;2:crash:6..9").unwrap();
+        assert!((f.dead_grace - 0.25).abs() < 1e-12);
+        assert_eq!(
+            f.chaos,
+            vec![(1, ChaosKind::Wedge, 4, 8), (2, ChaosKind::Crash, 6, 9)]
+        );
+        assert_eq!(f.chaos_for(2), vec![(ChaosKind::Crash, 6, 9)]);
+        assert_eq!(f.wedge_windows_for(1), vec![(4, 8)]);
+        assert!(f.wedge_windows_for(2).is_empty(), "crash is not a send-path fault");
+        assert!(f.has_faults(), "wedge chaos rides the send-path injector");
+        assert_eq!(
+            f.dead_grace_duration(),
+            std::time::Duration::from_millis(250)
+        );
+
+        let v = toml::parse(
+            "[fabric]\ntransport = \"tcp\"\ndead_grace = 1.5\n\
+             chaos = \"0:halfopen:10..20\"\n",
+        )
+        .unwrap();
+        let g = FabricSpec::from_value(v.get("fabric").unwrap()).unwrap();
+        assert!((g.dead_grace - 1.5).abs() < 1e-12);
+        assert_eq!(g.chaos, vec![(0, ChaosKind::HalfOpen, 10, 20)]);
+        assert!(!g.has_faults(), "crash/halfopen alone do not wrap the injector");
+    }
+
+    #[test]
+    fn chaos_validation_rejects_bad_schedules() {
+        let mut f = FabricSpec::default();
+        assert!(f.apply_str("chaos=1:warp:4..8").is_err(), "unknown kind");
+        assert!(f.apply_str("tcp,chaos=1:wedge:8..8").is_err(), "empty window");
+        assert!(f.apply_str("dead_grace=0").is_err(), "grace must be positive");
+        // crash/halfopen need a socket to close and re-dial
+        assert!(f.apply_str("channel,chaos=1:crash:4..8").is_err());
+        assert!(f.apply_str("channel,chaos=1:wedge:4..8").is_ok(), "wedge works on channel");
+        // one chaos entry per worker
+        assert!(f.apply_str("tcp,chaos=1:wedge:4..8;1:crash:9..10").is_err());
     }
 
     #[test]

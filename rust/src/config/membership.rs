@@ -3,7 +3,7 @@
 //!
 //! ```toml
 //! [membership]
-//! min_workers = 2    # quorum floor: below this the fleet cools down
+//! min_workers = 2    # quorum floor: below this the fleet parks in Holding
 //! max_workers = 4    # admission cap (0 / omitted = the launched fleet)
 //! admit_at = 8       # fleet-epoch length in rounds; admissions and
 //!                    # evictions happen only at multiples of this
@@ -70,11 +70,18 @@ impl MembershipCfg {
 
     /// Master-side plan: the lowest-id workers up to the admission cap are
     /// the launch members; any slots beyond the cap park as pending and
-    /// are admitted at epoch boundaries if seats free up.
-    pub fn master_plan(&self, fleet: usize) -> Result<MembershipPlan> {
+    /// are admitted at epoch boundaries if seats free up. `dead_grace` is
+    /// the liveness deadline the elastic engine evicts on — callers pass
+    /// the fabric's configured value so engine and transport share one
+    /// clock.
+    pub fn master_plan(
+        &self,
+        fleet: usize,
+        dead_grace: std::time::Duration,
+    ) -> Result<MembershipPlan> {
         let spec = self.spec(fleet)?;
         let initial = (0..fleet.min(spec.max_workers)).collect();
-        Ok(MembershipPlan { spec, initial })
+        Ok(MembershipPlan { spec, initial, dead_grace })
     }
 
     /// Worker-side plan for config-driven runs: every launched worker
@@ -141,7 +148,7 @@ mod tests {
         assert_eq!(m, MembershipCfg { min_workers: 2, max_workers: 4, admit_at: 8 });
         let spec = m.spec(4).unwrap();
         assert_eq!((spec.min_workers, spec.max_workers, spec.admit_at), (2, 4, 8));
-        let plan = m.master_plan(4).unwrap();
+        let plan = m.master_plan(4, std::time::Duration::from_secs(2)).unwrap();
         assert_eq!(plan.initial, vec![0, 1, 2, 3]);
         assert!(m.worker_plan().wants(0) && m.worker_plan().wants(1_000_000));
     }
@@ -152,7 +159,7 @@ mod tests {
         assert_eq!(m.spec(6).unwrap().max_workers, 6);
         // an explicit cap below the fleet parks the tail slots as pending
         let m = MembershipCfg { min_workers: 1, max_workers: 3, admit_at: 4 };
-        let plan = m.master_plan(5).unwrap();
+        let plan = m.master_plan(5, std::time::Duration::from_secs(2)).unwrap();
         assert_eq!(plan.initial, vec![0, 1, 2]);
         // and a cap above the fleet clamps to the slots that exist
         let m = MembershipCfg { min_workers: 1, max_workers: 64, admit_at: 4 };

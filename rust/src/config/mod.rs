@@ -16,7 +16,7 @@ pub mod value;
 
 pub use adaptive::AdaptiveCfg;
 pub use experiment::{ExperimentConfig, SchemeSpec};
-pub use fabric::{FabricSpec, IoBackend, TransportKind};
+pub use fabric::{ChaosKind, FabricSpec, IoBackend, TransportKind};
 pub use membership::MembershipCfg;
 pub use shards::ShardsSpec;
 pub use value::Value;

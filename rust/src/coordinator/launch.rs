@@ -5,17 +5,21 @@
 //! loops are identical either way (multi-process deployments reuse them
 //! via cli::master_serve / worker_connect).
 
+use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats};
+use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats, ReconnectBackoff};
 use crate::comm::tcp::{TcpMaster, TcpWorker};
 use crate::comm::{
     channel_fabric, MasterTransport, ReactorMaster, ShardMap, ShardedWorkerEndpoint,
     WorkerTransport,
 };
-use crate::config::{ExperimentConfig, FabricSpec, IoBackend, ShardsSpec, TransportKind};
+use crate::config::{
+    ChaosKind, ExperimentConfig, FabricSpec, IoBackend, ShardsSpec, TransportKind,
+};
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
 use crate::metrics::{CommStats, RunPoint};
 use crate::model::{Manifest, ModelKind};
@@ -93,7 +97,14 @@ pub type Fabric =
 /// Per-worker endpoints plus the master endpoint for the configured
 /// transport. Boxed so the two fabrics share every downstream code path.
 pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
+    Ok(build_fabric_addr(fabric, n)?.0)
+}
+
+/// [`build_fabric`] plus the master's bound address (TCP fabrics only) —
+/// what the chaos cycle driver re-dials after a crash leg.
+pub fn build_fabric_addr(fabric: &FabricSpec, n: usize) -> Result<(Fabric, Option<SocketAddr>)> {
     let mut workers: Vec<Box<dyn WorkerTransport>> = Vec::with_capacity(n);
+    let mut master_addr = None;
     let master: Box<dyn MasterTransport> = match fabric.transport {
         TransportKind::Channel => {
             let (m, ws) = channel_fabric(n);
@@ -108,6 +119,7 @@ pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
             let listener =
                 std::net::TcpListener::bind("127.0.0.1:0").context("bind fabric socket")?;
             let addr = listener.local_addr()?;
+            master_addr = Some(addr);
             for wid in 0..n {
                 workers.push(Box::new(
                     TcpWorker::connect(addr, wid as u32)
@@ -121,7 +133,7 @@ pub fn build_fabric(fabric: &FabricSpec, n: usize) -> Result<Fabric> {
     if fabric.has_faults() {
         workers = wrap_faults(fabric, workers, &mut fault_stats);
     }
-    Ok((master, workers, fault_stats))
+    Ok(((master, workers, fault_stats), master_addr))
 }
 
 /// Accept `n` workers on a bound listener with the configured master-side
@@ -133,11 +145,16 @@ pub fn master_from_listener(
     listener: std::net::TcpListener,
     n: usize,
 ) -> Result<Box<dyn MasterTransport>> {
+    let grace = fabric.dead_grace_duration();
     Ok(match fabric.io {
-        IoBackend::Threads => Box::new(TcpMaster::from_listener(listener, n)?),
-        IoBackend::Reactor => {
-            Box::new(ReactorMaster::from_listener(listener, n, fabric.reactor_queue_bound())?)
-        }
+        IoBackend::Threads => Box::new(TcpMaster::from_listener_graced(listener, n, n, grace)?),
+        IoBackend::Reactor => Box::new(ReactorMaster::from_listener_graced(
+            listener,
+            n,
+            n,
+            fabric.reactor_queue_bound(),
+            grace,
+        )?),
     })
 }
 
@@ -156,11 +173,90 @@ fn wrap_faults(
                 fabric.retransmit_ms,
                 fabric.seed,
                 wid as u32,
-            );
+            )
+            .with_wedge_windows(fabric.wedge_windows_for(wid));
             fault_stats.push(policy.stats());
             Box::new(FaultInjector::new(transport, policy)) as Box<dyn WorkerTransport>
         })
         .collect()
+}
+
+/// Drive one worker through a crash (or half-open) chaos cycle
+/// (DESIGN.md §10): run until round `depart` and vanish — no Leave, no
+/// completion marker, the socket just drops (leg 1) — sit out a seeded
+/// exponential backoff, re-dial the master, and run the remaining rounds
+/// as a fresh incarnation that fences off its own stale seat (leg 2,
+/// `rejoin`). Half-open additionally holds a cloned write half across the
+/// backoff, so the master sees pure silence instead of EOF: its liveness
+/// deadline, not the socket, is what must evict us. Backoff pacing is tied
+/// to `dead_grace` (base = grace/40, cap = grace — the documented
+/// 50 ms → 2 s default at the default grace), so shrinking the deadline in
+/// tests shrinks the whole cycle with it.
+#[allow(clippy::too_many_arguments)]
+fn run_chaos_cycle(
+    spec: WorkerSpec,
+    mut transport: Box<dyn WorkerTransport>,
+    shard: Shard,
+    shard2: Shard,
+    dataset: Arc<dyn Dataset>,
+    runtime: &Runtime,
+    kind: ChaosKind,
+    depart: u64,
+    seed: u64,
+    dead_grace: Duration,
+    addr: SocketAddr,
+) -> Result<WorkerSummary> {
+    let wid = spec.worker_id;
+    let hold = match kind {
+        ChaosKind::HalfOpen => transport.split_sender().ok(),
+        _ => None,
+    };
+    let mut spec1 = spec.clone();
+    spec1.depart_at = Some(depart);
+    let s1 = WorkerLoop::new(spec1, transport, shard, Arc::clone(&dataset)).run(runtime)?;
+    // leg 1's socket dropped with the loop above: a crash presents EOF/RST
+    // to the master; half-open keeps `hold`'s fd alive so the master sees
+    // nothing at all until the re-dial below supersedes the connection
+    let mut backoff = ReconnectBackoff::with_pacing(
+        seed,
+        wid,
+        (dead_grace / 40).max(Duration::from_millis(1)),
+        dead_grace.max(Duration::from_millis(50)),
+    );
+    let t2 = loop {
+        std::thread::sleep(backoff.next_delay());
+        match TcpWorker::connect(addr, wid) {
+            Ok(t) => break t,
+            Err(e) => anyhow::ensure!(
+                backoff.attempts() < 12,
+                "worker {wid}: chaos re-dial failed after {} attempts: {e:#}",
+                backoff.attempts()
+            ),
+        }
+    };
+    drop(hold);
+    let mut spec2 = spec;
+    spec2.rejoin = true;
+    let s2 = WorkerLoop::new(spec2, t2, shard2, dataset).run(runtime)?;
+    Ok(merge_chaos_legs(s1, s2))
+}
+
+/// Merge a chaos worker's two run legs into the one summary the launcher
+/// reports: traces concatenate (leg 1 covers rounds up to the crash, leg 2
+/// the rounds after re-admission), phase clocks and skip counts add, and
+/// the loss tail is leg 2's (the post-recovery trajectory is the one that
+/// matters) unless it never trained.
+fn merge_chaos_legs(mut a: WorkerSummary, b: WorkerSummary) -> WorkerSummary {
+    a.phases.merge(&b.phases);
+    a.e_mse_trace.extend(b.e_mse_trace);
+    a.u_norm_trace.extend(b.u_norm_trace);
+    a.skipped_rounds += b.skipped_rounds;
+    if b.mean_loss_last_quarter != 0.0 {
+        a.mean_loss_last_quarter = b.mean_loss_last_quarter;
+    }
+    a.rounds = a.rounds.max(b.rounds);
+    a.pipelined = a.pipelined || b.pipelined;
+    a
 }
 
 /// What [`build_sharded_fabric`] hands back: one master endpoint per
@@ -180,8 +276,15 @@ pub fn build_sharded_fabric(
     map: &Arc<ShardMap>,
 ) -> Result<ShardedFabric> {
     let n_shards = map.n_shards();
-    // inner fabrics carry no fault injection of their own
-    let clean = FabricSpec { straggler_ms: Vec::new(), drop_prob: 0.0, ..fabric.clone() };
+    // inner fabrics carry no fault injection of their own (chaos wedges
+    // included — the sharded endpoint wrap below swallows each logical
+    // update once, so every shard sees the same wedged schedule)
+    let clean = FabricSpec {
+        straggler_ms: Vec::new(),
+        drop_prob: 0.0,
+        chaos: Vec::new(),
+        ..fabric.clone()
+    };
     let mut masters = Vec::with_capacity(n_shards);
     let mut per_worker: Vec<Vec<Box<dyn WorkerTransport>>> =
         (0..n).map(|_| Vec::with_capacity(n_shards)).collect();
@@ -237,15 +340,27 @@ pub fn build_run_fabric(
     scheme: &Scheme,
     d: usize,
 ) -> Result<RunFabric> {
+    Ok(build_run_fabric_addr(fabric, n, shards, scheme, d)?.0)
+}
+
+/// [`build_run_fabric`] plus the master's bound address (plain TCP fabrics
+/// only) — what the chaos cycle driver re-dials after a crash leg.
+pub fn build_run_fabric_addr(
+    fabric: &FabricSpec,
+    n: usize,
+    shards: &ShardsSpec,
+    scheme: &Scheme,
+    d: usize,
+) -> Result<(RunFabric, Option<SocketAddr>)> {
     if shards.is_sharded() {
         let layout = scheme.block_layout(d)?;
         let map = shards.build_map(&layout).context("invalid [shards] for this scheme")?;
         let map = Arc::new(map);
         let (masters, workers, stats) = build_sharded_fabric(fabric, n, &map)?;
-        Ok((MasterEndpoints::Sharded(map, masters), workers, stats))
+        Ok(((MasterEndpoints::Sharded(map, masters), workers, stats), None))
     } else {
-        let (master, workers, stats) = build_fabric(fabric, n)?;
-        Ok((MasterEndpoints::Plain(master), workers, stats))
+        let ((master, workers, stats), addr) = build_fabric_addr(fabric, n)?;
+        Ok(((MasterEndpoints::Plain(master), workers, stats), addr))
     }
 }
 
@@ -289,8 +404,8 @@ pub fn run_training_with_manifest(
     let dataset = build_dataset(entry.kind, &entry, cfg);
     let schedule = cfg.schedule();
 
-    let (master_side, workers_tx, fault_stats) =
-        build_run_fabric(&cfg.fabric, cfg.workers, &cfg.shards, &scheme, d)?;
+    let ((master_side, workers_tx, fault_stats), master_addr) =
+        build_run_fabric_addr(&cfg.fabric, cfg.workers, &cfg.shards, &scheme, d)?;
 
     let mut handles = Vec::with_capacity(cfg.workers);
     for (wid, transport) in workers_tx.into_iter().enumerate() {
@@ -305,17 +420,43 @@ pub fn run_training_with_manifest(
             clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
             pipelined: cfg.fabric.pipelined,
             absent: cfg.fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
             membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
             adaptive: cfg.adaptive.is_some(),
         };
         let shard = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
         let dataset = Arc::clone(&dataset);
         let manifest = manifest.clone();
-        handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
-            // PJRT objects are !Send: each worker builds its own runtime
-            let runtime = Runtime::new(manifest)?;
-            WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
-        }));
+        // wedge chaos rides the fault injector (wrap_faults); a crash or
+        // half-open entry routes this worker through the two-leg cycle
+        let cycle = cfg
+            .fabric
+            .chaos_for(wid)
+            .into_iter()
+            .find(|&(k, _, _)| k != ChaosKind::Wedge);
+        match cycle {
+            None => handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
+                // PJRT objects are !Send: each worker builds its own runtime
+                let runtime = Runtime::new(manifest)?;
+                WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
+            })),
+            Some((kind, depart, _)) => {
+                let addr = master_addr.context(
+                    "chaos crash/half-open needs the plain (unsharded) tcp fabric",
+                )?;
+                let seed = cfg.seed;
+                let grace = cfg.fabric.dead_grace_duration();
+                let shard2 = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
+                handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
+                    let runtime = Runtime::new(manifest)?;
+                    run_chaos_cycle(
+                        spec, transport, shard, shard2, dataset, &runtime, kind, depart, seed,
+                        grace, addr,
+                    )
+                }));
+            }
+        }
     }
 
     let master_spec = MasterSpec {
@@ -330,7 +471,11 @@ pub fn run_training_with_manifest(
         train_len: cfg.train_len,
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
-        membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
+        membership: cfg
+            .membership
+            .as_ref()
+            .map(|m| m.master_plan(cfg.workers, cfg.fabric.dead_grace_duration()))
+            .transpose()?,
         adaptive: cfg.adaptive.as_ref().map(|a| a.plan()),
     };
     let master_runtime = Runtime::new(manifest.clone())?;

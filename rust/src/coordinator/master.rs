@@ -27,6 +27,7 @@
 //! model at all (test/synthetic path — eval columns become NaN).
 
 use std::collections::VecDeque;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -234,6 +235,87 @@ impl Inbox {
     fn pump<T: MasterTransport>(&mut self, transport: &mut T) -> Result<()> {
         let (wid, frame) = transport.recv_any()?;
         self.push(wid, frame)
+    }
+}
+
+/// Elastic pump: block for one more frame, bounded by the liveness grace.
+/// A full grace window with no traffic at all marks every expired,
+/// stalled-on slot as *wedged* — masked out of the expected set with its
+/// eviction staged for the next boundary — so the caller's wait condition
+/// re-evaluates against the shrunk fleet instead of hanging forever. This
+/// is the self-healing counterpart of the fixed-fleet engine's hung-up
+/// bail: silence becomes a staged eviction, never a mid-round mutation.
+///
+/// `require_empty` restricts "stalled-on" to expected slots with no queued
+/// frame (the round-wait case — a slot whose frame already arrived is
+/// merely waiting its turn, not wedged); the teardown drain passes false
+/// because its stall condition is a frame-count shortfall, queued or not.
+fn pump_or_expire<T: MasterTransport>(
+    inbox: &mut Inbox,
+    transport: &mut T,
+    fleet: &mut ElasticFleet,
+    comm: &mut CommStats,
+    grace: Duration,
+    require_empty: bool,
+    dry_graces: &mut u32,
+) -> Result<()> {
+    if let Some((wid, frame)) = transport.recv_any_timeout(grace)? {
+        *dry_graces = 0;
+        return inbox.push(wid, frame);
+    }
+    let mut evicted_any = false;
+    for wid in transport.expired_peers(grace) {
+        if fleet.expected[wid] && (!require_empty || inbox.pending[wid].is_empty()) {
+            fleet.mark_wedged(wid);
+            comm.record_timeout_eviction();
+            evicted_any = true;
+        }
+    }
+    if evicted_any {
+        *dry_graces = 0;
+        return Ok(());
+    }
+    // nothing arrived and nothing evictable: tolerate a few windows (a
+    // reconnect handshake refreshes a peer's liveness clock without
+    // producing frames), then fail loudly instead of spinning forever
+    *dry_graces += 1;
+    anyhow::ensure!(
+        *dry_graces < 16,
+        "elastic engine stalled: no frames and no evictable peer for {dry_graces} \
+         consecutive grace windows of {grace:?}"
+    );
+    Ok(())
+}
+
+/// Top-of-round service for wedged slots: they sit outside the lockstep,
+/// but their connection may still deliver frames (a wedge is silence, not
+/// death — and an evicted worker keeps answering broadcasts). Control
+/// frames feed the membership machine (this is how an evicted-then-
+/// recovered worker's Join is heard); Updates are discarded unfolded: the
+/// wedged worker's chain advanced while the master's copy did not, so
+/// folding it would corrupt the aggregate — the chain is condemned and
+/// only a boundary re-admission rebuilds it. A slot that produced frames
+/// again *after* its eviction completed is revived (the mask clears) so
+/// the next boundary may re-admit it fresh.
+fn drain_wedged(inbox: &mut Inbox, fleet: &mut ElasticFleet, comm: &mut CommStats) {
+    for wid in 0..inbox.pending.len() {
+        if !fleet.is_wedged(wid) {
+            continue;
+        }
+        let mut saw = false;
+        while let Some(frame) = inbox.pending[wid].pop_front() {
+            saw = true;
+            match frame.kind {
+                FrameKind::Update => comm.record_unconsumed(1),
+                _ => {
+                    fleet.observe(wid, &frame);
+                    comm.record_skip();
+                }
+            }
+        }
+        if saw && !fleet.membership.is_member(wid) {
+            fleet.revive(wid);
+        }
     }
 }
 
@@ -515,6 +597,18 @@ pub(crate) fn run_engine<T: MasterTransport>(
 ///   per-connection FIFO guarantee every pre-eviction Update folds into
 ///   the old chain before any boundary can rebuild it.
 ///
+/// * **Liveness deadlines (DESIGN.md §10).** Every wait loop is bounded by
+///   the plan's `dead_grace`: a full grace window with no traffic marks the
+///   expired stalled-on slots wedged ([`pump_or_expire`]) — masked out of
+///   the expected set, eviction staged — and a boundary sweep catches
+///   crashed members no loop ever stalls on. The member set still mutates
+///   only at `tick()`; a wedge never rewrites a round in flight. Fault-free
+///   runs never hit a deadline, so the fixed-fleet identity pin is intact.
+/// * **Holding.** If eviction drops the fleet below `min_workers`, the
+///   machine parks in `Phase::Holding`: remaining members demote to
+///   pending, the bitmap empties, and rounds keep broadcasting (folding
+///   nothing, `w` frozen) until a boundary finds quorum again.
+///
 /// With `min_workers == max_workers == fleet` and every worker seeking
 /// every epoch, no Join/Leave frames exist and no rekeys fire: the run is
 /// bit-identical (final_w bits, CommStats, StepStats) to the fixed-fleet
@@ -546,6 +640,8 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
     let mut train_loss = LossMeter::new();
     let mut points = Vec::new();
     let wall = Timer::start();
+    let grace = plan.dead_grace;
+    let mut dry_graces = 0u32;
 
     let mut agg = vec![0.0f32; d];
     let mut bcast_buf: Vec<u8> = Vec::new();
@@ -574,12 +670,41 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
 
     for t in 0..spec.steps {
         agg.iter_mut().for_each(|x| *x = 0.0);
+        drain_wedged(&mut inbox, &mut fleet, &mut comm);
 
         match spec.aggregation {
             AggMode::FullSync => {
                 // one frame per EXPECTED slot, then fold in worker-id order
-                while (0..n).any(|wid| fleet.expected[wid] && inbox.pending[wid].is_empty()) {
-                    inbox.pump(&mut transport)?;
+                loop {
+                    // a slot revived mid-epoch may have parked control
+                    // frames from rounds it sat out; shed them (observing
+                    // Join/Leave) so the lockstep round check below only
+                    // ever sees the slot's current-round frame
+                    for wid in 0..n {
+                        if !fleet.expected[wid] {
+                            continue;
+                        }
+                        while matches!(
+                            inbox.pending[wid].front(),
+                            Some(f) if f.round < t && f.kind != FrameKind::Update
+                        ) {
+                            let stale = inbox.pending[wid].pop_front().unwrap();
+                            fleet.observe(wid, &stale);
+                            comm.record_skip();
+                        }
+                    }
+                    if !(0..n).any(|wid| fleet.expected[wid] && inbox.pending[wid].is_empty()) {
+                        break;
+                    }
+                    pump_or_expire(
+                        &mut inbox,
+                        &mut transport,
+                        &mut fleet,
+                        &mut comm,
+                        grace,
+                        true,
+                        &mut dry_graces,
+                    )?;
                 }
                 round_frames.clear();
                 for wid in 0..n {
@@ -643,22 +768,50 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                     while fleet.expected[wid]
                         && fleet.start_round[wid] + inbox.delivered[wid] + max_staleness < t + 1
                     {
-                        inbox.pump(&mut transport)?;
+                        pump_or_expire(
+                            &mut inbox,
+                            &mut transport,
+                            &mut fleet,
+                            &mut comm,
+                            grace,
+                            true,
+                            &mut dry_graces,
+                        )?;
                     }
                 }
-                let expected_now = fleet.expected_count();
-                if expected_now > 0 {
-                    let quorum = quorum.clamp(1, expected_now);
-                    while (0..n)
-                        .filter(|&wid| fleet.expected[wid] && !inbox.pending[wid].is_empty())
-                        .count()
-                        < quorum
-                    {
-                        inbox.pump(&mut transport)?;
+                // quorum re-clamps every pass: a wedge mid-wait shrinks
+                // the expected set, and demanding the stale count would
+                // deadlock on workers that no longer exist
+                loop {
+                    let expected_now = fleet.expected_count();
+                    if expected_now == 0 {
+                        break;
                     }
+                    let need = quorum.clamp(1, expected_now);
+                    let have = (0..n)
+                        .filter(|&wid| fleet.expected[wid] && !inbox.pending[wid].is_empty())
+                        .count();
+                    if have >= need {
+                        break;
+                    }
+                    pump_or_expire(
+                        &mut inbox,
+                        &mut transport,
+                        &mut fleet,
+                        &mut comm,
+                        grace,
+                        true,
+                        &mut dry_graces,
+                    )?;
                 }
                 for wid in 0..n {
                     batches[wid].clear();
+                    if fleet.is_wedged(wid) {
+                        // a wedged slot's chain is condemned: anything its
+                        // connection delivers mid-round parks until the
+                        // next round's drain_wedged, never the fold
+                        continue;
+                    }
                     while let Some(frame) = inbox.pending[wid].pop_front() {
                         anyhow::ensure!(
                             frame.worker as usize == wid,
@@ -723,6 +876,20 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
         }
         let boundary = (t + 1) % fleet.admit_at == 0;
         let frame = if boundary {
+            // liveness sweep: a crashed member's connection is gone, so it
+            // is never expected and no wait loop ever stalls on it — stage
+            // its eviction here before the machine ticks. Fault-free runs
+            // keep every member expected, so this is a no-op and the
+            // boundary stays bit-identical.
+            for wid in transport.expired_peers(grace) {
+                if fleet.membership.is_member(wid)
+                    && !fleet.expected[wid]
+                    && !fleet.is_wedged(wid)
+                {
+                    fleet.mark_wedged(wid);
+                    comm.record_timeout_eviction();
+                }
+            }
             let diff = fleet.membership.tick();
             for &wid in &diff.admitted {
                 // chain-reset contract: admission rebuilds the worker's
@@ -762,13 +929,23 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
     }
 
     // bounded-staleness runs can end with late frames still in flight: a
-    // slot first expected at round s sends exactly steps - s frames
+    // slot first expected at round s sends exactly steps - s frames. A
+    // worker that wedges during teardown is expired out of the wait (its
+    // tail frames are forfeit) rather than hanging the master forever.
     if spec.aggregation != AggMode::FullSync {
         for wid in 0..n {
             while fleet.expected[wid]
                 && fleet.start_round[wid] + inbox.delivered[wid] < spec.steps
             {
-                inbox.pump(&mut transport)?;
+                pump_or_expire(
+                    &mut inbox,
+                    &mut transport,
+                    &mut fleet,
+                    &mut comm,
+                    grace,
+                    false,
+                    &mut dry_graces,
+                )?;
             }
         }
         let unconsumed = inbox

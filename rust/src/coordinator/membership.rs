@@ -8,11 +8,22 @@
 //! `admit_at` rounds, and the member set only changes at epoch boundaries:
 //!
 //! ```text
-//!   WaitingForMembers(min) ──(≥ min joined)──▶ Warmup (epoch 0)
+//!   WaitingForMembers(min) ──(≥ min at launch)──▶ Warmup (epoch 0)
+//!        WaitingForMembers ──(boundary with ≥ min parked)──▶ Training
 //!        Warmup ──(first boundary)──▶ Training
-//!        Training ──(members < min after a tick)──▶ Cooldown
-//!        Cooldown ──(re-grown to ≥ min)──▶ Training
+//!        Training ──(members < min after a tick)──▶ Holding
+//!        Holding ──(boundary where quorum returns)──▶ Training
 //! ```
+//!
+//! **Holding** is the below-`min_workers` parking state (ROADMAP elastic
+//! follow-up c): rather than training on a sub-quorum remnant — or
+//! erroring out, as the pre-elastic engine did — the boundary *demotes*
+//! every remaining member back to the pending set and the engine idles,
+//! still serving roster/sync broadcasts so parked and newly dialing
+//! workers keep a live view of the fleet. The demoted workers' chains are
+//! dropped exactly like an eviction's; when enough workers are parked for
+//! quorum (`members + pending >= min_workers`), the next tick re-admits
+//! them with fresh chains and training resumes.
 //!
 //! * A worker that asks to join mid-epoch **parks in a pending set** and is
 //!   admitted at the next boundary (never mid-epoch — chains are stateful
@@ -89,10 +100,11 @@ pub enum Phase {
     Warmup,
     /// Steady state: boundaries admit/evict between epochs.
     Training,
-    /// Below `min_workers` after a boundary: rounds proceed with the
-    /// remaining members while the machine waits to re-grow (it returns to
-    /// Training at the first boundary with ≥ min members).
-    Cooldown,
+    /// Below `min_workers` after a boundary: every remaining member was
+    /// demoted to the pending set and training is parked. The machine
+    /// serves broadcasts but runs no training rounds until a boundary
+    /// finds quorum parked again (`members + pending >= min_workers`).
+    Holding,
 }
 
 /// What changed at one epoch boundary.
@@ -141,12 +153,29 @@ impl Membership {
             members.len(),
             spec.max_workers
         );
-        let phase = if members.len() >= spec.min_workers {
-            Phase::Warmup
-        } else {
-            Phase::WaitingForMembers
-        };
-        Ok(Self { spec, slots, phase, epoch: 0, members, pending: BTreeSet::new(), leaving: BTreeSet::new() })
+        if members.len() >= spec.min_workers {
+            return Ok(Self {
+                spec,
+                slots,
+                phase: Phase::Warmup,
+                epoch: 0,
+                members,
+                pending: BTreeSet::new(),
+                leaving: BTreeSet::new(),
+            });
+        }
+        // sub-quorum launch: park the initial set as pending — members is
+        // empty until a boundary finds quorum (same contract as Holding,
+        // so no training round ever runs on a below-min fleet)
+        Ok(Self {
+            spec,
+            slots,
+            phase: Phase::WaitingForMembers,
+            epoch: 0,
+            members: BTreeSet::new(),
+            pending: members,
+            leaving: BTreeSet::new(),
+        })
     }
 
     pub fn spec(&self) -> &MembershipSpec {
@@ -209,29 +238,49 @@ impl Membership {
     /// Cross an epoch boundary: evict leavers, admit pending joins (oldest
     /// worker id first) up to `max_workers`, advance the phase. The only
     /// place the member set changes.
+    ///
+    /// Below-min handling: if the surviving members fall short of
+    /// `min_workers`, admission is *quorum-gated* — pending joins are
+    /// admitted only when they restore quorum all at once
+    /// (`members + pending >= min_workers`), so the machine never trains
+    /// on a sub-quorum fleet even transiently. Failing that, the remnant
+    /// members are demoted back to pending (their chains dropped like any
+    /// eviction's) and the phase parks in [`Phase::Holding`].
     pub fn tick(&mut self) -> BoundaryDiff {
-        let evicted: Vec<usize> = self.leaving.iter().copied().collect();
+        let mut evicted: Vec<usize> = self.leaving.iter().copied().collect();
         for w in &evicted {
             self.members.remove(w);
         }
         self.leaving.clear();
+        let below_min = self.members.len() < self.spec.min_workers;
+        let quorum = self.members.len() + self.pending.len() >= self.spec.min_workers;
         let mut admitted = Vec::new();
-        while self.members.len() < self.spec.max_workers {
-            match self.pending.iter().next().copied() {
-                Some(w) => {
-                    self.pending.remove(&w);
-                    self.members.insert(w);
-                    admitted.push(w);
+        if !below_min || quorum {
+            while self.members.len() < self.spec.max_workers {
+                match self.pending.iter().next().copied() {
+                    Some(w) => {
+                        self.pending.remove(&w);
+                        self.members.insert(w);
+                        admitted.push(w);
+                    }
+                    None => break,
                 }
-                None => break,
             }
         }
         self.epoch += 1;
-        self.phase = if self.members.len() < self.spec.min_workers {
-            Phase::Cooldown
+        if self.members.len() < self.spec.min_workers {
+            // demote the remnant to pending: they re-enter with fresh
+            // chains at the boundary where quorum returns
+            let demoted: Vec<usize> = self.members.iter().copied().collect();
+            for &w in &demoted {
+                self.pending.insert(w);
+            }
+            self.members.clear();
+            evicted.extend(demoted);
+            self.phase = Phase::Holding;
         } else {
-            Phase::Training
-        };
+            self.phase = Phase::Training;
+        }
         BoundaryDiff { epoch: self.epoch, admitted, evicted }
     }
 }
@@ -267,6 +316,10 @@ pub struct MembershipPlan {
     pub spec: MembershipSpec,
     /// Worker ids admitted for epoch 0 (the launch rendezvous set).
     pub initial: Vec<usize>,
+    /// Liveness deadline for the elastic engine: an expected member silent
+    /// for this long is staged for eviction at the next boundary
+    /// (`[fabric] dead_grace`, the same clock the transports use).
+    pub dead_grace: std::time::Duration,
 }
 
 /// Worker-side membership plan, carried in `WorkerSpec`: which fleet
@@ -309,6 +362,13 @@ pub(crate) struct ElasticFleet {
     /// First round each slot was expected to send (staleness accounting
     /// for late joiners).
     pub(crate) start_round: Vec<u64>,
+    /// Slots past their liveness deadline: masked out of the expected set
+    /// (the engine stops waiting on them) while their staged eviction
+    /// rides to the next boundary. A wedged slot's decode chain is
+    /// condemned — frames it queued while wedged are discarded, never
+    /// folded — and the mask clears only once the slot is a non-member
+    /// producing frames again (a fresh admission with a fresh chain).
+    pub(crate) wedged: Vec<bool>,
 }
 
 impl ElasticFleet {
@@ -319,7 +379,26 @@ impl ElasticFleet {
             admit_at: plan.spec.admit_at,
             expected: vec![false; slots],
             start_round: vec![0; slots],
+            wedged: vec![false; slots],
         })
+    }
+
+    /// Slot `wid` blew its liveness deadline: stop expecting frames from
+    /// it this round and stage its eviction for the next boundary.
+    pub(crate) fn mark_wedged(&mut self, wid: usize) {
+        self.wedged[wid] = true;
+        self.expected[wid] = false;
+        self.membership.on_timeout(wid);
+    }
+
+    pub(crate) fn is_wedged(&self, wid: usize) -> bool {
+        self.wedged[wid]
+    }
+
+    /// A formerly wedged slot produced frames again *after* its boundary
+    /// eviction completed: clear the mask so a re-join can be admitted.
+    pub(crate) fn revive(&mut self, wid: usize) {
+        self.wedged[wid] = false;
     }
 
     /// Route one arriving control frame into the state machine — the one
@@ -334,13 +413,16 @@ impl ElasticFleet {
 
     /// Adopt the roster a broadcast reached as the expected set for
     /// `next_round`, recording first-expected rounds for new slots.
+    /// Wedged slots are masked out: a broadcast may still reach their
+    /// (alive but silent) socket, but the engine must not wait on them.
     pub(crate) fn set_expected(&mut self, roster: Vec<bool>, next_round: u64) {
         for (wid, &now) in roster.iter().enumerate() {
-            if now && !self.expected[wid] {
+            let eff = now && !self.wedged[wid];
+            if eff && !self.expected[wid] {
                 self.start_round[wid] = next_round;
             }
+            self.expected[wid] = eff;
         }
-        self.expected = roster;
     }
 
     pub(crate) fn expected_count(&self) -> usize {
@@ -368,8 +450,10 @@ mod tests {
 
     #[test]
     fn phases_walk_the_psyche_diagram() {
-        let mut m = Membership::new(spec(2, 4, 8), 4, &[0]).unwrap();
+        // sub-quorum launch parks the initial set: no member trains below min
+        let m = Membership::new(spec(2, 4, 8), 4, &[0]).unwrap();
         assert_eq!(m.phase(), Phase::WaitingForMembers);
+        assert_eq!(m.n_members(), 0, "below-min initial set parks as pending");
         let mut m = Membership::new(spec(2, 4, 8), 4, &[0, 1]).unwrap();
         assert_eq!(m.phase(), Phase::Warmup);
         assert_eq!(m.epoch(), 0);
@@ -377,16 +461,24 @@ mod tests {
         let d = m.tick();
         assert_eq!(d, BoundaryDiff { epoch: 1, admitted: vec![], evicted: vec![] });
         assert_eq!(m.phase(), Phase::Training);
-        // shrink below min: Cooldown, then re-grow back to Training
+        // shrink below min: the survivor is demoted to pending and the
+        // machine parks in Holding rather than training sub-quorum
         m.on_leave(1);
         assert_eq!(m.n_members(), 2, "leave stages; eviction waits for the tick");
         let d = m.tick();
-        assert_eq!(d.evicted, vec![1]);
-        assert_eq!(m.phase(), Phase::Cooldown);
-        m.on_join(1);
-        assert_eq!(m.n_members(), 1, "join parks; admission waits for the tick");
+        assert_eq!(d.evicted, vec![1, 0], "leaver evicted, remnant demoted");
+        assert_eq!(m.phase(), Phase::Holding);
+        assert_eq!(m.n_members(), 0);
+        // a lone boundary without quorum stays parked
         let d = m.tick();
-        assert_eq!(d.admitted, vec![1]);
+        assert!(d.admitted.is_empty() && d.evicted.is_empty());
+        assert_eq!(m.phase(), Phase::Holding);
+        // quorum returns (demoted 0 still parked + rejoining 1): both are
+        // re-admitted together at the boundary
+        m.on_join(1);
+        assert_eq!(m.n_members(), 0, "join parks; admission waits for the tick");
+        let d = m.tick();
+        assert_eq!(d.admitted, vec![0, 1]);
         assert_eq!(m.phase(), Phase::Training);
     }
 

@@ -20,9 +20,12 @@
 //!   the same loops (cli::master_serve / worker_connect).
 //! * [`membership`] — elastic fleet membership: the epoch-phased
 //!   coordinator state machine (`WaitingForMembers → Warmup → Training →
-//!   Cooldown`) that admits and evicts workers at fleet-epoch boundaries,
+//!   Holding`) that admits and evicts workers at fleet-epoch boundaries,
 //!   with fresh per-worker chains and `(epoch, worker_id)`-keyed data
-//!   assignments on every admission (DESIGN.md §7).
+//!   assignments on every admission (DESIGN.md §7). Failure semantics —
+//!   liveness-deadline eviction of wedged/crashed members, worker-side
+//!   reconnect backoff, and the below-min Holding phase — are DESIGN.md
+//!   §10.
 //! * Adaptive rate control (DESIGN.md §8) lives in the [`master`] /
 //!   [`worker`] engines: with `[adaptive]` set, the master's
 //!   `RateController` re-rates the scheme's blocks between negotiated

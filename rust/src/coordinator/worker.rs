@@ -74,6 +74,18 @@ pub struct WorkerSpec {
     pub pipelined: bool,
     /// Half-open round ranges [a, b) this worker sits out (churn injection).
     pub absent: Vec<(u64, u64)>,
+    /// Chaos crash injection: vanish silently before sending round `t`'s
+    /// frame — no Leave, no completion marker, the connection just drops.
+    /// Only meaningful with `membership` (the elastic engine's liveness
+    /// deadline is what notices the disappearance); the launcher uses it
+    /// to drive crash and half-open chaos legs (DESIGN.md §10).
+    pub depart_at: Option<u64>,
+    /// This process is a fresh incarnation re-dialing after a crash: even
+    /// if the member bitmap still carries our bit, the seat belongs to the
+    /// dead predecessor — fence it off (local demotion + a Leave) and
+    /// re-enter through fresh admission, never by resuming a chain the
+    /// master folded someone else's updates into.
+    pub rejoin: bool,
     /// Elastic fleet membership (`[membership]` config): which fleet epochs
     /// this worker *seeks*. When set, the worker runs the elastic round
     /// loop — the master's broadcast bitmap is authoritative for actual
@@ -253,8 +265,11 @@ fn run_rounds<T: WorkerTransport>(
     // liveness marker: a clean completion tells the master this endpoint
     // goes quiet on purpose; an error turns into a prompt master-side
     // "hung up" failure instead of a blocked round. Best-effort — the
-    // master may already be gone.
+    // master may already be gone. A chaos departure (`depart_at`) sends
+    // nothing: the whole point is to vanish the way a crashed process
+    // does, leaving the master's liveness deadline to notice.
     let marker = match &result {
+        Ok(_) if spec.depart_at.is_some() => return result,
         Ok(_) => Frame::done(spec.worker_id),
         Err(_) => Frame::abort(spec.worker_id),
     };
@@ -277,6 +292,12 @@ fn run_rounds_inner<T: WorkerTransport>(
         );
         return run_rounds_adaptive(spec, transport, source, w, hlo);
     }
+    anyhow::ensure!(
+        spec.depart_at.is_none() || spec.membership.is_some(),
+        "worker {}: depart_at (chaos crash injection) requires [membership] — a fixed \
+         fleet cannot survive losing a worker",
+        spec.worker_id
+    );
     if spec.membership.is_some() {
         return run_rounds_elastic(spec, transport, source, w, hlo);
     }
@@ -513,10 +534,19 @@ fn run_rounds_elastic<T: WorkerTransport>(
         w_valid = true;
     }
     let start = if bframe.round == SYNC_ROUND { 0 } else { bframe.round + 1 };
-    anyhow::ensure!(
-        !member || w_valid,
-        "worker {wid}: member per bitmap but first broadcast was not a membership sync"
-    );
+    let mut stale_member = false;
+    if member && (!w_valid || spec.rejoin) {
+        // generation fence: the bitmap still carries our bit from a
+        // previous incarnation (this connection re-dialed before the
+        // master's deadline or boundary noticed the old one die) — and
+        // either way a re-joining process must not resume that seat: the
+        // master's decode chain holds the predecessor's state, ours is
+        // fresh. Demote locally and announce the stale slot's departure on
+        // the first round; the master evicts it at the boundary and this
+        // incarnation re-enters as a fresh admission with a fresh chain.
+        member = false;
+        stale_member = true;
+    }
     if member {
         if let Some((rank, n_members)) = bitmap_rank(bitmap, wid as usize) {
             // no-op when (rank, n_members, epoch key) match the shard's
@@ -529,6 +559,12 @@ fn run_rounds_elastic<T: WorkerTransport>(
     }
 
     for t in start..spec.steps {
+        if spec.depart_at == Some(t) {
+            // chaos crash: vanish before sending round t's frame — the
+            // caller drops the connection without ceremony and the
+            // master's liveness deadline takes it from here
+            break;
+        }
         let epoch = t / plan.admit_at;
         let boundary = (t + 1) % plan.admit_at == 0;
         let leaving = member && boundary && !plan.wants(epoch + 1);
@@ -586,7 +622,10 @@ fn run_rounds_elastic<T: WorkerTransport>(
             skipped += 1;
             e_mse_trace.push(0.0);
             u_norm_trace.push(0.0);
-            let frame = if member {
+            let frame = if member || stale_member {
+                // a live member departing — or a stale slot from a prior
+                // incarnation being fenced off (see the prologue)
+                stale_member = false;
                 Frame::leave(wid, t)
             } else if plan.wants(epoch + 1) {
                 Frame::join(wid, t)
@@ -883,6 +922,8 @@ mod tests {
             clip_norm: None,
             pipelined: true,
             absent: vec![(2, 4), (7, 8)],
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

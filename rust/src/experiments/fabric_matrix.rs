@@ -57,7 +57,11 @@ struct ElasticScenario {
 /// is admitted at the epoch-1 boundary (fresh chains + re-keyed shard).
 fn grow_scenario(n: usize, admit_at: u64) -> ElasticScenario {
     let spec = MembershipSpec { min_workers: 1, max_workers: n, admit_at };
-    let plan = MembershipPlan { spec, initial: (0..n - 1).collect() };
+    let plan = MembershipPlan {
+        spec,
+        initial: (0..n - 1).collect(),
+        dead_grace: std::time::Duration::from_secs(2),
+    };
     let mut worker_plans: Vec<WorkerMembership> =
         (0..n).map(|_| WorkerMembership::always(admit_at)).collect();
     worker_plans[n - 1] = WorkerMembership { admit_at, epochs: vec![(1, u64::MAX)] };
@@ -68,11 +72,36 @@ fn grow_scenario(n: usize, admit_at: u64) -> ElasticScenario {
 /// (Leave frame replaces its final Update; evicted at the boundary).
 fn shrink_scenario(n: usize, admit_at: u64) -> ElasticScenario {
     let spec = MembershipSpec { min_workers: 1, max_workers: n, admit_at };
-    let plan = MembershipPlan { spec, initial: (0..n).collect() };
+    let plan = MembershipPlan {
+        spec,
+        initial: (0..n).collect(),
+        dead_grace: std::time::Duration::from_secs(2),
+    };
     let mut worker_plans: Vec<WorkerMembership> =
         (0..n).map(|_| WorkerMembership::always(admit_at)).collect();
     worker_plans[n - 1] = WorkerMembership { admit_at, epochs: vec![(0, 2)] };
     ElasticScenario { plan, worker_plans }
+}
+
+/// Chaos wedge (DESIGN.md §10): the last worker's connection stays alive
+/// but every frame from round `wedge_from` on is swallowed. The master's
+/// liveness deadline stages the silent member's eviction mid-round and the
+/// next boundary tick removes it; the worker sees its bit drop out of the
+/// boundary bitmap and demotes itself.
+fn wedge_scenario(n: usize, admit_at: u64, wedge_from: u64) -> (FabricSpec, ElasticScenario) {
+    let fabric = FabricSpec {
+        dead_grace: 0.1,
+        chaos: vec![(n - 1, crate::config::ChaosKind::Wedge, wedge_from, u64::MAX)],
+        ..FabricSpec::default()
+    };
+    let spec = MembershipSpec { min_workers: 1, max_workers: n, admit_at };
+    let plan = MembershipPlan {
+        spec,
+        initial: (0..n).collect(),
+        dead_grace: fabric.dead_grace_duration(),
+    };
+    let worker_plans = (0..n).map(|_| WorkerMembership::always(admit_at)).collect();
+    (fabric, ElasticScenario { plan, worker_plans })
 }
 
 /// Run one scenario: n synthetic workers + master (sharded when
@@ -109,6 +138,8 @@ fn run_scenario(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
             membership: elastic.map(|e| e.worker_plans[wid].clone()),
             adaptive: adaptive.is_some(),
         };
@@ -188,6 +219,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
     let admit = (half / 2).max(1);
     let grow = grow_scenario(n, admit);
     let shrink = shrink_scenario(n, admit);
+    let (wedgy, wedge) = wedge_scenario(n, admit, admit);
 
     type Row = (&'static str, FabricSpec, &'static str, usize, Option<ElasticScenario>);
     let scenarios: Vec<Row> = vec![
@@ -205,6 +237,9 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         ("grow/+1@epoch1/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1, Some(grow)),
         ("shrink/-1@epoch2/channel", clean.clone(), SPEC_SINGLE, 1, Some(shrink.clone())),
         ("shrink/-1@epoch2/tcp-reactor", tcp_reactor.clone(), SPEC_SINGLE, 1, Some(shrink)),
+        // self-healing (DESIGN.md §10): a worker wedges mid-epoch-1, the
+        // liveness deadline evicts it at the next boundary, the run finishes
+        ("chaos/wedge-evict/channel", wedgy, SPEC_SINGLE, 1, Some(wedge)),
         // block-sharded master: the same blockwise run over 1 shard is the
         // bit-identity baseline for the 2/4-shard rows
         ("blockwise/1-shard", clean.clone(), SPEC_BLOCKWISE, 1, None),

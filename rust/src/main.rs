@@ -237,7 +237,11 @@ fn cmd_master_serve(args: &Args) -> Result<()> {
         train_len: cfg.train_len,
         data_noise: cfg.noise,
         aggregation: cfg.fabric.aggregation(),
-        membership: cfg.membership.as_ref().map(|m| m.master_plan(cfg.workers)).transpose()?,
+        membership: cfg
+            .membership
+            .as_ref()
+            .map(|m| m.master_plan(cfg.workers, cfg.fabric.dead_grace_duration()))
+            .transpose()?,
         adaptive: cfg.adaptive.as_ref().map(|a| a.plan()),
     };
     let runtime = Runtime::new(manifest)?;
@@ -333,6 +337,8 @@ fn cmd_worker_connect(args: &Args) -> Result<()> {
         clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
         pipelined: cfg.fabric.pipelined,
         absent: cfg.fabric.absent_for(worker_id as usize),
+        depart_at: None,
+        rejoin: false,
         membership: cfg.membership.as_ref().map(|m| m.worker_plan()),
         adaptive: cfg.adaptive.is_some(),
     };

@@ -72,6 +72,9 @@ pub struct CommStats {
     stale_updates: u64,
     /// updates still queued when a bounded-staleness run hit its horizon
     unconsumed_updates: u64,
+    /// members staged for eviction by the liveness deadline (wedged or
+    /// crashed workers the elastic engine timed out — DESIGN.md §10)
+    timeout_evictions: u64,
     /// per-phase worker comm timing: name → (total secs, events)
     phase_secs: BTreeMap<String, (f64, u64)>,
     /// scheme-epoch timeline (adaptive runs; empty when the controller is
@@ -146,6 +149,12 @@ impl CommStats {
         self.unconsumed_updates += n;
     }
 
+    /// Account one member staged out by the liveness deadline (the elastic
+    /// engine's wedge/crash eviction path, DESIGN.md §10).
+    pub fn record_timeout_eviction(&mut self) {
+        self.timeout_evictions += 1;
+    }
+
     /// Fold in fault-injector counters (launcher glue).
     pub fn record_faults(&mut self, retransmits: u64, injected_delay_secs: f64) {
         self.retransmits += retransmits;
@@ -185,6 +194,7 @@ impl CommStats {
         self.staleness_max = self.staleness_max.max(shard.staleness_max);
         self.stale_updates = self.stale_updates.max(shard.stale_updates);
         self.unconsumed_updates = self.unconsumed_updates.max(shard.unconsumed_updates);
+        self.timeout_evictions = self.timeout_evictions.max(shard.timeout_evictions);
         self.retransmits += shard.retransmits;
         self.injected_delay_secs += shard.injected_delay_secs;
         for (name, &(secs, events)) in &shard.phase_secs {
@@ -224,6 +234,10 @@ impl CommStats {
 
     pub fn unconsumed_updates(&self) -> u64 {
         self.unconsumed_updates
+    }
+
+    pub fn timeout_evictions(&self) -> u64 {
+        self.timeout_evictions
     }
 
     /// Per-phase (name, total secs, events) comm timing, name-sorted.
@@ -316,6 +330,7 @@ mod tests {
         c.record_staleness(0);
         c.record_staleness(3);
         c.record_unconsumed(2);
+        c.record_timeout_eviction();
         c.record_faults(4, 0.25);
         c.record_phase("send", 1.0, 2);
         c.record_phase("send", 0.5, 1);
@@ -327,6 +342,7 @@ mod tests {
         assert_eq!(c.max_staleness(), 3);
         assert_eq!(c.stale_updates(), 1);
         assert_eq!(c.unconsumed_updates(), 2);
+        assert_eq!(c.timeout_evictions(), 1);
         assert_eq!(c.phase_secs(), vec![("send".to_string(), 1.5, 3)]);
     }
 

@@ -37,6 +37,8 @@ fn blockwise_scheme_end_to_end_over_channels() {
             clip_norm: None,
             pipelined: true,
             absent: vec![],
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

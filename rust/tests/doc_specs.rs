@@ -1,7 +1,10 @@
 //! Doc-spec gate: every scheme spec string quoted in `README.md` and
 //! `docs/SPEC.md` must resolve through the live registry and bind at a
 //! real model dimension — the documented grammar cannot drift from the
-//! implementation (DESIGN.md §1, docs/SPEC.md).
+//! implementation (DESIGN.md §1, docs/SPEC.md). The same contract covers
+//! the documented `--fabric` token strings (README.md / DESIGN.md),
+//! which must apply cleanly to a [`tempo::config::FabricSpec`] —
+//! including the §10 `dead_grace=`/`chaos=` failure-semantics tokens.
 
 use std::collections::BTreeSet;
 use std::path::PathBuf;
@@ -84,6 +87,38 @@ fn every_documented_spec_resolves_and_binds() {
         }
     }
     assert!(total >= 8, "suspiciously few documented specs extracted: {total}");
+}
+
+#[test]
+fn every_documented_fabric_spec_applies() {
+    let mut total = 0usize;
+    for doc in ["README.md", "DESIGN.md", "docs/SPEC.md"] {
+        let path = repo_root().join(doc);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        for line in text.lines() {
+            for chunk in line.split("--fabric ").skip(1) {
+                let spec = chunk
+                    .split_whitespace()
+                    .next()
+                    .unwrap_or("")
+                    .trim_end_matches(['`', ',', ')', '.']);
+                // skip grammar placeholders like `--fabric <spec>`
+                if spec.is_empty() || spec.contains('<') {
+                    continue;
+                }
+                let mut f = tempo::config::FabricSpec::default();
+                f.apply_str(spec).unwrap_or_else(|e| {
+                    panic!("{doc}: quoted fabric spec {spec:?} does not apply: {e:#}")
+                });
+                f.validate().unwrap_or_else(|e| {
+                    panic!("{doc}: quoted fabric spec {spec:?} does not validate: {e:#}")
+                });
+                total += 1;
+            }
+        }
+    }
+    assert!(total >= 2, "suspiciously few documented fabric specs extracted: {total}");
 }
 
 #[test]

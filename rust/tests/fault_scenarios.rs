@@ -35,6 +35,8 @@ fn run_fabric(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };
@@ -201,6 +203,8 @@ fn straggler_on_one_shard_only_does_not_deadlock_the_fleet() {
             clip_norm: None,
             pipelined: true,
             absent: Vec::new(),
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

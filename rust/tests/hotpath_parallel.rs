@@ -83,6 +83,8 @@ fn run_master_fleet_agg(d: usize, n: usize, steps: u64, threads: usize, agg: Agg
             clip_norm: None,
             pipelined: true,
             absent: Vec::new(),
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

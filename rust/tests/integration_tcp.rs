@@ -49,6 +49,8 @@ fn run_synthetic(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };
@@ -274,6 +276,8 @@ fn tcp_training_round_trip_with_pjrt_models() {
             clip_norm: None,
             pipelined: true,
             absent: vec![],
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

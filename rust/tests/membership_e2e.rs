@@ -23,9 +23,9 @@
 //! reproduce a worker's post-admission gradients exactly.
 
 use tempo::config::experiment::Backend;
-use tempo::config::{FabricSpec, IoBackend, TransportKind};
+use tempo::config::{ChaosKind, FabricSpec, IoBackend, TransportKind};
 use tempo::coordinator::launch::build_fabric;
-use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::master::{MasterLoop, MasterReport, MasterSpec};
 use tempo::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
 use tempo::coordinator::worker::{lr_ratio, WorkerLoop, WorkerSpec, WorkerSummary};
 use tempo::optim::LrSchedule;
@@ -56,6 +56,7 @@ fn static_plan(n: usize, admit_at: u64) -> ElasticPlan {
         plan: MembershipPlan {
             spec: MembershipSpec { min_workers: n, max_workers: n, admit_at },
             initial: (0..n).collect(),
+            dead_grace: std::time::Duration::from_secs(2),
         },
         workers: (0..n).map(|_| WorkerMembership::always(admit_at)).collect(),
     }
@@ -68,6 +69,7 @@ fn churn_plan(admit_at: u64) -> ElasticPlan {
         plan: MembershipPlan {
             spec: MembershipSpec { min_workers: 2, max_workers: 4, admit_at },
             initial: vec![0, 1, 2],
+            dead_grace: std::time::Duration::from_secs(2),
         },
         workers: vec![
             WorkerMembership::always(admit_at),
@@ -105,6 +107,8 @@ fn run_synthetic(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: vec![],
+            depart_at: None,
+            rejoin: false,
             membership: elastic.map(|e| e.workers[wid].clone()),
             adaptive: false,
         };
@@ -129,7 +133,7 @@ fn run_synthetic(
         samples_per_round: n,
         train_len: 64,
         data_noise: 1.0,
-        aggregation: AggMode::FullSync,
+        aggregation: fabric.aggregation(),
         membership: elastic.map(|e| e.plan.clone()),
         adaptive: None,
     };
@@ -334,6 +338,7 @@ fn admitted_chains_are_reset_on_both_sides() {
         plan: MembershipPlan {
             spec: MembershipSpec { min_workers: 1, max_workers: 2, admit_at },
             initial: vec![0, 1],
+            dead_grace: std::time::Duration::from_secs(2),
         },
         workers: vec![
             WorkerMembership::always(admit_at),
@@ -370,4 +375,53 @@ fn admitted_chains_are_reset_on_both_sides() {
         continued.final_w_bits,
         "engine matched the continued-chain replay — chains were not reset"
     );
+}
+
+/// Self-healing acceptance (DESIGN.md §10): a 4-worker bounded-staleness
+/// run where worker 3 wedges mid-epoch-1 — its connection stays alive but
+/// every frame from round 4 on is swallowed. The master must not error:
+/// the liveness deadline resolves the stalled quorum wait by staging the
+/// silent member's eviction, the next boundary tick removes it, and
+/// CommStats records the timeout eviction. With `quorum == n` every fold
+/// is schedule-determined (never wall-clock-determined), so replaying the
+/// identically-seeded chaos schedule is bit-identical.
+#[test]
+fn wedged_worker_is_evicted_at_a_boundary_and_replays_bit_identically() {
+    let (d, n, steps, admit_at, seed) = (300usize, 4usize, 12u64, 3u64, 17u64);
+    let fabric = FabricSpec {
+        max_staleness: 2,
+        quorum: n, // demand every expected slot: the fold order stays pinned
+        dead_grace: 0.15,
+        chaos: vec![(3, ChaosKind::Wedge, 4, u64::MAX)],
+        ..Default::default()
+    };
+    let plan = ElasticPlan {
+        plan: MembershipPlan {
+            spec: MembershipSpec { min_workers: 2, max_workers: n, admit_at },
+            initial: (0..n).collect(),
+            dead_grace: fabric.dead_grace_duration(),
+        },
+        workers: (0..n).map(|_| WorkerMembership::always(admit_at)).collect(),
+    };
+
+    let first = run_synthetic(&fabric, d, n, steps, seed, Some(&plan));
+    let (report, summaries) = (&first.0, &first.1);
+    assert_eq!(report.comm.timeout_evictions(), 1, "one liveness eviction");
+    for s in summaries.iter() {
+        assert_eq!(s.rounds, steps, "worker {} did not complete", s.worker_id);
+    }
+    // worker 3 wedges at round 4, the master stalls there until the grace
+    // expires, and the t = 5 boundary evicts it: the worker sees its bit
+    // drop out of the boundary bitmap and sits out rounds 6..12
+    assert_eq!(summaries[3].skipped_rounds, steps - 6, "worker 3 demotes after the t=5 sync");
+    // the master heard worker 3's rounds 0..4 (4 updates) plus 12 from each
+    // healthy worker; every swallowed frame (updates 4..6, Joins 6..12) is
+    // invisible, so no control frame was ever heard
+    assert_eq!(report.comm.messages(), 3 * steps + 4);
+    assert_eq!(report.comm.skips(), 0, "swallowed Joins never reach the master");
+    assert!(report.final_w_norm > 0.0);
+
+    let replay = run_synthetic(&fabric, d, n, steps, seed, Some(&plan));
+    assert_eq!(replay.0.comm.timeout_evictions(), 1, "replayed eviction");
+    assert_bit_identical(&first, &replay, "wedge chaos replay");
 }

@@ -59,6 +59,8 @@ fn worker_spec(wid: usize, scheme: &Scheme, steps: u64, seed: u64, adaptive: boo
         clip_norm: None,
         pipelined: true,
         absent: vec![],
+        depart_at: None,
+        rejoin: false,
         membership: None,
         adaptive,
     }

@@ -236,7 +236,9 @@ fn prop_membership_mutates_only_at_ticks_and_stays_bounded() {
                 }
             }
             let phase_ok = match m.phase() {
-                Phase::Cooldown => m.n_members() < min,
+                // Holding demotes the whole remnant: a sub-min fleet never
+                // trains, so the only below-min post-tick state is empty
+                Phase::Holding => m.n_members() == 0,
                 Phase::Training => m.n_members() >= min,
                 _ => false,
             };
@@ -254,7 +256,7 @@ fn prop_membership_mutates_only_at_ticks_and_stays_bounded() {
 
 #[test]
 fn prop_membership_regrows_to_training_after_total_eviction() {
-    // liveness: losing the whole fleet parks the machine in Cooldown, and
+    // liveness: losing the whole fleet parks the machine in Holding, and
     // re-joining a min-quorum returns it to Training at the next boundary —
     // no event order can wedge it
     check(cfgp(40), |g| {
@@ -269,8 +271,8 @@ fn prop_membership_regrows_to_training_after_total_eviction() {
             m.on_timeout(w);
         }
         m.tick();
-        if m.n_members() != 0 || m.phase() != Phase::Cooldown {
-            return Err("total eviction must leave an empty Cooldown fleet".into());
+        if m.n_members() != 0 || m.phase() != Phase::Holding {
+            return Err("total eviction must leave an empty Holding fleet".into());
         }
         for w in 0..min {
             m.on_join(w);
@@ -278,6 +280,63 @@ fn prop_membership_regrows_to_training_after_total_eviction() {
         let d = m.tick();
         if d.admitted.len() != min || m.phase() != Phase::Training {
             return Err(format!("re-grown fleet stuck in {:?}", m.phase()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_timeout_eviction_sequences_replay_deterministically() {
+    // liveness-deadline sequences (DESIGN.md §10): random interleavings of
+    // wedge-expiry timeouts, returns and clean leaves keep member-set
+    // mutation boundary-only, never leave a sub-min fleet training (the
+    // tick parks it in Holding with an empty member set instead), and
+    // replaying the recorded script through a fresh Membership reproduces
+    // the members, phase and boundary diff at every tick bit-for-bit
+    check(cfgp(60), |g| {
+        let slots = g.usize_in(2, 16);
+        let max = g.usize_in(2, slots);
+        let min = g.usize_in(1, max);
+        let admit_at = g.usize_in(1, 6) as u64;
+        let spec = MembershipSpec { min_workers: min, max_workers: max, admit_at };
+        let initial: Vec<usize> = (0..g.usize_in(1, max)).collect();
+        // record the whole event script up front so it can be replayed
+        let script: Vec<Vec<(u8, usize)>> = (0..g.usize_in(1, 10))
+            .map(|_| {
+                (0..g.usize_in(0, 8))
+                    .map(|_| (g.usize_in(0, 2) as u8, g.usize_in(0, slots + 2)))
+                    .collect()
+            })
+            .collect();
+        let run = |script: &[Vec<(u8, usize)>]| {
+            let mut m = Membership::new(spec, slots, &initial).map_err(|e| e.to_string())?;
+            let mut trace = Vec::new();
+            for events in script {
+                for &(op, wid) in events {
+                    match op {
+                        0 => m.on_join(wid),
+                        1 => m.on_timeout(wid),
+                        _ => m.on_leave(wid),
+                    }
+                }
+                let diff = m.tick();
+                let n = m.n_members();
+                if n > 0 && n < min {
+                    return Err(format!(
+                        "tick left {n}/{min} members training instead of Holding"
+                    ));
+                }
+                if (m.phase() == Phase::Holding) != (n == 0) {
+                    return Err(format!("phase {:?} with {n} members", m.phase()));
+                }
+                trace.push((m.members(), m.phase(), diff));
+            }
+            Ok(trace)
+        };
+        let first = run(&script)?;
+        let replay = run(&script)?;
+        if first != replay {
+            return Err("identical eviction scripts diverged on replay".into());
         }
         Ok(())
     });

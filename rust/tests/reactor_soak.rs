@@ -14,8 +14,14 @@
 //! The elastic soak below (ISSUE 6, DESIGN.md §7) drives the same 64-slot
 //! reactor through the epoch-phased membership engine: a 48-worker partial
 //! rendezvous, 16 late dialers admitted at epoch boundaries 2/3, a shrink
-//! below the min-quorum (Cooldown) and a re-grow — still zero added master
-//! threads and no FD leak.
+//! below the min-quorum — which demotes the remnant into the below-min
+//! Holding phase (DESIGN.md §10) for one parked epoch — and a re-grow that
+//! re-admits everyone, still with zero added master threads and no FD leak.
+//!
+//! The chaos soak (ISSUE 8, CI `chaos-soak` leg) adds injected faults at
+//! the same scale on BOTH master I/O backends: a wedged worker (socket
+//! alive, frames swallowed) and a crash-and-return worker (abrupt close,
+//! seeded backoff, generation-fenced re-join as a fresh admission).
 //!
 //! Thread/FD introspection reads /proc and is skipped (functional soak
 //! still runs) on non-Linux hosts.
@@ -195,6 +201,8 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
             clip_norm: None,
             pipelined: false,
             absent: vec![],
+            depart_at: None,
+            rejoin: false,
             membership: Some(worker_plan(wid)),
             adaptive: false,
         };
@@ -245,6 +253,7 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
     let plan = MembershipPlan {
         spec: MembershipSpec { min_workers: MIN, max_workers: N, admit_at: ADMIT },
         initial: (0..INITIAL).collect(),
+        dead_grace: std::time::Duration::from_secs(2),
     };
     let master_spec = MasterSpec {
         model: "synthetic".into(),
@@ -279,16 +288,24 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
             s.skipped_rounds
         );
     }
-    // the core fleet never sat out
+    // the t=19 shrink leaves 40 < MIN members: the boundary demotes the
+    // remnant and parks in Holding (DESIGN.md §10), so the core fleet sits
+    // out exactly the held epoch-5 rounds before the re-grow readmits it
     for s in &summaries[LEAVERS..INITIAL] {
-        assert_eq!(s.skipped_rounds, 0, "core worker {} sat a round out", s.worker_id);
+        assert_eq!(
+            s.skipped_rounds,
+            ADMIT,
+            "core worker {} should sit out exactly the Holding epoch",
+            s.worker_id
+        );
     }
-    // late joiners: everything before their admission epoch is a sit-out
+    // late joiners: everything before their admission epoch is a sit-out,
+    // plus the held epoch 5 (they are demoted with the rest of the fleet)
     for s in &summaries[INITIAL..] {
         let admit_epoch = if (s.worker_id as usize) < INITIAL + 8 { 2u64 } else { 3 };
         assert_eq!(
             s.skipped_rounds,
-            admit_epoch * ADMIT,
+            admit_epoch * ADMIT + ADMIT,
             "late joiner {} skipped {} rounds",
             s.worker_id,
             s.skipped_rounds
@@ -310,5 +327,230 @@ fn elastic_soak_admits_and_evicts_mid_run_with_o1_threads_and_no_fd_leak() {
             end <= before,
             "threads leaked across the elastic soak: {before} before the master, {end} after"
         );
+    }
+}
+
+/// Chaos soak (ISSUE 8 acceptance, CI `chaos-soak` leg): 64 workers over
+/// loopback TCP through the elastic engine, on BOTH master I/O backends,
+/// with two injected faults —
+///
+/// * worker 62 **wedges** mid-epoch-1: its socket stays alive but every
+///   frame from round 6 on is swallowed (done marker excepted);
+/// * worker 63 **crashes** mid-epoch-1: abrupt socket close with no done
+///   marker, a seeded exponential backoff, then a re-dial and a
+///   generation-fenced re-join as a fresh admission.
+///
+/// The master's liveness deadline must evict both at the next boundary
+/// (two recorded timeout evictions), training must keep making forward
+/// progress, the returned worker must be readmitted at a later boundary —
+/// and the reactor must do all of it with zero added master threads and no
+/// FD leak.
+#[test]
+fn chaos_soak_evicts_wedged_and_crashed_workers_and_readmits_the_returner() {
+    use std::time::Duration;
+
+    use tempo::comm::fault::{FaultInjector, FaultPolicy, ReconnectBackoff};
+    use tempo::comm::tcp::TcpMaster;
+    use tempo::config::experiment::Backend;
+    use tempo::config::IoBackend;
+    use tempo::coordinator::master::{AggMode, MasterLoop, MasterSpec};
+    use tempo::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
+    use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+    use tempo::optim::LrSchedule;
+    use tempo::scheme::Scheme;
+    use tempo::util::Pcg64;
+
+    const N: usize = 64;
+    const MIN: usize = 40;
+    const ADMIT: u64 = 4;
+    const STEPS: u64 = 5 * ADMIT; // epochs 0..=4, boundaries at 3/7/11/15/19
+    const QUEUE_BOUND: usize = 16;
+    const WEDGED: usize = 62;
+    const CRASHED: usize = 63;
+    const FAULT_ROUND: u64 = 6; // mid-epoch-1
+    let grace = Duration::from_millis(200);
+    let d = 128usize;
+    let seed = 23u64;
+
+    for io in [IoBackend::Threads, IoBackend::Reactor] {
+        let scheme = Scheme::parse("topk:k=8/estk/ef/beta=0.9").unwrap();
+        let schedule = LrSchedule::constant(0.05);
+        let fd_base = fd_count();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let mk_spec = |wid: usize, scheme: Scheme| WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme,
+            backend: Backend::Rust,
+            schedule,
+            steps: STEPS,
+            seed,
+            clip_norm: None,
+            pipelined: false,
+            absent: vec![],
+            depart_at: None,
+            rejoin: false,
+            membership: Some(WorkerMembership::always(ADMIT)),
+            adaptive: false,
+        };
+        let mk_source = move |wid: usize| {
+            let mut rng = Pcg64::new(seed, 0xC4A0 + wid as u64);
+            move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+                let mut g = vec![0.0f32; d];
+                rng.fill_gaussian(&mut g, 1.0);
+                Ok((1.0, g))
+            }
+        };
+
+        let mut handles = Vec::with_capacity(N);
+        for wid in 0..N {
+            let scheme = scheme.clone();
+            handles.push(std::thread::spawn(move || match wid {
+                WEDGED => {
+                    // socket stays open and readable; every frame (except
+                    // the final done marker) from FAULT_ROUND on is eaten
+                    let policy = FaultPolicy::new(0.0, 0.0, 1.0, seed, wid as u32)
+                        .with_wedge_windows(vec![(FAULT_ROUND, u64::MAX)]);
+                    let t = TcpWorker::connect(addr, wid as u32).unwrap();
+                    WorkerLoop::with_source(
+                        mk_spec(wid, scheme),
+                        FaultInjector::new(t, policy),
+                        Box::new(mk_source(wid)),
+                        vec![0.0f32; d],
+                    )
+                    .run_local()
+                    .unwrap()
+                }
+                CRASHED => {
+                    // leg 1: vanish before sending round FAULT_ROUND — the
+                    // drop below closes the socket with no done marker
+                    let t1 = TcpWorker::connect(addr, wid as u32).unwrap();
+                    let mut spec1 = mk_spec(wid, scheme.clone());
+                    spec1.depart_at = Some(FAULT_ROUND);
+                    WorkerLoop::with_source(
+                        spec1,
+                        t1,
+                        Box::new(mk_source(wid)),
+                        vec![0.0f32; d],
+                    )
+                    .run_local()
+                    .unwrap();
+                    // seeded exponential backoff, then re-dial
+                    let mut backoff = ReconnectBackoff::with_pacing(
+                        seed,
+                        wid as u32,
+                        Duration::from_millis(5),
+                        Duration::from_millis(200),
+                    );
+                    let t2 = loop {
+                        std::thread::sleep(backoff.next_delay());
+                        match TcpWorker::connect(addr, wid as u32) {
+                            Ok(t) => break t,
+                            Err(e) => assert!(
+                                backoff.attempts() < 12,
+                                "chaos re-dial failed after {} attempts: {e:#}",
+                                backoff.attempts()
+                            ),
+                        }
+                    };
+                    // leg 2: generation-fenced — never resume the old seat
+                    let mut spec2 = mk_spec(wid, scheme);
+                    spec2.rejoin = true;
+                    WorkerLoop::with_source(spec2, t2, Box::new(mk_source(wid)), vec![0.0f32; d])
+                        .run_local()
+                        .unwrap()
+                }
+                _ => {
+                    let t = TcpWorker::connect(addr, wid as u32).unwrap();
+                    WorkerLoop::with_source(
+                        mk_spec(wid, scheme),
+                        t,
+                        Box::new(mk_source(wid)),
+                        vec![0.0f32; d],
+                    )
+                    .run_local()
+                    .unwrap()
+                }
+            }));
+        }
+
+        let threads_before = thread_count();
+        let master: Box<dyn MasterTransport> = match io {
+            IoBackend::Threads => {
+                Box::new(TcpMaster::from_listener_graced(listener, N, N, grace).unwrap())
+            }
+            IoBackend::Reactor => Box::new(
+                ReactorMaster::from_listener_graced(listener, N, N, QUEUE_BOUND, grace).unwrap(),
+            ),
+        };
+        if io == IoBackend::Reactor {
+            if let (Some(before), Some(with)) = (threads_before, thread_count()) {
+                assert!(
+                    with <= before + 1,
+                    "chaos-soak reactor master grew the thread count {before} -> {with}"
+                );
+            }
+        }
+
+        let plan = MembershipPlan {
+            spec: MembershipSpec { min_workers: MIN, max_workers: N, admit_at: ADMIT },
+            initial: (0..N).collect(),
+            dead_grace: grace,
+        };
+        let master_spec = MasterSpec {
+            model: "synthetic".into(),
+            scheme,
+            schedule,
+            steps: STEPS,
+            eval_every: STEPS,
+            eval_batches: 1,
+            seed,
+            samples_per_round: N,
+            train_len: 64,
+            data_noise: 1.0,
+            aggregation: AggMode::FullSync,
+            membership: Some(plan),
+            adaptive: None,
+        };
+        let report = MasterLoop::new(master_spec, master).run_headless(d).unwrap();
+
+        let mut summaries: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        summaries.sort_by_key(|s| s.worker_id);
+        assert_eq!(summaries.len(), N);
+        for s in &summaries {
+            assert_eq!(s.rounds, STEPS, "{io:?}: worker {} did not complete", s.worker_id);
+        }
+        assert_eq!(
+            report.comm.timeout_evictions(),
+            2,
+            "{io:?}: the wedge and the crash must each cost one liveness eviction"
+        );
+        // the wedged worker computes through round 7 (the t=7 boundary sync
+        // drops its bit) and sits out the rest; it never returns because
+        // its Join frames are swallowed too
+        assert_eq!(
+            summaries[WEDGED].skipped_rounds,
+            STEPS - 8,
+            "{io:?}: wedged worker should demote after the t=7 sync"
+        );
+        // the crash-and-return worker finished its second leg as a fresh
+        // admission: it trained again, so it sat out strictly fewer rounds
+        // than a worker that never came back
+        assert!(
+            summaries[CRASHED].skipped_rounds < STEPS - 8,
+            "{io:?}: returned worker was never readmitted ({} sit-outs)",
+            summaries[CRASHED].skipped_rounds
+        );
+        assert!(report.comm.messages() > 0);
+        assert!(report.final_w_norm > 0.0, "{io:?}: the fleet must keep making progress");
+
+        if let (Some(base), Some(end)) = (fd_base, fd_count()) {
+            assert!(
+                end <= base + 4,
+                "{io:?}: FDs leaked across the chaos soak: baseline {base}, end {end}"
+            );
+        }
     }
 }

@@ -56,6 +56,8 @@ fn run_fleet(
             clip_norm: None,
             pipelined: fabric.pipelined,
             absent: fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
             membership: None,
             adaptive: false,
         };

@@ -13,11 +13,21 @@
 #   * committed copy is already real  ->  do nothing (one point per PR;
 #     runner noise must not rewrite the trajectory on every push)
 #
-# Usage: scripts/commit_bench.sh [BENCH_N.json]   (default: BENCH_7.json)
+# Usage: scripts/commit_bench.sh [--explain] [BENCH_N.json]
+#                                 (default: BENCH_8.json)
+#
+# --explain prints the commit/keep/skip decision and exits without touching
+# git state — CI runs it on every build so a silently-skipped self-heal
+# (the BENCH_5/BENCH_6 failure mode) shows up in the job log.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-OUT="${1:-BENCH_7.json}"
+EXPLAIN=0
+if [[ "${1:-}" == "--explain" ]]; then
+    EXPLAIN=1
+    shift
+fi
+OUT="${1:-BENCH_8.json}"
 
 # exit 0 when $1 is a real (comparable) smoke point, 1 otherwise
 is_real() {
@@ -57,6 +67,10 @@ if is_real "$HEAD_COPY"; then
 fi
 if ! is_real "$OUT"; then
     echo "commit_bench: regenerated $OUT is not a comparable smoke point; nothing to commit"
+    exit 0
+fi
+if [[ "$EXPLAIN" -eq 1 ]]; then
+    echo "commit_bench: would commit $OUT (placeholder at HEAD, real smoke point in the worktree)"
     exit 0
 fi
 
