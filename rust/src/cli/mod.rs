@@ -130,7 +130,8 @@ tempo — temporal-correlation gradient compression for momentum-SGD
 USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
               [--scheme <spec>] [--fabric <spec>] [--io threads|reactor]
-              [--shards N] [--membership <spec>] [--adaptive <spec>] [--csv out.csv]
+              [--shards N] [--membership <spec>] [--adaptive <spec>] [--runs R]
+              [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
@@ -191,6 +192,15 @@ Adaptive rate control (--adaptive or the [adaptive] table; DESIGN.md §8):
                                 the no-flap deadband. Rust backend only;
                                 not composable with --shards/--membership
   e.g.  --adaptive target=2.5,window=8,hysteresis=0.1
+
+Multi-tenant hosting (--runs R or the [runs] table; DESIGN.md §11):
+  one master process hosts R independent runs on one fabric and one
+  thread: run r owns workers [r*N, (r+1)*N), trains with seed+r, and is
+  bit-identical to launching it solo. Every frame carries a run_id;
+  cross-run delivery is a protocol error, and one run's failure leaves
+  its siblings running. --runs 1 (default) bypasses the demux entirely.
+  Not composable with --shards/--membership/--adaptive or crash chaos.
+  e.g.  --runs 8
 
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.

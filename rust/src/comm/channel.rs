@@ -178,18 +178,33 @@ impl MasterTransport for ChannelMaster {
     }
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
-        for (w, tx) in self.downs.iter().enumerate() {
+        let n = self.downs.len();
+        self.broadcast_group(frame, 0..n)
+    }
+
+    fn broadcast_group(&mut self, frame: &Frame, group: std::ops::Range<usize>) -> Result<()> {
+        anyhow::ensure!(
+            group.start < group.end && group.end <= self.downs.len(),
+            "broadcast group {group:?} outside worker range 0..{}",
+            self.downs.len()
+        );
+        for w in group {
             // a done/lost worker no longer listens; skipping it keeps late
             // broadcasts from erroring after a clean early exit
             if self.tracker.state(w) == PeerState::Alive {
                 // clone into a recycled buffer when a worker returned one
                 let buf = self.spares.try_recv().unwrap_or_default();
-                tx.send(frame.clone_with_buf(buf))
+                self.downs[w]
+                    .send(frame.clone_with_buf(buf))
                     .ok()
                     .with_context(|| format!("worker {w} hung up"))?;
             }
         }
         Ok(())
+    }
+
+    fn lost_peers(&self) -> Vec<usize> {
+        self.tracker.lost()
     }
 }
 

@@ -73,6 +73,11 @@ pub struct Frame {
     /// run with the controller off. On a [`Self::sync_scheme`] broadcast it
     /// is the NEW epoch both sides switch to.
     pub scheme_epoch: u16,
+    /// Hosted run this frame belongs to (multi-tenant master, DESIGN.md
+    /// §11). 0 on single-run fabrics — like `shard`, routing itself is by
+    /// connection; the header id is what lets the run demux layer validate
+    /// that a frame landed on the run that owns its chains.
+    pub run_id: u16,
     pub round: u64,
     /// payload body (entropy-coded update or raw f32 broadcast)
     pub payload_tag: u8,
@@ -90,6 +95,7 @@ impl Frame {
             worker,
             shard: 0,
             scheme_epoch: 0,
+            run_id: 0,
             round,
             payload_tag: payload.kind_tag,
             payload_bits: payload.bits,
@@ -118,6 +124,7 @@ impl Frame {
             worker: u32::MAX,
             shard: 0,
             scheme_epoch: 0,
+            run_id: 0,
             round,
             payload_tag: 0,
             payload_bits: buf.len() as u64 * 8,
@@ -138,6 +145,12 @@ impl Frame {
         self
     }
 
+    /// Tag this frame with the hosted run it belongs to.
+    pub fn with_run(mut self, run: u16) -> Self {
+        self.run_id = run;
+        self
+    }
+
     /// Zero-payload "absent this round" marker (fabric churn injection).
     pub fn skip(worker: u32, round: u64) -> Self {
         Self {
@@ -145,6 +158,7 @@ impl Frame {
             worker,
             shard: 0,
             scheme_epoch: 0,
+            run_id: 0,
             round,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -176,6 +190,7 @@ impl Frame {
             worker,
             shard: 0,
             scheme_epoch: 0,
+            run_id: 0,
             round: SYNC_ROUND,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -263,6 +278,7 @@ impl Frame {
             worker: u32::MAX,
             shard: 0,
             scheme_epoch: 0,
+            run_id: 0,
             round: u64::MAX,
             payload_tag: 0,
             bytes: Vec::new(),
@@ -284,6 +300,7 @@ impl Frame {
             worker: self.worker,
             shard: self.shard,
             scheme_epoch: self.scheme_epoch,
+            run_id: self.run_id,
             round: self.round,
             payload_tag: self.payload_tag,
             payload_bits: self.payload_bits,
@@ -346,6 +363,7 @@ impl Frame {
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.shard.to_le_bytes());
         out.extend_from_slice(&self.scheme_epoch.to_le_bytes());
+        out.extend_from_slice(&self.run_id.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.payload_bits.to_le_bytes());
         out.extend_from_slice(&self.loss.to_le_bytes());
@@ -363,28 +381,41 @@ impl Frame {
         self.worker = u32::from_le_bytes(head[2..6].try_into().unwrap());
         self.shard = u16::from_le_bytes(head[6..8].try_into().unwrap());
         self.scheme_epoch = u16::from_le_bytes(head[8..10].try_into().unwrap());
-        self.round = u64::from_le_bytes(head[10..18].try_into().unwrap());
-        self.payload_bits = u64::from_le_bytes(head[18..26].try_into().unwrap());
-        self.loss = f32::from_le_bytes(head[26..30].try_into().unwrap());
-        Ok(u64::from_le_bytes(head[30..38].try_into().unwrap()) as usize)
+        self.run_id = u16::from_le_bytes(head[10..12].try_into().unwrap());
+        self.round = u64::from_le_bytes(head[12..20].try_into().unwrap());
+        self.payload_bits = u64::from_le_bytes(head[20..28].try_into().unwrap());
+        self.loss = f32::from_le_bytes(head[28..32].try_into().unwrap());
+        Ok(u64::from_le_bytes(head[32..40].try_into().unwrap()) as usize)
     }
 
     pub fn deserialize(buf: &[u8]) -> Result<Self> {
         if buf.len() < HEADER_LEN {
-            bail!("frame too short: {} bytes", buf.len());
+            bail!(
+                "frame too short: {} bytes (header is {HEADER_LEN}; a 38-byte \
+                 frame is the pre-run_id wire format — peer needs upgrading)",
+                buf.len()
+            );
         }
         let mut f = Frame::shutdown();
         let head: &[u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
         let body_len = f.apply_header(head)?;
         if buf.len() != HEADER_LEN + body_len {
-            bail!("frame body length mismatch: {} vs {}", buf.len() - HEADER_LEN, body_len);
+            bail!(
+                "frame body length mismatch: {} vs {} (a consistent off-by-2 means \
+                 the peer speaks the pre-run_id 38-byte header)",
+                buf.len() - HEADER_LEN,
+                body_len
+            );
         }
         f.bytes = buf[HEADER_LEN..].to_vec();
         Ok(f)
     }
 }
 
-pub const HEADER_LEN: usize = 1 + 1 + 4 + 2 + 2 + 8 + 8 + 4 + 8;
+// kind + payload_tag + worker + shard + scheme_epoch + run_id + round +
+// payload_bits + loss + body_len. 38 before the multi-run `run_id` landed —
+// the pre-run_id wire format is rejected, not silently misparsed.
+pub const HEADER_LEN: usize = 1 + 1 + 4 + 2 + 2 + 2 + 8 + 8 + 4 + 8;
 
 #[cfg(test)]
 mod tests {
@@ -397,6 +428,7 @@ mod tests {
             worker: 3,
             shard: 9,
             scheme_epoch: 4,
+            run_id: 6,
             round: 99,
             payload_tag: 1,
             bytes: vec![1, 2, 3, 4, 5],
@@ -410,6 +442,7 @@ mod tests {
         assert_eq!(g.worker, 3);
         assert_eq!(g.shard, 9);
         assert_eq!(g.scheme_epoch, 4);
+        assert_eq!(g.run_id, 6);
         assert_eq!(g.round, 99);
         assert_eq!(g.payload_bits, 37);
         assert_eq!(g.loss, 1.25);
@@ -454,6 +487,7 @@ mod tests {
             worker: u32::MAX,
             shard: 3,
             scheme_epoch: 2,
+            run_id: 5,
             round: 12,
             payload_tag: 0,
             bytes: vec![1, 2, 3, 4],
@@ -476,6 +510,34 @@ mod tests {
         let g = Frame::deserialize(&f.serialize()).unwrap();
         assert_eq!(g.shard, 3);
         assert_eq!(Frame::skip(2, 17).shard, 0, "constructors default to shard 0");
+    }
+
+    #[test]
+    fn with_run_tags_and_roundtrips() {
+        let f = Frame::skip(2, 17).with_run(7);
+        let g = Frame::deserialize(&f.serialize()).unwrap();
+        assert_eq!(g.run_id, 7);
+        assert_eq!(Frame::skip(2, 17).run_id, 0, "constructors default to run 0");
+        assert_eq!(Frame::broadcast(8, &[1.0]).run_id, 0);
+        assert_eq!(Frame::handshake(1, 0).run_id, 0);
+        assert_eq!(
+            Frame::broadcast(3, &[2.0]).with_run(4).clone_with_buf(Vec::new()).run_id,
+            4,
+            "clone_with_buf carries the run tag"
+        );
+    }
+
+    #[test]
+    fn old_38_byte_header_is_rejected() {
+        // A pre-run_id peer's frame: 38 header bytes, no payload. The
+        // length prefix is handled by the framed codec; at this layer the
+        // bytes parse as a 40-byte-header frame with a short/absent body
+        // and must be rejected, never silently misread.
+        let f = Frame::skip(1, 5);
+        let mut old = f.serialize();
+        // drop the two run_id bytes (offsets 10..12) to fake the old layout
+        old.drain(10..12);
+        assert!(Frame::deserialize(&old).is_err(), "38-byte-header frame must not parse");
     }
 
     #[test]

@@ -91,13 +91,18 @@ pub fn read_frame_into<R: Read>(r: &mut R, frame: &mut Frame) -> Result<()> {
     r.read_exact(&mut len_buf).context("read frame length")?;
     let len = u64::from_le_bytes(len_buf);
     anyhow::ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len} bytes");
-    anyhow::ensure!(len as usize >= HEADER_LEN, "frame too short: {len} bytes");
+    anyhow::ensure!(
+        len as usize >= HEADER_LEN,
+        "frame too short: {len} bytes (header is {HEADER_LEN}; a 38-byte \
+         frame is the pre-run_id wire format — peer needs upgrading)"
+    );
     let mut head = [0u8; HEADER_LEN];
     r.read_exact(&mut head).context("read frame header")?;
     let body_len = frame.apply_header(&head)?;
     anyhow::ensure!(
         HEADER_LEN + body_len == len as usize,
-        "frame body length mismatch: {} vs {}",
+        "frame body length mismatch: {} vs {} (a consistent off-by-2 means \
+         the peer speaks the pre-run_id 38-byte header)",
         len as usize - HEADER_LEN,
         body_len
     );
@@ -249,6 +254,7 @@ mod tests {
             worker: 5,
             shard: 2,
             scheme_epoch: 1,
+            run_id: 3,
             round: 42,
             payload_tag: 1,
             bytes: (0..nbytes).map(|i| (i % 251) as u8).collect(),
@@ -332,6 +338,24 @@ mod tests {
         buf.extend_from_slice(&[0u8; 64]);
         let err = read_frame(&mut buf.as_slice()).unwrap_err();
         assert!(format!("{err:#}").contains("frame too large"), "{err:#}");
+    }
+
+    #[test]
+    fn pre_run_id_38_byte_frames_are_rejected_with_a_format_hint() {
+        // Fake what a pre-run_id sender puts on the wire: drop the two
+        // run_id bytes (header offset 10..12) and shrink the length prefix
+        // to match. Empty body → the 38-byte total trips the too-short
+        // check; non-empty body → the header/body accounting mismatches.
+        for nbytes in [0usize, 10] {
+            let mut stream = Vec::new();
+            write_frame(&mut stream, &sample_frame(nbytes)).unwrap();
+            let total = u64::from_le_bytes(stream[..8].try_into().unwrap()) - 2;
+            stream[..8].copy_from_slice(&total.to_le_bytes());
+            stream.drain(8 + 10..8 + 12);
+            let mut recycled = Frame::shutdown();
+            let err = read_frame_into(&mut stream.as_slice(), &mut recycled).unwrap_err();
+            assert!(format!("{err:#}").contains("pre-run_id"), "nbytes={nbytes}: {err:#}");
+        }
     }
 
     #[test]

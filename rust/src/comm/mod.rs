@@ -35,6 +35,7 @@ pub mod fault;
 pub mod frame;
 pub mod framed;
 pub mod reactor;
+pub mod run;
 pub mod sender;
 pub mod shard;
 pub mod tcp;
@@ -43,6 +44,7 @@ pub use channel::{channel_fabric, ChannelMaster, ChannelWorker};
 pub use fault::{FaultInjector, FaultPolicy, FaultStats};
 pub use frame::{Frame, FrameKind, ADAPT_TAG, SYNC_ROUND, SYNC_TAG};
 pub use reactor::ReactorMaster;
+pub use run::{split_runs, RunPort, RunWorker};
 pub use sender::PipelinedSender;
 pub use shard::{ShardMap, ShardedWorkerEndpoint};
 
@@ -99,6 +101,13 @@ impl PeerTracker {
     /// A worker that vanished mid-run without its done marker, if any.
     pub(crate) fn first_lost(&self) -> Option<usize> {
         self.state.iter().position(|&s| s == PeerState::Lost)
+    }
+
+    /// Every worker currently lost (vanished mid-run, no done marker) —
+    /// what the multi-run demux layer scopes per hosted run, so one run's
+    /// dead worker fails only the engine that still needs it.
+    pub(crate) fn lost(&self) -> Vec<usize> {
+        (0..self.state.len()).filter(|&wid| self.state[wid] == PeerState::Lost).collect()
     }
 
     pub(crate) fn state(&self, wid: usize) -> PeerState {
@@ -261,6 +270,31 @@ pub trait MasterTransport: Send {
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()>;
 
+    /// Broadcast to a contiguous sub-range of worker slots — the fan-out
+    /// primitive of the multi-run demux layer (DESIGN.md §11), where hosted
+    /// run r owns global worker slots `[base, base + n_r)` and its round
+    /// engine's broadcasts must reach exactly those connections. Transports
+    /// with per-connection write paths override this with a real subset
+    /// write; the default only supports the degenerate full-range case so
+    /// single-run fabrics and test doubles need no override.
+    fn broadcast_group(&mut self, frame: &Frame, group: std::ops::Range<usize>) -> Result<()> {
+        anyhow::ensure!(
+            group.start == 0 && group.end == self.n_workers(),
+            "transport cannot broadcast to a worker subset ({group:?} of {})",
+            self.n_workers()
+        );
+        self.broadcast(frame)
+    }
+
+    /// Worker ids currently lost (connection gone mid-run, no done marker,
+    /// no reconnect yet). Unlike [`MasterTransport::recv_any`] — which
+    /// bails on the first lost worker — this just reports, so a demux
+    /// layer hosting several runs can fail only the run that still needs
+    /// the dead worker. Transports without liveness tracking report none.
+    fn lost_peers(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
     /// Broadcast and report the exact recipient roster: `roster[wid]` is
     /// true iff this broadcast was staged to a live connection for worker
     /// `wid`. The elastic round engine adopts the roster as the set of
@@ -301,6 +335,14 @@ impl MasterTransport for Box<dyn MasterTransport> {
 
     fn broadcast(&mut self, frame: &Frame) -> Result<()> {
         (**self).broadcast(frame)
+    }
+
+    fn broadcast_group(&mut self, frame: &Frame, group: std::ops::Range<usize>) -> Result<()> {
+        (**self).broadcast_group(frame, group)
+    }
+
+    fn lost_peers(&self) -> Vec<usize> {
+        (**self).lost_peers()
     }
 
     fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {

@@ -844,6 +844,20 @@ impl MasterTransport for ReactorMaster {
         Ok(())
     }
 
+    fn broadcast_group(&mut self, frame: &Frame, group: std::ops::Range<usize>) -> Result<()> {
+        anyhow::ensure!(
+            group.start < group.end && group.end <= self.n,
+            "broadcast group {group:?} outside worker range 0..{}",
+            self.n
+        );
+        self.stage_broadcast_to(frame, group)?;
+        Ok(())
+    }
+
+    fn lost_peers(&self) -> Vec<usize> {
+        self.tracker.lost()
+    }
+
     fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
         let sent = self.stage_broadcast(frame)?;
         debug_assert!(sent > 0);
@@ -857,6 +871,20 @@ impl ReactorMaster {
     /// workers it reached. Shared body of `broadcast` (which discards the
     /// mask, keeping the plain path allocation-free) and `broadcast_roster`.
     fn stage_broadcast(&mut self, frame: &Frame) -> Result<usize> {
+        self.stage_broadcast_to(frame, 0..self.n)
+    }
+
+    /// [`Self::stage_broadcast`] scoped to a contiguous worker-slot range —
+    /// the multi-run fan-out (DESIGN.md §11): a hosted run's broadcast is
+    /// staged only on its own workers' connections, so its write queues (and
+    /// its slow-consumer disconnects) cannot touch another run's peers. The
+    /// per-connection bounded [`WriteQueue`]s already isolate peer from
+    /// peer; scoping the staging loop is all run-level isolation needs.
+    fn stage_broadcast_to(
+        &mut self,
+        frame: &Frame,
+        group: std::ops::Range<usize>,
+    ) -> Result<usize> {
         // service pending I/O first so fresh reconnects are included and
         // drained queues have made room (parity with the threads backend,
         // where accept + readers run concurrently with the engine)
@@ -874,7 +902,7 @@ impl ReactorMaster {
         self.roster_scratch.clear();
         self.roster_scratch.resize(self.n, false);
         let mut sent = 0usize;
-        for w in 0..self.n {
+        for w in group {
             let Some(slot) = self.worker_conn[w] else { continue };
             let outcome = {
                 let Some(conn) = self.conns[slot].as_mut() else { continue };
@@ -1027,6 +1055,33 @@ mod tests {
         assert_eq!(roster, vec![true, true]);
         early.join().unwrap();
         late.join().unwrap();
+    }
+
+    #[test]
+    fn broadcast_group_reaches_only_its_slot_range() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // per-connection FIFO means each worker's first broadcast proves
+        // the other run's group broadcast never touched its connection
+        let w0 = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 0).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!((b.round, b.run_id), (1, 0));
+            assert_eq!(w.recv_broadcast().unwrap().round, 3);
+        });
+        let w1 = std::thread::spawn(move || {
+            let mut w = TcpWorker::connect(addr, 1).unwrap();
+            let b = w.recv_broadcast().unwrap();
+            assert_eq!((b.round, b.run_id), (2, 1));
+            assert_eq!(w.recv_broadcast().unwrap().round, 3);
+        });
+        let mut master = ReactorMaster::from_listener(listener, 2, 4).unwrap();
+        master.broadcast_group(&Frame::broadcast(1, &[1.0]), 0..1).unwrap();
+        master.broadcast_group(&Frame::broadcast(2, &[2.0]).with_run(1), 1..2).unwrap();
+        master.broadcast(&Frame::broadcast(3, &[3.0])).unwrap();
+        assert!(master.broadcast_group(&Frame::broadcast(4, &[4.0]), 1..3).is_err());
+        w0.join().unwrap();
+        w1.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! Run demultiplexing: host R independent runs behind one master endpoint
+//! (DESIGN.md §11).
+//!
+//! One physical fabric — one listener, one reactor, one merged arrival
+//! stream — carries R logically independent training runs. Global worker
+//! slots are partitioned contiguously: run r owns `[base_r, base_r + n_r)`.
+//! [`split_runs`] wraps the underlying [`MasterTransport`] in a shared
+//! demux and hands out one [`RunPort`] per run; each port IS a
+//! `MasterTransport` over its run's workers under run-local ids, so the
+//! round engine neither knows nor cares that it shares a process, a
+//! thread, and a socket with R−1 other runs.
+//!
+//! Isolation contract:
+//!
+//! * **frames** — every uplink frame is routed by the global worker id of
+//!   its connection and validated against the `run_id` stamped in its
+//!   header; a cross-run misdelivery is a protocol error, never a silent
+//!   delivery to the wrong run's chains.
+//! * **broadcasts** — a port broadcasts through
+//!   [`MasterTransport::broadcast_group`], staging only on its own run's
+//!   connections; with the reactor backend the per-connection bounded
+//!   write queues then bound a slow consumer's damage to its own run
+//!   (per-peer isolation from PR 5, scoped per run here).
+//! * **liveness** — the demux pumps the shared stream exclusively through
+//!   [`MasterTransport::recv_any_timeout`], which never bails on a lost
+//!   worker; each port applies the fixed-fleet "hung up after
+//!   `dead_grace`" policy to *its own* workers via
+//!   [`MasterTransport::lost_peers`], so one run's crash fails one run.
+//!
+//! Known limit: an explicit abort *frame* is absorbed by the shared
+//! transport's `PeerTracker` inside whichever port happened to be pumping,
+//! so its error can surface on a sibling port. Connection-level failures
+//! (crash, EOF, wedge) — the chaos cases — are tracked per peer and scoped
+//! correctly; see `tests/multi_run.rs`.
+
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::frame::Frame;
+use super::{FrameSender, MasterTransport, WorkerTransport};
+
+/// How long one demux pump blocks on the shared stream before re-checking
+/// the caller's own queue and liveness. Purely an idle-wait granularity —
+/// an arriving frame wakes the pump immediately.
+const PUMP_CHUNK: Duration = Duration::from_millis(25);
+
+/// State shared by every [`RunPort`] of one hosted fabric.
+struct Shared<M> {
+    inner: M,
+    /// per-run arrival queues of (run-local worker id, frame)
+    queues: Vec<VecDeque<(usize, Frame)>>,
+    /// global slot base per run (ascending, bases[0] == 0)
+    bases: Vec<usize>,
+    sizes: Vec<usize>,
+}
+
+impl<M: MasterTransport> Shared<M> {
+    /// Which run owns global worker slot `gid`.
+    fn run_of(&self, gid: usize) -> usize {
+        match self.bases.binary_search(&gid) {
+            Ok(r) => r,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Pump one frame (at most) off the shared stream into its run queue.
+    /// Returns whether anything was enqueued within `timeout`.
+    fn pump(&mut self, timeout: Duration) -> Result<bool> {
+        match self.inner.recv_any_timeout(timeout)? {
+            None => Ok(false),
+            Some((gid, frame)) => {
+                let total: usize = self.sizes.iter().sum();
+                anyhow::ensure!(gid < total, "bad worker id {gid}");
+                let r = self.run_of(gid);
+                anyhow::ensure!(
+                    frame.run_id as usize == r,
+                    "cross-run misdelivery: worker {gid} sent a frame tagged run {} \
+                     on run {r}'s connection",
+                    frame.run_id
+                );
+                self.queues[r].push_back((gid - self.bases[r], frame));
+                Ok(true)
+            }
+        }
+    }
+
+    /// First lost worker belonging to `run`, as a run-local id.
+    fn lost_local(&self, run: usize) -> Option<usize> {
+        let lo = self.bases[run];
+        let hi = lo + self.sizes[run];
+        self.inner.lost_peers().into_iter().find(|&g| (lo..hi).contains(&g)).map(|g| g - lo)
+    }
+}
+
+/// One hosted run's view of the shared fabric: a [`MasterTransport`] over
+/// that run's workers, with run-local worker ids `0..n_r`.
+pub struct RunPort<M> {
+    shared: Arc<Mutex<Shared<M>>>,
+    run: usize,
+    base: usize,
+    size: usize,
+    /// fixed-fleet liveness window: how long a lost worker of THIS run may
+    /// stay gone before this port's `recv_any` declares it hung up
+    pub dead_grace: Duration,
+}
+
+/// Partition `inner`'s worker slots into contiguous per-run groups
+/// (`sizes[r]` workers for run r, in order) and return one [`RunPort`] per
+/// run. `sizes` must cover every slot exactly.
+pub fn split_runs<M: MasterTransport>(
+    inner: M,
+    sizes: &[usize],
+    dead_grace: Duration,
+) -> Result<Vec<RunPort<M>>> {
+    anyhow::ensure!(!sizes.is_empty(), "need at least one run");
+    anyhow::ensure!(sizes.len() <= u16::MAX as usize, "run count exceeds the u16 header field");
+    let mut bases = Vec::with_capacity(sizes.len());
+    let mut total = 0usize;
+    for (r, &n) in sizes.iter().enumerate() {
+        anyhow::ensure!(n >= 1, "run {r} has no workers");
+        bases.push(total);
+        total += n;
+    }
+    anyhow::ensure!(
+        total == inner.n_workers(),
+        "runs cover {total} worker slots, transport has {}",
+        inner.n_workers()
+    );
+    let shared = Arc::new(Mutex::new(Shared {
+        inner,
+        queues: sizes.iter().map(|_| VecDeque::new()).collect(),
+        bases: bases.clone(),
+        sizes: sizes.to_vec(),
+    }));
+    Ok(sizes
+        .iter()
+        .enumerate()
+        .map(|(r, &n)| RunPort {
+            shared: Arc::clone(&shared),
+            run: r,
+            base: bases[r],
+            size: n,
+            dead_grace,
+        })
+        .collect())
+}
+
+impl<M: MasterTransport> RunPort<M> {
+    fn group(&self) -> Range<usize> {
+        self.base..self.base + self.size
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Shared<M>> {
+        self.shared.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl<M: MasterTransport> MasterTransport for RunPort<M> {
+    fn n_workers(&self) -> usize {
+        self.size
+    }
+
+    fn recv_any(&mut self) -> Result<(usize, Frame)> {
+        // same contract as the concrete masters' recv_any, scoped to this
+        // run: block until one of OUR workers produces a frame, and bail
+        // after dead_grace when one of OUR workers is lost — a sibling
+        // run's dead worker is not our problem
+        let mut lost_deadline: Option<Instant> = None;
+        loop {
+            let mut s = self.lock();
+            if let Some(x) = s.queues[self.run].pop_front() {
+                return Ok(x);
+            }
+            match s.lost_local(self.run) {
+                Some(local) => {
+                    let dl =
+                        *lost_deadline.get_or_insert_with(|| Instant::now() + self.dead_grace);
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        anyhow::bail!(
+                            "worker {local} hung up (connection closed, no reconnect)"
+                        );
+                    }
+                    s.pump(left.min(PUMP_CHUNK))?;
+                }
+                None => {
+                    lost_deadline = None;
+                    s.pump(PUMP_CHUNK)?;
+                }
+            }
+        }
+    }
+
+    fn try_recv_any(&mut self) -> Result<Option<(usize, Frame)>> {
+        let mut s = self.lock();
+        loop {
+            if let Some(x) = s.queues[self.run].pop_front() {
+                return Ok(Some(x));
+            }
+            if !s.pump(Duration::ZERO)? {
+                return Ok(None);
+            }
+        }
+    }
+
+    fn recv_any_timeout(&mut self, timeout: Duration) -> Result<Option<(usize, Frame)>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let mut s = self.lock();
+            if let Some(x) = s.queues[self.run].pop_front() {
+                return Ok(Some(x));
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            s.pump(left.min(PUMP_CHUNK))?;
+        }
+    }
+
+    fn expired_peers(&mut self, grace: Duration) -> Vec<usize> {
+        let mut s = self.lock();
+        let group = self.group();
+        s.inner
+            .expired_peers(grace)
+            .into_iter()
+            .filter(|g| group.contains(g))
+            .map(|g| g - self.base)
+            .collect()
+    }
+
+    fn broadcast(&mut self, frame: &Frame) -> Result<()> {
+        let group = self.group();
+        self.lock()
+            .inner
+            .broadcast_group(frame, group)
+            .with_context(|| format!("run {}", self.run))
+    }
+
+    fn lost_peers(&self) -> Vec<usize> {
+        let s = self.lock();
+        let lo = self.base;
+        let hi = self.base + self.size;
+        let lost = s.inner.lost_peers();
+        lost.into_iter().filter(|&g| (lo..hi).contains(&g)).map(|g| g - lo).collect()
+    }
+}
+
+/// Worker endpoint of one hosted run: wraps an ordinary transport dialed
+/// in on a *global* worker slot, stamping every uplink frame with the
+/// run's id and refusing downlink frames tagged for another run. The
+/// worker loop inside is completely unaware of multi-tenancy.
+pub struct RunWorker<W> {
+    inner: W,
+    run: u16,
+}
+
+impl<W: WorkerTransport> RunWorker<W> {
+    pub fn new(inner: W, run: u16) -> Self {
+        Self { inner, run }
+    }
+
+    fn check(&self, frame: &Frame) -> Result<()> {
+        anyhow::ensure!(
+            frame.run_id == self.run,
+            "cross-run misdelivery: broadcast tagged run {} arrived on run {}'s connection",
+            frame.run_id,
+            self.run
+        );
+        Ok(())
+    }
+}
+
+impl<W: WorkerTransport> WorkerTransport for RunWorker<W> {
+    fn send_update(&mut self, mut frame: Frame) -> Result<()> {
+        frame.run_id = self.run;
+        self.inner.send_update(frame)
+    }
+
+    fn recv_broadcast(&mut self) -> Result<Frame> {
+        let frame = self.inner.recv_broadcast()?;
+        self.check(&frame)?;
+        Ok(frame)
+    }
+
+    fn recv_broadcast_into(&mut self, frame: &mut Frame) -> Result<()> {
+        self.inner.recv_broadcast_into(frame)?;
+        self.check(frame)
+    }
+
+    fn split_sender(&mut self) -> Result<Box<dyn FrameSender>> {
+        let inner = self.inner.split_sender()?;
+        Ok(Box::new(RunSender { inner, run: self.run }))
+    }
+}
+
+/// Split-off update sender of a [`RunWorker`] — same run stamp.
+pub struct RunSender {
+    inner: Box<dyn FrameSender>,
+    run: u16,
+}
+
+impl FrameSender for RunSender {
+    fn send(&mut self, mut frame: Frame) -> Result<()> {
+        frame.run_id = self.run;
+        self.inner.send(frame)
+    }
+
+    fn send_reclaim(&mut self, mut frame: Frame) -> Result<Option<Vec<u8>>> {
+        frame.run_id = self.run;
+        self.inner.send_reclaim(frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::channel_fabric;
+    use crate::comm::frame::FrameKind;
+
+    #[test]
+    fn frames_route_to_their_run_under_local_ids() {
+        let (master, mut workers) = channel_fabric(3); // run 0: {0}, run 1: {1, 2}
+        let mut ports = split_runs(master, &[1, 2], Duration::from_millis(200)).unwrap();
+        let mut p1 = ports.pop().unwrap();
+        let mut p0 = ports.pop().unwrap();
+        assert_eq!((p0.n_workers(), p1.n_workers()), (1, 2));
+
+        // global worker 2 (run 1, local 1) sends first; run 0's port must
+        // not see it, run 1's port must see it under the local id
+        workers[2].send_update(Frame::skip(1, 4).with_run(1)).unwrap();
+        workers[0].send_update(Frame::skip(0, 9).with_run(0)).unwrap();
+        let (wid, f) = p1.recv_any().unwrap();
+        assert_eq!((wid, f.round), (1, 4));
+        let (wid, f) = p0.recv_any().unwrap();
+        assert_eq!((wid, f.round), (0, 9));
+        assert!(p1.try_recv_any().unwrap().is_none());
+
+        // group broadcasts land only on the owning run's workers
+        p0.broadcast(&Frame::broadcast(7, &[1.0]).with_run(0)).unwrap();
+        p1.broadcast(&Frame::broadcast(8, &[2.0]).with_run(1)).unwrap();
+        assert_eq!(workers[0].recv_broadcast().unwrap().round, 7);
+        assert_eq!(workers[1].recv_broadcast().unwrap().round, 8);
+        assert_eq!(workers[2].recv_broadcast().unwrap().round, 8);
+    }
+
+    #[test]
+    fn cross_run_misdelivery_is_a_protocol_error() {
+        let (master, mut workers) = channel_fabric(2);
+        let mut ports = split_runs(master, &[1, 1], Duration::from_millis(200)).unwrap();
+        // worker 0 (run 0's slot) stamps its frame for run 1
+        workers[0].send_update(Frame::skip(0, 0).with_run(1)).unwrap();
+        let e = ports[0].try_recv_any().unwrap_err();
+        assert!(format!("{e:#}").contains("cross-run misdelivery"), "{e:#}");
+    }
+
+    #[test]
+    fn run_worker_stamps_sends_and_rejects_foreign_broadcasts() {
+        let (master, workers) = channel_fabric(2);
+        let mut ports = split_runs(master, &[1, 1], Duration::from_millis(200)).unwrap();
+        let mut it = workers.into_iter();
+        let mut w0 = RunWorker::new(it.next().unwrap(), 0);
+        let mut w1 = RunWorker::new(it.next().unwrap(), 1);
+
+        // the wrapper stamps run ids, so the raw frames need none
+        w0.send_update(Frame::skip(0, 1)).unwrap();
+        w1.send_update(Frame::skip(0, 2)).unwrap();
+        assert_eq!(ports[0].recv_any().unwrap().1.round, 1);
+        assert_eq!(ports[1].recv_any().unwrap().1.round, 2);
+
+        // a broadcast tagged run 0 arriving on run 1's endpoint is refused
+        ports[1].broadcast(&Frame::broadcast(3, &[1.0]).with_run(0)).unwrap();
+        let e = w1.recv_broadcast().unwrap_err();
+        assert!(format!("{e:#}").contains("cross-run misdelivery"), "{e:#}");
+
+        // correctly tagged broadcasts pass (split sender stamps too)
+        ports[0].broadcast(&Frame::broadcast(4, &[1.0]).with_run(0)).unwrap();
+        let b = w0.recv_broadcast().unwrap();
+        assert_eq!((b.round, b.kind), (4, FrameKind::Broadcast));
+        let mut s = w0.split_sender().unwrap();
+        s.send(Frame::skip(0, 5)).unwrap();
+        let (_, f) = ports[0].recv_any().unwrap();
+        assert_eq!((f.round, f.run_id), (5, 0));
+    }
+
+    #[test]
+    fn run_partition_must_cover_the_fabric_exactly() {
+        let (master, _workers) = channel_fabric(3);
+        assert!(split_runs(master, &[1, 1], Duration::ZERO).is_err(), "undercover");
+        let (master, _workers) = channel_fabric(3);
+        assert!(split_runs(master, &[2, 2], Duration::ZERO).is_err(), "overcover");
+        let (master, _workers) = channel_fabric(3);
+        assert!(split_runs(master, &[3, 0], Duration::ZERO).is_err(), "empty run");
+        let (master, _workers) = channel_fabric(3);
+        assert!(split_runs(master, &[], Duration::ZERO).is_err(), "no runs");
+    }
+}

@@ -218,6 +218,7 @@ fn sub_frame(src: &Frame, shard: usize, slot: &mut Payload) -> Frame {
         worker: src.worker,
         shard: shard as u16,
         scheme_epoch: src.scheme_epoch,
+        run_id: src.run_id,
         round: src.round,
         payload_tag: slot.kind_tag,
         payload_bits: slot.bits,
@@ -325,6 +326,7 @@ impl WorkerTransport for ShardedWorkerEndpoint {
         out.worker = u32::MAX;
         out.shard = 0;
         out.scheme_epoch = 0;
+        out.run_id = 0;
         out.round = round.context("no shards")?;
         out.payload_tag = 0;
         out.payload_bits = out.bytes.len() as u64 * 8;

@@ -434,6 +434,35 @@ impl MasterTransport for TcpMaster {
         Ok(())
     }
 
+    fn broadcast_group(&mut self, frame: &Frame, group: std::ops::Range<usize>) -> Result<()> {
+        // same staged-once write path as broadcast, scoped to one hosted
+        // run's worker slots (DESIGN.md §11) — the write halves outside the
+        // range are never touched, so another run's dead or slow peer
+        // cannot surface here
+        anyhow::ensure!(
+            group.start < group.end && group.end <= self.n,
+            "broadcast group {group:?} outside worker range 0..{}",
+            self.n
+        );
+        encode_frame(frame, &mut self.bcast_scratch)?;
+        let mut sent = 0usize;
+        for w in group {
+            let mut guard = self.writers[w].lock().unwrap();
+            if let Some(stream) = guard.as_mut() {
+                match stream.write_all(&self.bcast_scratch).and_then(|()| stream.flush()) {
+                    Ok(()) => sent += 1,
+                    Err(_) => *guard = None,
+                }
+            }
+        }
+        anyhow::ensure!(sent > 0, "broadcast reached no workers (all hung up)");
+        Ok(())
+    }
+
+    fn lost_peers(&self) -> Vec<usize> {
+        self.tracker.lost()
+    }
+
     fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
         // same staged-once write path as broadcast, but reporting exactly
         // which worker slots the frame reached — a connection that appeared

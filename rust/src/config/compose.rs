@@ -1,0 +1,240 @@
+//! The single composition gate: every "feature X does not work with
+//! feature Y" refusal lives here, with one uniform message shape, and is
+//! checked from every launch path — config-file parse, CLI overrides, and
+//! the [`Launcher`](crate::coordinator::launch::Launcher) — so an
+//! unsupported pair fails identically no matter how it was requested.
+//!
+//! Per-table scalar validation (`workers >= 1`, `runs.count >= 1`, ...)
+//! stays with each table's own `validate()`; this module owns only the
+//! *cross*-table constraints. Engine-level duplicates of a few of these
+//! checks remain in `coordinator::master` as defense in depth for callers
+//! that assemble a `MasterSpec` by hand — they are backstops, not the
+//! contract; the contract is here.
+
+use anyhow::Result;
+
+use super::experiment::{Backend, ExperimentConfig};
+use super::fabric::ChaosKind;
+
+/// Uniform refusal: `unsupported composition: A with B (why)`.
+fn refuse(a: &str, b: &str, why: &str) -> anyhow::Error {
+    anyhow::anyhow!("unsupported composition: {a} with {b} ({why})")
+}
+
+/// Validate every cross-feature composition rule of `cfg`. Called from
+/// [`ExperimentConfig::validate`] (so both the config-file and CLI paths
+/// hit it at parse time) and again from the Launcher (so hand-assembled
+/// configs cannot sneak past).
+pub fn validate(cfg: &ExperimentConfig) -> Result<()> {
+    let scheme = cfg.scheme.to_scheme()?;
+
+    if cfg.shards.is_sharded() && !scheme.is_blockwise() {
+        return Err(refuse(
+            "[shards] count > 1",
+            "a non-blockwise scheme",
+            "the master shards by block",
+        ));
+    }
+
+    if let Some(m) = &cfg.membership {
+        if cfg.shards.is_sharded() {
+            return Err(refuse(
+                "[membership]",
+                "[shards] count > 1",
+                "the sharded master cannot rendezvous fleet boundaries across shard engines",
+            ));
+        }
+        if !cfg.fabric.churn.is_empty() {
+            return Err(refuse(
+                "[membership]",
+                "fabric.churn",
+                "one churn model: joins/leaves happen at epoch boundaries, not arbitrary \
+                 round windows",
+            ));
+        }
+        if m.admit_at <= cfg.fabric.max_staleness {
+            return Err(refuse(
+                &format!("[membership] admit_at = {}", m.admit_at),
+                &format!("fabric.max_staleness = {}", cfg.fabric.max_staleness),
+                "every pre-eviction update must fold into its old chain before a boundary \
+                 may rebuild it — admit_at must exceed max_staleness",
+            ));
+        }
+    }
+
+    if let Some(a) = &cfg.adaptive {
+        if cfg.shards.is_sharded() {
+            return Err(refuse(
+                "[adaptive]",
+                "[shards] count > 1",
+                "a scheme switch would have to rendezvous across shard engines",
+            ));
+        }
+        if cfg.membership.is_some() {
+            return Err(refuse(
+                "[adaptive]",
+                "[membership]",
+                "a fleet boundary and a scheme epoch would race on chain rebuilds",
+            ));
+        }
+        if cfg.backend != Backend::Rust {
+            return Err(refuse(
+                "[adaptive]",
+                "backend = \"hlo\"",
+                "the HLO artifact cannot rebuild its compiled pipeline at a scheme-epoch \
+                 switch",
+            ));
+        }
+        if a.window <= cfg.fabric.max_staleness {
+            return Err(refuse(
+                &format!("[adaptive] window = {}", a.window),
+                &format!("fabric.max_staleness = {}", cfg.fabric.max_staleness),
+                "a scheme switch is a drain barrier and must not re-serialize every round — \
+                 window must exceed max_staleness",
+            ));
+        }
+        if !scheme.block_scalability().iter().any(|&s| s) {
+            return Err(refuse(
+                "[adaptive]",
+                "a scheme with no rate parameter",
+                "the controller needs at least one k/k_frac/p to adjust",
+            ));
+        }
+    }
+
+    if cfg.runs.is_multi() {
+        if cfg.shards.is_sharded() {
+            return Err(refuse(
+                "[runs] count > 1",
+                "[shards] count > 1",
+                "a hosted run owns one contiguous worker-slot range on one transport; the \
+                 sharded master multiplies transports per run",
+            ));
+        }
+        if cfg.membership.is_some() {
+            return Err(refuse(
+                "[runs] count > 1",
+                "[membership]",
+                "hosted runs are fixed-fleet: the elastic engine owns its transport's whole \
+                 roster and liveness surface",
+            ));
+        }
+        if cfg.adaptive.is_some() {
+            return Err(refuse(
+                "[runs] count > 1",
+                "[adaptive]",
+                "hosted runs are fixed-fleet rounds; scheme-epoch negotiation drives its \
+                 transport solo",
+            ));
+        }
+        if cfg.fabric.chaos.iter().any(|&(_, k, _, _)| k != ChaosKind::Wedge) {
+            return Err(refuse(
+                "[runs] count > 1",
+                "fabric.chaos crash/halfopen",
+                "the crash-cycle re-dial re-addresses a solo master seat; wedge chaos \
+                 (send-path) composes fine",
+            ));
+        }
+    }
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full feature-pair matrix: every unsupported pair must be refused
+    /// by the one gate with the one message shape, and every supported pair
+    /// must pass. Built through the TOML path so this is exactly what both
+    /// the CLI (`--config`) and a hand-written file hit.
+    #[test]
+    fn feature_pair_matrix() {
+        // fragments that switch each feature on, composable into one config
+        let shards = "[scheme]\nspec = \"blocks(a=0.5:topk:k=8/estk/ef;b=0.5:sign)\"\n\n\
+                      [shards]\ncount = 2\n";
+        let membership = "[membership]\nadmit_at = 8\n";
+        let adaptive = "[adaptive]\ntarget_bits = 2.5\nwindow = 8\n";
+        let runs = "[runs]\ncount = 2\n";
+        let churn = "[fabric]\nchurn = \"1:2..4\"\n";
+        let scalable_scheme = "[scheme]\nspec = \"topk:k_frac=0.01/estk/ef\"\n";
+
+        let build = |parts: &[&str]| -> Result<ExperimentConfig> {
+            let mut toml = String::from("name = \"x\"\nworkers = 4\n\n");
+            for p in parts {
+                toml.push_str(p);
+                toml.push('\n');
+            }
+            ExperimentConfig::from_toml_str(&toml)
+        };
+        let assert_refused = |parts: &[&str], a: &str, b: &str| {
+            let err = build(parts).expect_err(&format!("{a} with {b} must be refused"));
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("unsupported composition:") && msg.contains(a) && msg.contains(b),
+                "{a} with {b}: wrong refusal: {msg}"
+            );
+        };
+
+        // unsupported pairs — the full matrix over
+        // {shards, membership, adaptive, runs} plus the churn conflict
+        assert_refused(&[shards, membership], "[membership]", "[shards]");
+        assert_refused(&[shards, adaptive], "[adaptive]", "[shards]");
+        assert_refused(&[shards, runs], "[runs]", "[shards]");
+        assert_refused(&[scalable_scheme, membership, adaptive], "[adaptive]", "[membership]");
+        assert_refused(&[membership, runs], "[runs]", "[membership]");
+        assert_refused(&[scalable_scheme, adaptive, runs], "[runs]", "[adaptive]");
+        assert_refused(&[membership, churn], "[membership]", "fabric.churn");
+
+        // non-pair composition rules keep the same shape
+        // top-level keys must precede any table header in the TOML subset
+        assert_refused(
+            &["backend = \"hlo\"\n", scalable_scheme, adaptive],
+            "[adaptive]",
+            "backend",
+        );
+        assert_refused(
+            &["[scheme]\nspec = \"sign/plin\"\n", adaptive],
+            "[adaptive]",
+            "rate parameter",
+        );
+        assert_refused(
+            &[membership, "[fabric]\nmax_staleness = 8\n"],
+            "admit_at",
+            "max_staleness",
+        );
+        assert_refused(
+            &[scalable_scheme, adaptive, "[fabric]\nmax_staleness = 8\n"],
+            "window",
+            "max_staleness",
+        );
+        assert_refused(
+            &[runs, "[fabric]\ntransport = \"tcp\"\nchaos = \"1:crash:4..8\"\n"],
+            "[runs]",
+            "chaos",
+        );
+
+        // supported combinations must pass the gate
+        build(&[shards]).expect("sharded alone");
+        build(&[membership]).expect("membership alone");
+        build(&[scalable_scheme, adaptive]).expect("adaptive alone");
+        build(&[runs]).expect("runs alone");
+        build(&[runs, scalable_scheme]).expect("runs with a plain scheme");
+        build(&[runs, churn]).expect("runs with churn (fixed-fleet skip markers)");
+        build(&[runs, "[fabric]\nchaos = \"1:wedge:4..8\"\n"])
+            .expect("runs with wedge chaos (send-path injection is run-scoped)");
+        build(&["[runs]\ncount = 1\n", shards]).expect("runs = 1 is the structural bypass");
+    }
+
+    /// The gate is callable directly on a hand-assembled config — the
+    /// Launcher's second line of defense.
+    #[test]
+    fn direct_call_matches_parse_path() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.runs.count = 2;
+        validate(&cfg).unwrap();
+        cfg.membership = Some(crate::config::MembershipCfg::default());
+        let err = validate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported composition:"));
+    }
+}

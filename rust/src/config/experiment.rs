@@ -9,6 +9,7 @@ use crate::scheme::{QuantParams, Scheme, SchemeRegistry};
 use super::adaptive::AdaptiveCfg;
 use super::fabric::FabricSpec;
 use super::membership::MembershipCfg;
+use super::runs::RunsSpec;
 use super::shards::ShardsSpec;
 use super::value::Value;
 
@@ -174,6 +175,10 @@ pub struct ExperimentConfig {
     /// Adaptive per-block rate control (`[adaptive]`); `None` = the static
     /// fixed-scheme engines, bit-identically untouched.
     pub adaptive: Option<AdaptiveCfg>,
+    /// Multi-tenant hosting (`[runs]`): how many independent runs one
+    /// master process drives on one fabric. `count = 1` (the default) is a
+    /// structural bypass of the demux layer.
+    pub runs: RunsSpec,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -206,6 +211,7 @@ impl Default for ExperimentConfig {
             shards: ShardsSpec::default(),
             membership: None,
             adaptive: None,
+            runs: RunsSpec::default(),
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -262,6 +268,9 @@ impl ExperimentConfig {
         if let Some(x) = v.opt("adaptive") {
             c.adaptive = Some(AdaptiveCfg::from_value(x)?);
         }
+        if let Some(x) = v.opt("runs") {
+            c.runs = RunsSpec::from_value(x)?;
+        }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
                 c.lr = x.as_f32()?;
@@ -308,16 +317,10 @@ impl ExperimentConfig {
         anyhow::ensure!(self.workers >= 1, "need at least one worker");
         anyhow::ensure!(self.steps >= 1, "need at least one step");
         anyhow::ensure!(self.eval_every >= 1, "eval_every >= 1");
-        let scheme = self.scheme.to_scheme().context("invalid [scheme]")?;
+        self.scheme.to_scheme().context("invalid [scheme]")?;
         self.fabric.validate().context("invalid [fabric]")?;
         self.shards.validate().context("invalid [shards]")?;
-        if self.shards.is_sharded() {
-            anyhow::ensure!(
-                scheme.is_blockwise(),
-                "shards.count = {} needs a blocks(...) scheme (the master shards by block)",
-                self.shards.count
-            );
-        }
+        self.runs.validate().context("invalid [runs]")?;
         for &(w, _) in &self.fabric.straggler_ms {
             anyhow::ensure!(w < self.workers, "fabric.straggler names worker {w} out of range");
         }
@@ -327,54 +330,12 @@ impl ExperimentConfig {
         if let Some(m) = &self.membership {
             m.validate().context("invalid [membership]")?;
             m.spec(self.workers).context("invalid [membership] for this fleet")?;
-            anyhow::ensure!(
-                !self.shards.is_sharded(),
-                "[membership] is not supported with a sharded master yet"
-            );
-            anyhow::ensure!(
-                self.fabric.churn.is_empty(),
-                "[membership] replaces fabric.churn (joins/leaves happen at epoch \
-                 boundaries, not arbitrary round windows)"
-            );
-            anyhow::ensure!(
-                m.admit_at > self.fabric.max_staleness,
-                "membership.admit_at ({}) must exceed fabric.max_staleness ({}) so every \
-                 pre-eviction update folds into its old chain before the boundary reset",
-                m.admit_at,
-                self.fabric.max_staleness
-            );
         }
         if let Some(a) = &self.adaptive {
             a.validate().context("invalid [adaptive]")?;
-            anyhow::ensure!(
-                !self.shards.is_sharded(),
-                "[adaptive] is not supported with a sharded master yet (a scheme switch \
-                 would have to rendezvous across shard engines)"
-            );
-            anyhow::ensure!(
-                self.membership.is_none(),
-                "[adaptive] does not compose with [membership]: a fleet boundary and a \
-                 scheme epoch would race on chain rebuilds"
-            );
-            anyhow::ensure!(
-                self.backend == Backend::Rust,
-                "[adaptive] needs backend = \"rust\" (the HLO artifact cannot rebuild its \
-                 compiled pipeline at a scheme-epoch switch)"
-            );
-            anyhow::ensure!(
-                a.window > self.fabric.max_staleness,
-                "adaptive.window ({}) must exceed fabric.max_staleness ({}) so a scheme \
-                 switch (a drain barrier) does not re-serialize every round",
-                a.window,
-                self.fabric.max_staleness
-            );
-            anyhow::ensure!(
-                scheme.block_scalability().iter().any(|&s| s),
-                "[adaptive] needs a scheme with at least one rate parameter (k/k_frac/p) \
-                 to control"
-            );
         }
-        Ok(())
+        // every cross-feature constraint lives in the one compose gate
+        super::compose::validate(self)
     }
 
     pub fn schedule(&self) -> LrSchedule {

@@ -6,10 +6,12 @@
 //! (see DESIGN.md "Offline-build note").
 
 pub mod adaptive;
+pub mod compose;
 pub mod experiment;
 pub mod fabric;
 pub mod json;
 pub mod membership;
+pub mod runs;
 pub mod shards;
 pub mod toml;
 pub mod value;
@@ -18,5 +20,6 @@ pub use adaptive::AdaptiveCfg;
 pub use experiment::{ExperimentConfig, SchemeSpec};
 pub use fabric::{ChaosKind, FabricSpec, IoBackend, TransportKind};
 pub use membership::MembershipCfg;
+pub use runs::RunsSpec;
 pub use shards::ShardsSpec;
 pub use value::Value;

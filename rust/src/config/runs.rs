@@ -1,0 +1,87 @@
+//! `[runs]` configuration: how many independent hosted runs the
+//! multi-tenant master drives on one fabric (DESIGN.md §11).
+//!
+//! ```toml
+//! [runs]
+//! count = 8        # 1 (default) = the ordinary single-run master
+//! ```
+//!
+//! CLI override: `--runs R`. Each hosted run is a full replica of the
+//! experiment — `workers` workers, same scheme/schedule/steps — with the
+//! run index folded into its seed (`seed + r`), so run r hosted on the
+//! shared fabric is bit-identical to run r launched solo. `count = 1` is a
+//! structural bypass: the launcher never touches the demux and the wire
+//! bytes are exactly the single-run master's.
+
+use anyhow::Result;
+
+use super::value::Value;
+
+/// Fully-resolved `[runs]` table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunsSpec {
+    /// Number of hosted runs (1 = single-run master).
+    pub count: usize,
+}
+
+impl Default for RunsSpec {
+    fn default() -> Self {
+        Self { count: 1 }
+    }
+}
+
+impl RunsSpec {
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut s = Self::default();
+        if let Some(x) = v.opt("count") {
+            s.count = x.as_usize()?;
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.count >= 1, "runs.count must be >= 1");
+        anyhow::ensure!(
+            self.count <= u16::MAX as usize,
+            "runs.count must fit the frame header's u16 run_id field"
+        );
+        Ok(())
+    }
+
+    /// Whether the multi-tenant master path is requested at all.
+    pub fn is_multi(&self) -> bool {
+        self.count > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn defaults_are_single_run() {
+        let s = RunsSpec::default();
+        assert_eq!(s.count, 1);
+        assert!(!s.is_multi());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_table_parses() {
+        let v = toml::parse("[runs]\ncount = 8\n").unwrap();
+        let s = RunsSpec::from_value(v.get("runs").unwrap()).unwrap();
+        assert_eq!(s.count, 8);
+        assert!(s.is_multi());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let parse =
+            |t: &str| toml::parse(t).and_then(|v| RunsSpec::from_value(v.get("runs").unwrap()));
+        assert!(parse("[runs]\ncount = 0\n").is_err());
+        assert!(parse("[runs]\ncount = 65536\n").is_err(), "u16 run_id ceiling");
+        assert!(parse("[runs]\ncount = 65535\n").is_ok());
+    }
+}

@@ -4,6 +4,13 @@
 //! pipelining, aggregation mode and fault injection; the Worker/Master
 //! loops are identical either way (multi-process deployments reuse them
 //! via cli::master_serve / worker_connect).
+//!
+//! The one front door is [`Launcher`]: a builder over [`ExperimentConfig`]
+//! that every launch path — config file, CLI overrides, hand-assembled
+//! configs in tests — funnels through, so the composition gate
+//! ([`crate::config::compose::validate`]) and the single/multi-run fork
+//! cannot be bypassed. `run_training` / `run_training_with_manifest` remain
+//! as thin compatibility wrappers over it.
 
 use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
@@ -14,11 +21,12 @@ use anyhow::{Context, Result};
 use crate::comm::fault::{FaultInjector, FaultPolicy, FaultStats, ReconnectBackoff};
 use crate::comm::tcp::{TcpMaster, TcpWorker};
 use crate::comm::{
-    channel_fabric, MasterTransport, ReactorMaster, ShardMap, ShardedWorkerEndpoint,
+    channel_fabric, MasterTransport, ReactorMaster, RunWorker, ShardMap, ShardedWorkerEndpoint,
     WorkerTransport,
 };
 use crate::config::{
-    ChaosKind, ExperimentConfig, FabricSpec, IoBackend, ShardsSpec, TransportKind,
+    AdaptiveCfg, ChaosKind, ExperimentConfig, FabricSpec, IoBackend, MembershipCfg, ShardsSpec,
+    TransportKind,
 };
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
 use crate::metrics::{CommStats, RunPoint};
@@ -27,7 +35,8 @@ use crate::runtime::{ModelExec, Runtime};
 use crate::scheme::Scheme;
 use crate::util::timer::PhaseTimes;
 
-use super::master::{evaluate, MasterLoop, MasterReport, MasterSpec, TestStream};
+use super::master::{evaluate, EvalFn, MasterLoop, MasterReport, MasterSpec, TestStream};
+use super::multirun::{run_multi, HostedRun};
 use super::shard::ShardedMasterLoop;
 use super::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
 
@@ -62,6 +71,114 @@ impl TrainReport {
             .iter()
             .map(|p| (p.to_string(), self.worker_phases.mean(p)))
             .collect()
+    }
+}
+
+/// What [`Launcher::serve`] hands back: one [`TrainReport`] per hosted run
+/// in declaration order (a failed run is an `Err` slot — its siblings ran
+/// to completion regardless), plus the worst cross-run round skew the
+/// multi-tenant sweep observed (always 0 for a single run).
+pub struct LaunchReport {
+    pub runs: Vec<Result<TrainReport>>,
+    pub max_round_skew: u64,
+}
+
+impl LaunchReport {
+    /// Unwrap the single-run case (the wrappers' return shape).
+    pub fn into_single(mut self) -> Result<TrainReport> {
+        anyhow::ensure!(
+            self.runs.len() == 1,
+            "launch hosted {} runs; read LaunchReport.runs instead",
+            self.runs.len()
+        );
+        self.runs.pop().expect("one run")
+    }
+}
+
+/// The unified launch front door: build over an [`ExperimentConfig`],
+/// override individual facets, then [`serve`](Self::serve).
+///
+/// ```no_run
+/// # use tempo::config::ExperimentConfig;
+/// # use tempo::coordinator::launch::Launcher;
+/// # fn main() -> tempo::Result<()> {
+/// let cfg = ExperimentConfig::from_toml_str("name = \"demo\"\nworkers = 2\nsteps = 4\n")?;
+/// let report = Launcher::new(cfg).runs(2).serve()?;
+/// assert_eq!(report.runs.len(), 2);
+/// # Ok(()) }
+/// ```
+///
+/// Every facet setter writes back into the config, so `serve` always
+/// re-validates the *composed* result through the one gate
+/// ([`crate::config::compose::validate`]) — an unsupported pair is refused
+/// identically whether it came from a TOML file, a CLI flag, or a builder
+/// call. `runs(1)` (the default) is a structural bypass of the multi-tenant
+/// demux: the single-run path is byte-for-byte the classic launcher.
+pub struct Launcher {
+    cfg: ExperimentConfig,
+    manifest: Option<Manifest>,
+}
+
+impl Launcher {
+    pub fn new(cfg: ExperimentConfig) -> Self {
+        Self { cfg, manifest: None }
+    }
+
+    /// Use a pre-loaded model manifest instead of [`Manifest::load_default`].
+    pub fn manifest(mut self, manifest: Manifest) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Master-side I/O engine (thread-per-peer or single-thread reactor).
+    pub fn io(mut self, io: IoBackend) -> Self {
+        self.cfg.fabric.io = io;
+        self
+    }
+
+    /// Fabric transport (in-process channels or TCP on 127.0.0.1).
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.cfg.fabric.transport = transport;
+        self
+    }
+
+    /// Master shard count (1 = the plain unsharded master).
+    pub fn shards(mut self, count: usize) -> Self {
+        self.cfg.shards.count = count;
+        self
+    }
+
+    /// Elastic fleet membership (DESIGN.md §7/§10).
+    pub fn membership(mut self, membership: MembershipCfg) -> Self {
+        self.cfg.membership = Some(membership);
+        self
+    }
+
+    /// Adaptive per-block rate control (DESIGN.md §8).
+    pub fn adaptive(mut self, adaptive: AdaptiveCfg) -> Self {
+        self.cfg.adaptive = Some(adaptive);
+        self
+    }
+
+    /// Host `count` independent runs on one master process (DESIGN.md §11).
+    pub fn runs(mut self, count: usize) -> Self {
+        self.cfg.runs.count = count;
+        self
+    }
+
+    /// Validate the composed config and run it to completion in-process.
+    pub fn serve(self) -> Result<LaunchReport> {
+        self.cfg.validate()?;
+        let manifest = match self.manifest {
+            Some(m) => m,
+            None => Manifest::load_default()?,
+        };
+        if self.cfg.runs.is_multi() {
+            serve_multi(&self.cfg, &manifest)
+        } else {
+            let report = serve_single(&self.cfg, &manifest)?;
+            Ok(LaunchReport { runs: vec![Ok(report)], max_round_skew: 0 })
+        }
     }
 }
 
@@ -386,16 +503,24 @@ pub fn run_sharded_master(
 /// Run a full experiment in-process: n worker threads + the master on the
 /// calling thread. Deterministic given cfg.seed (and, with faults off,
 /// bit-identical across transports).
+///
+/// Compatibility wrapper over [`Launcher`] — new code should build a
+/// `Launcher` directly (it exposes the multi-run report this flattens).
 pub fn run_training(cfg: &ExperimentConfig) -> Result<TrainReport> {
-    let manifest = Manifest::load_default()?;
-    run_training_with_manifest(cfg, &manifest)
+    Launcher::new(cfg.clone()).serve()?.into_single()
 }
 
+/// Compatibility wrapper over [`Launcher::manifest`] — see [`run_training`].
 pub fn run_training_with_manifest(
     cfg: &ExperimentConfig,
     manifest: &Manifest,
 ) -> Result<TrainReport> {
-    cfg.validate()?;
+    Launcher::new(cfg.clone()).manifest(manifest.clone()).serve()?.into_single()
+}
+
+/// The classic single-run launcher ([`Launcher::serve`] with `runs = 1`):
+/// n worker threads + the master on the calling thread.
+fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainReport> {
     let entry = manifest.model(&cfg.model)?.clone();
     let d = entry.d;
     let scheme = cfg.scheme.to_scheme()?;
@@ -491,36 +616,63 @@ pub fn run_training_with_manifest(
 
     // Join workers FIRST: if one of them failed, its error (e.g. "loss
     // diverged") is the root cause — the master only sees a hung channel.
-    let mut summaries = Vec::with_capacity(cfg.workers);
-    let mut worker_errors = Vec::new();
+    let (summaries, worker_errors) = join_workers(handles);
+    let (report, summaries) = settle_run(master_result, summaries, worker_errors)?;
+    Ok(assemble_train_report(cfg.workers, cfg.steps, report, summaries, &fault_stats))
+}
+
+/// Join a fleet's worker threads, splitting clean summaries from errors
+/// (a panic becomes an error naming the worker).
+fn join_workers(
+    handles: Vec<std::thread::JoinHandle<Result<WorkerSummary>>>,
+) -> (Vec<WorkerSummary>, Vec<anyhow::Error>) {
+    let mut summaries = Vec::with_capacity(handles.len());
+    let mut errors = Vec::new();
     for (wid, h) in handles.into_iter().enumerate() {
         match h.join() {
-            Err(_) => worker_errors.push(anyhow::anyhow!("worker {wid} panicked")),
-            Ok(Err(e)) => worker_errors.push(e.context(format!("worker {wid} failed"))),
+            Err(_) => errors.push(anyhow::anyhow!("worker {wid} panicked")),
+            Ok(Err(e)) => errors.push(e.context(format!("worker {wid} failed"))),
             Ok(Ok(s)) => summaries.push(s),
         }
     }
-    // Prefer a substantive worker error (e.g. "loss diverged") over
-    // secondary hung-up-channel errors on either side.
+    (summaries, errors)
+}
+
+/// Pick the error that names the root cause: a substantive worker error
+/// (e.g. "loss diverged") beats secondary hung-up-channel errors on either
+/// side; the master's error carries a failed worker's context if present.
+fn settle_run(
+    master_result: Result<MasterReport>,
+    summaries: Vec<WorkerSummary>,
+    mut worker_errors: Vec<anyhow::Error>,
+) -> Result<(MasterReport, Vec<WorkerSummary>)> {
     if let Some(pos) = worker_errors
         .iter()
         .position(|e| !format!("{e:#}").contains("hung up"))
     {
         return Err(worker_errors.swap_remove(pos));
     }
-    let report = match master_result {
-        Ok(r) => r,
-        Err(e) => {
-            return Err(match worker_errors.into_iter().next() {
-                Some(we) => we.context(format!("master: {e:#}")),
-                None => e,
-            })
-        }
-    };
+    match master_result {
+        Ok(r) => Ok((r, summaries)),
+        Err(e) => Err(match worker_errors.into_iter().next() {
+            Some(we) => we.context(format!("master: {e:#}")),
+            None => e,
+        }),
+    }
+}
 
-    // merge per-worker traces, phase times, and fabric-health counters
+/// Merge one run's per-worker traces, phase times, and fabric-health
+/// counters with its master report — shared by the single-run and hosted
+/// multi-run paths so the report shape cannot drift between them.
+fn assemble_train_report(
+    workers: usize,
+    steps: u64,
+    report: MasterReport,
+    summaries: Vec<WorkerSummary>,
+    fault_stats: &[Arc<Mutex<FaultStats>>],
+) -> TrainReport {
     let mut phases = PhaseTimes::new();
-    let steps = cfg.steps as usize;
+    let steps = steps as usize;
     let mut e_mse_trace = vec![0.0f64; steps];
     let mut u_norm_trace = vec![0.0f64; steps];
     let mut comm = report.comm.clone();
@@ -530,13 +682,13 @@ pub fn run_training_with_manifest(
             comm.record_phase(name, s.phases.total(name), s.phases.count(name));
         }
         for (t, &v) in s.e_mse_trace.iter().enumerate() {
-            e_mse_trace[t] += v / cfg.workers as f64;
+            e_mse_trace[t] += v / workers as f64;
         }
         for (t, &v) in s.u_norm_trace.iter().enumerate() {
-            u_norm_trace[t] += v / cfg.workers as f64;
+            u_norm_trace[t] += v / workers as f64;
         }
     }
-    for stats in &fault_stats {
+    for stats in fault_stats {
         let s = stats.lock().unwrap();
         comm.record_faults(s.retransmits, s.injected_delay_secs);
     }
@@ -546,7 +698,7 @@ pub fn run_training_with_manifest(
         p.e_mse = e_mse_trace[idx];
     }
 
-    Ok(TrainReport {
+    TrainReport {
         points,
         final_test_acc: report.final_test_acc,
         final_test_loss: report.final_test_loss,
@@ -559,5 +711,153 @@ pub fn run_training_with_manifest(
         u_norm_trace,
         workers: summaries,
         comm,
-    })
+    }
+}
+
+/// The multi-tenant launcher (DESIGN.md §11): one shared fabric with
+/// `runs.count × workers` global slots, run r owning the contiguous range
+/// `[r·n, (r+1)·n)`, every worker thread speaking through a
+/// [`RunWorker`] stamp under its run-local id, and all R masters swept on
+/// the calling thread by [`run_multi`] — zero threads beyond what R solo
+/// launches of the same fleet would spawn on the worker side, and R−1
+/// *fewer* master threads.
+///
+/// Per-run determinism: run r trains with seed `cfg.seed + r` (data,
+/// shards, eval stream and master spec all derive from it), so its numbers
+/// are bit-identical to a solo launch of the same config with that seed.
+/// Configured fault schedules are applied per run-local worker id —
+/// every hosted run sees the same degraded schedule, exactly like running
+/// the faulty config R times. Crash/half-open chaos cycles are refused at
+/// the compose gate (the re-dial path re-addresses a single-run seat).
+fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchReport> {
+    let r_total = cfg.runs.count;
+    let n = cfg.workers;
+    let entry = manifest.model(&cfg.model)?.clone();
+    let d = entry.d;
+    let scheme = cfg.scheme.to_scheme()?;
+    scheme.worker(d).context("invalid scheme for this model dimension")?;
+    let schedule = cfg.schedule();
+
+    // one shared fabric, faults stripped: injection wraps the per-run
+    // endpoints below so the schedule is keyed on run-local ids
+    let clean = FabricSpec {
+        straggler_ms: Vec::new(),
+        drop_prob: 0.0,
+        chaos: Vec::new(),
+        ..cfg.fabric.clone()
+    };
+    let (master, workers_tx, _) = build_fabric(&clean, r_total * n)?;
+
+    let mut datasets = Vec::with_capacity(r_total);
+    for r in 0..r_total {
+        let mut run_cfg = cfg.clone();
+        run_cfg.seed = cfg.seed + r as u64;
+        datasets.push(build_dataset(entry.kind, &entry, &run_cfg));
+    }
+
+    let mut fault_stats = Vec::new();
+    let mut handles: Vec<Vec<std::thread::JoinHandle<Result<WorkerSummary>>>> =
+        (0..r_total).map(|_| Vec::with_capacity(n)).collect();
+    for (gid, transport) in workers_tx.into_iter().enumerate() {
+        let (r, wid) = (gid / n, gid % n);
+        let run_seed = cfg.seed + r as u64;
+        let mut transport: Box<dyn WorkerTransport> = Box::new(RunWorker::new(transport, r as u16));
+        if cfg.fabric.has_faults() {
+            let policy = FaultPolicy::new(
+                cfg.fabric.straggler_for(wid),
+                cfg.fabric.drop_prob,
+                cfg.fabric.retransmit_ms,
+                cfg.fabric.seed,
+                wid as u32,
+            )
+            .with_wedge_windows(cfg.fabric.wedge_windows_for(wid));
+            fault_stats.push(policy.stats());
+            transport = Box::new(FaultInjector::new(transport, policy));
+        }
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: cfg.model.clone(),
+            scheme: scheme.clone(),
+            backend: cfg.backend,
+            schedule,
+            steps: cfg.steps,
+            seed: run_seed,
+            clip_norm: (cfg.clip_norm > 0.0).then_some(cfg.clip_norm),
+            pipelined: cfg.fabric.pipelined,
+            absent: cfg.fabric.absent_for(wid),
+            depart_at: None,
+            rejoin: false,
+            membership: None,
+            adaptive: false,
+        };
+        let shard = Shard::new(wid, n, cfg.train_len, entry.batch, run_seed);
+        let dataset = Arc::clone(&datasets[r]);
+        let manifest = manifest.clone();
+        handles[r].push(std::thread::spawn(move || -> Result<WorkerSummary> {
+            // PJRT objects are !Send: each worker builds its own runtime
+            let runtime = Runtime::new(manifest)?;
+            WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
+        }));
+    }
+
+    // all R masters share one runtime + model: evaluation is read-only
+    let master_runtime = Runtime::new(manifest.clone())?;
+    let model = ModelExec::load(&master_runtime, &cfg.model).context("multi-run: load model")?;
+    let w0 = master_runtime.manifest.load_init(&model.entry)?;
+    let mut tests = Vec::with_capacity(r_total);
+    let mut hosted = Vec::with_capacity(r_total);
+    for r in 0..r_total {
+        let spec = MasterSpec {
+            model: cfg.model.clone(),
+            scheme: scheme.clone(),
+            schedule,
+            steps: cfg.steps,
+            eval_every: cfg.eval_every,
+            eval_batches: cfg.eval_batches,
+            seed: cfg.seed + r as u64,
+            samples_per_round: entry.batch * n,
+            train_len: cfg.train_len,
+            data_noise: cfg.noise,
+            aggregation: cfg.fabric.aggregation(),
+            membership: None,
+            adaptive: None,
+        };
+        tests.push(TestStream::for_model(&entry, &spec));
+        hosted.push(HostedRun { spec, init_w: w0.clone(), n_workers: n });
+    }
+    let model = &model;
+    let mut eval_fns: Vec<Box<EvalFn<'_>>> = tests
+        .iter()
+        .map(|test| {
+            Box::new(move |w: &[f32], batches: usize, salt: u64| {
+                evaluate(model, w, test, batches, salt)
+            }) as Box<EvalFn<'_>>
+        })
+        .collect();
+    let evals: Vec<Option<&mut EvalFn<'_>>> =
+        eval_fns.iter_mut().map(|f| Some(&mut **f)).collect();
+    let multi = run_multi(master, hosted, evals, cfg.fabric.dead_grace_duration());
+
+    // join every fleet before propagating any master-side error: if the
+    // sweep bailed structurally, dropping the transport above unblocked
+    // the worker threads, and their summaries/errors are still the record
+    let mut harvested = Vec::with_capacity(r_total);
+    for run_handles in handles {
+        harvested.push(join_workers(run_handles));
+    }
+    let multi = multi.context("multi-run master")?;
+
+    let mut runs = Vec::with_capacity(r_total);
+    for (r, (master_result, (summaries, worker_errors))) in
+        multi.runs.into_iter().zip(harvested).enumerate()
+    {
+        let fs: &[Arc<Mutex<FaultStats>>] =
+            if fault_stats.is_empty() { &[] } else { &fault_stats[r * n..(r + 1) * n] };
+        runs.push(
+            settle_run(master_result, summaries, worker_errors).map(|(report, summaries)| {
+                assemble_train_report(n, cfg.steps, report, summaries, fs)
+            }),
+        );
+    }
+    Ok(LaunchReport { runs, max_round_skew: multi.max_round_skew })
 }

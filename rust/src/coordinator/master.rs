@@ -145,7 +145,7 @@ pub struct MasterReport {
 }
 
 /// (w, eval_batches, salt) → (test_loss, test_acc).
-pub(crate) type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
+pub type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
 
 /// Master loop: drives `steps` rounds over the transport.
 pub struct MasterLoop<T: MasterTransport> {
@@ -197,14 +197,19 @@ struct Inbox {
     /// this engine's shard id — every arriving frame must carry it (0 on
     /// unsharded fabrics, where every constructor stamps 0)
     shard: u16,
+    /// this engine's hosted-run id — 0 everywhere except the multi-tenant
+    /// master, whose demux already validates; this is the engine-level
+    /// backstop of the same contract (DESIGN.md §11)
+    run: u16,
 }
 
 impl Inbox {
-    fn new(n: usize, shard: u16) -> Self {
+    fn new(n: usize, shard: u16, run: u16) -> Self {
         Self {
             pending: (0..n).map(|_| VecDeque::new()).collect(),
             delivered: vec![0; n],
             shard,
+            run,
         }
     }
 
@@ -217,6 +222,12 @@ impl Inbox {
             "worker {wid} sent a frame for shard {} to shard {}",
             frame.shard,
             self.shard
+        );
+        anyhow::ensure!(
+            frame.run_id == self.run,
+            "worker {wid} sent a frame for run {} to run {}",
+            frame.run_id,
+            self.run
         );
         self.delivered[wid] += 1;
         self.pending[wid].push_back(frame);
@@ -345,69 +356,110 @@ fn run_rounds<T: MasterTransport>(
     run_engine(spec, 0, chains, transport, w, eval)
 }
 
-/// The reusable round engine: decode chains + aggregation + broadcast + LR
-/// updates over an injected set of per-worker chains. [`run_rounds`] (the
-/// whole-vector master) builds one chain per worker from `spec.scheme`; the
-/// block-sharded master ([`super::shard::ShardedMasterLoop`]) runs one
-/// engine per shard, each with chains over that shard's blocks and `w`
-/// being the shard-local parameter slice. Broadcast frames are stamped with
-/// `shard` so the worker-side gather can validate routing.
-pub(crate) fn run_engine<T: MasterTransport>(
-    spec: &MasterSpec,
+/// The reusable fixed-fleet round engine, steppable: decode chains +
+/// aggregation + broadcast + LR updates over an injected set of per-worker
+/// chains, advanced one round per [`Self::step`]. [`run_engine`] (the
+/// single-run masters and the block-sharded master's per-shard engines)
+/// drives it to completion in a tight loop; the multi-tenant driver
+/// ([`super::multirun`]) sweeps `step()` across R hosted engines on one
+/// thread, each over its own [`crate::comm::run::RunPort`] (DESIGN.md §11).
+/// Broadcast frames are stamped with `shard` and `run_id` so the worker
+/// side can validate routing.
+pub(crate) struct RoundEngine<T: MasterTransport> {
+    spec: MasterSpec,
     shard: u16,
-    mut chains: Vec<Box<dyn MasterScheme>>,
-    mut transport: T,
-    mut w: Vec<f32>,
-    mut eval: Option<&mut EvalFn<'_>>,
-) -> Result<MasterReport> {
-    let d = w.len();
-    let n = transport.n_workers();
-    anyhow::ensure!(chains.len() == n, "need one chain per worker");
-    for chain in &chains {
-        anyhow::ensure!(chain.dim() == d, "chain dimension mismatch");
+    run_id: u16,
+    chains: Vec<Box<dyn MasterScheme>>,
+    transport: T,
+    w: Vec<f32>,
+    inbox: Inbox,
+    comm: CommStats,
+    train_loss: LossMeter,
+    points: Vec<RunPoint>,
+    wall: Timer,
+    /// next round to fold: `step()` advances this; `steps` rounds total
+    t: u64,
+    agg: Vec<f32>,
+    /// the broadcast staging buffer ping-pongs through the transport: we
+    /// take the bytes back after each broadcast, so warm rounds stage the
+    /// dense r̃ with zero heap allocation (ROADMAP "broadcast path reuse")
+    bcast_buf: Vec<u8>,
+    /// per-worker r̃ buffers for the parallel FullSync decode
+    rtilde_w: Vec<Vec<f32>>,
+    /// bounded-staleness pools, reused across rounds: per-worker FIFO
+    /// batches plus per-frame r̃ scratch and block-bits snapshots for the
+    /// parallel batch decode (buffers grow to the high-water frame count
+    /// and then stop allocating)
+    batches: Vec<Vec<Frame>>,
+    stale_scratch: Vec<Vec<Vec<f32>>>,
+    stale_snaps: Vec<Vec<Vec<(u64, usize)>>>,
+}
+
+impl<T: MasterTransport> RoundEngine<T> {
+    pub(crate) fn new(
+        spec: MasterSpec,
+        shard: u16,
+        run_id: u16,
+        chains: Vec<Box<dyn MasterScheme>>,
+        transport: T,
+        w: Vec<f32>,
+    ) -> Result<Self> {
+        let d = w.len();
+        let n = transport.n_workers();
+        anyhow::ensure!(chains.len() == n, "need one chain per worker");
+        for chain in &chains {
+            anyhow::ensure!(chain.dim() == d, "chain dimension mismatch");
+        }
+        let full_sync = spec.aggregation == AggMode::FullSync;
+        Ok(Self {
+            inbox: Inbox::new(n, shard, run_id),
+            comm: CommStats::new(d),
+            train_loss: LossMeter::new(),
+            points: Vec::new(),
+            wall: Timer::start(),
+            t: 0,
+            agg: vec![0.0f32; d],
+            bcast_buf: Vec::new(),
+            rtilde_w: if full_sync { (0..n).map(|_| vec![0.0f32; d]).collect() } else { Vec::new() },
+            batches: if full_sync { Vec::new() } else { (0..n).map(|_| Vec::new()).collect() },
+            stale_scratch: if full_sync { Vec::new() } else { (0..n).map(|_| Vec::new()).collect() },
+            stale_snaps: if full_sync { Vec::new() } else { (0..n).map(|_| Vec::new()).collect() },
+            spec,
+            shard,
+            run_id,
+            chains,
+            transport,
+            w,
+        })
     }
-    let mut inbox = Inbox::new(n, shard);
-    let mut comm = CommStats::new(d);
-    let mut train_loss = LossMeter::new();
-    let mut points = Vec::new();
-    let wall = Timer::start();
 
-    let mut agg = vec![0.0f32; d];
-    // the broadcast staging buffer ping-pongs through the transport: we
-    // take the bytes back after each broadcast, so warm rounds stage the
-    // dense r̃ with zero heap allocation (ROADMAP "broadcast path reuse")
-    let mut bcast_buf: Vec<u8> = Vec::new();
-    // per-worker r̃ buffers for the parallel FullSync decode
-    let mut rtilde_w: Vec<Vec<f32>> = match spec.aggregation {
-        AggMode::FullSync => (0..n).map(|_| vec![0.0f32; d]).collect(),
-        _ => Vec::new(),
-    };
-    // bounded-staleness pools, reused across rounds: per-worker FIFO
-    // batches plus per-frame r̃ scratch and block-bits snapshots for the
-    // parallel batch decode (buffers grow to the high-water frame count
-    // and then stop allocating)
-    let mut batches: Vec<Vec<Frame>> = Vec::new();
-    let mut stale_scratch: Vec<Vec<Vec<f32>>> = Vec::new();
-    let mut stale_snaps: Vec<Vec<Vec<(u64, usize)>>> = Vec::new();
-    if spec.aggregation != AggMode::FullSync {
-        batches = (0..n).map(|_| Vec::new()).collect();
-        stale_scratch = (0..n).map(|_| Vec::new()).collect();
-        stale_snaps = (0..n).map(|_| Vec::new()).collect();
+    /// All `steps` rounds folded — nothing left but [`Self::finish`].
+    pub(crate) fn done(&self) -> bool {
+        self.t >= self.spec.steps
     }
 
-    for t in 0..spec.steps {
-        agg.iter_mut().for_each(|x| *x = 0.0);
+    /// Rounds folded so far (the multi-run driver's fairness probe).
+    pub(crate) fn rounds_done(&self) -> u64 {
+        self.t
+    }
 
-        match spec.aggregation {
+    /// Fold one round and broadcast the result.
+    pub(crate) fn step(&mut self, mut eval: Option<&mut EvalFn<'_>>) -> Result<()> {
+        let t = self.t;
+        let d = self.w.len();
+        let n = self.transport.n_workers();
+        self.agg.iter_mut().for_each(|x| *x = 0.0);
+
+        match self.spec.aggregation {
             AggMode::FullSync => {
                 // one frame per worker, then fold in worker-id order — the
                 // ordering that makes TCP and channel runs bit-identical
-                while inbox.pending.iter().any(|q| q.is_empty()) {
-                    inbox.pump(&mut transport)?;
+                while self.inbox.pending.iter().any(|q| q.is_empty()) {
+                    self.inbox.pump(&mut self.transport)?;
                 }
                 let mut round_frames = Vec::with_capacity(n);
                 for wid in 0..n {
-                    let frame = inbox.pending[wid].pop_front().unwrap();
+                    let frame = self.inbox.pending[wid].pop_front().unwrap();
                     anyhow::ensure!(
                         frame.round == t,
                         "round skew: worker {wid} sent {} during round {t}",
@@ -422,30 +474,36 @@ pub(crate) fn run_engine<T: MasterTransport>(
                 // independent per worker); accounting and aggregation below
                 // stay in worker-id order, so the folded f32 bits are
                 // identical to the sequential path for any thread count
-                decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                decode_round_parallel(&mut self.chains, &mut self.rtilde_w, &mut round_frames, t, d)?;
                 for (wid, frame) in round_frames.iter().enumerate() {
-                    account_frame(frame, wid, &*chains[wid], &mut comm, &mut train_loss)?;
+                    account_frame(
+                        frame,
+                        wid,
+                        &*self.chains[wid],
+                        &mut self.comm,
+                        &mut self.train_loss,
+                    )?;
                     if frame.kind == FrameKind::Update {
-                        let rt = &rtilde_w[wid];
+                        let rt = &self.rtilde_w[wid];
                         for i in 0..d {
-                            agg[i] += scale * rt[i];
+                            self.agg[i] += scale * rt[i];
                         }
                     }
                 }
             }
             AggMode::BoundedStaleness { max_staleness, quorum } => {
-                inbox.drain(&mut transport)?;
+                self.inbox.drain(&mut self.transport)?;
                 // staleness bound: worker w's latest delivered round is
                 // delivered[w]-1; it may not trail round t by more than S
                 for wid in 0..n {
-                    while inbox.delivered[wid] + max_staleness < t + 1 {
-                        inbox.pump(&mut transport)?;
+                    while self.inbox.delivered[wid] + max_staleness < t + 1 {
+                        self.inbox.pump(&mut self.transport)?;
                     }
                 }
                 // quorum: enough workers must have at least one frame queued
                 let quorum = quorum.clamp(1, n);
-                while inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
-                    inbox.pump(&mut transport)?;
+                while self.inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
+                    self.inbox.pump(&mut self.transport)?;
                 }
                 // take EVERY queued frame, each exactly once, per-worker
                 // FIFO, then decode the batches in parallel across workers
@@ -456,50 +514,50 @@ pub(crate) fn run_engine<T: MasterTransport>(
                 // decode-as-you-fold path at any thread count (pinned by
                 // tests/hotpath_parallel.rs).
                 for wid in 0..n {
-                    batches[wid].clear();
-                    while let Some(frame) = inbox.pending[wid].pop_front() {
+                    self.batches[wid].clear();
+                    while let Some(frame) = self.inbox.pending[wid].pop_front() {
                         anyhow::ensure!(
                             frame.worker as usize == wid,
                             "worker id mismatch: frame from {} on queue {wid}",
                             frame.worker
                         );
-                        batches[wid].push(frame);
+                        self.batches[wid].push(frame);
                     }
                 }
                 decode_batches_parallel(
-                    &mut chains,
-                    &mut batches,
-                    &mut stale_scratch,
-                    &mut stale_snaps,
+                    &mut self.chains,
+                    &mut self.batches,
+                    &mut self.stale_scratch,
+                    &mut self.stale_snaps,
                     t,
                     d,
                 )?;
                 let mut contributions = 0u32;
                 for wid in 0..n {
-                    for (k, frame) in batches[wid].iter().enumerate() {
+                    for (k, frame) in self.batches[wid].iter().enumerate() {
                         if frame.kind == FrameKind::Update {
-                            comm.record_staleness(t.saturating_sub(frame.round));
+                            self.comm.record_staleness(t.saturating_sub(frame.round));
                         }
                         account_decoded(
                             frame,
                             wid,
-                            &*chains[wid],
-                            &stale_snaps[wid][k],
-                            &mut comm,
-                            &mut train_loss,
+                            &*self.chains[wid],
+                            &self.stale_snaps[wid][k],
+                            &mut self.comm,
+                            &mut self.train_loss,
                         )?;
                         if frame.kind == FrameKind::Update {
                             contributions += 1;
-                            let rt = &stale_scratch[wid][k];
+                            let rt = &self.stale_scratch[wid][k];
                             for i in 0..d {
-                                agg[i] += rt[i];
+                                self.agg[i] += rt[i];
                             }
                         }
                     }
                 }
                 if contributions > 0 {
                     let scale = 1.0 / contributions as f32;
-                    for a in agg.iter_mut() {
+                    for a in self.agg.iter_mut() {
                         *a *= scale;
                     }
                 }
@@ -507,65 +565,94 @@ pub(crate) fn run_engine<T: MasterTransport>(
         }
 
         // broadcast the averaged r̃; workers (and we) apply w -= η·agg
-        let mut frame = Frame::broadcast_from(t, &agg, std::mem::take(&mut bcast_buf));
-        frame.shard = shard;
-        transport.broadcast(&frame)?;
-        bcast_buf = frame.bytes;
-        let lr = spec.schedule.lr_at(t);
+        let mut frame = Frame::broadcast_from(t, &self.agg, std::mem::take(&mut self.bcast_buf));
+        frame.shard = self.shard;
+        frame.run_id = self.run_id;
+        self.transport.broadcast(&frame)?;
+        self.bcast_buf = frame.bytes;
+        let lr = self.spec.schedule.lr_at(t);
         for i in 0..d {
-            w[i] -= lr * agg[i];
+            self.w[i] -= lr * self.agg[i];
         }
 
-        if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
+        if (t + 1) % self.spec.eval_every == 0 || t + 1 == self.spec.steps {
             let (test_loss, test_acc) = match eval.as_mut() {
-                Some(f) => f(&w, spec.eval_batches, t)?,
+                Some(f) => f(&self.w, self.spec.eval_batches, t)?,
                 None => (f64::NAN, 0.0),
             };
-            points.push(RunPoint {
+            self.points.push(RunPoint {
                 step: t + 1,
-                epoch_equiv: ((t + 1) as f64 * spec.samples_per_round as f64)
-                    / spec.train_len.max(1) as f64,
-                train_loss: train_loss.smoothed(),
+                epoch_equiv: ((t + 1) as f64 * self.spec.samples_per_round as f64)
+                    / self.spec.train_len.max(1) as f64,
+                train_loss: self.train_loss.smoothed(),
                 test_loss,
                 test_acc,
-                bits_per_component: comm.bits_per_component(),
+                bits_per_component: self.comm.bits_per_component(),
                 e_mse: 0.0, // filled from worker traces by launch glue
-                wall_secs: wall.elapsed_secs(),
+                wall_secs: self.wall.elapsed_secs(),
             });
         }
+        self.t += 1;
+        Ok(())
     }
 
-    // bounded-staleness runs can end with late updates still in flight;
-    // drain them (every worker sends exactly `steps` frames) so worker
-    // threads never see a torn-down fabric mid-send, and account the
-    // updates the horizon cut off
-    if spec.aggregation != AggMode::FullSync {
-        for wid in 0..n {
-            while inbox.delivered[wid] < spec.steps {
-                inbox.pump(&mut transport)?;
+    /// Teardown after the last round: drain in-flight frames and run the
+    /// final evaluation.
+    pub(crate) fn finish(mut self, mut eval: Option<&mut EvalFn<'_>>) -> Result<MasterReport> {
+        debug_assert!(self.done());
+        // bounded-staleness runs can end with late updates still in flight;
+        // drain them (every worker sends exactly `steps` frames) so worker
+        // threads never see a torn-down fabric mid-send, and account the
+        // updates the horizon cut off
+        if self.spec.aggregation != AggMode::FullSync {
+            for wid in 0..self.inbox.pending.len() {
+                while self.inbox.delivered[wid] < self.spec.steps {
+                    self.inbox.pump(&mut self.transport)?;
+                }
             }
+            let unconsumed = self
+                .inbox
+                .pending
+                .iter()
+                .flat_map(|q| q.iter())
+                .filter(|f| f.kind == FrameKind::Update)
+                .count();
+            self.comm.record_unconsumed(unconsumed as u64);
         }
-        let unconsumed = inbox
-            .pending
-            .iter()
-            .flat_map(|q| q.iter())
-            .filter(|f| f.kind == FrameKind::Update)
-            .count();
-        comm.record_unconsumed(unconsumed as u64);
-    }
 
-    let (final_test_loss, final_test_acc) = match eval.as_mut() {
-        Some(f) => f(&w, (spec.eval_batches * 4).max(8), spec.steps)?,
-        None => (f64::NAN, 0.0),
-    };
-    Ok(MasterReport {
-        points,
-        comm,
-        final_test_acc,
-        final_test_loss,
-        final_w_norm: crate::tensor::norm2(&w),
-        final_w: w,
-    })
+        let (final_test_loss, final_test_acc) = match eval.as_mut() {
+            Some(f) => f(&self.w, (self.spec.eval_batches * 4).max(8), self.spec.steps)?,
+            None => (f64::NAN, 0.0),
+        };
+        Ok(MasterReport {
+            points: self.points,
+            comm: self.comm,
+            final_test_acc,
+            final_test_loss,
+            final_w_norm: crate::tensor::norm2(&self.w),
+            final_w: self.w,
+        })
+    }
+}
+
+/// Drive a [`RoundEngine`] to completion — the single-run entry the
+/// whole-vector master and the block-sharded master
+/// ([`super::shard::ShardedMasterLoop`]) call, unchanged in behavior from
+/// the pre-steppable engine (pure code motion; bit-identity pinned by the
+/// fabric/shard identity suites).
+pub(crate) fn run_engine<T: MasterTransport>(
+    spec: &MasterSpec,
+    shard: u16,
+    chains: Vec<Box<dyn MasterScheme>>,
+    transport: T,
+    w: Vec<f32>,
+    mut eval: Option<&mut EvalFn<'_>>,
+) -> Result<MasterReport> {
+    let mut engine = RoundEngine::new(spec.clone(), shard, 0, chains, transport, w)?;
+    while !engine.done() {
+        engine.step(eval.as_deref_mut())?;
+    }
+    engine.finish(eval)
 }
 
 /// The elastic round engine (`[membership]` configured): the fixed-fleet
@@ -635,7 +722,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
         chains.push(spec.scheme.master(d)?);
     }
     let mut fleet = ElasticFleet::new(plan, n)?;
-    let mut inbox = Inbox::new(n, 0);
+    let mut inbox = Inbox::new(n, 0, 0);
     let mut comm = CommStats::new(d);
     let mut train_loss = LossMeter::new();
     let mut points = Vec::new();
@@ -1020,7 +1107,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
     for _ in 0..n {
         chains.push(spec.scheme.master(d)?);
     }
-    let mut inbox = Inbox::new(n, 0);
+    let mut inbox = Inbox::new(n, 0, 0);
     let mut comm = CommStats::new(d);
     comm.begin_scheme_epoch(0, &spec.scheme.spec());
     let mut train_loss = LossMeter::new();

@@ -18,6 +18,10 @@
 //!   channels or real TCP sockets, optionally sharded) and threads
 //!   together for single-process runs; multi-process TCP deployment reuses
 //!   the same loops (cli::master_serve / worker_connect).
+//! * [`multirun`] — the multi-tenant master (DESIGN.md §11): R independent
+//!   fixed-fleet runs hosted on one transport and one thread, round-robin
+//!   swept over steppable engines and demultiplexed by the frame header's
+//!   `run_id`, with per-run failure isolation.
 //! * [`membership`] — elastic fleet membership: the epoch-phased
 //!   coordinator state machine (`WaitingForMembers → Warmup → Training →
 //!   Holding`) that admits and evicts workers at fleet-epoch boundaries,
@@ -41,11 +45,13 @@
 pub mod launch;
 pub mod master;
 pub mod membership;
+pub mod multirun;
 pub mod shard;
 pub mod worker;
 
-pub use launch::{run_training, TrainReport};
+pub use launch::{run_training, LaunchReport, Launcher, TrainReport};
 pub use master::{AggMode, MasterLoop};
+pub use multirun::{run_multi, HostedRun, MultiRunReport};
 pub use membership::{
     bitmap_rank, Membership, MembershipPlan, MembershipSpec, Phase, WorkerMembership,
 };

@@ -1,0 +1,129 @@
+//! Multi-tenant master: R independent runs hosted on one master process,
+//! one transport, one thread (DESIGN.md §11).
+//!
+//! Each hosted run is a complete fixed-fleet training run — its own
+//! [`MasterSpec`] (scheme, schedule, aggregation mode), its own per-worker
+//! decode chains, its own `w`, its own [`crate::metrics::CommStats`] —
+//! demultiplexed out of the shared fabric by [`crate::comm::run`]. The
+//! driver here is a cooperative round-robin sweep over steppable
+//! [`RoundEngine`]s: every live engine folds exactly one round per sweep,
+//! so no hosted run can get more than one round ahead of a sibling that is
+//! still making progress (the fairness bound the capacity soak asserts).
+//!
+//! Isolation semantics:
+//!
+//! * a run's engine sees only its own workers (run-local ids) and
+//!   broadcasts only to its own slot range — the numbers it produces are
+//!   bit-identical to the same run hosted solo (pinned by
+//!   `tests/multi_run.rs`);
+//! * a run that *fails* (worker crash past the grace window, protocol
+//!   violation) is recorded as that run's error and dropped from the
+//!   sweep; sibling runs keep stepping to completion untouched;
+//! * zero threads are added: the sweep runs on the caller's thread, and
+//!   the shared transport is pumped cooperatively from whichever engine
+//!   is waiting.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::comm::run::split_runs;
+use crate::comm::MasterTransport;
+use crate::scheme::MasterScheme;
+
+use super::master::{EvalFn, MasterReport, MasterSpec, RoundEngine};
+
+/// One run to host: spec + initial parameters + how many of the fabric's
+/// worker slots it owns. Slots are assigned contiguously in declaration
+/// order: run r owns global ids `[Σ n_workers(<r), Σ n_workers(<=r))`.
+pub struct HostedRun {
+    pub spec: MasterSpec,
+    pub init_w: Vec<f32>,
+    pub n_workers: usize,
+}
+
+/// What the multi-tenant driver hands back: per-run outcomes (in
+/// declaration order — a failed run is an `Err` slot, not a torn-down
+/// process) plus the worst cross-run round skew observed at any sweep
+/// boundary (0 in a healthy sweep; the capacity soak asserts the bound).
+pub struct MultiRunReport {
+    pub runs: Vec<Result<MasterReport>>,
+    pub max_round_skew: u64,
+}
+
+/// Host every run in `runs` on `inner`, sweeping one round per run per
+/// pass. `dead_grace` is the per-run fixed-fleet liveness window (how long
+/// a run waits on its own lost worker before that run — and only that run
+/// — fails). `evals` are per-run evaluation hooks, `None` for headless.
+pub fn run_multi<M: MasterTransport>(
+    inner: M,
+    runs: Vec<HostedRun>,
+    mut evals: Vec<Option<&mut EvalFn<'_>>>,
+    dead_grace: Duration,
+) -> Result<MultiRunReport> {
+    let r_total = runs.len();
+    anyhow::ensure!(r_total >= 1, "need at least one hosted run");
+    anyhow::ensure!(
+        evals.len() == r_total,
+        "got {} eval hooks for {r_total} hosted runs",
+        evals.len()
+    );
+    for (r, run) in runs.iter().enumerate() {
+        // hosted runs are fixed-fleet rounds only: the elastic and
+        // adaptive engines own their transport's full roster/liveness
+        // surface and are not steppable (also refused at config compose)
+        anyhow::ensure!(
+            run.spec.membership.is_none() && run.spec.adaptive.is_none(),
+            "hosted run {r}: [membership]/[adaptive] do not compose with [runs]"
+        );
+    }
+    let sizes: Vec<usize> = runs.iter().map(|h| h.n_workers).collect();
+    let ports = split_runs(inner, &sizes, dead_grace)?;
+
+    let mut engines = Vec::with_capacity(r_total);
+    for (r, (hosted, port)) in runs.into_iter().zip(ports).enumerate() {
+        let d = hosted.init_w.len();
+        let mut chains: Vec<Box<dyn MasterScheme>> = Vec::with_capacity(hosted.n_workers);
+        for _ in 0..hosted.n_workers {
+            chains.push(hosted.spec.scheme.master(d).with_context(|| format!("run {r} chains"))?);
+        }
+        let engine = RoundEngine::new(hosted.spec, 0, r as u16, chains, port, hosted.init_w)
+            .with_context(|| format!("hosted run {r}"))?;
+        engines.push(Some(engine));
+    }
+
+    let mut results: Vec<Option<Result<MasterReport>>> = (0..r_total).map(|_| None).collect();
+    let mut max_round_skew = 0u64;
+    loop {
+        let mut progressed = false;
+        for r in 0..r_total {
+            let Some(mut engine) = engines[r].take() else { continue };
+            progressed = true;
+            if engine.done() {
+                results[r] =
+                    Some(engine.finish(evals[r].as_deref_mut()).context(format!("hosted run {r}")));
+                continue;
+            }
+            match engine.step(evals[r].as_deref_mut()) {
+                Ok(()) => engines[r] = Some(engine),
+                // this run is over; siblings keep their transport — the
+                // demux only ever fails the port whose workers misbehaved
+                Err(e) => results[r] = Some(Err(e.context(format!("hosted run {r}")))),
+            }
+        }
+        if !progressed {
+            break;
+        }
+        // fairness probe: at a sweep boundary every live engine has folded
+        // the same number of rounds unless one was held up mid-sweep
+        let live: Vec<u64> = engines
+            .iter()
+            .filter_map(|e| e.as_ref().map(|e| e.rounds_done()))
+            .collect();
+        if let (Some(&lo), Some(&hi)) = (live.iter().min(), live.iter().max()) {
+            max_round_skew = max_round_skew.max(hi - lo);
+        }
+    }
+    let runs = results.into_iter().map(|r| r.expect("every run resolved")).collect();
+    Ok(MultiRunReport { runs, max_round_skew })
+}

@@ -76,9 +76,11 @@ pub struct WorkerSpec {
     pub absent: Vec<(u64, u64)>,
     /// Chaos crash injection: vanish silently before sending round `t`'s
     /// frame — no Leave, no completion marker, the connection just drops.
-    /// Only meaningful with `membership` (the elastic engine's liveness
-    /// deadline is what notices the disappearance); the launcher uses it
-    /// to drive crash and half-open chaos legs (DESIGN.md §10).
+    /// With `membership` the elastic engine's liveness deadline notices
+    /// and evicts at a boundary (DESIGN.md §10); on a fixed fleet the
+    /// master fails after `dead_grace` — which the multi-tenant demux
+    /// scopes to the one hosted run that lost the worker (DESIGN.md §11,
+    /// pinned by `tests/multi_run.rs`).
     pub depart_at: Option<u64>,
     /// This process is a fresh incarnation re-dialing after a crash: even
     /// if the member bitmap still carries our bit, the seat belongs to the
@@ -292,12 +294,6 @@ fn run_rounds_inner<T: WorkerTransport>(
         );
         return run_rounds_adaptive(spec, transport, source, w, hlo);
     }
-    anyhow::ensure!(
-        spec.depart_at.is_none() || spec.membership.is_some(),
-        "worker {}: depart_at (chaos crash injection) requires [membership] — a fixed \
-         fleet cannot survive losing a worker",
-        spec.worker_id
-    );
     if spec.membership.is_some() {
         return run_rounds_elastic(spec, transport, source, w, hlo);
     }
@@ -326,6 +322,7 @@ fn run_rounds_inner<T: WorkerTransport>(
     // receive-side allocation of the round loop
     let mut bframe = Frame::shutdown();
     let mut skipped = 0u64;
+    let mut completed = 0u64;
 
     // the round loop runs in a closure so that EVERY exit path falls
     // through to retiring the send stage below — the caller writes a
@@ -339,6 +336,12 @@ fn run_rounds_inner<T: WorkerTransport>(
         let mut spare: Option<Vec<u8>> = None;
         source.prefetch(0);
         for t in 0..spec.steps {
+            if spec.depart_at == Some(t) {
+                // chaos crash: vanish before sending round t's frame — no
+                // marker; dropping the connection IS the injection, and
+                // the master's liveness deadline takes it from here
+                break;
+            }
             if spec.is_absent(t) {
                 // churn: out of the compute pool this round — announce
                 // with a skip marker, keep applying broadcasts so w stays
@@ -352,6 +355,7 @@ fn run_rounds_inner<T: WorkerTransport>(
                     source.prefetch(t + 1);
                 }
                 recv_apply(spec, transport, &mut phases, &mut w, &mut update, &mut bframe, t)?;
+                completed += 1;
                 continue;
             }
 
@@ -420,6 +424,7 @@ fn run_rounds_inner<T: WorkerTransport>(
 
             // 4. receive averaged r̃, apply update
             recv_apply(spec, transport, &mut phases, &mut w, &mut update, &mut bframe, t)?;
+            completed += 1;
         }
         Ok(())
     })();
@@ -451,7 +456,8 @@ fn run_rounds_inner<T: WorkerTransport>(
     };
     Ok(WorkerSummary {
         worker_id: spec.worker_id,
-        rounds: spec.steps,
+        // spec.steps unless a chaos departure cut the loop short
+        rounds: completed,
         phases,
         mean_loss_last_quarter: mean_tail,
         e_mse_trace,

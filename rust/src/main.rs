@@ -9,7 +9,7 @@ use tempo::comm::tcp::TcpWorker;
 use tempo::config::{toml, ExperimentConfig};
 use tempo::coordinator::master::{MasterLoop, MasterSpec};
 use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
-use tempo::coordinator::{launch, run_training};
+use tempo::coordinator::{launch, run_training, Launcher};
 use tempo::data::Shard;
 use tempo::experiments::{self, ExpOptions};
 use tempo::metrics::{CsvWriter, RunPoint};
@@ -100,6 +100,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         a.apply_str(v).context("--adaptive")?;
         cfg.adaptive = Some(a);
     }
+    if let Some(v) = args.flag("runs")? {
+        // multi-tenant hosting: R independent runs on one master process
+        cfg.runs.count = v.parse().context("--runs")?;
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -120,16 +124,59 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.scheme.to_scheme()?.spec(),
         cfg.backend
     );
+    if cfg.runs.is_multi() {
+        return cmd_train_multi(&cfg);
+    }
     let report = run_training(&cfg)?;
     print_report(&report);
     if let Some(path) = &cfg.csv {
-        let mut w = CsvWriter::create(path, RunPoint::csv_header())?;
-        for p in &report.points {
-            w.row(&p.to_csv_row())?;
-        }
-        w.flush()?;
-        println!("log: {path}");
+        write_points_csv(path, &report.points)?;
     }
+    Ok(())
+}
+
+/// `tempo train --runs R`: host R independent runs on one master process
+/// (DESIGN.md §11) and report each run's outcome; any failed run fails the
+/// command after every sibling has been reported.
+fn cmd_train_multi(cfg: &ExperimentConfig) -> Result<()> {
+    let report = Launcher::new(cfg.clone()).serve()?;
+    println!(
+        "hosted {} runs on one master (max cross-run round skew {})",
+        report.runs.len(),
+        report.max_round_skew
+    );
+    let mut failed = 0;
+    for (r, outcome) in report.runs.iter().enumerate() {
+        match outcome {
+            Ok(rep) => {
+                println!(
+                    "run {r} (seed {}): acc={:.4} loss={:.4} bits/comp={:.4}",
+                    cfg.seed + r as u64,
+                    rep.final_test_acc,
+                    rep.final_test_loss,
+                    rep.bits_per_component
+                );
+                if let Some(path) = &cfg.csv {
+                    write_points_csv(&format!("{path}.run{r}"), &rep.points)?;
+                }
+            }
+            Err(e) => {
+                failed += 1;
+                println!("run {r}: FAILED: {e:#}");
+            }
+        }
+    }
+    anyhow::ensure!(failed == 0, "{failed} of {} hosted runs failed", report.runs.len());
+    Ok(())
+}
+
+fn write_points_csv(path: &str, points: &[RunPoint]) -> Result<()> {
+    let mut w = CsvWriter::create(path, RunPoint::csv_header())?;
+    for p in points {
+        w.row(&p.to_csv_row())?;
+    }
+    w.flush()?;
+    println!("log: {path}");
     Ok(())
 }
 

@@ -4,7 +4,9 @@
 //! implementation (DESIGN.md §1, docs/SPEC.md). The same contract covers
 //! the documented `--fabric` token strings (README.md / DESIGN.md),
 //! which must apply cleanly to a [`tempo::config::FabricSpec`] —
-//! including the §10 `dead_grace=`/`chaos=` failure-semantics tokens.
+//! including the §10 `dead_grace=`/`chaos=` failure-semantics tokens —
+//! and the documented `--runs` values (§11), which must pass
+//! [`tempo::config::RunsSpec`] validation (fit the header's u16).
 
 use std::collections::BTreeSet;
 use std::path::PathBuf;
@@ -119,6 +121,33 @@ fn every_documented_fabric_spec_applies() {
         }
     }
     assert!(total >= 2, "suspiciously few documented fabric specs extracted: {total}");
+}
+
+#[test]
+fn every_documented_runs_flag_validates() {
+    let mut total = 0usize;
+    for doc in ["README.md", "DESIGN.md", "docs/SPEC.md"] {
+        let path = repo_root().join(doc);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        for line in text.lines() {
+            for chunk in line.split("--runs ").skip(1) {
+                let val = chunk
+                    .split_whitespace()
+                    .next()
+                    .unwrap_or("")
+                    .trim_end_matches(['`', ',', ')', '.']);
+                // skip grammar placeholders like `--runs R`
+                let Ok(count) = val.parse::<usize>() else { continue };
+                let spec = tempo::config::RunsSpec { count };
+                spec.validate().unwrap_or_else(|e| {
+                    panic!("{doc}: documented --runs {val} does not validate: {e:#}")
+                });
+                total += 1;
+            }
+        }
+    }
+    assert!(total >= 1, "no documented --runs values extracted — docs or extraction broke");
 }
 
 #[test]

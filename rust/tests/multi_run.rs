@@ -1,0 +1,259 @@
+//! Multi-tenant master isolation (DESIGN.md §11, ISSUE 9 acceptance):
+//!
+//! * **bit-identity**: R = 2 runs hosted on one transport — in-process
+//!   channels AND a loopback-TCP reactor — must each produce `final_w`
+//!   f32-bits, CommStats counters, and per-worker step statistics
+//!   *identical* to the same run launched solo (run r trains with
+//!   `seed + r`, exactly the launcher's convention);
+//! * **failure isolation**: a worker crashing mid-run (abrupt socket
+//!   close, no completion marker) fails *its own* run after the liveness
+//!   grace window — the sibling run's numbers stay bit-identical to its
+//!   solo replay, and the error names the failed run and run-local worker;
+//! * **fairness**: the cooperative sweep keeps every live run in lockstep
+//!   (zero cross-run round skew at sweep boundaries).
+//!
+//! Runs fully offline: synthetic gradient sources + headless engines.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use tempo::comm::tcp::TcpWorker;
+use tempo::comm::{channel_fabric, MasterTransport, ReactorMaster, RunWorker, WorkerTransport};
+use tempo::config::experiment::Backend;
+use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
+use tempo::coordinator::{run_multi, HostedRun, MultiRunReport};
+use tempo::optim::LrSchedule;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+const SPEC: &str = "topk:k=8/estk/ef/beta=0.9";
+const GRACE: Duration = Duration::from_millis(250);
+
+fn wspec(wid: usize, steps: u64, seed: u64, scheme: Scheme) -> WorkerSpec {
+    WorkerSpec {
+        worker_id: wid as u32,
+        model: "synthetic".into(),
+        scheme,
+        backend: Backend::Rust,
+        schedule: LrSchedule::constant(0.05),
+        steps,
+        seed,
+        clip_norm: None,
+        pipelined: false,
+        absent: vec![],
+        depart_at: None,
+        rejoin: false,
+        membership: None,
+        adaptive: false,
+    }
+}
+
+fn mspec(n: usize, steps: u64, seed: u64, scheme: Scheme) -> MasterSpec {
+    MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule: LrSchedule::constant(0.05),
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: AggMode::FullSync,
+        membership: None,
+        adaptive: None,
+    }
+}
+
+/// The shared gradient stream: worker `wid` of a run seeded `seed` draws
+/// the same Gaussians whether the run is hosted or solo. (`Send` so it can
+/// move into the worker thread, where it is boxed as a `GradSource`.)
+fn source(
+    d: usize,
+    seed: u64,
+    wid: usize,
+) -> impl FnMut(&[f32], u64) -> anyhow::Result<(f64, Vec<f32>)> + Send {
+    let mut rng = Pcg64::new(seed, 500 + wid as u64);
+    move |_w: &[f32], _t: u64| {
+        let mut g = vec![0.0f32; d];
+        rng.fill_gaussian(&mut g, 1.0);
+        Ok((1.0, g))
+    }
+}
+
+/// One run launched solo on its own channel fabric — the reference the
+/// hosted replicas are pinned against.
+fn solo_run(d: usize, n: usize, steps: u64, seed: u64) -> (MasterReport, Vec<WorkerSummary>) {
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let (master, workers) = channel_fabric(n);
+    let mut handles = Vec::with_capacity(n);
+    for (wid, t) in workers.into_iter().enumerate() {
+        let spec = wspec(wid, steps, seed, scheme.clone());
+        let src = source(d, seed, wid);
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, t, Box::new(src), vec![0.0f32; d]).run_local().unwrap()
+        }));
+    }
+    let report = MasterLoop::new(mspec(n, steps, seed, scheme), master).run_headless(d).unwrap();
+    let mut s: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    s.sort_by_key(|x| x.worker_id);
+    (report, s)
+}
+
+#[derive(Clone, Copy)]
+enum FabricKind {
+    Channel,
+    Reactor,
+}
+
+/// Host `r_total` runs of `n` workers each on one shared fabric: global
+/// slot `gid` is run `gid / n`, run-local worker `gid % n`, speaking
+/// through a [`RunWorker`] stamp — the launcher's slot layout. `depart`
+/// optionally crashes one worker: `(run, wid, round)` vanishes at `round`
+/// with no completion marker (socket drop on the TCP fabric).
+fn hosted_fleet(
+    kind: FabricKind,
+    d: usize,
+    n: usize,
+    r_total: usize,
+    steps: u64,
+    base_seed: u64,
+    depart: Option<(usize, usize, u64)>,
+) -> (MultiRunReport, Vec<Vec<anyhow::Result<WorkerSummary>>>) {
+    type DynFabric = (Box<dyn MasterTransport>, Vec<Box<dyn WorkerTransport>>);
+    let scheme = Scheme::parse(SPEC).unwrap();
+    let total = n * r_total;
+    let (master, worker_ts): DynFabric = match kind {
+        FabricKind::Channel => {
+            let (m, ws) = channel_fabric(total);
+            let ws = ws.into_iter().map(|w| Box::new(w) as Box<dyn WorkerTransport>).collect();
+            (Box::new(m), ws)
+        }
+        FabricKind::Reactor => {
+            // dial every slot first (handshakes queue in the backlog),
+            // then accept them all — the launcher's construction order
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let ws = (0..total)
+                .map(|gid| {
+                    Box::new(TcpWorker::connect(addr, gid as u32).unwrap())
+                        as Box<dyn WorkerTransport>
+                })
+                .collect();
+            let m = ReactorMaster::from_listener_graced(listener, total, total, 16, GRACE).unwrap();
+            (Box::new(m), ws)
+        }
+    };
+
+    let mut handles: Vec<Vec<std::thread::JoinHandle<anyhow::Result<WorkerSummary>>>> =
+        (0..r_total).map(|_| Vec::with_capacity(n)).collect();
+    for (gid, t) in worker_ts.into_iter().enumerate() {
+        let (r, wid) = (gid / n, gid % n);
+        let run_seed = base_seed + r as u64;
+        let mut spec = wspec(wid, steps, run_seed, scheme.clone());
+        if let Some((dr, dw, round)) = depart {
+            if (dr, dw) == (r, wid) {
+                spec.depart_at = Some(round);
+            }
+        }
+        let t: Box<dyn WorkerTransport> = Box::new(RunWorker::new(t, r as u16));
+        let src = source(d, run_seed, wid);
+        // a surviving worker of a failed sibling run errors out when the
+        // shared transport tears down — keep the Result, don't unwrap
+        handles[r].push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, t, Box::new(src), vec![0.0f32; d]).run_local()
+        }));
+    }
+
+    let hosted: Vec<HostedRun> = (0..r_total)
+        .map(|r| HostedRun {
+            spec: mspec(n, steps, base_seed + r as u64, scheme.clone()),
+            init_w: vec![0.0f32; d],
+            n_workers: n,
+        })
+        .collect();
+    let multi = run_multi(master, hosted, (0..r_total).map(|_| None).collect(), GRACE).unwrap();
+    let summaries = handles
+        .into_iter()
+        .map(|hs| hs.into_iter().map(|h| h.join().unwrap()).collect())
+        .collect();
+    (multi, summaries)
+}
+
+fn w_bits(report: &MasterReport) -> Vec<u32> {
+    report.final_w.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_run_matches_solo(
+    r: usize,
+    hosted: &MasterReport,
+    solo: &MasterReport,
+    hosted_sum: &[anyhow::Result<WorkerSummary>],
+    solo_sum: &[WorkerSummary],
+) {
+    assert_eq!(w_bits(hosted), w_bits(solo), "run {r}: final_w diverged from its solo replay");
+    assert_eq!(hosted.comm.messages(), solo.comm.messages(), "run {r}: message count");
+    assert_eq!(hosted.comm.total_bits(), solo.comm.total_bits(), "run {r}: wire bits");
+    assert_eq!(
+        hosted.comm.bits_per_component().to_bits(),
+        solo.comm.bits_per_component().to_bits(),
+        "run {r}: rate accounting"
+    );
+    assert_eq!(hosted.comm.skips(), solo.comm.skips(), "run {r}: skip accounting");
+    for (a, b) in hosted_sum.iter().zip(solo_sum) {
+        let a = a.as_ref().expect("healthy run's workers all complete");
+        assert_eq!(a.rounds, b.rounds, "run {r} worker {}: round count", b.worker_id);
+        let ea: Vec<u64> = a.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        let eb: Vec<u64> = b.e_mse_trace.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ea, eb, "run {r} worker {}: e_mse trace diverged", b.worker_id);
+    }
+}
+
+#[test]
+fn hosted_pair_is_bit_identical_to_solo_runs() {
+    let (d, n, r_total, steps, seed) = (400usize, 3usize, 2usize, 8u64, 11u64);
+    let solos: Vec<_> = (0..r_total).map(|r| solo_run(d, n, steps, seed + r as u64)).collect();
+    assert!(
+        w_bits(&solos[0].0) != w_bits(&solos[1].0),
+        "seeded runs must differ, or the identity check below proves nothing"
+    );
+    for kind in [FabricKind::Channel, FabricKind::Reactor] {
+        let (multi, summaries) = hosted_fleet(kind, d, n, r_total, steps, seed, None);
+        assert_eq!(multi.max_round_skew, 0, "cooperative sweep must stay in lockstep");
+        for r in 0..r_total {
+            let hosted = multi.runs[r].as_ref().expect("hosted run completes");
+            let (solo, solo_sum) = &solos[r];
+            assert_run_matches_solo(r, hosted, solo, &summaries[r], solo_sum);
+        }
+    }
+}
+
+#[test]
+fn a_crashed_worker_fails_only_its_own_run() {
+    let (d, n, r_total, steps, seed) = (200usize, 2usize, 2usize, 6u64, 7u64);
+    let solo0 = solo_run(d, n, steps, seed);
+    // run 1's local worker 1 crashes at round 2: socket drop, no marker
+    let (multi, summaries) =
+        hosted_fleet(FabricKind::Reactor, d, n, r_total, steps, seed, Some((1, 1, 2)));
+
+    // the sibling run is untouched — bit-identical to its solo replay
+    let r0 = multi.runs[0].as_ref().expect("run 0 must survive run 1's crash");
+    assert_run_matches_solo(0, r0, &solo0.0, &summaries[0], &solo0.1);
+
+    // the crashed run failed, and the error names the run and the
+    // run-local worker (not the global slot id 3)
+    let err = format!("{:#}", multi.runs[1].as_ref().expect_err("run 1 lost a worker"));
+    assert!(err.contains("hosted run 1"), "error must name the failed run: {err}");
+    assert!(err.contains("worker 1"), "error must name the run-local worker: {err}");
+
+    // the departing worker ran its pre-crash rounds; its surviving
+    // teammate unblocked (with an error) once the fabric tore down
+    let crashed = summaries[1][1].as_ref().expect("a departing leg exits cleanly");
+    assert!(crashed.rounds < steps, "crashed worker must not have finished");
+    assert!(
+        summaries[1][0].is_err() || summaries[1][0].as_ref().unwrap().rounds < steps,
+        "run 1's survivor cannot have completed all rounds"
+    );
+}

@@ -169,6 +169,7 @@ fn prop_frame_wire_roundtrip() {
             worker: (g.u64() & 0xFFFF) as u32,
             shard: (g.u64() & 0xFFFF) as u16,
             scheme_epoch: (g.u64() & 0xFFFF) as u16,
+            run_id: (g.u64() & 0xFFFF) as u16,
             round: g.u64(),
             payload_tag: (g.u64() & 0x7) as u8,
             payload_bits: g.u64() & 0xFFFF_FFFF,
@@ -179,6 +180,7 @@ fn prop_frame_wire_roundtrip() {
         if back.worker != f.worker
             || back.shard != f.shard
             || back.scheme_epoch != f.scheme_epoch
+            || back.run_id != f.run_id
             || back.round != f.round
             || back.payload_bits != f.payload_bits
             || back.bytes != f.bytes

@@ -23,6 +23,11 @@
 //! alive, frames swallowed) and a crash-and-return worker (abrupt close,
 //! seeded backoff, generation-fenced re-join as a fresh admission).
 //!
+//! The multi-run capacity soak (ISSUE 9, DESIGN.md §11) turns the same
+//! 64-slot reactor into a multi-tenant host: 8 identically-seeded runs of
+//! 8 workers each, swept round-robin on one thread, asserting cross-run
+//! bit-equality, zero round skew, O(1) threads, and no FD leak.
+//!
 //! Thread/FD introspection reads /proc and is skipped (functional soak
 //! still runs) on non-Linux hosts.
 
@@ -552,5 +557,147 @@ fn chaos_soak_evicts_wedged_and_crashed_workers_and_readmits_the_returner() {
                 "{io:?}: FDs leaked across the chaos soak: baseline {base}, end {end}"
             );
         }
+    }
+}
+
+/// Multi-tenant capacity soak (ISSUE 9 acceptance, CI `reactor-scale-soak`
+/// leg): the same 64-worker reactor now hosts **8 independent runs** of 8
+/// workers each (DESIGN.md §11), demultiplexed by the frame header's
+/// `run_id` and swept round-robin on the caller's thread. Every run is
+/// seeded identically, so all 8 must produce bit-identical parameters and
+/// identical wire accounting — any cross-run bleed (a misrouted frame, a
+/// broadcast reaching a foreign slot, shared chain state) breaks the
+/// equality. Still zero added master threads, zero cross-run round skew at
+/// sweep boundaries, and no FD leak. (Seed-shifted hosted-vs-solo identity
+/// and run-scoped failure are `tests/multi_run.rs`.)
+#[test]
+fn multi_run_soak_hosts_eight_runs_on_one_reactor_with_o1_threads_and_no_fd_leak() {
+    use std::time::Duration;
+
+    use tempo::comm::RunWorker;
+    use tempo::config::experiment::Backend;
+    use tempo::coordinator::master::{AggMode, MasterSpec};
+    use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+    use tempo::coordinator::{run_multi, HostedRun};
+    use tempo::optim::LrSchedule;
+    use tempo::scheme::Scheme;
+    use tempo::util::Pcg64;
+
+    const RUNS: usize = 8;
+    const PER: usize = 8;
+    const N: usize = RUNS * PER; // the same 64-slot fabric as the soaks above
+    const STEPS: u64 = 6;
+    const QUEUE_BOUND: usize = 16;
+    let grace = Duration::from_secs(2);
+    let d = 128usize;
+    let seed = 31u64;
+
+    let scheme = Scheme::parse("topk:k=8/estk/ef/beta=0.9").unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let fd_base = fd_count();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let mut handles = Vec::with_capacity(N);
+    for gid in 0..N {
+        let (r, wid) = (gid / PER, gid % PER);
+        let scheme = scheme.clone();
+        handles.push(std::thread::spawn(move || {
+            let spec = WorkerSpec {
+                worker_id: wid as u32,
+                model: "synthetic".into(),
+                scheme,
+                backend: Backend::Rust,
+                schedule,
+                steps: STEPS,
+                seed,
+                clip_norm: None,
+                pipelined: false,
+                absent: vec![],
+                depart_at: None,
+                rejoin: false,
+                membership: None,
+                adaptive: false,
+            };
+            let mut rng = Pcg64::new(seed, 500 + wid as u64);
+            let source = move |_w: &[f32], _t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+                let mut g = vec![0.0f32; d];
+                rng.fill_gaussian(&mut g, 1.0);
+                Ok((1.0, g))
+            };
+            // dial in on the GLOBAL slot; the run stamp scopes it to run r
+            let t = TcpWorker::connect(addr, gid as u32).unwrap();
+            let t = RunWorker::new(t, r as u16);
+            WorkerLoop::with_source(spec, t, Box::new(source), vec![0.0f32; d])
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let threads_before = thread_count();
+    let master = ReactorMaster::from_listener_graced(listener, N, N, QUEUE_BOUND, grace).unwrap();
+    if let (Some(before), Some(with)) = (threads_before, thread_count()) {
+        assert!(
+            with <= before + 1,
+            "multi-run reactor master grew the thread count {before} -> {with} \
+             (8 hosted runs must still be O(1) threads)"
+        );
+    }
+
+    let hosted: Vec<HostedRun> = (0..RUNS)
+        .map(|_| HostedRun {
+            spec: MasterSpec {
+                model: "synthetic".into(),
+                scheme: scheme.clone(),
+                schedule,
+                steps: STEPS,
+                eval_every: STEPS,
+                eval_batches: 1,
+                seed,
+                samples_per_round: PER,
+                train_len: 64,
+                data_noise: 1.0,
+                aggregation: AggMode::FullSync,
+                membership: None,
+                adaptive: None,
+            },
+            init_w: vec![0.0f32; d],
+            n_workers: PER,
+        })
+        .collect();
+    // the sweep runs on THIS thread: run_multi adds no threads either
+    let multi = run_multi(master, hosted, (0..RUNS).map(|_| None).collect(), grace).unwrap();
+    assert_eq!(multi.max_round_skew, 0, "hosted runs fell out of lockstep");
+
+    // every run seeded the same → all 8 must land on the same bits; any
+    // cross-run bleed (misrouted frame, foreign broadcast, shared chain
+    // state) breaks this equality for at least one sibling
+    let reports: Vec<_> =
+        multi.runs.iter().map(|r| r.as_ref().expect("hosted run completes")).collect();
+    let reference: Vec<u32> = reports[0].final_w.iter().map(|x| x.to_bits()).collect();
+    assert!(reference.iter().any(|&b| b != 0), "hosted runs must make progress");
+    for (r, report) in reports.iter().enumerate() {
+        let bits: Vec<u32> = report.final_w.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, reference, "run {r}: identically-seeded sibling diverged");
+        assert_eq!(report.comm.messages(), reports[0].comm.messages(), "run {r}: messages");
+        assert_eq!(report.comm.total_bits(), reports[0].comm.total_bits(), "run {r}: wire bits");
+    }
+
+    for h in handles {
+        let s = h.join().unwrap();
+        assert_eq!(s.rounds, STEPS, "worker {} did not complete", s.worker_id);
+    }
+    if let (Some(base), Some(end)) = (fd_base, fd_count()) {
+        assert!(
+            end <= base + 4,
+            "FDs leaked across the multi-run soak: baseline {base}, after teardown {end}"
+        );
+    }
+    if let (Some(before), Some(end)) = (threads_before, thread_count()) {
+        // the 64 worker threads are joined; nothing the host added remains
+        assert!(
+            end <= before,
+            "threads leaked across the multi-run soak: {before} before the master, {end} after"
+        );
     }
 }
