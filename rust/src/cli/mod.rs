@@ -131,11 +131,13 @@ USAGE:
   tempo train --config <file.toml> [--steps N] [--workers N] [--backend rust|hlo]
               [--scheme <spec>] [--fabric <spec>] [--io threads|reactor]
               [--shards N] [--membership <spec>] [--adaptive <spec>] [--runs R]
-              [--csv out.csv]
+              [--trace <spec>] [--csv out.csv]
   tempo exp <id> [--smoke] [--out results/]   run a paper experiment:
         table1 | fig1 | fig3 | fig4 | fig5 | fig6 | fig7 | fig8 | theorem1 |
         fabric | ablation-beta | ablation-block | ablation-master | all
   tempo inspect                                list artifacts from the manifest
+  tempo metrics-dump --file <snapshot.json>    render an end-of-run metrics
+                                               snapshot (<csv>.metrics.json)
   tempo master-serve --listen <addr:port> --workers N --config <file.toml>
   tempo worker-connect --connect <addr:port> --worker-id I --config <file.toml>
   tempo help
@@ -201,6 +203,17 @@ Multi-tenant hosting (--runs R or the [runs] table; DESIGN.md §11):
   its siblings running. --runs 1 (default) bypasses the demux entirely.
   Not composable with --shards/--membership/--adaptive or crash chaos.
   e.g.  --runs 8
+
+Observability (--trace or the [trace] table; DESIGN.md §12, docs/OBSERVABILITY.md):
+  on | off                      master switch (default off — the structural
+                                bypass: no registry, no ring, no clock reads;
+                                bit- and alloc-identical to an untraced run)
+  path=FILE                     drain the structured event ring to JSONL
+  ring=N                        event-ring capacity (default 4096; overflow
+                                drops the oldest event and counts it)
+  Composes with every feature. With --csv set, the end-of-run registry
+  snapshot lands at <csv>.metrics.json (read it with metrics-dump).
+  e.g.  --trace path=run.trace.jsonl,ring=8192
 
 Artifacts are read from ./artifacts (override with TEMPO_ARTIFACTS).
 Run `make artifacts` first to lower the JAX/Pallas graphs.

@@ -136,6 +136,13 @@ impl MasterTransport for ChannelMaster {
         self.downs.len()
     }
 
+    fn attach_meter(&mut self, meter: &crate::metrics::registry::Meter) {
+        // registers the full comm.* vocabulary even though an in-process
+        // fabric can never reconnect or queue: names are the contract
+        let meters = super::CommMeters::new(meter);
+        self.tracker.set_abort_counter(meters.aborts.clone());
+    }
+
     fn recv_any(&mut self) -> Result<(usize, Frame)> {
         loop {
             let (wid, frame) = self.up.recv().ok().context("all workers hung up")?;

@@ -51,6 +51,70 @@ pub use shard::{ShardMap, ShardedWorkerEndpoint};
 use anyhow::Result;
 use std::time::{Duration, Instant};
 
+use crate::metrics::registry::{Counter, Gauge, Meter};
+
+/// A worker announced abnormal termination with an explicit
+/// [`Frame::abort`] marker. Typed (rather than a plain `anyhow!`) so the
+/// multi-run demux can attribute the abort to the owning run — a sibling
+/// port pumping the shared fabric downcasts this, records it against the
+/// aborting worker's run, and keeps its own run alive (DESIGN.md §11).
+/// The `Display` string is part of the launcher's triage contract: root-
+/// cause selection skips errors containing "hung up".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AbortError {
+    /// Global worker slot id on the fabric the abort arrived on.
+    pub wid: usize,
+}
+
+impl std::fmt::Display for AbortError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker {} hung up (aborted mid-run)", self.wid)
+    }
+}
+
+impl std::error::Error for AbortError {}
+
+/// The comm-layer instrument set (docs/OBSERVABILITY.md): registered by
+/// [`MasterTransport::attach_meter`] on fabrics that track liveness. One
+/// construction registers every `comm.*` name, so even a fabric that can
+/// never fire a counter (the channel transport has no reconnects) still
+/// exposes the full vocabulary to the doc gate.
+#[derive(Clone, Default)]
+pub struct CommMeters {
+    /// `comm.reconnects`: completed reconnect handshakes.
+    pub reconnects: Counter,
+    /// `comm.disconnects`: connections torn down mid-run (EOF/write error).
+    pub disconnects: Counter,
+    /// `comm.aborts`: explicit abort markers received.
+    pub aborts: Counter,
+    /// `comm.queue_depth_max`: high-water per-connection broadcast write
+    /// queue depth (reactor backend).
+    pub queue_depth_max: Gauge,
+}
+
+impl CommMeters {
+    pub fn new(m: &Meter) -> Self {
+        CommMeters {
+            reconnects: m.counter(
+                "comm.reconnects",
+                "connections",
+                "completed worker reconnect handshakes",
+            ),
+            disconnects: m.counter(
+                "comm.disconnects",
+                "connections",
+                "worker connections torn down mid-run (EOF or write error)",
+            ),
+            aborts: m.counter("comm.aborts", "frames", "explicit abort markers received"),
+            queue_depth_max: m.gauge(
+                "comm.queue_depth_max",
+                "frames",
+                "high-water per-connection broadcast write-queue depth",
+            ),
+        }
+    }
+}
+
 /// Master-side view of one worker endpoint's liveness. Workers announce a
 /// clean end of run with [`Frame::done`] and abnormal termination with
 /// [`Frame::abort`] (sent automatically by the worker loop and, for
@@ -87,6 +151,8 @@ pub(crate) struct PeerTracker {
     /// treats `last_heard` older than `dead_grace` as a wedge — socket
     /// alive, worker silent — and stages the peer for boundary eviction.
     last_heard: Vec<Instant>,
+    /// `comm.aborts` instrument — a no-op shell until a meter is attached.
+    aborts: Counter,
 }
 
 impl PeerTracker {
@@ -95,7 +161,14 @@ impl PeerTracker {
             state: vec![PeerState::Alive; n],
             latest_gen: vec![0; n],
             last_heard: vec![Instant::now(); n],
+            aborts: Counter::off(),
         }
+    }
+
+    /// Wire the `comm.aborts` counter (called from each fabric's
+    /// [`MasterTransport::attach_meter`]).
+    pub(crate) fn set_abort_counter(&mut self, c: Counter) {
+        self.aborts = c;
     }
 
     /// A worker that vanished mid-run without its done marker, if any.
@@ -143,7 +216,8 @@ impl PeerTracker {
                 return Ok(None);
             }
             self.state[wid] = PeerState::Lost;
-            anyhow::bail!("worker {wid} hung up (aborted mid-run)");
+            self.aborts.inc();
+            return Err(AbortError { wid }.into());
         }
         self.state[wid] = PeerState::Alive;
         Ok(Some((wid, frame)))
@@ -310,6 +384,14 @@ pub trait MasterTransport: Send {
         self.broadcast(frame)?;
         Ok(vec![true; self.n_workers()])
     }
+
+    /// Attach the observability meter (DESIGN.md §12): fabrics that track
+    /// liveness register their [`CommMeters`] and start counting. The
+    /// default is a no-op so test doubles and meter-less runs need no
+    /// override; never attaching is the structural off-bypass.
+    fn attach_meter(&mut self, meter: &Meter) {
+        let _ = meter;
+    }
 }
 
 impl MasterTransport for Box<dyn MasterTransport> {
@@ -347,5 +429,9 @@ impl MasterTransport for Box<dyn MasterTransport> {
 
     fn broadcast_roster(&mut self, frame: &Frame) -> Result<Vec<bool>> {
         (**self).broadcast_roster(frame)
+    }
+
+    fn attach_meter(&mut self, meter: &Meter) {
+        (**self).attach_meter(meter)
     }
 }

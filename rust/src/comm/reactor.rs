@@ -421,6 +421,8 @@ pub struct ReactorMaster {
     /// (the broadcast-side `send_reclaim` analogue)
     staged_spare: Option<Arc<Vec<u8>>>,
     queue_bound: usize,
+    /// comm.* instruments — no-op shells until a meter is attached
+    meters: super::CommMeters,
     /// how long `recv_any` waits for a lost worker to reconnect before
     /// declaring it hung up (same default as the threads backend)
     pub dead_grace: Duration,
@@ -496,6 +498,7 @@ impl ReactorMaster {
             roster_scratch: Vec::new(),
             staged_spare: None,
             queue_bound,
+            meters: super::CommMeters::default(),
             dead_grace,
             handshake_timeout: dead_grace.mul_f64(HANDSHAKE_GRACE_FACTOR),
         };
@@ -720,6 +723,7 @@ impl ReactorMaster {
             if self.worker_conn[w] == Some(slot) {
                 self.worker_conn[w] = None;
             }
+            self.meters.disconnects.inc();
             self.events_q.push_back(Ev::Gone(w, conn.gen));
         }
     }
@@ -733,6 +737,11 @@ impl ReactorMaster {
                 Ok(None)
             }
             Ev::Joined(id, gen, epoch) => {
+                // generation 1 is the initial rendezvous; anything later
+                // is a re-dial after a drop
+                if gen > 1 {
+                    self.meters.reconnects.inc();
+                }
                 self.tracker.on_joined(id, gen);
                 self.peer_epoch[id] = epoch;
                 Ok(None)
@@ -770,6 +779,11 @@ impl Drop for ReactorMaster {
 impl MasterTransport for ReactorMaster {
     fn n_workers(&self) -> usize {
         self.n
+    }
+
+    fn attach_meter(&mut self, meter: &crate::metrics::registry::Meter) {
+        self.meters = super::CommMeters::new(meter);
+        self.tracker.set_abort_counter(self.meters.aborts.clone());
     }
 
     fn recv_any(&mut self) -> Result<(usize, Frame)> {
@@ -925,6 +939,8 @@ impl ReactorMaster {
                     self.roster_scratch[w] = true;
                     if let Some(conn) = self.conns[slot].as_mut() {
                         conn.sync_interest(&mut self.poller, slot as u64 + 1);
+                        // high-water mark of any peer's post-flush backlog
+                        self.meters.queue_depth_max.set_max(conn.wq.len() as f64);
                     }
                 }
                 // write error: dead connection — drop it, the worker may

@@ -27,11 +27,15 @@
 //!   `dead_grace`" policy to *its own* workers via
 //!   [`MasterTransport::lost_peers`], so one run's crash fails one run.
 //!
-//! Known limit: an explicit abort *frame* is absorbed by the shared
-//! transport's `PeerTracker` inside whichever port happened to be pumping,
-//! so its error can surface on a sibling port. Connection-level failures
-//! (crash, EOF, wedge) — the chaos cases — are tracked per peer and scoped
-//! correctly; see `tests/multi_run.rs`.
+//! * **aborts** — an explicit abort *frame* surfaces from the shared
+//!   transport's `PeerTracker` inside whichever port happened to be
+//!   pumping; the demux downcasts the typed [`AbortError`], records it
+//!   against the aborting worker's run, and swallows it on the pumping
+//!   port. Only the owning run's receives then fail (after draining any
+//!   frames already queued for it) — a sibling run never sees another
+//!   run's abort. Connection-level failures (crash, EOF, wedge) — the
+//!   chaos cases — are tracked per peer via the liveness path above. Both
+//!   scopes are pinned by `tests/multi_run.rs`.
 
 use std::collections::VecDeque;
 use std::ops::Range;
@@ -41,7 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use super::frame::Frame;
-use super::{FrameSender, MasterTransport, WorkerTransport};
+use super::{AbortError, FrameSender, MasterTransport, WorkerTransport};
 
 /// How long one demux pump blocks on the shared stream before re-checking
 /// the caller's own queue and liveness. Purely an idle-wait granularity —
@@ -56,6 +60,10 @@ struct Shared<M> {
     /// global slot base per run (ascending, bases[0] == 0)
     bases: Vec<usize>,
     sizes: Vec<usize>,
+    /// per-run abort marker: the run-local id of a worker whose explicit
+    /// abort frame came off the shared stream (possibly under a sibling
+    /// port's pump) — that run's receives bail once its queue drains
+    aborted: Vec<Option<usize>>,
 }
 
 impl<M: MasterTransport> Shared<M> {
@@ -70,7 +78,24 @@ impl<M: MasterTransport> Shared<M> {
     /// Pump one frame (at most) off the shared stream into its run queue.
     /// Returns whether anything was enqueued within `timeout`.
     fn pump(&mut self, timeout: Duration) -> Result<bool> {
-        match self.inner.recv_any_timeout(timeout)? {
+        let polled = match self.inner.recv_any_timeout(timeout) {
+            Ok(x) => x,
+            Err(e) => {
+                // an explicit abort is that worker's run's failure, not the
+                // pumping port's: record the marker and keep this port (and
+                // every other sibling) alive — the owner bails on its next
+                // receive once its queue is drained
+                if let Some(a) = e.downcast_ref::<AbortError>() {
+                    let total: usize = self.sizes.iter().sum();
+                    anyhow::ensure!(a.wid < total, "abort from bad worker id {}", a.wid);
+                    let r = self.run_of(a.wid);
+                    self.aborted[r] = Some(a.wid - self.bases[r]);
+                    return Ok(true);
+                }
+                return Err(e);
+            }
+        };
+        match polled {
             None => Ok(false),
             Some((gid, frame)) => {
                 let total: usize = self.sizes.iter().sum();
@@ -86,6 +111,16 @@ impl<M: MasterTransport> Shared<M> {
                 Ok(true)
             }
         }
+    }
+
+    /// Bail if `run` has a recorded abort marker. Callers check this only
+    /// after its queue came up empty, so frames that arrived before the
+    /// abort are still delivered in order.
+    fn check_abort(&self, run: usize) -> Result<()> {
+        if let Some(local) = self.aborted[run] {
+            anyhow::bail!("worker {local} hung up (aborted mid-run)");
+        }
+        Ok(())
     }
 
     /// First lost worker belonging to `run`, as a run-local id.
@@ -135,6 +170,7 @@ pub fn split_runs<M: MasterTransport>(
         queues: sizes.iter().map(|_| VecDeque::new()).collect(),
         bases: bases.clone(),
         sizes: sizes.to_vec(),
+        aborted: sizes.iter().map(|_| None).collect(),
     }));
     Ok(sizes
         .iter()
@@ -164,6 +200,12 @@ impl<M: MasterTransport> MasterTransport for RunPort<M> {
         self.size
     }
 
+    fn attach_meter(&mut self, meter: &crate::metrics::registry::Meter) {
+        // one shared fabric, one instrument set: re-attachment from each
+        // port resolves to the same registry cells (idempotent by name)
+        self.lock().inner.attach_meter(meter);
+    }
+
     fn recv_any(&mut self) -> Result<(usize, Frame)> {
         // same contract as the concrete masters' recv_any, scoped to this
         // run: block until one of OUR workers produces a frame, and bail
@@ -175,6 +217,7 @@ impl<M: MasterTransport> MasterTransport for RunPort<M> {
             if let Some(x) = s.queues[self.run].pop_front() {
                 return Ok(x);
             }
+            s.check_abort(self.run)?;
             match s.lost_local(self.run) {
                 Some(local) => {
                     let dl =
@@ -201,6 +244,7 @@ impl<M: MasterTransport> MasterTransport for RunPort<M> {
             if let Some(x) = s.queues[self.run].pop_front() {
                 return Ok(Some(x));
             }
+            s.check_abort(self.run)?;
             if !s.pump(Duration::ZERO)? {
                 return Ok(None);
             }
@@ -214,6 +258,7 @@ impl<M: MasterTransport> MasterTransport for RunPort<M> {
             if let Some(x) = s.queues[self.run].pop_front() {
                 return Ok(Some(x));
             }
+            s.check_abort(self.run)?;
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 return Ok(None);
@@ -346,6 +391,31 @@ mod tests {
         assert_eq!(workers[0].recv_broadcast().unwrap().round, 7);
         assert_eq!(workers[1].recv_broadcast().unwrap().round, 8);
         assert_eq!(workers[2].recv_broadcast().unwrap().round, 8);
+    }
+
+    #[test]
+    fn an_abort_frame_fails_only_its_own_run() {
+        let (master, mut workers) = channel_fabric(3); // run 0: {0}, run 1: {1, 2}
+        let mut ports = split_runs(master, &[1, 2], Duration::from_millis(200)).unwrap();
+        let mut p1 = ports.pop().unwrap();
+        let mut p0 = ports.pop().unwrap();
+
+        // run 1's local worker 1 (global slot 2) queues one frame and then
+        // aborts; run 0's port is the one pumping the shared stream when
+        // the abort comes off it
+        workers[2].send_update(Frame::skip(1, 3).with_run(1)).unwrap();
+        workers[2].send_update(Frame::abort(1).with_run(1)).unwrap();
+        workers[0].send_update(Frame::skip(0, 5).with_run(0)).unwrap();
+        let (wid, f) = p0.recv_any().unwrap();
+        assert_eq!((wid, f.round), (0, 5));
+        assert!(p0.try_recv_any().unwrap().is_none(), "run 0 must not see run 1's abort");
+
+        // run 1 still drains the frame queued before the abort, and only
+        // then bails — under the run-local worker id
+        let (wid, f) = p1.recv_any().unwrap();
+        assert_eq!((wid, f.round), (1, 3));
+        let e = p1.recv_any().unwrap_err();
+        assert!(format!("{e:#}").contains("worker 1 hung up (aborted mid-run)"), "{e:#}");
     }
 
     #[test]

@@ -143,6 +143,8 @@ pub struct TcpMaster {
     /// how long `recv_any` waits for a lost worker to reconnect before
     /// declaring it hung up
     pub dead_grace: Duration,
+    /// comm.* instruments — no-op shells until a meter is attached
+    meters: super::CommMeters,
 }
 
 impl TcpMaster {
@@ -228,6 +230,7 @@ impl TcpMaster {
             bcast_scratch: Vec::new(),
             shutdown,
             dead_grace,
+            meters: super::CommMeters::default(),
         })
     }
 
@@ -249,11 +252,17 @@ impl TcpMaster {
             Event::Frame(id, frame) => self.tracker.on_frame(id, frame),
             Event::Gone(id, gen) => {
                 self.tracker.on_gone(id, gen);
+                self.meters.disconnects.inc();
                 Ok(None)
             }
             Event::Joined(id, gen, epoch) => {
                 self.tracker.on_joined(id, gen);
                 self.peer_epoch[id] = epoch;
+                if gen > 1 {
+                    // generation 1 is the slot's initial rendezvous;
+                    // anything later is a completed reconnect handshake
+                    self.meters.reconnects.inc();
+                }
                 Ok(None)
             }
         }
@@ -345,6 +354,11 @@ fn accept_loop(
 impl MasterTransport for TcpMaster {
     fn n_workers(&self) -> usize {
         self.n
+    }
+
+    fn attach_meter(&mut self, meter: &crate::metrics::registry::Meter) {
+        self.meters = super::CommMeters::new(meter);
+        self.tracker.set_abort_counter(self.meters.aborts.clone());
     }
 
     fn recv_any(&mut self) -> Result<(usize, Frame)> {

@@ -226,6 +226,46 @@ mod tests {
         build(&["[runs]\ncount = 1\n", shards]).expect("runs = 1 is the structural bypass");
     }
 
+    /// `[trace]` composes with EVERY feature (docs/OBSERVABILITY.md):
+    /// observability must be attachable to exactly the run being debugged,
+    /// so the gate never refuses it — alone or alongside any supported
+    /// feature combination.
+    #[test]
+    fn trace_composes_with_every_feature() {
+        let trace = "[trace]\nenabled = true\npath = \"run.trace.jsonl\"\nring = 128\n";
+        let shards = "[scheme]\nspec = \"blocks(a=0.5:topk:k=8/estk/ef;b=0.5:sign)\"\n\n\
+                      [shards]\ncount = 2\n";
+        let membership = "[membership]\nadmit_at = 8\n";
+        let adaptive = "[adaptive]\ntarget_bits = 2.5\nwindow = 8\n";
+        let runs = "[runs]\ncount = 2\n";
+        let scalable_scheme = "[scheme]\nspec = \"topk:k_frac=0.01/estk/ef\"\n";
+        let wedge = "[fabric]\nchaos = \"1:wedge:4..8\"\n";
+
+        let build = |parts: &[&str]| -> ExperimentConfig {
+            let mut toml = String::from("name = \"x\"\nworkers = 4\n\n");
+            for p in parts {
+                toml.push_str(p);
+                toml.push('\n');
+            }
+            ExperimentConfig::from_toml_str(&toml)
+                .unwrap_or_else(|e| panic!("trace must compose with {parts:?}: {e:#}"))
+        };
+
+        for parts in [
+            vec![trace],
+            vec![trace, shards],
+            vec![trace, membership],
+            vec![trace, scalable_scheme, adaptive],
+            vec![trace, runs],
+            vec![trace, runs, wedge],
+        ] {
+            let cfg = build(&parts);
+            assert!(cfg.trace.enabled, "trace lost in composition {parts:?}");
+            assert_eq!(cfg.trace.path.as_deref(), Some("run.trace.jsonl"));
+            assert_eq!(cfg.trace.ring, 128);
+        }
+    }
+
     /// The gate is callable directly on a hand-assembled config — the
     /// Launcher's second line of defense.
     #[test]

@@ -11,6 +11,7 @@ use super::fabric::FabricSpec;
 use super::membership::MembershipCfg;
 use super::runs::RunsSpec;
 use super::shards::ShardsSpec;
+use super::trace::TraceCfg;
 use super::value::Value;
 
 /// Scheme spec as written in configs: either a registry spec *string*
@@ -179,6 +180,10 @@ pub struct ExperimentConfig {
     /// master process drives on one fabric. `count = 1` (the default) is a
     /// structural bypass of the demux layer.
     pub runs: RunsSpec,
+    /// Observability (`[trace]`): metrics registry + trace-event ring.
+    /// `enabled = false` (the default) is a structural bypass — and the
+    /// table composes with every feature, never refused.
+    pub trace: TraceCfg,
     // LR schedule
     pub lr: f32,
     /// global-norm gradient clip (0 = disabled)
@@ -212,6 +217,7 @@ impl Default for ExperimentConfig {
             membership: None,
             adaptive: None,
             runs: RunsSpec::default(),
+            trace: TraceCfg::default(),
             lr: 0.1,
             clip_norm: 0.0,
             lr_decay_factor: 0.1,
@@ -271,6 +277,9 @@ impl ExperimentConfig {
         if let Some(x) = v.opt("runs") {
             c.runs = RunsSpec::from_value(x)?;
         }
+        if let Some(x) = v.opt("trace") {
+            c.trace = TraceCfg::from_value(x)?;
+        }
         if let Some(t) = v.opt("lr") {
             if let Some(x) = t.opt("base") {
                 c.lr = x.as_f32()?;
@@ -321,6 +330,7 @@ impl ExperimentConfig {
         self.fabric.validate().context("invalid [fabric]")?;
         self.shards.validate().context("invalid [shards]")?;
         self.runs.validate().context("invalid [runs]")?;
+        self.trace.validate().context("invalid [trace]")?;
         for &(w, _) in &self.fabric.straggler_ms {
             anyhow::ensure!(w < self.workers, "fabric.straggler names worker {w} out of range");
         }

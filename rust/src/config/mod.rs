@@ -14,6 +14,7 @@ pub mod membership;
 pub mod runs;
 pub mod shards;
 pub mod toml;
+pub mod trace;
 pub mod value;
 
 pub use adaptive::AdaptiveCfg;
@@ -22,4 +23,5 @@ pub use fabric::{ChaosKind, FabricSpec, IoBackend, TransportKind};
 pub use membership::MembershipCfg;
 pub use runs::RunsSpec;
 pub use shards::ShardsSpec;
+pub use trace::TraceCfg;
 pub use value::Value;

@@ -1,0 +1,129 @@
+//! `[trace]` configuration: the observability layer's switch
+//! ([`crate::metrics::registry`] + [`crate::metrics::trace`],
+//! DESIGN.md §12).
+//!
+//! ```toml
+//! [trace]
+//! enabled = true         # default false: structural bypass, bit-identical
+//! path = "run.trace.jsonl"  # optional: drain the event ring to JSONL
+//! ring = 4096            # event-ring capacity (>= 1)
+//! ```
+//!
+//! and the CLI override `--trace on`, `--trace off`, or comma-separated
+//! `key=value` tokens (`--trace path=run.trace.jsonl,ring=8192`; any
+//! `key=value` token implies `enabled = true` unless `off` is also given).
+//! Tracing composes with **every** feature — `compose::validate` never
+//! refuses it — because observability must be attachable to exactly the
+//! run being debugged.
+
+use anyhow::{Context, Result};
+
+use super::value::Value;
+
+/// Parsed `[trace]` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceCfg {
+    /// Master switch. `false` (default) is the structural off-bypass:
+    /// no registry, no ring, no clock reads — pinned bit- and
+    /// alloc-identical to an uninstrumented run.
+    pub enabled: bool,
+    /// When set, the drained trace stream is written here as JSONL.
+    pub path: Option<String>,
+    /// Event-ring capacity; overflow drops the oldest event and counts it.
+    pub ring: usize,
+}
+
+impl Default for TraceCfg {
+    fn default() -> Self {
+        Self { enabled: false, path: None, ring: 4096 }
+    }
+}
+
+impl TraceCfg {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.ring >= 1, "[trace] ring must be >= 1, got {}", self.ring);
+        if let Some(p) = &self.path {
+            anyhow::ensure!(!p.is_empty(), "[trace] path must not be empty");
+        }
+        Ok(())
+    }
+
+    /// Parse the `[trace]` table of a config file.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let mut t = Self::default();
+        if let Some(x) = v.opt("enabled") {
+            t.enabled = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("path") {
+            t.path = Some(x.as_str()?.to_string());
+        }
+        if let Some(x) = v.opt("ring") {
+            t.ring = x.as_usize()?;
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Apply a CLI spec string (`--trace on`, `--trace off`,
+    /// `--trace path=run.trace.jsonl,ring=8192`) on top of the current
+    /// values. Any `key=value` token implies `enabled = true`.
+    pub fn apply_str(&mut self, spec: &str) -> Result<()> {
+        for token in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match token.split_once('=') {
+                None => match token {
+                    "on" | "enabled" | "1" | "true" => self.enabled = true,
+                    "off" | "0" | "false" => self.enabled = false,
+                    other => anyhow::bail!(
+                        "unknown trace token {other:?} (on|off|path=FILE|ring=N)"
+                    ),
+                },
+                Some((key, val)) => {
+                    match key {
+                        "path" => self.path = Some(val.to_string()),
+                        "ring" => {
+                            self.ring =
+                                val.parse().with_context(|| format!("trace ring={val:?}"))?
+                        }
+                        other => {
+                            anyhow::bail!("unknown trace key {other:?} (on|off|path=FILE|ring=N)")
+                        }
+                    }
+                    self.enabled = true;
+                }
+            }
+        }
+        self.validate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn toml_table_parses_and_validates() {
+        let v = toml::parse("[trace]\nenabled = true\npath = \"t.jsonl\"\nring = 16\n").unwrap();
+        let t = TraceCfg::from_value(v.get("trace").unwrap()).unwrap();
+        assert_eq!(t, TraceCfg { enabled: true, path: Some("t.jsonl".into()), ring: 16 });
+        assert_eq!(TraceCfg::default(), TraceCfg { enabled: false, path: None, ring: 4096 });
+        let v = toml::parse("[trace]\nring = 0\n").unwrap();
+        assert!(TraceCfg::from_value(v.get("trace").unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_tokens_apply_and_invalids_reject() {
+        let mut t = TraceCfg::default();
+        t.apply_str("on").unwrap();
+        assert!(t.enabled);
+        t.apply_str("off").unwrap();
+        assert!(!t.enabled);
+        t.apply_str("path=run.trace.jsonl,ring=8192").unwrap();
+        assert!(t.enabled, "key=value tokens imply enabled");
+        assert_eq!(t.path.as_deref(), Some("run.trace.jsonl"));
+        assert_eq!(t.ring, 8192);
+        assert!(t.apply_str("warp=1").is_err());
+        assert!(t.apply_str("blink").is_err());
+        assert!(t.apply_str("ring=0").is_err());
+    }
+}

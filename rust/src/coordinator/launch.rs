@@ -26,19 +26,21 @@ use crate::comm::{
 };
 use crate::config::{
     AdaptiveCfg, ChaosKind, ExperimentConfig, FabricSpec, IoBackend, MembershipCfg, ShardsSpec,
-    TransportKind,
+    TraceCfg, TransportKind,
 };
 use crate::data::{Dataset, MarkovCorpus, Shard, SynthImages};
-use crate::metrics::{CommStats, RunPoint};
+use crate::metrics::registry::{Counter, Gauge, Meter, Registry};
+use crate::metrics::trace::{TraceEvent, TraceKind, TraceRing, Tracer};
+use crate::metrics::{CommStats, ObsReport, RunPoint};
 use crate::model::{Manifest, ModelKind};
 use crate::runtime::{ModelExec, Runtime};
 use crate::scheme::Scheme;
 use crate::util::timer::PhaseTimes;
 
-use super::master::{evaluate, EvalFn, MasterLoop, MasterReport, MasterSpec, TestStream};
+use super::master::{evaluate, EvalFn, MasterLoop, MasterObs, MasterReport, MasterSpec, TestStream};
 use super::multirun::{run_multi, HostedRun};
 use super::shard::ShardedMasterLoop;
-use super::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
+use super::worker::{WorkerLoop, WorkerObs, WorkerSpec, WorkerSummary};
 
 /// Aggregated result of a training run.
 #[derive(Clone, Debug)]
@@ -81,6 +83,9 @@ impl TrainReport {
 pub struct LaunchReport {
     pub runs: Vec<Result<TrainReport>>,
     pub max_round_skew: u64,
+    /// Drained trace stream + final metrics snapshot when `[trace]` was
+    /// enabled; `None` (no registry, no ring, no overhead) otherwise.
+    pub trace: Option<ObsReport>,
 }
 
 impl LaunchReport {
@@ -166,6 +171,12 @@ impl Launcher {
         self
     }
 
+    /// Observability: `[trace]` switch, event-ring size, JSONL sink.
+    pub fn trace(mut self, trace: TraceCfg) -> Self {
+        self.cfg.trace = trace;
+        self
+    }
+
     /// Validate the composed config and run it to completion in-process.
     pub fn serve(self) -> Result<LaunchReport> {
         self.cfg.validate()?;
@@ -173,12 +184,160 @@ impl Launcher {
             Some(m) => m,
             None => Manifest::load_default()?,
         };
-        if self.cfg.runs.is_multi() {
-            serve_multi(&self.cfg, &manifest)
+        let obs = LaunchObs::new(&self.cfg.trace);
+        let mut report = if self.cfg.runs.is_multi() {
+            serve_multi(&self.cfg, &manifest, &obs)?
         } else {
-            let report = serve_single(&self.cfg, &manifest)?;
-            Ok(LaunchReport { runs: vec![Ok(report)], max_round_skew: 0 })
+            let report = serve_single(&self.cfg, &manifest, &obs)?;
+            LaunchReport { runs: vec![Ok(report)], max_round_skew: 0, trace: None }
+        };
+        report.trace = obs.finish(report.max_round_skew)?;
+        Ok(report)
+    }
+}
+
+/// Launcher-owned observability wiring: one [`Registry`] and one bounded
+/// [`TraceRing`] shared by every loop of the launch (DESIGN.md §12). With
+/// `[trace]` off (the default) this is structurally `None` — no registry,
+/// no ring, and every handle passed downstream is an off shell, so the
+/// uninstrumented run is bit- and alloc-identical to one built before the
+/// observability layer existed.
+struct LaunchObs {
+    on: Option<LaunchObsInner>,
+}
+
+struct LaunchObsInner {
+    registry: Registry,
+    meter: Meter,
+    ring: Arc<TraceRing>,
+    tracer: Tracer,
+    /// `multirun.round_skew_max`: set once from the sweep's report.
+    round_skew: Gauge,
+    /// `chaos.backoff_attempts`: re-dial attempts by chaos-cycled workers.
+    backoff: Counter,
+    path: Option<String>,
+}
+
+/// Register the launcher-level instrument vocabulary on `meter`. The one
+/// registration site for these names: [`LaunchObs`] calls it live, the doc
+/// gate (`tests/doc_metrics.rs`) calls it to enumerate.
+pub fn launch_instruments(meter: &Meter) -> (Gauge, Counter) {
+    let round_skew = meter.gauge(
+        "multirun.round_skew_max",
+        "rounds",
+        "worst cross-run round skew at any multi-tenant sweep boundary",
+    );
+    let backoff = meter.counter(
+        "chaos.backoff_attempts",
+        "attempts",
+        "re-dial attempts made by chaos-cycled workers during backoff",
+    );
+    (round_skew, backoff)
+}
+
+impl LaunchObs {
+    fn new(cfg: &TraceCfg) -> Self {
+        if !cfg.enabled {
+            return Self { on: None };
         }
+        let registry = Registry::new();
+        let meter = registry.meter();
+        let ring = TraceRing::new(cfg.ring);
+        let tracer = Tracer::on(Arc::clone(&ring));
+        let (round_skew, backoff) = launch_instruments(&meter);
+        Self {
+            on: Some(LaunchObsInner {
+                registry,
+                meter,
+                ring,
+                tracer,
+                round_skew,
+                backoff,
+                path: cfg.path.clone(),
+            }),
+        }
+    }
+
+    /// Round-engine observer stamped with `run_id` (off shell when off).
+    fn master_obs(&self, run_id: u16) -> MasterObs {
+        match &self.on {
+            Some(o) => MasterObs::new(&o.meter, o.tracer.clone(), run_id),
+            None => MasterObs::off(),
+        }
+    }
+
+    /// Worker-phase observer. One instrument set is shared by the whole
+    /// fleet — per-round phase histograms aggregate across workers.
+    fn worker_obs(&self) -> WorkerObs {
+        match &self.on {
+            Some(o) => WorkerObs::new(&o.meter),
+            None => WorkerObs::off(),
+        }
+    }
+
+    /// Wire the `comm.*` instruments into a run's master endpoint(s).
+    fn attach(&self, master: &mut MasterEndpoints) {
+        if let Some(o) = &self.on {
+            match master {
+                MasterEndpoints::Plain(t) => t.attach_meter(&o.meter),
+                MasterEndpoints::Sharded(_, ts) => {
+                    for t in ts.iter_mut() {
+                        t.attach_meter(&o.meter);
+                    }
+                }
+            }
+        }
+    }
+
+    fn attach_boxed(&self, master: &mut Box<dyn MasterTransport>) {
+        if let Some(o) = &self.on {
+            master.attach_meter(&o.meter);
+        }
+    }
+
+    /// Handles a chaos-cycled worker thread carries across its backoff.
+    fn chaos_handles(&self) -> (Tracer, Counter) {
+        match &self.on {
+            Some(o) => (o.tracer.clone(), o.backoff.clone()),
+            None => (Tracer::off(), Counter::off()),
+        }
+    }
+
+    /// Stamp a configured chaos injection (emitted at launch, when the
+    /// schedule is armed — `round` is the configured trigger round).
+    fn chaos_inject(&self, worker: u32, kind: ChaosKind, round: u64) {
+        if let Some(o) = &self.on {
+            let value = match kind {
+                ChaosKind::Wedge => 0,
+                ChaosKind::Crash => 1,
+                ChaosKind::HalfOpen => 2,
+            };
+            o.tracer.emit(TraceEvent {
+                kind: TraceKind::ChaosInject,
+                run_id: 0,
+                round,
+                epoch: 0,
+                worker,
+                value,
+            });
+        }
+    }
+
+    /// Close out the launch: publish the sweep's skew, drain the ring,
+    /// write the JSONL sink if one was configured, snapshot the registry.
+    fn finish(self, max_round_skew: u64) -> Result<Option<ObsReport>> {
+        let Some(o) = self.on else { return Ok(None) };
+        o.round_skew.set(max_round_skew as f64);
+        let (events, dropped) = o.ring.drain();
+        if let Some(path) = &o.path {
+            let mut out = String::with_capacity(events.len() * 64 + 1);
+            for ev in &events {
+                out.push_str(&ev.to_jsonl());
+                out.push('\n');
+            }
+            std::fs::write(path, out).with_context(|| format!("write trace stream {path}"))?;
+        }
+        Ok(Some(ObsReport { events, dropped, snapshot: o.registry.snapshot() }))
     }
 }
 
@@ -322,6 +481,9 @@ fn run_chaos_cycle(
     seed: u64,
     dead_grace: Duration,
     addr: SocketAddr,
+    tracer: Tracer,
+    backoff_ctr: Counter,
+    wobs: WorkerObs,
 ) -> Result<WorkerSummary> {
     let wid = spec.worker_id;
     let hold = match kind {
@@ -330,7 +492,9 @@ fn run_chaos_cycle(
     };
     let mut spec1 = spec.clone();
     spec1.depart_at = Some(depart);
-    let s1 = WorkerLoop::new(spec1, transport, shard, Arc::clone(&dataset)).run(runtime)?;
+    let s1 = WorkerLoop::new(spec1, transport, shard, Arc::clone(&dataset))
+        .with_observer(wobs.clone())
+        .run(runtime)?;
     // leg 1's socket dropped with the loop above: a crash presents EOF/RST
     // to the master; half-open keeps `hold`'s fd alive so the master sees
     // nothing at all until the re-dial below supersedes the connection
@@ -342,6 +506,17 @@ fn run_chaos_cycle(
     );
     let t2 = loop {
         std::thread::sleep(backoff.next_delay());
+        // stamped per dial attempt; `round` is 0 — a backing-off worker is
+        // outside the round schedule, its attempt index is the `value`
+        backoff_ctr.inc();
+        tracer.emit(TraceEvent {
+            kind: TraceKind::Backoff,
+            run_id: 0,
+            round: 0,
+            epoch: 0,
+            worker: wid,
+            value: u64::from(backoff.attempts()),
+        });
         match TcpWorker::connect(addr, wid) {
             Ok(t) => break t,
             Err(e) => anyhow::ensure!(
@@ -354,7 +529,7 @@ fn run_chaos_cycle(
     drop(hold);
     let mut spec2 = spec;
     spec2.rejoin = true;
-    let s2 = WorkerLoop::new(spec2, t2, shard2, dataset).run(runtime)?;
+    let s2 = WorkerLoop::new(spec2, t2, shard2, dataset).with_observer(wobs).run(runtime)?;
     Ok(merge_chaos_legs(s1, s2))
 }
 
@@ -520,7 +695,11 @@ pub fn run_training_with_manifest(
 
 /// The classic single-run launcher ([`Launcher::serve`] with `runs = 1`):
 /// n worker threads + the master on the calling thread.
-fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainReport> {
+fn serve_single(
+    cfg: &ExperimentConfig,
+    manifest: &Manifest,
+    obs: &LaunchObs,
+) -> Result<TrainReport> {
     let entry = manifest.model(&cfg.model)?.clone();
     let d = entry.d;
     let scheme = cfg.scheme.to_scheme()?;
@@ -529,8 +708,10 @@ fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainRepo
     let dataset = build_dataset(entry.kind, &entry, cfg);
     let schedule = cfg.schedule();
 
-    let ((master_side, workers_tx, fault_stats), master_addr) =
+    let ((mut master_side, workers_tx, fault_stats), master_addr) =
         build_run_fabric_addr(&cfg.fabric, cfg.workers, &cfg.shards, &scheme, d)?;
+    obs.attach(&mut master_side);
+    let worker_obs = obs.worker_obs();
 
     let mut handles = Vec::with_capacity(cfg.workers);
     for (wid, transport) in workers_tx.into_iter().enumerate() {
@@ -555,16 +736,20 @@ fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainRepo
         let manifest = manifest.clone();
         // wedge chaos rides the fault injector (wrap_faults); a crash or
         // half-open entry routes this worker through the two-leg cycle
+        for &(kind, at, _) in &cfg.fabric.chaos_for(wid) {
+            obs.chaos_inject(wid as u32, kind, at);
+        }
         let cycle = cfg
             .fabric
             .chaos_for(wid)
             .into_iter()
             .find(|&(k, _, _)| k != ChaosKind::Wedge);
+        let wobs = worker_obs.clone();
         match cycle {
             None => handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
                 // PJRT objects are !Send: each worker builds its own runtime
                 let runtime = Runtime::new(manifest)?;
-                WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
+                WorkerLoop::new(spec, transport, shard, dataset).with_observer(wobs).run(&runtime)
             })),
             Some((kind, depart, _)) => {
                 let addr = master_addr.context(
@@ -573,11 +758,12 @@ fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainRepo
                 let seed = cfg.seed;
                 let grace = cfg.fabric.dead_grace_duration();
                 let shard2 = Shard::new(wid, cfg.workers, cfg.train_len, entry.batch, cfg.seed);
+                let (tracer, backoff_ctr) = obs.chaos_handles();
                 handles.push(std::thread::spawn(move || -> Result<WorkerSummary> {
                     let runtime = Runtime::new(manifest)?;
                     run_chaos_cycle(
                         spec, transport, shard, shard2, dataset, &runtime, kind, depart, seed,
-                        grace, addr,
+                        grace, addr, tracer, backoff_ctr, wobs,
                     )
                 }));
             }
@@ -605,9 +791,13 @@ fn serve_single(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<TrainRepo
     };
     let master_runtime = Runtime::new(manifest.clone())?;
     let master_result = match master_side {
-        MasterEndpoints::Plain(master_tx) => {
-            MasterLoop::new(master_spec, master_tx).run(&master_runtime).context("master loop")
-        }
+        MasterEndpoints::Plain(master_tx) => MasterLoop::new(master_spec, master_tx)
+            .with_observer(obs.master_obs(0))
+            .run(&master_runtime)
+            .context("master loop"),
+        // sharded engines run with per-engine observers off: phase laps
+        // are a whole-master signal, not a per-shard one (comm.* meters
+        // were attached above and still count)
         MasterEndpoints::Sharded(map, masters) => {
             run_sharded_master(master_spec, map, masters, &master_runtime)
                 .context("sharded master loop")
@@ -729,7 +919,11 @@ fn assemble_train_report(
 /// every hosted run sees the same degraded schedule, exactly like running
 /// the faulty config R times. Crash/half-open chaos cycles are refused at
 /// the compose gate (the re-dial path re-addresses a single-run seat).
-fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchReport> {
+fn serve_multi(
+    cfg: &ExperimentConfig,
+    manifest: &Manifest,
+    obs: &LaunchObs,
+) -> Result<LaunchReport> {
     let r_total = cfg.runs.count;
     let n = cfg.workers;
     let entry = manifest.model(&cfg.model)?.clone();
@@ -746,7 +940,9 @@ fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchRepo
         chaos: Vec::new(),
         ..cfg.fabric.clone()
     };
-    let (master, workers_tx, _) = build_fabric(&clean, r_total * n)?;
+    let (mut master, workers_tx, _) = build_fabric(&clean, r_total * n)?;
+    obs.attach_boxed(&mut master);
+    let worker_obs = obs.worker_obs();
 
     let mut datasets = Vec::with_capacity(r_total);
     for r in 0..r_total {
@@ -793,10 +989,11 @@ fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchRepo
         let shard = Shard::new(wid, n, cfg.train_len, entry.batch, run_seed);
         let dataset = Arc::clone(&datasets[r]);
         let manifest = manifest.clone();
+        let wobs = worker_obs.clone();
         handles[r].push(std::thread::spawn(move || -> Result<WorkerSummary> {
             // PJRT objects are !Send: each worker builds its own runtime
             let runtime = Runtime::new(manifest)?;
-            WorkerLoop::new(spec, transport, shard, dataset).run(&runtime)
+            WorkerLoop::new(spec, transport, shard, dataset).with_observer(wobs).run(&runtime)
         }));
     }
 
@@ -823,7 +1020,12 @@ fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchRepo
             adaptive: None,
         };
         tests.push(TestStream::for_model(&entry, &spec));
-        hosted.push(HostedRun { spec, init_w: w0.clone(), n_workers: n });
+        hosted.push(HostedRun {
+            spec,
+            init_w: w0.clone(),
+            n_workers: n,
+            obs: obs.master_obs(r as u16),
+        });
     }
     let model = &model;
     let mut eval_fns: Vec<Box<EvalFn<'_>>> = tests
@@ -859,5 +1061,5 @@ fn serve_multi(cfg: &ExperimentConfig, manifest: &Manifest) -> Result<LaunchRepo
             }),
         );
     }
-    Ok(LaunchReport { runs, max_round_skew: multi.max_round_skew })
+    Ok(LaunchReport { runs, max_round_skew: multi.max_round_skew, trace: None })
 }

@@ -27,13 +27,16 @@
 //! model at all (test/synthetic path — eval columns become NaN).
 
 use std::collections::VecDeque;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::comm::{Frame, FrameKind, MasterTransport, SYNC_ROUND};
-use crate::coordinator::membership::{ElasticFleet, MembershipPlan};
+use crate::coordinator::membership::{ElasticFleet, MembershipPlan, Phase};
 use crate::data::{Batch, MarkovCorpus, SynthImages};
+use crate::metrics::registry::{Counter, Gauge, Histogram, Meter, SECS_BUCKETS};
+use crate::metrics::trace::{TraceEvent, TraceKind, Tracer, NO_WORKER};
 use crate::metrics::{AccuracyMeter, CommStats, LossMeter, RunPoint};
 use crate::model::ModelKind;
 use crate::optim::LrSchedule;
@@ -147,20 +150,240 @@ pub struct MasterReport {
 /// (w, eval_batches, salt) → (test_loss, test_acc).
 pub type EvalFn<'a> = dyn FnMut(&[f32], usize, u64) -> Result<(f64, f64)> + 'a;
 
+/// Master-side observability handle: the `master.*` / `fleet.*` /
+/// `adaptive.*` instruments plus the structured trace emitter, threaded
+/// through every round engine (docs/OBSERVABILITY.md lists the vocabulary).
+///
+/// [`MasterObs::off`] — the default everywhere — is a **structural
+/// bypass**: the handle holds `None`, every probe below is a branch on it,
+/// and the off path performs no clock reads, no atomic traffic and no
+/// allocation, which is what keeps uninstrumented runs bit- and
+/// alloc-identical to builds that predate observability (DESIGN.md §12).
+#[derive(Clone, Default)]
+pub struct MasterObs(Option<Arc<MasterObsInner>>);
+
+struct MasterObsInner {
+    /// stamped into every trace event (hosted runs: the run index)
+    run_id: u16,
+    tracer: Tracer,
+    rounds: Counter,
+    wait_secs: Histogram,
+    decode_secs: Histogram,
+    fold_secs: Histogram,
+    broadcast_secs: Histogram,
+    fleet_epoch: Gauge,
+    fleet_members: Gauge,
+    evictions: Counter,
+    admissions: Counter,
+    scheme_epoch: Gauge,
+    realized_bits: Gauge,
+    residual_energy: Gauge,
+}
+
+impl MasterObs {
+    /// Register the master's full metric vocabulary on `meter` (idempotent
+    /// by name — hosted runs share one registry) and bind trace events to
+    /// `tracer`, stamped with `run_id`.
+    pub fn new(meter: &Meter, tracer: Tracer, run_id: u16) -> Self {
+        Self(Some(Arc::new(MasterObsInner {
+            run_id,
+            tracer,
+            rounds: meter.counter("master.rounds", "rounds", "rounds folded and broadcast"),
+            wait_secs: meter.histogram(
+                "master.phase.wait_secs",
+                "s",
+                "per round: blocked on worker frames",
+                &SECS_BUCKETS,
+            ),
+            decode_secs: meter.histogram(
+                "master.phase.decode_secs",
+                "s",
+                "per round: decode chains over the round's frames",
+                &SECS_BUCKETS,
+            ),
+            fold_secs: meter.histogram(
+                "master.phase.fold_secs",
+                "s",
+                "per round: rate accounting plus aggregate fold",
+                &SECS_BUCKETS,
+            ),
+            broadcast_secs: meter.histogram(
+                "master.phase.broadcast_secs",
+                "s",
+                "per round: stage and send the broadcast",
+                &SECS_BUCKETS,
+            ),
+            fleet_epoch: meter.gauge("fleet.epoch", "epochs", "current fleet epoch (elastic runs)"),
+            fleet_members: meter.gauge(
+                "fleet.members",
+                "workers",
+                "member-set size after the last boundary tick",
+            ),
+            evictions: meter.counter(
+                "fleet.evictions",
+                "workers",
+                "members staged out (wedge or crash)",
+            ),
+            admissions: meter.counter(
+                "fleet.admissions",
+                "workers",
+                "workers admitted at boundaries",
+            ),
+            scheme_epoch: meter.gauge(
+                "adaptive.scheme_epoch",
+                "epochs",
+                "current negotiated scheme epoch",
+            ),
+            realized_bits: meter.gauge(
+                "adaptive.realized_bits_per_component",
+                "bits",
+                "open-window realized payload rate",
+            ),
+            residual_energy: meter.gauge(
+                "adaptive.residual_energy",
+                "energy",
+                "open-window folded-residual energy",
+            ),
+        })))
+    }
+
+    /// The structural bypass (see type docs).
+    pub fn off() -> Self {
+        Self(None)
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// `Some(now)` only when observing — the off path never reads the
+    /// clock, the on/off contract's "no extra syscalls" half.
+    fn now(&self) -> Option<Instant> {
+        self.0.as_ref().map(|_| Instant::now())
+    }
+
+    /// Close a phase opened at `t0` into the picked histogram.
+    fn lap(&self, pick: fn(&MasterObsInner) -> &Histogram, t0: Option<Instant>) {
+        if let (Some(o), Some(t0)) = (self.0.as_deref(), t0) {
+            pick(o).observe(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    fn round_done(&self) {
+        if let Some(o) = self.0.as_deref() {
+            o.rounds.inc();
+        }
+    }
+
+    /// One eviction: counter plus trace event (round = detection round,
+    /// which may precede the boundary the eviction completes at).
+    fn eviction(&self, round: u64, epoch: u64, wid: usize) {
+        if let Some(o) = self.0.as_deref() {
+            o.evictions.inc();
+            o.tracer.emit(TraceEvent {
+                kind: TraceKind::Eviction,
+                run_id: o.run_id,
+                round,
+                epoch,
+                worker: wid as u32,
+                value: 0,
+            });
+        }
+    }
+
+    fn admission(&self, round: u64, epoch: u64, wid: usize) {
+        if let Some(o) = self.0.as_deref() {
+            o.admissions.inc();
+            o.tracer.emit(TraceEvent {
+                kind: TraceKind::Admission,
+                run_id: o.run_id,
+                round,
+                epoch,
+                worker: wid as u32,
+                value: 0,
+            });
+        }
+    }
+
+    /// A boundary tick completed: gauges plus the EpochTick event, whose
+    /// `value` is the member count after the tick.
+    fn fleet_tick(&self, round: u64, epoch: u64, members: u64) {
+        if let Some(o) = self.0.as_deref() {
+            o.fleet_epoch.set(epoch as f64);
+            o.fleet_members.set(members as f64);
+            o.tracer.emit(TraceEvent {
+                kind: TraceKind::EpochTick,
+                run_id: o.run_id,
+                round,
+                epoch,
+                worker: NO_WORKER,
+                value: members,
+            });
+        }
+    }
+
+    fn holding(&self, entered: bool, round: u64, epoch: u64) {
+        if let Some(o) = self.0.as_deref() {
+            o.tracer.emit(TraceEvent {
+                kind: if entered { TraceKind::HoldingEnter } else { TraceKind::HoldingLeave },
+                run_id: o.run_id,
+                round,
+                epoch,
+                worker: NO_WORKER,
+                value: 0,
+            });
+        }
+    }
+
+    /// A committed scheme switch: gauge plus event, both carrying the NEW
+    /// epoch (matching the wire: sync_scheme frames are stamped with it).
+    fn scheme_switch(&self, round: u64, epoch: u16) {
+        if let Some(o) = self.0.as_deref() {
+            o.scheme_epoch.set(epoch as f64);
+            o.tracer.emit(TraceEvent {
+                kind: TraceKind::SchemeSwitch,
+                run_id: o.run_id,
+                round,
+                epoch: epoch as u64,
+                worker: NO_WORKER,
+                value: 0,
+            });
+        }
+    }
+
+    /// Sample the controller's open-window accumulators (read after
+    /// `observe_round`, before the boundary reset in `end_of_round`).
+    fn adaptive_window(&self, bits_per_component: f64, residual_energy: f64) {
+        if let Some(o) = self.0.as_deref() {
+            o.realized_bits.set(bits_per_component);
+            o.residual_energy.set(residual_energy);
+        }
+    }
+}
+
 /// Master loop: drives `steps` rounds over the transport.
 pub struct MasterLoop<T: MasterTransport> {
     spec: MasterSpec,
     transport: T,
+    obs: MasterObs,
 }
 
 impl<T: MasterTransport> MasterLoop<T> {
     pub fn new(spec: MasterSpec, transport: T) -> Self {
-        Self { spec, transport }
+        Self { spec, transport, obs: MasterObs::off() }
+    }
+
+    /// Attach an observability handle (builder style): metrics and trace
+    /// events flow through `obs` for this run. The default is
+    /// [`MasterObs::off`], the structural bypass.
+    pub fn with_observer(mut self, obs: MasterObs) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Model-backed run: PJRT evaluation on held-out batches.
     pub fn run(self, runtime: &Runtime) -> Result<MasterReport> {
-        let MasterLoop { spec, transport } = self;
+        let MasterLoop { spec, transport, obs } = self;
         let model = ModelExec::load(runtime, &spec.model).context("master: load model")?;
         let d = model.entry.d;
         let w = runtime.manifest.load_init(&model.entry)?;
@@ -168,7 +391,7 @@ impl<T: MasterTransport> MasterLoop<T> {
         let mut eval = |w: &[f32], batches: usize, salt: u64| -> Result<(f64, f64)> {
             evaluate(&model, w, &test, batches, salt)
         };
-        run_rounds(&spec, transport, w, Some(&mut eval))
+        run_rounds(&spec, transport, w, Some(&mut eval), obs)
     }
 
     /// Headless run at dimension d: no model, no evaluation (test metrics
@@ -183,8 +406,8 @@ impl<T: MasterTransport> MasterLoop<T> {
     /// what the epoch-switch identity test uses to restart a run from the
     /// absolute `w` a scheme-epoch sync shipped.
     pub fn run_headless_from(self, w: Vec<f32>) -> Result<MasterReport> {
-        let MasterLoop { spec, transport } = self;
-        run_rounds(&spec, transport, w, None)
+        let MasterLoop { spec, transport, obs } = self;
+        run_rounds(&spec, transport, w, None, obs)
     }
 }
 
@@ -269,6 +492,8 @@ fn pump_or_expire<T: MasterTransport>(
     grace: Duration,
     require_empty: bool,
     dry_graces: &mut u32,
+    t: u64,
+    obs: &MasterObs,
 ) -> Result<()> {
     if let Some((wid, frame)) = transport.recv_any_timeout(grace)? {
         *dry_graces = 0;
@@ -279,6 +504,7 @@ fn pump_or_expire<T: MasterTransport>(
         if fleet.expected[wid] && (!require_empty || inbox.pending[wid].is_empty()) {
             fleet.mark_wedged(wid);
             comm.record_timeout_eviction();
+            obs.eviction(t, fleet.membership.epoch(), wid);
             evicted_any = true;
         }
     }
@@ -335,6 +561,7 @@ fn run_rounds<T: MasterTransport>(
     transport: T,
     w: Vec<f32>,
     eval: Option<&mut EvalFn<'_>>,
+    obs: MasterObs,
 ) -> Result<MasterReport> {
     if let Some(plan) = spec.adaptive {
         anyhow::ensure!(
@@ -342,10 +569,10 @@ fn run_rounds<T: MasterTransport>(
             "[adaptive] does not compose with [membership]: a fleet boundary and a scheme \
              epoch would race on chain rebuilds"
         );
-        return run_engine_adaptive(spec, plan, transport, w, eval);
+        return run_engine_adaptive(spec, plan, transport, w, eval, obs);
     }
     if let Some(plan) = spec.membership.clone() {
-        return run_engine_elastic(spec, &plan, transport, w, eval);
+        return run_engine_elastic(spec, &plan, transport, w, eval, obs);
     }
     let d = w.len();
     let n = transport.n_workers();
@@ -353,7 +580,7 @@ fn run_rounds<T: MasterTransport>(
     for _ in 0..n {
         chains.push(spec.scheme.master(d)?);
     }
-    run_engine(spec, 0, chains, transport, w, eval)
+    run_engine(spec, 0, chains, transport, w, eval, obs)
 }
 
 /// The reusable fixed-fleet round engine, steppable: decode chains +
@@ -393,6 +620,7 @@ pub(crate) struct RoundEngine<T: MasterTransport> {
     batches: Vec<Vec<Frame>>,
     stale_scratch: Vec<Vec<Vec<f32>>>,
     stale_snaps: Vec<Vec<Vec<(u64, usize)>>>,
+    obs: MasterObs,
 }
 
 impl<T: MasterTransport> RoundEngine<T> {
@@ -403,6 +631,7 @@ impl<T: MasterTransport> RoundEngine<T> {
         chains: Vec<Box<dyn MasterScheme>>,
         transport: T,
         w: Vec<f32>,
+        obs: MasterObs,
     ) -> Result<Self> {
         let d = w.len();
         let n = transport.n_workers();
@@ -430,6 +659,7 @@ impl<T: MasterTransport> RoundEngine<T> {
             chains,
             transport,
             w,
+            obs,
         })
     }
 
@@ -449,6 +679,7 @@ impl<T: MasterTransport> RoundEngine<T> {
         let d = self.w.len();
         let n = self.transport.n_workers();
         self.agg.iter_mut().for_each(|x| *x = 0.0);
+        let t_wait = self.obs.now();
 
         match self.spec.aggregation {
             AggMode::FullSync => {
@@ -457,6 +688,7 @@ impl<T: MasterTransport> RoundEngine<T> {
                 while self.inbox.pending.iter().any(|q| q.is_empty()) {
                     self.inbox.pump(&mut self.transport)?;
                 }
+                self.obs.lap(|o| &o.wait_secs, t_wait);
                 let mut round_frames = Vec::with_capacity(n);
                 for wid in 0..n {
                     let frame = self.inbox.pending[wid].pop_front().unwrap();
@@ -474,7 +706,10 @@ impl<T: MasterTransport> RoundEngine<T> {
                 // independent per worker); accounting and aggregation below
                 // stay in worker-id order, so the folded f32 bits are
                 // identical to the sequential path for any thread count
+                let t_decode = self.obs.now();
                 decode_round_parallel(&mut self.chains, &mut self.rtilde_w, &mut round_frames, t, d)?;
+                self.obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = self.obs.now();
                 for (wid, frame) in round_frames.iter().enumerate() {
                     account_frame(
                         frame,
@@ -490,6 +725,7 @@ impl<T: MasterTransport> RoundEngine<T> {
                         }
                     }
                 }
+                self.obs.lap(|o| &o.fold_secs, t_fold);
             }
             AggMode::BoundedStaleness { max_staleness, quorum } => {
                 self.inbox.drain(&mut self.transport)?;
@@ -505,6 +741,7 @@ impl<T: MasterTransport> RoundEngine<T> {
                 while self.inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
                     self.inbox.pump(&mut self.transport)?;
                 }
+                self.obs.lap(|o| &o.wait_secs, t_wait);
                 // take EVERY queued frame, each exactly once, per-worker
                 // FIFO, then decode the batches in parallel across workers
                 // (sequential within a worker: chains advance in the
@@ -524,6 +761,7 @@ impl<T: MasterTransport> RoundEngine<T> {
                         self.batches[wid].push(frame);
                     }
                 }
+                let t_decode = self.obs.now();
                 decode_batches_parallel(
                     &mut self.chains,
                     &mut self.batches,
@@ -532,6 +770,8 @@ impl<T: MasterTransport> RoundEngine<T> {
                     t,
                     d,
                 )?;
+                self.obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = self.obs.now();
                 let mut contributions = 0u32;
                 for wid in 0..n {
                     for (k, frame) in self.batches[wid].iter().enumerate() {
@@ -561,14 +801,17 @@ impl<T: MasterTransport> RoundEngine<T> {
                         *a *= scale;
                     }
                 }
+                self.obs.lap(|o| &o.fold_secs, t_fold);
             }
         }
 
         // broadcast the averaged r̃; workers (and we) apply w -= η·agg
+        let t_bcast = self.obs.now();
         let mut frame = Frame::broadcast_from(t, &self.agg, std::mem::take(&mut self.bcast_buf));
         frame.shard = self.shard;
         frame.run_id = self.run_id;
         self.transport.broadcast(&frame)?;
+        self.obs.lap(|o| &o.broadcast_secs, t_bcast);
         self.bcast_buf = frame.bytes;
         let lr = self.spec.schedule.lr_at(t);
         for i in 0..d {
@@ -592,6 +835,7 @@ impl<T: MasterTransport> RoundEngine<T> {
                 wall_secs: self.wall.elapsed_secs(),
             });
         }
+        self.obs.round_done();
         self.t += 1;
         Ok(())
     }
@@ -647,8 +891,9 @@ pub(crate) fn run_engine<T: MasterTransport>(
     transport: T,
     w: Vec<f32>,
     mut eval: Option<&mut EvalFn<'_>>,
+    obs: MasterObs,
 ) -> Result<MasterReport> {
-    let mut engine = RoundEngine::new(spec.clone(), shard, 0, chains, transport, w)?;
+    let mut engine = RoundEngine::new(spec.clone(), shard, 0, chains, transport, w, obs)?;
     while !engine.done() {
         engine.step(eval.as_deref_mut())?;
     }
@@ -706,6 +951,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
     mut transport: T,
     mut w: Vec<f32>,
     mut eval: Option<&mut EvalFn<'_>>,
+    obs: MasterObs,
 ) -> Result<MasterReport> {
     let d = w.len();
     let n = transport.n_workers();
@@ -758,6 +1004,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
     for t in 0..spec.steps {
         agg.iter_mut().for_each(|x| *x = 0.0);
         drain_wedged(&mut inbox, &mut fleet, &mut comm);
+        let t_wait = obs.now();
 
         match spec.aggregation {
             AggMode::FullSync => {
@@ -791,8 +1038,11 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                         grace,
                         true,
                         &mut dry_graces,
+                        t,
+                        &obs,
                     )?;
                 }
+                obs.lap(|o| &o.wait_secs, t_wait);
                 round_frames.clear();
                 for wid in 0..n {
                     if fleet.expected[wid] {
@@ -821,7 +1071,10 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                     })
                     .count();
                 let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
+                let t_decode = obs.now();
                 decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = obs.now();
                 for wid in 0..n {
                     if !fleet.expected[wid] {
                         continue;
@@ -845,6 +1098,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                         other => anyhow::bail!("unexpected {other:?} frame from worker {wid}"),
                     }
                 }
+                obs.lap(|o| &o.fold_secs, t_fold);
             }
             AggMode::BoundedStaleness { max_staleness, quorum } => {
                 inbox.drain(&mut transport)?;
@@ -863,6 +1117,8 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                             grace,
                             true,
                             &mut dry_graces,
+                            t,
+                            &obs,
                         )?;
                     }
                 }
@@ -889,8 +1145,11 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                         grace,
                         true,
                         &mut dry_graces,
+                        t,
+                        &obs,
                     )?;
                 }
+                obs.lap(|o| &o.wait_secs, t_wait);
                 for wid in 0..n {
                     batches[wid].clear();
                     if fleet.is_wedged(wid) {
@@ -909,6 +1168,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                         batches[wid].push(frame);
                     }
                 }
+                let t_decode = obs.now();
                 decode_batches_parallel(
                     &mut chains,
                     &mut batches,
@@ -917,6 +1177,8 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                     t,
                     d,
                 )?;
+                obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = obs.now();
                 let mut contributions = 0u32;
                 for wid in 0..n {
                     for (k, frame) in batches[wid].iter().enumerate() {
@@ -951,6 +1213,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                         *a *= scale;
                     }
                 }
+                obs.lap(|o| &o.fold_secs, t_fold);
             }
         }
 
@@ -975,14 +1238,28 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                 {
                     fleet.mark_wedged(wid);
                     comm.record_timeout_eviction();
+                    obs.eviction(t, fleet.membership.epoch(), wid);
                 }
             }
+            let phase_before = fleet.membership.phase();
             let diff = fleet.membership.tick();
+            let epoch_now = fleet.membership.epoch();
+            // EpochTick first (value = member count after the tick), then
+            // one Admission per admitted slot, then any Holding transition
+            // — the order the chaos-wedge e2e timeline asserts
+            obs.fleet_tick(t, epoch_now, u64::from(fleet.membership.bitmap().count_ones()));
             for &wid in &diff.admitted {
                 // chain-reset contract: admission rebuilds the worker's
                 // decode chain from scratch (evicted chains are left
                 // behind and replaced here if the worker ever returns)
                 chains[wid] = spec.scheme.master(d)?;
+                obs.admission(t, epoch_now, wid);
+            }
+            let phase_after = fleet.membership.phase();
+            if phase_after == Phase::Holding && phase_before != Phase::Holding {
+                obs.holding(true, t, epoch_now);
+            } else if phase_before == Phase::Holding && phase_after != Phase::Holding {
+                obs.holding(false, t, epoch_now);
             }
             Frame::sync_w(t, &w, fleet.membership.bitmap(), std::mem::take(&mut bcast_buf))
         } else {
@@ -992,7 +1269,9 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
             f.payload_bits = fleet.membership.bitmap();
             f
         };
+        let t_bcast = obs.now();
         let roster = transport.broadcast_roster(&frame)?;
+        obs.lap(|o| &o.broadcast_secs, t_bcast);
         bcast_buf = frame.bytes;
         fleet.set_expected(roster, t + 1);
 
@@ -1013,6 +1292,7 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                 wall_secs: wall.elapsed_secs(),
             });
         }
+        obs.round_done();
     }
 
     // bounded-staleness runs can end with late frames still in flight: a
@@ -1032,6 +1312,8 @@ pub(crate) fn run_engine_elastic<T: MasterTransport>(
                     grace,
                     false,
                     &mut dry_graces,
+                    spec.steps,
+                    &obs,
                 )?;
             }
         }
@@ -1090,6 +1372,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
     mut transport: T,
     mut w: Vec<f32>,
     mut eval: Option<&mut EvalFn<'_>>,
+    obs: MasterObs,
 ) -> Result<MasterReport> {
     let d = w.len();
     let n = transport.n_workers();
@@ -1132,12 +1415,14 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
     for t in 0..spec.steps {
         agg.iter_mut().for_each(|x| *x = 0.0);
         let boundary = (t + 1) % ctrl.plan().window == 0;
+        let t_wait = obs.now();
 
         match spec.aggregation {
             AggMode::FullSync => {
                 while inbox.pending.iter().any(|q| q.is_empty()) {
                     inbox.pump(&mut transport)?;
                 }
+                obs.lap(|o| &o.wait_secs, t_wait);
                 let mut round_frames = Vec::with_capacity(n);
                 for wid in 0..n {
                     let frame = inbox.pending[wid].pop_front().unwrap();
@@ -1159,7 +1444,10 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                 let contributors =
                     round_frames.iter().filter(|f| f.kind == FrameKind::Update).count();
                 let scale = if contributors > 0 { 1.0 / contributors as f32 } else { 0.0 };
+                let t_decode = obs.now();
                 decode_round_parallel(&mut chains, &mut rtilde_w, &mut round_frames, t, d)?;
+                obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = obs.now();
                 for (wid, frame) in round_frames.iter().enumerate() {
                     account_frame(frame, wid, &*chains[wid], &mut comm, &mut train_loss)?;
                     if frame.kind == FrameKind::Update {
@@ -1170,6 +1458,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                         }
                     }
                 }
+                obs.lap(|o| &o.fold_secs, t_fold);
             }
             AggMode::BoundedStaleness { max_staleness, quorum } => {
                 inbox.drain(&mut transport)?;
@@ -1186,6 +1475,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                 while inbox.pending.iter().filter(|q| !q.is_empty()).count() < quorum {
                     inbox.pump(&mut transport)?;
                 }
+                obs.lap(|o| &o.wait_secs, t_wait);
                 for wid in 0..n {
                     batches[wid].clear();
                     while let Some(frame) = inbox.pending[wid].pop_front() {
@@ -1206,6 +1496,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                         batches[wid].push(frame);
                     }
                 }
+                let t_decode = obs.now();
                 decode_batches_parallel(
                     &mut chains,
                     &mut batches,
@@ -1214,6 +1505,8 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                     t,
                     d,
                 )?;
+                obs.lap(|o| &o.decode_secs, t_decode);
+                let t_fold = obs.now();
                 let mut contributions = 0u32;
                 for wid in 0..n {
                     for (k, frame) in batches[wid].iter().enumerate() {
@@ -1244,9 +1537,12 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                         *a *= scale;
                     }
                 }
+                obs.lap(|o| &o.fold_secs, t_fold);
             }
         }
         ctrl.observe_round(&agg);
+        // sample the open window before a boundary's end_of_round resets it
+        obs.adaptive_window(ctrl.window_bits_per_component(), ctrl.window_residual_energy());
 
         // the master applies its own delta BEFORE broadcasting, so a switch
         // ships the post-round-t parameters (identical f32 bits to every
@@ -1266,12 +1562,15 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                 epoch = sw.epoch;
                 let spec_str = sw.scheme.spec();
                 comm.begin_scheme_epoch(epoch, &spec_str);
+                obs.scheme_switch(t, epoch);
                 Frame::sync_scheme(t, &w, &spec_str, epoch, std::mem::take(&mut bcast_buf))
             }
             None => Frame::broadcast_from(t, &agg, std::mem::take(&mut bcast_buf))
                 .with_scheme_epoch(epoch),
         };
+        let t_bcast = obs.now();
         transport.broadcast(&frame)?;
+        obs.lap(|o| &o.broadcast_secs, t_bcast);
         bcast_buf = frame.bytes;
 
         if (t + 1) % spec.eval_every == 0 || t + 1 == spec.steps {
@@ -1291,6 +1590,7 @@ pub(crate) fn run_engine_adaptive<T: MasterTransport>(
                 wall_secs: wall.elapsed_secs(),
             });
         }
+        obs.round_done();
     }
 
     // bounded-staleness teardown: every worker sends exactly `steps`

@@ -50,10 +50,10 @@ pub mod shard;
 pub mod worker;
 
 pub use launch::{run_training, LaunchReport, Launcher, TrainReport};
-pub use master::{AggMode, MasterLoop};
+pub use master::{AggMode, MasterLoop, MasterObs};
 pub use multirun::{run_multi, HostedRun, MultiRunReport};
 pub use membership::{
     bitmap_rank, Membership, MembershipPlan, MembershipSpec, Phase, WorkerMembership,
 };
 pub use shard::ShardedMasterLoop;
-pub use worker::{WorkerLoop, WorkerSummary};
+pub use worker::{WorkerLoop, WorkerObs, WorkerSummary};

@@ -31,7 +31,7 @@ use crate::comm::run::split_runs;
 use crate::comm::MasterTransport;
 use crate::scheme::MasterScheme;
 
-use super::master::{EvalFn, MasterReport, MasterSpec, RoundEngine};
+use super::master::{EvalFn, MasterObs, MasterReport, MasterSpec, RoundEngine};
 
 /// One run to host: spec + initial parameters + how many of the fabric's
 /// worker slots it owns. Slots are assigned contiguously in declaration
@@ -40,6 +40,10 @@ pub struct HostedRun {
     pub spec: MasterSpec,
     pub init_w: Vec<f32>,
     pub n_workers: usize,
+    /// Observability handle for this run's engine — [`MasterObs::off`]
+    /// (the `Default`) unless the launcher wired `[trace]`. Hosted runs
+    /// share one registry; each handle stamps its own run id on events.
+    pub obs: MasterObs,
 }
 
 /// What the multi-tenant driver hands back: per-run outcomes (in
@@ -87,8 +91,9 @@ pub fn run_multi<M: MasterTransport>(
         for _ in 0..hosted.n_workers {
             chains.push(hosted.spec.scheme.master(d).with_context(|| format!("run {r} chains"))?);
         }
-        let engine = RoundEngine::new(hosted.spec, 0, r as u16, chains, port, hosted.init_w)
-            .with_context(|| format!("hosted run {r}"))?;
+        let engine =
+            RoundEngine::new(hosted.spec, 0, r as u16, chains, port, hosted.init_w, hosted.obs)
+                .with_context(|| format!("hosted run {r}"))?;
         engines.push(Some(engine));
     }
 

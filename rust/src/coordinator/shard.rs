@@ -116,8 +116,16 @@ impl ShardedMasterLoop {
             let spec = spec.clone();
             handles.push(std::thread::spawn(move || -> Result<MasterReport> {
                 let _threads = crate::util::parallel::override_threads(thread_budget);
-                run_engine(&spec, s as u16, chains, transport, local, None)
-                    .with_context(|| format!("master shard {s}"))
+                run_engine(
+                    &spec,
+                    s as u16,
+                    chains,
+                    transport,
+                    local,
+                    None,
+                    super::master::MasterObs::off(),
+                )
+                .with_context(|| format!("master shard {s}"))
             }));
         }
         let mut reports = Vec::with_capacity(handles.len());

@@ -36,6 +36,7 @@ use crate::comm::{Frame, PipelinedSender, WorkerTransport, ADAPT_TAG, SYNC_ROUND
 use crate::config::experiment::Backend;
 use crate::coordinator::membership::{bitmap_rank, WorkerMembership, MAX_FLEET};
 use crate::data::{Batch, Dataset, Shard};
+use crate::metrics::registry::{Histogram, Meter, SECS_BUCKETS};
 use crate::optim::LrSchedule;
 use crate::runtime::{CompressExec, ModelExec, Runtime};
 use crate::scheme::{Scheme, WorkerScheme};
@@ -109,6 +110,95 @@ impl WorkerSpec {
     }
 }
 
+/// Worker-side observability handle: the `worker.phase.*` histograms
+/// (docs/OBSERVABILITY.md). [`WorkerObs::off`] — the default — is a
+/// structural bypass: every probe branches on `None` with no atomic
+/// traffic and no allocation, so uninstrumented workers are untouched
+/// (DESIGN.md §12). Phase timers themselves predate observability (they
+/// feed [`WorkerSummary::phases`] either way), so on/off runs read the
+/// clock identically.
+#[derive(Clone, Default)]
+pub struct WorkerObs(Option<Arc<WorkerObsInner>>);
+
+struct WorkerObsInner {
+    gradient: Histogram,
+    compress: Histogram,
+    encode: Histogram,
+    send: Histogram,
+    wait: Histogram,
+    apply: Histogram,
+}
+
+impl WorkerObs {
+    /// Register the worker's phase vocabulary on `meter` (idempotent by
+    /// name — all workers of a process share the cells).
+    pub fn new(meter: &Meter) -> Self {
+        let h = |name: &str, help: &str| meter.histogram(name, "s", help, &SECS_BUCKETS);
+        Self(Some(Arc::new(WorkerObsInner {
+            gradient: h("worker.phase.gradient_secs", "per round: forward/backward compute"),
+            compress: h("worker.phase.compress_secs", "per round: compression pipeline step"),
+            encode: h("worker.phase.encode_secs", "per round: entropy encode"),
+            send: h(
+                "worker.phase.send_secs",
+                "per round: ship the update (pipelined runs record the stage total once)",
+            ),
+            wait: h("worker.phase.wait_secs", "per round: blocked on the broadcast"),
+            apply: h("worker.phase.apply_secs", "per round: decode + apply the w update"),
+        })))
+    }
+
+    /// The structural bypass (see type docs).
+    pub fn off() -> Self {
+        Self(None)
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn phase(&self, name: &str, secs: f64) {
+        let Some(o) = self.0.as_deref() else { return };
+        let h = match name {
+            "gradient" => &o.gradient,
+            "compress" => &o.compress,
+            "encode" => &o.encode,
+            "send" => &o.send,
+            "wait" => &o.wait,
+            "apply" => &o.apply,
+            _ => return,
+        };
+        h.observe(secs);
+    }
+}
+
+/// Phase bookkeeping: the run-report accumulator plus (when observing) the
+/// `worker.phase.*` histograms — one observe per `add`, so the metric
+/// distribution matches the per-round timings the summary averages.
+struct Phases {
+    times: PhaseTimes,
+    obs: WorkerObs,
+}
+
+impl Phases {
+    fn new(obs: WorkerObs) -> Self {
+        Self { times: PhaseTimes::new(), obs }
+    }
+
+    fn add(&mut self, name: &str, secs: f64) {
+        self.obs.phase(name, secs);
+        self.times.add(name, secs);
+    }
+
+    fn add_many(&mut self, name: &str, total_secs: f64, count: u64) {
+        if count > 0 {
+            // the pipelined send stage reports once per run: observe its
+            // cumulative time as a single histogram sample
+            self.obs.phase(name, total_secs);
+        }
+        self.times.add_many(name, total_secs, count);
+    }
+}
+
 /// Produces (loss, gradient) at the current parameters for round t.
 /// Implemented for any `FnMut(&[f32], u64) -> Result<(f64, Vec<f32>)>`.
 pub trait GradSource {
@@ -177,6 +267,7 @@ pub struct WorkerLoop<T: WorkerTransport> {
     spec: WorkerSpec,
     transport: T,
     body: Body,
+    obs: WorkerObs,
 }
 
 impl<T: WorkerTransport> WorkerLoop<T> {
@@ -187,7 +278,7 @@ impl<T: WorkerTransport> WorkerLoop<T> {
         shard: Shard,
         dataset: Arc<dyn Dataset>,
     ) -> Self {
-        Self { spec, transport, body: Body::Model { shard, dataset } }
+        Self { spec, transport, body: Body::Model { shard, dataset }, obs: WorkerObs::off() }
     }
 
     /// Worker over an injected gradient source (rust backend only; runs
@@ -198,13 +289,21 @@ impl<T: WorkerTransport> WorkerLoop<T> {
         source: Box<dyn GradSource>,
         init_w: Vec<f32>,
     ) -> Self {
-        Self { spec, transport, body: Body::Source { source, init_w } }
+        Self { spec, transport, body: Body::Source { source, init_w }, obs: WorkerObs::off() }
+    }
+
+    /// Attach an observability handle (builder style): phase timings flow
+    /// into the `worker.phase.*` histograms for this run. The default is
+    /// [`WorkerObs::off`], the structural bypass.
+    pub fn with_observer(mut self, obs: WorkerObs) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Run `steps` synchronous rounds. Creates PJRT executables inside the
     /// calling thread (PJRT objects are not Send).
     pub fn run(self, runtime: &Runtime) -> Result<WorkerSummary> {
-        let WorkerLoop { spec, transport, body } = self;
+        let WorkerLoop { spec, transport, body, obs } = self;
         match body {
             Body::Model { shard, dataset } => {
                 let model = ModelExec::load(runtime, &spec.model)
@@ -216,7 +315,7 @@ impl<T: WorkerTransport> WorkerLoop<T> {
                     Backend::Hlo => Some(CompressExec::for_scheme(runtime, &spec.scheme, d)?),
                 };
                 let mut source = ModelSource { model, shard, dataset, batch: None };
-                run_rounds(&spec, transport, &mut source, w, hlo)
+                run_rounds(&spec, transport, &mut source, w, hlo, obs)
             }
             Body::Source { mut source, init_w } => {
                 anyhow::ensure!(
@@ -224,14 +323,14 @@ impl<T: WorkerTransport> WorkerLoop<T> {
                     "worker {}: injected gradient sources support the rust backend only",
                     spec.worker_id
                 );
-                run_rounds(&spec, transport, source.as_mut(), init_w, None)
+                run_rounds(&spec, transport, source.as_mut(), init_w, None, obs)
             }
         }
     }
 
     /// Run without a PJRT runtime — only valid for source-backed workers.
     pub fn run_local(self) -> Result<WorkerSummary> {
-        let WorkerLoop { spec, transport, body } = self;
+        let WorkerLoop { spec, transport, body, obs } = self;
         match body {
             Body::Source { mut source, init_w } => {
                 anyhow::ensure!(
@@ -239,7 +338,7 @@ impl<T: WorkerTransport> WorkerLoop<T> {
                     "worker {}: injected gradient sources support the rust backend only",
                     spec.worker_id
                 );
-                run_rounds(&spec, transport, source.as_mut(), init_w, None)
+                run_rounds(&spec, transport, source.as_mut(), init_w, None, obs)
             }
             Body::Model { .. } => anyhow::bail!(
                 "worker {}: model-backed workers need a PJRT runtime (use run)",
@@ -262,8 +361,9 @@ fn run_rounds<T: WorkerTransport>(
     source: &mut dyn GradSource,
     w: Vec<f32>,
     hlo: Option<CompressExec>,
+    obs: WorkerObs,
 ) -> Result<WorkerSummary> {
-    let result = run_rounds_inner(spec, &mut transport, source, w, hlo);
+    let result = run_rounds_inner(spec, &mut transport, source, w, hlo, obs);
     // liveness marker: a clean completion tells the master this endpoint
     // goes quiet on purpose; an error turns into a prompt master-side
     // "hung up" failure instead of a blocked round. Best-effort — the
@@ -285,6 +385,7 @@ fn run_rounds_inner<T: WorkerTransport>(
     source: &mut dyn GradSource,
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
+    obs: WorkerObs,
 ) -> Result<WorkerSummary> {
     if spec.adaptive {
         anyhow::ensure!(
@@ -292,10 +393,10 @@ fn run_rounds_inner<T: WorkerTransport>(
             "worker {}: [adaptive] does not compose with [membership]",
             spec.worker_id
         );
-        return run_rounds_adaptive(spec, transport, source, w, hlo);
+        return run_rounds_adaptive(spec, transport, source, w, hlo, obs);
     }
     if spec.membership.is_some() {
-        return run_rounds_elastic(spec, transport, source, w, hlo);
+        return run_rounds_elastic(spec, transport, source, w, hlo, obs);
     }
     let d = w.len();
     let mut wscheme = spec.scheme.worker(d)?;
@@ -312,7 +413,7 @@ fn run_rounds_inner<T: WorkerTransport>(
     };
     let pipelined = matches!(stage, SendStage::Pipelined(_));
 
-    let mut phases = PhaseTimes::new();
+    let mut phases = Phases::new(obs);
     let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
     let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
     let mut losses = Vec::with_capacity(spec.steps as usize);
@@ -458,7 +559,7 @@ fn run_rounds_inner<T: WorkerTransport>(
         worker_id: spec.worker_id,
         // spec.steps unless a chaos departure cut the loop short
         rounds: completed,
-        phases,
+        phases: phases.times,
         mean_loss_last_quarter: mean_tail,
         e_mse_trace,
         u_norm_trace,
@@ -499,6 +600,7 @@ fn run_rounds_elastic<T: WorkerTransport>(
     source: &mut dyn GradSource,
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
+    obs: WorkerObs,
 ) -> Result<WorkerSummary> {
     let plan = spec.membership.as_ref().expect("dispatched on membership");
     let wid = spec.worker_id;
@@ -516,7 +618,7 @@ fn run_rounds_elastic<T: WorkerTransport>(
     let mut wscheme = spec.scheme.worker(d)?;
     let mut stage = SendStage::Inline;
 
-    let mut phases = PhaseTimes::new();
+    let mut phases = Phases::new(obs);
     let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
     let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
     let mut losses = Vec::with_capacity(spec.steps as usize);
@@ -697,7 +799,7 @@ fn run_rounds_elastic<T: WorkerTransport>(
     Ok(WorkerSummary {
         worker_id: wid,
         rounds: spec.steps,
-        phases,
+        phases: phases.times,
         mean_loss_last_quarter: mean_tail,
         e_mse_trace,
         u_norm_trace,
@@ -728,6 +830,7 @@ fn run_rounds_adaptive<T: WorkerTransport>(
     source: &mut dyn GradSource,
     mut w: Vec<f32>,
     hlo: Option<CompressExec>,
+    obs: WorkerObs,
 ) -> Result<WorkerSummary> {
     let wid = spec.worker_id;
     anyhow::ensure!(
@@ -740,7 +843,7 @@ fn run_rounds_adaptive<T: WorkerTransport>(
     let mut epoch: u16 = 0;
     let mut stage = SendStage::Inline;
 
-    let mut phases = PhaseTimes::new();
+    let mut phases = Phases::new(obs);
     let mut e_mse_trace = Vec::with_capacity(spec.steps as usize);
     let mut u_norm_trace = Vec::with_capacity(spec.steps as usize);
     let mut losses = Vec::with_capacity(spec.steps as usize);
@@ -839,7 +942,7 @@ fn run_rounds_adaptive<T: WorkerTransport>(
     Ok(WorkerSummary {
         worker_id: wid,
         rounds: spec.steps,
-        phases,
+        phases: phases.times,
         mean_loss_last_quarter: mean_tail,
         e_mse_trace,
         u_norm_trace,
@@ -851,7 +954,7 @@ fn run_rounds_adaptive<T: WorkerTransport>(
 fn send_frame<T: WorkerTransport>(
     stage: &mut SendStage,
     transport: &mut T,
-    phases: &mut PhaseTimes,
+    phases: &mut Phases,
     frame: Frame,
 ) -> Result<()> {
     match stage {
@@ -868,7 +971,7 @@ fn send_frame<T: WorkerTransport>(
 fn recv_apply<T: WorkerTransport>(
     spec: &WorkerSpec,
     transport: &mut T,
-    phases: &mut PhaseTimes,
+    phases: &mut Phases,
     w: &mut [f32],
     update: &mut [f32],
     bframe: &mut Frame,

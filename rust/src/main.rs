@@ -9,7 +9,7 @@ use tempo::comm::tcp::TcpWorker;
 use tempo::config::{toml, ExperimentConfig};
 use tempo::coordinator::master::{MasterLoop, MasterSpec};
 use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
-use tempo::coordinator::{launch, run_training, Launcher};
+use tempo::coordinator::{launch, Launcher};
 use tempo::data::Shard;
 use tempo::experiments::{self, ExpOptions};
 use tempo::metrics::{CsvWriter, RunPoint};
@@ -33,6 +33,7 @@ fn real_main() -> Result<()> {
         "train" => cmd_train(&args),
         "exp" => cmd_exp(&args),
         "inspect" => cmd_inspect(),
+        "metrics-dump" => cmd_metrics_dump(&args),
         "master-serve" => cmd_master_serve(&args),
         "worker-connect" => cmd_worker_connect(&args),
         "help" | "--help" | "-h" => {
@@ -104,6 +105,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         // multi-tenant hosting: R independent runs on one master process
         cfg.runs.count = v.parse().context("--runs")?;
     }
+    if let Some(v) = args.flag("trace")? {
+        // observability tokens, e.g. --trace on / --trace path=run.jsonl
+        // (applied on top of any [trace] table in the config file)
+        cfg.trace.apply_str(v).context("--trace")?;
+    }
     if let Some(v) = args.flag("csv")? {
         cfg.csv = Some(v.to_string());
     }
@@ -127,11 +133,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.runs.is_multi() {
         return cmd_train_multi(&cfg);
     }
-    let report = run_training(&cfg)?;
+    let mut launched = Launcher::new(cfg.clone()).serve()?;
+    let trace = launched.trace.take();
+    let report = launched.into_single()?;
     print_report(&report);
     if let Some(path) = &cfg.csv {
         write_points_csv(path, &report.points)?;
     }
+    report_trace(&cfg, trace.as_ref())?;
     Ok(())
 }
 
@@ -139,7 +148,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// (DESIGN.md §11) and report each run's outcome; any failed run fails the
 /// command after every sibling has been reported.
 fn cmd_train_multi(cfg: &ExperimentConfig) -> Result<()> {
-    let report = Launcher::new(cfg.clone()).serve()?;
+    let mut report = Launcher::new(cfg.clone()).serve()?;
+    let trace = report.trace.take();
     println!(
         "hosted {} runs on one master (max cross-run round skew {})",
         report.runs.len(),
@@ -166,7 +176,41 @@ fn cmd_train_multi(cfg: &ExperimentConfig) -> Result<()> {
             }
         }
     }
+    report_trace(cfg, trace.as_ref())?;
     anyhow::ensure!(failed == 0, "{failed} of {} hosted runs failed", report.runs.len());
+    Ok(())
+}
+
+/// Print the trace summary and drop the end-of-run metrics snapshot next
+/// to the CSV log (`<csv>.metrics.json`) when `[trace]` was enabled.
+fn report_trace(cfg: &ExperimentConfig, trace: Option<&tempo::metrics::ObsReport>) -> Result<()> {
+    let Some(obs) = trace else { return Ok(()) };
+    println!(
+        "trace: {} events captured ({} dropped by the ring), {} metrics registered",
+        obs.events.len(),
+        obs.dropped,
+        obs.snapshot.rows.len()
+    );
+    if let Some(path) = &cfg.trace.path {
+        println!("trace stream: {path}");
+    }
+    if let Some(csv) = &cfg.csv {
+        let out = format!("{csv}.metrics.json");
+        std::fs::write(&out, obs.snapshot.to_json())
+            .with_context(|| format!("write metrics snapshot {out}"))?;
+        println!("metrics snapshot: {out}");
+    }
+    Ok(())
+}
+
+/// `tempo metrics-dump --file <snapshot.json>`: render an end-of-run
+/// metrics snapshot (`<csv>.metrics.json`) as a readable table.
+fn cmd_metrics_dump(args: &Args) -> Result<()> {
+    let path = args.flag("file")?.context("--file <snapshot.json> required")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read metrics snapshot {path}"))?;
+    let snapshot = tempo::metrics::MetricsSnapshot::from_json(&text)?;
+    print!("{}", snapshot.render());
     Ok(())
 }
 

@@ -1,12 +1,28 @@
-//! Run metrics: meters, communication accounting, CSV logs.
+//! Run metrics: meters, communication accounting, CSV logs, and the
+//! observability layer (metrics registry + structured trace stream,
+//! DESIGN.md §12).
 
 pub mod comm_stats;
 pub mod csv;
 pub mod meters;
+pub mod registry;
+pub mod trace;
 
 pub use comm_stats::{CommStats, SchemeEpoch};
 pub use csv::CsvWriter;
 pub use meters::{AccuracyMeter, LossMeter};
+pub use registry::{Counter, Gauge, Histogram, Meter, MetricsSnapshot, Registry};
+pub use trace::{TraceEvent, TraceKind, TraceRing, Tracer};
+
+/// Everything observability hands back after a traced run: the drained
+/// event stream, the ring's overflow-drop count, and the final registry
+/// snapshot. `LaunchReport.trace` carries one when `[trace]` was enabled.
+#[derive(Clone, Debug, Default)]
+pub struct ObsReport {
+    pub events: Vec<TraceEvent>,
+    pub dropped: u64,
+    pub snapshot: MetricsSnapshot,
+}
 
 /// One evaluation/logging row of a training run — what the experiment
 /// drivers print and what regenerates the paper's learning curves.

@@ -1,0 +1,593 @@
+//! Lightweight in-process metrics registry (DESIGN.md §12).
+//!
+//! Three instrument kinds — monotonic [`Counter`]s, last/max-value
+//! [`Gauge`]s, and fixed-bucket [`Histogram`]s — registered by name
+//! through a [`Meter`] handle and read back as a [`MetricsSnapshot`].
+//! Design constraints, in order:
+//!
+//! * **No dependencies.** Plain `std::sync::atomic` cells behind `Arc`s;
+//!   the JSON snapshot is hand-rolled and round-trips through the in-repo
+//!   [`crate::config::json`] parser.
+//! * **Zero allocation after registration.** Registration (`counter()`,
+//!   `gauge()`, `histogram()`) allocates the cell and the name entry once;
+//!   every subsequent `add`/`set`/`observe` is a handful of relaxed atomic
+//!   ops on pre-allocated memory. The alloc-counting suite
+//!   (`tests/alloc_steady_state.rs`) pins this.
+//! * **Structural off-bypass.** A [`Meter::off`] handle hands out
+//!   instruments whose cells are `None`: every hot-path call is a branch
+//!   on a `None` and nothing else — no clock reads, no atomics, no locks.
+//!   This is what keeps `[trace] enabled=false` runs bit- and
+//!   alloc-identical to an uninstrumented build.
+//!
+//! Ownership: one [`Registry`] per launched run (the launcher creates it
+//! when `[trace]` is enabled and drops it with the [`super::ObsReport`]);
+//! tests create their own. Nothing here is process-global, so hosted runs
+//! and concurrent tests never share cells. Registration is idempotent by
+//! name: re-registering returns the existing cell, so the R hosted runs of
+//! a multi-tenant master share one set of fleet-wide instruments.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::config::json;
+use crate::config::value::Value;
+
+/// Default histogram bounds for phase timings in seconds: 10 µs … 1 s,
+/// decade-spaced, with the implicit +Inf overflow bucket on top.
+pub const SECS_BUCKETS: [f64; 6] = [1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One registered instrument's shared cell.
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    /// f64 value stored as its bit pattern
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistCell>),
+}
+
+struct Entry {
+    kind: Kind,
+    unit: &'static str,
+    help: &'static str,
+    cell: Cell,
+}
+
+/// Fixed-bucket histogram cell: `counts[i]` counts observations
+/// `<= bounds[i]`, the last slot is the +Inf overflow bucket.
+pub struct HistCell {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    /// Σ observed values, stored as f64 bits (CAS loop on update)
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistCell {
+    fn new(bounds: &[f64]) -> Self {
+        let mut counts = Vec::with_capacity(bounds.len() + 1);
+        counts.resize_with(bounds.len() + 1, || AtomicU64::new(0));
+        HistCell {
+            bounds: bounds.to_vec(),
+            counts,
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, v: f64) {
+        let slot = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            let swap = self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed);
+            match swap {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+/// Monotonic counter handle. `Counter::off()` (and every handle a
+/// [`Meter::off`] hands out) is a no-op shell: no atomics are touched.
+#[derive(Clone, Default)]
+pub struct Counter(Option<Arc<AtomicU64>>);
+
+impl Counter {
+    pub fn off() -> Self {
+        Counter(None)
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if let Some(c) = &self.0 {
+            c.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+}
+
+/// Gauge handle: `set` overwrites, `set_max` keeps the high-water mark.
+#[derive(Clone, Default)]
+pub struct Gauge(Option<Arc<AtomicU64>>);
+
+impl Gauge {
+    pub fn off() -> Self {
+        Gauge(None)
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if let Some(c) = &self.0 {
+            c.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn set_max(&self, v: f64) {
+        let Some(c) = &self.0 else { return };
+        let mut cur = c.load(Ordering::Relaxed);
+        while v > f64::from_bits(cur) {
+            match c.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        self.0.as_ref().map_or(0.0, |c| f64::from_bits(c.load(Ordering::Relaxed)))
+    }
+}
+
+/// Fixed-bucket histogram handle.
+#[derive(Clone, Default)]
+pub struct Histogram(Option<Arc<HistCell>>);
+
+impl Histogram {
+    pub fn off() -> Self {
+        Histogram(None)
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if let Some(h) = &self.0 {
+            h.observe(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.as_ref().map_or(0, |h| h.count.load(Ordering::Relaxed))
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.0.as_ref().map_or(0.0, |h| f64::from_bits(h.sum_bits.load(Ordering::Relaxed)))
+    }
+}
+
+/// The per-run instrument store. Create one with [`Registry::new`], hand
+/// [`Registry::meter`] clones to every layer, snapshot at end of run.
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<String, Entry>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { inner: Arc::new(Mutex::new(BTreeMap::new())) }
+    }
+
+    /// A live meter backed by this registry.
+    pub fn meter(&self) -> Meter {
+        Meter { reg: Some(Arc::clone(&self.inner)) }
+    }
+
+    /// Registered metric names, sorted (the doc-gate enumeration surface).
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Read every instrument into a plain-data snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let map = self.inner.lock().unwrap();
+        let rows = map
+            .iter()
+            .map(|(name, e)| {
+                let (value, count, buckets) = match &e.cell {
+                    Cell::Counter(c) => {
+                        let v = c.load(Ordering::Relaxed);
+                        (v as f64, v, Vec::new())
+                    }
+                    Cell::Gauge(c) => (f64::from_bits(c.load(Ordering::Relaxed)), 0, Vec::new()),
+                    Cell::Histogram(h) => {
+                        let mut buckets: Vec<(Option<f64>, u64)> = h
+                            .bounds
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &b)| (Some(b), h.counts[i].load(Ordering::Relaxed)))
+                            .collect();
+                        buckets.push((None, h.counts[h.bounds.len()].load(Ordering::Relaxed)));
+                        (
+                            f64::from_bits(h.sum_bits.load(Ordering::Relaxed)),
+                            h.count.load(Ordering::Relaxed),
+                            buckets,
+                        )
+                    }
+                };
+                MetricRow {
+                    name: name.clone(),
+                    kind: e.kind.name().to_string(),
+                    unit: e.unit.to_string(),
+                    help: e.help.to_string(),
+                    value,
+                    count,
+                    buckets,
+                }
+            })
+            .collect();
+        MetricsSnapshot { rows }
+    }
+}
+
+/// The registration handle threaded through instrumented layers. Cloning
+/// is cheap (one `Arc`); [`Meter::off`] is the structural bypass — every
+/// instrument it hands out is a no-op shell.
+#[derive(Clone, Default)]
+pub struct Meter {
+    reg: Option<Arc<Mutex<BTreeMap<String, Entry>>>>,
+}
+
+impl std::fmt::Debug for Meter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Meter({})", if self.reg.is_some() { "on" } else { "off" })
+    }
+}
+
+impl Meter {
+    pub fn off() -> Self {
+        Meter { reg: None }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.reg.is_some()
+    }
+
+    /// Register (or re-attach to) a monotonic counter.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different kind — instrument
+    /// names are a compile-time vocabulary, so a kind clash is a bug.
+    pub fn counter(&self, name: &str, unit: &'static str, help: &'static str) -> Counter {
+        match self.cell(name, Kind::Counter, unit, help, None) {
+            Some(Cell::Counter(c)) => Counter(Some(c)),
+            None => Counter(None),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or re-attach to) a gauge.
+    pub fn gauge(&self, name: &str, unit: &'static str, help: &'static str) -> Gauge {
+        match self.cell(name, Kind::Gauge, unit, help, None) {
+            Some(Cell::Gauge(c)) => Gauge(Some(c)),
+            None => Gauge(None),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or re-attach to) a fixed-bucket histogram; `bounds` must
+    /// be ascending (an implicit +Inf bucket is appended).
+    pub fn histogram(
+        &self,
+        name: &str,
+        unit: &'static str,
+        help: &'static str,
+        bounds: &[f64],
+    ) -> Histogram {
+        match self.cell(name, Kind::Histogram, unit, help, Some(bounds)) {
+            Some(Cell::Histogram(h)) => Histogram(Some(h)),
+            None => Histogram(None),
+            _ => unreachable!(),
+        }
+    }
+
+    fn cell(
+        &self,
+        name: &str,
+        kind: Kind,
+        unit: &'static str,
+        help: &'static str,
+        bounds: Option<&[f64]>,
+    ) -> Option<Cell> {
+        let reg = self.reg.as_ref()?;
+        let mut map = reg.lock().unwrap();
+        if let Some(existing) = map.get(name) {
+            assert_eq!(
+                existing.kind, kind,
+                "metric {name:?} registered as {} and again as {}",
+                existing.kind.name(),
+                kind.name()
+            );
+            return Some(clone_cell(&existing.cell));
+        }
+        let cell = match kind {
+            Kind::Counter => Cell::Counter(Arc::new(AtomicU64::new(0))),
+            Kind::Gauge => Cell::Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits()))),
+            Kind::Histogram => Cell::Histogram(Arc::new(HistCell::new(bounds.unwrap_or(&[])))),
+        };
+        let out = clone_cell(&cell);
+        map.insert(name.to_string(), Entry { kind, unit, help, cell });
+        Some(out)
+    }
+}
+
+fn clone_cell(c: &Cell) -> Cell {
+    match c {
+        Cell::Counter(a) => Cell::Counter(Arc::clone(a)),
+        Cell::Gauge(a) => Cell::Gauge(Arc::clone(a)),
+        Cell::Histogram(a) => Cell::Histogram(Arc::clone(a)),
+    }
+}
+
+/// One snapshot row: plain data, JSON-round-trippable.
+#[derive(Clone, Debug)]
+pub struct MetricRow {
+    pub name: String,
+    /// "counter" | "gauge" | "histogram"
+    pub kind: String,
+    pub unit: String,
+    pub help: String,
+    /// counter total / gauge value / histogram sum
+    pub value: f64,
+    /// counter total (again, as u64) / 0 for gauges / histogram observations
+    pub count: u64,
+    /// histogram only: `(upper_bound, count)`, `None` = +Inf
+    pub buckets: Vec<(Option<f64>, u64)>,
+}
+
+/// End-of-run registry dump, written next to the CSVs as
+/// `<stem>.metrics.json` and re-read by `tempo metrics-dump`.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub rows: Vec<MetricRow>,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"metrics\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str("    {\"name\": ");
+            json_str(&mut s, &r.name);
+            s.push_str(", \"kind\": ");
+            json_str(&mut s, &r.kind);
+            s.push_str(", \"unit\": ");
+            json_str(&mut s, &r.unit);
+            s.push_str(", \"help\": ");
+            json_str(&mut s, &r.help);
+            s.push_str(&format!(", \"value\": {}, \"count\": {}", json_num(r.value), r.count));
+            if !r.buckets.is_empty() {
+                s.push_str(", \"buckets\": [");
+                for (k, (le, n)) in r.buckets.iter().enumerate() {
+                    if k > 0 {
+                        s.push_str(", ");
+                    }
+                    match le {
+                        Some(b) => s.push_str(&format!("{{\"le\": {}, \"n\": {n}}}", json_num(*b))),
+                        None => s.push_str(&format!("{{\"le\": null, \"n\": {n}}}")),
+                    }
+                }
+                s.push(']');
+            }
+            s.push('}');
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("metrics snapshot: parse")?;
+        let metrics = v
+            .get("metrics")
+            .and_then(|m| m.as_array())
+            .context("metrics snapshot: missing \"metrics\" array")?;
+        let mut rows = Vec::with_capacity(metrics.len());
+        for (i, m) in metrics.iter().enumerate() {
+            let field = |key: &str| -> Result<String> {
+                Ok(m.get(key)
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("metric #{i}: missing {key:?}"))?
+                    .to_string())
+            };
+            let mut buckets = Vec::new();
+            if let Some(bs) = m.get("buckets").and_then(|b| b.as_array()) {
+                for b in bs {
+                    let le = match b.get("le") {
+                        Some(Value::Null) | None => None,
+                        Some(x) => Some(x.as_f64().context("bucket bound")?),
+                    };
+                    let n = b.get("n").and_then(|x| x.as_int()).context("bucket count")? as u64;
+                    buckets.push((le, n));
+                }
+            }
+            rows.push(MetricRow {
+                name: field("name")?,
+                kind: field("kind")?,
+                unit: field("unit")?,
+                help: field("help")?,
+                value: m.get("value").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                count: m.get("count").and_then(|x| x.as_int()).unwrap_or(0) as u64,
+                buckets,
+            });
+        }
+        Ok(MetricsSnapshot { rows })
+    }
+
+    /// Human-oriented table (the `metrics-dump` and `bench_gate --explain`
+    /// rendering): one line per metric; histograms get `mean over count`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let wide = self.rows.iter().map(|r| r.name.len()).max().unwrap_or(0);
+        for r in &self.rows {
+            let shown = match r.kind.as_str() {
+                "histogram" => {
+                    let mean = if r.count > 0 { r.value / r.count as f64 } else { 0.0 };
+                    format!("mean {mean:.6} {} over {} obs", r.unit, r.count)
+                }
+                "counter" => format!("{} {}", r.count, r.unit),
+                _ => format!("{} {}", json_num(r.value), r.unit),
+            };
+            out.push_str(&format!("{:wide$}  {:9}  {shown}\n", r.name, r.kind, wide = wide));
+        }
+        out
+    }
+}
+
+fn json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_register_and_read_back() {
+        let reg = Registry::new();
+        let m = reg.meter();
+        let c = m.counter("t.count", "events", "test counter");
+        let g = m.gauge("t.gauge", "frames", "test gauge");
+        let h = m.histogram("t.hist", "s", "test histogram", &SECS_BUCKETS);
+        c.add(3);
+        c.inc();
+        g.set(2.5);
+        g.set_max(1.0); // lower than current: no-op
+        g.set_max(9.0);
+        h.observe(5e-6);
+        h.observe(0.5);
+        h.observe(100.0); // lands in the +Inf bucket
+        assert_eq!(c.get(), 4);
+        assert_eq!(g.get(), 9.0);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 100.500005).abs() < 1e-9);
+
+        let snap = reg.snapshot();
+        assert_eq!(reg.names(), vec!["t.count", "t.gauge", "t.hist"]);
+        let hist = snap.rows.iter().find(|r| r.name == "t.hist").unwrap();
+        assert_eq!(hist.buckets.len(), SECS_BUCKETS.len() + 1);
+        assert_eq!(hist.buckets[0].1, 1, "5 µs lands in the 10 µs bucket");
+        assert_eq!(hist.buckets.last().unwrap(), &(None, 1), "100 s lands in +Inf");
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_shares_cells() {
+        let reg = Registry::new();
+        let a = reg.meter().counter("x", "u", "h");
+        let b = reg.meter().counter("x", "u", "h");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same name must share one cell");
+        assert_eq!(reg.names().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as counter and again as gauge")]
+    fn kind_clash_panics() {
+        let reg = Registry::new();
+        let m = reg.meter();
+        m.counter("clash", "u", "h");
+        m.gauge("clash", "u", "h");
+    }
+
+    #[test]
+    fn off_meter_is_a_structural_noop() {
+        let m = Meter::off();
+        let c = m.counter("never", "u", "h");
+        let g = m.gauge("never2", "u", "h");
+        let h = m.histogram("never3", "s", "h", &SECS_BUCKETS);
+        c.add(10);
+        g.set(1.0);
+        g.set_max(2.0);
+        h.observe(0.1);
+        assert_eq!(c.get(), 0);
+        assert_eq!(g.get(), 0.0);
+        assert_eq!(h.count(), 0);
+        assert!(!m.is_on());
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let reg = Registry::new();
+        let m = reg.meter();
+        m.counter("a.count", "events", "ev \"quoted\"").add(7);
+        m.gauge("b.gauge", "bits", "g").set(3.25);
+        let h = m.histogram("c.hist", "s", "h", &[0.001, 0.1]);
+        h.observe(0.01);
+        h.observe(7.0);
+        let text = reg.snapshot().to_json();
+        let back = MetricsSnapshot::from_json(&text).unwrap();
+        assert_eq!(back.rows.len(), 3);
+        let a = &back.rows[0];
+        assert_eq!((a.name.as_str(), a.count), ("a.count", 7));
+        assert_eq!(a.help, "ev \"quoted\"");
+        let c = &back.rows[2];
+        assert_eq!(c.buckets, vec![(Some(0.001), 0), (Some(0.1), 1), (None, 1)]);
+        assert!(back.render().contains("a.count"));
+    }
+}

@@ -1,0 +1,243 @@
+//! Structured trace-event stream (DESIGN.md §12).
+//!
+//! A bounded ring of typed, fixed-size events recording the *discrete*
+//! things a fleet does between rounds — membership boundaries, evictions,
+//! scheme-epoch switches, chaos injections, reconnect backoff — each
+//! stamped with the round, fleet epoch, and hosted-run id it belongs to.
+//! Per-round quantities (phase timings, rates) live in the
+//! [`super::registry`]; the trace answers *when and why*, the registry
+//! answers *how much*.
+//!
+//! Bounds: the ring holds `cap` events ([`crate::config::TraceCfg::ring`],
+//! default 4096) in a pre-allocated `VecDeque` of `Copy` structs — pushing
+//! past capacity drops the *oldest* event and counts it, so a warm run
+//! never allocates and a flooded run keeps its most recent history. The
+//! drain (JSONL file via `[trace] path=`, summary in `LaunchReport`)
+//! happens once, after the run.
+//!
+//! Like [`super::registry::Meter`], the [`Tracer`] handle has a structural
+//! off state: `Tracer::off()` makes every `emit` a branch on `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// `worker` stamp for events not tied to one worker slot.
+pub const NO_WORKER: u32 = u32::MAX;
+
+/// What happened. Every kind is documented in docs/OBSERVABILITY.md; the
+/// doc gate (`tests/doc_metrics.rs`) enumerates [`TraceKind::ALL`] against
+/// that table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A fleet-epoch boundary ticked (`value` = member count after).
+    EpochTick,
+    /// A worker was admitted at a boundary (`worker` = slot).
+    Admission,
+    /// A worker's eviction was staged (wedge or boundary liveness sweep;
+    /// `worker` = slot, `round` = the round the silence was detected).
+    Eviction,
+    /// The membership machine parked below `min_workers` at a boundary
+    /// (`round`/`epoch` = the boundary that entered Holding).
+    HoldingEnter,
+    /// A boundary found quorum again and left Holding.
+    HoldingLeave,
+    /// The rate controller switched scheme epochs (`epoch` = NEW scheme
+    /// epoch, `round` = the boundary round).
+    SchemeSwitch,
+    /// A configured fault was armed at launch (`worker` = slot, `round` =
+    /// the configured trigger round, `value` = 0 wedge / 1 crash /
+    /// 2 half-open).
+    ChaosInject,
+    /// A reconnect backoff attempt (`worker` = slot, `value` = attempt #).
+    Backoff,
+}
+
+impl TraceKind {
+    pub const ALL: [TraceKind; 8] = [
+        TraceKind::EpochTick,
+        TraceKind::Admission,
+        TraceKind::Eviction,
+        TraceKind::HoldingEnter,
+        TraceKind::HoldingLeave,
+        TraceKind::SchemeSwitch,
+        TraceKind::ChaosInject,
+        TraceKind::Backoff,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::EpochTick => "epoch_tick",
+            TraceKind::Admission => "admission",
+            TraceKind::Eviction => "eviction",
+            TraceKind::HoldingEnter => "holding_enter",
+            TraceKind::HoldingLeave => "holding_leave",
+            TraceKind::SchemeSwitch => "scheme_switch",
+            TraceKind::ChaosInject => "chaos_inject",
+            TraceKind::Backoff => "backoff",
+        }
+    }
+}
+
+/// One fixed-size, heap-free event. Field semantics are per-kind (see
+/// [`TraceKind`]); `epoch` is the fleet epoch for membership kinds and the
+/// scheme epoch for [`TraceKind::SchemeSwitch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    pub run_id: u16,
+    pub round: u64,
+    pub epoch: u64,
+    pub worker: u32,
+    pub value: u64,
+}
+
+impl TraceEvent {
+    /// One JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = format!(
+            "{{\"kind\": \"{}\", \"run\": {}, \"round\": {}, \"epoch\": {}",
+            self.kind.name(),
+            self.run_id,
+            self.round,
+            self.epoch
+        );
+        if self.worker != NO_WORKER {
+            s.push_str(&format!(", \"worker\": {}", self.worker));
+        }
+        s.push_str(&format!(", \"value\": {}}}", self.value));
+        s
+    }
+}
+
+struct RingInner {
+    buf: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// The bounded event ring. One per launched run, shared (`Arc`) by every
+/// emitting layer; the capacity is fixed at construction and the buffer is
+/// pre-allocated, so `push` never allocates.
+pub struct TraceRing {
+    inner: Mutex<RingInner>,
+    cap: usize,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Arc<TraceRing> {
+        let cap = cap.max(1);
+        Arc::new(TraceRing {
+            inner: Mutex::new(RingInner { buf: VecDeque::with_capacity(cap), dropped: 0 }),
+            cap,
+        })
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() == self.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Copy out the events in emission order (oldest first) plus the
+    /// overflow-drop count. Non-destructive: summaries and JSONL drains
+    /// may both read.
+    pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.buf.iter().copied().collect(), g.dropped)
+    }
+}
+
+/// Emission handle: `Tracer::off()` is the structural bypass (a `None`
+/// branch per emit, nothing else), [`Tracer::on`] wraps a shared ring.
+#[derive(Clone, Default)]
+pub struct Tracer {
+    ring: Option<Arc<TraceRing>>,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tracer({})", if self.ring.is_some() { "on" } else { "off" })
+    }
+}
+
+impl Tracer {
+    pub fn off() -> Self {
+        Tracer { ring: None }
+    }
+
+    pub fn on(ring: Arc<TraceRing>) -> Self {
+        Tracer { ring: Some(ring) }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    #[inline]
+    pub fn emit(&self, ev: TraceEvent) {
+        if let Some(r) = &self.ring {
+            r.push(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: TraceKind, round: u64) -> TraceEvent {
+        TraceEvent { kind, run_id: 0, round, epoch: 0, worker: NO_WORKER, value: 0 }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let ring = TraceRing::new(3);
+        let t = Tracer::on(Arc::clone(&ring));
+        for round in 0..5 {
+            t.emit(ev(TraceKind::EpochTick, round));
+        }
+        let (events, dropped) = ring.drain();
+        assert_eq!(dropped, 2);
+        assert_eq!(events.iter().map(|e| e.round).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(ring.len(), 3, "drain is non-destructive");
+    }
+
+    #[test]
+    fn off_tracer_emits_nowhere() {
+        let t = Tracer::off();
+        t.emit(ev(TraceKind::Eviction, 1));
+        assert!(!t.is_on());
+    }
+
+    #[test]
+    fn jsonl_shape_and_worker_elision() {
+        let mut e = ev(TraceKind::Eviction, 4);
+        e.worker = 3;
+        e.epoch = 1;
+        assert_eq!(
+            e.to_jsonl(),
+            "{\"kind\": \"eviction\", \"run\": 0, \"round\": 4, \"epoch\": 1, \
+             \"worker\": 3, \"value\": 0}"
+        );
+        let tick = ev(TraceKind::EpochTick, 9);
+        assert!(!tick.to_jsonl().contains("worker"), "NO_WORKER must be elided");
+        // every kind has a stable name and they are pairwise distinct
+        let names: std::collections::BTreeSet<_> =
+            TraceKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), TraceKind::ALL.len());
+    }
+}

@@ -260,6 +260,27 @@ impl RateController {
         self.base.with_block_scales(&self.scales)
     }
 
+    /// Realized payload bits per component over the current (open) window:
+    /// 0.0 while the window has folded no update. Read it after
+    /// [`Self::observe_round`] and before [`Self::end_of_round`] — a window
+    /// boundary resets the accumulators. Feeds the
+    /// `adaptive.realized_bits_per_component` gauge.
+    pub fn window_bits_per_component(&self) -> f64 {
+        let d: usize = self.block_components.iter().sum();
+        if self.stats.messages == 0 || d == 0 {
+            return 0.0;
+        }
+        self.stats.bits as f64 / (self.stats.messages as f64 * d as f64)
+    }
+
+    /// Total residual energy Σ agg[i]² accumulated over the current (open)
+    /// window, summed across blocks. Feeds the `adaptive.residual_energy`
+    /// gauge; same read-before-boundary caveat as
+    /// [`Self::window_bits_per_component`].
+    pub fn window_residual_energy(&self) -> f64 {
+        self.stats.block_energy.iter().sum()
+    }
+
     /// Account one folded update's payload bits.
     pub fn observe_message(&mut self, payload_bits: u64) {
         self.stats.bits += payload_bits;

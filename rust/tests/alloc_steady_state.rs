@@ -17,6 +17,12 @@
 //! amortized segment allocation remains, which is bounded and payload-
 //! size-independent).
 //!
+//! PR 10 adds the observability layer to the pin: registered counters,
+//! gauges, histograms and the bounded trace ring (including overflow
+//! drop-oldest) must be allocation-free once built, and the structural
+//! off handles must stay a bare `None` branch — the half of the
+//! off-bypass contract (DESIGN.md §12) that bit-identity tests can't see.
+//!
 //! This file holds exactly one test on purpose: the counting allocator is
 //! process-global, and a sibling test allocating concurrently would make
 //! the count meaningless. The later phases run single-threaded and toggle
@@ -30,6 +36,8 @@ use tempo::coding::Payload;
 use tempo::comm::framed::{read_frame_into, write_frame_into};
 use tempo::comm::{channel_fabric, Frame, MasterTransport, ShardMap, ShardedWorkerEndpoint};
 use tempo::comm::{FrameKind, WorkerTransport};
+use tempo::metrics::registry::{Meter, Registry};
+use tempo::metrics::trace::{TraceEvent, TraceKind, TraceRing, Tracer, NO_WORKER};
 use tempo::scheme::{MasterScheme, Scheme, WorkerScheme};
 use tempo::util::Pcg64;
 
@@ -137,6 +145,68 @@ fn warm_compression_rounds_allocate_nothing() {
 
     sharded_gather_is_zero_alloc_once_warm();
     channel_broadcast_clone_is_gone();
+    instrumented_warm_path_is_zero_alloc();
+}
+
+/// The observability layer's own warm-path pin (DESIGN.md §12): once
+/// instruments are registered and the event ring is built, every hot-path
+/// operation — counter add, gauge set / set-max, histogram observe, trace
+/// emit (including emits past ring capacity, which drop-oldest in place) —
+/// performs ZERO heap allocations. The structural off handles ride the
+/// same loop: they are a branch on `None`, nothing more.
+fn instrumented_warm_path_is_zero_alloc() {
+    let registry = Registry::new();
+    let meter = registry.meter();
+    let ctr = meter.counter("pin.counter", "n", "alloc pin");
+    let gauge = meter.gauge("pin.gauge", "n", "alloc pin");
+    let hist = meter.histogram("pin.hist", "s", "alloc pin", &[1e-3, 1e-1, 10.0]);
+    let ring = TraceRing::new(32);
+    let tracer = Tracer::on(Arc::clone(&ring));
+
+    let off = Meter::off();
+    let off_ctr = off.counter("pin.off.counter", "n", "never registered");
+    let off_gauge = off.gauge("pin.off.gauge", "n", "never registered");
+    let off_hist = off.histogram("pin.off.hist", "s", "never registered", &[1.0]);
+    let off_tracer = Tracer::off();
+
+    let rounds = 500u64; // > 15 × ring capacity: overflow is exercised hard
+    ALLOCS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for t in 0..rounds {
+        ctr.inc();
+        ctr.add(3);
+        gauge.set(t as f64);
+        gauge.set_max(t as f64 + 0.5);
+        hist.observe(t as f64 * 1e-2);
+        tracer.emit(TraceEvent {
+            kind: TraceKind::EpochTick,
+            run_id: 0,
+            round: t,
+            epoch: t,
+            worker: NO_WORKER,
+            value: t,
+        });
+        off_ctr.inc();
+        off_gauge.set(t as f64);
+        off_hist.observe(0.5);
+        off_tracer.emit(TraceEvent {
+            kind: TraceKind::Backoff,
+            run_id: 0,
+            round: t,
+            epoch: 0,
+            worker: 1,
+            value: t,
+        });
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let got = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(got, 0, "instrumented warm path must not allocate (saw {got} in {rounds} rounds)");
+
+    // the instruments really did run (this was not a dead loop)
+    assert_eq!(ctr.get(), rounds * 4);
+    assert_eq!(hist.count(), rounds);
+    assert_eq!(ring.len(), 32, "ring pinned at capacity");
+    assert_eq!(ring.dropped(), rounds - 32);
 }
 
 /// The sharded gather: per-shard downlinks receive into persistent frames

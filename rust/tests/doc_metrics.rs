@@ -1,0 +1,212 @@
+//! Metrics-doc gate (DESIGN.md §12, docs/OBSERVABILITY.md): the metric
+//! and trace-event reference may not drift from the implementation, in
+//! EITHER direction.
+//!
+//! The test registers the complete live vocabulary — an instrumented
+//! synthetic smoke run over the channel fabric (master + worker phase
+//! observers and the fabric's `comm.*` attach) plus the launcher-level
+//! instruments — then enumerates `Registry::names()` against the names
+//! documented in docs/OBSERVABILITY.md:
+//!
+//! * a registered name missing from the doc fails (undocumented metric);
+//! * a documented name nothing registers fails (stale doc);
+//! * the documented kind and unit columns must match the registry;
+//! * every [`TraceKind::ALL`] name must appear in the trace-event table,
+//!   and vice versa.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tempo::comm::{channel_fabric, MasterTransport};
+use tempo::config::experiment::Backend;
+use tempo::coordinator::launch::launch_instruments;
+use tempo::coordinator::master::{MasterLoop, MasterSpec};
+use tempo::coordinator::worker::{WorkerLoop, WorkerSpec};
+use tempo::coordinator::{MasterObs, WorkerObs};
+use tempo::metrics::registry::Registry;
+use tempo::metrics::trace::{TraceKind, TraceRing, Tracer};
+use tempo::optim::LrSchedule;
+use tempo::scheme::Scheme;
+use tempo::util::Pcg64;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+fn read_doc() -> String {
+    let path = repo_root().join("docs/OBSERVABILITY.md");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// First backticked span of a markdown table row, with the following two
+/// columns — `(name, kind, unit)` for metric rows.
+fn table_rows(text: &str, section: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut in_section = false;
+    for line in text.lines() {
+        if let Some(h) = line.strip_prefix("## ") {
+            in_section = h.trim() == section;
+            continue;
+        }
+        if !in_section || !line.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<String> = line
+            .split('|')
+            .map(|c| c.trim().trim_matches('`').to_string())
+            .filter(|c| !c.is_empty())
+            .collect();
+        // skip the header and the |---| separator
+        if cells.is_empty() || cells[0] == "name" || cells[0] == "kind" {
+            continue;
+        }
+        if cells[0].chars().all(|c| c == '-') {
+            continue;
+        }
+        rows.push(cells);
+    }
+    rows
+}
+
+/// Register every instrument the codebase can register, exercising the
+/// master/worker vocabularies through a real (tiny) instrumented run.
+fn build_live_registry() -> Registry {
+    let registry = Registry::new();
+    let meter = registry.meter();
+    let ring = TraceRing::new(64);
+
+    let (d, n, steps, seed) = (64usize, 2usize, 3u64, 5u64);
+    let scheme = Scheme::parse("topk:k=4/estk/ef/beta=0.9").unwrap();
+    let schedule = LrSchedule::constant(0.05);
+    let (mut master_tx, workers_tx) = channel_fabric(n);
+    // fabric attach: registers the full comm.* vocabulary even though the
+    // channel fabric can never reconnect — names are the contract
+    master_tx.attach_meter(&meter);
+
+    let mut handles = Vec::new();
+    for (wid, transport) in workers_tx.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker_id: wid as u32,
+            model: "synthetic".into(),
+            scheme: scheme.clone(),
+            backend: Backend::Rust,
+            schedule,
+            steps,
+            seed,
+            clip_norm: None,
+            pipelined: false,
+            absent: vec![],
+            depart_at: None,
+            rejoin: false,
+            membership: None,
+            adaptive: false,
+        };
+        let source = move |_w: &[f32], t: u64| -> anyhow::Result<(f64, Vec<f32>)> {
+            let mut g = vec![0.0f32; d];
+            let mut rng = Pcg64::new(seed ^ wid as u64, 40 + t);
+            rng.fill_gaussian(&mut g, 1.0);
+            Ok((1.0, g))
+        };
+        let wobs = WorkerObs::new(&meter);
+        handles.push(std::thread::spawn(move || {
+            WorkerLoop::with_source(spec, transport, Box::new(source), vec![0.0f32; d])
+                .with_observer(wobs)
+                .run_local()
+                .unwrap()
+        }));
+    }
+
+    let master_spec = MasterSpec {
+        model: "synthetic".into(),
+        scheme,
+        schedule,
+        steps,
+        eval_every: steps,
+        eval_batches: 1,
+        seed,
+        samples_per_round: n,
+        train_len: 64,
+        data_noise: 1.0,
+        aggregation: Default::default(),
+        membership: None,
+        adaptive: None,
+    };
+    let obs = MasterObs::new(&meter, Tracer::on(Arc::clone(&ring)), 0);
+    MasterLoop::new(master_spec, master_tx).with_observer(obs).run_headless(d).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // launcher-level instruments come from the same registration site the
+    // live Launcher uses
+    let _ = launch_instruments(&meter);
+    registry
+}
+
+#[test]
+fn registry_and_docs_agree_exactly() {
+    let registry = build_live_registry();
+    let snapshot = registry.snapshot();
+    let live: BTreeMap<String, (String, String)> = snapshot
+        .rows
+        .iter()
+        .map(|r| (r.name.clone(), (r.kind.clone(), r.unit.clone())))
+        .collect();
+    assert_eq!(
+        registry.names().len(),
+        live.len(),
+        "snapshot rows and registered names disagree"
+    );
+
+    let doc = read_doc();
+    let rows = table_rows(&doc, "Metrics");
+    assert!(rows.len() >= 20, "metric table extraction broke: {} rows", rows.len());
+    let mut documented: BTreeMap<String, (String, String)> = BTreeMap::new();
+    for row in &rows {
+        assert!(row.len() >= 3, "metric row too short: {row:?}");
+        let prev = documented.insert(row[0].clone(), (row[1].clone(), row[2].clone()));
+        assert!(prev.is_none(), "metric {} documented twice", row[0]);
+    }
+
+    for (name, (kind, unit)) in &live {
+        let Some((dkind, dunit)) = documented.get(name) else {
+            panic!("registered metric {name:?} is not documented in docs/OBSERVABILITY.md");
+        };
+        assert_eq!(dkind, kind, "{name}: documented kind {dkind:?}, registry says {kind:?}");
+        assert_eq!(dunit, unit, "{name}: documented unit {dunit:?}, registry says {unit:?}");
+    }
+    for name in documented.keys() {
+        assert!(
+            live.contains_key(name),
+            "docs/OBSERVABILITY.md documents {name:?}, but nothing registers it"
+        );
+    }
+
+    // the smoke run really drove the instruments (not just registration)
+    let row = |n: &str| snapshot.rows.iter().find(|r| r.name == n).unwrap();
+    assert_eq!(row("master.rounds").count, 3, "smoke run folded 3 rounds");
+    assert_eq!(row("master.phase.decode_secs").count, 3);
+    assert_eq!(row("worker.phase.gradient_secs").count, 6, "2 workers x 3 rounds");
+}
+
+#[test]
+fn trace_kinds_and_docs_agree_exactly() {
+    let doc = read_doc();
+    let rows = table_rows(&doc, "Trace events");
+    let documented: Vec<String> = rows.iter().map(|r| r[0].clone()).collect();
+    let live: Vec<&str> = TraceKind::ALL.iter().map(|k| k.name()).collect();
+    for k in &live {
+        assert!(
+            documented.iter().any(|d| d == k),
+            "trace kind {k:?} is not documented in docs/OBSERVABILITY.md"
+        );
+    }
+    for d in &documented {
+        assert!(
+            live.contains(&d.as_str()),
+            "docs/OBSERVABILITY.md documents trace kind {d:?}, but no such kind exists"
+        );
+    }
+    assert_eq!(documented.len(), live.len(), "duplicate or missing trace-kind rows");
+}

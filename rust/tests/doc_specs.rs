@@ -5,8 +5,10 @@
 //! the documented `--fabric` token strings (README.md / DESIGN.md),
 //! which must apply cleanly to a [`tempo::config::FabricSpec`] —
 //! including the §10 `dead_grace=`/`chaos=` failure-semantics tokens —
-//! and the documented `--runs` values (§11), which must pass
-//! [`tempo::config::RunsSpec`] validation (fit the header's u16).
+//! the documented `--runs` values (§11), which must pass
+//! [`tempo::config::RunsSpec`] validation (fit the header's u16), and the
+//! documented `--trace` token strings (§12, docs/OBSERVABILITY.md), which
+//! must apply cleanly to a [`tempo::config::TraceCfg`].
 
 use std::collections::BTreeSet;
 use std::path::PathBuf;
@@ -121,6 +123,38 @@ fn every_documented_fabric_spec_applies() {
         }
     }
     assert!(total >= 2, "suspiciously few documented fabric specs extracted: {total}");
+}
+
+/// Every documented `--trace` token string (README.md, DESIGN.md §12,
+/// docs/SPEC.md, docs/OBSERVABILITY.md) must apply cleanly to a
+/// [`tempo::config::TraceCfg`] — the observability grammar cannot drift.
+#[test]
+fn every_documented_trace_spec_applies() {
+    let mut total = 0usize;
+    for doc in ["README.md", "DESIGN.md", "docs/SPEC.md", "docs/OBSERVABILITY.md"] {
+        let path = repo_root().join(doc);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        for line in text.lines() {
+            for chunk in line.split("--trace ").skip(1) {
+                let spec = chunk
+                    .split_whitespace()
+                    .next()
+                    .unwrap_or("")
+                    .trim_end_matches(['`', ',', ')', '.']);
+                // skip grammar placeholders like `--trace <spec>`
+                if spec.is_empty() || spec.contains('<') {
+                    continue;
+                }
+                let mut t = tempo::config::TraceCfg::default();
+                t.apply_str(spec).unwrap_or_else(|e| {
+                    panic!("{doc}: quoted trace spec {spec:?} does not apply: {e:#}")
+                });
+                total += 1;
+            }
+        }
+    }
+    assert!(total >= 3, "suspiciously few documented trace specs extracted: {total}");
 }
 
 #[test]

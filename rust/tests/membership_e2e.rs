@@ -22,12 +22,17 @@
 //! how many times the source was called — which is what lets the replay
 //! reproduce a worker's post-admission gradients exactly.
 
+use std::sync::Arc;
+
 use tempo::config::experiment::Backend;
 use tempo::config::{ChaosKind, FabricSpec, IoBackend, TransportKind};
 use tempo::coordinator::launch::build_fabric;
 use tempo::coordinator::master::{MasterLoop, MasterReport, MasterSpec};
 use tempo::coordinator::membership::{MembershipPlan, MembershipSpec, WorkerMembership};
 use tempo::coordinator::worker::{lr_ratio, WorkerLoop, WorkerSpec, WorkerSummary};
+use tempo::coordinator::MasterObs;
+use tempo::metrics::registry::Registry;
+use tempo::metrics::trace::{TraceEvent, TraceKind, TraceRing, Tracer, NO_WORKER};
 use tempo::optim::LrSchedule;
 use tempo::scheme::Scheme;
 use tempo::util::Pcg64;
@@ -90,6 +95,21 @@ fn run_synthetic(
     seed: u64,
     elastic: Option<&ElasticPlan>,
 ) -> (MasterReport, Vec<WorkerSummary>) {
+    run_synthetic_obs(fabric, d, n, steps, seed, elastic, MasterObs::off())
+}
+
+/// [`run_synthetic`] with a master-side observer attached — the chaos-wedge
+/// trace test inspects the event ring afterwards; everything else runs with
+/// the structural off-bypass.
+fn run_synthetic_obs(
+    fabric: &FabricSpec,
+    d: usize,
+    n: usize,
+    steps: u64,
+    seed: u64,
+    elastic: Option<&ElasticPlan>,
+    obs: MasterObs,
+) -> (MasterReport, Vec<WorkerSummary>) {
     let scheme = Scheme::parse(SPEC).unwrap();
     let schedule = LrSchedule::constant(0.05);
     let (master_tx, workers_tx, _fault_stats) = build_fabric(fabric, n).unwrap();
@@ -137,7 +157,8 @@ fn run_synthetic(
         membership: elastic.map(|e| e.plan.clone()),
         adaptive: None,
     };
-    let report = MasterLoop::new(master_spec, master_tx).run_headless(d).unwrap();
+    let report =
+        MasterLoop::new(master_spec, master_tx).with_observer(obs).run_headless(d).unwrap();
     let mut summaries: Vec<WorkerSummary> =
         handles.into_iter().map(|h| h.join().unwrap()).collect();
     summaries.sort_by_key(|s| s.worker_id);
@@ -424,4 +445,78 @@ fn wedged_worker_is_evicted_at_a_boundary_and_replays_bit_identically() {
     let replay = run_synthetic(&fabric, d, n, steps, seed, Some(&plan));
     assert_eq!(replay.0.comm.timeout_evictions(), 1, "replayed eviction");
     assert_bit_identical(&first, &replay, "wedge chaos replay");
+}
+
+/// The structured trace stream of the chaos-wedge run above, checked
+/// event-for-event against a hand-traced timeline (DESIGN.md §12).
+/// Boundaries tick after rounds 2, 5, 8 and 11; the round-4 quorum wait
+/// stages the wedged worker's eviction mid-epoch (stamped with the
+/// pre-boundary epoch), the t = 5 tick removes it, and nothing else
+/// happens: its Joins are swallowed so there is no Admission, and three
+/// survivors ≥ `min_workers = 2` so Holding is never entered. Order
+/// matters — the eviction must precede the tick that removes the member.
+#[test]
+fn wedge_eviction_trace_matches_the_hand_traced_timeline() {
+    let (d, n, steps, admit_at, seed) = (300usize, 4usize, 12u64, 3u64, 17u64);
+    let fabric = FabricSpec {
+        max_staleness: 2,
+        quorum: n,
+        dead_grace: 0.15,
+        chaos: vec![(3, ChaosKind::Wedge, 4, u64::MAX)],
+        ..Default::default()
+    };
+    let plan = ElasticPlan {
+        plan: MembershipPlan {
+            spec: MembershipSpec { min_workers: 2, max_workers: n, admit_at },
+            initial: (0..n).collect(),
+            dead_grace: fabric.dead_grace_duration(),
+        },
+        workers: (0..n).map(|_| WorkerMembership::always(admit_at)).collect(),
+    };
+
+    let registry = Registry::new();
+    let ring = TraceRing::new(64);
+    let obs = MasterObs::new(&registry.meter(), Tracer::on(Arc::clone(&ring)), 7);
+    let (report, _) = run_synthetic_obs(&fabric, d, n, steps, seed, Some(&plan), obs);
+    assert_eq!(report.comm.timeout_evictions(), 1, "one liveness eviction");
+
+    let (events, dropped) = ring.drain();
+    assert_eq!(dropped, 0, "a 64-slot ring must hold the whole run");
+    let ev = |kind, round, epoch, worker, value| TraceEvent {
+        kind,
+        run_id: 7,
+        round,
+        epoch,
+        worker,
+        value,
+    };
+    let expected = vec![
+        // t = 2 boundary: the first tick enters epoch 1, all four members
+        ev(TraceKind::EpochTick, 2, 1, NO_WORKER, 4),
+        // round 4: worker 3's update is swallowed, the quorum wait stalls
+        // until dead_grace expires and stages the eviction mid-epoch
+        ev(TraceKind::Eviction, 4, 1, 3, 0),
+        // the t = 5 tick removes it: three members from epoch 2 on
+        ev(TraceKind::EpochTick, 5, 2, NO_WORKER, 3),
+        ev(TraceKind::EpochTick, 8, 3, NO_WORKER, 3),
+        ev(TraceKind::EpochTick, 11, 4, NO_WORKER, 3),
+    ];
+    assert_eq!(events, expected, "trace stream != hand-traced timeline");
+
+    // the registry tells the same story as the stream
+    let snapshot = registry.snapshot();
+    let row = |name: &str| {
+        snapshot
+            .rows
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("metric {name} not in snapshot"))
+            .clone()
+    };
+    assert_eq!(row("master.rounds").count, steps);
+    assert_eq!(row("fleet.evictions").count, 1);
+    assert_eq!(row("fleet.admissions").count, 0);
+    assert_eq!(row("fleet.epoch").value, 4.0);
+    assert_eq!(row("fleet.members").value, 3.0);
+    assert_eq!(row("master.phase.wait_secs").count, steps, "one wait lap per round");
 }

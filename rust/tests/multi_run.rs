@@ -20,7 +20,7 @@ use std::time::Duration;
 use tempo::comm::tcp::TcpWorker;
 use tempo::comm::{channel_fabric, MasterTransport, ReactorMaster, RunWorker, WorkerTransport};
 use tempo::config::experiment::Backend;
-use tempo::coordinator::master::{AggMode, MasterLoop, MasterReport, MasterSpec};
+use tempo::coordinator::master::{AggMode, MasterLoop, MasterObs, MasterReport, MasterSpec};
 use tempo::coordinator::worker::{WorkerLoop, WorkerSpec, WorkerSummary};
 use tempo::coordinator::{run_multi, HostedRun, MultiRunReport};
 use tempo::optim::LrSchedule;
@@ -108,11 +108,19 @@ enum FabricKind {
     Reactor,
 }
 
+/// A fault to inject into one hosted worker: `(run, wid, round)`.
+#[derive(Clone, Copy)]
+enum Injected {
+    /// Vanish at `round` with no marker (socket drop on TCP).
+    Depart(usize, usize, u64),
+    /// Error at `round`, sending an explicit abort frame on the way out.
+    Abort(usize, usize, u64),
+}
+
 /// Host `r_total` runs of `n` workers each on one shared fabric: global
 /// slot `gid` is run `gid / n`, run-local worker `gid % n`, speaking
-/// through a [`RunWorker`] stamp — the launcher's slot layout. `depart`
-/// optionally crashes one worker: `(run, wid, round)` vanishes at `round`
-/// with no completion marker (socket drop on the TCP fabric).
+/// through a [`RunWorker`] stamp — the launcher's slot layout. `fault`
+/// optionally injects one worker's failure (see [`Injected`]).
 fn hosted_fleet(
     kind: FabricKind,
     d: usize,
@@ -120,7 +128,7 @@ fn hosted_fleet(
     r_total: usize,
     steps: u64,
     base_seed: u64,
-    depart: Option<(usize, usize, u64)>,
+    fault: Option<Injected>,
 ) -> (MultiRunReport, Vec<Vec<anyhow::Result<WorkerSummary>>>) {
     type DynFabric = (Box<dyn MasterTransport>, Vec<Box<dyn WorkerTransport>>);
     let scheme = Scheme::parse(SPEC).unwrap();
@@ -153,13 +161,24 @@ fn hosted_fleet(
         let (r, wid) = (gid / n, gid % n);
         let run_seed = base_seed + r as u64;
         let mut spec = wspec(wid, steps, run_seed, scheme.clone());
-        if let Some((dr, dw, round)) = depart {
-            if (dr, dw) == (r, wid) {
+        let mut fail_at = None;
+        match fault {
+            Some(Injected::Depart(fr, fw, round)) if (fr, fw) == (r, wid) => {
                 spec.depart_at = Some(round);
             }
+            Some(Injected::Abort(fr, fw, round)) if (fr, fw) == (r, wid) => {
+                fail_at = Some(round);
+            }
+            _ => {}
         }
         let t: Box<dyn WorkerTransport> = Box::new(RunWorker::new(t, r as u16));
-        let src = source(d, run_seed, wid);
+        let mut src = source(d, run_seed, wid);
+        let src = move |w: &[f32], t: u64| {
+            if let Some(at) = fail_at {
+                anyhow::ensure!(t < at, "synthetic gradient failure at round {t}");
+            }
+            src(w, t)
+        };
         // a surviving worker of a failed sibling run errors out when the
         // shared transport tears down — keep the Result, don't unwrap
         handles[r].push(std::thread::spawn(move || {
@@ -172,6 +191,7 @@ fn hosted_fleet(
             spec: mspec(n, steps, base_seed + r as u64, scheme.clone()),
             init_w: vec![0.0f32; d],
             n_workers: n,
+            obs: MasterObs::off(),
         })
         .collect();
     let multi = run_multi(master, hosted, (0..r_total).map(|_| None).collect(), GRACE).unwrap();
@@ -235,8 +255,8 @@ fn a_crashed_worker_fails_only_its_own_run() {
     let (d, n, r_total, steps, seed) = (200usize, 2usize, 2usize, 6u64, 7u64);
     let solo0 = solo_run(d, n, steps, seed);
     // run 1's local worker 1 crashes at round 2: socket drop, no marker
-    let (multi, summaries) =
-        hosted_fleet(FabricKind::Reactor, d, n, r_total, steps, seed, Some((1, 1, 2)));
+    let fault = Some(Injected::Depart(1, 1, 2));
+    let (multi, summaries) = hosted_fleet(FabricKind::Reactor, d, n, r_total, steps, seed, fault);
 
     // the sibling run is untouched — bit-identical to its solo replay
     let r0 = multi.runs[0].as_ref().expect("run 0 must survive run 1's crash");
@@ -256,4 +276,31 @@ fn a_crashed_worker_fails_only_its_own_run() {
         summaries[1][0].is_err() || summaries[1][0].as_ref().unwrap().rounds < steps,
         "run 1's survivor cannot have completed all rounds"
     );
+}
+
+#[test]
+fn an_explicit_abort_frame_fails_only_its_own_run() {
+    let (d, n, r_total, steps, seed) = (200usize, 2usize, 2usize, 6u64, 7u64);
+    let solo0 = solo_run(d, n, steps, seed);
+    // run 1's local worker 1 errors at round 2 and announces it with an
+    // explicit abort *frame* — not a socket drop. Before the demux learned
+    // to attribute aborts, this error could surface on whichever sibling
+    // port happened to be pumping the shared stream.
+    let fault = Some(Injected::Abort(1, 1, 2));
+    let (multi, summaries) = hosted_fleet(FabricKind::Channel, d, n, r_total, steps, seed, fault);
+
+    // the sibling run is untouched — bit-identical to its solo replay
+    let r0 = multi.runs[0].as_ref().expect("run 0 must survive run 1's abort");
+    assert_run_matches_solo(0, r0, &solo0.0, &summaries[0], &solo0.1);
+
+    // the aborted run failed, attributed to the run-local worker
+    let err = format!("{:#}", multi.runs[1].as_ref().expect_err("run 1's worker aborted"));
+    assert!(err.contains("hosted run 1"), "error must name the failed run: {err}");
+    assert!(
+        err.contains("worker 1 hung up (aborted mid-run)"),
+        "error must name the run-local aborting worker: {err}"
+    );
+    // the aborting worker's own thread exits with its gradient error
+    let worker_err = format!("{:#}", summaries[1][1].as_ref().expect_err("the worker errored"));
+    assert!(worker_err.contains("synthetic gradient failure"), "{worker_err}");
 }

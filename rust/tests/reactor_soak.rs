@@ -663,6 +663,7 @@ fn multi_run_soak_hosts_eight_runs_on_one_reactor_with_o1_threads_and_no_fd_leak
             },
             init_w: vec![0.0f32; d],
             n_workers: PER,
+            obs: tempo::coordinator::MasterObs::off(),
         })
         .collect();
     // the sweep runs on THIS thread: run_multi adds no threads either

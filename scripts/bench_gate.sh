@@ -1,12 +1,19 @@
 #!/usr/bin/env bash
 # Bench-trajectory regression gate (documented in DESIGN.md §3/§8).
 #
-#   scripts/bench_gate.sh [--tolerance FRAC]
+#   scripts/bench_gate.sh [--tolerance FRAC] [--explain]
 #
 # Compares the newest BENCH_<N>.json at the repo root against the previous
 # comparable point, per bench name, on mean seconds/iteration. A bench
 # regresses when it got slower by more than FRAC (default 0.50 — smoke-mode
 # numbers on shared CI runners are noisy; tighten as the trajectory grows).
+#
+# --explain additionally prints the phase-timing summary of any
+# `*.metrics.json` registry snapshot sitting at the repo root (written next
+# to `--csv` logs when `[trace]` is on — DESIGN.md §12,
+# docs/OBSERVABILITY.md), so a regressed bench can be read against where
+# the instrumented run actually spent its time. Explain output never
+# changes the gate's verdict.
 #
 # Gating policy: WARN-ONLY until at least 3 comparable points exist, then
 # regressions fail the script (exit 1). Points are comparable when they use
@@ -17,6 +24,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 TOLERANCE="${BENCH_GATE_TOLERANCE:-0.50}"
+EXPLAIN=0
 while [[ $# -gt 0 ]]; do
     case "$1" in
         --tolerance)
@@ -24,10 +32,40 @@ while [[ $# -gt 0 ]]; do
             TOLERANCE="${1:-}"
             [[ -n "$TOLERANCE" ]] || { echo "--tolerance needs a value" >&2; exit 2; }
             ;;
-        *) echo "usage: scripts/bench_gate.sh [--tolerance FRAC]" >&2; exit 2 ;;
+        --explain) EXPLAIN=1 ;;
+        *) echo "usage: scripts/bench_gate.sh [--tolerance FRAC] [--explain]" >&2; exit 2 ;;
     esac
     shift
 done
+
+if [[ "$EXPLAIN" -eq 1 ]]; then
+    python3 - <<'PY'
+import glob
+import json
+
+snapshots = sorted(glob.glob("*.metrics.json"))
+if not snapshots:
+    print("bench-gate: --explain: no *.metrics.json snapshot present (run with --trace + --csv to produce one)")
+for path in snapshots:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        rows = data["metrics"]
+    except Exception as e:  # unreadable snapshots must not break the gate
+        print(f"bench-gate: --explain: skipping {path}: unreadable ({e})")
+        continue
+    print(f"bench-gate: --explain: phase timings from {path}")
+    phases = [r for r in rows if r.get("kind") == "histogram" and ".phase." in r.get("name", "")]
+    if not phases:
+        print("  (snapshot has no phase histograms)")
+        continue
+    for r in phases:
+        count = r.get("count") or 0
+        total = r.get("value") or 0.0
+        mean = total / count if count else 0.0
+        print(f"  {r['name']:<40} {count:>8} laps  mean {mean:.6f}s  total {total:.3f}s")
+PY
+fi
 
 TOLERANCE="$TOLERANCE" python3 - <<'PY'
 import glob

@@ -71,7 +71,7 @@ if [[ "$MODE" == "bench" ]]; then
     # Bench trajectory: run every [[bench]] target in smoke mode, collect
     # per-bench mean/p50/p99 + Melem/s, and assemble BENCH_<N>.json at the
     # repo root (N = current PR sequence number; bump when seeding anew).
-    BENCH_OUT="BENCH_9.json"
+    BENCH_OUT="BENCH_10.json"
     JSON_DIR="target/bench-json"
     mkdir -p "$JSON_DIR"
     BENCHES=(coding pipeline runtime paper_tables)

@@ -14,7 +14,7 @@
 #     runner noise must not rewrite the trajectory on every push)
 #
 # Usage: scripts/commit_bench.sh [--explain] [BENCH_N.json]
-#                                 (default: BENCH_9.json)
+#                                 (default: BENCH_10.json)
 #
 # --explain prints the commit/keep/skip decision and exits without touching
 # git state — CI runs it on every build so a silently-skipped self-heal
@@ -27,7 +27,7 @@ if [[ "${1:-}" == "--explain" ]]; then
     EXPLAIN=1
     shift
 fi
-OUT="${1:-BENCH_9.json}"
+OUT="${1:-BENCH_10.json}"
 
 # exit 0 when $1 is a real (comparable) smoke point, 1 otherwise
 is_real() {
